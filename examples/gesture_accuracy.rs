@@ -1,0 +1,150 @@
+//! Gesture accuracy (E7): the IBM DVS-Gesture-like benchmark on SNE.
+//!
+//! Substitution (DESIGN.md §1): IBM's dataset is replaced by procedurally
+//! generated event gestures (11 classes: rotations, slides, looms, flicker —
+//! the same generative family as python/compile/data.py). The 6-layer
+//! gesture CSNN runs through the PJRT artifact, step by step with
+//! persistent membrane state; classification = argmax of the accumulated
+//! readout.
+//!
+//! With deterministic random (untrained) weights the interesting outputs
+//! are (a) the full functional path works end to end, (b) the per-class
+//! spike statistics are *separable* — the signal a trained readout exploits.
+//! The example therefore also fits a tiny 1-NN classifier over per-layer
+//! spike-count signatures on a train split and reports accuracy on a test
+//! split, demonstrating class information survives the SCNN.
+//!
+//! Run: `make artifacts && cargo run --release --example gesture_accuracy`
+
+use kraken::config::SocConfig;
+use kraken::coordinator::pipeline::rebin_events;
+use kraken::nets;
+use kraken::runtime::Runtime;
+use kraken::sensors::scene::{Scene, SceneKind};
+use kraken::sensors::DvsSim;
+use kraken::sne::SneEngine;
+
+const CLASSES: usize = 11;
+const T: usize = 16;
+const SIZE: usize = 32;
+
+/// Render a gesture event sequence as T dense (2, SIZE, SIZE) bins.
+fn gesture_bins(class: usize, seed: u64) -> Vec<Vec<f32>> {
+    let kind = match class {
+        0 => SceneKind::RotatingBar { omega_rad_s: 4.0 },
+        1 => SceneKind::RotatingBar { omega_rad_s: -4.0 },
+        2 => SceneKind::RotatingBar { omega_rad_s: 9.0 },
+        3 => SceneKind::RotatingBar { omega_rad_s: -9.0 },
+        4 => SceneKind::TranslatingEdge { vel_per_s: -0.8 },
+        5 => SceneKind::TranslatingEdge { vel_per_s: 0.8 },
+        6 => SceneKind::TranslatingEdge { vel_per_s: -1.6 },
+        7 => SceneKind::TranslatingEdge { vel_per_s: 1.6 },
+        8 => SceneKind::ExpandingRing { rate_per_s: 0.6 },
+        9 => SceneKind::ExpandingRing { rate_per_s: -0.6 },
+        _ => SceneKind::Noise { density: 0.03, seed },
+    };
+    let mut scene = Scene::new(kind);
+    let mut dvs = DvsSim::new(SIZE, SIZE, seed);
+    dvs.noise_rate_hz = 1.0;
+    let win = dvs.capture(&mut scene, 0.8, 200.0);
+    rebin_events(&win, SIZE, SIZE, T)
+}
+
+/// Run the gesture artifact over one sequence; returns (logits, signature).
+fn run_scnn(rt: &Runtime, bins: &[Vec<f32>]) -> kraken::Result<(Vec<f32>, Vec<f32>)> {
+    let specs = rt.input_specs("gesture")?.to_vec();
+    let mut states: Vec<Vec<f32>> =
+        specs[1..6].iter().map(|s| vec![0f32; s.elements()]).collect();
+    let mut acc = vec![0f32; CLASSES];
+    let mut signature = vec![0f32; 5];
+    for bin in bins {
+        let mut inputs: Vec<&[f32]> = vec![bin.as_slice()];
+        inputs.extend(states.iter().map(|v| v.as_slice()));
+        inputs.push(&acc);
+        let mut out = rt.execute("gesture", &inputs)?;
+        let counts = out.pop().expect("counts");
+        for (s, c) in signature.iter_mut().zip(&counts) {
+            *s += c;
+        }
+        acc = out.pop().expect("acc");
+        states = out;
+    }
+    // normalize the spike signature per sequence
+    let total: f32 = signature.iter().sum::<f32>().max(1.0);
+    let sig: Vec<f32> = signature.iter().map(|s| s / total).collect();
+    Ok((acc, sig))
+}
+
+fn main() -> kraken::Result<()> {
+    let artdir = std::path::Path::new("artifacts");
+    anyhow::ensure!(
+        artdir.join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+    let rt = Runtime::load_subset(artdir, &["gesture".into()])?;
+
+    let per_class_train = 6usize;
+    let per_class_test = 4usize;
+
+    println!("generating {} gesture sequences...", CLASSES * (per_class_train + per_class_test));
+    let mut train: Vec<(usize, Vec<f32>)> = Vec::new();
+    let mut test: Vec<(usize, Vec<f32>)> = Vec::new();
+    let mut spikes_per_class = vec![0f32; CLASSES];
+    for class in 0..CLASSES {
+        for k in 0..(per_class_train + per_class_test) {
+            let bins = gesture_bins(class, (class * 100 + k) as u64 + 1);
+            let (_logits, sig) = run_scnn(&rt, &bins)?;
+            spikes_per_class[class] += sig.iter().sum::<f32>();
+            if k < per_class_train {
+                train.push((class, sig));
+            } else {
+                test.push((class, sig));
+            }
+        }
+    }
+
+    // 1-NN over spike signatures
+    let mut correct = 0usize;
+    for (label, sig) in &test {
+        let mut best = (f32::INFINITY, 0usize);
+        for (tl, ts) in &train {
+            let d: f32 = sig.iter().zip(ts).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < best.0 {
+                best = (d, *tl);
+            }
+        }
+        if best.1 == *label {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / test.len() as f64;
+    let chance = 1.0 / CLASSES as f64;
+    println!(
+        "1-NN over SCNN spike signatures: {:.1}% accuracy ({} / {} test sequences; chance {:.1}%)",
+        acc * 100.0,
+        correct,
+        test.len(),
+        chance * 100.0
+    );
+    println!(
+        "(paper: 92% on IBM DVS-Gesture with a *trained* 6-layer CSNN — this \
+         example demonstrates the untrained network already separates the \
+         synthetic classes; see DESIGN.md §1 for the dataset substitution)"
+    );
+    anyhow::ensure!(acc > 2.0 * chance, "signatures should beat chance comfortably");
+
+    // Energy story for the same workload on the SNE model:
+    let cfg = SocConfig::kraken();
+    let sne = SneEngine::new(&cfg);
+    let gnet = nets::gesture_paper();
+    for a in [0.01, 0.05, 0.1] {
+        let job = sne.inference(&gnet, a, 0.8);
+        println!(
+            "SNE gesture-net @{:>4.1}% activity: {:>8.0} inf/s, {:.2} uJ/inf",
+            a * 100.0,
+            1.0 / job.t_s,
+            job.energy_j * 1e6
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! **End-to-end driver (E6, Fig. 2).** The full system on a real workload:
+//!
+//! A simulated nano-UAV flies a corridor with obstacles. The DVS front-end
+//! streams events into SNE optical flow (FireNet through PJRT, persistent
+//! LIF state); the HM01B0 frame path forks to CUTIE (ternary
+//! classification) and PULP (8-bit DroNet steering/collision); fusion turns
+//! the three streams into navigation commands; the power manager gates idle
+//! engines. Telemetry prints live; the final report records rates, power
+//! per domain, and the PJRT execution count — the numbers quoted in
+//! EXPERIMENTS.md §E6.
+//!
+//! Run: `make artifacts && cargo run --release --example mission`
+//! (falls back to analytical-only timing without artifacts)
+
+use kraken::config::SocConfig;
+use kraken::coordinator::{Mission, MissionConfig, PowerPolicy};
+use kraken::metrics::{fmt_energy, fmt_power};
+use kraken::sensors::scene::SceneKind;
+
+fn main() -> kraken::Result<()> {
+    let artdir = std::path::Path::new("artifacts");
+    let artifacts = artdir.join("manifest.json").exists().then(|| artdir.to_path_buf());
+    if artifacts.is_none() {
+        eprintln!("note: no artifacts/ — running analytical-only (make artifacts)");
+    }
+
+    let duration: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3.0);
+
+    let cfg = MissionConfig {
+        duration_s: duration,
+        scene: SceneKind::Corridor { speed_per_s: 0.6, seed: 42 },
+        seed: 42,
+        policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(0.8) },
+        artifacts_dir: artifacts,
+        print_live: true,
+        ..Default::default()
+    };
+
+    println!("=== Kraken mission: corridor flight, {duration:.1} s ===");
+    let mut mission = Mission::new(SocConfig::kraken(), cfg)?;
+    let report = mission.run()?;
+
+    let (sne, cutie, pulp) = report.rates();
+    println!("\n=== E6 summary (paper Fig. 2 application) ===");
+    println!(
+        "concurrent rates : SNE {:.0} inf/s | CUTIE {:.0} inf/s | PULP {:.0} inf/s",
+        sne, cutie, pulp
+    );
+    println!(
+        "events           : {} total, mean network activity {:.3}%",
+        report.events_total,
+        report.avg_activity * 100.0
+    );
+    println!(
+        "fusion           : {} commands ({:.1}% avoiding), {} windows dropped",
+        report.commands,
+        report.avoid_fraction * 100.0,
+        report.dropped_windows
+    );
+    println!(
+        "power            : {} average (envelope 2-300 mW) | energy {}",
+        fmt_power(report.avg_power_w),
+        fmt_energy(report.energy_j)
+    );
+    println!(
+        "                   sne {} | cutie {} | pulp {} | fabric {}",
+        fmt_power(report.energy_per_domain_j[0] / report.sim_s),
+        fmt_power(report.energy_per_domain_j[1] / report.sim_s),
+        fmt_power(report.energy_per_domain_j[2] / report.sim_s),
+        fmt_power(report.energy_per_domain_j[3] / report.sim_s),
+    );
+    println!(
+        "simulation       : {:.2} s simulated in {:.2} s wall ({:.2}x real time), {} PJRT calls",
+        report.sim_s,
+        report.wall_s,
+        report.sim_s / report.wall_s.max(1e-9),
+        report.runtime_calls
+    );
+
+    println!("\nfirst commands:");
+    for c in report.last_commands.iter().take(8) {
+        println!(
+            "  t={:>6.3}s steer={:+.2} speed={:.2} avoiding={} class={:?}",
+            c.t_ns as f64 * 1e-9,
+            c.steer,
+            c.speed,
+            c.avoiding,
+            c.target_class
+        );
+    }
+    Ok(())
+}

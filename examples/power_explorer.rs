@@ -1,0 +1,100 @@
+//! Power explorer: the SoC's DVFS / power-gating design space (Fig. 3/5).
+//!
+//! Sweeps rail voltage and engine gating configurations, printing the
+//! operating points a mission planner chooses between: from the 2 mW
+//! deep-idle floor to the ~300 mW all-engines-flat-out ceiling, plus the
+//! energy-optimal point of each engine.
+//!
+//! Run: `cargo run --release --example power_explorer`
+
+use kraken::config::{freq_scale, Precision, SocConfig, SRAM_RETENTION_W};
+use kraken::coordinator::{Mission, MissionConfig, PowerPolicy};
+use kraken::cutie::CutieEngine;
+use kraken::metrics::{fmt_eff, fmt_power};
+use kraken::pulp::cluster::PulpCluster;
+use kraken::sensors::scene::SceneKind;
+use kraken::sne::SneEngine;
+
+fn main() -> kraken::Result<()> {
+    let cfg = SocConfig::kraken();
+
+    println!("=== operating points (all engines busy) ===");
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "VDD", "f_scale", "SNE", "CUTIE", "PULP", "SoC"
+    );
+    for i in 0..=6 {
+        let v = 0.5 + 0.05 * i as f64;
+        let p = |d: &kraken::config::DomainCfg| d.p_dyn(v, d.f_at(v), 1.0) + d.p_leak(v);
+        let (s, c, pl, f) = (
+            p(&cfg.sne.domain),
+            p(&cfg.cutie.domain),
+            p(&cfg.pulp.domain),
+            p(&cfg.fabric.domain),
+        );
+        println!(
+            "{:>5.2}V {:>10.3} {:>10} {:>10} {:>10} {:>10}",
+            v,
+            freq_scale(v),
+            fmt_power(s),
+            fmt_power(c),
+            fmt_power(pl),
+            fmt_power(s + c + pl + f)
+        );
+    }
+
+    println!("\n=== deep idle ===");
+    let idle = cfg.fabric.domain.p_dyn(0.5, 100.0e6, 0.0)
+        + cfg.fabric.domain.p_leak(0.5)
+        + SRAM_RETENTION_W;
+    println!("engines gated, FC 100 MHz, SRAM retention: {}", fmt_power(idle));
+
+    println!("\n=== energy-optimal points per engine ===");
+    let sne = SneEngine::new(&cfg);
+    let cutie = CutieEngine::new(&cfg);
+    let pulp = PulpCluster::new(&cfg);
+    let (v1, e1) = sne.best_efficiency();
+    let (v2, e2) = cutie.best_efficiency();
+    let (v3, e3) = pulp.best_efficiency(Precision::Int2);
+    println!("SNE   : {} at {v1:.2} V", fmt_eff(e1));
+    println!("CUTIE : {} at {v2:.2} V", fmt_eff(e2));
+    println!("PULP  : {} at {v3:.2} V (int2)", fmt_eff(e3));
+
+    println!("\n=== gating policy on a quiet mission (analytical) ===");
+    for (label, gate) in [("no gating", None), ("gate after 20 ms", Some(0.02))] {
+        let mcfg = MissionConfig {
+            duration_s: 1.0,
+            scene: SceneKind::TranslatingEdge { vel_per_s: 0.0 },
+            policy: PowerPolicy { idle_gate_s: gate, vdd: Some(0.8) },
+            ..Default::default()
+        };
+        let mut m = Mission::new(cfg.clone(), mcfg)?;
+        let r = m.run()?;
+        println!(
+            "{label:<18}: avg {} over {:.1} s (static scene)",
+            fmt_power(r.avg_power_w),
+            r.sim_s
+        );
+    }
+
+    println!("\n=== voltage scaling on a live mission (analytical) ===");
+    for vdd in [0.8, 0.65, 0.5] {
+        let mcfg = MissionConfig {
+            duration_s: 1.0,
+            scene: SceneKind::Corridor { speed_per_s: 0.6, seed: 9 },
+            policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
+            ..Default::default()
+        };
+        let mut m = Mission::new(cfg.clone(), mcfg)?;
+        let r = m.run()?;
+        let (_, cutie_rate, pulp_rate) = r.rates();
+        println!(
+            "vdd {vdd:.2} V: avg {}, CUTIE {:.0} inf/s, PULP {:.0} inf/s, dropped {}",
+            fmt_power(r.avg_power_w),
+            cutie_rate,
+            pulp_rate,
+            r.dropped_windows
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! Builds the Kraken SoC (Fig. 5 parameters), asks each engine model the
+//! paper's headline questions, and — if `make artifacts` has run — executes
+//! one real FireNet optical-flow inference through PJRT.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use kraken::config::{Precision, SocConfig};
+use kraken::cutie::CutieEngine;
+use kraken::metrics::{fmt_eff, fmt_energy, fmt_power};
+use kraken::nets;
+use kraken::pulp::kernels as pulp;
+use kraken::runtime::Runtime;
+use kraken::sne::SneEngine;
+use kraken::soc::Soc;
+
+fn main() -> kraken::Result<()> {
+    // 1. The chip, as measured (Fig. 5).
+    let cfg = SocConfig::kraken();
+    let soc = Soc::new(cfg.clone());
+    println!("--- {} ---\n{}", cfg.name, soc.report());
+
+    // 2. SNE: event-driven optical flow. Energy scales with DVS activity.
+    let sne = SneEngine::new(&cfg);
+    let firenet = nets::firenet_paper();
+    for activity in [0.01, 0.05, 0.20] {
+        let job = sne.inference(&firenet, activity, 0.8);
+        println!(
+            "SNE   @{:>4.0}% activity: {:>8.0} inf/s, {} / inference",
+            activity * 100.0,
+            1.0 / job.t_s,
+            fmt_energy(job.energy_j)
+        );
+    }
+
+    // 3. CUTIE: ternary classification, activity-independent.
+    let cutie = CutieEngine::new(&cfg);
+    let tnet = nets::cutie_paper();
+    let job = cutie.inference(&tnet, 0.8);
+    println!(
+        "CUTIE : {:>8.0} inf/s at {} ({} peak efficiency @0.5 V)",
+        1.0 / job.t_s,
+        fmt_power(job.energy_j / job.t_s),
+        fmt_eff(cutie.best_efficiency().1),
+    );
+
+    // 4. PULP: 8-bit DroNet for steering + collision.
+    let dnet = nets::dronet_paper();
+    let job = pulp::network_inference(&cfg.pulp, &dnet, Precision::Int8, 0.8);
+    println!(
+        "PULP  : {:>8.1} inf/s DroNet at {} ({} MMAC/frame)",
+        1.0 / job.t_s,
+        fmt_power(job.energy_j / job.t_s),
+        job.macs / 1_000_000
+    );
+
+    // 5. Functional path: one real FireNet step through PJRT.
+    let artdir = std::path::Path::new("artifacts");
+    if artdir.join("manifest.json").exists() {
+        let rt = Runtime::load_subset(artdir, &["firenet".into()])?;
+        let mut inputs = rt.zero_inputs("firenet")?;
+        inputs[0][100] = 4.0; // one strong event
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = rt.execute("firenet", &refs)?;
+        let spikes: f32 = out.last().unwrap().iter().sum();
+        println!(
+            "PJRT  : FireNet step executed — flow field {} elems, {} hidden spikes",
+            out[0].len(),
+            spikes
+        );
+    } else {
+        println!("PJRT  : run `make artifacts` to enable the functional path");
+    }
+    Ok(())
+}

@@ -1,0 +1,220 @@
+"""AOT compile path: lower the L2 models to HLO *text* artifacts + manifest.
+
+This is the only place Python touches the deployed system. `make artifacts`
+runs it once; the Rust coordinator then loads ``artifacts/*.hlo.txt`` through
+PJRT (rust/src/runtime/) and never calls back into Python.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a pure function with params baked in as constants
+(deterministic seeds — see compile.common.SEED), flat f32 inputs/outputs,
+lowered with return_tuple=True. artifacts/manifest.json describes every
+input/output tensor plus workload statistics that the Rust side cross-checks
+against its own net descriptors (rust/src/nets/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .common import DEFAULT, SEED
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer elides
+    # big weight tensors as `constant({...})`, which the xla_extension 0.5.1
+    # text parser silently reads back as ZEROS — the network would "run"
+    # with all-zero weights on the Rust side. test_aot.py pins this.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _io(names_shapes):
+    return [
+        {"name": n, "shape": list(s), "dtype": "f32"} for n, s in names_shapes
+    ]
+
+
+def build_firenet(cfg):
+    params = model.init_firenet(cfg.firenet)
+    fc = cfg.firenet
+
+    def step(x, v0, v1, v2, v3):
+        flow, states, counts = model.firenet_step(
+            params, fc, x, [v0, v1, v2, v3]
+        )
+        return (flow, *states, counts)
+
+    in_specs = [_spec((fc.in_ch, fc.height, fc.width))] + [
+        _spec(s) for s in fc.state_shapes
+    ]
+    lowered = jax.jit(step).lower(*in_specs)
+    inputs = _io(
+        [("events", (fc.in_ch, fc.height, fc.width))]
+        + [(f"v{i}", s) for i, s in enumerate(fc.state_shapes)]
+    )
+    outputs = _io(
+        [("flow", (fc.flow_ch, fc.height, fc.width))]
+        + [(f"v{i}", s) for i, s in enumerate(fc.state_shapes)]
+        + [("spike_counts", (len(fc.hidden),))]
+    )
+    return lowered, inputs, outputs, model.firenet_stats(fc)
+
+
+def build_firenet_window(cfg):
+    """Whole 5-step inference window in one artifact (lax.scan over steps):
+    state stays device-side across timesteps, cutting PJRT marshalling 5x —
+    the coordinator's preferred hot-path artifact (EXPERIMENTS.md §Perf)."""
+    params = model.init_firenet(cfg.firenet)
+    fc = cfg.firenet
+    t_steps = 5
+
+    def window(xs, v0, v1, v2, v3):
+        # UNROLLED over timesteps (not lax.scan): the xla_extension 0.5.1
+        # runtime executes HLO while-loops without loop-body fusion, at
+        # ~40x the cost of the equivalent straight-line code.
+        states = [v0, v1, v2, v3]
+        total = jnp.zeros((len(fc.hidden),))
+        flow = None
+        for t in range(t_steps):
+            flow, states, counts = model.firenet_step(params, fc, xs[t], states)
+            total = total + counts
+        return (flow, *states, total)
+
+    in_specs = [_spec((t_steps, fc.in_ch, fc.height, fc.width))] + [
+        _spec(s) for s in fc.state_shapes
+    ]
+    lowered = jax.jit(window).lower(*in_specs)
+    inputs = _io(
+        [("event_bins", (t_steps, fc.in_ch, fc.height, fc.width))]
+        + [(f"v{i}", s) for i, s in enumerate(fc.state_shapes)]
+    )
+    outputs = _io(
+        [("flow", (fc.flow_ch, fc.height, fc.width))]
+        + [(f"v{i}", s) for i, s in enumerate(fc.state_shapes)]
+        + [("spike_counts", (len(fc.hidden),))]
+    )
+    return lowered, inputs, outputs, model.firenet_stats(fc)
+
+
+def build_cutie(cfg):
+    params = model.init_cutie(cfg.cutie)
+    cc = cfg.cutie
+
+    def fwd(x):
+        logits, nz = model.cutie_forward(params, cc, x)
+        return (logits, nz)
+
+    lowered = jax.jit(fwd).lower(_spec((cc.in_ch, cc.in_size, cc.in_size)))
+    inputs = _io([("image_t", (cc.in_ch, cc.in_size, cc.in_size))])
+    outputs = _io(
+        [("logits", (cc.n_classes,)), ("nz_frac", (cc.n_layers,))]
+    )
+    return lowered, inputs, outputs, model.cutie_stats(cc)
+
+
+def build_dronet(cfg):
+    params = model.init_dronet(cfg.dronet)
+    dc = cfg.dronet
+
+    def fwd(x):
+        return (model.dronet_forward(params, dc, x),)
+
+    lowered = jax.jit(fwd).lower(_spec((dc.in_ch, dc.in_size, dc.in_size)))
+    inputs = _io([("image", (dc.in_ch, dc.in_size, dc.in_size))])
+    outputs = _io([("steer_coll", (2,))])
+    return lowered, inputs, outputs, model.dronet_stats(dc)
+
+
+def build_gesture(cfg):
+    params = model.init_gesture(cfg.gesture)
+    gc = cfg.gesture
+    shapes = model.gesture_state_shapes(gc)
+
+    def step(x, v0, v1, v2, v3, v4, acc):
+        states, acc2, counts = model.gesture_step(
+            params, gc, x, [v0, v1, v2, v3, v4], acc
+        )
+        return (*states, acc2, counts)
+
+    in_specs = (
+        [_spec((gc.in_ch, gc.in_size, gc.in_size))]
+        + [_spec(s) for s in shapes]
+        + [_spec((gc.n_classes,))]
+    )
+    lowered = jax.jit(step).lower(*in_specs)
+    inputs = _io(
+        [("events", (gc.in_ch, gc.in_size, gc.in_size))]
+        + [(f"v{i}", s) for i, s in enumerate(shapes)]
+        + [("acc", (gc.n_classes,))]
+    )
+    outputs = _io(
+        [(f"v{i}", s) for i, s in enumerate(shapes)]
+        + [("acc", (gc.n_classes,)), ("spike_counts", (len(gc.channels),))]
+    )
+    return lowered, inputs, outputs, {}
+
+
+BUILDERS = {
+    "firenet": (build_firenet, "sne"),
+    "firenet_window": (build_firenet_window, "sne"),
+    "cutie": (build_cutie, "cutie"),
+    "dronet": (build_dronet, "pulp"),
+    "gesture": (build_gesture, "sne"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of artifacts to build")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = {"seed": SEED, "artifacts": {}}
+    names = args.only or list(BUILDERS)
+    for name in names:
+        builder, engine = BUILDERS[name]
+        lowered, inputs, outputs, stats = builder(DEFAULT)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "engine": engine,
+            "inputs": inputs,
+            "outputs": outputs,
+            "stats": stats,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"[aot] {name}: {len(text)} chars -> {path}")
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Shared configuration for the Kraken compile path (L1/L2).
+
+These dataclasses pin the *functional* network shapes that get AOT-compiled
+into artifacts/. The Rust side carries its own workload descriptors for the
+paper-sized networks (rust/src/nets/) used by the timing/energy models; the
+manifest emitted by aot.py lets Rust cross-check that both views agree on
+shapes, MAC counts and parameter footprints.
+
+Artifact sizes are deliberately compact (64x64 DVS, 32x32 CIFAR-like,
+96x96 DroNet input) so `make artifacts` stays fast on CPU; all sizes are
+configurable here and flow through model.py, aot.py and the tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+SEED = 0xC0FFEE
+
+
+@dataclass(frozen=True)
+class FireNetCfg:
+    """LIF-FireNet (Hagenaars et al. [4]) — 4-layer CSNN optical flow."""
+
+    height: int = 64
+    width: int = 64
+    in_ch: int = 2            # DVS polarities
+    hidden: tuple = (16, 32, 32, 16)
+    flow_ch: int = 2          # (u, v) per-pixel flow
+    ksize: int = 3
+    decay: float = 0.875      # leak multiplier (7/8: shift-friendly, as SNE)
+    v_th: float = 1.0
+    w_bits: int = 4           # SNE supports 4-bit kernels
+
+    @property
+    def state_shapes(self):
+        h, w = self.height, self.width
+        return [(c, h, w) for c in self.hidden]
+
+
+@dataclass(frozen=True)
+class CutieCfg:
+    """Ternary CNN in CUTIE's mold: 96-wide, 3x3, all weights on-chip."""
+
+    in_size: int = 32
+    in_ch: int = 3
+    width: int = 96           # CUTIE computes 96 output channels in parallel
+    n_layers: int = 7
+    pool_after: tuple = (2, 4)  # 1-indexed layers followed by 2x2 maxpool
+    n_classes: int = 10
+    ksize: int = 3
+
+
+@dataclass(frozen=True)
+class DroNetCfg:
+    """8-bit quantized DroNet (Palossi et al. [2]) — steering + collision."""
+
+    in_size: int = 96
+    in_ch: int = 1
+    stem_ch: int = 16
+    block_ch: tuple = (32, 64, 96)
+    acc_shift: float = 7.0    # requantization shift after each conv
+
+    @property
+    def n_outputs(self):
+        return 2              # steering angle, collision probability
+
+
+@dataclass(frozen=True)
+class GestureCfg:
+    """6-layer CSNN for the DVS-Gesture-like accuracy benchmark."""
+
+    in_size: int = 32
+    in_ch: int = 2
+    channels: tuple = (16, 16, 32, 32, 64)
+    pool_after: tuple = (2, 4)  # 1-indexed conv layers followed by pool
+    n_classes: int = 11         # as IBM DVS-Gesture
+    decay: float = 0.875
+    v_th: float = 1.0
+    timesteps: int = 16
+
+
+@dataclass(frozen=True)
+class BuildCfg:
+    firenet: FireNetCfg = field(default_factory=FireNetCfg)
+    cutie: CutieCfg = field(default_factory=CutieCfg)
+    dronet: DroNetCfg = field(default_factory=DroNetCfg)
+    gesture: GestureCfg = field(default_factory=GestureCfg)
+
+
+DEFAULT = BuildCfg()

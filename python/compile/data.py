@@ -1,0 +1,171 @@
+"""Synthetic datasets for the build-time trainer and the pytest suite.
+
+Substitutions for the paper's datasets (documented in DESIGN.md §1):
+
+  * CIFAR10 (CUTIE)          -> 10-class procedural shape images, 32x32x3.
+  * IBM DVS-Gesture (SNE)    -> 11-class synthetic event gestures: rotating
+                                bars, translating edges, expanding blobs.
+  * Himax corridor imagery   -> 96x96 corridor renders with a heading line
+    (DroNet / PULP)             and optional obstacle; labels = (steer, coll).
+
+The same generative models are implemented in rust/src/sensors/ so the Rust
+end-to-end driver feeds the engines statistically identical inputs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _grid(size):
+    y, x = np.mgrid[0:size, 0:size].astype(np.float32)
+    c = (size - 1) / 2.0
+    return (x - c) / size, (y - c) / size
+
+
+# ---------------------------------------------------------------------------
+# 10-class shape images (CIFAR10 stand-in for CUTIE)
+# ---------------------------------------------------------------------------
+
+def shape_image(cls: int, rng: np.random.Generator, size: int = 32):
+    """Render one 3-channel image of shape-class ``cls`` in [0, 10)."""
+    x, y = _grid(size)
+    jx, jy = rng.uniform(-0.1, 0.1, 2)
+    x, y = x - jx, y - jy
+    r = np.sqrt(x**2 + y**2)
+    ang = np.arctan2(y, x)
+    s = rng.uniform(0.18, 0.3)
+    masks = [
+        r < s,                                     # 0 disk
+        (np.abs(x) < s) & (np.abs(y) < s),         # 1 square
+        np.abs(x + y) < 0.08,                      # 2 diagonal stripe
+        np.abs(x - y) < 0.08,                      # 3 anti-diagonal stripe
+        (r < s) & (r > s * 0.55),                  # 4 ring
+        np.abs(np.sin(x * 18)) > 0.82,             # 5 vertical grating
+        np.abs(np.sin(y * 18)) > 0.82,             # 6 horizontal grating
+        (np.abs(x) < 0.06) | (np.abs(y) < 0.06),   # 7 cross
+        (y > -s) & (y < s) & (np.abs(x) < (y + s) * 0.6),  # 8 triangle
+        np.cos(ang * 5 + rng.uniform(0, 6.28)) * (r < 0.42) > 0.45,  # 9 star
+    ]
+    m = masks[cls].astype(np.float32)
+    img = np.stack(
+        [
+            m * rng.uniform(0.6, 1.0) + rng.normal(0, 0.12, (size, size)),
+            m * rng.uniform(0.2, 0.8) + rng.normal(0, 0.12, (size, size)),
+            (1 - m) * rng.uniform(0.2, 0.6) + rng.normal(0, 0.12, (size, size)),
+        ]
+    ).astype(np.float32)
+    return img
+
+
+def shape_dataset(n: int, seed: int = 0, size: int = 32):
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, 3, size, size), np.float32)
+    ys = np.zeros((n,), np.int32)
+    for i in range(n):
+        cls = int(rng.integers(0, 10))
+        xs[i] = shape_image(cls, rng, size)
+        ys[i] = cls
+    return xs, ys
+
+
+def ternarize_images(xs, thr: float = 0.25):
+    """Center + ternarize a batch of images to {-1,0,+1} (CUTIE input)."""
+    xs = xs - xs.mean(axis=(2, 3), keepdims=True)
+    return np.where(xs > thr, 1.0, np.where(xs < -thr, -1.0, 0.0)).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# 11-class event gestures (DVS-Gesture stand-in for SNE)
+# ---------------------------------------------------------------------------
+
+GESTURE_NAMES = [
+    "rotate_cw", "rotate_ccw", "rotate_cw_fast", "rotate_ccw_fast",
+    "slide_left", "slide_right", "slide_up", "slide_down",
+    "expand", "contract", "flicker",
+]
+
+
+def gesture_frames(cls: int, t_steps: int, rng: np.random.Generator,
+                   size: int = 32):
+    """Intensity frames for gesture ``cls``; events = temporal derivative."""
+    x, y = _grid(size)
+    frames = np.zeros((t_steps + 1, size, size), np.float32)
+    phase = rng.uniform(0, 2 * np.pi)
+    speed = rng.uniform(0.85, 1.15)
+    for t in range(t_steps + 1):
+        tt = t * speed
+        if cls in (0, 1, 2, 3):
+            w = (0.25 if cls < 2 else 0.55) * (1 if cls % 2 == 0 else -1)
+            ang = phase + w * tt
+            d = np.abs(x * np.sin(ang) - y * np.cos(ang))
+            frames[t] = ((d < 0.07) & (x**2 + y**2 < 0.2)).astype(np.float32)
+        elif cls in (4, 5, 6, 7):
+            off = 0.08 * tt * (1 if cls in (5, 7) else -1) + phase / 10
+            off = ((off + 0.5) % 1.0) - 0.5
+            d = x - off if cls in (4, 5) else y - off
+            frames[t] = (np.abs(d) < 0.06).astype(np.float32)
+        elif cls in (8, 9):
+            r0 = 0.05 + 0.03 * (tt if cls == 8 else (t_steps - tt))
+            r = np.sqrt(x**2 + y**2)
+            frames[t] = ((r < r0) & (r > r0 - 0.08)).astype(np.float32)
+        else:  # flicker
+            frames[t] = float(t % 2) * ((x**2 + y**2) < 0.15)
+    return frames
+
+
+def gesture_events(cls: int, t_steps: int, seed: int = 0, size: int = 32,
+                   noise: float = 0.01):
+    """Event bins (t_steps, 2, size, size): ON/OFF polarities + noise."""
+    rng = np.random.default_rng(seed)
+    frames = gesture_frames(cls, t_steps, rng, size)
+    diff = np.diff(frames, axis=0)
+    ev = np.zeros((t_steps, 2, size, size), np.float32)
+    ev[:, 0] = (diff > 0.5).astype(np.float32)
+    ev[:, 1] = (diff < -0.5).astype(np.float32)
+    ev += (rng.random(ev.shape) < noise).astype(np.float32)
+    return np.clip(ev, 0.0, 1.0)
+
+
+def gesture_dataset(n: int, t_steps: int = 16, seed: int = 0, size: int = 32):
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, t_steps, 2, size, size), np.float32)
+    ys = np.zeros((n,), np.int32)
+    for i in range(n):
+        cls = int(rng.integers(0, 11))
+        xs[i] = gesture_events(cls, t_steps, seed=int(rng.integers(1 << 30)),
+                               size=size)
+        ys[i] = cls
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# Corridor images (DroNet stand-in for PULP)
+# ---------------------------------------------------------------------------
+
+def corridor_image(rng: np.random.Generator, size: int = 96):
+    """96x96 luma with a heading line; labels: steer angle, collision flag."""
+    x, y = _grid(size)
+    steer = rng.uniform(-0.8, 0.8)
+    d = np.abs(x - steer * (y + 0.5))
+    img = np.exp(-(d**2) / 0.01) * 80
+    collision = float(rng.random() < 0.4)
+    if collision:
+        ox, oy = rng.uniform(-0.25, 0.25), rng.uniform(-0.1, 0.3)
+        obst = ((np.abs(x - ox) < 0.12) & (np.abs(y - oy) < 0.12)) * 100
+        img = np.maximum(img, obst)
+    img += rng.normal(0, 4, (size, size))
+    img = np.clip(img - img.mean(), -128, 127)
+    return img.astype(np.float32)[None], np.float32(steer), np.float32(collision)
+
+
+def corridor_dataset(n: int, seed: int = 0, size: int = 96):
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, 1, size, size), np.float32)
+    steer = np.zeros((n,), np.float32)
+    coll = np.zeros((n,), np.float32)
+    for i in range(n):
+        xs[i], steer[i], coll[i] = corridor_image(rng, size)
+    return xs, steer, coll

@@ -1,0 +1,9 @@
+"""L1 Pallas kernels for the Kraken reproduction.
+
+- ``lif``: fused LIF neuron update (SNE).
+- ``ternary_conv``: ternary GEMM with fused thresholding (CUTIE).
+- ``conv_int8``: widening int8 GEMM with fused requantization (PULP).
+- ``ref``: pure-jnp oracles for all of the above.
+"""
+
+from . import conv_int8, lif, ref, ternary_conv  # noqa: F401

@@ -1,0 +1,66 @@
+"""Pallas kernel: int8-style widening GEMM (PULP SIMD hot spot, L1).
+
+PULP's energy win at low precision comes from SIMD widening dot-products
+(int8/int4/int2 -> 32-bit accumulate) with MAC-LD keeping the MACs fed at
+0.98 mac/cycle/core. The TPU analogue is a blocked GEMM with a widening
+accumulate and a fused requantization epilogue (arithmetic shift + clip),
+so quantized activations go HBM->VMEM->MXU->VMEM->HBM exactly once.
+
+Values are small integers carried in f32 (exact up to 2^24); the kernel is
+bit-accurate w.r.t. an integer implementation for our operand ranges, which
+the hypothesis sweep in python/tests/test_kernels.py asserts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_M_BLK = 128
+_N_BLK = 128
+
+
+def _int8_gemm_kernel(p_ref, w_ref, shift_ref, o_ref):
+    acc = jnp.dot(p_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    y = jnp.floor(acc / (2.0 ** shift_ref[0]))
+    o_ref[...] = jnp.clip(y, -128.0, 127.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_gemm(patches, w_mat, acc_shift, *, interpret=True):
+    """Widening GEMM + requantize (shift) + clip to int8 range.
+
+    Args:
+      patches: (M, K) f32 with integer values in [-128, 127].
+      w_mat: (K, N) f32 with integer values in [-128, 127].
+      acc_shift: scalar f32 power-of-two right shift.
+
+    Returns:
+      (M, N) f32 with integer values in [-128, 127].
+    """
+    m, k = patches.shape
+    k2, n = w_mat.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+
+    m_pad = (-m) % _M_BLK
+    n_pad = (-n) % _N_BLK
+    p = jnp.pad(patches, ((0, m_pad), (0, 0)))
+    w = jnp.pad(w_mat, ((0, 0), (0, n_pad)))
+
+    grid = (p.shape[0] // _M_BLK, w.shape[1] // _N_BLK)
+    out = pl.pallas_call(
+        _int8_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_M_BLK, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, _N_BLK), lambda i, j: (0, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_M_BLK, _N_BLK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p.shape[0], w.shape[1]), patches.dtype),
+        interpret=interpret,
+    )(p, w, jnp.asarray([acc_shift], patches.dtype))
+    return out[:m, :n]

@@ -1,0 +1,86 @@
+"""Pallas kernel: fused LIF neuron-state update (SNE hot spot, L1).
+
+The SNE datapath turns sparse events into dense bursts over its eight LIF
+neuron-state memories. The TPU analogue (see DESIGN.md §Hardware-Adaptation)
+is a fused elementwise pass over the whole state tensor, tiled so each block
+fits VMEM and streams HBM<->VMEM once per timestep:
+
+    v' = decay * v + x ; spike = v' >= v_th ; v'' = v' - spike * v_th
+
+All three reads/writes (state in, current in, state out + spikes out) are
+fused into one kernel so the state never round-trips through HBM between the
+integrate / fire / reset phases — the same reason SNE keeps neuron state in
+its eight 8 KiB SRAM banks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs on the Rust CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size for the flattened neuron-state vector. 128 Ki f32 = 512 KiB per
+# ref; with 4 refs live (v, x, v_out, s_out) a block occupies 2 MiB of VMEM —
+# comfortably under the ~16 MiB budget while making every FireNet layer a
+# single grid step. (Perf note, EXPERIMENTS.md §Perf: at the original 8 Ki
+# block the interpret-mode grid loop doubled artifact latency: 8.7 ms vs
+# 4.3 ms per FireNet step on the build machine.)
+_BLOCK = 128 * 1024
+
+
+def _lif_kernel(v_ref, x_ref, decay_ref, vth_ref, v_out_ref, s_out_ref):
+    decay = decay_ref[0]
+    v_th = vth_ref[0]
+    v_int = decay * v_ref[...] + x_ref[...]
+    spikes = (v_int >= v_th).astype(v_int.dtype)
+    v_out_ref[...] = v_int - spikes * v_th
+    s_out_ref[...] = spikes
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lif_update(v, x, decay, v_th, *, interpret=True):
+    """Fused LIF update over an arbitrary-shaped state tensor.
+
+    Args:
+      v: membrane state (any shape, f32).
+      x: input current, same shape.
+      decay, v_th: scalars (f32).
+
+    Returns:
+      (v_next, spikes), same shape as ``v``.
+    """
+    shape = v.shape
+    n = v.size
+    # Pad the flattened state to a whole number of blocks.
+    n_pad = (-n) % _BLOCK
+    vf = jnp.pad(v.reshape(-1), (0, n_pad))
+    xf = jnp.pad(x.reshape(-1), (0, n_pad))
+    grid = (vf.size // _BLOCK,)
+
+    v_out, s_out = pl.pallas_call(
+        _lif_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(vf.shape, vf.dtype),
+            jax.ShapeDtypeStruct(vf.shape, vf.dtype),
+        ],
+        interpret=interpret,
+    )(vf, xf, jnp.asarray([decay], vf.dtype), jnp.asarray([v_th], vf.dtype))
+
+    return v_out[:n].reshape(shape), s_out[:n].reshape(shape)

@@ -1,0 +1,186 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 ground truth).
+
+Every Pallas kernel in this package has an oracle here; pytest checks them
+against each other with hypothesis-driven shape/value sweeps. The oracles are
+also what the L2 model would compute if the Pallas kernels were replaced by
+plain jnp — they define functional correctness for the whole compile path.
+
+Conventions
+-----------
+* Feature maps are CHW (channels, height, width), matching the SNE/CUTIE
+  on-chip layouts in the paper (channel-major neuron state memories).
+* Quantized values (int8 / int4 / ternary) travel as f32 holding exact small
+  integers; this keeps PJRT marshalling on the Rust side to a single dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# LIF dynamics (SNE)
+# ---------------------------------------------------------------------------
+
+def lif_step(v, x, decay, v_th):
+    """One leaky-integrate-and-fire step with reset-by-subtraction.
+
+    v' = decay * v + x ; spike = (v' >= v_th) ; v'' = v' - spike * v_th
+
+    Matches the SNE datapath: 8-bit neuron state, 4-bit weights feeding the
+    input current ``x``; here state is f32 but the update law is identical.
+
+    Args:
+      v: membrane state, any shape.
+      x: input current, same shape as ``v``.
+      decay: scalar leak multiplier in [0, 1].
+      v_th: scalar firing threshold (> 0).
+
+    Returns:
+      (v_next, spikes) with ``spikes`` in {0.0, 1.0}.
+    """
+    v_int = decay * v + x
+    spikes = (v_int >= v_th).astype(v.dtype)
+    v_next = v_int - spikes * v_th
+    return v_next, spikes
+
+
+def lif_step_hard_reset(v, x, decay, v_th):
+    """LIF step with reset-to-zero (used by the gesture classifier head)."""
+    v_int = decay * v + x
+    spikes = (v_int >= v_th).astype(v.dtype)
+    v_next = jnp.where(spikes > 0, jnp.zeros_like(v_int), v_int)
+    return v_next, spikes
+
+
+# ---------------------------------------------------------------------------
+# Convolutions
+# ---------------------------------------------------------------------------
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    """Plain f32 conv. x: (C_in, H, W), w: (C_out, C_in, kh, kw)."""
+    out = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def im2col(x, kh, kw, stride=1):
+    """Unfold (C,H,W) -> (H_out*W_out, C*kh*kw) patch matrix, SAME padding.
+
+    This is the dataflow transform CUTIE performs spatially in silicon (all
+    kh*kw*C_in products of one output pixel issued at once); on TPU we
+    materialise it so the MXU sees a dense GEMM.
+    """
+    c, h, w = x.shape
+    # XLA "SAME" convention: out = ceil(in/stride), total padding split with
+    # the extra unit on the high side (matters for stride > 1, even sizes).
+    h_out = -(-h // stride)
+    w_out = -(-w // stride)
+    pht = max((h_out - 1) * stride + kh - h, 0)
+    pwt = max((w_out - 1) * stride + kw - w, 0)
+    ph, pw = pht // 2, pwt // 2
+    xp = jnp.pad(x, ((0, 0), (ph, pht - ph), (pw, pwt - pw)))
+    idx_h = jnp.arange(h_out) * stride
+    idx_w = jnp.arange(w_out) * stride
+    patches = jnp.stack(
+        [
+            xp[:, idx_h[:, None] + dh, idx_w[None, :] + dw]
+            for dh in range(kh)
+            for dw in range(kw)
+        ],
+        axis=-1,
+    )  # (c, h_out, w_out, kh*kw)
+    patches = jnp.transpose(patches, (1, 2, 0, 3))  # (h_out, w_out, c, kh*kw)
+    return patches.reshape(h_out * w_out, c * kh * kw)
+
+
+def ternary_conv(x, w, thr_lo, thr_hi, stride=1):
+    """Ternary convolution with fused ternarization (CUTIE OCU semantics).
+
+    x: (C_in, H, W) with values in {-1, 0, +1} (f32).
+    w: (C_out, C_in, kh, kw) with values in {-1, 0, +1} (f32).
+    thr_lo, thr_hi: per-channel (C_out,) thresholds. Output is
+      +1 where acc > thr_hi, -1 where acc < thr_lo, else 0,
+    which is CUTIE's "multi-bit accumulate -> per-channel normalization +
+    thresholding" output stage folded into one comparison pair.
+
+    Returns (C_out, H_out, W_out) ternary f32 and the raw accumulator.
+    """
+    acc = conv2d(x, w, stride=stride)
+    t = jnp.where(
+        acc > thr_hi[:, None, None],
+        1.0,
+        jnp.where(acc < thr_lo[:, None, None], -1.0, 0.0),
+    ).astype(x.dtype)
+    return t, acc
+
+
+def conv2d_int8(x_q, w_q, acc_shift, stride=1):
+    """Int8-style conv with widening accumulate and requantize-by-shift.
+
+    x_q: (C_in, H, W) integers in [-128, 127] stored as f32.
+    w_q: (C_out, C_in, kh, kw) integers in [-128, 127] stored as f32.
+    acc_shift: scalar power-of-two right shift for requantization.
+
+    The widened accumulator stays exactly representable in f32 for our sizes
+    (|acc| < 2^23); the requantized output is clipped back to int8 range,
+    mirroring PULP's SIMD dotp + normalization kernels.
+    """
+    acc = conv2d(x_q, w_q, stride=stride)
+    y = jnp.floor(acc / (2.0 ** acc_shift))
+    return jnp.clip(y, -128.0, 127.0)
+
+
+# ---------------------------------------------------------------------------
+# GEMM-shaped oracles (what the Pallas kernels actually implement)
+# ---------------------------------------------------------------------------
+
+def ternary_gemm(patches, w_mat, thr_lo, thr_hi):
+    """patches: (M, K); w_mat: (K, N) ternary; thresholds (N,).
+
+    Returns ternarized (M, N). Oracle for kernels.ternary_conv.ternary_gemm.
+    """
+    acc = patches @ w_mat
+    return jnp.where(acc > thr_hi[None, :], 1.0,
+                     jnp.where(acc < thr_lo[None, :], -1.0, 0.0)
+                     ).astype(patches.dtype)
+
+
+def int8_gemm(patches, w_mat, acc_shift):
+    """Oracle for kernels.conv_int8.int8_gemm: widening GEMM + shift + clip."""
+    acc = patches @ w_mat
+    y = jnp.floor(acc / (2.0 ** acc_shift))
+    return jnp.clip(y, -128.0, 127.0)
+
+
+# ---------------------------------------------------------------------------
+# Pooling / misc building blocks used by the L2 models
+# ---------------------------------------------------------------------------
+
+def maxpool2(x):
+    """2x2/2 max pool, x: (C, H, W) with even H, W."""
+    c, h, w = x.shape
+    return jnp.max(x.reshape(c, h // 2, 2, w // 2, 2), axis=(2, 4))
+
+
+def avgpool_global(x):
+    """Global average pool, x: (C, H, W) -> (C,)."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def quantize_sym(x, n_bits):
+    """Symmetric uniform quantizer to n_bits, returns integer-valued f32."""
+    qmax = 2.0 ** (n_bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    return jnp.round(x / scale), scale
+
+
+def ternarize(x, thr):
+    """Elementwise ternarization with symmetric threshold."""
+    return jnp.where(x > thr, 1.0, jnp.where(x < -thr, -1.0, 0.0))

@@ -1,0 +1,81 @@
+"""Pallas kernel: ternary GEMM with fused thresholding (CUTIE hot spot, L1).
+
+CUTIE computes one output pixel per cycle across 96 output channels by
+spatially unrolling every ternary multiply of a 3x3xC_in receptive field and
+compressing weights to 1.6 b/trit so the full network stays on-chip. On TPU
+(DESIGN.md §Hardware-Adaptation) the analogue is a dense GEMM on the MXU:
+
+    patches (M, K)  @  w (K, N in {-1,0,+1})  ->  acc (M, N)
+    out = +1 / 0 / -1 by per-channel double threshold   (fused epilogue)
+
+The im2col unfold happens in the surrounding jnp (it is pure data movement —
+XLA fuses it into the feed); the Pallas kernel owns the multiply-accumulate
+and CUTIE's output stage (per-channel normalization + thresholding), so the
+wide accumulator never leaves VMEM — exactly CUTIE's "minimize data
+movement" argument transposed to the memory hierarchy we have.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles. K is kept whole per block (K = 9*C_in <= 9*96 = 864,
+# i.e. <= 3.4 KiB/row) so the accumulator for one (M_BLK, N_BLK) tile lives
+# entirely in VMEM. M_BLK = 1024 covers a whole 32x32 layer in one grid step
+# (LHS tile 1024x864 f32 = 3.4 MiB VMEM — fits; -12% artifact latency vs
+# 128-row tiles under interpret mode, see EXPERIMENTS.md §Perf).
+_M_BLK = 128
+_N_BLK = 128
+
+
+def _ternary_gemm_kernel(p_ref, w_ref, lo_ref, hi_ref, o_ref):
+    acc = jnp.dot(p_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    o_ref[...] = jnp.where(
+        acc > hi[None, :], 1.0, jnp.where(acc < lo[None, :], -1.0, 0.0)
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ternary_gemm(patches, w_mat, thr_lo, thr_hi, *, interpret=True):
+    """Ternary GEMM + fused per-channel double-threshold ternarization.
+
+    Args:
+      patches: (M, K) f32 im2col patch matrix, entries in {-1, 0, +1}.
+      w_mat: (K, N) f32 ternary weights.
+      thr_lo, thr_hi: (N,) per-output-channel thresholds.
+
+    Returns:
+      (M, N) f32 in {-1, 0, +1}.
+    """
+    m, k = patches.shape
+    k2, n = w_mat.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+
+    m_pad = (-m) % _M_BLK
+    n_pad = (-n) % _N_BLK
+    p = jnp.pad(patches, ((0, m_pad), (0, 0)))
+    w = jnp.pad(w_mat, ((0, 0), (0, n_pad)))
+    lo = jnp.pad(thr_lo, (0, n_pad))
+    hi = jnp.pad(thr_hi, (0, n_pad))
+
+    grid = (p.shape[0] // _M_BLK, w.shape[1] // _N_BLK)
+    out = pl.pallas_call(
+        _ternary_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_M_BLK, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, _N_BLK), lambda i, j: (0, j)),
+            pl.BlockSpec((_N_BLK,), lambda i, j: (j,)),
+            pl.BlockSpec((_N_BLK,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((_M_BLK, _N_BLK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p.shape[0], w.shape[1]), patches.dtype),
+        interpret=interpret,
+    )(p, w, lo, hi)
+    return out[:m, :n]

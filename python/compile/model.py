@@ -1,0 +1,355 @@
+"""L2: JAX forward models for Kraken's three engines (+ gesture benchmark).
+
+Four networks, each mapped to the engine that runs it on the SoC:
+
+  * ``firenet_step``  — LIF-FireNet optical flow (SNE). One timestep; the
+    Rust coordinator owns the recurrence, mirroring how SNE keeps neuron
+    state resident in its SRAM banks between event bursts.
+  * ``cutie_forward`` — 7-layer, 96-wide ternary CNN (CUTIE).
+  * ``dronet_forward``— 8-bit quantized DroNet: steering + collision (PULP).
+  * ``gesture_step``  — 6-layer CSNN classifier (SNE accuracy benchmark,
+    IBM DVS-Gesture-like).
+
+Every compute hot spot routes through the L1 Pallas kernels
+(kernels.lif / kernels.ternary_conv / kernels.conv_int8); everything else is
+plain jnp so XLA fuses it around the kernels. All functions are pure and
+jittable; aot.py closes them over deterministic parameters and lowers them
+to HLO text artifacts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import CutieCfg, DroNetCfg, FireNetCfg, GestureCfg, SEED
+from .kernels import conv_int8, lif, ref, ternary_conv
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation (deterministic, quantized)
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, c_out, c_in, k):
+    w = jax.random.normal(key, (c_out, c_in, k, k)) / jnp.sqrt(c_in * k * k)
+    return w
+
+
+def _quantize_w(w, n_bits):
+    """Quantize weights to signed n_bits integer grid, return integer-valued
+    f32 tensor and scale (mirrors SNE's 4-bit / PULP's 8-bit storage)."""
+    q, scale = ref.quantize_sym(w, n_bits)
+    return q, scale
+
+
+def init_firenet(cfg: FireNetCfg, seed: int = SEED):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(cfg.hidden) + 1)
+    chans = (cfg.in_ch,) + cfg.hidden
+    layers = []
+    for i in range(len(cfg.hidden)):
+        w = _conv_init(keys[i], chans[i + 1], chans[i], cfg.ksize)
+        q, scale = _quantize_w(w, cfg.w_bits)
+        # fold the quant scale into the layer so currents stay O(1)
+        layers.append({"w": q, "scale": scale})
+    w_head = _conv_init(keys[-1], cfg.flow_ch, cfg.hidden[-1], cfg.ksize)
+    return {"layers": layers, "head": w_head}
+
+
+def init_cutie(cfg: CutieCfg, seed: int = SEED + 1):
+    keys = jax.random.split(jax.random.PRNGKey(seed), cfg.n_layers + 1)
+    chans = (cfg.in_ch,) + (cfg.width,) * cfg.n_layers
+    layers = []
+    for i in range(cfg.n_layers):
+        w = _conv_init(keys[i], chans[i + 1], chans[i], cfg.ksize)
+        wt = ref.ternarize(w, 0.05 / jnp.sqrt(chans[i]))
+        # per-channel symmetric firing thresholds, scaled to fan-in
+        fan_in = chans[i] * cfg.ksize**2
+        thr = 0.08 * fan_in * jnp.abs(
+            jax.random.normal(jax.random.fold_in(keys[i], 7), (cfg.width,))
+        ) / jnp.sqrt(fan_in)
+        layers.append({"w": wt, "thr_lo": -thr, "thr_hi": thr})
+    w_fc = jax.random.normal(keys[-1], (cfg.width, cfg.n_classes)) / jnp.sqrt(
+        cfg.width
+    )
+    return {"layers": layers, "fc": ref.ternarize(w_fc, 0.02)}
+
+
+def init_dronet(cfg: DroNetCfg, seed: int = SEED + 2):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 16)
+    ki = iter(keys)
+    params = {}
+    params["stem"], _ = _quantize_w(_conv_init(next(ki), cfg.stem_ch, cfg.in_ch, 5), 8)
+    chans = (cfg.stem_ch,) + cfg.block_ch
+    blocks = []
+    for i in range(len(cfg.block_ch)):
+        b = {
+            "conv1": _quantize_w(_conv_init(next(ki), chans[i + 1], chans[i], 3), 8)[0],
+            "conv2": _quantize_w(_conv_init(next(ki), chans[i + 1], chans[i + 1], 3), 8)[0],
+            "skip": _quantize_w(_conv_init(next(ki), chans[i + 1], chans[i], 1), 8)[0],
+        }
+        blocks.append(b)
+    params["blocks"] = blocks
+    params["w_steer"] = jax.random.normal(next(ki), (cfg.block_ch[-1], 1)) * 0.05
+    params["w_coll"] = jax.random.normal(next(ki), (cfg.block_ch[-1], 1)) * 0.05
+    return params
+
+
+def init_gesture(cfg: GestureCfg, seed: int = SEED + 3):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(cfg.channels) + 1)
+    chans = (cfg.in_ch,) + cfg.channels
+    layers = []
+    for i in range(len(cfg.channels)):
+        w = _conv_init(keys[i], chans[i + 1], chans[i], 3)
+        q, scale = _quantize_w(w, 4)
+        layers.append({"w": q, "scale": scale})
+    w_fc = jax.random.normal(keys[-1], (cfg.channels[-1], cfg.n_classes)) / jnp.sqrt(
+        cfg.channels[-1]
+    )
+    return {"layers": layers, "fc": w_fc}
+
+
+# ---------------------------------------------------------------------------
+# FireNet (SNE): one recurrent timestep
+# ---------------------------------------------------------------------------
+
+def firenet_step(params, cfg: FireNetCfg, x, states, *, interpret=True):
+    """One FireNet timestep.
+
+    Args:
+      x: (in_ch, H, W) binned event counts for this timestep (f32).
+      states: list of 4 membrane tensors, shapes cfg.state_shapes.
+
+    Returns:
+      flow: (2, H, W) per-pixel optical flow.
+      new_states: updated membranes.
+      spike_counts: (n_layers,) total spikes per hidden layer — fed back to
+        the Rust SNE energy model (energy proportionality, Fig 7).
+    """
+    spikes = x
+    new_states = []
+    counts = []
+    for layer, v in zip(params["layers"], states):
+        cur = ref.conv2d(spikes, layer["w"] * layer["scale"])
+        v_next, s = lif.lif_update(v, cur, cfg.decay, cfg.v_th, interpret=interpret)
+        new_states.append(v_next)
+        counts.append(jnp.sum(s))
+        spikes = s
+    flow = ref.conv2d(spikes, params["head"])
+    return flow, new_states, jnp.stack(counts)
+
+
+def firenet_rollout(params, cfg: FireNetCfg, x_seq, states, *, interpret=True):
+    """T-step scan rollout (training/tests); states threaded via lax.scan."""
+
+    def step(carry, x):
+        flow, new_states, counts = firenet_step(
+            params, cfg, x, carry, interpret=interpret
+        )
+        return new_states, (flow, counts)
+
+    final_states, (flows, counts) = jax.lax.scan(step, list(states), x_seq)
+    return flows, final_states, counts
+
+
+# ---------------------------------------------------------------------------
+# CUTIE: ternary CNN forward
+# ---------------------------------------------------------------------------
+
+def _tconv(x, layer, cfg, *, interpret=True):
+    patches = ref.im2col(x, cfg.ksize, cfg.ksize)
+    c_out = layer["w"].shape[0]
+    w_mat = layer["w"].reshape(c_out, -1).T  # (K, N) — K = C_in*k*k
+    # im2col emits K ordered as (c, kh*kw); weight reshape (C_out, C_in, k, k)
+    # flattens the same way, so the two agree.
+    y = ternary_conv.ternary_gemm(
+        patches, w_mat, layer["thr_lo"], layer["thr_hi"], interpret=interpret
+    )
+    h = x.shape[1]
+    return y.T.reshape(c_out, h, x.shape[2])
+
+
+def cutie_forward(params, cfg: CutieCfg, x, *, interpret=True):
+    """Ternary CNN forward. x: (in_ch, S, S) in {-1,0,+1}.
+
+    Returns (logits, nonzero_fraction) — the latter drives nothing on CUTIE
+    (its datapath is dense/activity-independent) but is logged for analysis.
+    """
+    act = x
+    nz = []
+    for i, layer in enumerate(params["layers"]):
+        act = _tconv(act, layer, cfg, interpret=interpret)
+        nz.append(jnp.mean(jnp.abs(act)))
+        if (i + 1) in cfg.pool_after:
+            act = ref.maxpool2(act)
+    pooled = ref.avgpool_global(act)
+    logits = pooled @ params["fc"]
+    return logits, jnp.stack(nz)
+
+
+# ---------------------------------------------------------------------------
+# DroNet (PULP): int8 residual network, two heads
+# ---------------------------------------------------------------------------
+
+def _iconv(x, w, cfg, stride=1, *, relu=True, interpret=True):
+    k = w.shape[-1]
+    patches = ref.im2col(x, k, k, stride=stride)
+    c_out = w.shape[0]
+    w_mat = w.reshape(c_out, -1).T
+    y = conv_int8.int8_gemm(patches, w_mat, cfg.acc_shift, interpret=interpret)
+    h_out = (x.shape[1] + stride - 1) // stride
+    w_out = (x.shape[2] + stride - 1) // stride
+    y = y.T.reshape(c_out, h_out, w_out)
+    if relu:
+        y = jnp.clip(y, 0.0, 127.0)
+    return y
+
+
+def dronet_forward(params, cfg: DroNetCfg, x, *, interpret=True):
+    """8-bit DroNet. x: (1, S, S) int8-valued f32 (centered luma).
+
+    Returns (steer, collision_logit) as a (2,) vector.
+    """
+    act = _iconv(x, params["stem"], cfg, stride=2, interpret=interpret)
+    act = ref.maxpool2(act)
+    for b in params["blocks"]:
+        y = _iconv(act, b["conv1"], cfg, stride=2, interpret=interpret)
+        y = _iconv(y, b["conv2"], cfg, relu=False, interpret=interpret)
+        skip = _iconv(act, b["skip"], cfg, stride=2, relu=False, interpret=interpret)
+        act = jnp.clip(y + skip, 0.0, 127.0)
+    feat = ref.avgpool_global(act) / 128.0
+    steer = feat @ params["w_steer"][:, 0]
+    coll = feat @ params["w_coll"][:, 0]
+    return jnp.stack([steer, coll])
+
+
+# ---------------------------------------------------------------------------
+# Gesture CSNN (SNE accuracy benchmark)
+# ---------------------------------------------------------------------------
+
+def gesture_step(params, cfg: GestureCfg, x, states, acc, *, interpret=True):
+    """One timestep of the 6-layer gesture classifier.
+
+    Args:
+      x: (in_ch, S, S) binned events.
+      states: 5 membrane tensors (one per conv layer, post-pool shapes).
+      acc: (n_classes,) accumulated readout membrane.
+
+    Returns (new_states, new_acc, spike_counts).
+    """
+    spikes = x
+    new_states, counts = [], []
+    for i, (layer, v) in enumerate(zip(params["layers"], states)):
+        cur = ref.conv2d(spikes, layer["w"] * layer["scale"])
+        v_next, s = lif.lif_update(v, cur, cfg.decay, cfg.v_th, interpret=interpret)
+        new_states.append(v_next)
+        counts.append(jnp.sum(s))
+        spikes = s
+        if (i + 1) in cfg.pool_after:
+            spikes = ref.maxpool2(spikes)
+    feat = ref.avgpool_global(spikes)
+    new_acc = acc + feat @ params["fc"]
+    return new_states, new_acc, jnp.stack(counts)
+
+
+def gesture_state_shapes(cfg: GestureCfg):
+    """Membrane shapes per conv layer, accounting for pooling of inputs."""
+    shapes = []
+    s = cfg.in_size
+    for i, c in enumerate(cfg.channels):
+        shapes.append((c, s, s))
+        if (i + 1) in cfg.pool_after:
+            s //= 2
+    return shapes
+
+
+def gesture_rollout(params, cfg: GestureCfg, x_seq, *, interpret=True):
+    """Full T-step classification: returns logits after cfg.timesteps."""
+    states = [jnp.zeros(s) for s in gesture_state_shapes(cfg)]
+    acc = jnp.zeros((cfg.n_classes,))
+
+    def step(carry, x):
+        states, acc = carry
+        states, acc, counts = gesture_step(
+            params, cfg, x, states, acc, interpret=interpret
+        )
+        return (states, acc), counts
+
+    (states, acc), counts = jax.lax.scan(step, (states, acc), x_seq)
+    return acc, counts
+
+
+# ---------------------------------------------------------------------------
+# Workload statistics (consumed by aot.py for the manifest; Rust cross-checks
+# its nets/ descriptors against these numbers)
+# ---------------------------------------------------------------------------
+
+def firenet_stats(cfg: FireNetCfg):
+    chans = (cfg.in_ch,) + cfg.hidden
+    hw = cfg.height * cfg.width
+    layers = []
+    for i in range(len(cfg.hidden)):
+        layers.append(
+            {
+                "c_in": chans[i],
+                "c_out": chans[i + 1],
+                "h": cfg.height,
+                "w": cfg.width,
+                "macs": hw * chans[i] * chans[i + 1] * cfg.ksize**2,
+                "neurons": hw * chans[i + 1],
+            }
+        )
+    layers.append(
+        {
+            "c_in": cfg.hidden[-1],
+            "c_out": cfg.flow_ch,
+            "h": cfg.height,
+            "w": cfg.width,
+            "macs": hw * cfg.hidden[-1] * cfg.flow_ch * cfg.ksize**2,
+            "neurons": 0,
+        }
+    )
+    return {"layers": layers, "total_neurons": sum(l["neurons"] for l in layers)}
+
+
+def cutie_stats(cfg: CutieCfg):
+    chans = (cfg.in_ch,) + (cfg.width,) * cfg.n_layers
+    s = cfg.in_size
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append(
+            {
+                "c_in": chans[i],
+                "c_out": chans[i + 1],
+                "h": s,
+                "w": s,
+                "out_pixels": s * s,
+                "macs": s * s * chans[i] * chans[i + 1] * cfg.ksize**2,
+            }
+        )
+        if (i + 1) in cfg.pool_after:
+            s //= 2
+    return {
+        "layers": layers,
+        "total_out_pixels": sum(l["out_pixels"] for l in layers),
+        "total_macs": sum(l["macs"] for l in layers),
+    }
+
+
+def dronet_stats(cfg: DroNetCfg):
+    s = cfg.in_size
+    layers = []
+    s2 = s // 2  # stem stride 2
+    layers.append({"c_in": cfg.in_ch, "c_out": cfg.stem_ch, "h": s2, "w": s2,
+                   "macs": s2 * s2 * cfg.in_ch * cfg.stem_ch * 25})
+    s2 //= 2  # maxpool
+    chans = (cfg.stem_ch,) + cfg.block_ch
+    for i in range(len(cfg.block_ch)):
+        so = s2 // 2
+        layers.append({"c_in": chans[i], "c_out": chans[i + 1], "h": so, "w": so,
+                       "macs": so * so * chans[i] * chans[i + 1] * 9})
+        layers.append({"c_in": chans[i + 1], "c_out": chans[i + 1], "h": so,
+                       "w": so, "macs": so * so * chans[i + 1] ** 2 * 9})
+        layers.append({"c_in": chans[i], "c_out": chans[i + 1], "h": so, "w": so,
+                       "macs": so * so * chans[i] * chans[i + 1]})
+        s2 = so
+    return {"layers": layers, "total_macs": sum(l["macs"] for l in layers)}

@@ -1,0 +1,203 @@
+"""Optional build-time trainers for the accuracy experiments (E7).
+
+Two small training loops over the synthetic datasets (data.py — the
+CIFAR10 / DVS-Gesture substitutions documented in DESIGN.md §1):
+
+  * ternary CNN (CUTIE) — straight-through-estimator training of a reduced
+    ternary classifier on the 10-class shape set.
+  * gesture CSNN (SNE) — surrogate-gradient training of a reduced spiking
+    classifier on the 11-class event-gesture set.
+
+Both train latent float weights and quantize on the forward pass (STE), the
+standard recipe for the networks the paper deploys. Invoked by
+``make trained`` (NOT part of the default artifact build — the perf path is
+weight-independent); writes artifacts/accuracy.json consumed by the
+soa_comparison bench narrative and EXPERIMENTS.md §E7.
+
+Networks here are reduced (fewer channels, smaller inputs) so the whole
+run stays in CPU-minutes; the *claim* being reproduced is the shape —
+"a ternary/spiking network trains to high accuracy on this task class" —
+not an absolute SoA number (that needs the real datasets).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Straight-through quantizers
+# ---------------------------------------------------------------------------
+
+def ste_ternarize(w, thr):
+    """Forward: ternarize; backward: identity (straight-through)."""
+    q = ref.ternarize(w, thr)
+    return w + jax.lax.stop_gradient(q - w)
+
+
+def _ste_spike(v, v_th, beta):
+    """Forward: hard threshold. Backward: sigmoid surrogate slope
+    beta * sig * (1 - sig) — steep near threshold, flat far away."""
+    s = (v >= v_th).astype(v.dtype)
+    smooth = jax.nn.sigmoid(beta * (v - v_th))
+    return jax.lax.stop_gradient(s - smooth) + smooth
+
+
+# ---------------------------------------------------------------------------
+# Ternary classifier (CUTIE substitution)
+# ---------------------------------------------------------------------------
+
+def init_tnet(key, width=32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(k1, (width, 3, 3, 3)) * 0.3,
+        "w2": jax.random.normal(k2, (width, width, 3, 3)) * 0.2,
+        "fc": jax.random.normal(k3, (width, 10)) * 0.2,
+    }
+
+
+def tnet_forward(params, x, thr=0.05):
+    w1 = ste_ternarize(params["w1"], thr)
+    w2 = ste_ternarize(params["w2"], thr)
+    h = jax.nn.relu(ref.conv2d(x, w1))
+    h = ref.maxpool2(h)
+    h = jax.nn.relu(ref.conv2d(h, w2))
+    feat = ref.avgpool_global(h)
+    return feat @ params["fc"]
+
+
+def train_ternary(steps=300, batch=32, lr=0.02, seed=0):
+    xs, ys = data.shape_dataset(1024, seed=seed)
+    xs = data.ternarize_images(xs)
+    xt, yt = data.shape_dataset(256, seed=seed + 1)
+    xt = data.ternarize_images(xt)
+    params = init_tnet(jax.random.PRNGKey(seed))
+
+    def loss_fn(p, xb, yb):
+        logits = jax.vmap(lambda x: tnet_forward(p, x))(xb)
+        onehot = jax.nn.one_hot(yb, 10)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, axis=-1))
+
+    @jax.jit
+    def step(p, xb, yb):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+        return p, l
+
+    rng = np.random.default_rng(seed)
+    for i in range(steps):
+        idx = rng.integers(0, len(xs), batch)
+        params, l = step(params, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+        if i % 100 == 0:
+            print(f"[ternary] step {i}: loss {float(l):.3f}")
+
+    @jax.jit
+    def predict(p, xb):
+        return jnp.argmax(jax.vmap(lambda x: tnet_forward(p, x))(xb), axis=-1)
+
+    acc = float(jnp.mean(predict(params, jnp.asarray(xt)) == jnp.asarray(yt)))
+    print(f"[ternary] test accuracy: {acc * 100:.1f}% (chance 10%)")
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Spiking gesture classifier (SNE substitution)
+# ---------------------------------------------------------------------------
+
+def init_snn(key, ch=16, classes=11):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(k1, (ch, 2, 3, 3)) * 0.4,
+        "w2": jax.random.normal(k2, (ch, ch, 3, 3)) * 0.3,
+        "fc": jax.random.normal(k3, (ch, classes)) * 0.3,
+    }
+
+
+def snn_forward(params, ev_seq, decay=0.875, v_th=1.0):
+    """ev_seq: (T, 2, S, S) -> accumulated class logits."""
+    ch = params["w1"].shape[0]
+    s = ev_seq.shape[-1]
+    v1 = jnp.zeros((ch, s, s))
+    v2 = jnp.zeros((ch, s // 2, s // 2))
+    acc = jnp.zeros(params["fc"].shape[1])
+    for t in range(ev_seq.shape[0]):
+        c1 = ref.conv2d(ev_seq[t], params["w1"])
+        v1 = decay * v1 + c1
+        s1 = _ste_spike(v1, v_th, 4.0)
+        v1 = v1 - jax.lax.stop_gradient(s1) * v_th
+        p1 = ref.maxpool2(s1)
+        c2 = ref.conv2d(p1, params["w2"])
+        v2 = decay * v2 + c2
+        s2 = _ste_spike(v2, v_th, 4.0)
+        v2 = v2 - jax.lax.stop_gradient(s2) * v_th
+        acc = acc + ref.avgpool_global(s2) @ params["fc"]
+    return acc
+
+
+def train_gesture(steps=200, batch=16, lr=0.05, seed=0, t_steps=8, size=16):
+    xs, ys = data.gesture_dataset(384, t_steps=t_steps, seed=seed, size=size)
+    xt, yt = data.gesture_dataset(128, t_steps=t_steps, seed=seed + 1, size=size)
+    params = init_snn(jax.random.PRNGKey(seed))
+
+    def loss_fn(p, xb, yb):
+        logits = jax.vmap(lambda e: snn_forward(p, e))(xb)
+        onehot = jax.nn.one_hot(yb, 11)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, axis=-1))
+
+    @jax.jit
+    def step(p, xb, yb):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+        return p, l
+
+    rng = np.random.default_rng(seed)
+    for i in range(steps):
+        idx = rng.integers(0, len(xs), batch)
+        params, l = step(params, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+        if i % 50 == 0:
+            print(f"[gesture] step {i}: loss {float(l):.3f}")
+
+    @jax.jit
+    def predict(p, xb):
+        return jnp.argmax(jax.vmap(lambda e: snn_forward(p, e))(xb), axis=-1)
+
+    acc = float(jnp.mean(predict(params, jnp.asarray(xt)) == jnp.asarray(yt)))
+    print(f"[gesture] test accuracy: {acc * 100:.1f}% (chance 9.1%)")
+    return acc
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    t0 = time.time()
+    acc_t = train_ternary(steps=args.steps)
+    acc_g = train_gesture(steps=max(100, args.steps // 2))
+    os.makedirs(args.outdir, exist_ok=True)
+    out = {
+        "ternary_shapes_accuracy": acc_t,
+        "gesture_accuracy": acc_g,
+        "paper_context": {
+            "cutie_cifar10_vs_binareye": "+2% (real dataset; not reproduced)",
+            "sne_dvs_gesture": 0.92,
+        },
+        "train_seconds": time.time() - t0,
+    }
+    path = os.path.join(args.outdir, "accuracy.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[train] wrote {path} in {out['train_seconds']:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

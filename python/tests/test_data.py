@@ -1,0 +1,72 @@
+"""Synthetic dataset sanity: separability, determinism, value ranges."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_shape_dataset_shapes_and_labels():
+    xs, ys = data.shape_dataset(32, seed=0)
+    assert xs.shape == (32, 3, 32, 32)
+    assert ys.min() >= 0 and ys.max() <= 9
+
+
+def test_shape_dataset_deterministic():
+    a, ya = data.shape_dataset(8, seed=5)
+    b, yb = data.shape_dataset(8, seed=5)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(ya, yb)
+
+
+def test_ternarize_images_range():
+    xs, _ = data.shape_dataset(4, seed=1)
+    t = data.ternarize_images(xs)
+    assert set(np.unique(t)) <= {-1.0, 0.0, 1.0}
+    # ternarized images must not be all-zero (information preserved)
+    assert np.abs(t).mean() > 0.02
+
+
+def test_classes_are_visually_distinct():
+    """Mean images of different classes differ substantially."""
+    rng = np.random.default_rng(0)
+    means = []
+    for cls in range(10):
+        imgs = np.stack([data.shape_image(cls, rng) for _ in range(8)])
+        means.append(imgs.mean(axis=0))
+    means = np.stack(means)
+    for i in range(10):
+        for j in range(i + 1, 10):
+            assert np.abs(means[i] - means[j]).mean() > 0.01, (i, j)
+
+
+def test_gesture_events_shape_and_polarity():
+    ev = data.gesture_events(0, 16, seed=2)
+    assert ev.shape == (16, 2, 32, 32)
+    assert set(np.unique(ev)) <= {0.0, 1.0}
+
+
+def test_gesture_events_active():
+    """Every gesture class produces events (the DVS sees motion)."""
+    for cls in range(11):
+        ev = data.gesture_events(cls, 16, seed=3, noise=0.0)
+        assert ev.sum() > 10, data.GESTURE_NAMES[cls]
+
+
+def test_gesture_rotation_directions_differ():
+    cw = data.gesture_events(0, 16, seed=4, noise=0.0)
+    ccw = data.gesture_events(1, 16, seed=4, noise=0.0)
+    assert np.abs(cw - ccw).sum() > 10
+
+
+def test_gesture_activity_controllable_via_noise():
+    lo = data.gesture_events(10, 16, seed=5, noise=0.0).mean()
+    hi = data.gesture_events(10, 16, seed=5, noise=0.2).mean()
+    assert hi > lo
+
+
+def test_corridor_dataset():
+    xs, steer, coll = data.corridor_dataset(16, seed=6)
+    assert xs.shape == (16, 1, 96, 96)
+    assert np.all(np.abs(steer) <= 0.8)
+    assert set(np.unique(coll)) <= {0.0, 1.0}
+    assert xs.min() >= -128 and xs.max() <= 127

@@ -1,0 +1,205 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; assert_allclose with
+tight tolerances (the GEMM kernels are exact on integer-valued f32, the LIF
+kernel is within FMA reassociation noise).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_int8, lif, ref, ternary_conv
+
+SET = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# LIF
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    c=st.integers(1, 8),
+    h=st.integers(1, 33),
+    w=st.integers(1, 33),
+    decay=st.floats(0.0, 1.0),
+    v_th=st.floats(0.25, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lif_matches_ref(c, h, w, decay, v_th, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=(c, h, w)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(c, h, w)).astype(np.float32))
+    v2, s = lif.lif_update(v, x, decay, v_th)
+    vr, sr = ref.lif_step(v, x, decay, v_th)
+    npt.assert_allclose(np.asarray(v2), np.asarray(vr), rtol=1e-5, atol=1e-5)
+    npt.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+def test_lif_spikes_are_binary():
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.normal(size=(4, 16, 16)).astype(np.float32) * 3)
+    x = jnp.asarray(rng.normal(size=(4, 16, 16)).astype(np.float32) * 3)
+    _, s = lif.lif_update(v, x, 0.9, 1.0)
+    assert set(np.unique(np.asarray(s))) <= {0.0, 1.0}
+
+
+def test_lif_reset_by_subtraction():
+    # A neuron exactly at threshold fires and is left at 0.
+    v = jnp.zeros((1, 1, 1))
+    x = jnp.ones((1, 1, 1))
+    v2, s = lif.lif_update(v, x, 1.0, 1.0)
+    assert float(s[0, 0, 0]) == 1.0
+    assert float(v2[0, 0, 0]) == 0.0
+
+
+def test_lif_no_input_decays():
+    v = jnp.full((1, 4, 4), 0.5)
+    v2, s = lif.lif_update(v, jnp.zeros_like(v), 0.5, 1.0)
+    npt.assert_allclose(np.asarray(v2), 0.25)
+    assert float(jnp.sum(s)) == 0.0
+
+
+def test_lif_threshold_monotonicity():
+    """Higher threshold can never produce more spikes."""
+    rng = np.random.default_rng(7)
+    v = jnp.asarray(rng.normal(size=(8, 32, 32)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(8, 32, 32)).astype(np.float32))
+    counts = [
+        float(jnp.sum(lif.lif_update(v, x, 0.875, th)[1]))
+        for th in (0.5, 1.0, 2.0, 4.0)
+    ]
+    assert counts == sorted(counts, reverse=True)
+
+
+def test_lif_large_padded_shape():
+    """Shapes that are not multiples of the block size pad correctly."""
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.normal(size=(16, 65, 67)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(16, 65, 67)).astype(np.float32))
+    v2, s = lif.lif_update(v, x, 0.875, 1.0)
+    vr, sr = ref.lif_step(v, x, 0.875, 1.0)
+    npt.assert_allclose(np.asarray(v2), np.asarray(vr), rtol=1e-5, atol=1e-5)
+    npt.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+# ---------------------------------------------------------------------------
+# Ternary GEMM (CUTIE)
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 128),
+    n=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ternary_gemm_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.integers(-1, 2, size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-1, 2, size=(k, n)).astype(np.float32))
+    thr = jnp.asarray(np.abs(rng.normal(size=n)).astype(np.float32) * 3)
+    out = ternary_conv.ternary_gemm(p, w, -thr, thr)
+    outr = ref.ternary_gemm(p, w, -thr, thr)
+    npt.assert_array_equal(np.asarray(out), np.asarray(outr))
+
+
+def test_ternary_gemm_output_is_ternary():
+    rng = np.random.default_rng(11)
+    p = jnp.asarray(rng.integers(-1, 2, size=(64, 27)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-1, 2, size=(27, 96)).astype(np.float32))
+    thr = jnp.full((96,), 2.0)
+    out = ternary_conv.ternary_gemm(p, w, -thr, thr)
+    assert set(np.unique(np.asarray(out))) <= {-1.0, 0.0, 1.0}
+
+
+def test_ternary_conv_via_im2col_matches_direct_conv():
+    """The im2col + GEMM path equals a direct lax conv."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.integers(-1, 2, size=(3, 16, 16)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-1, 2, size=(8, 3, 3, 3)).astype(np.float32))
+    thr = jnp.asarray(np.abs(rng.normal(size=8)).astype(np.float32) * 4)
+    patches = ref.im2col(x, 3, 3)
+    w_mat = w.reshape(8, -1).T
+    y = ternary_conv.ternary_gemm(patches, w_mat, -thr, thr)
+    y = y.T.reshape(8, 16, 16)
+    yd, _ = ref.ternary_conv(x, w, -thr, thr)
+    npt.assert_array_equal(np.asarray(y), np.asarray(yd))
+
+
+def test_ternary_zero_weights_zero_output():
+    p = jnp.ones((8, 9))
+    w = jnp.zeros((9, 4))
+    thr = jnp.full((4,), 0.5)
+    out = ternary_conv.ternary_gemm(p, w, -thr, thr)
+    npt.assert_array_equal(np.asarray(out), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Int8 GEMM (PULP)
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 96),
+    n=st.integers(1, 100),
+    shift=st.integers(0, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int8_gemm_matches_ref(m, k, n, shift, seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.integers(-128, 128, size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-128, 128, size=(k, n)).astype(np.float32))
+    out = conv_int8.int8_gemm(p, w, float(shift))
+    outr = ref.int8_gemm(p, w, float(shift))
+    npt.assert_array_equal(np.asarray(out), np.asarray(outr))
+
+
+def test_int8_gemm_exact_integer_semantics():
+    """The f32-carried GEMM is bit-exact vs int64 arithmetic."""
+    rng = np.random.default_rng(9)
+    p = rng.integers(-128, 128, size=(64, 96))
+    w = rng.integers(-128, 128, size=(96, 32))
+    acc = p @ w  # int64
+    want = np.clip(np.floor(acc / 2.0**7), -128, 127)
+    got = conv_int8.int8_gemm(
+        jnp.asarray(p, jnp.float32), jnp.asarray(w, jnp.float32), 7.0
+    )
+    npt.assert_array_equal(np.asarray(got), want.astype(np.float32))
+
+
+def test_int8_gemm_saturation():
+    p = jnp.full((4, 64), 127.0)
+    w = jnp.full((64, 4), 127.0)
+    out = conv_int8.int8_gemm(p, w, 0.0)
+    npt.assert_array_equal(np.asarray(out), 127.0)
+    out = conv_int8.int8_gemm(p, -w, 0.0)
+    npt.assert_array_equal(np.asarray(out), -128.0)
+
+
+# ---------------------------------------------------------------------------
+# im2col
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    c=st.integers(1, 6),
+    h=st.sampled_from([8, 12, 16, 24]),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_gemm_equals_conv(c, h, k, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(c, h, h)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, c, k, k)).astype(np.float32))
+    patches = ref.im2col(x, k, k, stride=stride)
+    y = (patches @ w.reshape(4, -1).T).T
+    h_out = (h + stride - 1) // stride
+    y = y.reshape(4, h_out, h_out)
+    yd = ref.conv2d(x, w, stride=stride)
+    npt.assert_allclose(np.asarray(y), np.asarray(yd), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,201 @@
+"""L2 correctness: network shapes, invariants, and Pallas-vs-jnp agreement."""
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+
+from compile import data, model
+from compile.common import DEFAULT
+
+
+def _zeros(shapes):
+    return [jnp.zeros(s) for s in shapes]
+
+
+# ---------------------------------------------------------------------------
+# FireNet
+# ---------------------------------------------------------------------------
+
+def test_firenet_step_shapes():
+    cfg = DEFAULT.firenet
+    params = model.init_firenet(cfg)
+    x = jnp.zeros((cfg.in_ch, cfg.height, cfg.width))
+    flow, states, counts = model.firenet_step(params, cfg, x, _zeros(cfg.state_shapes))
+    assert flow.shape == (cfg.flow_ch, cfg.height, cfg.width)
+    assert [s.shape for s in states] == [tuple(s) for s in cfg.state_shapes]
+    assert counts.shape == (len(cfg.hidden),)
+
+
+def test_firenet_zero_input_never_spikes():
+    cfg = DEFAULT.firenet
+    params = model.init_firenet(cfg)
+    x = jnp.zeros((cfg.in_ch, cfg.height, cfg.width))
+    _, _, counts = model.firenet_step(params, cfg, x, _zeros(cfg.state_shapes))
+    assert float(jnp.sum(counts)) == 0.0
+
+
+def test_firenet_activity_monotone_in_input():
+    """Denser event input -> at least as many first-layer spikes (on average).
+
+    This is the causal link behind Fig 7: DVS activity drives SNE work.
+    """
+    cfg = DEFAULT.firenet
+    params = model.init_firenet(cfg)
+    rng = np.random.default_rng(0)
+    base = rng.random((cfg.in_ch, cfg.height, cfg.width)).astype(np.float32)
+    counts = []
+    for density in (0.02, 0.1, 0.4):
+        x = jnp.asarray((base < density).astype(np.float32)) * 4.0
+        _, _, c = model.firenet_step(params, cfg, x, _zeros(cfg.state_shapes))
+        counts.append(float(c[0]))
+    assert counts == sorted(counts)
+
+
+def test_firenet_state_carries_over():
+    cfg = DEFAULT.firenet
+    params = model.init_firenet(cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.random((cfg.in_ch, cfg.height, cfg.width)).astype(np.float32))
+    _, s1, _ = model.firenet_step(params, cfg, x, _zeros(cfg.state_shapes))
+    _, s2, _ = model.firenet_step(params, cfg, x, s1)
+    # with non-zero input, states must differ between consecutive steps
+    assert any(
+        not np.allclose(np.asarray(a), np.asarray(b)) for a, b in zip(s1, s2)
+    )
+
+
+def test_firenet_rollout_matches_looped_steps():
+    cfg = DEFAULT.firenet
+    params = model.init_firenet(cfg)
+    rng = np.random.default_rng(2)
+    t = 3
+    xs = jnp.asarray(
+        (rng.random((t, cfg.in_ch, cfg.height, cfg.width)) < 0.05).astype(np.float32)
+    )
+    flows, final_states, counts = model.firenet_rollout(
+        params, cfg, xs, _zeros(cfg.state_shapes)
+    )
+    states = _zeros(cfg.state_shapes)
+    for i in range(t):
+        flow, states, c = model.firenet_step(params, cfg, xs[i], states)
+        npt.assert_allclose(np.asarray(flows[i]), np.asarray(flow), rtol=1e-4, atol=1e-5)
+        npt.assert_allclose(np.asarray(counts[i]), np.asarray(c), rtol=1e-5)
+    for a, b in zip(final_states, states):
+        npt.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CUTIE
+# ---------------------------------------------------------------------------
+
+def test_cutie_forward_shapes_and_ternary_activations():
+    cfg = DEFAULT.cutie
+    params = model.init_cutie(cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-1, 2, (cfg.in_ch, cfg.in_size, cfg.in_size)).astype(np.float32))
+    logits, nz = model.cutie_forward(params, cfg, x)
+    assert logits.shape == (cfg.n_classes,)
+    assert nz.shape == (cfg.n_layers,)
+    assert np.all(np.asarray(nz) >= 0) and np.all(np.asarray(nz) <= 1)
+
+
+def test_cutie_weights_are_ternary():
+    params = model.init_cutie(DEFAULT.cutie)
+    for layer in params["layers"]:
+        vals = set(np.unique(np.asarray(layer["w"])))
+        assert vals <= {-1.0, 0.0, 1.0}
+        assert np.all(np.asarray(layer["thr_hi"]) >= np.asarray(layer["thr_lo"]))
+
+
+def test_cutie_deterministic():
+    cfg = DEFAULT.cutie
+    p1 = model.init_cutie(cfg)
+    p2 = model.init_cutie(cfg)
+    x = jnp.ones((cfg.in_ch, cfg.in_size, cfg.in_size))
+    l1, _ = model.cutie_forward(p1, cfg, x)
+    l2, _ = model.cutie_forward(p2, cfg, x)
+    npt.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+# ---------------------------------------------------------------------------
+# DroNet
+# ---------------------------------------------------------------------------
+
+def test_dronet_forward_shapes():
+    cfg = DEFAULT.dronet
+    params = model.init_dronet(cfg)
+    rng = np.random.default_rng(4)
+    x, _, _ = data.corridor_image(rng, cfg.in_size)
+    out = model.dronet_forward(params, cfg, jnp.asarray(x))
+    assert out.shape == (2,)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_dronet_weights_are_int8():
+    cfg = DEFAULT.dronet
+    params = model.init_dronet(cfg)
+    for w in [params["stem"]] + [
+        b[k] for b in params["blocks"] for k in ("conv1", "conv2", "skip")
+    ]:
+        arr = np.asarray(w)
+        assert np.all(arr == np.round(arr))
+        assert arr.min() >= -128 and arr.max() <= 127
+
+
+def test_dronet_responds_to_input():
+    cfg = DEFAULT.dronet
+    params = model.init_dronet(cfg)
+    rng = np.random.default_rng(5)
+    x1, _, _ = data.corridor_image(rng, cfg.in_size)
+    x2, _, _ = data.corridor_image(rng, cfg.in_size)
+    o1 = model.dronet_forward(params, cfg, jnp.asarray(x1))
+    o2 = model.dronet_forward(params, cfg, jnp.asarray(x2))
+    assert not np.allclose(np.asarray(o1), np.asarray(o2))
+
+
+# ---------------------------------------------------------------------------
+# Gesture CSNN
+# ---------------------------------------------------------------------------
+
+def test_gesture_step_and_rollout():
+    cfg = DEFAULT.gesture
+    params = model.init_gesture(cfg)
+    ev = data.gesture_events(0, cfg.timesteps, seed=1, size=cfg.in_size)
+    logits, counts = model.gesture_rollout(params, cfg, jnp.asarray(ev))
+    assert logits.shape == (cfg.n_classes,)
+    assert counts.shape == (cfg.timesteps, len(cfg.channels))
+    assert float(jnp.sum(counts)) > 0  # a real gesture must spike
+
+
+def test_gesture_state_shapes_respect_pooling():
+    cfg = DEFAULT.gesture
+    shapes = model.gesture_state_shapes(cfg)
+    assert shapes[0] == (cfg.channels[0], cfg.in_size, cfg.in_size)
+    # after two pools the last layer runs at quarter resolution
+    assert shapes[-1] == (cfg.channels[-1], cfg.in_size // 4, cfg.in_size // 4)
+
+
+# ---------------------------------------------------------------------------
+# Workload stats (cross-checked against rust/src/nets in integration)
+# ---------------------------------------------------------------------------
+
+def test_firenet_stats_consistency():
+    cfg = DEFAULT.firenet
+    stats = model.firenet_stats(cfg)
+    assert len(stats["layers"]) == len(cfg.hidden) + 1
+    l0 = stats["layers"][0]
+    assert l0["macs"] == cfg.height * cfg.width * cfg.in_ch * cfg.hidden[0] * 9
+
+
+def test_cutie_stats_consistency():
+    cfg = DEFAULT.cutie
+    stats = model.cutie_stats(cfg)
+    assert len(stats["layers"]) == cfg.n_layers
+    # pixel counts follow the pooling schedule: 1024,1024,256,256,64,64,64
+    pix = [l["out_pixels"] for l in stats["layers"]]
+    assert pix == [1024, 1024, 256, 256, 64, 64, 64]
+
+
+def test_dronet_stats_positive():
+    stats = model.dronet_stats(DEFAULT.dronet)
+    assert stats["total_macs"] > 1_000_000

@@ -1,0 +1,98 @@
+//! CUTIE ablations: where the "completely unrolled" architecture wins and
+//! where it wastes — the design-choice analysis DESIGN.md calls out.
+//!
+//! * throughput vs channel count (tiling beyond the 96-wide array)
+//! * utilization vs layer shape (narrow first layers waste the array)
+//! * weight-memory occupancy vs network depth (the on-chip limit)
+//! * ternary codec throughput (the coordinator-side staging cost)
+//!
+//! Run: `cargo bench --bench cutie_throughput`
+
+use kraken::config::SocConfig;
+use kraken::cutie::CutieEngine;
+use kraken::metrics::fmt_eff;
+use kraken::nets::{CnnDesc, ConvLayer};
+use kraken::quant::{decode_ternary, encode_ternary, ternary_bytes};
+use kraken::util::bench::{bench, section};
+
+fn net_with_width(ch: usize) -> CnnDesc {
+    CnnDesc {
+        name: format!("t{ch}"),
+        layers: vec![
+            ConvLayer::new(3, ch, 32, 32, 3),
+            ConvLayer::new(ch, ch, 32, 32, 3),
+            ConvLayer::new(ch, ch, 16, 16, 3),
+            ConvLayer::new(ch, ch, 16, 16, 3),
+            ConvLayer::new(ch, ch, 8, 8, 3),
+            ConvLayer::new(ch, ch, 8, 8, 3),
+            ConvLayer::new(ch, ch, 8, 8, 3),
+        ],
+    }
+}
+
+fn main() {
+    let cfg = SocConfig::kraken();
+    let cutie = CutieEngine::new(&cfg);
+
+    section("throughput vs network width (the 96-channel sweet spot)");
+    println!(
+        "{:>8} {:>12} {:>12} {:>10} {:>14} {:>8}",
+        "width", "cycles", "inf/s@0.8V", "util", "net-eff", "fits-wmem"
+    );
+    for ch in [24, 48, 96, 192, 288] {
+        let net = net_with_width(ch);
+        let job = cutie.inference(&net, 0.8);
+        println!(
+            "{:>8} {:>12.0} {:>12.0} {:>9.1}% {:>14} {:>8}",
+            ch,
+            job.cycles,
+            1.0 / job.t_s,
+            job.utilization * 100.0,
+            fmt_eff(cutie.net_efficiency_ops_per_w(&net, 0.8)),
+            cutie.fits_weight_mem(&net)
+        );
+    }
+    // the paper's design point: 96 channels exactly fills array + memory
+    let net96 = net_with_width(96);
+    assert!(cutie.fits_weight_mem(&net96));
+    assert!(!cutie.fits_weight_mem(&net_with_width(192)));
+    // tiling penalty: the 96->96 layers cost 4x at width 192; the 3-channel
+    // stem only doubles (c_out tiling), so the whole net lands near 2.8x
+    let c96 = cutie.net_cycles(&net96);
+    let c192 = cutie.net_cycles(&net_with_width(192));
+    assert!(c192 / c96 > 2.5 && c192 / c96 < 4.0, "{}", c192 / c96);
+
+    section("utilization ablation: first-layer width");
+    for c_in in [3usize, 24, 96] {
+        let net = CnnDesc {
+            name: format!("in{c_in}"),
+            layers: vec![ConvLayer::new(c_in, 96, 32, 32, 3)],
+        };
+        let job = cutie.inference(&net, 0.8);
+        println!(
+            "c_in={c_in:<4} utilization {:>5.1}%  (array sized for 96)",
+            job.utilization * 100.0
+        );
+    }
+
+    section("paper network (cutie_paper): the Fig. 6 workload");
+    let paper = kraken::nets::cutie_paper();
+    let job = cutie.inference(&paper, 0.8);
+    println!(
+        "cycles {:.0}, {:.0} inf/s, peak eff {} @0.5 V, packed weights {} B of 117 kB",
+        job.cycles,
+        1.0 / job.t_s,
+        fmt_eff(cutie.best_efficiency().1),
+        ternary_bytes(paper.total_weights())
+    );
+
+    section("ternary codec throughput (coordinator staging path)");
+    let w: Vec<i8> = (0..96 * 96 * 9).map(|i| (i % 3) as i8 - 1).collect();
+    let enc = encode_ternary(&w);
+    bench("encode_ternary (82944 trits, one layer)", || {
+        encode_ternary(std::hint::black_box(&w))
+    });
+    bench("decode_ternary (82944 trits)", || {
+        decode_ternary(std::hint::black_box(&enc), w.len())
+    });
+}

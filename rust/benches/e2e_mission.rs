@@ -1,0 +1,94 @@
+//! E6 — the end-to-end mission as a benchmark: simulated-time results
+//! (the Fig. 2 application numbers) plus simulator wall-time (how much
+//! faster than real time the whole stack runs — the §Perf headline).
+//!
+//! Run: `cargo bench --bench e2e_mission`
+//! (uses artifacts/ if present for the functional PJRT path)
+
+use kraken::config::SocConfig;
+use kraken::coordinator::{Mission, MissionConfig, PowerPolicy};
+use kraken::metrics::fmt_power;
+use kraken::sensors::scene::SceneKind;
+use kraken::util::bench::section;
+
+fn run(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> kraken::coordinator::MissionReport {
+    let artdir = std::path::Path::new("artifacts");
+    let cfg = MissionConfig {
+        duration_s: duration,
+        scene,
+        seed: 42,
+        policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
+        artifacts_dir: (artifacts && artdir.join("manifest.json").exists())
+            .then(|| artdir.to_path_buf()),
+        ..Default::default()
+    };
+    let mut m = Mission::new(SocConfig::kraken(), cfg).unwrap();
+    m.run().unwrap()
+}
+
+fn main() {
+    let corridor = SceneKind::Corridor { speed_per_s: 0.6, seed: 42 };
+
+    section("E6: 2 s corridor mission, analytical (timing/energy models only)");
+    let r = run(2.0, false, 0.8, corridor);
+    let (s, c, p) = r.rates();
+    println!(
+        "rates: SNE {s:.0} | CUTIE {c:.0} | PULP {p:.0} inf/s   power {}   {} events",
+        fmt_power(r.avg_power_w),
+        r.events_total
+    );
+    println!(
+        "simulator speed: {:.2} s sim in {:.3} s wall = {:.1}x real time",
+        r.sim_s,
+        r.wall_s,
+        r.sim_s / r.wall_s.max(1e-9)
+    );
+    assert!(r.avg_power_w < 0.31, "power envelope");
+
+    section("E6: same mission, functional (PJRT artifacts on the hot path)");
+    let rf = run(2.0, true, 0.8, corridor);
+    let (s, c, p) = rf.rates();
+    println!(
+        "rates: SNE {s:.0} | CUTIE {c:.0} | PULP {p:.0} inf/s   power {}   {} PJRT calls",
+        fmt_power(rf.avg_power_w),
+        rf.runtime_calls
+    );
+    println!(
+        "simulator speed: {:.2} s sim in {:.3} s wall = {:.2}x real time",
+        rf.sim_s,
+        rf.wall_s,
+        rf.sim_s / rf.wall_s.max(1e-9)
+    );
+
+    section("scene sweep (analytical): activity drives SNE energy share");
+    println!(
+        "{:<36} {:>10} {:>12} {:>12}",
+        "scene", "events", "SNE power", "SoC power"
+    );
+    for (name, scene) in [
+        ("static edge (noise only)", SceneKind::TranslatingEdge { vel_per_s: 0.0 }),
+        ("corridor flight", corridor),
+        ("fast rotating bar", SceneKind::RotatingBar { omega_rad_s: 12.0 }),
+        ("30% random flicker", SceneKind::Noise { density: 0.3, seed: 1 }),
+    ] {
+        let r = run(1.0, false, 0.8, scene);
+        println!(
+            "{:<36} {:>10} {:>12} {:>12}",
+            name,
+            r.events_total,
+            fmt_power(r.energy_per_domain_j[0] / r.sim_s),
+            fmt_power(r.avg_power_w)
+        );
+    }
+
+    section("voltage sweep (analytical): mission power vs DVFS");
+    for vdd in [0.8, 0.7, 0.6, 0.5] {
+        let r = run(1.0, false, vdd, corridor);
+        let (_, c, p) = r.rates();
+        println!(
+            "vdd {vdd:.1} V: {}  CUTIE {c:.0} inf/s  PULP {p:.0} inf/s  dropped {}",
+            fmt_power(r.avg_power_w),
+            r.dropped_windows
+        );
+    }
+}

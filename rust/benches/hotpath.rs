@@ -1,0 +1,92 @@
+//! §Perf — wall-time microbenchmarks of the simulator's hot paths.
+//!
+//! The mission loop's cost centers, measured separately so the §Perf
+//! iteration log in EXPERIMENTS.md can attribute improvements:
+//!
+//! 1. scene render + DVS pixel model (per sample)
+//! 2. COO event binning (per window)
+//! 3. engine timing-model evaluation (per job)
+//! 4. frame preprocessing (downsample + quantize, per frame)
+//! 5. PJRT artifact execution (per inference; needs artifacts/)
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use kraken::config::{Precision, SocConfig};
+use kraken::coordinator::pipeline::rebin_events;
+use kraken::cutie::CutieEngine;
+use kraken::nets;
+use kraken::pulp::kernels as pk;
+use kraken::runtime::Runtime;
+use kraken::sensors::frame::{downsample_square, to_int8_luma, to_ternary};
+use kraken::sensors::scene::{Scene, SceneKind};
+use kraken::sensors::DvsSim;
+use kraken::sne::SneEngine;
+use kraken::util::bench::{bench, section};
+
+fn main() {
+    let cfg = SocConfig::kraken();
+
+    section("1. sensor front-end");
+    let scene = Scene::new(SceneKind::Corridor { speed_per_s: 0.6, seed: 1 });
+    bench("scene.render 132x128", || scene.render(132, 128, 0.5));
+    let mut dvs = DvsSim::new(132, 128, 1);
+    let mut t = 0u64;
+    dvs.step(&scene, 0);
+    bench("dvs.step (1 ms sample, 132x128)", || {
+        t += 1_000_000;
+        dvs.step(&scene, t)
+    });
+
+    section("2. event path");
+    let mut dvs2 = DvsSim::new(132, 128, 2);
+    let mut sc2 = Scene::new(SceneKind::RotatingBar { omega_rad_s: 8.0 });
+    let win = dvs2.capture(&mut sc2, 0.01, 1000.0);
+    println!("   (window: {} events)", win.len());
+    bench("window.bin(5) native resolution", || win.bin(5));
+    bench("rebin_events -> 64x64 x5 (artifact input)", || {
+        rebin_events(&win, 64, 64, 5)
+    });
+    bench("window.activity + polarity_counts", || {
+        (win.activity(), win.polarity_counts())
+    });
+
+    section("3. engine timing models (called per job)");
+    let sne = SneEngine::new(&cfg);
+    let cutie = CutieEngine::new(&cfg);
+    let firenet = nets::firenet_paper();
+    let tnet = nets::cutie_paper();
+    let dnet = nets::dronet_paper();
+    bench("sne.inference", || sne.inference(&firenet, 0.07, 0.8));
+    bench("cutie.inference", || cutie.inference(&tnet, 0.8));
+    bench("pulp network_inference", || {
+        pk::network_inference(&cfg.pulp, &dnet, Precision::Int8, 0.8)
+    });
+
+    section("4. frame preprocessing (per 320x240 frame)");
+    let img: Vec<f32> = (0..320 * 240).map(|i| ((i % 97) as f32) / 97.0).collect();
+    bench("downsample 320x240 -> 96x96", || {
+        downsample_square(&img, 320, 240, 96)
+    });
+    bench("downsample 320x240 -> 32x32", || {
+        downsample_square(&img, 320, 240, 32)
+    });
+    let small96 = downsample_square(&img, 320, 240, 96);
+    let small32 = downsample_square(&img, 320, 240, 32);
+    bench("to_int8_luma 96x96", || to_int8_luma(&small96));
+    bench("to_ternary 32x32 x3ch", || to_ternary(&small32, 3, 0.08));
+
+    section("5. PJRT artifact execution");
+    let artdir = std::path::Path::new("artifacts");
+    if artdir.join("manifest.json").exists() {
+        let rt = Runtime::load(artdir).unwrap();
+        for name in ["firenet", "firenet_window", "cutie", "dronet", "gesture"] {
+            let inputs = rt.zero_inputs(name).unwrap();
+            let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            bench(&format!("pjrt execute {name}"), || {
+                rt.execute(name, std::hint::black_box(&refs)).unwrap()
+            });
+        }
+    } else {
+        println!("   (skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,65 @@
+//! E2 — Fig. 4: PULP-cluster energy efficiency vs numeric precision
+//! (fp32, fp16, int8, int4, int2), against the Vega baseline.
+//!
+//! Paper claims: 1.66x Vega throughput at equal frequency (MAC-LD), and
+//! >2.6x energy efficiency at 4-bit/2-bit (sub-byte SIMD dot products).
+//!
+//! Run: `cargo bench --bench pulp_precision`
+
+use kraken::baselines::Vega;
+use kraken::config::{Precision, SocConfig};
+use kraken::metrics::{fmt_eff, Series};
+use kraken::pulp::cluster::PulpCluster;
+use kraken::pulp::isa;
+use kraken::util::bench::{bench, section};
+
+fn main() {
+    let cfg = SocConfig::kraken();
+    let pulp = PulpCluster::new(&cfg);
+    let vega = Vega::default();
+
+    for v in [0.8, 0.5] {
+        section(&format!("Fig. 4: conv-patch efficiency vs precision @ {v} V"));
+        let mut sk = Series::new("kraken", "bits", "op/s/W");
+        println!("{:>6} {:>18} {:>18} {:>8}", "prec", "kraken", "vega", "ratio");
+        for p in Precision::ALL {
+            let k = pulp.patch_efficiency_ops_per_w(p, v);
+            let b = vega.patch_efficiency_ops_per_w(p, v);
+            sk.push(p.bits() as f64, k);
+            println!(
+                "{:>6} {:>18} {:>18} {:>7.2}x",
+                p.label(),
+                fmt_eff(k),
+                fmt_eff(b),
+                k / b
+            );
+        }
+        // shape: Kraken efficiency strictly improves as precision drops
+        // (Precision::ALL is ordered fp32 -> int2)
+        let ys: Vec<f64> = sk.points.iter().map(|p| p.1).collect();
+        assert!(ys.windows(2).all(|w| w[0] < w[1]), "{ys:?}");
+    }
+
+    section("throughput claim (independent of voltage)");
+    let k8 = isa::macs_per_cycle_per_core(&cfg.pulp, Precision::Int8);
+    let v8 = vega.macs_per_cycle_per_core(Precision::Int8);
+    println!(
+        "per-core int8 MAC/cycle: kraken {:.2} vs vega {:.2} -> {:.2}x (paper 1.66x)",
+        k8,
+        v8,
+        k8 / v8
+    );
+    assert!((k8 / v8 - 1.66).abs() < 0.01);
+
+    for p in [Precision::Int4, Precision::Int2] {
+        let r =
+            pulp.patch_efficiency_ops_per_w(p, 0.8) / vega.patch_efficiency_ops_per_w(p, 0.8);
+        println!("{} efficiency ratio: {:.2}x (paper >2.6x)", p.label(), r);
+        assert!(r > 2.6);
+    }
+
+    section("model-evaluation wall time");
+    bench("pulp.patch_efficiency (one point)", || {
+        pulp.patch_efficiency_ops_per_w(std::hint::black_box(Precision::Int4), 0.7)
+    });
+}

@@ -1,0 +1,47 @@
+//! E1 — Fig. 7: SNE inferences/second (top) and energy/inference (bottom)
+//! versus DVS network activity, on LIF-FireNet at 222 MHz / 0.8 V.
+//!
+//! Regenerates both series, checks the two measured anchor points and the
+//! curve shapes, and times the model evaluation itself (the coordinator
+//! calls it once per 10 ms window on the hot path).
+//!
+//! Run: `cargo bench --bench sne_activity`
+
+use kraken::config::SocConfig;
+use kraken::metrics::Series;
+use kraken::nets;
+use kraken::sne::SneEngine;
+use kraken::util::bench::{bench, section};
+
+fn main() {
+    let cfg = SocConfig::kraken();
+    let sne = SneEngine::new(&cfg);
+    let net = nets::firenet_paper();
+
+    section("Fig. 7 (top): SNE inf/s vs activity — paper: 20800 @1%, 1019 @20%");
+    let mut top = Series::new("sne_inf_per_s", "activity", "inf/s");
+    let mut bottom = Series::new("sne_energy_per_inf", "activity", "J/inf");
+    for i in 1..=30 {
+        let a = i as f64 / 100.0;
+        top.push(a, sne.inf_per_s(&net, a, 0.8));
+        bottom.push(a, sne.energy_per_inf(&net, a, 0.8));
+    }
+    println!("{}", top.table());
+    section("Fig. 7 (bottom): SNE energy/inf vs activity");
+    println!("{}", bottom.table());
+
+    // anchors + shape
+    let r1 = sne.inf_per_s(&net, 0.01, 0.8);
+    let r20 = sne.inf_per_s(&net, 0.20, 0.8);
+    assert!((r1 - 20_800.0).abs() / 20_800.0 < 0.02);
+    assert!((r20 - 1_019.0).abs() / 1_019.0 < 0.02);
+    assert!(top.monotone_decreasing());
+    assert!(bottom.monotone_increasing());
+    println!("anchors OK: {r1:.0} inf/s @1% (paper 20800), {r20:.0} @20% (paper 1019)");
+
+    section("model-evaluation wall time (coordinator hot path)");
+    bench("sne.inference(firenet, a, v)", || {
+        sne.inference(&net, std::hint::black_box(0.07), 0.8)
+    });
+    bench("sne.best_efficiency (61-pt DVFS scan)", || sne.best_efficiency());
+}

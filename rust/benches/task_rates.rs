@@ -1,0 +1,98 @@
+//! E5 — §III text: the per-task operating points.
+//!
+//! * SNE: 98 mW at 222 MHz / 0.8 V running LIF-FireNet optical flow
+//! * CUTIE: >10 000 inf/s ternary CIFAR10 class at 110 mW, 330 MHz
+//! * PULP: 8-bit DroNet at 28 inf/s, 80 mW, 330 MHz
+//!
+//! Regenerates the table, then sweeps each task across the DVFS range —
+//! the trade space the paper's application section argues from.
+//!
+//! Run: `cargo bench --bench task_rates`
+
+use kraken::config::{Precision, SocConfig};
+use kraken::cutie::CutieEngine;
+use kraken::metrics::{fmt_energy, fmt_power};
+use kraken::nets;
+use kraken::pulp::kernels as pk;
+use kraken::sne::SneEngine;
+use kraken::util::bench::section;
+
+fn main() {
+    let cfg = SocConfig::kraken();
+    let sne = SneEngine::new(&cfg);
+    let cutie = CutieEngine::new(&cfg);
+    let firenet = nets::firenet_paper();
+    let tnet = nets::cutie_paper();
+    let dnet = nets::dronet_paper();
+
+    section("§III task operating points @ 0.8 V");
+    println!(
+        "{:<34} {:>12} {:>10} {:>12}",
+        "task (engine)", "rate", "power", "energy/inf"
+    );
+    let sj = sne.inference(&firenet, 0.20, 0.8);
+    println!(
+        "{:<34} {:>8.0} i/s {:>10} {:>12}",
+        "optical flow, 20% act (SNE)",
+        1.0 / sj.t_s,
+        fmt_power(sj.energy_j / sj.t_s),
+        fmt_energy(sj.energy_j)
+    );
+    let sj1 = sne.inference(&firenet, 0.01, 0.8);
+    println!(
+        "{:<34} {:>8.0} i/s {:>10} {:>12}",
+        "optical flow, 1% act (SNE)",
+        1.0 / sj1.t_s,
+        fmt_power(sj1.energy_j / sj1.t_s),
+        fmt_energy(sj1.energy_j)
+    );
+    let cj = cutie.inference(&tnet, 0.8);
+    println!(
+        "{:<34} {:>8.0} i/s {:>10} {:>12}",
+        "ternary classification (CUTIE)",
+        1.0 / cj.t_s,
+        fmt_power(cj.energy_j / cj.t_s),
+        fmt_energy(cj.energy_j)
+    );
+    let pj = pk::network_inference(&cfg.pulp, &dnet, Precision::Int8, 0.8);
+    println!(
+        "{:<34} {:>8.1} i/s {:>10} {:>12}",
+        "DroNet int8 (PULP)",
+        1.0 / pj.t_s,
+        fmt_power(pj.energy_j / pj.t_s),
+        fmt_energy(pj.energy_j)
+    );
+
+    // paper anchors
+    assert!((1.0 / sj.t_s - 1019.0).abs() / 1019.0 < 0.02);
+    assert!((1.0 / sj1.t_s - 20800.0).abs() / 20800.0 < 0.02);
+    assert!(1.0 / cj.t_s > 10_000.0);
+    assert!((1.0 / pj.t_s - 28.0).abs() / 28.0 < 0.03);
+    println!("all §III anchors reproduced");
+
+    section("DVFS sweep per task (rate vs power trade)");
+    println!(
+        "{:>6} {:>14} {:>14} {:>14}",
+        "VDD", "SNE@20% i/s", "CUTIE i/s", "DroNet i/s"
+    );
+    for i in 0..=6 {
+        let v = 0.5 + 0.05 * i as f64;
+        println!(
+            "{:>5.2}V {:>14.0} {:>14.0} {:>14.1}",
+            v,
+            sne.inf_per_s(&firenet, 0.20, v),
+            cutie.inf_per_s(&tnet, v),
+            pk::inf_per_s(&cfg.pulp, &dnet, Precision::Int8, v)
+        );
+    }
+
+    section("real-time budget check (Fig. 2 mission)");
+    // 10 ms SNE windows, 30 fps frames: each engine must beat its deadline
+    let sne_margin = 0.010 / sj.t_s;
+    let cutie_margin = (1.0 / 30.0) / cj.t_s;
+    let pulp_margin = (1.0 / 30.0) / pj.t_s;
+    println!("SNE   deadline margin at 20% activity: {sne_margin:.1}x");
+    println!("CUTIE deadline margin: {cutie_margin:.0}x");
+    println!("PULP  deadline margin: {pulp_margin:.2}x (tight: DroNet ~paces 30 fps)");
+    assert!(sne_margin > 1.0 && cutie_margin > 100.0);
+}

@@ -1,0 +1,130 @@
+//! Vega (Rossi et al., JSSC 2022): a 10-core IoT SoC whose 9-core compute
+//! cluster is the closest published relative of Kraken's PULP cluster —
+//! same ISA family, SIMD dot-product at int16/int8, but **no MAC-LD**
+//! (loads occupy issue slots: 0.59 MAC/cycle/core on the same conv patches)
+//! and **no sub-byte SIMD** (int4/int2 run via unpack-to-int8 sequences).
+
+use crate::config::{DomainCfg, Precision};
+
+
+/// Vega cluster model.
+#[derive(Debug, Clone)]
+pub struct Vega {
+    pub domain: DomainCfg,
+    pub cores: usize,
+    /// Issue efficiency without MAC-LD.
+    pub issue_efficiency: f64,
+    pub fp_power_factor: f64,
+}
+
+impl Default for Vega {
+    fn default() -> Self {
+        Vega {
+            domain: DomainCfg {
+                // ~46 mW busy at 0.8 V / 330 MHz for the 9-core cluster
+                // (scaled from the published 0.64 TOPS/W @ int8 best point)
+                c_eff: 0.046 / (0.64 * 330.0e6),
+                leak_per_v: 0.006,
+                f_max: 330.0e6,
+                idle_frac: 0.08,
+            },
+            cores: 9,
+            issue_efficiency: 0.59,
+            fp_power_factor: 1.2,
+        }
+    }
+}
+
+impl Vega {
+    /// MACs per cycle per core at precision `p`. Sub-byte precisions pay
+    /// an unpack penalty: they execute on the int8 datapath after lane
+    /// expansion (extra insns eat half the throughput at int4, two thirds
+    /// at int2).
+    pub fn macs_per_cycle_per_core(&self, p: Precision) -> f64 {
+        let raw = match p {
+            Precision::Fp32 => 0.5,
+            Precision::Fp16 => 2.0,
+            Precision::Int8 => 4.0,
+            Precision::Int4 => 2.0,  // unpack to int8, ~half throughput
+            Precision::Int2 => 4.0 / 3.0, // deeper unpack sequence
+        };
+        raw * self.issue_efficiency
+    }
+
+    /// Cluster MAC/s at voltage `v`.
+    pub fn peak_macs_per_s(&self, p: Precision, v: f64) -> f64 {
+        self.macs_per_cycle_per_core(p) * self.cores as f64 * self.domain.f_at(v)
+    }
+
+    pub fn busy_power(&self, p: Precision, v: f64) -> f64 {
+        let f = self.domain.f_at(v);
+        let fp = match p {
+            Precision::Fp32 | Precision::Fp16 => self.fp_power_factor,
+            _ => 1.0,
+        };
+        self.domain.p_dyn(v, f, 1.0) * fp + self.domain.p_leak(v)
+    }
+
+    /// Conv-patch efficiency (op/s/W, 2 op = 1 MAC) — Fig. 4's baseline.
+    pub fn patch_efficiency_ops_per_w(&self, p: Precision, v: f64) -> f64 {
+        2.0 * self.peak_macs_per_s(p, v) / self.busy_power(p, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SocConfig;
+    use crate::pulp::isa;
+    use crate::pulp::cluster::PulpCluster;
+
+    #[test]
+    fn kraken_is_1_66x_faster_per_core_at_same_frequency() {
+        let kraken = SocConfig::kraken().pulp;
+        let vega = Vega::default();
+        let k = isa::macs_per_cycle_per_core(&kraken, Precision::Int8);
+        let v = vega.macs_per_cycle_per_core(Precision::Int8);
+        let ratio = k / v;
+        assert!(
+            (ratio - 1.66).abs() < 0.01,
+            "per-core same-frequency throughput ratio {ratio} vs paper 1.66x"
+        );
+    }
+
+    #[test]
+    fn kraken_2_6x_efficiency_at_subbyte() {
+        let kraken = PulpCluster::new(&SocConfig::kraken());
+        let vega = Vega::default();
+        for p in [Precision::Int4, Precision::Int2] {
+            let k = kraken.patch_efficiency_ops_per_w(p, 0.8);
+            let v = vega.patch_efficiency_ops_per_w(p, 0.8);
+            assert!(
+                k / v > 2.6,
+                "{}: ratio {} vs paper claim >2.6x",
+                p.label(),
+                k / v
+            );
+        }
+    }
+
+    #[test]
+    fn int8_efficiency_comparable() {
+        // the paper only claims wins at sub-byte; at int8 the two clusters
+        // are in the same ballpark
+        let kraken = PulpCluster::new(&SocConfig::kraken());
+        let vega = Vega::default();
+        let r = kraken.patch_efficiency_ops_per_w(Precision::Int8, 0.8)
+            / vega.patch_efficiency_ops_per_w(Precision::Int8, 0.8);
+        assert!(r > 0.6 && r < 1.7, "int8 ratio {r}");
+    }
+
+    #[test]
+    fn vega_subbyte_does_not_improve() {
+        // without sub-byte SIMD, dropping below int8 *hurts* Vega
+        let vega = Vega::default();
+        let e8 = vega.patch_efficiency_ops_per_w(Precision::Int8, 0.8);
+        let e4 = vega.patch_efficiency_ops_per_w(Precision::Int4, 0.8);
+        let e2 = vega.patch_efficiency_ops_per_w(Precision::Int2, 0.8);
+        assert!(e4 < e8 && e2 < e4);
+    }
+}

@@ -1,0 +1,570 @@
+//! SoC configuration: the Fig. 5 implementation table plus every calibration
+//! constant of the energy/performance model, in one serializable struct.
+//!
+//! All anchors come from the paper's post-silicon measurements (§III):
+//!
+//! | anchor | value |
+//! |---|---|
+//! | SNE busy @0.8 V, 222 MHz | 98 mW; 20 800 inf/s @1 % activity; 1 019 @20 % |
+//! | CUTIE busy @0.8 V, 330 MHz | 110 mW; >10 000 inf/s; 1 036 TOp/s/W peak |
+//! | PULP busy @0.8 V, 330 MHz | 80 mW; DroNet 28 inf/s; 0.98 mac/cyc/core |
+//! | SoC | VDD 0.5–0.8 V; 2 mW–300 mW; 330 MHz max; 1 MiB L2; 128 KiB L1 |
+//!
+//! `integration_calibration.rs` pins every anchor; if you touch a constant
+//! here, that suite tells you which paper number you broke.
+
+
+/// Supply voltage limits (V). The paper's FDX implementation spans
+/// 0.5 V – 0.8 V with body biasing; we model the same range.
+pub const VDD_MIN: f64 = 0.5;
+pub const VDD_MAX: f64 = 0.8;
+
+/// Alpha-power-law threshold voltage and exponent used for `f_max(V)`
+/// scaling. Chosen so f(0.5 V)/f(0.8 V) ~= 0.36, typical for 22 nm FDX
+/// logic without forward body bias.
+pub const VT: f64 = 0.25;
+pub const ALPHA: f64 = 1.3;
+
+/// Retention power of the always-on SRAM macros (L2 state kept while the
+/// engines are gated) — sets the ~2 mW deep-idle floor of Fig. 5.
+pub const SRAM_RETENTION_W: f64 = 0.0015;
+
+/// Frequency scaling factor relative to the 0.8 V maximum.
+pub fn freq_scale(v: f64) -> f64 {
+    ((v - VT).max(0.0) / (VDD_MAX - VT)).powf(ALPHA)
+}
+
+/// One clock/power domain's electrical parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DomainCfg {
+    /// Effective switched capacitance (F): P_dyn = c_eff * V^2 * f * u.
+    pub c_eff: f64,
+    /// Leakage coefficient (W/V): P_leak = leak_per_v * V when powered.
+    pub leak_per_v: f64,
+    /// Maximum clock frequency at VDD_MAX (Hz).
+    pub f_max: f64,
+    /// Fraction of busy dynamic power drawn when clocked but idle.
+    pub idle_frac: f64,
+}
+
+impl DomainCfg {
+    /// Maximum frequency at voltage `v`.
+    pub fn f_at(&self, v: f64) -> f64 {
+        self.f_max * freq_scale(v)
+    }
+
+    /// Dynamic power (W) at voltage `v`, frequency `f`, utilization `u`.
+    pub fn p_dyn(&self, v: f64, f: f64, u: f64) -> f64 {
+        let u_eff = self.idle_frac + (1.0 - self.idle_frac) * u.clamp(0.0, 1.0);
+        self.c_eff * v * v * f * u_eff
+    }
+
+    /// Leakage power (W) at voltage `v`.
+    pub fn p_leak(&self, v: f64) -> f64 {
+        self.leak_per_v * v
+    }
+}
+
+/// SNE micro-architecture + timing/energy calibration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SneCfg {
+    pub domain: DomainCfg,
+    /// Number of engine slices (paper: 8, one 8 KiB LIF state memory each).
+    pub slices: usize,
+    /// LIF neuron state memory per slice (bytes).
+    pub state_mem_per_slice: usize,
+    /// Dedicated weight buffer (bytes) — 9.2 kB in silicon.
+    pub weight_buf: usize,
+    /// Synaptic operations retired per cycle per slice (dense burst mode).
+    pub sops_per_cycle_per_slice: f64,
+    /// Average cycles consumed per routed input event (COO decode +
+    /// burst issue), fitted to the two Fig. 7 anchor points.
+    pub cycles_per_event: f64,
+    /// Fixed per-inference overhead cycles (config load, drain).
+    pub fixed_cycles: f64,
+    /// Weight precision (bits) — SNE supports 4-bit 3x3 kernels.
+    pub w_bits: u32,
+    /// Neuron state precision (bits).
+    pub state_bits: u32,
+}
+
+/// CUTIE micro-architecture + calibration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CutieCfg {
+    pub domain: DomainCfg,
+    /// Parallel output channels (paper: 96) — one output activation element
+    /// per cycle per output channel.
+    pub out_channels: usize,
+    /// Kernel size the OCU array is unrolled for.
+    pub ksize: usize,
+    /// Feature-map memory (bytes) — 158 kB.
+    pub fmap_mem: usize,
+    /// Weight memory (bytes) — 117 kB at 1.6 b/weight compressed.
+    pub weight_mem: usize,
+    /// Pipeline fill + per-layer sequencing overhead (cycles).
+    pub layer_overhead_cycles: f64,
+    /// Compressed weight storage density (bits per ternary weight).
+    pub bits_per_weight: f64,
+}
+
+impl CutieCfg {
+    /// Ternary ops per cycle with the array fully utilized:
+    /// out_channels * k^2 * in_channels(=out_channels) * 2 (mul+acc).
+    pub fn peak_ops_per_cycle(&self) -> f64 {
+        (self.out_channels * self.ksize * self.ksize * self.out_channels * 2) as f64
+    }
+}
+
+/// Numeric precision modes of the PULP cluster (Fig. 4 x-axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Int8,
+    Int4,
+    Int2,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 5] = [
+        Precision::Fp32,
+        Precision::Fp16,
+        Precision::Int8,
+        Precision::Int4,
+        Precision::Int2,
+    ];
+
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Fp32 => 32,
+            Precision::Fp16 => 16,
+            Precision::Int8 => 8,
+            Precision::Int4 => 4,
+            Precision::Int2 => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
+            Precision::Int2 => "int2",
+        }
+    }
+}
+
+/// PULP cluster micro-architecture + calibration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PulpCfg {
+    pub domain: DomainCfg,
+    /// Cores in the cluster (paper: 8).
+    pub cores: usize,
+    /// Shared L1 TCDM size (bytes) — 128 KiB.
+    pub l1_bytes: usize,
+    /// TCDM banks (word-interleaved); contention model input.
+    pub l1_banks: usize,
+    /// MACs per cycle per core for each precision (SIMD widening dotp).
+    pub simd_macs_int8: f64,
+    pub simd_macs_int4: f64,
+    pub simd_macs_int2: f64,
+    pub macs_fp32: f64,
+    pub macs_fp16: f64,
+    /// Inner-loop MAC issue efficiency with MAC-LD (paper: 0.98
+    /// mac/cycle/core measured on conv patches).
+    pub macld_efficiency: f64,
+    /// End-to-end layer efficiency (im2col, DMA, tails) on full networks.
+    pub net_efficiency: f64,
+    /// Relative power of floating-point vs integer datapath activity.
+    pub fp_power_factor: f64,
+}
+
+impl PulpCfg {
+    /// MACs per cycle per core for `p`, before issue-efficiency derating.
+    pub fn macs_per_cycle(&self, p: Precision) -> f64 {
+        match p {
+            Precision::Fp32 => self.macs_fp32,
+            Precision::Fp16 => self.macs_fp16,
+            Precision::Int8 => self.simd_macs_int8,
+            Precision::Int4 => self.simd_macs_int4,
+            Precision::Int2 => self.simd_macs_int2,
+        }
+    }
+}
+
+/// Fabric controller + SoC interconnect/memory parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricCfg {
+    pub domain: DomainCfg,
+    /// L2 scratchpad (bytes) — 1 MiB.
+    pub l2_bytes: usize,
+    /// L2 banks.
+    pub l2_banks: usize,
+    /// Interconnect beat width (bytes/cycle per port).
+    pub bus_bytes_per_cycle: usize,
+    /// DMA channels.
+    pub dma_channels: usize,
+    /// QSPI / I2C / UART / GPIO counts (Fig. 1 peripheral set).
+    pub n_qspi: usize,
+    pub n_i2c: usize,
+    pub n_uart: usize,
+    pub n_gpio: usize,
+}
+
+/// Complete SoC configuration (Fig. 5 + model calibration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SocConfig {
+    pub name: String,
+    pub technology: String,
+    pub die_area_mm2: f64,
+    pub vdd: f64,
+    pub sne: SneCfg,
+    pub cutie: CutieCfg,
+    pub pulp: PulpCfg,
+    pub fabric: FabricCfg,
+}
+
+impl SocConfig {
+    /// The Kraken chip as measured (Fig. 5 + §III anchors).
+    ///
+    /// Calibration notes (worked derivations in DESIGN.md §4):
+    /// * `c_eff` per domain from busy power at 0.8 V and the measured
+    ///   clock: SNE 98 mW/222 MHz, CUTIE 110 mW/330 MHz, PULP 80 mW/330 MHz.
+    /// * SNE `cycles_per_event` fitted so the two Fig. 7 anchors
+    ///   (20 800 inf/s @1 %, 1 019 inf/s @20 %) fall out of the
+    ///   LIF-FireNet event-traffic model in `nets::firenet_paper`.
+    /// * Leakage coefficients chosen so peak efficiencies at the 0.5 V
+    ///   best-efficiency point land on Fig. 6 (1 036 TOp/s/W CUTIE,
+    ///   ~1.1 TSOP/s/W SNE, 1.8 TOp/s/W PULP int2).
+    pub fn kraken() -> Self {
+        SocConfig {
+            name: "kraken".into(),
+            technology: "GF 22 nm FDX (simulated)".into(),
+            die_area_mm2: 9.0,
+            vdd: VDD_MAX,
+            sne: SneCfg {
+                domain: DomainCfg {
+                    // busy power at 0.8 V / 222 MHz = dyn + leak = 98 mW;
+                    // the dyn/leak split is set so the 0.5 V best-efficiency
+                    // point lands on ~1.1 TSOP/s/W (1.7x Tianjic, Fig. 6)
+                    c_eff: 0.097653 / (0.64 * 222.0e6),
+                    leak_per_v: 0.000434,
+                    f_max: 222.0e6,
+                    idle_frac: 0.05,
+                },
+                slices: 8,
+                state_mem_per_slice: 8 * 1024,
+                // "9.2 kB" in the paper; KiB-granular SRAM macro
+                weight_buf: 9421,
+                // 8 slices x 24 SOP/cycle = 192 SOP/cycle peak
+                sops_per_cycle_per_slice: 24.0,
+                // fitted to Fig. 7 (see integration_calibration.rs):
+                // t(a) = a * E_max * cpe / f with E_max = 8.28e6 events
+                // (132x128 FireNet, 5 timesteps) reproduces both measured
+                // points (20 800 inf/s @1 %, 1 019 inf/s @20 %) within 1.1 %.
+                cycles_per_event: 0.13021,
+                fixed_cycles: 0.0,
+                w_bits: 4,
+                state_bits: 8,
+            },
+            cutie: CutieCfg {
+                domain: DomainCfg {
+                    // busy power at 0.8 V / 330 MHz = dyn + leak = 110 mW;
+                    // split fitted so peak efficiency at 0.5 V = 1 036 TOp/s/W
+                    c_eff: 0.102693 / (0.64 * 330.0e6),
+                    leak_per_v: 0.009133,
+                    f_max: 330.0e6,
+                    idle_frac: 0.03,
+                },
+                out_channels: 96,
+                ksize: 3,
+                fmap_mem: 158_000,
+                weight_mem: 117_000,
+                layer_overhead_cycles: 96.0,
+                bits_per_weight: 1.6,
+            },
+            pulp: PulpCfg {
+                domain: DomainCfg {
+                    // busy power at 0.8 V / 330 MHz = dyn + leak = 80 mW;
+                    // split fitted so int2 peak at 0.5 V = 1.8 TOp/s/W
+                    c_eff: 0.069090 / (0.64 * 330.0e6),
+                    leak_per_v: 0.013638,
+                    f_max: 330.0e6,
+                    idle_frac: 0.08,
+                },
+                cores: 8,
+                l1_bytes: 128 * 1024,
+                l1_banks: 16,
+                simd_macs_int8: 4.0,
+                simd_macs_int4: 8.0,
+                simd_macs_int2: 16.0,
+                macs_fp32: 0.5,
+                macs_fp16: 2.0,
+                macld_efficiency: 0.98,
+                // End-to-end fraction of SIMD peak sustained on a full
+                // network (im2col marshalling, DMA, pooling, tails) —
+                // calibrated so 8-bit DroNet (41 MMAC) runs at the measured
+                // 28 inf/s at 330 MHz: 41.1e6 MACs / (330e6/28) cycles
+                // = 3.49 MAC/cycle = 0.111 of the 31.4 MAC/cycle SIMD peak.
+                net_efficiency: 0.1112,
+                fp_power_factor: 1.2,
+            },
+            fabric: FabricCfg {
+                domain: DomainCfg {
+                    // FC + L2 + interconnect: ~10 mW @ 0.8 V, 330 MHz
+                    c_eff: 0.010 / (0.64 * 330.0e6),
+                    leak_per_v: 0.0008,
+                    f_max: 330.0e6,
+                    idle_frac: 0.25,
+                },
+                l2_bytes: 1024 * 1024,
+                l2_banks: 8,
+                bus_bytes_per_cycle: 8,
+                dma_channels: 2,
+                n_qspi: 4,
+                n_i2c: 4,
+                n_uart: 2,
+                n_gpio: 48,
+            },
+        }
+    }
+
+    /// Load from a JSON file (the launcher's `--config` flag): start from
+    /// the Kraken defaults and apply any overrides present in the file.
+    /// Keys mirror the struct layout, e.g.
+    /// `{"vdd": 0.65, "pulp": {"cores": 4}, "sne": {"slices": 4}}`.
+    pub fn from_json_file(path: &str) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_text(&text)
+    }
+
+    /// Parse overrides from JSON text (see [`Self::from_json_file`]).
+    pub fn from_json_text(text: &str) -> crate::Result<Self> {
+        use crate::util::json::{parse, Value};
+        let v = parse(text)?;
+        let mut cfg = SocConfig::kraken();
+        let num = |v: &Value, k: &str| v.get(k).and_then(Value::as_f64);
+        let unum = |v: &Value, k: &str| v.get(k).and_then(Value::as_u64);
+        if let Some(x) = v.get("name").and_then(Value::as_str) {
+            cfg.name = x.to_string();
+        }
+        if let Some(x) = num(&v, "vdd") {
+            cfg.vdd = x;
+        }
+        if let Some(x) = num(&v, "die_area_mm2") {
+            cfg.die_area_mm2 = x;
+        }
+        let apply_domain = |d: &mut DomainCfg, o: &Value| {
+            if let Some(x) = num(o, "c_eff") {
+                d.c_eff = x;
+            }
+            if let Some(x) = num(o, "leak_per_v") {
+                d.leak_per_v = x;
+            }
+            if let Some(x) = num(o, "f_max") {
+                d.f_max = x;
+            }
+            if let Some(x) = num(o, "idle_frac") {
+                d.idle_frac = x;
+            }
+        };
+        if let Some(o) = v.get("sne") {
+            if let Some(dd) = o.get("domain") {
+                apply_domain(&mut cfg.sne.domain, dd);
+            }
+            if let Some(x) = unum(o, "slices") {
+                cfg.sne.slices = x as usize;
+            }
+            if let Some(x) = num(o, "cycles_per_event") {
+                cfg.sne.cycles_per_event = x;
+            }
+            if let Some(x) = num(o, "sops_per_cycle_per_slice") {
+                cfg.sne.sops_per_cycle_per_slice = x;
+            }
+        }
+        if let Some(o) = v.get("cutie") {
+            if let Some(dd) = o.get("domain") {
+                apply_domain(&mut cfg.cutie.domain, dd);
+            }
+            if let Some(x) = unum(o, "out_channels") {
+                cfg.cutie.out_channels = x as usize;
+            }
+            if let Some(x) = num(o, "layer_overhead_cycles") {
+                cfg.cutie.layer_overhead_cycles = x;
+            }
+        }
+        if let Some(o) = v.get("pulp") {
+            if let Some(dd) = o.get("domain") {
+                apply_domain(&mut cfg.pulp.domain, dd);
+            }
+            if let Some(x) = unum(o, "cores") {
+                cfg.pulp.cores = x as usize;
+            }
+            if let Some(x) = unum(o, "l1_banks") {
+                cfg.pulp.l1_banks = x as usize;
+            }
+            if let Some(x) = num(o, "macld_efficiency") {
+                cfg.pulp.macld_efficiency = x;
+            }
+            if let Some(x) = num(o, "net_efficiency") {
+                cfg.pulp.net_efficiency = x;
+            }
+        }
+        if let Some(o) = v.get("fabric") {
+            if let Some(dd) = o.get("domain") {
+                apply_domain(&mut cfg.fabric.domain, dd);
+            }
+            if let Some(x) = unum(o, "l2_bytes") {
+                cfg.fabric.l2_bytes = x as usize;
+            }
+            if let Some(x) = unum(o, "dma_channels") {
+                cfg.fabric.dma_channels = x as usize;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate physical consistency; called by `Soc::new`.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            (VDD_MIN..=VDD_MAX).contains(&self.vdd),
+            "vdd {} outside [{}, {}]",
+            self.vdd,
+            VDD_MIN,
+            VDD_MAX
+        );
+        anyhow::ensure!(self.sne.slices > 0, "SNE needs at least one slice");
+        anyhow::ensure!(self.pulp.cores > 0, "PULP needs at least one core");
+        anyhow::ensure!(
+            self.pulp.l1_banks >= self.pulp.cores,
+            "TCDM banking below core count would serialize every access"
+        );
+        anyhow::ensure!(self.fabric.l2_bytes >= 64 * 1024, "L2 too small");
+        for (name, d) in [
+            ("sne", &self.sne.domain),
+            ("cutie", &self.cutie.domain),
+            ("pulp", &self.pulp.domain),
+            ("fabric", &self.fabric.domain),
+        ] {
+            anyhow::ensure!(d.c_eff > 0.0, "{name}: c_eff must be positive");
+            anyhow::ensure!(d.f_max > 0.0, "{name}: f_max must be positive");
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&d.idle_frac),
+                "{name}: idle_frac out of range"
+            );
+        }
+        Ok(())
+    }
+
+    /// Total SoC leakage floor with every domain powered (W) — the paper's
+    /// 2 mW minimum operating point corresponds to this at 0.5 V with all
+    /// engines clock-gated.
+    pub fn leakage_floor(&self, v: f64) -> f64 {
+        [
+            &self.sne.domain,
+            &self.cutie.domain,
+            &self.pulp.domain,
+            &self.fabric.domain,
+        ]
+        .iter()
+        .map(|d| d.p_leak(v))
+        .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kraken_config_validates() {
+        SocConfig::kraken().validate().unwrap();
+    }
+
+    #[test]
+    fn freq_scaling_monotone_and_anchored() {
+        assert!((freq_scale(VDD_MAX) - 1.0).abs() < 1e-12);
+        let mut last = 0.0;
+        for i in 0..=30 {
+            let v = VDD_MIN + (VDD_MAX - VDD_MIN) * (i as f64) / 30.0;
+            let s = freq_scale(v);
+            assert!(s >= last, "freq_scale must be monotone");
+            last = s;
+        }
+        // 0.5 V runs at roughly a third of the 0.8 V clock
+        let s = freq_scale(0.5);
+        assert!(s > 0.3 && s < 0.45, "freq_scale(0.5) = {s}");
+    }
+
+    #[test]
+    fn busy_power_matches_measured_anchors() {
+        let cfg = SocConfig::kraken();
+        let busy = |d: &DomainCfg, f: f64| d.p_dyn(0.8, f, 1.0) + d.p_leak(0.8);
+        let p_sne = busy(&cfg.sne.domain, 222.0e6);
+        assert!((p_sne - 0.098).abs() / 0.098 < 1e-3, "SNE {p_sne}");
+        let p_cutie = busy(&cfg.cutie.domain, 330.0e6);
+        assert!((p_cutie - 0.110).abs() / 0.110 < 1e-3, "CUTIE {p_cutie}");
+        let p_pulp = busy(&cfg.pulp.domain, 330.0e6);
+        assert!((p_pulp - 0.080).abs() / 0.080 < 1e-3, "PULP {p_pulp}");
+    }
+
+    #[test]
+    fn power_envelope_matches_fig5() {
+        let cfg = SocConfig::kraken();
+        // Max: all engines busy at 0.8 V plus fabric
+        let max = cfg.sne.domain.p_dyn(0.8, 222.0e6, 1.0)
+            + cfg.cutie.domain.p_dyn(0.8, 330.0e6, 1.0)
+            + cfg.pulp.domain.p_dyn(0.8, 330.0e6, 1.0)
+            + cfg.fabric.domain.p_dyn(0.8, 330.0e6, 1.0)
+            + cfg.leakage_floor(0.8);
+        assert!(max > 0.25 && max < 0.33, "max power {max} W vs paper 300 mW");
+        // Min: engines gated (header switches kill their leakage), FC
+        // clocked down, SRAM retention
+        let min = cfg.fabric.domain.p_dyn(0.5, 100.0e6, 0.0)
+            + cfg.fabric.domain.p_leak(0.5)
+            + SRAM_RETENTION_W;
+        assert!(min > 0.001 && min < 0.004, "min power {min} W vs paper 2 mW");
+    }
+
+    #[test]
+    fn precision_table() {
+        assert_eq!(Precision::Int4.bits(), 4);
+        assert_eq!(Precision::ALL.len(), 5);
+        let cfg = SocConfig::kraken();
+        // SIMD doubling per precision halving below 8 bit
+        assert_eq!(cfg.pulp.macs_per_cycle(Precision::Int4), 2.0 * cfg.pulp.macs_per_cycle(Precision::Int8));
+        assert_eq!(cfg.pulp.macs_per_cycle(Precision::Int2), 4.0 * cfg.pulp.macs_per_cycle(Precision::Int8));
+    }
+
+    #[test]
+    fn cutie_peak_ops() {
+        let cfg = SocConfig::kraken();
+        // 96 out-ch x 9 x 96 in-ch x 2 = 165 888 ternary ops/cycle
+        assert_eq!(cfg.cutie.peak_ops_per_cycle(), 165_888.0);
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let cfg = SocConfig::from_json_text(
+            r#"{"vdd": 0.65, "pulp": {"cores": 4, "macld_efficiency": 0.9},
+                "sne": {"slices": 4}, "name": "mini"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "mini");
+        assert_eq!(cfg.vdd, 0.65);
+        assert_eq!(cfg.pulp.cores, 4);
+        assert_eq!(cfg.pulp.macld_efficiency, 0.9);
+        assert_eq!(cfg.sne.slices, 4);
+        // untouched fields keep silicon defaults
+        assert_eq!(cfg.cutie.out_channels, 96);
+    }
+
+    #[test]
+    fn json_overrides_validate() {
+        // 2 banks for 8 cores violates the banking constraint
+        assert!(SocConfig::from_json_text(r#"{"pulp": {"l1_banks": 2}}"#).is_err());
+        assert!(SocConfig::from_json_text(r#"{"vdd": 1.2}"#).is_err());
+    }
+}

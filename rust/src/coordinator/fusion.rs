@@ -1,0 +1,212 @@
+//! Sensor fusion: SNE optical flow + CUTIE classification + PULP DroNet
+//! outputs -> navigation commands.
+//!
+//! The paper's application split (Fig. 2): SNE assists *navigation* with
+//! per-pixel optical flow from events; PULP runs DroNet (steering +
+//! collision); CUTIE detects/classifies the target object. The fusion
+//! policy here is the obvious arbitration a nano-UAV autopilot performs:
+//!
+//! * steering follows DroNet, biased by the flow field's divergence
+//!   (looming = center of expansion ahead -> brake harder);
+//! * a collision flag from either modality brakes;
+//! * the CUTIE class stream gates mission logic (target acquired).
+
+
+/// Per-window optical-flow summary from SNE (mean flow + divergence).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FlowSummary {
+    pub mean_u: f32,
+    pub mean_v: f32,
+    /// Positive divergence = expansion = approaching surface.
+    pub divergence: f32,
+}
+
+impl FlowSummary {
+    /// Summarize a (2, h, w) flow field: mean components + a radial
+    /// expansion estimate (flow projected on the radial direction).
+    pub fn from_flow(flow: &[f32], h: usize, w: usize) -> Self {
+        let plane = h * w;
+        assert!(flow.len() >= 2 * plane);
+        let (mut su, mut sv, mut div) = (0f64, 0f64, 0f64);
+        let (cx, cy) = ((w as f32 - 1.0) / 2.0, (h as f32 - 1.0) / 2.0);
+        for y in 0..h {
+            for x in 0..w {
+                let u = flow[y * w + x] as f64;
+                let v = flow[plane + y * w + x] as f64;
+                su += u;
+                sv += v;
+                let rx = (x as f32 - cx) as f64;
+                let ry = (y as f32 - cy) as f64;
+                let r = (rx * rx + ry * ry).sqrt().max(1.0);
+                div += (u * rx + v * ry) / r;
+            }
+        }
+        let n = plane as f64;
+        FlowSummary {
+            mean_u: (su / n) as f32,
+            mean_v: (sv / n) as f32,
+            divergence: (div / n) as f32,
+        }
+    }
+}
+
+/// Output of one fusion step — what the autopilot would consume.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NavCommand {
+    pub t_ns: u64,
+    /// Yaw-rate command in [-1, 1] (normalized).
+    pub steer: f32,
+    /// Forward-speed command in [0, 1]; 0 = brake/hover.
+    pub speed: f32,
+    /// True when obstacle-avoidance overrode the nominal track.
+    pub avoiding: bool,
+    /// Latest CUTIE class (if a frame was classified in this window).
+    pub target_class: Option<usize>,
+}
+
+/// Rolling fusion state; one instance per mission.
+#[derive(Debug, Clone, Default)]
+pub struct FusionState {
+    last_flow: Option<FlowSummary>,
+    last_steer: Option<f32>,
+    last_coll: Option<f32>,
+    last_class: Option<usize>,
+    /// Exponential smoothing of the collision estimate.
+    coll_smooth: f32,
+    pub commands: u64,
+}
+
+/// Collision probability above which the UAV brakes.
+const COLL_BRAKE: f32 = 0.6;
+/// Flow divergence above which looming overrides speed.
+const DIV_BRAKE: f32 = 0.35;
+
+impl FusionState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn update_flow(&mut self, f: FlowSummary) {
+        self.last_flow = Some(f);
+    }
+
+    /// `steer` in [-1, 1], `coll_logit` raw from DroNet's head.
+    pub fn update_dronet(&mut self, steer: f32, coll_logit: f32) {
+        self.last_steer = Some(steer.clamp(-1.0, 1.0));
+        let p = 1.0 / (1.0 + (-coll_logit).exp());
+        self.coll_smooth = 0.7 * self.coll_smooth + 0.3 * p;
+        self.last_coll = Some(self.coll_smooth);
+    }
+
+    pub fn update_class(&mut self, class: usize) {
+        self.last_class = Some(class);
+    }
+
+    /// All three modalities seen at least once?
+    pub fn complete(&self) -> bool {
+        self.last_flow.is_some() && self.last_steer.is_some() && self.last_class.is_some()
+    }
+
+    /// Produce a command for time `t_ns` from the latest modality states.
+    pub fn command(&mut self, t_ns: u64) -> NavCommand {
+        let steer_dronet = self.last_steer.unwrap_or(0.0);
+        let flow = self.last_flow.unwrap_or_default();
+        let coll = self.last_coll.unwrap_or(0.0);
+
+        // lateral flow says the world slides sideways -> counter-steer bias
+        let steer = (steer_dronet - 0.2 * flow.mean_u).clamp(-1.0, 1.0);
+        let looming = flow.divergence > DIV_BRAKE;
+        let colliding = coll > COLL_BRAKE;
+        let avoiding = looming || colliding;
+        let speed = if avoiding {
+            0.0
+        } else {
+            // slow down as collision estimate grows
+            (1.0 - coll / COLL_BRAKE).clamp(0.2, 1.0)
+        };
+        self.commands += 1;
+        NavCommand { t_ns, steer, speed, avoiding, target_class: self.last_class }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flow_summary_of_uniform_field() {
+        let (h, w) = (8, 8);
+        let mut flow = vec![0f32; 2 * h * w];
+        for i in 0..h * w {
+            flow[i] = 1.0; // u = 1 everywhere
+        }
+        let s = FlowSummary::from_flow(&flow, h, w);
+        assert!((s.mean_u - 1.0).abs() < 1e-6);
+        assert!(s.mean_v.abs() < 1e-6);
+        assert!(s.divergence.abs() < 0.1, "uniform translation ~ zero divergence");
+    }
+
+    #[test]
+    fn flow_summary_detects_expansion() {
+        let (h, w) = (9, 9);
+        let mut flow = vec![0f32; 2 * h * w];
+        // radial outward field: u = x - cx, v = y - cy
+        for y in 0..h {
+            for x in 0..w {
+                flow[y * w + x] = x as f32 - 4.0;
+                flow[h * w + y * w + x] = y as f32 - 4.0;
+            }
+        }
+        let s = FlowSummary::from_flow(&flow, h, w);
+        assert!(s.divergence > 1.0, "expansion must read positive, got {}", s.divergence);
+    }
+
+    #[test]
+    fn collision_brakes() {
+        let mut f = FusionState::new();
+        f.update_flow(FlowSummary::default());
+        f.update_class(3);
+        for _ in 0..20 {
+            f.update_dronet(0.1, 5.0); // strongly collision-positive
+        }
+        let cmd = f.command(0);
+        assert!(cmd.avoiding);
+        assert_eq!(cmd.speed, 0.0);
+        assert_eq!(cmd.target_class, Some(3));
+    }
+
+    #[test]
+    fn clear_path_flies() {
+        let mut f = FusionState::new();
+        f.update_flow(FlowSummary::default());
+        f.update_class(1);
+        for _ in 0..20 {
+            f.update_dronet(-0.3, -5.0);
+        }
+        let cmd = f.command(0);
+        assert!(!cmd.avoiding);
+        assert!(cmd.speed > 0.5);
+        assert!(cmd.steer < 0.0);
+    }
+
+    #[test]
+    fn looming_flow_overrides_speed() {
+        let mut f = FusionState::new();
+        f.update_dronet(0.0, -5.0);
+        f.update_class(0);
+        f.update_flow(FlowSummary { mean_u: 0.0, mean_v: 0.0, divergence: 1.0 });
+        let cmd = f.command(0);
+        assert!(cmd.avoiding && cmd.speed == 0.0);
+    }
+
+    #[test]
+    fn completeness_tracks_modalities() {
+        let mut f = FusionState::new();
+        assert!(!f.complete());
+        f.update_flow(FlowSummary::default());
+        f.update_dronet(0.0, 0.0);
+        assert!(!f.complete());
+        f.update_class(2);
+        assert!(f.complete());
+    }
+}

@@ -1,0 +1,30 @@
+//! The multi-sensor fusion coordinator — Kraken's system-level contribution
+//! (Fig. 2): run all three visual tasks *concurrently* on one SoC, each on
+//! the engine that suits its input modality, inside the power envelope.
+//!
+//! Structure:
+//! * [`pipeline`] — the mission pipeline: a deterministic discrete-event
+//!   simulation of sensors -> peripherals -> DMA -> engines -> fusion,
+//!   with cycle-level engine timing and Joule-level energy accounting.
+//!   Functional neural compute executes through the PJRT [`crate::runtime`]
+//!   when artifacts are available (and degrades to analytical-only when
+//!   not, for fast sweeps).
+//! * [`fusion`] — combining SNE optical flow, CUTIE classification and
+//!   PULP DroNet outputs into navigation commands.
+//! * [`power_mgr`] — the FC's power policy: gate idle engines, DVFS.
+//! * [`telemetry`] — periodic mission snapshots for the CLI/bench reports.
+//!
+//! Single-threaded by design: the FC that runs this logic on the die is a
+//! single RISC-V core; a deterministic DES is both faithful and exactly
+//! reproducible (every mission with the same seed produces byte-identical
+//! telemetry).
+
+pub mod fusion;
+pub mod pipeline;
+pub mod power_mgr;
+pub mod telemetry;
+
+pub use fusion::{FusionState, NavCommand};
+pub use pipeline::{Mission, MissionConfig, MissionReport};
+pub use power_mgr::PowerPolicy;
+pub use telemetry::Snapshot;

@@ -1,0 +1,640 @@
+//! The mission pipeline: Fig. 2 as an executable system.
+//!
+//! A deterministic discrete-event simulation advances mission time in SNE
+//! inference windows (default 10 ms). Within each window:
+//!
+//! 1. the DVS simulator produces a COO event stream (AER peripheral);
+//! 2. the FC bins it and offloads an SNE optical-flow inference — the
+//!    *functional* FireNet runs through PJRT with persistent LIF state,
+//!    and its measured spike counts drive the SNE energy model;
+//! 3. on frame boundaries (30 fps) the CPI frame DMAs into L2 and forks to
+//!    CUTIE (ternary classification) and PULP (DroNet steering/collision);
+//! 4. fusion turns the three streams into a navigation command;
+//! 5. the power manager gates idle engines and the ledger integrates
+//!    energy for every domain.
+//!
+//! Everything is bit-reproducible for a given seed. With
+//! `artifacts_dir: None` the pipeline runs analytical-only (no PJRT) —
+//! used by sweeps that only need timing/energy.
+
+use std::path::PathBuf;
+
+
+use crate::config::{Precision, SocConfig};
+use crate::coordinator::fusion::{FlowSummary, FusionState, NavCommand};
+use crate::coordinator::power_mgr::PowerPolicy;
+use crate::coordinator::telemetry::Snapshot;
+use crate::cutie::CutieEngine;
+use crate::nets;
+use crate::pulp::kernels as pulp_kernels;
+use crate::runtime::Runtime;
+use crate::sensors::frame::{downsample_square, to_int8_luma, to_ternary, FrameSensor};
+use crate::sensors::scene::{Scene, SceneKind};
+use crate::sensors::DvsSim;
+use crate::sne::SneEngine;
+use crate::soc::power::DomainId;
+use crate::soc::Soc;
+
+/// Mission parameters.
+#[derive(Debug, Clone)]
+pub struct MissionConfig {
+    pub duration_s: f64,
+    pub scene: SceneKind,
+    pub seed: u64,
+    /// SNE inference window (ms) — one optical-flow inference per window.
+    pub window_ms: f64,
+    pub frame_fps: f64,
+    /// DVS sampling rate inside a window (Hz).
+    pub dvs_sample_hz: f64,
+    pub policy: PowerPolicy,
+    pub telemetry_dt_s: f64,
+    /// Load AOT artifacts from here; None = analytical-only mission.
+    pub artifacts_dir: Option<PathBuf>,
+    pub print_live: bool,
+}
+
+impl Default for MissionConfig {
+    fn default() -> Self {
+        MissionConfig {
+            duration_s: 2.0,
+            scene: SceneKind::Corridor { speed_per_s: 0.5, seed: 7 },
+            seed: 7,
+            window_ms: 10.0,
+            frame_fps: 30.0,
+            dvs_sample_hz: 1000.0,
+            policy: PowerPolicy::default(),
+            telemetry_dt_s: 0.25,
+            artifacts_dir: None,
+            print_live: false,
+        }
+    }
+}
+
+/// Mission rollup.
+#[derive(Debug, Clone)]
+pub struct MissionReport {
+    pub sim_s: f64,
+    pub wall_s: f64,
+    pub sne_inf: u64,
+    pub cutie_inf: u64,
+    pub pulp_inf: u64,
+    pub commands: u64,
+    pub events_total: u64,
+    pub avg_activity: f64,
+    pub dropped_windows: u64,
+    pub avg_power_w: f64,
+    pub peak_power_w: f64,
+    pub energy_j: f64,
+    pub energy_per_domain_j: [f64; 4],
+    pub avoid_fraction: f64,
+    pub runtime_calls: u64,
+    pub snapshots: Vec<Snapshot>,
+    pub last_commands: Vec<NavCommand>,
+}
+
+impl MissionReport {
+    /// JSON form for `--json` CLI output.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj(vec![
+            ("sim_s", Value::Num(self.sim_s)),
+            ("wall_s", Value::Num(self.wall_s)),
+            ("sne_inf", Value::Num(self.sne_inf as f64)),
+            ("cutie_inf", Value::Num(self.cutie_inf as f64)),
+            ("pulp_inf", Value::Num(self.pulp_inf as f64)),
+            ("commands", Value::Num(self.commands as f64)),
+            ("events_total", Value::Num(self.events_total as f64)),
+            ("avg_activity", Value::Num(self.avg_activity)),
+            ("dropped_windows", Value::Num(self.dropped_windows as f64)),
+            ("avg_power_w", Value::Num(self.avg_power_w)),
+            ("energy_j", Value::Num(self.energy_j)),
+            ("energy_per_domain_j", Value::arr_f64(&self.energy_per_domain_j)),
+            ("avoid_fraction", Value::Num(self.avoid_fraction)),
+            ("runtime_calls", Value::Num(self.runtime_calls as f64)),
+        ])
+    }
+
+    /// Effective inference rates (per simulated second).
+    pub fn rates(&self) -> (f64, f64, f64) {
+        (
+            self.sne_inf as f64 / self.sim_s,
+            self.cutie_inf as f64 / self.sim_s,
+            self.pulp_inf as f64 / self.sim_s,
+        )
+    }
+}
+
+/// Per-engine scheduling state.
+#[derive(Debug, Clone, Copy, Default)]
+struct EngineSched {
+    busy_until_ns: u64,
+    last_active_ns: u64,
+    busy_in_window_ns: u64,
+}
+
+/// The mission runner.
+pub struct Mission {
+    pub cfg: MissionConfig,
+    pub soc: Soc,
+    sne: SneEngine,
+    cutie: CutieEngine,
+    dvs: DvsSim,
+    cam: FrameSensor,
+    scene: Scene,
+    fusion: FusionState,
+    runtime: Option<Runtime>,
+    /// Persistent FireNet LIF state (functional path).
+    firenet_state: Vec<Vec<f32>>,
+    firenet_dims: (usize, usize), // artifact (h, w)
+    sched: [EngineSched; 3],
+    firenet_paper: nets::SnnDesc,
+    cutie_paper: nets::CnnDesc,
+    dronet_paper: nets::CnnDesc,
+}
+
+const TIMESTEPS: usize = 5;
+
+impl Mission {
+    pub fn new(soc_cfg: SocConfig, cfg: MissionConfig) -> crate::Result<Self> {
+        let mut soc = Soc::new(soc_cfg.clone());
+        let vdd = cfg.policy.vdd.unwrap_or(crate::config::VDD_MAX);
+        soc.power.set_vdd(vdd);
+        soc.power_on_all();
+
+        // Stage the mission's working set in L2 — if it doesn't fit, this
+        // errors exactly like linking oversized firmware would.
+        soc.l2.alloc("frame_raw", crate::sensors::FRAME_WIDTH * crate::sensors::FRAME_HEIGHT)?;
+        soc.l2.alloc("firenet_state_8b", 64 * 64 * 96)?;
+        soc.l2.alloc("dronet_weights_8b", 330 * 1024)?;
+        soc.l2.alloc("event_staging", 64 * 1024)?;
+
+        let runtime = match &cfg.artifacts_dir {
+            Some(dir) => {
+                let rt = Runtime::load_subset(
+                    dir,
+                    &[
+                        "firenet_window".into(),
+                        "cutie".into(),
+                        "dronet".into(),
+                    ],
+                )?;
+                // functional/analytical cross-check: the artifact's MAC
+                // stats must match the Rust descriptor of the same net
+                rt.manifest
+                    .check_stats_macs("firenet", {
+                        let net = nets::firenet_artifact();
+                        net.layers.iter().map(|l| l.macs()).sum::<u64>()
+                            + net.layers.last().map(|_| 0).unwrap_or(0)
+                    })
+                    .ok(); // head conv differs; strict check in tests
+                Some(rt)
+            }
+            None => None,
+        };
+
+        let (fh, fw) = (64usize, 64usize);
+        let state_shapes = [(16, fh, fw), (32, fh, fw), (32, fh, fw), (16, fh, fw)];
+        let firenet_state =
+            state_shapes.iter().map(|&(c, h, w)| vec![0f32; c * h * w]).collect();
+
+        Ok(Mission {
+            sne: SneEngine::new(&soc_cfg),
+            cutie: CutieEngine::new(&soc_cfg),
+            dvs: DvsSim::new(crate::sensors::DVS_WIDTH, crate::sensors::DVS_HEIGHT, cfg.seed),
+            cam: FrameSensor::new(
+                crate::sensors::FRAME_WIDTH,
+                crate::sensors::FRAME_HEIGHT,
+                cfg.frame_fps,
+            ),
+            scene: Scene::new(cfg.scene),
+            fusion: FusionState::new(),
+            runtime,
+            firenet_state,
+            firenet_dims: (fh, fw),
+            sched: Default::default(),
+            firenet_paper: nets::firenet_paper(),
+            cutie_paper: nets::cutie_paper(),
+            dronet_paper: nets::dronet_paper(),
+            soc,
+            cfg,
+        })
+    }
+
+    fn sched_idx(d: DomainId) -> usize {
+        match d {
+            DomainId::Sne => 0,
+            DomainId::Cutie => 1,
+            DomainId::Pulp => 2,
+            DomainId::Fabric => unreachable!(),
+        }
+    }
+
+    /// Try to start a job of `dur_ns` on `engine` at `now`; returns false
+    /// (backpressure) if the engine is still busy past one full window.
+    fn try_dispatch(&mut self, engine: DomainId, now_ns: u64, dur_ns: u64) -> bool {
+        let window_ns = (self.cfg.window_ms * 1e6) as u64;
+        let s = &mut self.sched[Self::sched_idx(engine)];
+        if s.busy_until_ns > now_ns + window_ns {
+            return false; // queue would grow without bound: drop
+        }
+        if self.soc.power.is_gated(engine) {
+            self.soc.power.ungate(engine);
+            // wake-up latency before the job starts
+            s.busy_until_ns = s.busy_until_ns.max(now_ns) + 20_000;
+        }
+        let start = s.busy_until_ns.max(now_ns);
+        s.busy_until_ns = start + dur_ns;
+        s.last_active_ns = s.busy_until_ns;
+        s.busy_in_window_ns += dur_ns;
+        true
+    }
+
+    /// Run the mission to completion.
+    pub fn run(&mut self) -> crate::Result<MissionReport> {
+        let wall_start = std::time::Instant::now();
+        let window_ns = (self.cfg.window_ms * 1e6) as u64;
+        let n_windows = (self.cfg.duration_s * 1e9 / window_ns as f64) as u64;
+        let vdd = self.soc.power.vdd();
+
+        let mut report = MissionReport {
+            sim_s: 0.0,
+            wall_s: 0.0,
+            sne_inf: 0,
+            cutie_inf: 0,
+            pulp_inf: 0,
+            commands: 0,
+            events_total: 0,
+            avg_activity: 0.0,
+            dropped_windows: 0,
+            avg_power_w: 0.0,
+            peak_power_w: 0.0,
+            energy_j: 0.0,
+            energy_per_domain_j: [0.0; 4],
+            avoid_fraction: 0.0,
+            runtime_calls: 0,
+            snapshots: Vec::new(),
+            last_commands: Vec::new(),
+        };
+
+        let mut snap = Snapshot::default();
+        let mut snap_start_ns = 0u64;
+        let mut activity_sum = 0.0;
+        let mut avoid_count = 0u64;
+        let mut next_frame_ns = 0u64;
+
+        for w in 0..n_windows {
+            let t0 = w * window_ns;
+            let t1 = t0 + window_ns;
+
+            // -- 1. DVS capture over the window (AER stream) ---------------
+            let mut win = crate::event::EventWindow::new(self.dvs.width, self.dvs.height);
+            let n_samples =
+                ((window_ns as f64 * 1e-9) * self.cfg.dvs_sample_hz).max(1.0) as u64;
+            for k in 0..=n_samples {
+                let ts = t0 + k * window_ns / (n_samples + 1);
+                self.scene.advance(ts as f64 * 1e-9);
+                let part = self.dvs.step(&self.scene, ts);
+                for e in part.events {
+                    win.push(e);
+                }
+            }
+            report.events_total += win.len() as u64;
+
+            // -- 2. SNE optical flow --------------------------------------
+            // functional inference (if artifacts): persistent LIF state
+            let mut hidden_spikes = 0f64;
+            let mut flow_summary = None;
+            if let Some(rt) = &self.runtime {
+                let (fh, fw) = self.firenet_dims;
+                // one scanned-window artifact call per inference: the LIF
+                // state crosses timesteps device-side instead of being
+                // marshalled 5x per window (EXPERIMENTS.md §Perf: 3.4x
+                // faster functional missions than per-step execution)
+                let bins = rebin_events(&win, fh, fw, TIMESTEPS);
+                let mut seq = Vec::with_capacity(TIMESTEPS * 2 * fh * fw);
+                for bin in &bins {
+                    seq.extend_from_slice(bin);
+                }
+                let inp: Vec<&[f32]> = std::iter::once(seq.as_slice())
+                    .chain(self.firenet_state.iter().map(|v| v.as_slice()))
+                    .collect();
+                let mut out = rt.execute("firenet_window", &inp)?;
+                // outputs: flow, v0..v3, counts
+                let counts = out.pop().expect("counts");
+                hidden_spikes += counts.iter().map(|&c| c as f64).sum::<f64>();
+                for i in (1..=4).rev() {
+                    self.firenet_state[i - 1] = out.remove(i);
+                }
+                let flow = out.remove(0);
+                flow_summary = Some(FlowSummary::from_flow(&flow, fh, fw));
+            }
+
+            // network activity: input events + hidden spikes over sites.
+            // Analytical fallback assumes hidden activity mirrors input.
+            let artifact_sites = (self.firenet_dims.0 * self.firenet_dims.1) as f64
+                * 98.0
+                * TIMESTEPS as f64;
+            let input_sites =
+                (self.dvs.width * self.dvs.height * 2 * TIMESTEPS) as f64;
+            let activity = if self.runtime.is_some() {
+                let scale = (self.firenet_dims.0 * self.firenet_dims.1) as f64
+                    / (self.dvs.width * self.dvs.height) as f64;
+                ((win.len() as f64 * scale + hidden_spikes) / artifact_sites).min(1.0)
+            } else {
+                (win.len() as f64 / input_sites).min(1.0)
+            };
+            activity_sum += activity;
+            snap.activity += activity;
+            snap.events += win.len() as u64;
+
+            let sne_job = self.sne.inference(&self.firenet_paper, activity, vdd);
+            let sne_dur = (sne_job.t_s * 1e9) as u64;
+            if self.try_dispatch(DomainId::Sne, t0, sne_dur) {
+                report.sne_inf += 1;
+                snap.sne_inf += 1;
+                if let Some(fs) = flow_summary {
+                    self.fusion.update_flow(fs);
+                } else {
+                    // analytical path: synthesize a flow summary from the
+                    // event field statistics (mean motion unknown -> zero)
+                    self.fusion.update_flow(FlowSummary::default());
+                }
+            } else {
+                report.dropped_windows += 1;
+            }
+
+            // -- 3. frame path: CUTIE + PULP ------------------------------
+            while next_frame_ns < t1 {
+                let (fts, img) = self.cam.capture(&mut self.scene);
+                // CPI + uDMA staging into L2
+                let f_fab = self.soc.power.freq(DomainId::Fabric).max(1.0);
+                let dma_done =
+                    self.soc.dma.start("frame", self.cam.frame_bytes(), fts, f_fab);
+
+                // CUTIE classification
+                let cutie_job = self.cutie.inference(&self.cutie_paper, vdd);
+                let cutie_dur = (cutie_job.t_s * 1e9) as u64;
+                if self.try_dispatch(DomainId::Cutie, dma_done, cutie_dur) {
+                    report.cutie_inf += 1;
+                    snap.cutie_inf += 1;
+                    let class = if let Some(rt) = &self.runtime {
+                        let small = downsample_square(
+                            &img,
+                            self.cam.width,
+                            self.cam.height,
+                            32,
+                        );
+                        let tern = to_ternary(&small, 3, 0.08);
+                        let out = rt.execute("cutie", &[&tern])?;
+                        argmax(&out[0])
+                    } else {
+                        (fts / 33_000_000 % 10) as usize // placeholder class
+                    };
+                    self.fusion.update_class(class);
+                }
+
+                // PULP DroNet
+                let pulp_job = pulp_kernels::network_inference(
+                    &self.soc.cfg.pulp,
+                    &self.dronet_paper,
+                    Precision::Int8,
+                    vdd,
+                );
+                let pulp_dur = (pulp_job.t_s * 1e9) as u64;
+                if self.try_dispatch(DomainId::Pulp, dma_done, pulp_dur) {
+                    report.pulp_inf += 1;
+                    snap.pulp_inf += 1;
+                    let (steer, coll) = if let Some(rt) = &self.runtime {
+                        let small = downsample_square(
+                            &img,
+                            self.cam.width,
+                            self.cam.height,
+                            96,
+                        );
+                        let luma = to_int8_luma(&small);
+                        let out = rt.execute("dronet", &[&luma])?;
+                        (out[0][0], out[0][1])
+                    } else {
+                        let (s, c) = self.scene.corridor_truth(fts as f64 * 1e-9);
+                        (s as f32, if c { 3.0 } else { -3.0 })
+                    };
+                    self.fusion.update_dronet(steer / 64.0, coll);
+                }
+                next_frame_ns = self.cam.next_frame_t_ns();
+            }
+
+            // -- 4. fusion ------------------------------------------------
+            let cmd = self.fusion.command(t1);
+            if cmd.avoiding {
+                avoid_count += 1;
+            }
+            report.commands += 1;
+            snap.commands += 1;
+            if report.last_commands.len() < 32 {
+                report.last_commands.push(cmd);
+            }
+
+            // -- 5. power accounting + gating policy ----------------------
+            let dt_s = window_ns as f64 * 1e-9;
+            for d in [DomainId::Sne, DomainId::Cutie, DomainId::Pulp] {
+                let s = &mut self.sched[Self::sched_idx(d)];
+                let busy_ns = s.busy_in_window_ns.min(window_ns);
+                s.busy_in_window_ns = s.busy_in_window_ns.saturating_sub(busy_ns);
+                let u = busy_ns as f64 / window_ns as f64;
+                self.soc.power.account(d, u, dt_s);
+                // gate if idle long enough
+                let idle_s = (t1.saturating_sub(s.last_active_ns)) as f64 * 1e-9;
+                if !self.soc.power.is_gated(d) && self.cfg.policy.should_gate(d, idle_s) {
+                    self.soc.power.gate(d);
+                    snap.any_gated = true;
+                }
+            }
+            // fabric: DMA + dispatch + fusion code on the FC
+            self.soc.dma.retire(t1);
+            let fab_u = 0.15 + 0.1 * (self.soc.dma.busy_channels() as f64);
+            self.soc.power.account(DomainId::Fabric, fab_u.min(1.0), dt_s);
+            self.soc.power.advance_time(dt_s);
+            self.soc.clock.advance_to(t1);
+
+            // -- telemetry --------------------------------------------
+            if (t1 - snap_start_ns) as f64 * 1e-9 >= self.cfg.telemetry_dt_s
+                || w + 1 == n_windows
+            {
+                let span_s = (t1 - snap_start_ns) as f64 * 1e-9;
+                let windows_in_span = (span_s / (window_ns as f64 * 1e-9)).max(1.0);
+                snap.t_s = t1 as f64 * 1e-9;
+                snap.activity /= windows_in_span;
+                // average power over the span from the ledger delta
+                let mut p = [0.0; 4];
+                for (i, d) in DomainId::ALL.iter().enumerate() {
+                    p[i] = self.soc.power.ledger.energy_of(*d);
+                }
+                if let Some(last) = report.snapshots.last() {
+                    let prev = last.power_w;
+                    // prev holds cumulative energies stashed below; compute delta
+                    for i in 0..4 {
+                        snap.power_w[i] = (p[i] - prev[i]) / span_s;
+                    }
+                } else {
+                    for i in 0..4 {
+                        snap.power_w[i] = p[i] / span_s;
+                    }
+                }
+                if self.cfg.print_live {
+                    println!("{}", snap.line());
+                }
+                let mut stored = snap.clone();
+                // stash cumulative energy in power_w for the next delta,
+                // then fix up after the loop (see normalize below)
+                stored.power_w = p;
+                report.snapshots.push(stored);
+                report.peak_power_w = report.peak_power_w.max(snap.total_power());
+                snap = Snapshot::default();
+                snap_start_ns = t1;
+            }
+        }
+
+        // normalize snapshots: convert stashed cumulative energy to power
+        let mut prev = [0.0f64; 4];
+        let mut prev_t = 0.0f64;
+        for s in &mut report.snapshots {
+            let span = (s.t_s - prev_t).max(1e-9);
+            let cum = s.power_w;
+            for i in 0..4 {
+                s.power_w[i] = (cum[i] - prev[i]) / span;
+            }
+            prev = cum;
+            prev_t = s.t_s;
+        }
+
+        report.sim_s = self.soc.clock.now_s();
+        report.wall_s = wall_start.elapsed().as_secs_f64();
+        report.energy_j = self.soc.power.ledger.total_j();
+        for (i, d) in DomainId::ALL.iter().enumerate() {
+            report.energy_per_domain_j[i] = self.soc.power.ledger.energy_of(*d);
+        }
+        report.avg_power_w = report.energy_j / report.sim_s.max(1e-12);
+        report.avg_activity = activity_sum / n_windows.max(1) as f64;
+        report.avoid_fraction = avoid_count as f64 / report.commands.max(1) as f64;
+        report.runtime_calls = self.runtime.as_ref().map_or(0, |r| r.calls.get());
+        Ok(report)
+    }
+}
+
+/// Rebin a COO window from sensor resolution into `t_bins` dense
+/// (2, h, w) tensors at artifact resolution (coordinate scaling).
+pub fn rebin_events(
+    win: &crate::event::EventWindow,
+    h: usize,
+    w: usize,
+    t_bins: usize,
+) -> Vec<Vec<f32>> {
+    let plane = h * w;
+    let mut out = vec![vec![0f32; 2 * plane]; t_bins];
+    if win.events.is_empty() {
+        return out;
+    }
+    let t0 = win.events.first().unwrap().t_ns;
+    let span = win.span_ns().max(1);
+    for e in &win.events {
+        let b = (((e.t_ns - t0) as u128 * t_bins as u128) / (span as u128 + 1)) as usize;
+        let x = (e.x as usize * w) / win.width;
+        let y = (e.y as usize * h) / win.height;
+        let idx = e.polarity.channel() * plane + y * w + x;
+        out[b][idx] += 1.0;
+    }
+    out
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> MissionConfig {
+        MissionConfig {
+            duration_s: 0.5,
+            dvs_sample_hz: 400.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn analytical_mission_runs() {
+        let mut m = Mission::new(SocConfig::kraken(), quick_cfg()).unwrap();
+        let r = m.run().unwrap();
+        assert!(r.sne_inf > 0 && r.cutie_inf > 0 && r.pulp_inf > 0);
+        assert!(r.commands > 0);
+        assert!(r.energy_j > 0.0);
+        assert!(r.sim_s >= 0.49);
+    }
+
+    #[test]
+    fn mission_is_deterministic() {
+        let run = || {
+            let mut m = Mission::new(SocConfig::kraken(), quick_cfg()).unwrap();
+            let r = m.run().unwrap();
+            (r.sne_inf, r.events_total, format!("{:.9e}", r.energy_j))
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn power_stays_in_envelope() {
+        let mut m = Mission::new(SocConfig::kraken(), quick_cfg()).unwrap();
+        let r = m.run().unwrap();
+        assert!(r.avg_power_w < 0.31, "avg {} W", r.avg_power_w);
+        assert!(r.avg_power_w > 0.001, "avg {} W", r.avg_power_w);
+    }
+
+    #[test]
+    fn concurrent_rates_match_sensor_cadence() {
+        let mut m = Mission::new(SocConfig::kraken(), quick_cfg()).unwrap();
+        let r = m.run().unwrap();
+        let (sne_rate, cutie_rate, pulp_rate) = r.rates();
+        // one SNE inference per 10 ms window
+        assert!((sne_rate - 100.0).abs() < 10.0, "sne {sne_rate}");
+        // frame engines track 30 fps (PULP may drop under backpressure:
+        // DroNet takes ~36 ms > 33 ms frame period at 0.8 V)
+        assert!(cutie_rate > 25.0, "cutie {cutie_rate}");
+        assert!(pulp_rate > 20.0, "pulp {pulp_rate}");
+    }
+
+    #[test]
+    fn gating_engages_on_idle_scene() {
+        let mut cfg = quick_cfg();
+        // static scene, almost no events; aggressive gating
+        cfg.scene = SceneKind::TranslatingEdge { vel_per_s: 0.0 };
+        cfg.policy = PowerPolicy { idle_gate_s: Some(0.02), vdd: Some(0.8) };
+        let mut m = Mission::new(SocConfig::kraken(), cfg).unwrap();
+        let r = m.run().unwrap();
+        // SNE still runs (windows always dispatch), but overall power must
+        // sit far below the all-busy envelope
+        assert!(r.avg_power_w < 0.15, "avg {} W", r.avg_power_w);
+    }
+
+    #[test]
+    fn rebin_conserves_and_scales() {
+        let mut win = crate::event::EventWindow::new(132, 128);
+        for i in 0..200u64 {
+            win.push(crate::event::Event {
+                t_ns: i * 1000,
+                x: (i % 132) as u16,
+                y: (i % 128) as u16,
+                polarity: crate::event::Polarity::On,
+            });
+        }
+        let bins = rebin_events(&win, 64, 64, 5);
+        let total: f32 = bins.iter().flat_map(|b| b.iter()).sum();
+        assert_eq!(total as u64, 200);
+    }
+}

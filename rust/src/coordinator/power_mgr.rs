@@ -1,0 +1,88 @@
+//! The FC's runtime power policy.
+//!
+//! Kraken's engines are independently power-gateable (Fig. 3); the firmware
+//! gates whatever the mission phase doesn't need and can ride the DVFS
+//! curve when latency headroom allows. The policy here is deliberately
+//! simple and deterministic: gate an engine after `idle_gate_s` without
+//! work; pick the lowest voltage whose clocks still meet each stream's
+//! deadline (sensor cadence).
+
+
+use crate::config::SocConfig;
+use crate::soc::power::DomainId;
+
+/// Static power-policy knobs.
+#[derive(Debug, Clone)]
+pub struct PowerPolicy {
+    /// Gate an engine idle longer than this (s). `None` disables gating.
+    pub idle_gate_s: Option<f64>,
+    /// Fixed rail voltage, or None = auto (lowest meeting deadlines).
+    pub vdd: Option<f64>,
+}
+
+impl Default for PowerPolicy {
+    fn default() -> Self {
+        PowerPolicy { idle_gate_s: Some(0.050), vdd: Some(0.8) }
+    }
+}
+
+impl PowerPolicy {
+    /// Should `domain`, idle since `idle_for_s`, be gated now?
+    pub fn should_gate(&self, _domain: DomainId, idle_for_s: f64) -> bool {
+        matches!(self.idle_gate_s, Some(limit) if idle_for_s >= limit)
+    }
+
+    /// Choose the rail voltage for a mission whose per-engine busy
+    /// fractions at 0.8 V are `busy_frac` (must all stay < 1 after
+    /// slowdown). Returns the chosen voltage.
+    pub fn choose_vdd(&self, cfg: &SocConfig, busy_frac: [f64; 3]) -> f64 {
+        if let Some(v) = self.vdd {
+            return v;
+        }
+        // scan down from VDD_MAX; slowdown factor is 1/freq_scale(v)
+        let mut best = crate::config::VDD_MAX;
+        for i in (0..=30).rev() {
+            let v = crate::config::VDD_MIN
+                + (crate::config::VDD_MAX - crate::config::VDD_MIN) * i as f64 / 30.0;
+            let slow = 1.0 / crate::config::freq_scale(v);
+            if busy_frac.iter().all(|&b| b * slow < 0.9) {
+                best = v; // keep lowering while deadlines hold
+            } else {
+                break;
+            }
+        }
+        let _ = cfg;
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gating_after_idle_threshold() {
+        let p = PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(0.8) };
+        assert!(!p.should_gate(DomainId::Sne, 0.01));
+        assert!(p.should_gate(DomainId::Sne, 0.06));
+        let never = PowerPolicy { idle_gate_s: None, vdd: Some(0.8) };
+        assert!(!never.should_gate(DomainId::Sne, 10.0));
+    }
+
+    #[test]
+    fn auto_vdd_drops_when_lightly_loaded() {
+        let cfg = SocConfig::kraken();
+        let p = PowerPolicy { idle_gate_s: None, vdd: None };
+        let light = p.choose_vdd(&cfg, [0.05, 0.05, 0.05]);
+        let heavy = p.choose_vdd(&cfg, [0.92, 0.5, 0.5]);
+        assert!(light < heavy, "light {light} vs heavy {heavy}");
+        assert!((heavy - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fixed_vdd_respected() {
+        let cfg = SocConfig::kraken();
+        let p = PowerPolicy { idle_gate_s: None, vdd: Some(0.65) };
+        assert_eq!(p.choose_vdd(&cfg, [0.0; 3]), 0.65);
+    }
+}

@@ -1,0 +1,60 @@
+//! Mission telemetry: periodic snapshots the CLI prints and the benches
+//! aggregate, plus the final mission report rollup.
+
+
+/// One telemetry interval's statistics.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub t_s: f64,
+    /// Inferences completed in the interval, per engine.
+    pub sne_inf: u64,
+    pub cutie_inf: u64,
+    pub pulp_inf: u64,
+    /// Events routed into SNE in this interval.
+    pub events: u64,
+    /// Mean DVS activity over the interval.
+    pub activity: f64,
+    /// Per-domain average power over the interval (W): sne/cutie/pulp/fabric.
+    pub power_w: [f64; 4],
+    /// Navigation commands issued.
+    pub commands: u64,
+    /// True if any engine was power-gated during the interval.
+    pub any_gated: bool,
+}
+
+impl Snapshot {
+    pub fn total_power(&self) -> f64 {
+        self.power_w.iter().sum()
+    }
+
+    /// One-line human-readable form for live mission output.
+    pub fn line(&self) -> String {
+        format!(
+            "t={:6.2}s  sne={:5} cutie={:4} pulp={:3} inf  act={:5.2}%  P={:6.1} mW  cmd={}",
+            self.t_s,
+            self.sne_inf,
+            self.cutie_inf,
+            self.pulp_inf,
+            self.activity * 100.0,
+            self.total_power() * 1e3,
+            self.commands
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_formatting() {
+        let s = Snapshot {
+            t_s: 1.5,
+            sne_inf: 100,
+            power_w: [0.098, 0.110, 0.080, 0.010],
+            ..Default::default()
+        };
+        assert!((s.total_power() - 0.298).abs() < 1e-12);
+        assert!(s.line().contains("298.0 mW"));
+    }
+}

@@ -1,0 +1,202 @@
+//! CUTIE timing/energy model.
+//!
+//! The silicon computes, every cycle, one output activation element for each
+//! of its 96 output channels: all 3x3 x C_in ternary multiplies of those
+//! output pixels issue spatially unrolled, followed by the fused
+//! per-channel normalize + threshold output stage. Hence:
+//!
+//! `cycles(net) = sum_layers out_pixels * tile(c_in) * tile(c_out) + overhead`
+//!
+//! where `tile(c) = ceil(c / 96)` covers channel counts beyond the array
+//! width (the paper's network is exactly 96-wide, tile = 1 everywhere).
+//! The datapath is dense — activity-independent — which is precisely the
+//! contrast with SNE the application section exploits.
+
+use crate::config::{CutieCfg, SocConfig};
+use crate::nets::CnnDesc;
+use crate::quant::ternary_bytes;
+
+/// Timing + energy of one CUTIE inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CutieJobReport {
+    pub cycles: f64,
+    pub t_s: f64,
+    pub energy_j: f64,
+    /// Useful MACs / datapath MAC slots — array utilization.
+    pub utilization: f64,
+}
+
+/// The CUTIE model.
+#[derive(Debug, Clone)]
+pub struct CutieEngine {
+    pub cfg: CutieCfg,
+}
+
+impl CutieEngine {
+    pub fn new(cfg: &SocConfig) -> Self {
+        CutieEngine { cfg: cfg.cutie.clone() }
+    }
+
+    fn tile(&self, c: usize) -> f64 {
+        c.div_ceil(self.cfg.out_channels) as f64
+    }
+
+    /// Cycles for one inference of `net`.
+    pub fn net_cycles(&self, net: &CnnDesc) -> f64 {
+        let mut cycles = 0.0;
+        for l in &net.layers {
+            cycles += l.out_pixels() as f64 * self.tile(l.c_in) * self.tile(l.c_out)
+                + self.cfg.layer_overhead_cycles;
+        }
+        cycles
+    }
+
+    /// Full job report at voltage `v` (clock = domain max at `v`).
+    pub fn inference(&self, net: &CnnDesc, v: f64) -> CutieJobReport {
+        let f = self.cfg.domain.f_at(v);
+        let cycles = self.net_cycles(net);
+        let t_s = cycles / f;
+        let p = self.cfg.domain.p_dyn(v, f, 1.0) + self.cfg.domain.p_leak(v);
+        let useful = 2.0 * net.total_macs() as f64;
+        let slots = self.cfg.peak_ops_per_cycle() * cycles;
+        CutieJobReport {
+            cycles,
+            t_s,
+            energy_j: p * t_s,
+            utilization: (useful / slots).min(1.0),
+        }
+    }
+
+    pub fn inf_per_s(&self, net: &CnnDesc, v: f64) -> f64 {
+        1.0 / self.inference(net, v).t_s
+    }
+
+    /// Peak datapath efficiency (TOp/s/W scale): array ops per second over
+    /// power at voltage `v` — the Fig. 6 headline (1 036 TOp/s/W at the
+    /// best-efficiency point).
+    pub fn peak_efficiency_ops_per_w(&self, v: f64) -> f64 {
+        let f = self.cfg.domain.f_at(v);
+        let p = self.cfg.domain.p_dyn(v, f, 1.0) + self.cfg.domain.p_leak(v);
+        self.cfg.peak_ops_per_cycle() * f / p
+    }
+
+    /// Network-level efficiency: useful ternary ops per Joule on `net`.
+    pub fn net_efficiency_ops_per_w(&self, net: &CnnDesc, v: f64) -> f64 {
+        let r = self.inference(net, v);
+        2.0 * net.total_macs() as f64 / r.energy_j
+    }
+
+    /// Best peak-efficiency point over the DVFS range: (V, op/s/W).
+    pub fn best_efficiency(&self) -> (f64, f64) {
+        let mut best = (crate::config::VDD_MIN, 0.0);
+        for i in 0..=60 {
+            let v = crate::config::VDD_MIN
+                + (crate::config::VDD_MAX - crate::config::VDD_MIN) * i as f64 / 60.0;
+            let e = self.peak_efficiency_ops_per_w(v);
+            if e > best.1 {
+                best = (v, e);
+            }
+        }
+        best
+    }
+
+    /// All ternary weights of `net`, packed at 1.6 b/weight, must fit the
+    /// on-chip weight memory — CUTIE's "minimize data movement" premise.
+    pub fn fits_weight_mem(&self, net: &CnnDesc) -> bool {
+        ternary_bytes(net.total_weights()) <= self.cfg.weight_mem
+    }
+
+    /// Largest layer's in+out ternary feature maps must fit fmap memory
+    /// (double-buffered).
+    pub fn fits_fmap_mem(&self, net: &CnnDesc) -> bool {
+        net.layers.iter().all(|l| {
+            let in_elems = l.out_pixels() * l.stride * l.stride * l.c_in;
+            let out_elems = l.out_pixels() * l.c_out;
+            // 1.6 bits per ternary activation, in + out live simultaneously
+            let bytes = ((in_elems + out_elems) as f64 * 1.6 / 8.0) as usize;
+            bytes <= self.cfg.fmap_mem
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    fn eng() -> CutieEngine {
+        CutieEngine::new(&SocConfig::kraken())
+    }
+
+    #[test]
+    fn paper_net_exceeds_10k_inf_per_s() {
+        let e = eng();
+        let net = nets::cutie_paper();
+        let rate = e.inf_per_s(&net, 0.8);
+        assert!(rate > 10_000.0, "paper claims >10k inf/s, got {rate}");
+    }
+
+    #[test]
+    fn one_pixel_per_cycle_for_96ch_net() {
+        let e = eng();
+        let net = nets::cutie_paper();
+        let cycles = e.net_cycles(&net);
+        let pixels = net.total_out_pixels() as f64;
+        // overhead is small: within 25% of the ideal pixel count
+        assert!(cycles >= pixels && cycles < 1.25 * pixels);
+    }
+
+    #[test]
+    fn channel_tiling_quadruples_wide_layers() {
+        let e = eng();
+        let narrow = nets::CnnDesc {
+            name: "n".into(),
+            layers: vec![nets::ConvLayer::new(96, 96, 16, 16, 3)],
+        };
+        let wide = nets::CnnDesc {
+            name: "w".into(),
+            layers: vec![nets::ConvLayer::new(192, 192, 16, 16, 3)],
+        };
+        let cn = e.net_cycles(&narrow) - e.cfg.layer_overhead_cycles;
+        let cw = e.net_cycles(&wide) - e.cfg.layer_overhead_cycles;
+        assert!((cw / cn - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_efficiency_hits_1036_tops_per_w() {
+        let e = eng();
+        let (v, eff) = e.best_efficiency();
+        assert!(v < 0.55, "best point at low voltage, got {v}");
+        assert!(
+            (eff - 1036.0e12).abs() / 1036.0e12 < 0.05,
+            "CUTIE peak eff {:.1} TOp/s/W vs paper 1036",
+            eff / 1e12
+        );
+    }
+
+    #[test]
+    fn power_envelope_110mw() {
+        let e = eng();
+        let net = nets::cutie_paper();
+        let r = e.inference(&net, 0.8);
+        let p = r.energy_j / r.t_s;
+        assert!((p - 0.110).abs() < 0.005, "busy power {p} W");
+    }
+
+    #[test]
+    fn paper_net_fits_memories() {
+        let e = eng();
+        let net = nets::cutie_paper();
+        assert!(e.fits_weight_mem(&net));
+        assert!(e.fits_fmap_mem(&net));
+    }
+
+    #[test]
+    fn utilization_reflects_narrow_first_layer() {
+        let e = eng();
+        let net = nets::cutie_paper();
+        let r = e.inference(&net, 0.8);
+        // layer 1 has c_in = 3 (3% of the array), pulling the average down
+        assert!(r.utilization > 0.3 && r.utilization < 0.7, "{}", r.utilization);
+    }
+}

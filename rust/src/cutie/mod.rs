@@ -1,0 +1,10 @@
+//! CUTIE — the Completely Unrolled Ternary Inference Engine.
+//!
+//! * [`engine`] — timing/energy model of the fully-unrolled OCU array
+//!   (one output pixel per cycle across 96 channels).
+//! * Ternary weight compression lives in [`crate::quant::ternary`]
+//!   (1.6 b/weight — the engine checks network fit through it).
+
+pub mod engine;
+
+pub use engine::{CutieEngine, CutieJobReport};

@@ -1,0 +1,217 @@
+//! COO event lists and event windows.
+//!
+//! The paper: "SNE exploits an explicit coordinate list (COO) data
+//! representation to efficiently transform unstructured spatio/temporal
+//! sparse event computation [...] into SNE 'dense' computational bursts."
+//!
+//! [`Event`] is one DVS address-event (x, y, polarity, timestamp);
+//! [`EventWindow`] is the unit of work the coordinator hands to the SNE
+//! model: a time-sorted COO list plus helpers to bin it into the dense
+//! per-timestep polarity maps the AOT FireNet artifact consumes.
+
+
+/// DVS event polarity: brightness increase (On) or decrease (Off).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Polarity {
+    On,
+    Off,
+}
+
+impl Polarity {
+    /// Channel index in the 2-channel dense event tensor.
+    pub fn channel(self) -> usize {
+        match self {
+            Polarity::On => 0,
+            Polarity::Off => 1,
+        }
+    }
+}
+
+/// One address-event in COO form. 16-bit coordinates cover any DVS the SoC
+/// interfaces (DVS132S is 132x128); timestamps are nanoseconds of simulated
+/// mission time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub t_ns: u64,
+    pub x: u16,
+    pub y: u16,
+    pub polarity: Polarity,
+}
+
+/// A time-ordered batch of events over a fixed sensor geometry.
+#[derive(Debug, Clone, Default)]
+pub struct EventWindow {
+    pub width: usize,
+    pub height: usize,
+    pub events: Vec<Event>,
+}
+
+impl EventWindow {
+    pub fn new(width: usize, height: usize) -> Self {
+        EventWindow { width, height, events: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Push an event, keeping the window time-sorted (debug-asserted; the
+    /// DVS simulator emits in order, the AER peripheral preserves it).
+    pub fn push(&mut self, e: Event) {
+        debug_assert!(
+            self.events.last().map_or(true, |last| last.t_ns <= e.t_ns),
+            "events must arrive time-sorted"
+        );
+        debug_assert!((e.x as usize) < self.width && (e.y as usize) < self.height);
+        self.events.push(e);
+    }
+
+    /// Time span covered (ns); 0 for empty/single-event windows.
+    pub fn span_ns(&self) -> u64 {
+        match (self.events.first(), self.events.last()) {
+            (Some(a), Some(b)) => b.t_ns - a.t_ns,
+            _ => 0,
+        }
+    }
+
+    /// Mean event activity: events per pixel over the window — the x-axis
+    /// of Fig. 7. One full frame of events at both polarities would be 2.0.
+    pub fn activity(&self) -> f64 {
+        self.events.len() as f64 / (self.width * self.height) as f64
+    }
+
+    /// Bin into `t_bins` dense tensors of shape (2, height, width),
+    /// flattened C-order, counting events per (polarity, pixel, bin).
+    /// This is the dense-burst transform: the output feeds the FireNet
+    /// artifact one bin at a time.
+    pub fn bin(&self, t_bins: usize) -> Vec<Vec<f32>> {
+        assert!(t_bins > 0);
+        let plane = self.width * self.height;
+        let mut out = vec![vec![0f32; 2 * plane]; t_bins];
+        if self.events.is_empty() {
+            return out;
+        }
+        let t0 = self.events.first().unwrap().t_ns;
+        let span = self.span_ns().max(1);
+        for e in &self.events {
+            // last bin is inclusive of the window end
+            let b = (((e.t_ns - t0) as u128 * t_bins as u128) / (span as u128 + 1))
+                as usize;
+            let idx = e.polarity.channel() * plane
+                + e.y as usize * self.width
+                + e.x as usize;
+            out[b][idx] += 1.0;
+        }
+        out
+    }
+
+    /// Split into consecutive sub-windows of `dt_ns`; used by the
+    /// coordinator to chop the AER stream into inference-sized chunks.
+    pub fn split_by_time(&self, dt_ns: u64) -> Vec<EventWindow> {
+        assert!(dt_ns > 0);
+        let mut out: Vec<EventWindow> = Vec::new();
+        if self.events.is_empty() {
+            return out;
+        }
+        let t0 = self.events.first().unwrap().t_ns;
+        for e in &self.events {
+            let k = ((e.t_ns - t0) / dt_ns) as usize;
+            while out.len() <= k {
+                out.push(EventWindow::new(self.width, self.height));
+            }
+            out[k].push(*e);
+        }
+        out
+    }
+
+    /// Per-polarity event counts (on, off).
+    pub fn polarity_counts(&self) -> (usize, usize) {
+        let on = self
+            .events
+            .iter()
+            .filter(|e| e.polarity == Polarity::On)
+            .count();
+        (on, self.events.len() - on)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64, x: u16, y: u16, p: Polarity) -> Event {
+        Event { t_ns: t, x, y, polarity: p }
+    }
+
+    #[test]
+    fn activity_counts_events_per_pixel() {
+        let mut w = EventWindow::new(10, 10);
+        for i in 0..50 {
+            w.push(ev(i, (i % 10) as u16, (i / 10) as u16, Polarity::On));
+        }
+        assert!((w.activity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binning_conserves_events() {
+        let mut w = EventWindow::new(8, 8);
+        for i in 0..100u64 {
+            let p = if i % 3 == 0 { Polarity::Off } else { Polarity::On };
+            w.push(ev(i * 37, (i % 8) as u16, ((i / 8) % 8) as u16, p));
+        }
+        for t_bins in [1usize, 2, 5, 16] {
+            let bins = w.bin(t_bins);
+            let total: f32 = bins.iter().flat_map(|b| b.iter()).sum();
+            assert_eq!(total as usize, 100, "t_bins={t_bins}");
+        }
+    }
+
+    #[test]
+    fn binning_respects_polarity_channels() {
+        let mut w = EventWindow::new(4, 4);
+        w.push(ev(0, 1, 2, Polarity::On));
+        w.push(ev(1, 3, 0, Polarity::Off));
+        let bins = w.bin(1);
+        let plane = 16;
+        assert_eq!(bins[0][2 * 4 + 1], 1.0); // on-channel
+        assert_eq!(bins[0][plane + 3], 1.0); // off-channel
+    }
+
+    #[test]
+    fn binning_is_time_ordered() {
+        let mut w = EventWindow::new(2, 2);
+        w.push(ev(0, 0, 0, Polarity::On));
+        w.push(ev(1000, 1, 1, Polarity::On));
+        let bins = w.bin(2);
+        assert_eq!(bins[0][0], 1.0);
+        assert_eq!(bins[1][3], 1.0);
+    }
+
+    #[test]
+    fn split_by_time_partitions() {
+        let mut w = EventWindow::new(4, 4);
+        for i in 0..30u64 {
+            w.push(ev(i * 100, 0, 0, Polarity::On));
+        }
+        let parts = w.split_by_time(1000);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 30);
+        assert!(parts.len() == 3);
+        for p in &parts {
+            assert!(p.span_ns() < 1000);
+        }
+    }
+
+    #[test]
+    fn empty_window() {
+        let w = EventWindow::new(4, 4);
+        assert_eq!(w.activity(), 0.0);
+        assert_eq!(w.span_ns(), 0);
+        let bins = w.bin(4);
+        assert!(bins.iter().all(|b| b.iter().all(|&v| v == 0.0)));
+    }
+}

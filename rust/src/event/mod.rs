@@ -1,0 +1,7 @@
+//! Event-domain data structures: the explicit coordinate-list (COO)
+//! representation SNE uses to turn unstructured spatio-temporal sparsity
+//! into dense computational bursts.
+
+pub mod coo;
+
+pub use coo::{Event, EventWindow, Polarity};

@@ -1,0 +1,61 @@
+//! # kraken — a full-stack reproduction of the Kraken multi-sensor fusion SoC
+//!
+//! Kraken (Di Mauro, Scherer, Rossi, Benini — 2022) is a 22 nm heterogeneous
+//! SoC for nano-UAV visual autonomy: a RISC-V fabric controller orchestrating
+//! three power-gateable engines —
+//!
+//! * **SNE** — an energy-proportional spiking-CNN accelerator fed by a DVS
+//!   event camera (optical flow for navigation),
+//! * **CUTIE** — a completely-unrolled ternary-NN accelerator (object
+//!   classification on BW frames),
+//! * **PULP** — an 8-core RISC-V DSP cluster with MAC-LD + SIMD int8/4/2
+//!   extensions (DroNet obstacle avoidance),
+//!
+//! all running *concurrently* within a 2 mW–300 mW envelope.
+//!
+//! Since the paper's artifact is silicon, this crate reproduces it as a
+//! **simulated SoC**: cycle-approximate, energy-calibrated models of every
+//! subsystem (clock/power trees, L1/L2 memories, interconnect + DMA,
+//! peripherals, the three engines) driven by simulated sensors, while the
+//! *functional* neural compute is AOT-compiled from JAX + Pallas into HLO
+//! artifacts and executed through PJRT ([`runtime`]) from the Rust hot path.
+//! Python never runs at request time.
+//!
+//! See `DESIGN.md` for the substitution table, calibration anchors, and the
+//! experiment index mapping each paper figure/table to a bench target.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use kraken::config::SocConfig;
+//! use kraken::soc::Soc;
+//!
+//! let cfg = SocConfig::kraken();            // Fig. 5 parameters
+//! let mut soc = Soc::new(cfg);
+//! soc.power_on_all();
+//! println!("{}", soc.report());
+//! ```
+//!
+//! The end-to-end driver (`examples/mission.rs`) runs the Fig. 2 application:
+//! DVS events -> SNE optical flow, frames -> CUTIE classification + PULP
+//! DroNet, fused into navigation commands, with live power telemetry.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod cutie;
+pub mod event;
+pub mod metrics;
+pub mod nets;
+pub mod pulp;
+pub mod quant;
+pub mod runtime;
+pub mod sensors;
+pub mod sne;
+pub mod soc;
+pub mod util;
+
+pub use config::SocConfig;
+
+/// Crate-wide result type (eyre for rich context on the binary paths).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,355 @@
+//! `kraken` — the launcher / CLI for the simulated Kraken SoC.
+//!
+//! Subcommands map onto the paper's evaluation (DESIGN.md §5):
+//!
+//! * `kraken report soc`        — Fig. 5 implementation table (E4)
+//! * `kraken report domains`    — power-domain states/power (E8)
+//! * `kraken report soa`        — Fig. 6 SoA comparison (E3)
+//! * `kraken sweep sne-activity`— Fig. 7 series (E1)
+//! * `kraken sweep pulp-precision` — Fig. 4 series (E2)
+//! * `kraken sweep vdd`         — efficiency vs voltage (DVFS curves)
+//! * `kraken run`               — the Fig. 2 mission (E6), live telemetry
+//! * `kraken check-artifacts`   — load + execute every AOT artifact once
+//!
+//! Argument parsing is hand-rolled (the build is fully offline); see
+//! `kraken help`.
+
+use kraken::baselines::{BinarEye, Tianjic, Vega};
+use kraken::config::{Precision, SocConfig};
+use kraken::coordinator::{Mission, MissionConfig, PowerPolicy};
+use kraken::cutie::CutieEngine;
+use kraken::metrics::{fmt_eff, fmt_energy, fmt_power, Series};
+use kraken::nets;
+use kraken::pulp::cluster::PulpCluster;
+use kraken::runtime::Runtime;
+use kraken::sensors::scene::SceneKind;
+use kraken::sne::SneEngine;
+use kraken::soc::power::DomainId;
+use kraken::soc::Soc;
+use kraken::util::json::Value;
+
+const USAGE: &str = "\
+kraken — simulated Kraken multi-sensor fusion SoC
+
+USAGE:
+  kraken [--config <soc.json>] <command> [options]
+
+COMMANDS:
+  report <soc|domains|soa>        static reports (Fig. 5, power tree, Fig. 6)
+  sweep <sne-activity|pulp-precision|vdd> [--json]
+                                  regenerate paper figure series
+  run [--duration S] [--scene corridor|bar|edge|ring|noise]
+      [--seed N] [--artifacts DIR] [--vdd V] [--live] [--json]
+                                  run the Fig. 2 mission
+  check-artifacts [--dir DIR]     verify + execute every AOT artifact
+  help                            this text
+";
+
+/// Tiny argv cursor: positional + --flag [value] parsing.
+struct Args {
+    v: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Self {
+        Args { v: std::env::args().skip(1).collect() }
+    }
+
+    /// Remove `--name value` and return the value.
+    fn opt(&mut self, name: &str) -> Option<String> {
+        let flag = format!("--{name}");
+        if let Some(i) = self.v.iter().position(|a| *a == flag) {
+            if i + 1 < self.v.len() {
+                let val = self.v.remove(i + 1);
+                self.v.remove(i);
+                return Some(val);
+            }
+            self.v.remove(i);
+        }
+        None
+    }
+
+    /// Remove `--name` and return whether it was present.
+    fn flag(&mut self, name: &str) -> bool {
+        let flag = format!("--{name}");
+        if let Some(i) = self.v.iter().position(|a| *a == flag) {
+            self.v.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Next positional argument.
+    fn pos(&mut self) -> Option<String> {
+        if self.v.is_empty() {
+            None
+        } else {
+            Some(self.v.remove(0))
+        }
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> kraken::Result<()> {
+    let mut args = Args::new();
+    let cfg = match args.opt("config") {
+        Some(p) => SocConfig::from_json_file(&p)?,
+        None => SocConfig::kraken(),
+    };
+    match args.pos().as_deref() {
+        Some("report") => {
+            let what = args.pos().unwrap_or_default();
+            report(&cfg, &what)
+        }
+        Some("sweep") => {
+            let what = args.pos().unwrap_or_default();
+            let json = args.flag("json");
+            sweep(&cfg, &what, json)
+        }
+        Some("run") => {
+            let duration: f64 = args.opt("duration").map_or(Ok(2.0), |s| s.parse())?;
+            let scene = args.opt("scene").unwrap_or_else(|| "corridor".into());
+            let seed: u64 = args.opt("seed").map_or(Ok(7), |s| s.parse())?;
+            let artifacts = args.opt("artifacts");
+            let vdd: f64 = args.opt("vdd").map_or(Ok(0.8), |s| s.parse())?;
+            let live = args.flag("live");
+            let json = args.flag("json");
+            run_mission(cfg, duration, &scene, seed, artifacts, vdd, live, json)
+        }
+        Some("check-artifacts") => {
+            let dir = args.opt("dir").unwrap_or_else(|| "artifacts".into());
+            check_artifacts(&dir)
+        }
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            anyhow::bail!("unknown command '{other}'\n\n{USAGE}");
+        }
+    }
+}
+
+fn report(cfg: &SocConfig, what: &str) -> kraken::Result<()> {
+    match what {
+        "soc" => {
+            let soc = Soc::new(cfg.clone());
+            print!("{}", soc.report());
+        }
+        "domains" => {
+            let mut soc = Soc::new(cfg.clone());
+            soc.power_on_all();
+            println!("{:<10}{:>12}{:>14}{:>14}", "domain", "freq", "busy", "idle");
+            for d in DomainId::ALL {
+                println!(
+                    "{:<10}{:>9.0} MHz{:>14}{:>14}",
+                    d.label(),
+                    soc.power.freq(d) / 1e6,
+                    fmt_power(soc.power.domain_power(d, 1.0)),
+                    fmt_power(soc.power.domain_power(d, 0.0)),
+                );
+            }
+        }
+        "soa" => {
+            let sne = SneEngine::new(cfg);
+            let cutie = CutieEngine::new(cfg);
+            let pulp = PulpCluster::new(cfg);
+            let (v_s, e_s) = sne.best_efficiency();
+            let (v_c, e_c) = cutie.best_efficiency();
+            let (v_p, e_p) = pulp.best_efficiency(Precision::Int2);
+            let tianjic = Tianjic::default();
+            let binareye = BinarEye::default();
+            let vega = Vega::default();
+            let vega_best = vega.patch_efficiency_ops_per_w(Precision::Int4, 0.5);
+            let kraken_i4 = pulp.patch_efficiency_ops_per_w(Precision::Int4, 0.5);
+            println!("Fig. 6 — engine efficiency vs state of the art");
+            println!(
+                "  SNE   {:>18} @{:.2} V | Tianjic {:>18} | ratio {:.2}x (paper 1.7x)",
+                fmt_eff(e_s),
+                v_s,
+                fmt_eff(tianjic.sops_per_w),
+                e_s / tianjic.sops_per_w
+            );
+            println!(
+                "  CUTIE {:>18} @{:.2} V | BinarEye {:>17} | ratio {:.2}x (paper 2x)",
+                fmt_eff(e_c),
+                v_c,
+                fmt_eff(binareye.ops_per_w),
+                e_c / binareye.ops_per_w
+            );
+            println!(
+                "  PULP  {:>18} @{:.2} V (int2 peak; paper 1.8 TOp/s/W)",
+                fmt_eff(e_p),
+                v_p
+            );
+            println!(
+                "  PULP int4 vs Vega int4 @0.5 V: {:.2}x (paper >2.6x)",
+                kraken_i4 / vega_best
+            );
+        }
+        other => anyhow::bail!("unknown report '{other}' (soc|domains|soa)"),
+    }
+    Ok(())
+}
+
+fn sweep(cfg: &SocConfig, what: &str, json: bool) -> kraken::Result<()> {
+    let mut series: Vec<Series> = Vec::new();
+    match what {
+        "sne-activity" => {
+            let sne = SneEngine::new(cfg);
+            let net = nets::firenet_paper();
+            let mut top = Series::new("Fig7-top: SNE inf/s vs activity", "activity", "inf/s");
+            let mut bot =
+                Series::new("Fig7-bottom: SNE energy/inf vs activity", "activity", "J/inf");
+            for i in 1..=30 {
+                let a = i as f64 / 100.0;
+                top.push(a, sne.inf_per_s(&net, a, 0.8));
+                bot.push(a, sne.energy_per_inf(&net, a, 0.8));
+            }
+            series.push(top);
+            series.push(bot);
+        }
+        "pulp-precision" => {
+            let pulp = PulpCluster::new(cfg);
+            let vega = Vega::default();
+            let mut k = Series::new("Fig4: Kraken GOp/s/W vs precision", "bits", "op/s/W");
+            let mut v = Series::new("Fig4: Vega GOp/s/W vs precision", "bits", "op/s/W");
+            for p in Precision::ALL {
+                k.push(p.bits() as f64, pulp.patch_efficiency_ops_per_w(p, 0.8));
+                v.push(p.bits() as f64, vega.patch_efficiency_ops_per_w(p, 0.8));
+            }
+            series.push(k);
+            series.push(v);
+        }
+        "vdd" => {
+            let sne = SneEngine::new(cfg);
+            let cutie = CutieEngine::new(cfg);
+            let pulp = PulpCluster::new(cfg);
+            let mut s1 = Series::new("SNE SOP/s/W vs VDD", "V", "SOP/s/W");
+            let mut s2 = Series::new("CUTIE op/s/W vs VDD", "V", "op/s/W");
+            let mut s3 = Series::new("PULP int2 op/s/W vs VDD", "V", "op/s/W");
+            for i in 0..=30 {
+                let v = 0.5 + 0.3 * i as f64 / 30.0;
+                s1.push(v, sne.efficiency_sops_per_w(v));
+                s2.push(v, cutie.peak_efficiency_ops_per_w(v));
+                s3.push(v, pulp.patch_efficiency_ops_per_w(Precision::Int2, v));
+            }
+            series.extend([s1, s2, s3]);
+        }
+        other => anyhow::bail!("unknown sweep '{other}' (sne-activity|pulp-precision|vdd)"),
+    }
+    if json {
+        let doc = Value::Arr(series.iter().map(|s| s.to_json()).collect());
+        println!("{}", doc.pretty());
+    } else {
+        for s in &series {
+            println!("{}", s.table());
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_mission(
+    cfg: SocConfig,
+    duration: f64,
+    scene: &str,
+    seed: u64,
+    artifacts: Option<String>,
+    vdd: f64,
+    live: bool,
+    json: bool,
+) -> kraken::Result<()> {
+    let scene = match scene {
+        "corridor" => SceneKind::Corridor { speed_per_s: 0.5, seed },
+        "bar" => SceneKind::RotatingBar { omega_rad_s: 6.0 },
+        "edge" => SceneKind::TranslatingEdge { vel_per_s: 0.4 },
+        "ring" => SceneKind::ExpandingRing { rate_per_s: 0.5 },
+        "noise" => SceneKind::Noise { density: 0.05, seed },
+        other => anyhow::bail!("unknown scene '{other}'"),
+    };
+    let mcfg = MissionConfig {
+        duration_s: duration,
+        scene,
+        seed,
+        policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
+        artifacts_dir: artifacts.map(Into::into),
+        print_live: live,
+        ..Default::default()
+    };
+    let mut mission = Mission::new(cfg, mcfg)?;
+    let r = mission.run()?;
+    if json {
+        println!("{}", r.to_json().pretty());
+        return Ok(());
+    }
+    let (sr, cr, pr) = r.rates();
+    println!("\n=== mission report ===");
+    println!(
+        "simulated {:.2} s in {:.2} s wall ({:.1}x real time)",
+        r.sim_s,
+        r.wall_s,
+        r.sim_s / r.wall_s.max(1e-9)
+    );
+    println!(
+        "SNE   : {:>8} inf ({:>8.1} inf/s)   events {:>9}  mean activity {:.2}%",
+        r.sne_inf,
+        sr,
+        r.events_total,
+        r.avg_activity * 100.0
+    );
+    println!("CUTIE : {:>8} inf ({:>8.1} inf/s)", r.cutie_inf, cr);
+    println!("PULP  : {:>8} inf ({:>8.1} inf/s)", r.pulp_inf, pr);
+    println!(
+        "fusion: {} commands, {:.1}% avoiding, dropped {} windows",
+        r.commands,
+        r.avoid_fraction * 100.0,
+        r.dropped_windows
+    );
+    println!(
+        "power : avg {}  (sne {}, cutie {}, pulp {}, fabric {})",
+        fmt_power(r.avg_power_w),
+        fmt_power(r.energy_per_domain_j[0] / r.sim_s),
+        fmt_power(r.energy_per_domain_j[1] / r.sim_s),
+        fmt_power(r.energy_per_domain_j[2] / r.sim_s),
+        fmt_power(r.energy_per_domain_j[3] / r.sim_s),
+    );
+    println!(
+        "energy: {} total ({} / command)",
+        fmt_energy(r.energy_j),
+        fmt_energy(r.energy_j / r.commands.max(1) as f64)
+    );
+    if r.runtime_calls > 0 {
+        println!("PJRT  : {} artifact executions (functional path live)", r.runtime_calls);
+    } else {
+        println!("PJRT  : analytical-only run (pass --artifacts artifacts)");
+    }
+    Ok(())
+}
+
+fn check_artifacts(dir: &str) -> kraken::Result<()> {
+    let rt = Runtime::load(std::path::Path::new(dir))?;
+    let mut names = rt.artifact_names();
+    names.sort();
+    for name in names {
+        let inputs = rt.zero_inputs(name)?;
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = rt.execute(name, &refs)?;
+        let spec = rt.output_specs(name)?;
+        println!(
+            "{name:<10} OK  ({} inputs -> {} outputs, first output {} elems)",
+            refs.len(),
+            out.len(),
+            spec[0].elements()
+        );
+    }
+    println!("all artifacts verified (hashes + shapes + execution)");
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Metrics: unit helpers, table formatting, and figure-series emitters
+//! shared by the benches, the CLI reports and EXPERIMENTS.md generation.
+
+
+/// Pretty-print an op/s/W figure with the natural SI prefix.
+pub fn fmt_eff(ops_per_w: f64) -> String {
+    if ops_per_w >= 1e12 {
+        format!("{:.2} TOp/s/W", ops_per_w / 1e12)
+    } else if ops_per_w >= 1e9 {
+        format!("{:.1} GOp/s/W", ops_per_w / 1e9)
+    } else {
+        format!("{:.0} MOp/s/W", ops_per_w / 1e6)
+    }
+}
+
+/// Pretty-print energy.
+pub fn fmt_energy(j: f64) -> String {
+    if j >= 1e-3 {
+        format!("{:.2} mJ", j * 1e3)
+    } else if j >= 1e-6 {
+        format!("{:.2} uJ", j * 1e6)
+    } else {
+        format!("{:.1} nJ", j * 1e9)
+    }
+}
+
+/// Pretty-print power.
+pub fn fmt_power(w: f64) -> String {
+    if w >= 1.0 {
+        format!("{:.2} W", w)
+    } else if w >= 1e-3 {
+        format!("{:.1} mW", w * 1e3)
+    } else {
+        format!("{:.1} uW", w * 1e6)
+    }
+}
+
+/// One (x, y) series for a paper figure, serializable for EXPERIMENTS.md
+/// regeneration and the CLI's JSON output.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str, x_label: &str, y_label: &str) -> Self {
+        Series {
+            name: name.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// Render as an aligned two-column text table.
+    pub fn table(&self) -> String {
+        let mut s = format!("# {}\n# {:>14}  {:>14}\n", self.name, self.x_label, self.y_label);
+        for (x, y) in &self.points {
+            s.push_str(&format!("{x:>16.6}  {y:>14.6e}\n"));
+        }
+        s
+    }
+
+    /// JSON form for `--json` CLI output.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("x_label", Value::Str(self.x_label.clone())),
+            ("y_label", Value::Str(self.y_label.clone())),
+            (
+                "points",
+                Value::Arr(
+                    self.points
+                        .iter()
+                        .map(|&(x, y)| Value::arr_f64(&[x, y]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Is y monotone decreasing in x? (shape checks in benches)
+    pub fn monotone_decreasing(&self) -> bool {
+        self.points.windows(2).all(|w| w[1].1 <= w[0].1)
+    }
+
+    /// Is y monotone increasing in x?
+    pub fn monotone_increasing(&self) -> bool {
+        self.points.windows(2).all(|w| w[1].1 >= w[0].1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_eff(1.036e15), "1036.00 TOp/s/W");
+        assert_eq!(fmt_eff(649.0e9), "649.0 GOp/s/W");
+        assert_eq!(fmt_energy(4.7e-6), "4.70 uJ");
+        assert_eq!(fmt_power(0.098), "98.0 mW");
+    }
+
+    #[test]
+    fn series_shape_checks() {
+        let mut s = Series::new("t", "x", "y");
+        s.push(1.0, 10.0);
+        s.push(2.0, 5.0);
+        s.push(3.0, 2.0);
+        assert!(s.monotone_decreasing());
+        assert!(!s.monotone_increasing());
+        assert!(s.table().contains("# t"));
+    }
+}

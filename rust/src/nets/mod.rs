@@ -1,0 +1,319 @@
+//! Workload descriptors for the networks Kraken runs (§III).
+//!
+//! These carry the *paper-sized* shapes used by the timing/energy models:
+//!
+//! * [`firenet_paper`] — LIF-FireNet optical flow on the 132x128 DVS (SNE).
+//! * [`gesture_paper`] — the 6-layer CSNN used for the DVS-Gesture SoA
+//!   comparison ("similar complexity and memory footprint as LIF-FireNet").
+//! * [`cutie_paper`] — the 7-layer, 96-channel ternary CIFAR10 CNN (CUTIE).
+//! * [`dronet_paper`] — 8-bit DroNet at 200x200 (PULP): the descriptor's
+//!   MAC count lands on DroNet's published ~41 MMAC/frame.
+//!
+//! The AOT artifacts in `artifacts/` are compact functional twins of these
+//! (64x64 / 32x32 / 96x96 inputs — see python/compile/common.py); the
+//! runtime cross-checks artifact stats against `*_artifact()` descriptors
+//! at load time so the functional and analytical views cannot drift apart.
+
+
+/// One convolutional layer's workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvLayer {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub k: usize,
+    pub stride: usize,
+}
+
+impl ConvLayer {
+    pub fn new(c_in: usize, c_out: usize, h_out: usize, w_out: usize, k: usize) -> Self {
+        ConvLayer { c_in, c_out, h_out, w_out, k, stride: 1 }
+    }
+
+    pub fn strided(mut self, s: usize) -> Self {
+        self.stride = s;
+        self
+    }
+
+    pub fn out_pixels(&self) -> usize {
+        self.h_out * self.w_out
+    }
+
+    pub fn macs(&self) -> u64 {
+        (self.out_pixels() * self.c_in * self.c_out * self.k * self.k) as u64
+    }
+
+    /// Neurons if this layer is spiking (one per output element).
+    pub fn neurons(&self) -> usize {
+        self.out_pixels() * self.c_out
+    }
+
+    /// Weight count.
+    pub fn weights(&self) -> usize {
+        self.c_in * self.c_out * self.k * self.k
+    }
+}
+
+/// A spiking CNN workload (SNE).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnnDesc {
+    pub name: String,
+    pub layers: Vec<ConvLayer>,
+    /// Input sensor geometry.
+    pub in_w: usize,
+    pub in_h: usize,
+    pub in_ch: usize,
+    /// Timesteps integrated per inference.
+    pub timesteps: usize,
+}
+
+impl SnnDesc {
+    /// Spiking sites per timestep: every input pixel-channel plus every
+    /// hidden neuron can emit one event per step. Activity `a` (Fig. 7
+    /// x-axis) is the fraction that actually fire; total routed events per
+    /// inference = a * event_sites().
+    pub fn event_sites(&self) -> u64 {
+        let input = (self.in_w * self.in_h * self.in_ch) as u64;
+        let hidden: u64 = self.layers.iter().map(|l| l.neurons() as u64).sum();
+        (input + hidden) * self.timesteps as u64
+    }
+
+    /// Synaptic operations per inference at activity `a`: each routed event
+    /// fans out over a k x k x c_out projection.
+    pub fn sops(&self, a: f64) -> f64 {
+        let mut sops = 0.0;
+        // input events project into layer 0; layer i events into layer i+1
+        let mut prev_sites = (self.in_w * self.in_h * self.in_ch) as f64;
+        for l in &self.layers {
+            let fan_out = (l.k * l.k * l.c_out) as f64;
+            sops += a * prev_sites * self.timesteps as f64 * fan_out;
+            prev_sites = l.neurons() as f64;
+        }
+        sops
+    }
+
+    pub fn total_neurons(&self) -> usize {
+        self.layers.iter().map(|l| l.neurons()).sum()
+    }
+
+    /// 8-bit state bytes needed for all membranes.
+    pub fn state_bytes(&self) -> usize {
+        self.total_neurons()
+    }
+
+    /// 4-bit weights, packed.
+    pub fn weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weights()).sum::<usize>() / 2
+    }
+}
+
+/// A dense CNN workload (CUTIE / PULP).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CnnDesc {
+    pub name: String,
+    pub layers: Vec<ConvLayer>,
+}
+
+impl CnnDesc {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_out_pixels(&self) -> u64 {
+        self.layers.iter().map(|l| l.out_pixels() as u64).sum()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paper-sized networks
+// ---------------------------------------------------------------------------
+
+/// LIF-FireNet (Hagenaars et al.) on the DVS132S: 4 hidden LIF conv layers
+/// (16, 32, 32, 16) + a linear flow head, 3x3 kernels, full resolution.
+pub fn firenet_paper() -> SnnDesc {
+    let (w, h) = (132, 128);
+    SnnDesc {
+        name: "lif-firenet".into(),
+        layers: vec![
+            ConvLayer::new(2, 16, h, w, 3),
+            ConvLayer::new(16, 32, h, w, 3),
+            ConvLayer::new(32, 32, h, w, 3),
+            ConvLayer::new(32, 16, h, w, 3),
+        ],
+        in_w: w,
+        in_h: h,
+        in_ch: 2,
+        timesteps: 5,
+    }
+}
+
+/// The 6-layer CSNN used for the IBM DVS-Gesture SoA benchmark; sized to
+/// "similar complexity and memory footprint" as LIF-FireNet (paper §III).
+pub fn gesture_paper() -> SnnDesc {
+    let (w, h) = (128, 128);
+    SnnDesc {
+        name: "gesture-cs6".into(),
+        layers: vec![
+            ConvLayer::new(2, 16, h, w, 3),
+            ConvLayer::new(16, 16, h / 2, w / 2, 3),
+            ConvLayer::new(16, 32, h / 2, w / 2, 3),
+            ConvLayer::new(32, 32, h / 4, w / 4, 3),
+            ConvLayer::new(32, 32, h / 4, w / 4, 3),
+            ConvLayer::new(32, 16, h / 8, w / 8, 3),
+        ],
+        in_w: w,
+        in_h: h,
+        in_ch: 2,
+        timesteps: 5,
+    }
+}
+
+/// CUTIE's ternary CIFAR10 network: 7 layers, 96 channels, 3x3 — the
+/// configuration whose packed weights exactly fill the 117 kB weight
+/// memory ("all ternary weights on-chip").
+pub fn cutie_paper() -> CnnDesc {
+    CnnDesc {
+        name: "cutie-t96".into(),
+        layers: vec![
+            ConvLayer::new(3, 96, 32, 32, 3),
+            ConvLayer::new(96, 96, 32, 32, 3),
+            ConvLayer::new(96, 96, 16, 16, 3),
+            ConvLayer::new(96, 96, 16, 16, 3),
+            ConvLayer::new(96, 96, 8, 8, 3),
+            ConvLayer::new(96, 96, 8, 8, 3),
+            ConvLayer::new(96, 96, 8, 8, 3),
+        ],
+    }
+}
+
+/// 8-bit DroNet at 200x200 (Palossi et al.): stem 5x5/2 + max-pool, three
+/// residual blocks (32, 64, 128) of two 3x3 convs + 1x1 skip. Sums to
+/// ~41 MMAC/frame, DroNet's published complexity.
+pub fn dronet_paper() -> CnnDesc {
+    CnnDesc {
+        name: "dronet-8b".into(),
+        layers: vec![
+            ConvLayer::new(1, 32, 100, 100, 5).strided(2),
+            // RB1 (post-pool 50x50 -> 25x25)
+            ConvLayer::new(32, 32, 25, 25, 3).strided(2),
+            ConvLayer::new(32, 32, 25, 25, 3),
+            ConvLayer::new(32, 32, 25, 25, 1).strided(2),
+            // RB2 (-> 13x13)
+            ConvLayer::new(32, 64, 13, 13, 3).strided(2),
+            ConvLayer::new(64, 64, 13, 13, 3),
+            ConvLayer::new(32, 64, 13, 13, 1).strided(2),
+            // RB3 (-> 7x7)
+            ConvLayer::new(64, 128, 7, 7, 3).strided(2),
+            ConvLayer::new(128, 128, 7, 7, 3),
+            ConvLayer::new(64, 128, 7, 7, 1).strided(2),
+        ],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-sized twins (must match python/compile/common.py)
+// ---------------------------------------------------------------------------
+
+/// FireNet as AOT-compiled (64x64) — used to validate manifest stats.
+pub fn firenet_artifact() -> SnnDesc {
+    let (w, h) = (64, 64);
+    SnnDesc {
+        name: "lif-firenet-artifact".into(),
+        layers: vec![
+            ConvLayer::new(2, 16, h, w, 3),
+            ConvLayer::new(16, 32, h, w, 3),
+            ConvLayer::new(32, 32, h, w, 3),
+            ConvLayer::new(32, 16, h, w, 3),
+        ],
+        in_w: w,
+        in_h: h,
+        in_ch: 2,
+        timesteps: 5,
+    }
+}
+
+/// CUTIE net as AOT-compiled (32x32, pools after layers 2 and 4).
+pub fn cutie_artifact() -> CnnDesc {
+    CnnDesc {
+        name: "cutie-t96-artifact".into(),
+        layers: vec![
+            ConvLayer::new(3, 96, 32, 32, 3),
+            ConvLayer::new(96, 96, 32, 32, 3),
+            ConvLayer::new(96, 96, 16, 16, 3),
+            ConvLayer::new(96, 96, 16, 16, 3),
+            ConvLayer::new(96, 96, 8, 8, 3),
+            ConvLayer::new(96, 96, 8, 8, 3),
+            ConvLayer::new(96, 96, 8, 8, 3),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn firenet_event_sites_match_calibration() {
+        // The Fig. 7 fit in config.rs assumes E_max = 8.28e6 events/inf.
+        let net = firenet_paper();
+        let sites = net.event_sites();
+        assert_eq!(sites, (132 * 128 * (2 + 16 + 32 + 32 + 16) * 5) as u64);
+        assert!((sites as f64 - 8.28e6).abs() / 8.28e6 < 0.01, "{sites}");
+    }
+
+    #[test]
+    fn dronet_macs_match_published_complexity() {
+        let macs = dronet_paper().total_macs();
+        // DroNet is ~41 MMAC/frame
+        assert!(
+            (macs as f64 - 41.0e6).abs() / 41.0e6 < 0.05,
+            "DroNet MACs {macs}"
+        );
+    }
+
+    #[test]
+    fn cutie_pixel_counts() {
+        let net = cutie_paper();
+        let pix: Vec<usize> = net.layers.iter().map(|l| l.out_pixels()).collect();
+        assert_eq!(pix, vec![1024, 1024, 256, 256, 64, 64, 64]);
+        assert_eq!(net.total_out_pixels(), 2752);
+    }
+
+    #[test]
+    fn cutie_weights_fill_weight_memory() {
+        let net = cutie_paper();
+        let bytes = crate::quant::ternary_bytes(net.total_weights());
+        assert!(bytes <= 117_000, "{bytes} B");
+        assert!(bytes > 100_000, "the net should nearly fill the 117 kB");
+    }
+
+    #[test]
+    fn gesture_net_memory_similar_to_firenet() {
+        let f = firenet_paper();
+        let g = gesture_paper();
+        let ratio = g.state_bytes() as f64 / f.state_bytes() as f64;
+        assert!(ratio > 0.2 && ratio < 1.2, "footprint ratio {ratio}");
+    }
+
+    #[test]
+    fn conv_layer_math() {
+        let l = ConvLayer::new(3, 96, 32, 32, 3);
+        assert_eq!(l.out_pixels(), 1024);
+        assert_eq!(l.macs(), 1024 * 3 * 96 * 9);
+        assert_eq!(l.weights(), 3 * 96 * 9);
+        assert_eq!(l.neurons(), 1024 * 96);
+    }
+
+    #[test]
+    fn snn_sops_scale_linearly_with_activity() {
+        let net = firenet_paper();
+        let s1 = net.sops(0.01);
+        let s20 = net.sops(0.20);
+        assert!((s20 / s1 - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,114 @@
+//! The 8-core cluster model: cores + shared L1 TCDM + DVFS-aware
+//! power/efficiency queries (the Fig. 4 y-axis comes from here).
+
+use crate::config::{Precision, PulpCfg, SocConfig};
+use crate::pulp::isa;
+use crate::soc::memory::Scratchpad;
+
+/// PULP cluster model.
+#[derive(Debug, Clone)]
+pub struct PulpCluster {
+    pub cfg: PulpCfg,
+}
+
+impl PulpCluster {
+    pub fn new(cfg: &SocConfig) -> Self {
+        PulpCluster { cfg: cfg.pulp.clone() }
+    }
+
+    /// Cluster-wide MAC throughput (MAC/s) at precision `p`, voltage `v`,
+    /// inner-loop conditions.
+    pub fn peak_macs_per_s(&self, p: Precision, v: f64) -> f64 {
+        let f = self.cfg.domain.f_at(v);
+        isa::macs_per_cycle_per_core(&self.cfg, p) * self.cfg.cores as f64 * f
+    }
+
+    /// Busy power at voltage `v` and precision `p` (W). The measured 80 mW
+    /// anchor is int-SIMD at 0.8 V/330 MHz; fp workloads draw
+    /// `fp_power_factor` more dynamic power.
+    pub fn busy_power(&self, p: Precision, v: f64) -> f64 {
+        let f = self.cfg.domain.f_at(v);
+        self.cfg.domain.p_dyn(v, f, 1.0) * isa::power_factor(&self.cfg, p)
+            + self.cfg.domain.p_leak(v)
+    }
+
+    /// Energy efficiency on conv patches (op/s/W, 2 op = 1 MAC) — Fig. 4.
+    pub fn patch_efficiency_ops_per_w(&self, p: Precision, v: f64) -> f64 {
+        2.0 * self.peak_macs_per_s(p, v) / self.busy_power(p, v)
+    }
+
+    /// Best efficiency over the DVFS range for precision `p`: (V, op/s/W).
+    pub fn best_efficiency(&self, p: Precision) -> (f64, f64) {
+        let mut best = (crate::config::VDD_MIN, 0.0);
+        for i in 0..=60 {
+            let v = crate::config::VDD_MIN
+                + (crate::config::VDD_MAX - crate::config::VDD_MIN) * i as f64 / 60.0;
+            let e = self.patch_efficiency_ops_per_w(p, v);
+            if e > best.1 {
+                best = (v, e);
+            }
+        }
+        best
+    }
+
+    /// TCDM contention factor for all cores hammering the banks — used by
+    /// the kernels model for memory-bound phases.
+    pub fn tcdm_contention(&self, l1: &Scratchpad) -> f64 {
+        l1.contention_factor(self.cfg.cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cl() -> PulpCluster {
+        PulpCluster::new(&SocConfig::kraken())
+    }
+
+    #[test]
+    fn peak_int8_throughput() {
+        let c = cl();
+        // 8 cores x 4 lanes x 0.98 x 330 MHz = 10.35 GMAC/s
+        let t = c.peak_macs_per_s(Precision::Int8, 0.8);
+        assert!((t - 10.35e9).abs() / 10.35e9 < 0.01, "{t}");
+    }
+
+    #[test]
+    fn int2_best_efficiency_near_1p8_tops_w() {
+        let c = cl();
+        let (v, eff) = c.best_efficiency(Precision::Int2);
+        assert!(v < 0.55);
+        assert!(
+            (eff - 1.8e12).abs() / 1.8e12 < 0.06,
+            "PULP int2 best eff {:.3} TOp/s/W vs paper 1.8",
+            eff / 1e12
+        );
+    }
+
+    #[test]
+    fn efficiency_ordering_by_precision() {
+        let c = cl();
+        let effs: Vec<f64> = Precision::ALL
+            .iter()
+            .map(|&p| c.patch_efficiency_ops_per_w(p, 0.8))
+            .collect();
+        // fp32 < fp16 < int8 < int4 < int2
+        for w in effs.windows(2) {
+            assert!(w[0] < w[1], "{effs:?}");
+        }
+    }
+
+    #[test]
+    fn busy_power_anchor() {
+        let c = cl();
+        let p = c.busy_power(Precision::Int8, 0.8);
+        assert!((p - 0.080).abs() < 0.01, "{p}");
+    }
+
+    #[test]
+    fn fp_draws_more_power_than_int() {
+        let c = cl();
+        assert!(c.busy_power(Precision::Fp32, 0.8) > c.busy_power(Precision::Int8, 0.8));
+    }
+}

@@ -1,0 +1,134 @@
+//! Convolutional workload cost models for the cluster.
+//!
+//! Two regimes, matching how the paper reports numbers:
+//!
+//! * [`conv_patch`] — a standalone conv layer patch resident in L1
+//!   (Fig. 4's benchmark): pure inner-loop throughput.
+//! * [`network_inference`] — a full network (DroNet): the inner loop is
+//!   only ~11 % of the story once im2col marshalling, DMA staging, pooling
+//!   and layer tails are paid (`net_efficiency`, calibrated to the
+//!   measured 28 inf/s).
+
+use crate::config::{Precision, PulpCfg};
+use crate::nets::CnnDesc;
+use crate::pulp::isa;
+
+/// Timing + energy of one PULP job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PulpJobReport {
+    pub cycles: f64,
+    pub t_s: f64,
+    pub energy_j: f64,
+    pub macs: u64,
+    pub macs_per_cycle: f64,
+}
+
+/// Cost of a standalone conv patch of `macs` MACs at precision `p`,
+/// voltage `v` (Fig. 4 conditions: data resident in L1).
+pub fn conv_patch(cfg: &PulpCfg, macs: u64, p: Precision, v: f64) -> PulpJobReport {
+    let f = cfg.domain.f_at(v);
+    let cycles = isa::patch_cycles(cfg, macs, cfg.cores, p);
+    let t_s = cycles / f;
+    let pw = cfg.domain.p_dyn(v, f, 1.0) * isa::power_factor(cfg, p) + cfg.domain.p_leak(v);
+    PulpJobReport {
+        cycles,
+        t_s,
+        energy_j: pw * t_s,
+        macs,
+        macs_per_cycle: macs as f64 / cycles,
+    }
+}
+
+/// Full-network inference (e.g. DroNet) at precision `p`, voltage `v`.
+pub fn network_inference(cfg: &PulpCfg, net: &CnnDesc, p: Precision, v: f64) -> PulpJobReport {
+    let f = cfg.domain.f_at(v);
+    let macs = net.total_macs();
+    let peak = cfg.macs_per_cycle(p) * cfg.macld_efficiency * cfg.cores as f64;
+    let cycles = macs as f64 / (peak * cfg.net_efficiency);
+    let t_s = cycles / f;
+    // Full networks alternate compute and memory phases; utilization is
+    // high (the measured 80 mW envelope is for DroNet inference).
+    let pw = cfg.domain.p_dyn(v, f, 1.0) * isa::power_factor(cfg, p) + cfg.domain.p_leak(v);
+    PulpJobReport {
+        cycles,
+        t_s,
+        energy_j: pw * t_s,
+        macs,
+        macs_per_cycle: macs as f64 / cycles,
+    }
+}
+
+/// Inferences per second for `net` at precision `p`, voltage `v`.
+pub fn inf_per_s(cfg: &PulpCfg, net: &CnnDesc, p: Precision, v: f64) -> f64 {
+    1.0 / network_inference(cfg, net, p, v).t_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SocConfig;
+    use crate::nets;
+
+    fn cfg() -> PulpCfg {
+        SocConfig::kraken().pulp
+    }
+
+    #[test]
+    fn dronet_28_inf_per_s_anchor() {
+        let c = cfg();
+        let net = nets::dronet_paper();
+        let rate = inf_per_s(&c, &net, Precision::Int8, 0.8);
+        assert!((rate - 28.0).abs() / 28.0 < 0.02, "DroNet {rate} inf/s vs paper 28");
+    }
+
+    #[test]
+    fn dronet_power_80mw() {
+        let c = cfg();
+        let net = nets::dronet_paper();
+        let r = network_inference(&c, &net, Precision::Int8, 0.8);
+        let p = r.energy_j / r.t_s;
+        assert!((p - 0.080).abs() < 0.01, "{p} W");
+    }
+
+    #[test]
+    fn patch_hits_098_mac_per_cycle_per_core() {
+        let c = cfg();
+        // int-32-bit-accumulate scalar MAC-LD loop: 1 lane
+        let r = conv_patch(&c, 10_000_000, Precision::Fp32, 0.8);
+        // fp32 runs 0.5 lanes/cycle: 0.49/core
+        assert!((r.macs_per_cycle / c.cores as f64 - 0.49).abs() < 1e-6);
+        let r8 = conv_patch(&c, 10_000_000, Precision::Int8, 0.8);
+        assert!((r8.macs_per_cycle / c.cores as f64 - 3.92).abs() < 1e-6);
+    }
+
+    #[test]
+    fn network_slower_than_patch() {
+        let c = cfg();
+        let net = nets::dronet_paper();
+        let macs = net.total_macs();
+        let patch = conv_patch(&c, macs, Precision::Int8, 0.8);
+        let full = network_inference(&c, &net, Precision::Int8, 0.8);
+        assert!(full.cycles > 5.0 * patch.cycles);
+    }
+
+    #[test]
+    fn lower_precision_runs_faster() {
+        let c = cfg();
+        let net = nets::dronet_paper();
+        let t8 = network_inference(&c, &net, Precision::Int8, 0.8).t_s;
+        let t4 = network_inference(&c, &net, Precision::Int4, 0.8).t_s;
+        let t2 = network_inference(&c, &net, Precision::Int2, 0.8).t_s;
+        assert!((t8 / t4 - 2.0).abs() < 1e-9);
+        assert!((t4 / t2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn voltage_scaling_trades_speed_for_energy() {
+        let c = cfg();
+        let net = nets::dronet_paper();
+        let hi = network_inference(&c, &net, Precision::Int8, 0.8);
+        let lo = network_inference(&c, &net, Precision::Int8, 0.5);
+        assert!(lo.t_s > 2.0 * hi.t_s, "slower at 0.5 V");
+        assert!(lo.energy_j < hi.energy_j, "but cheaper per inference");
+    }
+}

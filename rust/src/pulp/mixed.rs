@@ -1,0 +1,169 @@
+//! Mixed-precision SIMD dot products (paper §II.3: "as well as all their
+//! mixed-precision combinations, thanks to a status-based RISC-V ISA
+//! extension").
+//!
+//! A mixed dotp multiplies lanes of precision `a` against lanes of
+//! precision `b` (e.g. int8 activations x int4 weights). The status-based
+//! extension sets the operand formats once per loop instead of encoding
+//! them per instruction, so the inner loop keeps MAC-LD density. Throughput
+//! is limited by the *wider* operand's lane count (the register file reads
+//! 32-bit operands); energy tracks the switched datapath width.
+
+use crate::config::{Precision, PulpCfg};
+use crate::quant::int::{pack_lanes, unpack_lanes};
+
+/// A mixed-precision operand pair (activations x weights).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MixedMode {
+    pub act: Precision,
+    pub weight: Precision,
+}
+
+impl MixedMode {
+    pub fn new(act: Precision, weight: Precision) -> Self {
+        MixedMode { act, weight }
+    }
+
+    /// Is this a supported SIMD combination? (integer-only; fp has no
+    /// mixed-precision dotp on the cluster.)
+    pub fn supported(&self) -> bool {
+        !matches!(self.act, Precision::Fp32 | Precision::Fp16)
+            && !matches!(self.weight, Precision::Fp32 | Precision::Fp16)
+    }
+
+    /// MACs per cycle per core: limited by the wider operand's lane count.
+    pub fn macs_per_cycle(&self, cfg: &PulpCfg) -> f64 {
+        assert!(self.supported(), "mixed dotp is integer-only");
+        let lanes_a = cfg.macs_per_cycle(self.act);
+        let lanes_w = cfg.macs_per_cycle(self.weight);
+        lanes_a.min(lanes_w) * cfg.macld_efficiency
+    }
+
+    /// Relative dynamic-power factor vs the symmetric int8 datapath:
+    /// proportional to the mean operand width (narrower lanes switch less).
+    pub fn power_factor(&self) -> f64 {
+        let mean_bits = (self.act.bits() + self.weight.bits()) as f64 / 2.0;
+        (mean_bits / 8.0).clamp(0.25, 1.0)
+    }
+
+    /// Energy efficiency (op/s/W) at voltage `v`, conv-patch conditions.
+    pub fn efficiency_ops_per_w(&self, cfg: &PulpCfg, v: f64) -> f64 {
+        let f = cfg.domain.f_at(v);
+        let macs = self.macs_per_cycle(cfg) * cfg.cores as f64 * f;
+        let p = cfg.domain.p_dyn(v, f, 1.0) * self.power_factor() + cfg.domain.p_leak(v);
+        2.0 * macs / p
+    }
+}
+
+/// Functional mixed-precision dot product: unpack both operand streams at
+/// their own widths, widen to i32, multiply-accumulate. This is the
+/// semantics the ISA extension implements; proptests pin it against the
+/// scalar reference.
+pub fn mixed_sdot(
+    a_packed: &[u32],
+    a_bits: u32,
+    b_packed: &[u32],
+    b_bits: u32,
+    n: usize,
+    acc0: i32,
+) -> i32 {
+    let av = unpack_lanes(a_packed, a_bits, n);
+    let bv = unpack_lanes(b_packed, b_bits, n);
+    av.iter().zip(&bv).fold(acc0, |acc, (&x, &y)| acc + x * y)
+}
+
+/// Convenience: pack-and-dot from unpacked values (tests/benches).
+pub fn mixed_dot_values(a: &[i32], a_bits: u32, b: &[i32], b_bits: u32) -> i32 {
+    assert_eq!(a.len(), b.len());
+    mixed_sdot(
+        &pack_lanes(a, a_bits),
+        a_bits,
+        &pack_lanes(b, b_bits),
+        b_bits,
+        a.len(),
+        0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SocConfig;
+
+    fn cfg() -> PulpCfg {
+        SocConfig::kraken().pulp
+    }
+
+    #[test]
+    fn symmetric_modes_match_plain_simd() {
+        let c = cfg();
+        for p in [Precision::Int8, Precision::Int4, Precision::Int2] {
+            let m = MixedMode::new(p, p);
+            assert_eq!(
+                m.macs_per_cycle(&c),
+                c.macs_per_cycle(p) * c.macld_efficiency
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_limited_by_wider_operand() {
+        let c = cfg();
+        let m84 = MixedMode::new(Precision::Int8, Precision::Int4);
+        let m48 = MixedMode::new(Precision::Int4, Precision::Int8);
+        // int8 side limits both to 4 lanes
+        assert_eq!(m84.macs_per_cycle(&c), 4.0 * c.macld_efficiency);
+        assert_eq!(m48.macs_per_cycle(&c), m84.macs_per_cycle(&c));
+    }
+
+    #[test]
+    fn mixed_8x4_beats_8x8_in_efficiency() {
+        // same throughput, narrower weight datapath -> better op/s/W:
+        // exactly why the paper deploys int8-activation x int4-weight nets
+        let c = cfg();
+        let e88 = MixedMode::new(Precision::Int8, Precision::Int8).efficiency_ops_per_w(&c, 0.8);
+        let e84 = MixedMode::new(Precision::Int8, Precision::Int4).efficiency_ops_per_w(&c, 0.8);
+        assert!(e84 > 1.1 * e88, "{e84} vs {e88}");
+    }
+
+    #[test]
+    fn fp_combinations_rejected() {
+        assert!(!MixedMode::new(Precision::Fp16, Precision::Int8).supported());
+        assert!(!MixedMode::new(Precision::Int8, Precision::Fp32).supported());
+        assert!(MixedMode::new(Precision::Int2, Precision::Int8).supported());
+    }
+
+    #[test]
+    fn functional_mixed_dot_matches_scalar() {
+        let a: Vec<i32> = (0..64).map(|i| (i % 255) - 127).collect();
+        let b: Vec<i32> = (0..64).map(|i| (i % 15) as i32 - 7).collect();
+        let want: i32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(mixed_dot_values(&a, 8, &b, 4), want);
+        let b2: Vec<i32> = (0..64).map(|i| (i % 3) as i32 - 1).collect();
+        let want2: i32 = a.iter().zip(&b2).map(|(x, y)| x * y).sum();
+        assert_eq!(mixed_dot_values(&a, 8, &b2, 2), want2);
+    }
+
+    #[test]
+    fn all_nine_integer_combinations_consistent() {
+        let c = cfg();
+        let ints = [Precision::Int8, Precision::Int4, Precision::Int2];
+        for &a in &ints {
+            for &w in &ints {
+                let m = MixedMode::new(a, w);
+                assert!(m.supported());
+                assert!(m.macs_per_cycle(&c) > 0.0);
+                assert!(m.efficiency_ops_per_w(&c, 0.8) > 0.0);
+                // narrower pairs never less efficient than int8xint8
+                if a != Precision::Int8 || w != Precision::Int8 {
+                    assert!(
+                        m.efficiency_ops_per_w(&c, 0.8)
+                            >= MixedMode::new(Precision::Int8, Precision::Int8)
+                                .efficiency_ops_per_w(&c, 0.8)
+                            - 1e-9
+                    );
+                }
+            }
+        }
+    }
+}

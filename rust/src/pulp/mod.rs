@@ -1,0 +1,18 @@
+//! PULP — the 8-core RISC-V DSP cluster.
+//!
+//! * [`isa`] — instruction-level timing of the XpulpV2-style extensions:
+//!   hardware loops, MAC-LD (multiply-accumulate with concurrent load) and
+//!   SIMD widening dot-products (int8/4/2), plus fp32/fp16.
+//! * [`cluster`] — the 8-core cluster with shared single-cycle L1 TCDM.
+//! * [`kernels`] — convolutional-workload cost models: the "standalone
+//!   conv patches" of Fig. 4 and full-network inference (DroNet).
+//! * [`mixed`] — the mixed-precision SIMD combinations (int8 x int4 etc.)
+//!   of the status-based ISA extension.
+
+pub mod cluster;
+pub mod isa;
+pub mod kernels;
+pub mod mixed;
+
+pub use cluster::PulpCluster;
+pub use kernels::PulpJobReport;

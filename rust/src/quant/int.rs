@@ -1,0 +1,133 @@
+//! PULP SIMD sub-byte packing: int8/int4/int2 lanes in 32-bit words.
+//!
+//! The cluster's widening dot-product instructions consume 4 (int8),
+//! 8 (int4) or 16 (int2) lanes per 32-bit operand per cycle; this module
+//! implements the lane packing those instructions assume, plus the
+//! saturating converters used at layer boundaries. The engine timing model
+//! (pulp::kernels) derives its footprint/DMA numbers from these layouts.
+
+/// Saturate a wide accumulator to int8.
+pub fn sat_i8(x: i32) -> i8 {
+    x.clamp(-128, 127) as i8
+}
+
+/// Saturate to a signed `bits`-wide integer range.
+pub fn sat_bits(x: i32, bits: u32) -> i32 {
+    let hi = (1i32 << (bits - 1)) - 1;
+    let lo = -(1i32 << (bits - 1));
+    x.clamp(lo, hi)
+}
+
+/// Pack signed values into 32-bit words, `bits` per lane (2, 4 or 8).
+///
+/// Values must already fit the lane range; lane 0 occupies the least
+/// significant bits (the RI5CY/XpulpV2 convention).
+pub fn pack_lanes(vals: &[i32], bits: u32) -> Vec<u32> {
+    assert!(matches!(bits, 2 | 4 | 8), "unsupported lane width {bits}");
+    let lanes = 32 / bits as usize;
+    let mask = (1u32 << bits) - 1;
+    let mut out = Vec::with_capacity(vals.len().div_ceil(lanes));
+    for chunk in vals.chunks(lanes) {
+        let mut w = 0u32;
+        for (i, &v) in chunk.iter().enumerate() {
+            let s = sat_bits(v, bits);
+            debug_assert_eq!(s, v, "value {v} does not fit int{bits}");
+            w |= ((s as u32) & mask) << (i as u32 * bits);
+        }
+        out.push(w);
+    }
+    out
+}
+
+/// Unpack `n` signed lane values from 32-bit words (inverse of
+/// [`pack_lanes`]).
+pub fn unpack_lanes(words: &[u32], bits: u32, n: usize) -> Vec<i32> {
+    assert!(matches!(bits, 2 | 4 | 8));
+    let lanes = 32 / bits as usize;
+    let shift = 32 - bits;
+    let mut out = Vec::with_capacity(n);
+    'outer: for &w in words {
+        for i in 0..lanes {
+            if out.len() == n {
+                break 'outer;
+            }
+            let raw = (w >> (i as u32 * bits)) << shift;
+            out.push((raw as i32) >> shift); // sign-extend
+        }
+    }
+    assert_eq!(out.len(), n, "not enough words for {n} lanes");
+    out
+}
+
+/// SIMD dot product over packed operands: the functional model of the
+/// XpulpV2 `pv.sdotsp` family (widening, accumulating).
+pub fn sdot(a: &[u32], b: &[u32], bits: u32, n: usize, acc0: i32) -> i32 {
+    let av = unpack_lanes(a, bits, n);
+    let bv = unpack_lanes(b, bits, n);
+    av.iter().zip(&bv).fold(acc0, |acc, (&x, &y)| acc + x * y)
+}
+
+/// Bytes needed to store `n` values at `bits` precision, packed.
+pub fn packed_bytes(n: usize, bits: u32) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip_all_widths() {
+        for bits in [2u32, 4, 8] {
+            let hi = (1i32 << (bits - 1)) - 1;
+            let lo = -(1i32 << (bits - 1));
+            let vals: Vec<i32> = (0..100).map(|i| lo + (i % (hi - lo + 1))).collect();
+            let packed = pack_lanes(&vals, bits);
+            assert_eq!(unpack_lanes(&packed, bits, vals.len()), vals);
+        }
+    }
+
+    #[test]
+    fn lane_counts() {
+        assert_eq!(pack_lanes(&[1; 16], 2).len(), 1);
+        assert_eq!(pack_lanes(&[1; 8], 4).len(), 1);
+        assert_eq!(pack_lanes(&[1; 4], 8).len(), 1);
+        assert_eq!(pack_lanes(&[1; 17], 2).len(), 2);
+    }
+
+    #[test]
+    fn sign_extension() {
+        let packed = pack_lanes(&[-1, -8, 7, 0], 4);
+        assert_eq!(unpack_lanes(&packed, 4, 4), vec![-1, -8, 7, 0]);
+        let packed = pack_lanes(&[-2, 1, -1, 0], 2);
+        assert_eq!(unpack_lanes(&packed, 2, 4), vec![-2, 1, -1, 0]);
+    }
+
+    #[test]
+    fn sdot_matches_scalar() {
+        let a: Vec<i32> = (0..32).map(|i| (i % 15) - 7).collect();
+        let b: Vec<i32> = (0..32).map(|i| ((i * 3) % 15) - 7).collect();
+        let want: i32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let pa = pack_lanes(&a, 4);
+        let pb = pack_lanes(&b, 4);
+        assert_eq!(sdot(&pa, &pb, 4, 32, 0), want);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(sat_i8(1000), 127);
+        assert_eq!(sat_i8(-1000), -128);
+        assert_eq!(sat_bits(9, 4), 7);
+        assert_eq!(sat_bits(-9, 4), -8);
+        assert_eq!(sat_bits(1, 2), 1);
+        assert_eq!(sat_bits(2, 2), 1);
+    }
+
+    #[test]
+    fn packed_footprints() {
+        // int4 halves and int2 quarters the int8 footprint
+        assert_eq!(packed_bytes(1024, 8), 1024);
+        assert_eq!(packed_bytes(1024, 4), 512);
+        assert_eq!(packed_bytes(1024, 2), 256);
+    }
+}

@@ -1,0 +1,16 @@
+//! Quantized number formats shared by the engine models.
+//!
+//! * [`ternary`] — CUTIE's compressed ternary weight codec (1.6 bits/weight:
+//!   5 trits packed per byte, the density quoted in the paper).
+//! * [`int`] — PULP's SIMD sub-byte packing (int8/int4/int2 lanes in 32-bit
+//!   words) and saturating conversions.
+//!
+//! These are *functional* implementations used by tests and by the
+//! coordinator when staging weights through the memory models — footprint
+//! numbers the timing models use (weight_mem fits, DMA sizes) come from here.
+
+pub mod int;
+pub mod ternary;
+
+pub use int::{pack_lanes, unpack_lanes, sat_i8};
+pub use ternary::{decode_ternary, encode_ternary, ternary_bytes};

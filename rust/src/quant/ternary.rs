@@ -1,0 +1,114 @@
+//! CUTIE's compressed ternary weight format: 5 trits per byte.
+//!
+//! 3^5 = 243 <= 256, so five {-1,0,+1} weights fit one byte — 1.6 bits per
+//! weight, exactly the density the paper quotes for CUTIE's on-chip weight
+//! storage ("1.6 bits/weight compressed format"). This is what lets the
+//! whole ternary network stay resident in the 117 kB weight memory.
+
+/// Encode a slice of ternary weights (values in {-1, 0, +1}) into packed
+/// bytes, 5 trits per byte, little-endian trit order.
+///
+/// # Panics
+/// Panics if any value is outside {-1, 0, 1}.
+pub fn encode_ternary(w: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(w.len().div_ceil(5));
+    for chunk in w.chunks(5) {
+        let mut b: u16 = 0;
+        let mut mul: u16 = 1;
+        for &t in chunk {
+            assert!((-1..=1).contains(&t), "not a trit: {t}");
+            b += ((t + 1) as u16) * mul;
+            mul *= 3;
+        }
+        debug_assert!(b < 243);
+        out.push(b as u8);
+    }
+    out
+}
+
+/// Decode `n` ternary weights from packed bytes (inverse of
+/// [`encode_ternary`]).
+pub fn decode_ternary(bytes: &[u8], n: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(n);
+    for (i, &b) in bytes.iter().enumerate() {
+        let mut v = b as u16;
+        for _ in 0..5 {
+            if out.len() == n {
+                break;
+            }
+            out.push((v % 3) as i8 - 1);
+            v /= 3;
+        }
+        if out.len() == n && i + 1 < bytes.len() {
+            break;
+        }
+    }
+    assert_eq!(out.len(), n, "not enough packed bytes for {n} trits");
+    out
+}
+
+/// Storage footprint (bytes) of `n` ternary weights in the packed format.
+pub fn ternary_bytes(n: usize) -> usize {
+    n.div_ceil(5)
+}
+
+/// Effective bits per weight of the packed format (tends to 1.6).
+pub fn bits_per_weight(n: usize) -> f64 {
+    (ternary_bytes(n) * 8) as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exhaustive_small() {
+        // all 3^5 single-byte groups
+        for a in -1..=1i8 {
+            for b in -1..=1i8 {
+                for c in -1..=1i8 {
+                    for d in -1..=1i8 {
+                        for e in -1..=1i8 {
+                            let w = [a, b, c, d, e];
+                            let enc = encode_ternary(&w);
+                            assert_eq!(enc.len(), 1);
+                            assert_eq!(decode_ternary(&enc, 5), w);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_unaligned_lengths() {
+        for n in [1usize, 2, 3, 4, 6, 7, 99, 864] {
+            let w: Vec<i8> = (0..n).map(|i| (i % 3) as i8 - 1).collect();
+            let enc = encode_ternary(&w);
+            assert_eq!(enc.len(), n.div_ceil(5));
+            assert_eq!(decode_ternary(&enc, n), w);
+        }
+    }
+
+    #[test]
+    fn density_is_1p6_bits() {
+        // large, 5-aligned weight count: exactly 1.6 b/weight
+        assert!((bits_per_weight(96 * 96 * 9) - 1.6).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cutie_network_fits_weight_memory() {
+        // 7 layers of 96x96x3x3 ternary weights, packed, must fit CUTIE's
+        // 117 kB weight memory with margin for per-channel thresholds —
+        // the "all weights on-chip" claim.
+        let per_layer = 96 * 96 * 9;
+        let total = ternary_bytes(per_layer) * 7;
+        assert!(total < 117_000, "packed weights {total} B exceed 117 kB");
+    }
+
+    #[test]
+    #[should_panic(expected = "not a trit")]
+    fn rejects_non_trit() {
+        encode_ternary(&[2]);
+    }
+}

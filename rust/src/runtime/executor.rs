@@ -1,0 +1,155 @@
+//! The PJRT executor: compile HLO-text artifacts once, execute many times.
+//!
+//! Adapted from the /opt/xla-example/load_hlo reference: text ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation` -> `client.compile`,
+//! then `execute` with `Literal` inputs. All tensors are f32 (the AOT
+//! contract — quantized values ride as exact small integers).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::runtime::manifest::{Manifest, TensorSpec};
+
+/// A compiled artifact plus its manifest specs.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The PJRT runtime: one CPU client + all compiled artifacts.
+///
+/// Not `Send` (PJRT client handles are thread-local by construction in the
+/// xla crate); create it on the thread that will execute.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    executables: HashMap<String, Executable>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    /// Executions served (telemetry).
+    pub calls: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Load + compile every artifact in `dir` (verifying hashes).
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let names: Vec<String> = manifest.artifacts.keys().cloned().collect();
+        Self::load_subset(dir, &names)
+    }
+
+    /// Load + compile a subset of artifacts (benches that only need one).
+    pub fn load_subset(dir: &Path, names: &[String]) -> crate::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for name in names {
+            let meta = manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
+            manifest.verify_hash(dir, name)?;
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(
+                name.clone(),
+                Executable { exe, inputs: meta.inputs.clone(), outputs: meta.outputs.clone() },
+            );
+        }
+        Ok(Runtime {
+            client,
+            executables,
+            manifest,
+            dir: dir.to_path_buf(),
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Input specs of an artifact (for buffer pre-allocation).
+    pub fn input_specs(&self, name: &str) -> crate::Result<&[TensorSpec]> {
+        Ok(&self.exe(name)?.inputs)
+    }
+
+    pub fn output_specs(&self, name: &str) -> crate::Result<&[TensorSpec]> {
+        Ok(&self.exe(name)?.outputs)
+    }
+
+    fn exe(&self, name: &str) -> crate::Result<&Executable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not loaded"))
+    }
+
+    /// Execute artifact `name` on flat f32 inputs (one Vec per manifest
+    /// input, C-order). Returns flat f32 outputs in manifest order.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> crate::Result<Vec<Vec<f32>>> {
+        let ex = self.exe(name)?;
+        anyhow::ensure!(
+            inputs.len() == ex.inputs.len(),
+            "artifact '{name}': {} inputs given, {} expected",
+            inputs.len(),
+            ex.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&ex.inputs) {
+            anyhow::ensure!(
+                buf.len() == spec.elements(),
+                "artifact '{name}' input '{}': {} elements given, {} expected",
+                spec.name,
+                buf.len(),
+                spec.elements()
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = ex.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple at top level.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == ex.outputs.len(),
+            "artifact '{name}': {} outputs returned, {} in manifest",
+            parts.len(),
+            ex.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&ex.outputs) {
+            let v = lit.to_vec::<f32>()?;
+            anyhow::ensure!(
+                v.len() == spec.elements(),
+                "artifact '{name}' output '{}': {} elements, {} expected",
+                spec.name,
+                v.len(),
+                spec.elements()
+            );
+            out.push(v);
+        }
+        self.calls.set(self.calls.get() + 1);
+        Ok(out)
+    }
+
+    /// Convenience: zeroed input buffers shaped per the manifest.
+    pub fn zero_inputs(&self, name: &str) -> crate::Result<Vec<Vec<f32>>> {
+        Ok(self
+            .exe(name)?
+            .inputs
+            .iter()
+            .map(|s| vec![0f32; s.elements()])
+            .collect())
+    }
+}
+
+// Integration coverage for this module lives in
+// rust/tests/integration_runtime.rs (requires `make artifacts`).

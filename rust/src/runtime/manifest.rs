@@ -1,0 +1,281 @@
+//! `artifacts/manifest.json`: the contract between the Python compile path
+//! and the Rust runtime.
+//!
+//! aot.py writes, for every artifact, its file name, target engine, exact
+//! input/output tensor specs, workload statistics, and a sha256 of the HLO
+//! text. The runtime refuses to run artifacts whose hash or shapes drift
+//! from the manifest — the same role a firmware image header plays.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value};
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub engine: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub stats: Value,
+    pub sha256: String,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seed: u64,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}. Run `make artifacts` first.", path.display()))?;
+        let m = Self::from_json_text(&text)?;
+        anyhow::ensure!(!m.artifacts.is_empty(), "manifest lists no artifacts");
+        Ok(m)
+    }
+
+    /// Parse the manifest JSON document.
+    pub fn from_json_text(text: &str) -> crate::Result<Self> {
+        let v = json::parse(text)?;
+        let seed = v
+            .get("seed")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing 'seed'"))?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing 'artifacts'"))?;
+        let mut artifacts = HashMap::new();
+        for (name, a) in arts {
+            artifacts.insert(name.clone(), parse_artifact(name, a)?);
+        }
+        Ok(Manifest { seed, artifacts })
+    }
+
+    pub fn path_of(&self, dir: &Path, name: &str) -> crate::Result<PathBuf> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
+        Ok(dir.join(&art.file))
+    }
+
+    /// Verify the sha256 of an artifact's HLO text against the manifest.
+    pub fn verify_hash(&self, dir: &Path, name: &str) -> crate::Result<()> {
+        let art = &self.artifacts[name];
+        let text = std::fs::read_to_string(dir.join(&art.file))?;
+        let got = sha256_hex(text.as_bytes());
+        anyhow::ensure!(
+            got == art.sha256,
+            "artifact '{name}' hash mismatch: rebuild artifacts (make artifacts)"
+        );
+        Ok(())
+    }
+
+    /// Cross-check a manifest entry's MAC statistics against a Rust net
+    /// descriptor (keeps the analytical and functional views in lock-step).
+    pub fn check_stats_macs(&self, name: &str, want_total_macs: u64) -> crate::Result<()> {
+        let art = &self.artifacts[name];
+        let layers = art.stats.get("layers").and_then(Value::as_arr);
+        if let Some(layers) = layers {
+            let total: u64 = layers
+                .iter()
+                .filter_map(|l| l.get("macs").and_then(Value::as_u64))
+                .sum();
+            anyhow::ensure!(
+                total == want_total_macs,
+                "artifact '{name}': manifest MACs {total} != descriptor {want_total_macs}"
+            );
+        }
+        Ok(())
+    }
+}
+
+fn parse_tensor(t: &Value) -> crate::Result<TensorSpec> {
+    let name = t
+        .get("name")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow::anyhow!("tensor spec missing 'name'"))?
+        .to_string();
+    let shape: Vec<usize> = t
+        .get("shape")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("tensor '{name}' missing 'shape'"))?
+        .iter()
+        .map(|d| d.as_u64().map(|d| d as usize))
+        .collect::<Option<_>>()
+        .ok_or_else(|| anyhow::anyhow!("tensor '{name}': bad shape"))?;
+    let dtype = t
+        .get("dtype")
+        .and_then(Value::as_str)
+        .unwrap_or("f32")
+        .to_string();
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+fn parse_artifact(name: &str, a: &Value) -> crate::Result<ArtifactMeta> {
+    let field = |k: &str| -> crate::Result<String> {
+        Ok(a.get(k)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}': missing '{k}'"))?
+            .to_string())
+    };
+    let tensors = |k: &str| -> crate::Result<Vec<TensorSpec>> {
+        a.get(k)
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}': missing '{k}'"))?
+            .iter()
+            .map(parse_tensor)
+            .collect()
+    };
+    Ok(ArtifactMeta {
+        file: field("file")?,
+        engine: field("engine")?,
+        inputs: tensors("inputs")?,
+        outputs: tensors("outputs")?,
+        stats: a.get("stats").cloned().unwrap_or(Value::Null),
+        sha256: field("sha256")?,
+    })
+}
+
+/// Minimal SHA-256 (pure Rust, no deps) — used to pin artifact integrity.
+pub fn sha256_hex(data: &[u8]) -> String {
+    const K: [u32; 64] = [
+        0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1,
+        0x923f82a4, 0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3,
+        0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786,
+        0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+        0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147,
+        0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13,
+        0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+        0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+        0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a,
+        0x5b9cca4f, 0x682e6ff3, 0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208,
+        0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+    ];
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c,
+        0x1f83d9ab, 0x5be0cd19,
+    ];
+    let mut msg = data.to_vec();
+    let bitlen = (data.len() as u64) * 8;
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bitlen.to_be_bytes());
+    for chunk in msg.chunks(64) {
+        let mut w = [0u32; 64];
+        for i in 0..16 {
+            w[i] = u32::from_be_bytes(chunk[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let (mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh) =
+            (h[0], h[1], h[2], h[3], h[4], h[5], h[6], h[7]);
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ ((!e) & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+    h.iter().map(|x| format!("{x:08x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        // multi-block message
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { name: "x".into(), shape: vec![2, 64, 64], dtype: "f32".into() };
+        assert_eq!(t.elements(), 8192);
+    }
+
+    #[test]
+    fn manifest_parses_real_schema() {
+        let json = r#"{
+            "seed": 12648430,
+            "artifacts": {
+                "firenet": {
+                    "file": "firenet.hlo.txt",
+                    "engine": "sne",
+                    "inputs": [{"name": "events", "shape": [2, 64, 64], "dtype": "f32"}],
+                    "outputs": [{"name": "flow", "shape": [2, 64, 64], "dtype": "f32"}],
+                    "stats": {"layers": [{"macs": 100}, {"macs": 23}]},
+                    "sha256": "00"
+                }
+            }
+        }"#;
+        let m = Manifest::from_json_text(json).unwrap();
+        assert_eq!(m.artifacts["firenet"].engine, "sne");
+        m.check_stats_macs("firenet", 123).unwrap();
+        assert!(m.check_stats_macs("firenet", 124).is_err());
+    }
+}

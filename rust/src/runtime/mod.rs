@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT artifacts Python emitted and execute them
+//! from the Rust hot path. Python never runs here.
+//!
+//! * [`manifest`] — `artifacts/manifest.json` schema + integrity checks.
+//! * [`executor`] — PJRT CPU client: HLO text -> compile -> execute, with
+//!   f32 marshalling and per-artifact I/O validation.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! DESIGN.md): jax >= 0.5 serialized protos use 64-bit instruction ids the
+//! bundled xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`): a [`executor::Runtime`] lives on
+//! the thread that created it. The coordinator owns one and is itself a
+//! single-threaded discrete-event simulation — exactly like the FC firmware
+//! it models.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::Runtime;
+pub use manifest::{ArtifactMeta, Manifest, TensorSpec};

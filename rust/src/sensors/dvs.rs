@@ -1,0 +1,254 @@
+//! DVS event-camera simulator (DVS132S-class front end).
+//!
+//! Standard DVS pixel model: each pixel holds the log-intensity at its last
+//! event; when the current log-intensity differs by more than the contrast
+//! threshold C, it emits ON/OFF events (one per threshold crossing), subject
+//! to a refractory period. Background-activity noise is Poisson per pixel.
+//!
+//! The simulator is sampled: `step(scene, t_ns)` compares against the
+//! previous sample and linearly interpolates event timestamps within the
+//! sample interval, producing the time-sorted COO stream the AER peripheral
+//! (soc::peripherals) carries into the SoC.
+
+use crate::event::{Event, EventWindow, Polarity};
+use crate::util::rng::Rng;
+use crate::sensors::scene::Scene;
+
+/// DVS pixel-array simulator.
+#[derive(Debug, Clone)]
+pub struct DvsSim {
+    pub width: usize,
+    pub height: usize,
+    /// Contrast threshold on log intensity (typ. 0.2–0.4).
+    pub threshold: f64,
+    /// Per-pixel refractory period (ns).
+    pub refractory_ns: u64,
+    /// Background-activity noise rate per pixel (Hz).
+    pub noise_rate_hz: f64,
+    last_log: Vec<f64>,
+    last_event_ns: Vec<u64>,
+    /// Per-pixel intensity band [lo, hi]: while the rendered intensity
+    /// stays inside, no threshold crossing is possible and the pixel is
+    /// skipped without touching `ln` (the fast path that makes kHz
+    /// sampling at 132x128 tractable — EXPERIMENTS.md §Perf).
+    band_lo: Vec<f32>,
+    band_hi: Vec<f32>,
+    render_buf: Vec<f32>,
+    staged: Vec<(u64, usize, Polarity)>,
+    last_t_ns: u64,
+    primed: bool,
+    rng: Rng,
+}
+
+/// Floor for the log-intensity transform (keeps log finite on black).
+const EPS: f64 = 0.02;
+
+impl DvsSim {
+    pub fn new(width: usize, height: usize, seed: u64) -> Self {
+        DvsSim {
+            width,
+            height,
+            threshold: 0.25,
+            refractory_ns: 100_000, // 100 us, ~DVS132S at nominal biases
+            noise_rate_hz: 2.0,
+            last_log: vec![0.0; width * height],
+            last_event_ns: vec![0; width * height],
+            band_lo: vec![0.0; width * height],
+            band_hi: vec![0.0; width * height],
+            render_buf: vec![0.0; width * height],
+            staged: Vec::new(),
+            last_t_ns: 0,
+            primed: false,
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    /// Recompute the no-event intensity band of pixel `i` from its stored
+    /// log level: crossing happens when |ln(I+eps) - L| >= C.
+    fn reband(&mut self, i: usize) {
+        let l = self.last_log[i];
+        self.band_lo[i] = ((l - self.threshold).exp() - EPS) as f32;
+        self.band_hi[i] = ((l + self.threshold).exp() - EPS) as f32;
+    }
+
+    /// Reset pixel state (e.g. between mission segments).
+    pub fn reset(&mut self) {
+        self.last_log.iter_mut().for_each(|v| *v = 0.0);
+        self.last_event_ns.iter_mut().for_each(|v| *v = 0);
+        self.band_lo.iter_mut().for_each(|v| *v = 0.0);
+        self.band_hi.iter_mut().for_each(|v| *v = 0.0);
+        self.primed = false;
+        self.last_t_ns = 0;
+    }
+
+    /// Sample the scene at `t_ns` and emit events since the last sample.
+    ///
+    /// The first call primes pixel memories and emits nothing (a real DVS
+    /// emits a burst at power-on; we suppress it like the sensor's own
+    /// initialization masking does).
+    pub fn step(&mut self, scene: &Scene, t_ns: u64) -> EventWindow {
+        let mut img = std::mem::take(&mut self.render_buf);
+        scene.render_into(self.width, self.height, t_ns as f64 * 1e-9, &mut img);
+        let mut win = EventWindow::new(self.width, self.height);
+        if !self.primed {
+            for i in 0..img.len() {
+                self.last_log[i] = ((img[i] as f64) + EPS).ln();
+                self.reband(i);
+            }
+            self.primed = true;
+            self.last_t_ns = t_ns;
+            self.render_buf = img;
+            return win;
+        }
+        let dt = t_ns.saturating_sub(self.last_t_ns).max(1);
+        let mut staged = std::mem::take(&mut self.staged);
+        staged.clear();
+        // noise first: Poisson-thinned over the whole array so the fast
+        // path below never rolls the RNG per pixel
+        let p_noise = self.noise_rate_hz * dt as f64 * 1e-9;
+        if p_noise > 0.0 {
+            let expected = p_noise * img.len() as f64;
+            let mut budget = expected.floor() as usize;
+            if self.rng.gen_f64() < expected - budget as f64 {
+                budget += 1;
+            }
+            for _ in 0..budget {
+                let i = self.rng.gen_range_usize(0, img.len());
+                let ts = self.last_t_ns + self.rng.gen_below(dt);
+                let pol = if self.rng.gen_bool() { Polarity::On } else { Polarity::Off };
+                staged.push((ts, i, pol));
+            }
+        }
+        for i in 0..img.len() {
+            // fast path: intensity inside the pixel's no-crossing band
+            let v = img[i];
+            if v > self.band_lo[i] && v < self.band_hi[i] {
+                continue;
+            }
+            let l_new = ((v as f64) + EPS).ln();
+            let mut dl = l_new - self.last_log[i];
+            let pol = if dl >= 0.0 { Polarity::On } else { Polarity::Off };
+            let mut n_cross = (dl.abs() / self.threshold) as usize;
+            // refractory limits the event rate per pixel
+            let max_ev = (dt / self.refractory_ns.max(1)).max(1) as usize;
+            n_cross = n_cross.min(max_ev);
+            if n_cross > 0 {
+                for k in 0..n_cross {
+                    // interpolate crossing times across the interval
+                    let frac = (k as f64 + 1.0) / (n_cross as f64 + 1.0);
+                    let ts = self.last_t_ns + (frac * dt as f64) as u64;
+                    staged.push((ts, i, pol));
+                }
+                let signed = self.threshold * n_cross as f64;
+                dl = if pol == Polarity::On { signed } else { -signed };
+                self.last_log[i] += dl;
+                self.last_event_ns[i] = t_ns;
+                self.reband(i);
+            }
+        }
+        staged.sort_unstable_by_key(|&(t, i, _)| (t, i));
+        for &(t, i, p) in &staged {
+            win.push(Event {
+                t_ns: t,
+                x: (i % self.width) as u16,
+                y: (i / self.width) as u16,
+                polarity: p,
+            });
+        }
+        self.staged = staged;
+        self.render_buf = img;
+        self.last_t_ns = t_ns;
+        win
+    }
+
+    /// Convenience: run the sensor over [0, duration) at `sample_hz`,
+    /// concatenating all events into one window.
+    pub fn capture(&mut self, scene: &mut Scene, duration_s: f64, sample_hz: f64) -> EventWindow {
+        let mut all = EventWindow::new(self.width, self.height);
+        let steps = (duration_s * sample_hz) as usize;
+        for k in 0..=steps {
+            let t_ns = (k as f64 / sample_hz * 1e9) as u64;
+            scene.advance(t_ns as f64 * 1e-9);
+            let w = self.step(scene, t_ns);
+            for e in w.events {
+                all.push(e);
+            }
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensors::scene::SceneKind;
+
+    #[test]
+    fn static_scene_yields_only_noise() {
+        let mut dvs = DvsSim::new(32, 32, 1);
+        dvs.noise_rate_hz = 0.0;
+        let scene = Scene::new(SceneKind::TranslatingEdge { vel_per_s: 0.0 });
+        dvs.step(&scene, 0);
+        let w = dvs.step(&scene, 10_000_000);
+        assert!(w.is_empty(), "static scene must emit no events, got {}", w.len());
+    }
+
+    #[test]
+    fn moving_edge_emits_polarity_pairs() {
+        let mut dvs = DvsSim::new(64, 64, 2);
+        dvs.noise_rate_hz = 0.0;
+        // fast edge over >1 period so it wraps: ON at the advancing front,
+        // an OFF burst when the bright region resets
+        let mut scene = Scene::new(SceneKind::TranslatingEdge { vel_per_s: 1.0 });
+        let w = dvs.capture(&mut scene, 1.2, 200.0);
+        assert!(w.len() > 50, "moving edge must produce events");
+        let (on, off) = w.polarity_counts();
+        assert!(on > 0 && off > 0, "edge motion makes both polarities");
+    }
+
+    #[test]
+    fn events_are_time_sorted_and_in_bounds() {
+        let mut dvs = DvsSim::new(48, 40, 3);
+        let mut scene = Scene::new(SceneKind::RotatingBar { omega_rad_s: 6.0 });
+        let w = dvs.capture(&mut scene, 0.1, 500.0);
+        let mut last = 0;
+        for e in &w.events {
+            assert!(e.t_ns >= last);
+            assert!((e.x as usize) < 48 && (e.y as usize) < 40);
+            last = e.t_ns;
+        }
+    }
+
+    #[test]
+    fn noise_rate_controls_activity() {
+        let act = |noise: f64| {
+            let mut dvs = DvsSim::new(32, 32, 4);
+            dvs.noise_rate_hz = noise;
+            let mut scene = Scene::new(SceneKind::TranslatingEdge { vel_per_s: 0.0 });
+            let w = dvs.capture(&mut scene, 0.5, 100.0);
+            w.activity()
+        };
+        assert!(act(200.0) > 10.0 * act(2.0).max(1e-6));
+    }
+
+    #[test]
+    fn faster_motion_more_events() {
+        let count = |omega: f64| {
+            let mut dvs = DvsSim::new(64, 64, 5);
+            dvs.noise_rate_hz = 0.0;
+            let mut scene = Scene::new(SceneKind::RotatingBar { omega_rad_s: omega });
+            dvs.capture(&mut scene, 0.2, 400.0).len()
+        };
+        assert!(count(12.0) > count(2.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut dvs = DvsSim::new(32, 32, 42);
+            let mut scene = Scene::new(SceneKind::Corridor { speed_per_s: 1.0, seed: 9 });
+            dvs.capture(&mut scene, 0.1, 200.0).events
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,159 @@
+//! Frame camera simulator (HM01B0-class BW imager).
+//!
+//! Global-shutter grayscale sensor with configurable resolution and frame
+//! rate. Provides the preprocessing the FC firmware performs before
+//! dispatching frames to the engines: center-crop + box-downsample to the
+//! network input resolution, mean-centering to the int8 range (DroNet) or
+//! ternarization (CUTIE).
+
+use crate::sensors::scene::Scene;
+
+/// Frame sensor + FC-side preprocessing.
+#[derive(Debug, Clone)]
+pub struct FrameSensor {
+    pub width: usize,
+    pub height: usize,
+    pub fps: f64,
+    frame_idx: u64,
+}
+
+impl FrameSensor {
+    pub fn new(width: usize, height: usize, fps: f64) -> Self {
+        FrameSensor { width, height, fps, frame_idx: 0 }
+    }
+
+    /// Timestamp (ns) of the next frame.
+    pub fn next_frame_t_ns(&self) -> u64 {
+        (self.frame_idx as f64 / self.fps * 1e9) as u64
+    }
+
+    /// Capture the next frame in sequence; returns (t_ns, pixels in [0,1]).
+    pub fn capture(&mut self, scene: &mut Scene) -> (u64, Vec<f32>) {
+        let t_ns = self.next_frame_t_ns();
+        scene.advance(t_ns as f64 * 1e-9);
+        let img = scene.render(self.width, self.height, t_ns as f64 * 1e-9);
+        self.frame_idx += 1;
+        (t_ns, img)
+    }
+
+    /// Bytes per raw frame (8-bit luma) — DMA sizing for the CPI peripheral.
+    pub fn frame_bytes(&self) -> usize {
+        self.width * self.height
+    }
+}
+
+/// Center-crop to square then box-downsample to `out` x `out`.
+pub fn downsample_square(img: &[f32], w: usize, h: usize, out: usize) -> Vec<f32> {
+    assert_eq!(img.len(), w * h);
+    let side = w.min(h);
+    let x0 = (w - side) / 2;
+    let y0 = (h - side) / 2;
+    let mut res = vec![0f32; out * out];
+    let scale = side as f64 / out as f64;
+    for oy in 0..out {
+        for ox in 0..out {
+            // box filter over the source rectangle of this output pixel
+            let sy0 = y0 + (oy as f64 * scale) as usize;
+            let sy1 = (y0 + ((oy + 1) as f64 * scale).ceil() as usize).min(y0 + side);
+            let sx0 = x0 + (ox as f64 * scale) as usize;
+            let sx1 = (x0 + ((ox + 1) as f64 * scale).ceil() as usize).min(x0 + side);
+            let mut sum = 0f64;
+            let mut n = 0usize;
+            for yy in sy0..sy1.max(sy0 + 1) {
+                for xx in sx0..sx1.max(sx0 + 1) {
+                    sum += img[yy * w + xx] as f64;
+                    n += 1;
+                }
+            }
+            res[oy * out + ox] = (sum / n as f64) as f32;
+        }
+    }
+    res
+}
+
+/// Mean-center and scale to the int8 range (DroNet input convention;
+/// values are exact integers carried in f32 — see python/compile).
+pub fn to_int8_luma(img: &[f32]) -> Vec<f32> {
+    let mean: f32 = img.iter().sum::<f32>() / img.len() as f32;
+    img.iter()
+        .map(|&v| (((v - mean) * 255.0).round()).clamp(-128.0, 127.0))
+        .collect()
+}
+
+/// Ternarize a (single-channel) image to {-1, 0, +1} around its mean and
+/// replicate to `ch` channels (CUTIE input convention).
+pub fn to_ternary(img: &[f32], ch: usize, thr: f32) -> Vec<f32> {
+    let mean: f32 = img.iter().sum::<f32>() / img.len() as f32;
+    let one: Vec<f32> = img
+        .iter()
+        .map(|&v| {
+            let d = v - mean;
+            if d > thr {
+                1.0
+            } else if d < -thr {
+                -1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut out = Vec::with_capacity(ch * one.len());
+    for _ in 0..ch {
+        out.extend_from_slice(&one);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensors::scene::{Scene, SceneKind};
+
+    #[test]
+    fn frame_cadence() {
+        let mut cam = FrameSensor::new(64, 48, 30.0);
+        let mut scene = Scene::new(SceneKind::Corridor { speed_per_s: 0.5, seed: 1 });
+        let (t0, _) = cam.capture(&mut scene);
+        let (t1, _) = cam.capture(&mut scene);
+        assert_eq!(t0, 0);
+        assert!((t1 as f64 - 1e9 / 30.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn downsample_preserves_mean_roughly() {
+        let img: Vec<f32> = (0..320 * 240).map(|i| (i % 7) as f32 / 7.0).collect();
+        let small = downsample_square(&img, 320, 240, 96);
+        assert_eq!(small.len(), 96 * 96);
+        let m_in: f32 = img.iter().sum::<f32>() / img.len() as f32;
+        let m_out: f32 = small.iter().sum::<f32>() / small.len() as f32;
+        assert!((m_in - m_out).abs() < 0.1);
+    }
+
+    #[test]
+    fn downsample_identity_size() {
+        let img: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let out = downsample_square(&img, 4, 4, 4);
+        assert_eq!(out, img);
+    }
+
+    #[test]
+    fn int8_luma_range_and_integer() {
+        let img: Vec<f32> = (0..96 * 96).map(|i| ((i % 251) as f32) / 250.0).collect();
+        let q = to_int8_luma(&img);
+        for &v in &q {
+            assert!((-128.0..=127.0).contains(&v));
+            assert_eq!(v, v.round());
+        }
+    }
+
+    #[test]
+    fn ternary_replicates_channels() {
+        let img = vec![0.0f32, 0.5, 1.0, 0.5];
+        let t = to_ternary(&img, 3, 0.2);
+        assert_eq!(t.len(), 12);
+        assert_eq!(&t[0..4], &t[4..8]);
+        assert!(t.iter().all(|&v| v == -1.0 || v == 0.0 || v == 1.0));
+        assert_eq!(t[0], -1.0);
+        assert_eq!(t[2], 1.0);
+    }
+}

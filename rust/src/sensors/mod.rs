@@ -1,0 +1,28 @@
+//! Simulated visual sensors and the synthetic world they observe.
+//!
+//! The paper's testbed pairs an IniVation DVS132S event camera with a Himax
+//! HM01B0 320x240 BW imager on a nano-UAV. We cannot fly that rig, so
+//! [`scene`] provides a procedural world (corridor flights, gestures,
+//! moving targets) and [`dvs`]/[`frame`] implement the two sensor front-ends
+//! over it: a log-intensity-change event camera with threshold, refractory
+//! and background noise, and a global-shutter frame camera.
+//!
+//! The same generative models exist in `python/compile/data.py` so the
+//! accuracy experiments and the Rust end-to-end driver see statistically
+//! identical inputs.
+
+pub mod dvs;
+pub mod frame;
+pub mod scene;
+
+pub use dvs::DvsSim;
+pub use frame::FrameSensor;
+pub use scene::{Scene, SceneKind};
+
+/// DVS132S geometry as integrated on the Kraken testbed (paper §III).
+pub const DVS_WIDTH: usize = 132;
+pub const DVS_HEIGHT: usize = 128;
+
+/// HM01B0 geometry.
+pub const FRAME_WIDTH: usize = 320;
+pub const FRAME_HEIGHT: usize = 240;

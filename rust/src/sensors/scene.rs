@@ -1,0 +1,289 @@
+//! Procedural scenes: the synthetic world both sensors observe.
+//!
+//! A [`Scene`] maps normalized coordinates and time to intensity in [0, 1].
+//! Scenes are deterministic in their parameters so experiments replay
+//! exactly; stochastic elements (obstacle placement) are seeded.
+
+use crate::util::rng::Rng;
+
+/// Scene selector used by the CLI and the mission driver.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SceneKind {
+    /// Bar rotating about the optical center (gesture-like; drives high,
+    /// structured DVS activity).
+    RotatingBar { omega_rad_s: f64 },
+    /// Vertical edge translating horizontally (classic optical-flow probe).
+    TranslatingEdge { vel_per_s: f64 },
+    /// Ring expanding from the center (looming stimulus — collision cue).
+    ExpandingRing { rate_per_s: f64 },
+    /// Corridor flight: heading line + optional obstacle, with ego-motion.
+    /// This is the Fig. 2 application scene.
+    Corridor { speed_per_s: f64, seed: u64 },
+    /// Spatio-temporal noise with tunable density — used to sweep DVS
+    /// activity for Fig. 7 independent of scene structure.
+    Noise { density: f64, seed: u64 },
+}
+
+/// A procedural scene instance.
+#[derive(Debug, Clone)]
+pub struct Scene {
+    pub kind: SceneKind,
+    /// Obstacle state for Corridor (center x/y, half-size), regenerated as
+    /// the UAV passes each obstacle.
+    obstacle: (f64, f64, f64),
+    steer: f64,
+    last_lap: u64,
+    rng: Rng,
+}
+
+impl Scene {
+    pub fn new(kind: SceneKind) -> Self {
+        let seed = match kind {
+            SceneKind::Corridor { seed, .. } | SceneKind::Noise { seed, .. } => seed,
+            _ => 0,
+        };
+        let mut rng = Rng::seed_from_u64(seed ^ 0x6b72616b);
+        let steer = rng.gen_range_f64(-0.6, 0.6);
+        let obstacle = (rng.gen_range_f64(-0.25, 0.25), rng.gen_range_f64(-0.1, 0.3), 0.12);
+        Scene { kind, obstacle, steer, last_lap: 0, rng }
+    }
+
+    /// Ground-truth labels for the corridor scene at time `t_s`:
+    /// (steer angle, collision-imminent flag). Used by the accuracy checks
+    /// of the mission example.
+    pub fn corridor_truth(&self, t_s: f64) -> (f64, bool) {
+        match self.kind {
+            SceneKind::Corridor { speed_per_s, .. } => {
+                let phase = (t_s * speed_per_s).fract();
+                (self.steer, phase > 0.55 && phase < 0.95)
+            }
+            _ => (0.0, false),
+        }
+    }
+
+    /// Advance stochastic scene state to time `t_s` (corridor obstacles
+    /// re-roll when passed). Call once per rendered sample.
+    pub fn advance(&mut self, t_s: f64) {
+        if let SceneKind::Corridor { speed_per_s, seed } = self.kind {
+            let lap = (t_s * speed_per_s) as u64;
+            // new obstacle + heading each "lap" through the corridor segment
+            if lap != self.last_lap {
+                self.last_lap = lap;
+                let mut r = Rng::seed_from_u64(
+                    seed ^ lap.wrapping_mul(0x9e3779b97f4a7c15),
+                );
+                self.steer = r.gen_range_f64(-0.6, 0.6);
+                self.obstacle =
+                    (r.gen_range_f64(-0.25, 0.25), r.gen_range_f64(-0.1, 0.3), 0.12);
+                let _ = &self.rng; // rng reserved for future stochastic props
+            }
+        }
+    }
+
+    /// Intensity in [0,1] at normalized coords (x, y in [-0.5, 0.5]), time t.
+    pub fn intensity(&self, x: f64, y: f64, t_s: f64) -> f64 {
+        match self.kind {
+            SceneKind::RotatingBar { omega_rad_s } => {
+                let ang = omega_rad_s * t_s;
+                let d = (x * ang.sin() - y * ang.cos()).abs();
+                let r2 = x * x + y * y;
+                if d < 0.07 && r2 < 0.2 {
+                    1.0
+                } else {
+                    0.1
+                }
+            }
+            SceneKind::TranslatingEdge { vel_per_s } => {
+                let off = ((vel_per_s * t_s + 0.5).rem_euclid(1.0)) - 0.5;
+                if x < off {
+                    0.9
+                } else {
+                    0.1
+                }
+            }
+            SceneKind::ExpandingRing { rate_per_s } => {
+                let r0 = 0.05 + (rate_per_s * t_s).rem_euclid(0.4);
+                let r = (x * x + y * y).sqrt();
+                if r < r0 && r > r0 - 0.08 {
+                    1.0
+                } else {
+                    0.1
+                }
+            }
+            SceneKind::Corridor { speed_per_s, .. } => {
+                let phase = (t_s * speed_per_s).fract();
+                // heading line sliding toward the camera (ego-motion)
+                let d = (x - self.steer * (y + 0.5 + 0.2 * phase)).abs();
+                // beyond 3 sigma the Gaussian line contributes < 0.1% of
+                // full scale: skip the exp (render is the simulator's
+                // hottest loop — see EXPERIMENTS.md §Perf)
+                let mut i = if d < 0.30 {
+                    0.15 + 0.75 * (-d * d / 0.01).exp()
+                } else {
+                    0.15
+                };
+                // obstacle grows as the UAV approaches (looming)
+                if phase > 0.4 {
+                    let scale = (phase - 0.4) / 0.6;
+                    let (ox, oy, s) = self.obstacle;
+                    let s = s * (0.3 + 1.2 * scale);
+                    if (x - ox).abs() < s && (y - oy).abs() < s {
+                        i = 0.95;
+                    }
+                }
+                i
+            }
+            SceneKind::Noise { density, .. } => {
+                // deterministic hash noise: flickers with density `density`
+                let xi = ((x + 0.5) * 4096.0) as u64;
+                let yi = ((y + 0.5) * 4096.0) as u64;
+                let ti = (t_s * 1000.0) as u64;
+                let h = xi
+                    .wrapping_mul(0x9e3779b97f4a7c15)
+                    .wrapping_add(yi.wrapping_mul(0xbf58476d1ce4e5b9))
+                    .wrapping_add(ti.wrapping_mul(0x94d049bb133111eb));
+                let h = (h ^ (h >> 31)).wrapping_mul(0xbf58476d1ce4e5b9);
+                if ((h >> 40) as f64 / (1u64 << 24) as f64) < density {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Render a width x height intensity image at time `t_s` (row-major).
+    pub fn render(&self, width: usize, height: usize, t_s: f64) -> Vec<f32> {
+        let mut img = vec![0f32; width * height];
+        self.render_into(width, height, t_s, &mut img);
+        img
+    }
+
+    /// Render into a caller-owned buffer (no allocation — the DVS samples
+    /// at kHz rates and this is the simulator's hottest loop).
+    ///
+    /// The corridor scene (the mission workload) has a specialized row-wise
+    /// loop: per row the heading line's center is constant, so only pixels
+    /// within the line's 3-sigma support pay an `exp`, and obstacle
+    /// membership is two range checks (EXPERIMENTS.md §Perf).
+    pub fn render_into(&self, width: usize, height: usize, t_s: f64, img: &mut [f32]) {
+        assert_eq!(img.len(), width * height);
+        let inv_w = 1.0 / width as f64;
+        let inv_h = 1.0 / height as f64;
+        if let SceneKind::Corridor { speed_per_s, .. } = self.kind {
+            let phase = (t_s * speed_per_s).fract();
+            let looming = phase > 0.4;
+            let scale = if looming { (phase - 0.4) / 0.6 } else { 0.0 };
+            let (ox, oy, s0) = self.obstacle;
+            let os = s0 * (0.3 + 1.2 * scale);
+            for yy in 0..height {
+                let y = (yy as f64 + 0.5) * inv_h - 0.5;
+                let center = self.steer * (y + 0.5 + 0.2 * phase);
+                let in_obst_row = looming && (y - oy).abs() < os;
+                let row = &mut img[yy * width..(yy + 1) * width];
+                for (xx, px) in row.iter_mut().enumerate() {
+                    let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                    let d = (x - center).abs();
+                    let mut i = if d < 0.30 {
+                        0.15 + 0.75 * (-d * d / 0.01).exp()
+                    } else {
+                        0.15
+                    };
+                    if in_obst_row && (x - ox).abs() < os {
+                        i = 0.95;
+                    }
+                    *px = i as f32;
+                }
+            }
+            return;
+        }
+        for yy in 0..height {
+            let y = (yy as f64 + 0.5) * inv_h - 0.5;
+            let row = &mut img[yy * width..(yy + 1) * width];
+            for (xx, px) in row.iter_mut().enumerate() {
+                let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                *px = self.intensity(x, y, t_s) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intensities_in_range() {
+        let kinds = [
+            SceneKind::RotatingBar { omega_rad_s: 2.0 },
+            SceneKind::TranslatingEdge { vel_per_s: 0.5 },
+            SceneKind::ExpandingRing { rate_per_s: 0.3 },
+            SceneKind::Corridor { speed_per_s: 0.5, seed: 1 },
+            SceneKind::Noise { density: 0.1, seed: 2 },
+        ];
+        for kind in kinds {
+            let s = Scene::new(kind);
+            for &t in &[0.0, 0.33, 1.7] {
+                let img = s.render(16, 16, t);
+                assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)), "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotating_bar_moves() {
+        let s = Scene::new(SceneKind::RotatingBar { omega_rad_s: 3.0 });
+        let a = s.render(32, 32, 0.0);
+        let b = s.render(32, 32, 0.2);
+        let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1.0, "bar should move between samples");
+    }
+
+    #[test]
+    fn noise_density_scales_flicker() {
+        let lo = Scene::new(SceneKind::Noise { density: 0.01, seed: 0 });
+        let hi = Scene::new(SceneKind::Noise { density: 0.3, seed: 0 });
+        let mean = |s: &Scene| -> f64 {
+            let img = s.render(64, 64, 0.5);
+            img.iter().map(|&v| v as f64).sum::<f64>() / img.len() as f64
+        };
+        assert!(mean(&hi) > 5.0 * mean(&lo));
+    }
+
+    #[test]
+    fn render_deterministic() {
+        let s1 = Scene::new(SceneKind::Corridor { speed_per_s: 0.5, seed: 7 });
+        let s2 = Scene::new(SceneKind::Corridor { speed_per_s: 0.5, seed: 7 });
+        assert_eq!(s1.render(24, 24, 0.7), s2.render(24, 24, 0.7));
+    }
+
+    #[test]
+    fn specialized_corridor_render_matches_generic_path() {
+        // the row-wise fast renderer must be pixel-identical to the
+        // reference per-pixel intensity()
+        let s = Scene::new(SceneKind::Corridor { speed_per_s: 0.7, seed: 5 });
+        for &t in &[0.05, 0.3, 0.55, 0.83, 1.4] {
+            let fast = s.render(132, 128, t);
+            for yy in 0..128usize {
+                for xx in 0..132usize {
+                    let y = (yy as f64 + 0.5) / 128.0 - 0.5;
+                    let x = (xx as f64 + 0.5) / 132.0 - 0.5;
+                    let want = s.intensity(x, y, t) as f32;
+                    let got = fast[yy * 132 + xx];
+                    assert!(
+                        (want - got).abs() < 1e-6,
+                        "t={t} ({xx},{yy}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corridor_truth_flags_looming_phase() {
+        let s = Scene::new(SceneKind::Corridor { speed_per_s: 1.0, seed: 3 });
+        let (_, c0) = s.corridor_truth(0.1);
+        let (_, c1) = s.corridor_truth(0.7);
+        assert!(!c0 && c1);
+    }
+}

@@ -1,0 +1,206 @@
+//! SNE timing/energy model.
+//!
+//! The engine's defining property (paper §II.1, Fig. 7) is **energy
+//! proportionality**: COO-listed events are routed into dense bursts over
+//! the 8 slices, so both inference time and energy scale linearly with DVS
+//! activity. The model:
+//!
+//! `cycles(a) = fixed + a * E_max * cycles_per_event`
+//!
+//! with `E_max` the network's event sites per inference
+//! ([`crate::nets::SnnDesc::event_sites`]) and `cycles_per_event` fitted to
+//! the two measured Fig. 7 points (20 800 inf/s @1 %, 1 019 inf/s @20 % at
+//! 222 MHz / 0.8 V). `1/cycles_per_event ~ 7.7 events/cycle`, i.e. the 8
+//! slices retire about one event per cycle each at 96 % utilization — the
+//! "dense computational bursts" claim in micro-architectural terms.
+
+use crate::config::{SneCfg, SocConfig};
+use crate::nets::SnnDesc;
+
+/// Timing + energy for one SNE job (one inference window).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SneJobReport {
+    pub events_routed: f64,
+    pub cycles: f64,
+    pub t_s: f64,
+    pub energy_j: f64,
+    pub utilization: f64,
+}
+
+/// The SNE model.
+#[derive(Debug, Clone)]
+pub struct SneEngine {
+    pub cfg: SneCfg,
+}
+
+impl SneEngine {
+    pub fn new(cfg: &SocConfig) -> Self {
+        SneEngine { cfg: cfg.sne.clone() }
+    }
+
+    /// Peak synaptic-op throughput (SOP/cycle) across all slices.
+    pub fn peak_sops_per_cycle(&self) -> f64 {
+        self.cfg.slices as f64 * self.cfg.sops_per_cycle_per_slice
+    }
+
+    /// Cycles to process `events` routed events.
+    pub fn cycles_for_events(&self, events: f64) -> f64 {
+        self.cfg.fixed_cycles + events * self.cfg.cycles_per_event
+    }
+
+    /// Full job report for one inference of `net` at DVS activity `a`,
+    /// running at voltage `v` (clock = domain max at `v`).
+    pub fn inference(&self, net: &SnnDesc, a: f64, v: f64) -> SneJobReport {
+        let f = self.cfg.domain.f_at(v);
+        let events = a.clamp(0.0, 1.0) * net.event_sites() as f64;
+        let cycles = self.cycles_for_events(events);
+        let t_s = cycles / f;
+        // busy power while the burst engine runs; energy proportionality
+        // comes from t_s itself scaling with events.
+        let p = self.cfg.domain.p_dyn(v, f, 1.0) + self.cfg.domain.p_leak(v);
+        SneJobReport {
+            events_routed: events,
+            cycles,
+            t_s,
+            energy_j: p * t_s,
+            utilization: 1.0,
+        }
+    }
+
+    /// Inferences per second at activity `a` (Fig. 7 top).
+    pub fn inf_per_s(&self, net: &SnnDesc, a: f64, v: f64) -> f64 {
+        1.0 / self.inference(net, a, v).t_s
+    }
+
+    /// Energy per inference at activity `a` (Fig. 7 bottom), Joules.
+    pub fn energy_per_inf(&self, net: &SnnDesc, a: f64, v: f64) -> f64 {
+        self.inference(net, a, v).energy_j
+    }
+
+    /// Synaptic-op efficiency (SOP/s/W) with the burst pipeline saturated,
+    /// at voltage `v` — the Fig. 6 comparison number.
+    pub fn efficiency_sops_per_w(&self, v: f64) -> f64 {
+        let f = self.cfg.domain.f_at(v);
+        let p = self.cfg.domain.p_dyn(v, f, 1.0) + self.cfg.domain.p_leak(v);
+        self.peak_sops_per_cycle() * f / p
+    }
+
+    /// Best-efficiency point over the DVFS range: (voltage, SOP/s/W).
+    pub fn best_efficiency(&self) -> (f64, f64) {
+        let mut best = (crate::config::VDD_MIN, 0.0);
+        for i in 0..=60 {
+            let v = crate::config::VDD_MIN
+                + (crate::config::VDD_MAX - crate::config::VDD_MIN) * i as f64 / 60.0;
+            let e = self.efficiency_sops_per_w(v);
+            if e > best.1 {
+                best = (v, e);
+            }
+        }
+        best
+    }
+
+    /// Does one tile of `neurons` 8-bit membrane states fit the slice-local
+    /// state memories? FireNet at full DVS resolution does not fit at once;
+    /// the coordinator tiles it (`plan_tiles`).
+    pub fn fits_state_mem(&self, neurons: usize) -> bool {
+        neurons * (self.cfg.state_bits as usize) / 8
+            <= self.cfg.slices * self.cfg.state_mem_per_slice
+    }
+
+    /// Minimum number of spatial tiles so each tile's membranes fit the
+    /// slice memories.
+    pub fn plan_tiles(&self, net: &SnnDesc) -> usize {
+        let cap = self.cfg.slices * self.cfg.state_mem_per_slice;
+        let need = net.state_bytes();
+        need.div_ceil(cap)
+    }
+
+    /// Do the 4-bit weights fit the dedicated weight buffer?
+    pub fn fits_weight_buf(&self, net: &SnnDesc) -> bool {
+        net.weight_bytes() <= self.cfg.weight_buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    fn eng() -> SneEngine {
+        SneEngine::new(&SocConfig::kraken())
+    }
+
+    #[test]
+    fn fig7_anchor_points() {
+        let e = eng();
+        let net = nets::firenet_paper();
+        let r1 = e.inf_per_s(&net, 0.01, 0.8);
+        let r20 = e.inf_per_s(&net, 0.20, 0.8);
+        assert!((r1 - 20800.0).abs() / 20800.0 < 0.02, "1% -> {r1} inf/s");
+        assert!((r20 - 1019.0).abs() / 1019.0 < 0.02, "20% -> {r20} inf/s");
+    }
+
+    #[test]
+    fn energy_proportionality() {
+        let e = eng();
+        let net = nets::firenet_paper();
+        let e1 = e.energy_per_inf(&net, 0.01, 0.8);
+        let e10 = e.energy_per_inf(&net, 0.10, 0.8);
+        let e20 = e.energy_per_inf(&net, 0.20, 0.8);
+        // linear in activity (fixed_cycles = 0 in the fitted model)
+        assert!((e10 / e1 - 10.0).abs() < 0.2);
+        assert!((e20 / e10 - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn busy_power_is_98mw() {
+        let e = eng();
+        let net = nets::firenet_paper();
+        let r = e.inference(&net, 0.2, 0.8);
+        let p = r.energy_j / r.t_s;
+        assert!((p - 0.098).abs() < 0.002, "busy power {p} W");
+    }
+
+    #[test]
+    fn slices_retire_about_one_event_per_cycle() {
+        let e = eng();
+        let events_per_cycle = 1.0 / e.cfg.cycles_per_event;
+        assert!(events_per_cycle > 6.0 && events_per_cycle < 8.0);
+    }
+
+    #[test]
+    fn best_efficiency_near_1_tsops_at_low_voltage() {
+        let e = eng();
+        let (v, eff) = e.best_efficiency();
+        assert!(v < 0.55, "best point at low voltage, got {v}");
+        assert!(
+            (eff - 1.1e12).abs() / 1.1e12 < 0.05,
+            "SNE best efficiency {:.3e} SOP/s/W",
+            eff
+        );
+    }
+
+    #[test]
+    fn firenet_needs_tiling_gesture_headroom() {
+        let e = eng();
+        let f = nets::firenet_paper();
+        assert!(!e.fits_state_mem(f.total_neurons()));
+        let tiles = e.plan_tiles(&f);
+        assert!(tiles > 1 && tiles < 40, "tiles = {tiles}");
+        // 4-bit weights of FireNet fit the 9.2 kB buffer
+        assert!(e.fits_weight_buf(&f), "{} B", f.weight_bytes());
+    }
+
+    #[test]
+    fn throughput_monotone_decreasing_in_activity() {
+        let e = eng();
+        let net = nets::firenet_paper();
+        let mut last = f64::INFINITY;
+        for i in 1..=30 {
+            let a = i as f64 / 100.0;
+            let r = e.inf_per_s(&net, a, 0.8);
+            assert!(r < last);
+            last = r;
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! SNE network mapper: fitting a spiking CNN onto the engine's physical
+//! resources (8 slices x 8 KiB neuron-state SRAM, 9.2 kB weight buffer).
+//!
+//! LIF-FireNet at full DVS resolution holds ~1.6 M 8-bit membranes — 25x
+//! the slice memories — so the FC firmware processes the frame in spatial
+//! tiles, swapping membrane state through L2 between bursts. The mapper
+//! plans that tiling and prices the extra DMA traffic, which is how the
+//! coordinator knows the state-swap overhead the paper's "low-memory
+//! footprint" network keeps small.
+
+use crate::config::{SneCfg, SocConfig};
+use crate::nets::SnnDesc;
+use crate::soc::interconnect::Dma;
+
+/// A planned mapping of one SNN onto the SNE.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SneMapping {
+    /// Spatial tiles per timestep (1 = fully resident).
+    pub tiles: usize,
+    /// Neurons per tile (last tile may be smaller).
+    pub neurons_per_tile: usize,
+    /// 8-bit state bytes swapped L2<->SNE per inference (both directions).
+    pub state_swap_bytes: u64,
+    /// Do the 4-bit weights fit the dedicated buffer without reloads?
+    pub weights_resident: bool,
+}
+
+/// Plan the tiling of `net` on an engine with config `cfg`.
+pub fn plan(cfg: &SneCfg, net: &SnnDesc) -> SneMapping {
+    let state_cap = cfg.slices * cfg.state_mem_per_slice; // bytes, 8-bit states
+    let total_state = net.state_bytes();
+    let tiles = total_state.div_ceil(state_cap).max(1);
+    let neurons_per_tile = net.total_neurons().div_ceil(tiles);
+    // every tile's membranes stream in and out once per timestep, except
+    // when fully resident (tiles == 1: state never leaves the engine)
+    let swap = if tiles == 1 {
+        0
+    } else {
+        (total_state as u64) * 2 * net.timesteps as u64
+    };
+    SneMapping {
+        tiles,
+        neurons_per_tile,
+        state_swap_bytes: swap,
+        weights_resident: net.weight_bytes() <= cfg.weight_buf,
+    }
+}
+
+/// Extra wall-clock (seconds) per inference spent on state swapping, given
+/// the fabric DMA and clock. The engine double-buffers tiles, so only the
+/// non-overlapped fraction shows; we price the worst case (no overlap) and
+/// let callers treat it as an upper bound.
+pub fn swap_time_s(mapping: &SneMapping, dma: &Dma, fabric_hz: f64) -> f64 {
+    if mapping.state_swap_bytes == 0 {
+        return 0.0;
+    }
+    let cycles = dma.transfer_cycles(mapping.state_swap_bytes as usize);
+    cycles / fabric_hz
+}
+
+/// Fraction of inference time lost to state swapping for `net` at DVS
+/// activity `a` — the number that justifies "low-memory footprint" nets.
+pub fn swap_overhead_fraction(soc: &SocConfig, net: &SnnDesc, a: f64) -> f64 {
+    let engine = crate::sne::SneEngine::new(soc);
+    let mapping = plan(&soc.sne, net);
+    let dma = Dma::new(soc.fabric.dma_channels, soc.fabric.bus_bytes_per_cycle);
+    let swap = swap_time_s(&mapping, &dma, soc.fabric.domain.f_max);
+    let inf = engine.inference(net, a, 0.8).t_s;
+    swap / (swap + inf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    #[test]
+    fn firenet_needs_many_tiles() {
+        let cfg = SocConfig::kraken();
+        let m = plan(&cfg.sne, &nets::firenet_paper());
+        assert!(m.tiles > 10 && m.tiles < 40, "{}", m.tiles);
+        assert!(m.weights_resident, "FireNet 4-bit weights fit 9.2 kB");
+        assert!(m.state_swap_bytes > 0);
+    }
+
+    #[test]
+    fn small_net_fully_resident() {
+        let cfg = SocConfig::kraken();
+        let net = SnnDesc {
+            name: "tiny".into(),
+            layers: vec![nets::ConvLayer::new(2, 8, 64, 64, 3)],
+            in_w: 64,
+            in_h: 64,
+            in_ch: 2,
+            timesteps: 5,
+        };
+        let m = plan(&cfg.sne, &net);
+        assert_eq!(m.tiles, 1);
+        assert_eq!(m.state_swap_bytes, 0);
+    }
+
+    #[test]
+    fn swap_overhead_shrinks_with_activity() {
+        // The un-overlapped upper bound is large for full-resolution
+        // FireNet (25x oversubscribed state) — on silicon this traffic
+        // hides behind the event bursts via double buffering and lazy
+        // decay, and the *measured* Fig. 7 rates (which our calibrated
+        // cycles/event reproduces) already include it. What the mapper
+        // exposes is the relative story: the bound is worst exactly where
+        // energy-proportional engines are best (low activity), which is
+        // why the paper leads with a "low-memory footprint" network.
+        let cfg = SocConfig::kraken();
+        let f = nets::firenet_paper();
+        let at20 = swap_overhead_fraction(&cfg, &f, 0.20);
+        let at01 = swap_overhead_fraction(&cfg, &f, 0.001);
+        assert!(at01 > at20, "{at01} vs {at20}");
+        assert!(at01 > 0.9, "at near-zero activity swapping dominates");
+    }
+
+    #[test]
+    fn tile_count_scales_with_resolution() {
+        let cfg = SocConfig::kraken();
+        let small = nets::firenet_artifact(); // 64x64
+        let big = nets::firenet_paper(); // 132x128
+        assert!(plan(&cfg.sne, &big).tiles > plan(&cfg.sne, &small).tiles);
+    }
+}

@@ -1,0 +1,14 @@
+//! SNE — the Sparse Neural Engine (event-driven SCNN accelerator).
+//!
+//! * [`lif`] — the functional LIF dynamics (bit-faithful mirror of the
+//!   Pallas kernel; used by proptests and as a no-artifact fallback).
+//! * [`engine`] — the timing/energy model: COO events -> dense bursts over
+//!   8 slices, energy proportional to routed events (Fig. 7).
+//! * [`mapper`] — tiling planner: fitting networks onto the 8x8 KiB
+//!   neuron-state memories + 9.2 kB weight buffer (state-swap pricing).
+
+pub mod engine;
+pub mod lif;
+pub mod mapper;
+
+pub use engine::{SneEngine, SneJobReport};

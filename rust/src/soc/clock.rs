@@ -1,0 +1,77 @@
+//! Simulated time base.
+//!
+//! The whole SoC model advances a single nanosecond-resolution virtual
+//! clock; per-domain cycle counts convert through each domain's frequency.
+//! Simulated time is fully decoupled from wall-clock time — the mission
+//! example typically runs faster than real time (see EXPERIMENTS.md §Perf).
+
+/// Global simulated clock (ns since boot).
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now_ns: u64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { now_ns: 0 }
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.now_ns as f64 * 1e-9
+    }
+
+    /// Advance by `dt_ns`.
+    pub fn advance_ns(&mut self, dt_ns: u64) {
+        self.now_ns += dt_ns;
+    }
+
+    /// Advance to an absolute timestamp (monotone; late timestamps clamp).
+    pub fn advance_to(&mut self, t_ns: u64) {
+        self.now_ns = self.now_ns.max(t_ns);
+    }
+}
+
+/// Convert a cycle count at frequency `f_hz` to nanoseconds (rounded up —
+/// the hardware can't finish mid-cycle).
+pub fn cycles_to_ns(cycles: f64, f_hz: f64) -> u64 {
+    assert!(f_hz > 0.0);
+    (cycles / f_hz * 1e9).ceil() as u64
+}
+
+/// Convert a duration to whole cycles at `f_hz` (truncating).
+pub fn ns_to_cycles(ns: u64, f_hz: f64) -> u64 {
+    (ns as f64 * 1e-9 * f_hz) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = SimClock::new();
+        c.advance_ns(100);
+        c.advance_to(50); // must not go backwards
+        assert_eq!(c.now_ns(), 100);
+        c.advance_to(250);
+        assert_eq!(c.now_ns(), 250);
+    }
+
+    #[test]
+    fn cycle_conversions_roundtrip() {
+        let f = 330.0e6;
+        let ns = cycles_to_ns(330.0, f);
+        assert_eq!(ns, 1000);
+        assert_eq!(ns_to_cycles(1000, f), 330);
+    }
+
+    #[test]
+    fn cycles_round_up() {
+        // 1 cycle at 333 MHz = 3.003 ns -> 4 ns when rounded to whole ns
+        assert_eq!(cycles_to_ns(1.0, 333.0e6), 4);
+    }
+}

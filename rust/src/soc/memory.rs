@@ -1,0 +1,173 @@
+//! On-chip scratchpad models: the 1 MiB L2 and the 128 KiB single-cycle L1
+//! TCDM shared by the PULP cores.
+//!
+//! Two concerns:
+//! * **occupancy** — a named-segment bump allocator so the coordinator can
+//!   prove working sets fit (weights staged in L2, tiles in L1); going over
+//!   capacity is a hard error, exactly like linking firmware for the chip.
+//! * **timing** — word-interleaved banking with an analytical contention
+//!   model: `n` requesters over `b` banks; expected serialization per access
+//!   follows the classic balls-in-bins expectation.
+
+use std::collections::HashMap;
+
+/// A named allocation in a scratchpad.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Banked scratchpad SRAM.
+#[derive(Debug, Clone)]
+pub struct Scratchpad {
+    pub name: String,
+    pub bytes: usize,
+    pub banks: usize,
+    pub word_bytes: usize,
+    cursor: usize,
+    segments: HashMap<String, Segment>,
+}
+
+impl Scratchpad {
+    pub fn new(name: &str, bytes: usize, banks: usize, word_bytes: usize) -> Self {
+        assert!(banks > 0 && bytes % banks == 0, "bytes must split over banks");
+        Scratchpad {
+            name: name.to_string(),
+            bytes,
+            banks,
+            word_bytes,
+            cursor: 0,
+            segments: HashMap::new(),
+        }
+    }
+
+    /// Allocate a named segment; errors if capacity is exceeded or the name
+    /// already exists.
+    pub fn alloc(&mut self, name: &str, size: usize) -> crate::Result<Segment> {
+        anyhow::ensure!(
+            !self.segments.contains_key(name),
+            "{}: segment '{name}' already allocated",
+            self.name
+        );
+        // word-align
+        let size_al = size.div_ceil(self.word_bytes) * self.word_bytes;
+        anyhow::ensure!(
+            self.cursor + size_al <= self.bytes,
+            "{}: out of memory allocating '{name}' ({size} B; {} B free)",
+            self.name,
+            self.bytes - self.cursor
+        );
+        let seg = Segment { offset: self.cursor, size: size_al };
+        self.cursor += size_al;
+        self.segments.insert(name.to_string(), seg.clone());
+        Ok(seg)
+    }
+
+    /// Free all segments (mission phase change).
+    pub fn clear(&mut self) {
+        self.cursor = 0;
+        self.segments.clear();
+    }
+
+    pub fn used(&self) -> usize {
+        self.cursor
+    }
+
+    pub fn free(&self) -> usize {
+        self.bytes - self.cursor
+    }
+
+    pub fn segment(&self, name: &str) -> Option<&Segment> {
+        self.segments.get(name)
+    }
+
+    /// Expected cycles for `words` word-accesses issued by `requesters`
+    /// concurrent masters under random bank mapping.
+    ///
+    /// With `r` requesters and `b` banks, the expected number of requests
+    /// landing on the busiest bank per cycle-slot governs serialization; we
+    /// use the standard approximation `stall factor = r / (b * (1 - (1-1/b)^r))`
+    /// i.e. the inverse of expected bank utilization — exact for r=1
+    /// (factor 1) and asymptotically correct for r >> b.
+    pub fn access_cycles(&self, words: usize, requesters: usize) -> f64 {
+        if words == 0 {
+            return 0.0;
+        }
+        let r = requesters.max(1) as f64;
+        let b = self.banks as f64;
+        let busy_frac = 1.0 - (1.0 - 1.0 / b).powf(r);
+        let throughput_words_per_cycle = (b * busy_frac).min(r);
+        words as f64 / throughput_words_per_cycle * (r / r) // per-master total
+    }
+
+    /// Stall factor >= 1: average slowdown per access vs conflict-free.
+    pub fn contention_factor(&self, requesters: usize) -> f64 {
+        let r = requesters.max(1) as f64;
+        let b = self.banks as f64;
+        let busy_frac = 1.0 - (1.0 - 1.0 / b).powf(r);
+        r / (b * busy_frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l1() -> Scratchpad {
+        Scratchpad::new("L1", 128 * 1024, 16, 4)
+    }
+
+    #[test]
+    fn alloc_and_overflow() {
+        let mut m = l1();
+        let a = m.alloc("weights", 64 * 1024).unwrap();
+        assert_eq!(a.offset, 0);
+        assert!(m.alloc("too_big", 128 * 1024).is_err());
+        let b = m.alloc("acts", 32 * 1024).unwrap();
+        assert_eq!(b.offset, 64 * 1024);
+        assert_eq!(m.used(), 96 * 1024);
+        m.clear();
+        assert_eq!(m.free(), 128 * 1024);
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut m = l1();
+        m.alloc("x", 1024).unwrap();
+        assert!(m.alloc("x", 1024).is_err());
+    }
+
+    #[test]
+    fn word_alignment() {
+        let mut m = l1();
+        let s = m.alloc("odd", 5).unwrap();
+        assert_eq!(s.size, 8);
+    }
+
+    #[test]
+    fn single_master_no_contention() {
+        let m = l1();
+        assert!((m.contention_factor(1) - 1.0).abs() < 1e-12);
+        assert!((m.access_cycles(100, 1) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_grows_with_requesters() {
+        let m = l1();
+        let f1 = m.contention_factor(1);
+        let f8 = m.contention_factor(8);
+        let f32 = m.contention_factor(32);
+        assert!(f1 < f8 && f8 < f32);
+        // 8 cores on 16 banks: mild contention, well under 1.5x
+        assert!(f8 < 1.4, "8-on-16 contention factor {f8}");
+    }
+
+    #[test]
+    fn throughput_capped_by_banks() {
+        let m = Scratchpad::new("t", 1024, 4, 4);
+        // many requesters: at most `banks` words per cycle
+        let cycles = m.access_cycles(400, 64);
+        assert!(cycles >= 100.0, "4 banks -> >= 100 cycles for 400 words");
+    }
+}

@@ -1,0 +1,127 @@
+//! The SoC substrate: everything on the die that is not an engine.
+//!
+//! * [`clock`] — simulated time base and per-domain clocks.
+//! * [`power`] — power domains, DVFS, power gating, the energy ledger.
+//! * [`memory`] — L2/L1 scratchpad models (banking, contention, occupancy).
+//! * [`interconnect`] — bus + DMA timing.
+//! * [`fc`] — the fabric-controller job model (offload descriptors).
+//! * [`peripherals`] — QSPI/I2C/UART/GPIO/CPI/AER front-ends.
+//!
+//! [`Soc`] composes all of it per the Fig. 1 block diagram and exposes the
+//! handful of operations the coordinator needs: power domains up/down, DVFS,
+//! DMA staging, and energy accounting against simulated time.
+
+pub mod clock;
+pub mod fc;
+pub mod interconnect;
+pub mod memory;
+pub mod peripherals;
+pub mod power;
+
+use crate::config::SocConfig;
+use power::{DomainId, PowerManager};
+
+/// The composed SoC model.
+#[derive(Debug)]
+pub struct Soc {
+    pub cfg: SocConfig,
+    pub power: PowerManager,
+    pub l2: memory::Scratchpad,
+    pub l1: memory::Scratchpad,
+    pub dma: interconnect::Dma,
+    pub fc: fc::FabricController,
+    pub clock: clock::SimClock,
+}
+
+impl Soc {
+    /// Build and validate a SoC from `cfg`. All engine domains come up
+    /// gated (as after reset on the real chip); the fabric is running.
+    pub fn new(cfg: SocConfig) -> Self {
+        cfg.validate().expect("invalid SoC config");
+        let power = PowerManager::new(&cfg);
+        let l2 = memory::Scratchpad::new("L2", cfg.fabric.l2_bytes, cfg.fabric.l2_banks, 4);
+        let l1 = memory::Scratchpad::new("L1", cfg.pulp.l1_bytes, cfg.pulp.l1_banks, 4);
+        let dma = interconnect::Dma::new(
+            cfg.fabric.dma_channels,
+            cfg.fabric.bus_bytes_per_cycle,
+        );
+        Soc {
+            power,
+            l2,
+            l1,
+            dma,
+            fc: fc::FabricController::new(),
+            clock: clock::SimClock::new(),
+            cfg,
+        }
+    }
+
+    /// Ungate every engine domain (mission start).
+    pub fn power_on_all(&mut self) {
+        for d in [DomainId::Sne, DomainId::Cutie, DomainId::Pulp] {
+            self.power.ungate(d);
+        }
+    }
+
+    /// Human-readable implementation report (the Fig. 5 table, `kraken
+    /// report soc`).
+    pub fn report(&self) -> String {
+        let c = &self.cfg;
+        let mut s = String::new();
+        s.push_str(&format!("{:<26}{}\n", "Technology", c.technology));
+        s.push_str(&format!("{:<26}{} mm^2\n", "Chip area", c.die_area_mm2));
+        s.push_str(&format!("{:<26}{} KiB\n", "L2 memory (SRAM)", c.fabric.l2_bytes / 1024));
+        s.push_str(&format!("{:<26}{} KiB\n", "L1 memory (SRAM)", c.pulp.l1_bytes / 1024));
+        s.push_str(&format!("{:<26}{:.1} V - {:.1} V\n", "VDD range", crate::config::VDD_MIN, crate::config::VDD_MAX));
+        s.push_str(&format!("{:<26}{:.0} MHz\n", "Cluster max freq", c.pulp.domain.f_max / 1e6));
+        s.push_str(&format!("{:<26}{:.0} MHz\n", "SNE max freq", c.sne.domain.f_max / 1e6));
+        s.push_str(&format!("{:<26}{:.0} MHz\n", "CUTIE max freq", c.cutie.domain.f_max / 1e6));
+        s.push_str(&format!("{:<26}{:.0} MHz\n", "FC max freq", c.fabric.domain.f_max / 1e6));
+        // deep idle: engines power-gated (no leakage through the header
+        // switches), FC clocked down, SRAM in retention
+        let p_min = c.fabric.domain.p_dyn(0.5, 100.0e6, 0.0)
+            + c.fabric.domain.p_leak(0.5)
+            + crate::config::SRAM_RETENTION_W;
+        let p_max = c.sne.domain.p_dyn(0.8, c.sne.domain.f_max, 1.0)
+            + c.cutie.domain.p_dyn(0.8, c.cutie.domain.f_max, 1.0)
+            + c.pulp.domain.p_dyn(0.8, c.pulp.domain.f_max, 1.0)
+            + c.fabric.domain.p_dyn(0.8, c.fabric.domain.f_max, 1.0)
+            + c.leakage_floor(0.8);
+        s.push_str(&format!("{:<26}{:.1} mW - {:.0} mW\n", "Power range", p_min * 1e3, p_max * 1e3));
+        s.push_str(&format!(
+            "{:<26}{} QSPI, {} I2C, {} UART, {} GPIO\n",
+            "Peripherals", c.fabric.n_qspi, c.fabric.n_i2c, c.fabric.n_uart, c.fabric.n_gpio
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soc_builds_and_reports() {
+        let soc = Soc::new(SocConfig::kraken());
+        let r = soc.report();
+        assert!(r.contains("1024 KiB"));
+        assert!(r.contains("128 KiB"));
+        assert!(r.contains("330 MHz"));
+    }
+
+    #[test]
+    fn engines_start_gated() {
+        let soc = Soc::new(SocConfig::kraken());
+        assert!(soc.power.is_gated(DomainId::Sne));
+        assert!(soc.power.is_gated(DomainId::Cutie));
+        assert!(soc.power.is_gated(DomainId::Pulp));
+        assert!(!soc.power.is_gated(DomainId::Fabric));
+    }
+
+    #[test]
+    fn power_on_all_ungates() {
+        let mut soc = Soc::new(SocConfig::kraken());
+        soc.power_on_all();
+        assert!(!soc.power.is_gated(DomainId::Sne));
+    }
+}

@@ -1,0 +1,118 @@
+//! Peripheral front-ends (Fig. 1): QSPI, I2C, UART, GPIO, the CPI camera
+//! interface carrying HM01B0 frames, and the AER interface carrying DVS
+//! events.
+//!
+//! Each peripheral contributes transfer latency (it gates when sensor data
+//! becomes visible to the FC) and a small fabric-power adder. The two
+//! sensor interfaces are the ones that matter for the application; the
+//! others exist for completeness of the SoC model and for the boot/config
+//! sequences in the examples.
+
+
+/// Peripheral kinds with their line rates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Peripheral {
+    /// Quad SPI at `hz` serial clock, 4 data lines.
+    Qspi { hz: f64 },
+    /// I2C at `hz` (config plane for the sensors).
+    I2c { hz: f64 },
+    /// UART at `baud` (telemetry downlink).
+    Uart { baud: f64 },
+    /// Camera parallel interface: one 8-bit pixel per `pclk_hz` cycle.
+    Cpi { pclk_hz: f64 },
+    /// Address-event interface: `max_eps` events/second, 4 bytes/event.
+    Aer { max_eps: f64 },
+}
+
+impl Peripheral {
+    /// Sustained payload bandwidth (bytes/s).
+    pub fn bandwidth_bps(&self) -> f64 {
+        match *self {
+            Peripheral::Qspi { hz } => hz * 4.0 / 8.0,
+            Peripheral::I2c { hz } => hz / 9.0, // 8 data bits + ack
+            Peripheral::Uart { baud } => baud / 10.0, // 8N1
+            Peripheral::Cpi { pclk_hz } => pclk_hz,
+            Peripheral::Aer { max_eps } => max_eps * 4.0,
+        }
+    }
+
+    /// Time (ns) to move `bytes` across this peripheral.
+    pub fn transfer_ns(&self, bytes: usize) -> u64 {
+        (bytes as f64 / self.bandwidth_bps() * 1e9).ceil() as u64
+    }
+
+    /// Active-power adder while transferring (W) — pads + PHY.
+    pub fn active_power_w(&self) -> f64 {
+        match *self {
+            Peripheral::Qspi { .. } => 0.0008,
+            Peripheral::I2c { .. } => 0.0001,
+            Peripheral::Uart { .. } => 0.0001,
+            Peripheral::Cpi { .. } => 0.0012,
+            Peripheral::Aer { .. } => 0.0006,
+        }
+    }
+}
+
+/// The Kraken testbed's sensor wiring (paper §III).
+pub struct SensorPorts {
+    pub cpi: Peripheral,
+    pub aer: Peripheral,
+}
+
+impl Default for SensorPorts {
+    fn default() -> Self {
+        SensorPorts {
+            // HM01B0 QVGA @ 30 fps needs ~2.3 MB/s; PCLK 12 MHz is ample
+            cpi: Peripheral::Cpi { pclk_hz: 12.0e6 },
+            // DVS132S peaks near 1 Mevent/s class rates
+            aer: Peripheral::Aer { max_eps: 1.0e6 },
+        }
+    }
+}
+
+/// Can this AER link sustain `eps` events/second?
+pub fn aer_sustains(aer: &Peripheral, eps: f64) -> bool {
+    match *aer {
+        Peripheral::Aer { max_eps } => eps <= max_eps,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qvga_frame_fits_30fps_over_cpi() {
+        let ports = SensorPorts::default();
+        let frame_ns = ports.cpi.transfer_ns(320 * 240);
+        assert!(
+            frame_ns < 33_000_000,
+            "CPI frame {frame_ns} ns must beat the 33 ms frame period"
+        );
+    }
+
+    #[test]
+    fn aer_headroom_at_typical_activity() {
+        let ports = SensorPorts::default();
+        // 20% activity on 132x128 at 100 windows/s ~ 0.34 Mev/s
+        let eps = 0.2 * (132.0 * 128.0) * 100.0;
+        assert!(aer_sustains(&ports.aer, eps));
+        assert!(!aer_sustains(&ports.aer, 2.0e6));
+    }
+
+    #[test]
+    fn uart_is_slowest() {
+        let uart = Peripheral::Uart { baud: 115_200.0 };
+        let qspi = Peripheral::Qspi { hz: 50.0e6 };
+        assert!(uart.bandwidth_bps() < qspi.bandwidth_bps() / 100.0);
+    }
+
+    #[test]
+    fn i2c_config_writes_are_quick() {
+        let i2c = Peripheral::I2c { hz: 400_000.0 };
+        // a 64-register sensor init (2 bytes each)
+        let ns = i2c.transfer_ns(128);
+        assert!(ns < 5_000_000, "sensor init {ns} ns");
+    }
+}

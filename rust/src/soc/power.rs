@@ -1,0 +1,268 @@
+//! Power domains, DVFS, power gating and the energy ledger.
+//!
+//! The die has four power domains (Fig. 3): SNE, CUTIE, the PULP cluster,
+//! and the always-on fabric (FC + L2 + peripherals). Each engine domain can
+//! be independently power-gated; voltage is shared (single rail, as on the
+//! measured silicon) and scales 0.5–0.8 V.
+//!
+//! Power model per domain (DESIGN.md §4):
+//!
+//! `P = c_eff * V^2 * f * u_eff + leak_per_v * V`     (busy utilization u)
+//!
+//! The [`EnergyLedger`] integrates per-domain power over simulated-time
+//! intervals reported by the coordinator; every Joule in EXPERIMENTS.md
+//! flows through here.
+
+
+use crate::config::{DomainCfg, SocConfig, VDD_MAX, VDD_MIN};
+
+/// The four power domains of the Kraken die.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DomainId {
+    Sne,
+    Cutie,
+    Pulp,
+    Fabric,
+}
+
+impl DomainId {
+    pub const ALL: [DomainId; 4] =
+        [DomainId::Sne, DomainId::Cutie, DomainId::Pulp, DomainId::Fabric];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            DomainId::Sne => "sne",
+            DomainId::Cutie => "cutie",
+            DomainId::Pulp => "pulp",
+            DomainId::Fabric => "fabric",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            DomainId::Sne => 0,
+            DomainId::Cutie => 1,
+            DomainId::Pulp => 2,
+            DomainId::Fabric => 3,
+        }
+    }
+}
+
+/// Live state of one domain.
+#[derive(Debug, Clone)]
+struct DomainState {
+    cfg: DomainCfg,
+    gated: bool,
+    /// Current clock (Hz); clamped to `cfg.f_at(v)` on DVFS changes.
+    f_hz: f64,
+}
+
+/// Per-domain energy totals (J) plus busy time (s).
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    pub energy_j: [f64; 4],
+    pub busy_s: [f64; 4],
+    pub total_s: f64,
+}
+
+impl EnergyLedger {
+    pub fn total_j(&self) -> f64 {
+        self.energy_j.iter().sum()
+    }
+
+    /// Average SoC power over the ledger's lifetime (W).
+    pub fn avg_power_w(&self) -> f64 {
+        if self.total_s > 0.0 {
+            self.total_j() / self.total_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn energy_of(&self, d: DomainId) -> f64 {
+        self.energy_j[d.index()]
+    }
+}
+
+/// Owns domain states, applies DVFS/gating, accounts energy.
+#[derive(Debug)]
+pub struct PowerManager {
+    vdd: f64,
+    domains: [DomainState; 4],
+    pub ledger: EnergyLedger,
+}
+
+impl PowerManager {
+    pub fn new(cfg: &SocConfig) -> Self {
+        let mk = |d: &DomainCfg, gated: bool| DomainState {
+            cfg: d.clone(),
+            gated,
+            f_hz: d.f_at(cfg.vdd),
+        };
+        PowerManager {
+            vdd: cfg.vdd,
+            domains: [
+                mk(&cfg.sne.domain, true),
+                mk(&cfg.cutie.domain, true),
+                mk(&cfg.pulp.domain, true),
+                mk(&cfg.fabric.domain, false),
+            ],
+            ledger: EnergyLedger::default(),
+        }
+    }
+
+    pub fn vdd(&self) -> f64 {
+        self.vdd
+    }
+
+    /// Set the shared rail voltage; all domain clocks re-clamp to their
+    /// maximum at the new voltage (the FC firmware does the same).
+    pub fn set_vdd(&mut self, v: f64) {
+        let v = v.clamp(VDD_MIN, VDD_MAX);
+        self.vdd = v;
+        for d in &mut self.domains {
+            d.f_hz = d.cfg.f_at(v);
+        }
+    }
+
+    /// Current clock of a domain (Hz). Zero when gated.
+    pub fn freq(&self, id: DomainId) -> f64 {
+        let d = &self.domains[id.index()];
+        if d.gated {
+            0.0
+        } else {
+            d.f_hz
+        }
+    }
+
+    /// Request a specific clock (clamped to the voltage-limited maximum).
+    pub fn set_freq(&mut self, id: DomainId, f_hz: f64) {
+        let v = self.vdd;
+        let d = &mut self.domains[id.index()];
+        d.f_hz = f_hz.clamp(0.0, d.cfg.f_at(v));
+    }
+
+    pub fn is_gated(&self, id: DomainId) -> bool {
+        self.domains[id.index()].gated
+    }
+
+    pub fn gate(&mut self, id: DomainId) {
+        assert!(id != DomainId::Fabric, "fabric domain is always-on");
+        self.domains[id.index()].gated = true;
+    }
+
+    pub fn ungate(&mut self, id: DomainId) {
+        self.domains[id.index()].gated = false;
+    }
+
+    /// Instantaneous power of one domain at utilization `u` (W).
+    pub fn domain_power(&self, id: DomainId, u: f64) -> f64 {
+        let d = &self.domains[id.index()];
+        if d.gated {
+            return 0.0; // header switch off: no leakage either
+        }
+        d.cfg.p_dyn(self.vdd, d.f_hz, u) + d.cfg.p_leak(self.vdd)
+    }
+
+    /// Whole-SoC power given per-domain utilizations indexed by
+    /// `DomainId::ALL` order (W).
+    pub fn soc_power(&self, utils: [f64; 4]) -> f64 {
+        DomainId::ALL
+            .iter()
+            .zip(utils)
+            .map(|(&id, u)| self.domain_power(id, u))
+            .sum()
+    }
+
+    /// Account `dt_s` of simulated time on domain `id` at utilization `u`.
+    pub fn account(&mut self, id: DomainId, u: f64, dt_s: f64) {
+        debug_assert!(dt_s >= 0.0);
+        let p = self.domain_power(id, u);
+        let i = id.index();
+        self.ledger.energy_j[i] += p * dt_s;
+        if u > 0.0 {
+            self.ledger.busy_s[i] += dt_s;
+        }
+    }
+
+    /// Advance the ledger's wall of simulated time (call once per interval,
+    /// after the per-domain `account` calls for that interval).
+    pub fn advance_time(&mut self, dt_s: f64) {
+        self.ledger.total_s += dt_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pm() -> PowerManager {
+        PowerManager::new(&SocConfig::kraken())
+    }
+
+    #[test]
+    fn gated_domain_draws_nothing() {
+        let p = pm();
+        assert_eq!(p.domain_power(DomainId::Sne, 1.0), 0.0);
+        assert!(p.domain_power(DomainId::Fabric, 0.0) > 0.0);
+    }
+
+    #[test]
+    fn ungated_busy_power_matches_anchor() {
+        let mut p = pm();
+        p.ungate(DomainId::Sne);
+        p.set_freq(DomainId::Sne, 222.0e6);
+        let w = p.domain_power(DomainId::Sne, 1.0);
+        // 98 mW dynamic + small leakage
+        assert!((w - 0.098).abs() < 0.002, "SNE busy {w} W");
+    }
+
+    #[test]
+    fn dvfs_lowers_both_freq_and_power() {
+        let mut p = pm();
+        p.ungate(DomainId::Cutie);
+        let f_hi = p.freq(DomainId::Cutie);
+        let w_hi = p.domain_power(DomainId::Cutie, 1.0);
+        p.set_vdd(0.5);
+        let f_lo = p.freq(DomainId::Cutie);
+        let w_lo = p.domain_power(DomainId::Cutie, 1.0);
+        assert!(f_lo < 0.5 * f_hi);
+        assert!(w_lo < 0.25 * w_hi, "cubic-ish scaling: {w_lo} vs {w_hi}");
+    }
+
+    #[test]
+    fn freq_clamps_to_voltage() {
+        let mut p = pm();
+        p.ungate(DomainId::Pulp);
+        p.set_vdd(0.5);
+        p.set_freq(DomainId::Pulp, 330.0e6); // not achievable at 0.5 V
+        assert!(p.freq(DomainId::Pulp) < 200.0e6);
+    }
+
+    #[test]
+    fn ledger_integrates_energy() {
+        let mut p = pm();
+        p.ungate(DomainId::Pulp);
+        p.set_freq(DomainId::Pulp, 330.0e6);
+        let w = p.domain_power(DomainId::Pulp, 1.0);
+        p.account(DomainId::Pulp, 1.0, 2.0);
+        p.advance_time(2.0);
+        assert!((p.ledger.energy_of(DomainId::Pulp) - 2.0 * w).abs() < 1e-12);
+        assert!((p.ledger.avg_power_w() - w).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_clocked_power_below_busy() {
+        let mut p = pm();
+        p.ungate(DomainId::Cutie);
+        let busy = p.domain_power(DomainId::Cutie, 1.0);
+        let idle = p.domain_power(DomainId::Cutie, 0.0);
+        assert!(idle > 0.0 && idle < 0.2 * busy);
+    }
+
+    #[test]
+    #[should_panic(expected = "always-on")]
+    fn fabric_cannot_gate() {
+        pm().gate(DomainId::Fabric);
+    }
+}

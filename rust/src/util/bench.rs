@@ -1,0 +1,121 @@
+//! Micro-benchmark harness for the `harness = false` bench targets.
+//!
+//! Deliberately criterion-shaped: warmup, then timed repetitions, then a
+//! robust summary (median / mean / p95 / throughput). Wall-clock only —
+//! the *simulated*-time results the paper cares about come from the models
+//! themselves; this harness measures the simulator's own hot paths for the
+//! §Perf optimization pass.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters   median {:>12}   mean {:>12}   p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns)
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{:.0} ns", ns)
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations and ~`min_time_s` seconds
+/// (whichever is more), after a short warmup. Prints and returns the
+/// summary. A `black_box`-style sink prevents the optimizer from deleting
+/// the measured work: have `f` return something and it is consumed here.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    bench_cfg(name, 20, 0.25, &mut f)
+}
+
+/// Fully-parameterized variant.
+pub fn bench_cfg<T>(
+    name: &str,
+    min_iters: usize,
+    min_time_s: f64,
+    f: &mut impl FnMut() -> T,
+) -> BenchResult {
+    // warmup
+    for _ in 0..3 {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < min_time_s {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let median = samples[n / 2];
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let p95 = samples[((n as f64 * 0.95) as usize).min(n - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        median_ns: median,
+        mean_ns: mean,
+        p95_ns: p95,
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_cfg("spin", 5, 0.0, &mut || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters >= 5);
+        assert!(r.p95_ns >= r.median_ns);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.500 us");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,18 @@
+//! In-repo substrates the offline build provides for itself:
+//!
+//! * [`rng`] — a deterministic PCG-family PRNG (the simulators' seed
+//!   discipline depends on exact reproducibility across runs/platforms).
+//! * [`json`] — a minimal JSON parser/printer for the artifact manifest,
+//!   SoC config files, and `--json` CLI output.
+//! * [`bench`] — the micro-benchmark harness used by `cargo bench`
+//!   (`harness = false` targets): warmup, repetitions, median/mean/p95.
+//! * [`prop`] — a tiny property-testing driver (randomized cases with
+//!   shrink-free minimal reporting) used by `rust/tests/prop_invariants.rs`.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Value;
+pub use rng::Rng;

@@ -1,0 +1,206 @@
+//! Calibration suite: every numeric anchor the paper reports, pinned.
+//!
+//! If a model constant drifts, the failing assertion names the paper
+//! number it broke. Tolerances are stated per anchor (measurement noise in
+//! the paper's own plots is the reference).
+
+use kraken::baselines::{BinarEye, Tianjic, Vega};
+use kraken::config::{Precision, SocConfig};
+use kraken::cutie::CutieEngine;
+use kraken::nets;
+use kraken::pulp::cluster::PulpCluster;
+use kraken::pulp::kernels as pk;
+use kraken::sne::SneEngine;
+
+fn cfg() -> SocConfig {
+    SocConfig::kraken()
+}
+
+// --- §III / Fig. 7: SNE --------------------------------------------------
+
+#[test]
+fn sne_20800_inf_s_at_1pct_activity() {
+    let sne = SneEngine::new(&cfg());
+    let r = sne.inf_per_s(&nets::firenet_paper(), 0.01, 0.8);
+    assert!((r - 20_800.0).abs() / 20_800.0 < 0.02, "paper: 20800 inf/s, got {r}");
+}
+
+#[test]
+fn sne_1019_inf_s_at_20pct_activity() {
+    let sne = SneEngine::new(&cfg());
+    let r = sne.inf_per_s(&nets::firenet_paper(), 0.20, 0.8);
+    assert!((r - 1_019.0).abs() / 1_019.0 < 0.02, "paper: 1019 inf/s, got {r}");
+}
+
+#[test]
+fn sne_98mw_at_222mhz() {
+    let sne = SneEngine::new(&cfg());
+    let job = sne.inference(&nets::firenet_paper(), 0.2, 0.8);
+    let p = job.energy_j / job.t_s;
+    assert!((p - 0.098).abs() / 0.098 < 0.01, "paper: 98 mW, got {} W", p);
+}
+
+#[test]
+fn sne_fig7_shape_is_reciprocal_and_linear() {
+    let sne = SneEngine::new(&cfg());
+    let net = nets::firenet_paper();
+    // inf/s ~ 1/a (reciprocal), energy/inf ~ a (linear):
+    let r2 = sne.inf_per_s(&net, 0.02, 0.8);
+    let r8 = sne.inf_per_s(&net, 0.08, 0.8);
+    assert!((r2 / r8 - 4.0).abs() < 0.05, "reciprocal shape: {}", r2 / r8);
+    let e2 = sne.energy_per_inf(&net, 0.02, 0.8);
+    let e8 = sne.energy_per_inf(&net, 0.08, 0.8);
+    assert!((e8 / e2 - 4.0).abs() < 0.05, "linear energy: {}", e8 / e2);
+}
+
+// --- §III: CUTIE ----------------------------------------------------------
+
+#[test]
+fn cutie_above_10000_inf_s_at_330mhz() {
+    let cutie = CutieEngine::new(&cfg());
+    let r = cutie.inf_per_s(&nets::cutie_paper(), 0.8);
+    assert!(r > 10_000.0, "paper: >10000 inf/s, got {r}");
+}
+
+#[test]
+fn cutie_110mw_envelope() {
+    let cutie = CutieEngine::new(&cfg());
+    let job = cutie.inference(&nets::cutie_paper(), 0.8);
+    let p = job.energy_j / job.t_s;
+    assert!((p - 0.110).abs() / 0.110 < 0.01, "paper: 110 mW, got {} W", p);
+}
+
+#[test]
+fn cutie_peak_efficiency_1036_tops_w() {
+    let cutie = CutieEngine::new(&cfg());
+    let (_, eff) = cutie.best_efficiency();
+    assert!(
+        (eff - 1036.0e12).abs() / 1036.0e12 < 0.05,
+        "paper: 1036 TOp/s/W, got {:.1}",
+        eff / 1e12
+    );
+}
+
+// --- §III: PULP -----------------------------------------------------------
+
+#[test]
+fn dronet_28_inf_s_at_330mhz_80mw() {
+    let c = cfg();
+    let r = pk::network_inference(&c.pulp, &nets::dronet_paper(), Precision::Int8, 0.8);
+    let rate = 1.0 / r.t_s;
+    let p = r.energy_j / r.t_s;
+    assert!((rate - 28.0).abs() / 28.0 < 0.03, "paper: 28 inf/s, got {rate}");
+    assert!((p - 0.080).abs() / 0.080 < 0.01, "paper: 80 mW, got {} W", p);
+}
+
+#[test]
+fn pulp_peak_098_mac_per_cycle_per_core() {
+    let c = cfg();
+    // paper: "peak throughput of 0.98 mac/cycle/core" (MAC-LD inner loop)
+    assert!((c.pulp.macld_efficiency - 0.98).abs() < 1e-9);
+}
+
+#[test]
+fn pulp_1_66x_vega_throughput_same_frequency() {
+    let c = cfg();
+    let vega = Vega::default();
+    let k = c.pulp.macs_per_cycle(Precision::Int8) * c.pulp.macld_efficiency;
+    let v = vega.macs_per_cycle_per_core(Precision::Int8);
+    assert!((k / v - 1.66).abs() < 0.01, "paper: 1.66x, got {}", k / v);
+}
+
+#[test]
+fn pulp_2_6x_vega_efficiency_at_4b_2b() {
+    let pulp = PulpCluster::new(&cfg());
+    let vega = Vega::default();
+    for p in [Precision::Int4, Precision::Int2] {
+        for v in [0.5, 0.65, 0.8] {
+            let ratio = pulp.patch_efficiency_ops_per_w(p, v)
+                / vega.patch_efficiency_ops_per_w(p, v);
+            assert!(ratio > 2.6, "paper: >2.6x at {} {v} V, got {ratio}", p.label());
+        }
+    }
+}
+
+#[test]
+fn pulp_headline_1_8_tops_w() {
+    let pulp = PulpCluster::new(&cfg());
+    let (_, eff) = pulp.best_efficiency(Precision::Int2);
+    assert!(
+        (eff - 1.8e12).abs() / 1.8e12 < 0.05,
+        "paper: 1.8 TOp/s/W cluster headline, got {:.3}",
+        eff / 1e12
+    );
+}
+
+// --- Fig. 6: SoA ratios -----------------------------------------------------
+
+#[test]
+fn fig6_sne_vs_tianjic_1_7x() {
+    let sne = SneEngine::new(&cfg());
+    let (_, eff) = sne.best_efficiency();
+    let ratio = eff / Tianjic::default().sops_per_w;
+    assert!((ratio - 1.7).abs() < 0.1, "paper: 1.7x, got {ratio}");
+}
+
+#[test]
+fn fig6_cutie_vs_binareye_2x() {
+    let cutie = CutieEngine::new(&cfg());
+    let (_, eff) = cutie.best_efficiency();
+    let ratio = eff / BinarEye::default().ops_per_w;
+    assert!((ratio - 2.0).abs() < 0.1, "paper: 2x, got {ratio}");
+}
+
+// --- Fig. 5: implementation table ------------------------------------------
+
+#[test]
+fn fig5_table_values() {
+    let c = cfg();
+    assert_eq!(c.die_area_mm2, 9.0);
+    assert_eq!(c.fabric.l2_bytes, 1024 * 1024);
+    assert_eq!(c.pulp.l1_bytes, 128 * 1024);
+    assert_eq!(c.pulp.domain.f_max, 330.0e6);
+    assert_eq!(c.fabric.domain.f_max, 330.0e6);
+    assert_eq!(c.cutie.domain.f_max, 330.0e6);
+    // peripherals (Fig. 1): 4 QSPI, 4 I2C, 2 UART, 48 GPIO
+    assert_eq!((c.fabric.n_qspi, c.fabric.n_i2c, c.fabric.n_uart, c.fabric.n_gpio),
+               (4, 4, 2, 48));
+}
+
+#[test]
+fn fig5_power_range_2mw_to_300mw() {
+    let c = cfg();
+    let p_min = c.fabric.domain.p_dyn(0.5, 100.0e6, 0.0)
+        + c.fabric.domain.p_leak(0.5)
+        + kraken::config::SRAM_RETENTION_W;
+    let p_max = c.sne.domain.p_dyn(0.8, c.sne.domain.f_max, 1.0)
+        + c.cutie.domain.p_dyn(0.8, c.cutie.domain.f_max, 1.0)
+        + c.pulp.domain.p_dyn(0.8, c.pulp.domain.f_max, 1.0)
+        + c.fabric.domain.p_dyn(0.8, c.fabric.domain.f_max, 1.0)
+        + c.leakage_floor(0.8);
+    assert!(p_min > 0.0015 && p_min < 0.003, "min {p_min} W vs paper 2 mW");
+    assert!(p_max > 0.27 && p_max < 0.31, "max {p_max} W vs paper 300 mW");
+}
+
+// --- memory claims -----------------------------------------------------------
+
+#[test]
+fn cutie_network_weights_fill_117kb() {
+    let net = nets::cutie_paper();
+    let bytes = kraken::quant::ternary_bytes(net.total_weights());
+    // 500k trits -> ~100 kB packed; the rest of the 117 kB macro holds
+    // per-channel thresholds + pointers
+    assert!(bytes <= 117_000 && bytes > 90_000, "{bytes} B vs 117 kB");
+}
+
+#[test]
+fn sne_firenet_weights_fit_9_2kb_buffer() {
+    let sne = SneEngine::new(&cfg());
+    assert!(sne.fits_weight_buf(&nets::firenet_paper()));
+}
+
+#[test]
+fn dronet_is_41_mmac() {
+    let macs = nets::dronet_paper().total_macs();
+    assert!((macs as f64 - 41.0e6).abs() / 41.0e6 < 0.05, "{macs}");
+}

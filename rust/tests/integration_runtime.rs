@@ -1,0 +1,197 @@
+//! Runtime integration: the AOT artifacts, loaded and executed through
+//! PJRT, must behave exactly like the models they were lowered from.
+//!
+//! Requires `make artifacts`; every test skips cleanly when the directory
+//! is absent (CI stages artifacts first).
+
+use std::path::{Path, PathBuf};
+
+use kraken::runtime::{Manifest, Runtime};
+use kraken::sne::lif;
+
+fn artdir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artdir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_lists_all_four_artifacts() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    for name in ["firenet", "cutie", "dronet", "gesture"] {
+        assert!(m.artifacts.contains_key(name), "{name} missing");
+        m.verify_hash(&dir, name).unwrap();
+    }
+}
+
+#[test]
+fn firenet_artifact_stats_match_rust_descriptor() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    // conv layers of the artifact-sized FireNet + the flow head
+    let net = kraken::nets::firenet_artifact();
+    let hidden: u64 = net.layers.iter().map(|l| l.macs()).sum();
+    let head = (64 * 64 * 16 * 2 * 9) as u64;
+    m.check_stats_macs("firenet", hidden + head).unwrap();
+}
+
+#[test]
+fn all_artifacts_execute_on_zeros() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    for name in ["firenet", "cutie", "dronet", "gesture"] {
+        let inputs = rt.zero_inputs(name).unwrap();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = rt.execute(name, &refs).unwrap();
+        for (o, spec) in out.iter().zip(rt.output_specs(name).unwrap()) {
+            assert_eq!(o.len(), spec.elements(), "{name}/{}", spec.name);
+            assert!(o.iter().all(|v| v.is_finite()), "{name}/{}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn firenet_zero_input_emits_no_spikes() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load_subset(&dir, &["firenet".into()]).unwrap();
+    let inputs = rt.zero_inputs("firenet").unwrap();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let out = rt.execute("firenet", &refs).unwrap();
+    let counts = out.last().unwrap();
+    assert!(counts.iter().all(|&c| c == 0.0), "zero input must not spike: {counts:?}");
+}
+
+#[test]
+fn firenet_spike_counts_grow_with_input_density() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load_subset(&dir, &["firenet".into()]).unwrap();
+    let mut totals = Vec::new();
+    for density in [0.01f32, 0.2, 0.8] {
+        let mut inputs = rt.zero_inputs("firenet").unwrap();
+        // deterministic hash-based event pattern
+        let n = inputs[0].len();
+        let mut filled = 0usize;
+        for i in 0..n {
+            let h = (i as u64).wrapping_mul(0x9e3779b97f4a7c15) >> 40;
+            if (h as f32 / 16777216.0) < density {
+                inputs[0][i] = 4.0;
+                filled += 1;
+            }
+        }
+        assert!(filled > 0);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = rt.execute("firenet", &refs).unwrap();
+        // layer-0 spike count: directly driven by input density (deeper
+        // layers can saturate/inhibit non-monotonically)
+        totals.push(out.last().unwrap()[0]);
+    }
+    assert!(totals[0] < totals[1] && totals[1] < totals[2], "{totals:?}");
+}
+
+#[test]
+fn firenet_state_recurrence_matches_rust_lif_law() {
+    // The artifact's layer-0 membrane must follow v' = decay*v + cur - s*th
+    // with the same spike pattern a Rust LIF computes from the same current.
+    // We can't see `cur` directly, but with zero input the state must decay
+    // by exactly `decay` per step and never spike.
+    let dir = require_artifacts!();
+    let rt = Runtime::load_subset(&dir, &["firenet".into()]).unwrap();
+    let specs = rt.input_specs("firenet").unwrap().to_vec();
+    let mut inputs = rt.zero_inputs("firenet").unwrap();
+    // seed layer-0 membrane with sub-threshold values
+    for (i, v) in inputs[1].iter_mut().enumerate() {
+        *v = 0.5 + 0.4 * ((i % 7) as f32 / 7.0);
+    }
+    let v0 = inputs[1].clone();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let out = rt.execute("firenet", &refs).unwrap();
+    let v0_next = &out[1];
+    let (want, spikes) = lif::lif_step(&v0, &vec![0.0; v0.len()], 0.875, 1.0);
+    assert_eq!(lif::spike_count(&spikes), 0);
+    for i in 0..v0.len() {
+        assert!(
+            (v0_next[i] - want[i]).abs() < 1e-5,
+            "membrane {i}: artifact {} vs rust {}",
+            v0_next[i],
+            want[i]
+        );
+    }
+    assert_eq!(specs[1].name, "v0");
+}
+
+#[test]
+fn cutie_outputs_are_class_logits() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load_subset(&dir, &["cutie".into()]).unwrap();
+    // ternary input pattern
+    let spec = &rt.input_specs("cutie").unwrap()[0];
+    let x: Vec<f32> = (0..spec.elements())
+        .map(|i| match i % 3 {
+            0 => -1.0,
+            1 => 0.0,
+            _ => 1.0,
+        })
+        .collect();
+    let out = rt.execute("cutie", &[&x]).unwrap();
+    assert_eq!(out[0].len(), 10);
+    // nz fractions are in [0,1]
+    assert!(out[1].iter().all(|&v| (0.0..=1.0).contains(&v)));
+    // deterministic: same input, same logits
+    let out2 = rt.execute("cutie", &[&x]).unwrap();
+    assert_eq!(out[0], out2[0]);
+}
+
+#[test]
+fn dronet_responds_to_input_changes() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load_subset(&dir, &["dronet".into()]).unwrap();
+    let spec = &rt.input_specs("dronet").unwrap()[0];
+    let n = spec.elements();
+    let a: Vec<f32> = (0..n).map(|i| ((i % 255) as f32) - 127.0).collect();
+    let b: Vec<f32> = (0..n).map(|i| (((i / 96) % 255) as f32) - 127.0).collect();
+    let oa = rt.execute("dronet", &[&a]).unwrap();
+    let ob = rt.execute("dronet", &[&b]).unwrap();
+    assert_ne!(oa[0], ob[0], "different images must give different outputs");
+}
+
+#[test]
+fn execute_rejects_wrong_shapes() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load_subset(&dir, &["cutie".into()]).unwrap();
+    let too_small = vec![0f32; 7];
+    assert!(rt.execute("cutie", &[&too_small]).is_err());
+    let inputs = rt.zero_inputs("cutie").unwrap();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    assert!(rt.execute("nonexistent", &refs).is_err());
+}
+
+#[test]
+fn hash_tampering_is_detected() {
+    let dir = require_artifacts!();
+    // copy artifacts to a temp dir, corrupt one file, expect load failure
+    let tmp = std::env::temp_dir().join(format!("kraken_tamper_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let e = entry.unwrap();
+        std::fs::copy(e.path(), tmp.join(e.file_name())).unwrap();
+    }
+    let victim = tmp.join("cutie.hlo.txt");
+    let mut text = std::fs::read_to_string(&victim).unwrap();
+    text.push_str("\n// tampered");
+    std::fs::write(&victim, text).unwrap();
+    let err = Runtime::load_subset(&tmp, &["cutie".into()]);
+    assert!(err.is_err(), "tampered artifact must be rejected");
+    let _ = std::fs::remove_dir_all(&tmp);
+}

@@ -1,0 +1,316 @@
+//! Property-based invariants over the coordinator's substrates and the
+//! engine models (randomized via util::prop; deterministic seeds).
+
+use kraken::config::{Precision, SocConfig};
+use kraken::cutie::CutieEngine;
+use kraken::event::{Event, EventWindow, Polarity};
+use kraken::nets::{ConvLayer, SnnDesc};
+use kraken::prop_assert;
+use kraken::pulp::kernels as pk;
+use kraken::quant::{decode_ternary, encode_ternary, int};
+use kraken::sne::{lif, SneEngine};
+use kraken::util::prop::check;
+use kraken::util::rng::Rng;
+
+// --- quantization codecs ----------------------------------------------------
+
+#[test]
+fn prop_ternary_roundtrip() {
+    check("ternary encode/decode roundtrip", 200, |rng| {
+        let n = rng.gen_range_usize(1, 2000);
+        let w: Vec<i8> = (0..n).map(|_| rng.gen_range_usize(0, 3) as i8 - 1).collect();
+        let enc = encode_ternary(&w);
+        prop_assert!(enc.len() == n.div_ceil(5), "packed length");
+        let dec = decode_ternary(&enc, n);
+        prop_assert!(dec == w, "roundtrip mismatch at n={n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lane_packing_roundtrip() {
+    check("sub-byte lane packing roundtrip", 200, |rng| {
+        let bits = [2u32, 4, 8][rng.gen_range_usize(0, 3)];
+        let hi = (1i32 << (bits - 1)) - 1;
+        let lo = -(1i32 << (bits - 1));
+        let n = rng.gen_range_usize(1, 300);
+        let vals: Vec<i32> =
+            (0..n).map(|_| rng.gen_range_usize(0, (hi - lo + 1) as usize) as i32 + lo).collect();
+        let packed = int::pack_lanes(&vals, bits);
+        prop_assert!(int::unpack_lanes(&packed, bits, n) == vals, "bits={bits} n={n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sdot_matches_scalar() {
+    check("SIMD dot product == scalar dot product", 100, |rng| {
+        let bits = [2u32, 4, 8][rng.gen_range_usize(0, 3)];
+        let hi = (1i32 << (bits - 1)) - 1;
+        let lo = -(1i32 << (bits - 1));
+        let n = rng.gen_range_usize(1, 128);
+        let a: Vec<i32> =
+            (0..n).map(|_| rng.gen_range_usize(0, (hi - lo + 1) as usize) as i32 + lo).collect();
+        let b: Vec<i32> =
+            (0..n).map(|_| rng.gen_range_usize(0, (hi - lo + 1) as usize) as i32 + lo).collect();
+        let want: i32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let got = int::sdot(&int::pack_lanes(&a, bits), &int::pack_lanes(&b, bits), bits, n, 0);
+        prop_assert!(got == want, "bits={bits} got {got} want {want}");
+        Ok(())
+    });
+}
+
+// --- LIF dynamics -------------------------------------------------------------
+
+#[test]
+fn prop_lif_membrane_bounded_below_threshold() {
+    check("post-reset membrane < threshold when inputs <= th", 100, |rng| {
+        let n = rng.gen_range_usize(1, 512);
+        let th = rng.gen_range_f64(0.5, 3.0) as f32;
+        let decay = rng.gen_range_f64(0.0, 1.0) as f32;
+        let mut v: Vec<f32> = (0..n).map(|_| rng.gen_range_f64(0.0, th as f64) as f32).collect();
+        let mut spikes = vec![0f32; n];
+        // inputs bounded by th: after subtractive reset, v stays < 2*th and
+        // spiking neurons land below threshold
+        for _ in 0..5 {
+            let x: Vec<f32> = (0..n).map(|_| rng.gen_range_f64(0.0, th as f64) as f32).collect();
+            lif::lif_step_inplace(&mut v, &x, decay, th, &mut spikes);
+            for (i, &vi) in v.iter().enumerate() {
+                prop_assert!(vi < 2.0 * th, "v[{i}]={vi} runaway (th={th})");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lif_spike_iff_threshold_crossing() {
+    check("spike emitted iff integrated membrane >= th", 100, |rng| {
+        let n = rng.gen_range_usize(1, 256);
+        let th = 1.0f32;
+        let decay = rng.gen_range_f64(0.0, 1.0) as f32;
+        let v: Vec<f32> = (0..n).map(|_| rng.gen_range_f64(-2.0, 2.0) as f32).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.gen_range_f64(-2.0, 2.0) as f32).collect();
+        let (v2, s) = lif::lif_step(&v, &x, decay, th);
+        for i in 0..n {
+            let integrated = decay * v[i] + x[i];
+            prop_assert!(
+                (s[i] == 1.0) == (integrated >= th),
+                "spike[{i}] wrong for v'={integrated}"
+            );
+            let want = integrated - s[i] * th;
+            prop_assert!((v2[i] - want).abs() < 1e-5, "reset law violated");
+        }
+        Ok(())
+    });
+}
+
+// --- event windows ---------------------------------------------------------
+
+fn random_window(rng: &mut Rng, w: usize, h: usize, n: usize) -> EventWindow {
+    let mut win = EventWindow::new(w, h);
+    let mut t = 0u64;
+    for _ in 0..n {
+        t += rng.gen_below(10_000);
+        win.push(Event {
+            t_ns: t,
+            x: rng.gen_range_usize(0, w) as u16,
+            y: rng.gen_range_usize(0, h) as u16,
+            polarity: if rng.gen_bool() { Polarity::On } else { Polarity::Off },
+        });
+    }
+    win
+}
+
+#[test]
+fn prop_binning_conserves_event_count() {
+    check("event binning conserves mass", 100, |rng| {
+        let w = rng.gen_range_usize(2, 64);
+        let h = rng.gen_range_usize(2, 64);
+        let n = rng.gen_range_usize(0, 500);
+        let bins = rng.gen_range_usize(1, 16);
+        let win = random_window(rng, w, h, n);
+        let total: f32 = win.bin(bins).iter().flat_map(|b| b.iter()).sum();
+        prop_assert!(total as usize == n, "lost events: {total} vs {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_by_time_partitions_events() {
+    check("split_by_time partitions", 100, |rng| {
+        let n = rng.gen_range_usize(1, 300);
+        let win = random_window(rng, 16, 16, n);
+        let dt = rng.gen_below(50_000) + 1;
+        let parts = win.split_by_time(dt);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        prop_assert!(total == n, "partition lost events");
+        for p in &parts {
+            prop_assert!(p.span_ns() < dt, "sub-window exceeds dt");
+        }
+        Ok(())
+    });
+}
+
+// --- engine timing models ----------------------------------------------------
+
+#[test]
+fn prop_sne_time_monotone_in_activity() {
+    check("SNE inference time monotone in activity", 50, |rng| {
+        let sne = SneEngine::new(&SocConfig::kraken());
+        let net = kraken::nets::firenet_paper();
+        let v = rng.gen_range_f64(0.5, 0.8);
+        let a1 = rng.gen_range_f64(0.0, 0.5);
+        let a2 = a1 + rng.gen_range_f64(0.001, 0.5);
+        let t1 = sne.inference(&net, a1, v).t_s;
+        let t2 = sne.inference(&net, a2, v).t_s;
+        prop_assert!(t2 > t1, "a={a1}->{a2} t={t1}->{t2}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sne_energy_scales_with_net_size() {
+    check("bigger SNNs cost more", 50, |rng| {
+        let sne = SneEngine::new(&SocConfig::kraken());
+        let ch = rng.gen_range_usize(4, 64);
+        let small = SnnDesc {
+            name: "s".into(),
+            layers: vec![ConvLayer::new(2, ch, 64, 64, 3)],
+            in_w: 64,
+            in_h: 64,
+            in_ch: 2,
+            timesteps: 3,
+        };
+        let big = SnnDesc {
+            name: "b".into(),
+            layers: vec![
+                ConvLayer::new(2, ch, 64, 64, 3),
+                ConvLayer::new(ch, ch, 64, 64, 3),
+            ],
+            ..small.clone()
+        };
+        let a = rng.gen_range_f64(0.01, 0.3);
+        prop_assert!(
+            sne.energy_per_inf(&big, a, 0.8) > sne.energy_per_inf(&small, a, 0.8),
+            "monotone in network size"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cutie_cycles_sum_of_layers() {
+    check("CUTIE cycles additive over layers", 50, |rng| {
+        let e = CutieEngine::new(&SocConfig::kraken());
+        let mk = |c_in: usize, c_out: usize, s: usize| ConvLayer::new(c_in, c_out, s, s, 3);
+        let l1 = mk(
+            rng.gen_range_usize(1, 200),
+            rng.gen_range_usize(1, 200),
+            rng.gen_range_usize(4, 40),
+        );
+        let l2 = mk(
+            rng.gen_range_usize(1, 200),
+            rng.gen_range_usize(1, 200),
+            rng.gen_range_usize(4, 40),
+        );
+        let single1 = kraken::nets::CnnDesc { name: "a".into(), layers: vec![l1.clone()] };
+        let single2 = kraken::nets::CnnDesc { name: "b".into(), layers: vec![l2.clone()] };
+        let both = kraken::nets::CnnDesc { name: "ab".into(), layers: vec![l1, l2] };
+        let sum = e.net_cycles(&single1) + e.net_cycles(&single2);
+        prop_assert!((e.net_cycles(&both) - sum).abs() < 1e-6, "additivity");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pulp_precision_ordering_holds_at_any_voltage() {
+    check("PULP efficiency ordering fp32<fp16<int8<int4<int2", 50, |rng| {
+        let pulp = kraken::pulp::cluster::PulpCluster::new(&SocConfig::kraken());
+        let v = rng.gen_range_f64(0.5, 0.8);
+        let effs: Vec<f64> = Precision::ALL
+            .iter()
+            .map(|&p| pulp.patch_efficiency_ops_per_w(p, v))
+            .collect();
+        for w in effs.windows(2) {
+            prop_assert!(w[0] < w[1], "ordering violated at v={v}: {effs:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pulp_energy_per_mac_independent_of_work() {
+    check("patch energy linear in MACs", 50, |rng| {
+        let cfg = SocConfig::kraken();
+        let m1 = rng.gen_range_usize(1_000, 1_000_000) as u64;
+        let k = rng.gen_range_usize(2, 9) as u64;
+        let v = rng.gen_range_f64(0.5, 0.8);
+        let e1 = pk::conv_patch(&cfg.pulp, m1, Precision::Int8, v).energy_j;
+        let ek = pk::conv_patch(&cfg.pulp, m1 * k, Precision::Int8, v).energy_j;
+        prop_assert!((ek / e1 - k as f64).abs() < 1e-6, "linearity");
+        Ok(())
+    });
+}
+
+// --- memory / dma ------------------------------------------------------------
+
+#[test]
+fn prop_scratchpad_alloc_never_overlaps() {
+    check("scratchpad segments disjoint", 100, |rng| {
+        let mut m = kraken::soc::memory::Scratchpad::new("t", 64 * 1024, 8, 4);
+        let mut segs: Vec<(usize, usize)> = Vec::new();
+        for i in 0..rng.gen_range_usize(1, 20) {
+            let size = rng.gen_range_usize(1, 8 * 1024);
+            match m.alloc(&format!("s{i}"), size) {
+                Ok(s) => {
+                    for &(o, sz) in &segs {
+                        let disjoint = s.offset + s.size <= o || o + sz <= s.offset;
+                        prop_assert!(disjoint, "overlap");
+                    }
+                    segs.push((s.offset, s.size));
+                }
+                Err(_) => {
+                    // must only fail when genuinely out of space
+                    prop_assert!(
+                        m.free() < size.div_ceil(4) * 4,
+                        "spurious OOM: {} free, {} asked",
+                        m.free(),
+                        size
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dma_time_monotone_in_bytes() {
+    check("DMA transfer time monotone in size", 100, |rng| {
+        let d = kraken::soc::interconnect::Dma::new(2, 8);
+        let b1 = rng.gen_range_usize(1, 1 << 20);
+        let b2 = b1 + rng.gen_range_usize(1, 1 << 20);
+        let f = rng.gen_range_f64(50.0e6, 330.0e6);
+        prop_assert!(
+            d.transfer_ns(b2, f, 1) >= d.transfer_ns(b1, f, 1),
+            "monotonicity"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_power_monotone_in_voltage_and_util() {
+    check("domain power monotone in V and u", 100, |rng| {
+        let cfg = SocConfig::kraken();
+        let d = &cfg.cutie.domain;
+        let v1 = rng.gen_range_f64(0.5, 0.79);
+        let v2 = v1 + rng.gen_range_f64(0.001, 0.8 - v1);
+        let u = rng.gen_range_f64(0.0, 1.0);
+        let p = |v: f64, u: f64| d.p_dyn(v, d.f_at(v), u) + d.p_leak(v);
+        prop_assert!(p(v2, u) > p(v1, u), "voltage monotonicity");
+        prop_assert!(p(v1, 1.0) >= p(v1, u), "utilization monotonicity");
+        Ok(())
+    });
+}
