@@ -1,0 +1,7 @@
+"""Pytest path setup: make `compile` (python/compile) importable when the
+suite is run from the repo root (`python -m pytest python/tests`)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))

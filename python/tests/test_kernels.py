@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import numpy.testing as npt
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import conv_int8, lif, ref, ternary_conv

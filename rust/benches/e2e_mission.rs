@@ -2,18 +2,27 @@
 //! (the Fig. 2 application numbers) plus simulator wall-time (how much
 //! faster than real time the whole stack runs — the §Perf headline).
 //!
+//! The scene and voltage sweeps run as *fleets* (coordinator::fleet): each
+//! sweep point is an independent mission, so they execute in parallel
+//! across OS threads while staying report-identical to serial runs (the
+//! fleet determinism contract). The fleet section at the end measures the
+//! scaling story itself: N seeds, percentile statistics, aggregate
+//! real-time factor.
+//!
 //! Run: `cargo bench --bench e2e_mission`
 //! (uses artifacts/ if present for the functional PJRT path)
 
 use kraken::config::SocConfig;
-use kraken::coordinator::{Mission, MissionConfig, PowerPolicy};
+use kraken::coordinator::{
+    run_configs, run_fleet, FleetConfig, Mission, MissionConfig, MissionReport, PowerPolicy,
+};
 use kraken::metrics::fmt_power;
 use kraken::sensors::scene::SceneKind;
 use kraken::util::bench::section;
 
-fn run(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> kraken::coordinator::MissionReport {
+fn mission_cfg(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> MissionConfig {
     let artdir = std::path::Path::new("artifacts");
-    let cfg = MissionConfig {
+    MissionConfig {
         duration_s: duration,
         scene,
         seed: 42,
@@ -21,13 +30,18 @@ fn run(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> kraken::co
         artifacts_dir: (artifacts && artdir.join("manifest.json").exists())
             .then(|| artdir.to_path_buf()),
         ..Default::default()
-    };
+    }
+}
+
+fn run(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> MissionReport {
+    let cfg = mission_cfg(duration, artifacts, vdd, scene);
     let mut m = Mission::new(SocConfig::kraken(), cfg).unwrap();
     m.run().unwrap()
 }
 
 fn main() {
     let corridor = SceneKind::Corridor { speed_per_s: 0.6, seed: 42 };
+    let soc = SocConfig::kraken();
 
     section("E6: 2 s corridor mission, analytical (timing/energy models only)");
     let r = run(2.0, false, 0.8, corridor);
@@ -60,18 +74,21 @@ fn main() {
         rf.sim_s / rf.wall_s.max(1e-9)
     );
 
-    section("scene sweep (analytical): activity drives SNE energy share");
-    println!(
-        "{:<36} {:>10} {:>12} {:>12}",
-        "scene", "events", "SNE power", "SoC power"
-    );
-    for (name, scene) in [
+    section("scene sweep (fleet, analytical): activity drives SNE energy share");
+    let scenes = [
         ("static edge (noise only)", SceneKind::TranslatingEdge { vel_per_s: 0.0 }),
         ("corridor flight", corridor),
         ("fast rotating bar", SceneKind::RotatingBar { omega_rad_s: 12.0 }),
         ("30% random flicker", SceneKind::Noise { density: 0.3, seed: 1 }),
-    ] {
-        let r = run(1.0, false, 0.8, scene);
+    ];
+    let cfgs: Vec<MissionConfig> =
+        scenes.iter().map(|&(_, scene)| mission_cfg(1.0, false, 0.8, scene)).collect();
+    let fleet = run_configs(&soc, &cfgs, 4).unwrap();
+    println!(
+        "{:<36} {:>10} {:>12} {:>12}",
+        "scene", "events", "SNE power", "SoC power"
+    );
+    for ((name, _), r) in scenes.iter().zip(&fleet.reports) {
         println!(
             "{:<36} {:>10} {:>12} {:>12}",
             name,
@@ -80,10 +97,18 @@ fn main() {
             fmt_power(r.avg_power_w)
         );
     }
+    println!(
+        "(4 sweep missions in {:.3} s wall — {:.1}x real time aggregate)",
+        fleet.wall_s,
+        fleet.realtime_factor()
+    );
 
-    section("voltage sweep (analytical): mission power vs DVFS");
-    for vdd in [0.8, 0.7, 0.6, 0.5] {
-        let r = run(1.0, false, vdd, corridor);
+    section("voltage sweep (fleet, analytical): mission power vs DVFS");
+    let vdds = [0.8, 0.7, 0.6, 0.5];
+    let cfgs: Vec<MissionConfig> =
+        vdds.iter().map(|&vdd| mission_cfg(1.0, false, vdd, corridor)).collect();
+    let fleet = run_configs(&soc, &cfgs, 4).unwrap();
+    for (vdd, r) in vdds.iter().zip(&fleet.reports) {
         let (_, c, p) = r.rates();
         println!(
             "vdd {vdd:.1} V: {}  CUTIE {c:.0} inf/s  PULP {p:.0} inf/s  dropped {}",
@@ -91,4 +116,19 @@ fn main() {
             r.dropped_windows
         );
     }
+
+    section("fleet scaling: 8 corridor missions, distinct seeds, 4 threads");
+    let fc = FleetConfig {
+        missions: 8,
+        threads: 4,
+        base_seed: 42,
+        base: mission_cfg(1.0, false, 0.8, corridor),
+        soc: soc.clone(),
+    };
+    let fr = run_fleet(&fc).unwrap();
+    print!("{}", fr.summary());
+    // every mission must respect the envelope, not just the mean
+    let power = fr.stat(|r| r.avg_power_w);
+    assert!(power.max < 0.31, "fleet max power {} W", power.max);
+    assert_eq!(fr.reports.len(), 8);
 }

@@ -80,7 +80,7 @@ fn main() {
         binareye.cifar10_accuracy
     );
     println!(
-        "(accuracy reproduction uses synthetic datasets — examples/gesture_accuracy.rs; \
+        "(accuracy reproduction uses synthetic datasets — rust/examples/gesture_accuracy.rs; \
          see DESIGN.md §1)"
     );
 }

@@ -1,0 +1,319 @@
+//! The `Engine` abstraction: one uniform contract for SNE, CUTIE and PULP
+//! under the fabric controller.
+//!
+//! The coordinator only ever needs four things from an engine: can it take
+//! work now ([`Engine::poll_ready`]), start a job ([`Engine::dispatch`]),
+//! drain the busy time it consumed this accounting window
+//! ([`Engine::complete`]), and what it costs to keep clocked while idle
+//! ([`Engine::idle_power`]). Everything engine-specific — which network,
+//! which precision, how long a job takes at a given voltage — lives in the
+//! adapter structs ([`SneAdapter`], [`CutieAdapter`], [`PulpAdapter`]) that
+//! wrap the timing/energy models.
+//!
+//! Dispatch semantics (identical to the silicon FC firmware the old
+//! monolithic loop modelled):
+//!
+//! * an engine accepts a job if its backlog ends within one scheduling
+//!   window of `now` — beyond that the queue would grow without bound, so
+//!   the job is dropped (backpressure);
+//! * dispatching to a power-gated engine ungates it and pays
+//!   [`WAKE_NS`] of wake-up latency before the job starts;
+//! * jobs on one engine serialize; the three engines run concurrently.
+
+use crate::config::{Precision, PulpCfg, SocConfig};
+use crate::cutie::CutieEngine;
+use crate::nets::{self, CnnDesc, SnnDesc};
+use crate::pulp::kernels as pulp_kernels;
+use crate::sne::SneEngine;
+use crate::soc::power::{DomainId, PowerManager};
+
+/// Wake-up latency (ns) after ungating a power-gated engine: header-switch
+/// ramp + clock restart, per the power-gating discussion around Fig. 3.
+pub const WAKE_NS: u64 = 20_000;
+
+/// Per-engine scheduling state: the busy horizon and per-window busy time
+/// the power accounting integrates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineSlot {
+    /// Simulated time the engine's job backlog drains — also the end of its
+    /// most recent job, which is what the gating policy's idle clock reads.
+    pub busy_until_ns: u64,
+    /// Busy nanoseconds accumulated since the last `complete()` drain.
+    pub busy_in_window_ns: u64,
+}
+
+impl EngineSlot {
+    fn dispatch(
+        &mut self,
+        domain: DomainId,
+        power: &mut PowerManager,
+        now_ns: u64,
+        dur_ns: u64,
+        window_ns: u64,
+    ) -> bool {
+        if self.busy_until_ns > now_ns + window_ns {
+            return false; // queue would grow without bound: drop
+        }
+        if power.is_gated(domain) {
+            power.ungate(domain);
+            // wake-up latency before the job starts
+            self.busy_until_ns = self.busy_until_ns.max(now_ns) + WAKE_NS;
+        }
+        let start = self.busy_until_ns.max(now_ns);
+        self.busy_until_ns = start + dur_ns;
+        self.busy_in_window_ns += dur_ns;
+        true
+    }
+
+    fn complete(&mut self, window_ns: u64) -> u64 {
+        let busy_ns = self.busy_in_window_ns.min(window_ns);
+        self.busy_in_window_ns -= busy_ns;
+        busy_ns
+    }
+}
+
+/// Uniform engine contract the coordinator schedules against.
+pub trait Engine {
+    /// Power domain this engine lives in.
+    fn domain(&self) -> DomainId;
+
+    fn slot(&self) -> &EngineSlot;
+
+    fn slot_mut(&mut self) -> &mut EngineSlot;
+
+    /// Would a job dispatched at `now_ns` be accepted (backlog within one
+    /// `window_ns` of now)?
+    fn poll_ready(&self, now_ns: u64, window_ns: u64) -> bool {
+        self.slot().busy_until_ns <= now_ns + window_ns
+    }
+
+    /// Try to start a job of `dur_ns` at `now_ns`; ungates (with wake-up
+    /// latency) if needed. Returns false on backpressure drop.
+    fn dispatch(
+        &mut self,
+        power: &mut PowerManager,
+        now_ns: u64,
+        dur_ns: u64,
+        window_ns: u64,
+    ) -> bool {
+        let domain = self.domain();
+        self.slot_mut().dispatch(domain, power, now_ns, dur_ns, window_ns)
+    }
+
+    /// Drain and return the busy time (ns, capped at `window_ns`) this
+    /// engine consumed in the accounting window just ended; the remainder
+    /// carries into the next window.
+    fn complete(&mut self, window_ns: u64) -> u64 {
+        self.slot_mut().complete(window_ns)
+    }
+
+    /// End of the most recent job (ns) — the gating policy's idle clock.
+    fn last_active_ns(&self) -> u64 {
+        self.slot().busy_until_ns
+    }
+
+    /// Power (W) of keeping this engine clocked but idle at the current
+    /// operating point; 0 when gated.
+    fn idle_power(&self, power: &PowerManager) -> f64 {
+        power.domain_power(self.domain(), 0.0)
+    }
+}
+
+/// SNE behind the [`Engine`] contract: event-driven optical flow, job
+/// duration proportional to DVS activity.
+#[derive(Debug, Clone)]
+pub struct SneAdapter {
+    pub model: SneEngine,
+    pub net: SnnDesc,
+    slot: EngineSlot,
+}
+
+impl SneAdapter {
+    pub fn new(cfg: &SocConfig) -> Self {
+        SneAdapter {
+            model: SneEngine::new(cfg),
+            net: nets::firenet_paper(),
+            slot: EngineSlot::default(),
+        }
+    }
+
+    /// Duration (ns) of one optical-flow inference at `activity`, `vdd`.
+    pub fn job_ns(&self, activity: f64, vdd: f64) -> u64 {
+        (self.model.inference(&self.net, activity, vdd).t_s * 1e9) as u64
+    }
+}
+
+impl Engine for SneAdapter {
+    fn domain(&self) -> DomainId {
+        DomainId::Sne
+    }
+
+    fn slot(&self) -> &EngineSlot {
+        &self.slot
+    }
+
+    fn slot_mut(&mut self) -> &mut EngineSlot {
+        &mut self.slot
+    }
+}
+
+/// CUTIE behind the [`Engine`] contract: dense ternary classification,
+/// activity-independent job duration.
+#[derive(Debug, Clone)]
+pub struct CutieAdapter {
+    pub model: CutieEngine,
+    pub net: CnnDesc,
+    slot: EngineSlot,
+}
+
+impl CutieAdapter {
+    pub fn new(cfg: &SocConfig) -> Self {
+        CutieAdapter {
+            model: CutieEngine::new(cfg),
+            net: nets::cutie_paper(),
+            slot: EngineSlot::default(),
+        }
+    }
+
+    /// Duration (ns) of one ternary classification at `vdd`.
+    pub fn job_ns(&self, vdd: f64) -> u64 {
+        (self.model.inference(&self.net, vdd).t_s * 1e9) as u64
+    }
+}
+
+impl Engine for CutieAdapter {
+    fn domain(&self) -> DomainId {
+        DomainId::Cutie
+    }
+
+    fn slot(&self) -> &EngineSlot {
+        &self.slot
+    }
+
+    fn slot_mut(&mut self) -> &mut EngineSlot {
+        &mut self.slot
+    }
+}
+
+/// The PULP cluster behind the [`Engine`] contract: full-network DroNet
+/// inference at a configurable precision.
+#[derive(Debug, Clone)]
+pub struct PulpAdapter {
+    pub cfg: PulpCfg,
+    pub net: CnnDesc,
+    pub precision: Precision,
+    slot: EngineSlot,
+}
+
+impl PulpAdapter {
+    pub fn new(cfg: &SocConfig) -> Self {
+        PulpAdapter {
+            cfg: cfg.pulp.clone(),
+            net: nets::dronet_paper(),
+            precision: Precision::Int8,
+            slot: EngineSlot::default(),
+        }
+    }
+
+    /// Duration (ns) of one DroNet inference at `vdd`.
+    pub fn job_ns(&self, vdd: f64) -> u64 {
+        (pulp_kernels::network_inference(&self.cfg, &self.net, self.precision, vdd).t_s * 1e9)
+            as u64
+    }
+}
+
+impl Engine for PulpAdapter {
+    fn domain(&self) -> DomainId {
+        DomainId::Pulp
+    }
+
+    fn slot(&self) -> &EngineSlot {
+        &self.slot
+    }
+
+    fn slot_mut(&mut self) -> &mut EngineSlot {
+        &mut self.slot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn powered_pm() -> PowerManager {
+        let mut pm = PowerManager::new(&SocConfig::kraken());
+        for d in [DomainId::Sne, DomainId::Cutie, DomainId::Pulp] {
+            pm.ungate(d);
+        }
+        pm
+    }
+
+    #[test]
+    fn jobs_serialize_on_one_engine() {
+        let mut pm = powered_pm();
+        let mut e = CutieAdapter::new(&SocConfig::kraken());
+        let window = 10_000_000;
+        assert!(e.dispatch(&mut pm, 0, 3_000_000, window));
+        assert!(e.dispatch(&mut pm, 0, 3_000_000, window));
+        // second job queued behind the first
+        assert_eq!(e.slot().busy_until_ns, 6_000_000);
+        assert_eq!(e.slot().busy_in_window_ns, 6_000_000);
+    }
+
+    #[test]
+    fn backpressure_drops_beyond_one_window() {
+        let mut pm = powered_pm();
+        let mut e = PulpAdapter::new(&SocConfig::kraken());
+        let window = 10_000_000;
+        assert!(e.dispatch(&mut pm, 0, 15_000_000, window));
+        assert!(!e.poll_ready(0, window));
+        assert!(!e.dispatch(&mut pm, 0, 15_000_000, window), "backlog past one window");
+        // a window later the backlog has drained enough
+        assert!(e.poll_ready(10_000_000, window));
+        assert!(e.dispatch(&mut pm, 10_000_000, 15_000_000, window));
+    }
+
+    #[test]
+    fn dispatch_to_gated_engine_pays_wakeup() {
+        let mut pm = powered_pm();
+        pm.gate(DomainId::Sne);
+        let mut e = SneAdapter::new(&SocConfig::kraken());
+        assert!(e.dispatch(&mut pm, 1_000, 500_000, 10_000_000));
+        assert!(!pm.is_gated(DomainId::Sne), "dispatch ungates");
+        assert_eq!(e.slot().busy_until_ns, 1_000 + WAKE_NS + 500_000);
+    }
+
+    #[test]
+    fn complete_drains_window_and_carries_remainder() {
+        let mut pm = powered_pm();
+        let mut e = CutieAdapter::new(&SocConfig::kraken());
+        let window = 10_000_000;
+        assert!(e.dispatch(&mut pm, 0, 12_000_000, window));
+        assert_eq!(e.complete(window), window);
+        assert_eq!(e.slot().busy_in_window_ns, 2_000_000, "overflow carries");
+        assert_eq!(e.complete(window), 2_000_000);
+        assert_eq!(e.complete(window), 0);
+    }
+
+    #[test]
+    fn idle_power_positive_when_clocked_zero_when_gated() {
+        let mut pm = powered_pm();
+        let e = SneAdapter::new(&SocConfig::kraken());
+        assert!(e.idle_power(&pm) > 0.0);
+        pm.gate(DomainId::Sne);
+        assert_eq!(e.idle_power(&pm), 0.0);
+    }
+
+    #[test]
+    fn job_durations_match_engine_models() {
+        let cfg = SocConfig::kraken();
+        let sne = SneAdapter::new(&cfg);
+        // 20% activity at 0.8 V is the 1019 inf/s anchor: ~0.98 ms
+        let t = sne.job_ns(0.20, 0.8);
+        assert!((900_000..1_100_000).contains(&t), "SNE job {t} ns");
+        let pulp = PulpAdapter::new(&cfg);
+        // DroNet at 28 inf/s: ~35.7 ms
+        let t = pulp.job_ns(0.8);
+        assert!((34_000_000..38_000_000).contains(&t), "PULP job {t} ns");
+    }
+}

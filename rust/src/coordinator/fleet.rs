@@ -1,0 +1,295 @@
+//! The fleet runner: N independent missions in parallel across OS threads.
+//!
+//! Missions are embarrassingly parallel — each owns a full [`crate::soc::Soc`]
+//! (clock, power ledger, memories), its own sensors and its own seed — so a
+//! fleet scales to the host's cores with zero cross-mission coupling.
+//! Workers pull mission indices from a shared counter (work stealing over a
+//! static list), build a `Mission` locally on their thread (the PJRT
+//! runtime handle is not `Send`, and never needs to be), and write the
+//! report back into the mission's slot.
+//!
+//! Two determinism guarantees, pinned by `tests/integration_fleet.rs`:
+//!
+//! * a fleet's mission `i` is bit-identical to a serial run of the same
+//!   derived config (seed discipline: [`MissionConfig::with_seed`]);
+//! * the thread count only changes wall-clock time, never any report.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::SocConfig;
+use crate::coordinator::pipeline::{Mission, MissionConfig, MissionReport};
+use crate::util::json::Value;
+
+/// Parameters of a fleet run: `missions` copies of `base`, reseeded
+/// `base_seed..base_seed + missions`, over `threads` workers.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub missions: usize,
+    pub threads: usize,
+    pub base_seed: u64,
+    pub base: MissionConfig,
+    pub soc: SocConfig,
+}
+
+impl FleetConfig {
+    /// The per-mission configs this fleet will run (deterministic seeds).
+    pub fn mission_cfgs(&self) -> Vec<MissionConfig> {
+        (0..self.missions)
+            .map(|i| self.base.with_seed(self.base_seed.wrapping_add(i as u64)))
+            .collect()
+    }
+}
+
+/// Five-number summary of one metric across a fleet's missions.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetStat {
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl FleetStat {
+    fn of(mut xs: Vec<f64>) -> FleetStat {
+        if xs.is_empty() {
+            return FleetStat::default();
+        }
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        FleetStat {
+            min: xs[0],
+            p50: percentile(&xs, 0.50),
+            p95: percentile(&xs, 0.95),
+            max: xs[xs.len() - 1],
+            mean,
+        }
+    }
+
+    fn to_json(self) -> Value {
+        Value::obj(vec![
+            ("min", Value::Num(self.min)),
+            ("p50", Value::Num(self.p50)),
+            ("p95", Value::Num(self.p95)),
+            ("max", Value::Num(self.max)),
+            ("mean", Value::Num(self.mean)),
+        ])
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice, `q` in [0, 1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
+}
+
+/// Aggregate result of a fleet run. `reports[i]` is mission `i`'s report,
+/// independent of which worker ran it.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub reports: Vec<MissionReport>,
+    pub threads: usize,
+    /// Wall-clock of the whole fleet (max over workers, not the sum).
+    pub wall_s: f64,
+}
+
+impl FleetReport {
+    /// Summary statistics of `metric` across missions.
+    pub fn stat(&self, metric: impl Fn(&MissionReport) -> f64) -> FleetStat {
+        FleetStat::of(self.reports.iter().map(metric).collect())
+    }
+
+    /// Total simulated seconds across the fleet.
+    pub fn sim_s_total(&self) -> f64 {
+        self.reports.iter().map(|r| r.sim_s).sum()
+    }
+
+    /// Total energy across the fleet (J).
+    pub fn energy_j_total(&self) -> f64 {
+        self.reports.iter().map(|r| r.energy_j).sum()
+    }
+
+    /// Fleet-level speedup over real time: simulated seconds per wall second.
+    pub fn realtime_factor(&self) -> f64 {
+        self.sim_s_total() / self.wall_s.max(1e-9)
+    }
+
+    /// Human-readable rollup table for the CLI.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "fleet: {} missions on {} threads — {:.2} s simulated in {:.2} s wall ({:.1}x real time)\n",
+            self.reports.len(),
+            self.threads,
+            self.sim_s_total(),
+            self.wall_s,
+            self.realtime_factor(),
+        ));
+        s.push_str(&format!(
+            "{:<18}{:>12}{:>12}{:>12}{:>12}{:>12}\n",
+            "metric", "min", "p50", "p95", "max", "mean"
+        ));
+        let rows: [(&str, fn(&MissionReport) -> f64); 5] = [
+            ("avg power (mW)", |r| r.avg_power_w * 1e3),
+            ("energy (mJ)", |r| r.energy_j * 1e3),
+            ("events (k)", |r| r.events_total as f64 / 1e3),
+            ("avoid frac (%)", |r| r.avoid_fraction * 100.0),
+            ("dropped windows", |r| r.dropped_windows as f64),
+        ];
+        for (label, metric) in rows {
+            let st = self.stat(metric);
+            s.push_str(&format!(
+                "{label:<18}{:>12.3}{:>12.3}{:>12.3}{:>12.3}{:>12.3}\n",
+                st.min, st.p50, st.p95, st.max, st.mean
+            ));
+        }
+        s
+    }
+
+    /// JSON form for `kraken fleet --json`.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("missions", Value::Num(self.reports.len() as f64)),
+            ("threads", Value::Num(self.threads as f64)),
+            ("wall_s", Value::Num(self.wall_s)),
+            ("sim_s_total", Value::Num(self.sim_s_total())),
+            ("energy_j_total", Value::Num(self.energy_j_total())),
+            ("avg_power_w", self.stat(|r| r.avg_power_w).to_json()),
+            ("energy_j", self.stat(|r| r.energy_j).to_json()),
+            ("events_total", self.stat(|r| r.events_total as f64).to_json()),
+            ("reports", Value::Arr(self.reports.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+}
+
+/// Run one mission per config in `cfgs`, at most `threads` at a time.
+/// Report order matches config order; any mission failure fails the fleet.
+pub fn run_configs(
+    soc: &SocConfig,
+    cfgs: &[MissionConfig],
+    threads: usize,
+) -> crate::Result<FleetReport> {
+    let wall_start = std::time::Instant::now();
+    let threads = threads.clamp(1, cfgs.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<crate::Result<MissionReport>>>> =
+        Mutex::new((0..cfgs.len()).map(|_| None).collect());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cfgs.len() {
+                    break;
+                }
+                // one Soc per worker per mission, built on this thread
+                let result = Mission::new(soc.clone(), cfgs[i].clone())
+                    .and_then(|mut m| m.run());
+                slots.lock().unwrap()[i] = Some(result);
+            });
+        }
+    });
+
+    let mut reports = Vec::with_capacity(cfgs.len());
+    for (i, slot) in slots.into_inner().unwrap().into_iter().enumerate() {
+        match slot {
+            Some(Ok(r)) => reports.push(r),
+            Some(Err(e)) => return Err(anyhow::anyhow!("mission {i} failed: {e:#}")),
+            None => return Err(anyhow::anyhow!("mission {i} was never scheduled")),
+        }
+    }
+    Ok(FleetReport { reports, threads, wall_s: wall_start.elapsed().as_secs_f64() })
+}
+
+/// Run a [`FleetConfig`]: `missions` reseeded copies of the base config.
+pub fn run_fleet(cfg: &FleetConfig) -> crate::Result<FleetReport> {
+    run_configs(&cfg.soc, &cfg.mission_cfgs(), cfg.threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_base() -> MissionConfig {
+        MissionConfig {
+            duration_s: 0.1,
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_runs_and_orders_reports_by_mission() {
+        let fc = FleetConfig {
+            missions: 3,
+            threads: 2,
+            base_seed: 100,
+            base: tiny_base(),
+            soc: SocConfig::kraken(),
+        };
+        let fr = run_fleet(&fc).unwrap();
+        assert_eq!(fr.reports.len(), 3);
+        assert!(fr.wall_s > 0.0);
+        assert!(fr.energy_j_total() > 0.0);
+        // distinct seeds -> distinct event streams (overwhelmingly likely
+        // for the corridor scene's seeded obstacles + DVS noise)
+        let ev: Vec<u64> = fr.reports.iter().map(|r| r.events_total).collect();
+        assert!(ev.windows(2).any(|w| w[0] != w[1]), "seeds look identical: {ev:?}");
+    }
+
+    #[test]
+    fn thread_count_does_not_change_reports() {
+        let mk = |threads| FleetConfig {
+            missions: 4,
+            threads,
+            base_seed: 7,
+            base: tiny_base(),
+            soc: SocConfig::kraken(),
+        };
+        let a = run_fleet(&mk(1)).unwrap();
+        let b = run_fleet(&mk(4)).unwrap();
+        for (ra, rb) in a.reports.iter().zip(&b.reports) {
+            assert_eq!(ra.events_total, rb.events_total);
+            assert_eq!(ra.sne_inf, rb.sne_inf);
+            assert_eq!(
+                format!("{:.12e}", ra.energy_j),
+                format!("{:.12e}", rb.energy_j)
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        let st = FleetStat::of(vec![3.0, 1.0, 2.0]);
+        assert_eq!(st.min, 1.0);
+        assert_eq!(st.max, 3.0);
+        assert_eq!(st.p50, 2.0);
+        assert!((st.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_mentions_fleet_shape() {
+        let fc = FleetConfig {
+            missions: 2,
+            threads: 2,
+            base_seed: 1,
+            base: tiny_base(),
+            soc: SocConfig::kraken(),
+        };
+        let fr = run_fleet(&fc).unwrap();
+        let s = fr.summary();
+        assert!(s.contains("2 missions"));
+        assert!(s.contains("avg power"));
+        let json = fr.to_json();
+        assert_eq!(json.get("missions").and_then(|v| v.as_f64()), Some(2.0));
+    }
+}

@@ -2,29 +2,45 @@
 //! (Fig. 2): run all three visual tasks *concurrently* on one SoC, each on
 //! the engine that suits its input modality, inside the power envelope.
 //!
-//! Structure:
-//! * [`pipeline`] — the mission pipeline: a deterministic discrete-event
-//!   simulation of sensors -> peripherals -> DMA -> engines -> fusion,
-//!   with cycle-level engine timing and Joule-level energy accounting.
-//!   Functional neural compute executes through the PJRT [`crate::runtime`]
-//!   when artifacts are available (and degrades to analytical-only when
-//!   not, for fast sweeps).
+//! Structure (DESIGN.md §3):
+//! * [`engine`] — the `Engine` trait (`poll_ready` / `dispatch` /
+//!   `complete` / `idle_power`) and the SNE/CUTIE/PULP adapter structs
+//!   that put all three accelerators behind one scheduling contract.
+//! * [`scheduler`] — a generic discrete-event scheduler: a binary-heap
+//!   event queue keyed by nanosecond timestamps with deterministic
+//!   tie-breaking. The mission's time base.
+//! * [`pipeline`] — the mission pipeline: sensors -> peripherals -> DMA ->
+//!   engines -> fusion as typed scheduler events, with cycle-level engine
+//!   timing and Joule-level energy accounting. Functional neural compute
+//!   executes through the PJRT [`crate::runtime`] when artifacts are
+//!   available (and degrades to analytical-only when not, for fast sweeps).
+//! * [`fleet`] — N independent missions in parallel across OS threads (one
+//!   SoC per worker, deterministic per-mission seeds), aggregated into a
+//!   [`fleet::FleetReport`] with percentile statistics. The scaling layer
+//!   the sweeps and the `kraken fleet` subcommand run on.
 //! * [`fusion`] — combining SNE optical flow, CUTIE classification and
 //!   PULP DroNet outputs into navigation commands.
 //! * [`power_mgr`] — the FC's power policy: gate idle engines, DVFS.
 //! * [`telemetry`] — periodic mission snapshots for the CLI/bench reports.
 //!
-//! Single-threaded by design: the FC that runs this logic on the die is a
-//! single RISC-V core; a deterministic DES is both faithful and exactly
-//! reproducible (every mission with the same seed produces byte-identical
-//! telemetry).
+//! Each *mission* is single-threaded by design: the FC that runs this
+//! logic on the die is a single RISC-V core, and a deterministic DES is
+//! both faithful and exactly reproducible (every mission with the same
+//! seed produces byte-identical telemetry). The fleet layer parallelizes
+//! *across* missions — worker count never changes any mission's report.
 
+pub mod engine;
+pub mod fleet;
 pub mod fusion;
 pub mod pipeline;
 pub mod power_mgr;
+pub mod scheduler;
 pub mod telemetry;
 
+pub use engine::{CutieAdapter, Engine, EngineSlot, PulpAdapter, SneAdapter};
+pub use fleet::{run_configs, run_fleet, FleetConfig, FleetReport};
 pub use fusion::{FusionState, NavCommand};
 pub use pipeline::{Mission, MissionConfig, MissionReport};
 pub use power_mgr::PowerPolicy;
+pub use scheduler::{Scheduled, Scheduler};
 pub use telemetry::Snapshot;

@@ -1,0 +1,174 @@
+//! Generic discrete-event scheduler: the coordinator's time base.
+//!
+//! A binary-heap event queue keyed by `(t_ns, prio, seq)`. Events fire in
+//! nanosecond-timestamp order; `prio` breaks ties between event classes at
+//! the same instant (a window must close before the next opens before a
+//! frame lands); `seq` (insertion order) breaks the remaining ties, so the
+//! schedule is a total order and every run over the same event set replays
+//! identically — the bit-reproducibility the mission determinism tests pin.
+//!
+//! This replaces the hand-rolled per-window/per-frame interleaving the old
+//! `Pipeline::run()` carried: producers push typed events, the mission loop
+//! pops them in time order and dispatches to the [`crate::coordinator::engine::Engine`]s.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One event popped from the queue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scheduled<T> {
+    /// Fire time (simulated ns).
+    pub t_ns: u64,
+    /// Tie-break class at equal timestamps (lower fires first).
+    pub prio: u8,
+    pub payload: T,
+}
+
+/// Internal heap entry; `Ord` is reversed so the max-heap pops the
+/// smallest `(t_ns, prio, seq)` key first.
+#[derive(Debug)]
+struct Entry<T> {
+    t_ns: u64,
+    prio: u8,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> Entry<T> {
+    fn key(&self) -> (u64, u8, u64) {
+        (self.t_ns, self.prio, self.seq)
+    }
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.key().cmp(&self.key())
+    }
+}
+
+/// Discrete-event scheduler over payloads of type `T`.
+#[derive(Debug)]
+pub struct Scheduler<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+    now_ns: u64,
+}
+
+impl<T> Default for Scheduler<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Scheduler<T> {
+    pub fn new() -> Self {
+        Scheduler { heap: BinaryHeap::new(), seq: 0, now_ns: 0 }
+    }
+
+    /// Schedule `payload` at absolute time `t_ns`. Scheduling into the past
+    /// (before the most recently popped event) would break causality, so it
+    /// is debug-asserted.
+    pub fn push(&mut self, t_ns: u64, prio: u8, payload: T) {
+        debug_assert!(
+            t_ns >= self.now_ns,
+            "scheduling into the past: {t_ns} < now {}",
+            self.now_ns
+        );
+        let entry = Entry { t_ns, prio, seq: self.seq, payload };
+        self.seq += 1;
+        self.heap.push(entry);
+    }
+
+    /// Pop the next event in `(t_ns, prio, seq)` order and advance the
+    /// scheduler clock to its fire time.
+    pub fn pop(&mut self) -> Option<Scheduled<T>> {
+        let e = self.heap.pop()?;
+        self.now_ns = self.now_ns.max(e.t_ns);
+        Some(Scheduled { t_ns: e.t_ns, prio: e.prio, payload: e.payload })
+    }
+
+    /// Fire time of the next event without popping it.
+    pub fn peek_t_ns(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.t_ns)
+    }
+
+    /// Time of the most recently popped event (simulated ns).
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_timestamp_order() {
+        let mut s = Scheduler::new();
+        for &t in &[50u64, 10, 40, 10, 30] {
+            s.push(t, 0, t);
+        }
+        let mut out = Vec::new();
+        while let Some(e) = s.pop() {
+            out.push(e.t_ns);
+        }
+        assert_eq!(out, vec![10, 10, 30, 40, 50]);
+    }
+
+    #[test]
+    fn prio_breaks_timestamp_ties() {
+        let mut s = Scheduler::new();
+        s.push(100, 2, "frame");
+        s.push(100, 0, "window_end");
+        s.push(100, 1, "window_start");
+        let order: Vec<_> = std::iter::from_fn(|| s.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec!["window_end", "window_start", "frame"]);
+    }
+
+    #[test]
+    fn seq_preserves_insertion_order_on_full_ties() {
+        let mut s = Scheduler::new();
+        for i in 0..20u64 {
+            s.push(7, 3, i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| s.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_tracks_popped_events() {
+        let mut s = Scheduler::new();
+        assert_eq!(s.now_ns(), 0);
+        s.push(5, 0, ());
+        s.push(9, 0, ());
+        assert_eq!(s.peek_t_ns(), Some(5));
+        s.pop();
+        assert_eq!(s.now_ns(), 5);
+        s.pop();
+        assert_eq!(s.now_ns(), 9);
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+    }
+}

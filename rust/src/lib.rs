@@ -21,6 +21,21 @@
 //! artifacts and executed through PJRT ([`runtime`]) from the Rust hot path.
 //! Python never runs at request time.
 //!
+//! The [`coordinator`] — the part of the repo that models the FC firmware —
+//! is layered as (DESIGN.md §3):
+//!
+//! * an [`coordinator::engine::Engine`] trait (`poll_ready` / `dispatch` /
+//!   `complete` / `idle_power`) with one adapter per accelerator,
+//! * a generic discrete-event [`coordinator::scheduler::Scheduler`]
+//!   (binary-heap event queue, ns timestamps, deterministic tie-breaks)
+//!   that drives the mission [`coordinator::pipeline`], and
+//! * a [`coordinator::fleet`] runner that executes N independent missions
+//!   in parallel across OS threads with per-mission seeds — the scaling
+//!   substrate for sweeps and batch serving (`kraken fleet`).
+//!
+//! Every mission is bit-reproducible for its seed, and a fleet's mission
+//! reports are bit-identical to serial runs regardless of thread count.
+//!
 //! See `DESIGN.md` for the substitution table, calibration anchors, and the
 //! experiment index mapping each paper figure/table to a bench target.
 //!
@@ -36,9 +51,33 @@
 //! println!("{}", soc.report());
 //! ```
 //!
-//! The end-to-end driver (`examples/mission.rs`) runs the Fig. 2 application:
-//! DVS events -> SNE optical flow, frames -> CUTIE classification + PULP
-//! DroNet, fused into navigation commands, with live power telemetry.
+//! Running missions:
+//!
+//! ```no_run
+//! use kraken::config::SocConfig;
+//! use kraken::coordinator::{run_fleet, FleetConfig, Mission, MissionConfig};
+//!
+//! // one mission, bit-reproducible for its seed
+//! let mut m = Mission::new(SocConfig::kraken(), MissionConfig::default())?;
+//! let report = m.run()?;
+//! println!("{} events, {:.1} mW", report.events_total, report.avg_power_w * 1e3);
+//!
+//! // eight missions in parallel, seeds 42..50
+//! let fleet = run_fleet(&FleetConfig {
+//!     missions: 8,
+//!     threads: 4,
+//!     base_seed: 42,
+//!     base: MissionConfig::default(),
+//!     soc: SocConfig::kraken(),
+//! })?;
+//! print!("{}", fleet.summary());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The end-to-end driver (`rust/examples/mission.rs`) runs the Fig. 2
+//! application: DVS events -> SNE optical flow, frames -> CUTIE
+//! classification + PULP DroNet, fused into navigation commands, with live
+//! power telemetry.
 
 pub mod baselines;
 pub mod config;

@@ -9,6 +9,7 @@
 //! * `kraken sweep pulp-precision` — Fig. 4 series (E2)
 //! * `kraken sweep vdd`         — efficiency vs voltage (DVFS curves)
 //! * `kraken run`               — the Fig. 2 mission (E6), live telemetry
+//! * `kraken fleet`             — N missions in parallel (coordinator::fleet)
 //! * `kraken check-artifacts`   — load + execute every AOT artifact once
 //!
 //! Argument parsing is hand-rolled (the build is fully offline); see
@@ -16,7 +17,7 @@
 
 use kraken::baselines::{BinarEye, Tianjic, Vega};
 use kraken::config::{Precision, SocConfig};
-use kraken::coordinator::{Mission, MissionConfig, PowerPolicy};
+use kraken::coordinator::{run_fleet, FleetConfig, Mission, MissionConfig, PowerPolicy};
 use kraken::cutie::CutieEngine;
 use kraken::metrics::{fmt_eff, fmt_energy, fmt_power, Series};
 use kraken::nets;
@@ -41,6 +42,10 @@ COMMANDS:
   run [--duration S] [--scene corridor|bar|edge|ring|noise]
       [--seed N] [--artifacts DIR] [--vdd V] [--live] [--json]
                                   run the Fig. 2 mission
+  fleet [--missions N] [--threads T] [--duration S] [--scene ...]
+        [--seed BASE] [--vdd V] [--json]
+                                  run N missions in parallel (seeds
+                                  BASE..BASE+N, one SoC per worker)
   check-artifacts [--dir DIR]     verify + execute every AOT artifact
   help                            this text
 ";
@@ -122,6 +127,16 @@ fn run() -> kraken::Result<()> {
             let live = args.flag("live");
             let json = args.flag("json");
             run_mission(cfg, duration, &scene, seed, artifacts, vdd, live, json)
+        }
+        Some("fleet") => {
+            let missions: usize = args.opt("missions").map_or(Ok(8), |s| s.parse())?;
+            let threads: usize = args.opt("threads").map_or(Ok(4), |s| s.parse())?;
+            let duration: f64 = args.opt("duration").map_or(Ok(1.0), |s| s.parse())?;
+            let scene = args.opt("scene").unwrap_or_else(|| "corridor".into());
+            let seed: u64 = args.opt("seed").map_or(Ok(7), |s| s.parse())?;
+            let vdd: f64 = args.opt("vdd").map_or(Ok(0.8), |s| s.parse())?;
+            let json = args.flag("json");
+            run_fleet_cmd(cfg, missions, threads, duration, &scene, seed, vdd, json)
         }
         Some("check-artifacts") => {
             let dir = args.opt("dir").unwrap_or_else(|| "artifacts".into());
@@ -256,6 +271,17 @@ fn sweep(cfg: &SocConfig, what: &str, json: bool) -> kraken::Result<()> {
     Ok(())
 }
 
+fn parse_scene(name: &str, seed: u64) -> kraken::Result<SceneKind> {
+    Ok(match name {
+        "corridor" => SceneKind::Corridor { speed_per_s: 0.5, seed },
+        "bar" => SceneKind::RotatingBar { omega_rad_s: 6.0 },
+        "edge" => SceneKind::TranslatingEdge { vel_per_s: 0.4 },
+        "ring" => SceneKind::ExpandingRing { rate_per_s: 0.5 },
+        "noise" => SceneKind::Noise { density: 0.05, seed },
+        other => anyhow::bail!("unknown scene '{other}'"),
+    })
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_mission(
     cfg: SocConfig,
@@ -267,14 +293,7 @@ fn run_mission(
     live: bool,
     json: bool,
 ) -> kraken::Result<()> {
-    let scene = match scene {
-        "corridor" => SceneKind::Corridor { speed_per_s: 0.5, seed },
-        "bar" => SceneKind::RotatingBar { omega_rad_s: 6.0 },
-        "edge" => SceneKind::TranslatingEdge { vel_per_s: 0.4 },
-        "ring" => SceneKind::ExpandingRing { rate_per_s: 0.5 },
-        "noise" => SceneKind::Noise { density: 0.05, seed },
-        other => anyhow::bail!("unknown scene '{other}'"),
-    };
+    let scene = parse_scene(scene, seed)?;
     let mcfg = MissionConfig {
         duration_s: duration,
         scene,
@@ -326,10 +345,55 @@ fn run_mission(
         fmt_energy(r.energy_j),
         fmt_energy(r.energy_j / r.commands.max(1) as f64)
     );
+    println!(
+        "idle  : {} engine clocked-idle floor at mission end (gated engines excluded)",
+        fmt_power(mission.engines_idle_power_w())
+    );
     if r.runtime_calls > 0 {
         println!("PJRT  : {} artifact executions (functional path live)", r.runtime_calls);
     } else {
         println!("PJRT  : analytical-only run (pass --artifacts artifacts)");
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_fleet_cmd(
+    cfg: SocConfig,
+    missions: usize,
+    threads: usize,
+    duration: f64,
+    scene: &str,
+    base_seed: u64,
+    vdd: f64,
+    json: bool,
+) -> kraken::Result<()> {
+    anyhow::ensure!(missions > 0, "--missions must be at least 1");
+    let base = MissionConfig {
+        duration_s: duration,
+        scene: parse_scene(scene, base_seed)?,
+        seed: base_seed,
+        policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
+        ..Default::default()
+    };
+    let fleet = FleetConfig { missions, threads, base_seed, base, soc: cfg };
+    let report = run_fleet(&fleet)?;
+    if json {
+        println!("{}", report.to_json().pretty());
+        return Ok(());
+    }
+    print!("{}", report.summary());
+    println!("\nper-mission reports (seed = base + index):");
+    for (i, r) in report.reports.iter().enumerate() {
+        let (sr, cr, pr) = r.rates();
+        println!(
+            "  #{i:<3} seed {:<6} SNE {sr:>6.0} | CUTIE {cr:>5.0} | PULP {pr:>5.0} inf/s \
+             | {:>9} events | avg {} | dropped {}",
+            base_seed.wrapping_add(i as u64),
+            r.events_total,
+            fmt_power(r.avg_power_w),
+            r.dropped_windows,
+        );
     }
     Ok(())
 }

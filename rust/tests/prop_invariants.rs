@@ -2,6 +2,9 @@
 //! engine models (randomized via util::prop; deterministic seeds).
 
 use kraken::config::{Precision, SocConfig};
+use kraken::coordinator::pipeline::rebin_events;
+use kraken::coordinator::scheduler::Scheduler;
+use kraken::coordinator::{run_fleet, FleetConfig, Mission, MissionConfig};
 use kraken::cutie::CutieEngine;
 use kraken::event::{Event, EventWindow, Polarity};
 use kraken::nets::{ConvLayer, SnnDesc};
@@ -148,6 +151,110 @@ fn prop_split_by_time_partitions_events() {
         for p in &parts {
             prop_assert!(p.span_ns() < dt, "sub-window exceeds dt");
         }
+        Ok(())
+    });
+}
+
+// --- coordinator: scheduler / fleet / binning ---------------------------------
+
+#[test]
+fn prop_scheduler_pops_in_time_order() {
+    check("scheduler is a total order on (t, prio, insertion)", 100, |rng| {
+        let mut s = Scheduler::new();
+        let n = rng.gen_range_usize(1, 200);
+        let mut keys = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = rng.gen_below(1_000_000);
+            let prio = rng.gen_range_usize(0, 4) as u8;
+            s.push(t, prio, i);
+            keys.push((t, prio, i));
+        }
+        let mut popped = Vec::with_capacity(n);
+        let mut last_t = 0u64;
+        while let Some(e) = s.pop() {
+            prop_assert!(e.t_ns >= last_t, "time went backwards");
+            last_t = e.t_ns;
+            popped.push((e.t_ns, e.prio, e.payload));
+        }
+        // seq is assigned in push order, so the expected order is the
+        // stable sort of the insertion sequence by (t, prio)
+        let mut want = keys;
+        want.sort();
+        prop_assert!(popped == want, "scheduler broke (t, prio, insertion) order");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fleet_equals_serial_missions() {
+    check("fleet of 4 == 4 serial runs, report for report", 3, |rng| {
+        let base_seed = rng.gen_below(10_000);
+        let base = MissionConfig {
+            duration_s: 0.1,
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        };
+        let fleet = run_fleet(&FleetConfig {
+            missions: 4,
+            threads: 4,
+            base_seed,
+            base: base.clone(),
+            soc: SocConfig::kraken(),
+        })
+        .unwrap();
+        for i in 0..4u64 {
+            let cfg = base.with_seed(base_seed + i);
+            let mut m = Mission::new(SocConfig::kraken(), cfg).unwrap();
+            let want = m.run().unwrap();
+            let got = &fleet.reports[i as usize];
+            prop_assert!(
+                got.events_total == want.events_total
+                    && got.sne_inf == want.sne_inf
+                    && got.cutie_inf == want.cutie_inf
+                    && got.pulp_inf == want.pulp_inf
+                    && got.commands == want.commands,
+                "mission {i}: counters diverge from serial run"
+            );
+            prop_assert!(
+                format!("{:.15e}", got.energy_j) == format!("{:.15e}", want.energy_j),
+                "mission {i}: energy diverges ({} vs {})",
+                got.energy_j,
+                want.energy_j
+            );
+            prop_assert!(
+                got.last_commands == want.last_commands,
+                "mission {i}: command streams diverge"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rebin_edge_cases() {
+    check("rebin_events: empty / single-bin / non-divisible windows", 50, |rng| {
+        // empty stream: right shape, all zeros
+        let empty = EventWindow::new(132, 128);
+        let bins = rebin_events(&empty, 64, 64, 5);
+        prop_assert!(
+            bins.len() == 5
+                && bins.iter().all(|b| b.len() == 2 * 64 * 64 && b.iter().all(|&v| v == 0.0)),
+            "empty stream must produce zeroed bins"
+        );
+        // single bin: everything lands in it
+        let n = rng.gen_range_usize(1, 300);
+        let win = random_window(rng, 132, 128, n);
+        let one = rebin_events(&win, 64, 64, 1);
+        prop_assert!(one.len() == 1, "single-bin shape");
+        let total: f32 = one[0].iter().sum();
+        prop_assert!(total as usize == n, "single-bin mass: {total} vs {n}");
+        // non-divisible: a span that is not a multiple of t_bins still
+        // conserves mass and never indexes out of range (would panic)
+        let t_bins = rng.gen_range_usize(2, 9);
+        let out = rebin_events(&win, 40, 40, t_bins);
+        prop_assert!(out.len() == t_bins, "bin count");
+        let total: f32 = out.iter().flat_map(|b| b.iter()).sum();
+        prop_assert!(total as usize == n, "mass under non-divisible binning");
         Ok(())
     });
 }

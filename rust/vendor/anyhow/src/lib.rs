@@ -1,0 +1,182 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build is fully offline (no registry access), so the subset of
+//! `anyhow` this crate actually uses is vendored here with the same API:
+//!
+//! * [`Error`] — an erased error with an optional source chain,
+//! * [`Result`] — `Result<T, Error>` with the error type defaulted,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros,
+//! * `impl From<E> for Error` for any `std::error::Error` (so `?` works).
+//!
+//! `{:#}` formatting prints the full cause chain like upstream anyhow.
+//! Replacing this with the real crate is a one-line Cargo.toml change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An erased error: a message plus an optional boxed source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<M: fmt::Display>(self, message: M) -> Self {
+        Error { msg: format!("{message}: {}", self.msg), source: self.source }
+    }
+
+    /// Iterate the cause chain (deepest last), starting at this error.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: self.source.as_ref().map(|b| &**b as &(dyn StdError + 'static)) }
+    }
+}
+
+/// Iterator over an [`Error`]'s source chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+// Like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes this blanket conversion legal.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            // the boxed source's own Display is already `self.msg`; start
+            // the printed chain one level below it
+            let mut cur = self
+                .source
+                .as_ref()
+                .and_then(|b| (&**b as &(dyn StdError + 'static)).source());
+            while let Some(e) = cur {
+                write!(f, ": {e}")?;
+                cur = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<_> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, e) in causes.iter().enumerate() {
+                write!(f, "\n    {i}: {e}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "missing file");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(3).unwrap(), 3);
+        assert_eq!(inner(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(inner(7).unwrap_err().to_string(), "unlucky 7");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn alternate_format_prints_chain() {
+        let e = Error::from(io_err()).context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest: missing file");
+    }
+
+    #[test]
+    fn chain_walks_sources() {
+        let e = Error::from(io_err());
+        assert_eq!(e.chain().count(), 1);
+        assert!(Error::msg("no source").chain().next().is_none());
+    }
+}

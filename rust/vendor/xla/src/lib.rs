@@ -1,0 +1,159 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The container this repo builds in has no `xla_extension` shared library
+//! and no network to fetch one, so the real crate cannot link. This stub
+//! mirrors the exact API surface `kraken::runtime::executor` uses and fails
+//! *at runtime* when a PJRT client is requested, which the coordinator
+//! already handles: with no `artifacts/` directory present, missions run
+//! analytical-only and never construct a client.
+//!
+//! Swapping this path dependency for the real `xla` crate re-enables the
+//! functional artifact path with no call-site changes (DESIGN.md §6).
+
+use std::fmt;
+
+const UNAVAILABLE: &str = "PJRT backend unavailable: built against the offline xla stub \
+     (vendor/xla); functional artifact execution is disabled in this environment";
+
+/// Error type matching the shape of the real crate's.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Error(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+
+/// A host-side tensor handle.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from host data.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    /// Reinterpret with a new shape.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    /// Decompose a top-level tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+
+    /// Copy the literal's elements out to a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// A device-resident output buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on one replica; outputs indexed `[replica][output]`.
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT backend unavailable"));
+    }
+
+    #[test]
+    fn literal_construction_is_cheap_but_execution_fails() {
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
