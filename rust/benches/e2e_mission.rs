@@ -14,10 +14,11 @@
 
 use kraken::config::SocConfig;
 use kraken::coordinator::{
-    run_configs, run_fleet, FleetConfig, Mission, MissionConfig, MissionReport, PowerPolicy,
+    run_fleet, FleetConfig, Mission, MissionConfig, MissionReport, PowerPolicy,
 };
 use kraken::metrics::fmt_power;
 use kraken::sensors::scene::SceneKind;
+use kraken::serve::grid::{run_grid, GridConfig};
 use kraken::util::bench::section;
 
 fn mission_cfg(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> MissionConfig {
@@ -74,16 +75,17 @@ fn main() {
         rf.sim_s / rf.wall_s.max(1e-9)
     );
 
-    section("scene sweep (fleet, analytical): activity drives SNE energy share");
+    section("scene sweep (grid, analytical): activity drives SNE energy share");
     let scenes = [
         ("static edge (noise only)", SceneKind::TranslatingEdge { vel_per_s: 0.0 }),
         ("corridor flight", corridor),
         ("fast rotating bar", SceneKind::RotatingBar { omega_rad_s: 12.0 }),
         ("30% random flicker", SceneKind::Noise { density: 0.3, seed: 1 }),
     ];
-    let cfgs: Vec<MissionConfig> =
-        scenes.iter().map(|&(_, scene)| mission_cfg(1.0, false, 0.8, scene)).collect();
-    let fleet = run_configs(&soc, &cfgs, 4).unwrap();
+    // a single-axis config grid over the scene kinds (serve::grid)
+    let mut scene_grid = GridConfig::new(soc.clone(), mission_cfg(1.0, false, 0.8, corridor), 4);
+    scene_grid.scenes = scenes.iter().map(|&(_, scene)| scene).collect();
+    let fleet = run_grid(&scene_grid).unwrap().fleet;
     println!(
         "{:<36} {:>10} {:>12} {:>12}",
         "scene", "events", "SNE power", "SoC power"
@@ -103,15 +105,15 @@ fn main() {
         fleet.realtime_factor()
     );
 
-    section("voltage sweep (fleet, analytical): mission power vs DVFS");
+    section("voltage sweep (grid, analytical): mission power vs DVFS");
     let vdds = [0.8, 0.7, 0.6, 0.5];
-    let cfgs: Vec<MissionConfig> =
-        vdds.iter().map(|&vdd| mission_cfg(1.0, false, vdd, corridor)).collect();
-    let fleet = run_configs(&soc, &cfgs, 4).unwrap();
-    for (vdd, r) in vdds.iter().zip(&fleet.reports) {
+    let mut vdd_grid = GridConfig::new(soc.clone(), mission_cfg(1.0, false, 0.8, corridor), 4);
+    vdd_grid.vdds = vdds.to_vec();
+    let gr = run_grid(&vdd_grid).unwrap();
+    for (cell, r) in gr.cells.iter().zip(&gr.fleet.reports) {
         let (_, c, p) = r.rates();
         println!(
-            "vdd {vdd:.1} V: {}  CUTIE {c:.0} inf/s  PULP {p:.0} inf/s  dropped {}",
+            "{cell}: {}  CUTIE {c:.0} inf/s  PULP {p:.0} inf/s  dropped {}",
             fmt_power(r.avg_power_w),
             r.dropped_windows
         );

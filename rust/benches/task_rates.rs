@@ -10,12 +10,13 @@
 //! Run: `cargo bench --bench task_rates`
 
 use kraken::config::{Precision, SocConfig};
-use kraken::coordinator::{run_configs, MissionConfig, PowerPolicy};
+use kraken::coordinator::{MissionConfig, PowerPolicy};
 use kraken::cutie::CutieEngine;
 use kraken::metrics::{fmt_energy, fmt_power};
 use kraken::nets;
 use kraken::pulp::kernels as pk;
 use kraken::sensors::scene::SceneKind;
+use kraken::serve::grid::{run_grid, GridConfig};
 use kraken::sne::SneEngine;
 use kraken::util::bench::section;
 
@@ -72,23 +73,26 @@ fn main() {
     assert!((1.0 / pj.t_s - 28.0).abs() / 28.0 < 0.03);
     println!("all §III anchors reproduced");
 
-    section("DVFS sweep per task (fleet): model rate vs achieved mission rate");
-    // One full mission per voltage point, run in parallel through the
-    // fleet layer — the achieved CUTIE/PULP rates show where DVFS slowdown
-    // turns into backpressure drops against the 30 fps frame cadence.
+    section("DVFS sweep per task (grid): model rate vs achieved mission rate");
+    // One full mission per voltage point, expressed as a single-axis
+    // config grid (serve::grid) and sharded across the fleet layer — the
+    // achieved CUTIE/PULP rates show where DVFS slowdown turns into
+    // backpressure drops against the 30 fps frame cadence.
     let vdds: Vec<f64> = (0..=6).map(|i| 0.5 + 0.05 * i as f64).collect();
-    let mission_cfgs: Vec<MissionConfig> = vdds
-        .iter()
-        .map(|&v| MissionConfig {
+    let mut grid = GridConfig::new(
+        cfg.clone(),
+        MissionConfig {
             duration_s: 0.5,
             scene: SceneKind::Corridor { speed_per_s: 0.6, seed: 42 },
             seed: 42,
             dvs_sample_hz: 400.0,
-            policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(v) },
+            policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(0.8) },
             ..Default::default()
-        })
-        .collect();
-    let fleet = run_configs(&cfg, &mission_cfgs, 4).unwrap();
+        },
+        4,
+    );
+    grid.vdds = vdds.clone();
+    let fleet = run_grid(&grid).unwrap().fleet;
     println!(
         "{:>6} {:>14} {:>14} {:>14} {:>13} {:>13}",
         "VDD", "SNE@20% i/s", "CUTIE i/s", "DroNet i/s", "CUTIE achv", "PULP achv"

@@ -23,6 +23,11 @@ use crate::util::json::Value;
 
 /// Parameters of a fleet run: `missions` copies of `base`, reseeded
 /// `base_seed..base_seed + missions`, over `threads` workers.
+///
+/// This is the seed-replication special case of a config grid —
+/// [`crate::serve::grid::GridConfig`] generalizes it to cross-products of
+/// parameter axes (vdd × scene × duration × gating policy), and
+/// `GridConfig::from_fleet` reproduces exactly the configs built here.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
     pub missions: usize,
@@ -52,7 +57,8 @@ pub struct FleetStat {
 }
 
 impl FleetStat {
-    fn of(mut xs: Vec<f64>) -> FleetStat {
+    /// Summarize a sample (any order); empty input yields all zeros.
+    pub fn of(mut xs: Vec<f64>) -> FleetStat {
         if xs.is_empty() {
             return FleetStat::default();
         }
@@ -67,7 +73,8 @@ impl FleetStat {
         }
     }
 
-    fn to_json(self) -> Value {
+    /// JSON form (min/p50/p95/max/mean object).
+    pub fn to_json(self) -> Value {
         Value::obj(vec![
             ("min", Value::Num(self.min)),
             ("p50", Value::Num(self.p50)),

@@ -17,7 +17,10 @@
 //! * [`fleet`] — N independent missions in parallel across OS threads (one
 //!   SoC per worker, deterministic per-mission seeds), aggregated into a
 //!   [`fleet::FleetReport`] with percentile statistics. The scaling layer
-//!   the sweeps and the `kraken fleet` subcommand run on.
+//!   the sweeps and the `kraken fleet` subcommand run on, and the substrate
+//!   of the resident serving layer ([`crate::serve`]): the serve worker
+//!   pool and config grids both resolve to the same per-mission configs
+//!   and therefore the same bit-exact reports.
 //! * [`fusion`] — combining SNE optical flow, CUTIE classification and
 //!   PULP DroNet outputs into navigation commands.
 //! * [`power_mgr`] — the FC's power policy: gate idle engines, DVFS.
@@ -38,7 +41,7 @@ pub mod scheduler;
 pub mod telemetry;
 
 pub use engine::{CutieAdapter, Engine, EngineSlot, PulpAdapter, SneAdapter};
-pub use fleet::{run_configs, run_fleet, FleetConfig, FleetReport};
+pub use fleet::{percentile, run_configs, run_fleet, FleetConfig, FleetReport, FleetStat};
 pub use fusion::{FusionState, NavCommand};
 pub use pipeline::{Mission, MissionConfig, MissionReport};
 pub use power_mgr::PowerPolicy;

@@ -36,6 +36,14 @@
 //! Every mission is bit-reproducible for its seed, and a fleet's mission
 //! reports are bit-identical to serial runs regardless of thread count.
 //!
+//! On top of the coordinator sits the [`serve`] layer (`kraken serve`): a
+//! resident request/response service speaking a JSON-lines protocol over
+//! stdio or TCP, with a persistent worker pool (bounded queue, explicit
+//! backpressure), a deterministic result cache (canonical config hash →
+//! byte-identical replay), and config grids ([`serve::grid::GridConfig`],
+//! the cross-product generalization of `FleetConfig`) for sharded
+//! parameter sweeps served as one aggregated report.
+//!
 //! See `DESIGN.md` for the substitution table, calibration anchors, and the
 //! experiment index mapping each paper figure/table to a bench target.
 //!
@@ -90,6 +98,7 @@ pub mod pulp;
 pub mod quant;
 pub mod runtime;
 pub mod sensors;
+pub mod serve;
 pub mod sne;
 pub mod soc;
 pub mod util;

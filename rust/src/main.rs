@@ -10,20 +10,24 @@
 //! * `kraken sweep vdd`         — efficiency vs voltage (DVFS curves)
 //! * `kraken run`               — the Fig. 2 mission (E6), live telemetry
 //! * `kraken fleet`             — N missions in parallel (coordinator::fleet)
+//! * `kraken serve`             — resident mission service (serve::Server)
 //! * `kraken check-artifacts`   — load + execute every AOT artifact once
 //!
 //! Argument parsing is hand-rolled (the build is fully offline); see
-//! `kraken help`.
+//! `kraken help`. A value-taking flag with no value and any leftover
+//! (unknown) arguments are usage errors, never silently ignored.
 
 use kraken::baselines::{BinarEye, Tianjic, Vega};
 use kraken::config::{Precision, SocConfig};
-use kraken::coordinator::{run_fleet, FleetConfig, Mission, MissionConfig, PowerPolicy};
+use kraken::coordinator::{FleetConfig, Mission, MissionConfig, PowerPolicy};
 use kraken::cutie::CutieEngine;
 use kraken::metrics::{fmt_eff, fmt_energy, fmt_power, Series};
 use kraken::nets;
 use kraken::pulp::cluster::PulpCluster;
 use kraken::runtime::Runtime;
 use kraken::sensors::scene::SceneKind;
+use kraken::serve::grid::{run_grid, GridConfig};
+use kraken::serve::Server;
 use kraken::sne::SneEngine;
 use kraken::soc::power::DomainId;
 use kraken::soc::Soc;
@@ -46,6 +50,12 @@ COMMANDS:
         [--seed BASE] [--vdd V] [--json]
                                   run N missions in parallel (seeds
                                   BASE..BASE+N, one SoC per worker)
+  serve [--stdio | --listen ADDR] [--workers N] [--queue N] [--cache-cap N]
+                                  resident mission service: JSON-lines
+                                  requests (run|fleet|grid|stats) answered
+                                  from a persistent worker pool with a
+                                  deterministic result cache (DESIGN.md
+                                  § Serving)
   check-artifacts [--dir DIR]     verify + execute every AOT artifact
   help                            this text
 ";
@@ -57,21 +67,33 @@ struct Args {
 
 impl Args {
     fn new() -> Self {
-        Args { v: std::env::args().skip(1).collect() }
+        Args::from_vec(std::env::args().skip(1).collect())
     }
 
-    /// Remove `--name value` and return the value.
-    fn opt(&mut self, name: &str) -> Option<String> {
+    fn from_vec(v: Vec<String>) -> Self {
+        Args { v }
+    }
+
+    /// Remove `--name value` and return the value. A flag present without
+    /// a value (last token, or followed by another flag) is a usage error,
+    /// not an absent option.
+    fn opt(&mut self, name: &str) -> kraken::Result<Option<String>> {
         let flag = format!("--{name}");
-        if let Some(i) = self.v.iter().position(|a| *a == flag) {
-            if i + 1 < self.v.len() {
-                let val = self.v.remove(i + 1);
-                self.v.remove(i);
-                return Some(val);
-            }
-            self.v.remove(i);
-        }
-        None
+        let Some(i) = self.v.iter().position(|a| *a == flag) else {
+            return Ok(None);
+        };
+        anyhow::ensure!(
+            i + 1 < self.v.len(),
+            "flag --{name} expects a value (see `kraken help`)"
+        );
+        anyhow::ensure!(
+            !self.v[i + 1].starts_with("--"),
+            "flag --{name} expects a value, got '{}'",
+            self.v[i + 1]
+        );
+        let val = self.v.remove(i + 1);
+        self.v.remove(i);
+        Ok(Some(val))
     }
 
     /// Remove `--name` and return whether it was present.
@@ -93,6 +115,17 @@ impl Args {
             Some(self.v.remove(0))
         }
     }
+
+    /// Every token must have been consumed by now: leftover flags or
+    /// positionals are unknown arguments, reported instead of ignored.
+    fn finish(&self) -> kraken::Result<()> {
+        anyhow::ensure!(
+            self.v.is_empty(),
+            "unrecognized arguments: {} (see `kraken help`)",
+            self.v.join(" ")
+        );
+        Ok(())
+    }
 }
 
 fn main() {
@@ -104,42 +137,64 @@ fn main() {
 
 fn run() -> kraken::Result<()> {
     let mut args = Args::new();
-    let cfg = match args.opt("config") {
+    let cfg = match args.opt("config")? {
         Some(p) => SocConfig::from_json_file(&p)?,
         None => SocConfig::kraken(),
     };
     match args.pos().as_deref() {
         Some("report") => {
             let what = args.pos().unwrap_or_default();
+            args.finish()?;
             report(&cfg, &what)
         }
         Some("sweep") => {
             let what = args.pos().unwrap_or_default();
             let json = args.flag("json");
+            args.finish()?;
             sweep(&cfg, &what, json)
         }
         Some("run") => {
-            let duration: f64 = args.opt("duration").map_or(Ok(2.0), |s| s.parse())?;
-            let scene = args.opt("scene").unwrap_or_else(|| "corridor".into());
-            let seed: u64 = args.opt("seed").map_or(Ok(7), |s| s.parse())?;
-            let artifacts = args.opt("artifacts");
-            let vdd: f64 = args.opt("vdd").map_or(Ok(0.8), |s| s.parse())?;
+            let duration: f64 = args.opt("duration")?.map_or(Ok(2.0), |s| s.parse())?;
+            let scene = args.opt("scene")?.unwrap_or_else(|| "corridor".into());
+            let seed: u64 = args.opt("seed")?.map_or(Ok(7), |s| s.parse())?;
+            let artifacts = args.opt("artifacts")?;
+            let vdd: f64 = args.opt("vdd")?.map_or(Ok(0.8), |s| s.parse())?;
             let live = args.flag("live");
             let json = args.flag("json");
+            args.finish()?;
             run_mission(cfg, duration, &scene, seed, artifacts, vdd, live, json)
         }
         Some("fleet") => {
-            let missions: usize = args.opt("missions").map_or(Ok(8), |s| s.parse())?;
-            let threads: usize = args.opt("threads").map_or(Ok(4), |s| s.parse())?;
-            let duration: f64 = args.opt("duration").map_or(Ok(1.0), |s| s.parse())?;
-            let scene = args.opt("scene").unwrap_or_else(|| "corridor".into());
-            let seed: u64 = args.opt("seed").map_or(Ok(7), |s| s.parse())?;
-            let vdd: f64 = args.opt("vdd").map_or(Ok(0.8), |s| s.parse())?;
+            let missions: usize = args.opt("missions")?.map_or(Ok(8), |s| s.parse())?;
+            let threads: usize = args.opt("threads")?.map_or(Ok(4), |s| s.parse())?;
+            let duration: f64 = args.opt("duration")?.map_or(Ok(1.0), |s| s.parse())?;
+            let scene = args.opt("scene")?.unwrap_or_else(|| "corridor".into());
+            let seed: u64 = args.opt("seed")?.map_or(Ok(7), |s| s.parse())?;
+            let vdd: f64 = args.opt("vdd")?.map_or(Ok(0.8), |s| s.parse())?;
             let json = args.flag("json");
+            args.finish()?;
             run_fleet_cmd(cfg, missions, threads, duration, &scene, seed, vdd, json)
         }
+        Some("serve") => {
+            let stdio = args.flag("stdio");
+            let listen = args.opt("listen")?;
+            let workers: usize = args.opt("workers")?.map_or(Ok(4), |s| s.parse())?;
+            let queue: usize = args.opt("queue")?.map_or(Ok(256), |s| s.parse())?;
+            let cache_cap: usize = args.opt("cache-cap")?.map_or(Ok(128), |s| s.parse())?;
+            args.finish()?;
+            anyhow::ensure!(
+                !(stdio && listen.is_some()),
+                "--stdio and --listen are mutually exclusive"
+            );
+            let server = Server::new(cfg, workers, queue, cache_cap)?;
+            match listen {
+                Some(addr) => kraken::serve::serve_listen(std::sync::Arc::new(server), &addr),
+                None => server.serve_stdio(),
+            }
+        }
         Some("check-artifacts") => {
-            let dir = args.opt("dir").unwrap_or_else(|| "artifacts".into());
+            let dir = args.opt("dir")?.unwrap_or_else(|| "artifacts".into());
+            args.finish()?;
             check_artifacts(&dir)
         }
         Some("help") | None => {
@@ -271,17 +326,6 @@ fn sweep(cfg: &SocConfig, what: &str, json: bool) -> kraken::Result<()> {
     Ok(())
 }
 
-fn parse_scene(name: &str, seed: u64) -> kraken::Result<SceneKind> {
-    Ok(match name {
-        "corridor" => SceneKind::Corridor { speed_per_s: 0.5, seed },
-        "bar" => SceneKind::RotatingBar { omega_rad_s: 6.0 },
-        "edge" => SceneKind::TranslatingEdge { vel_per_s: 0.4 },
-        "ring" => SceneKind::ExpandingRing { rate_per_s: 0.5 },
-        "noise" => SceneKind::Noise { density: 0.05, seed },
-        other => anyhow::bail!("unknown scene '{other}'"),
-    })
-}
-
 #[allow(clippy::too_many_arguments)]
 fn run_mission(
     cfg: SocConfig,
@@ -293,7 +337,7 @@ fn run_mission(
     live: bool,
     json: bool,
 ) -> kraken::Result<()> {
-    let scene = parse_scene(scene, seed)?;
+    let scene = SceneKind::parse(scene, seed)?;
     let mcfg = MissionConfig {
         duration_s: duration,
         scene,
@@ -371,13 +415,15 @@ fn run_fleet_cmd(
     anyhow::ensure!(missions > 0, "--missions must be at least 1");
     let base = MissionConfig {
         duration_s: duration,
-        scene: parse_scene(scene, base_seed)?,
+        scene: SceneKind::parse(scene, base_seed)?,
         seed: base_seed,
         policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
         ..Default::default()
     };
     let fleet = FleetConfig { missions, threads, base_seed, base, soc: cfg };
-    let report = run_fleet(&fleet)?;
+    // a fleet is the seed-axis special case of a config grid; run it
+    // through the grid layer (identical configs, identical reports)
+    let report = run_grid(&GridConfig::from_fleet(&fleet))?.fleet;
     if json {
         println!("{}", report.to_json().pretty());
         return Ok(());
@@ -416,4 +462,52 @@ fn check_artifacts(dir: &str) -> kraken::Result<()> {
     }
     println!("all artifacts verified (hashes + shapes + execution)");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn args(tokens: &[&str]) -> Args {
+        Args::from_vec(tokens.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn opt_removes_flag_and_value() {
+        let mut a = args(&["run", "--seed", "42", "--json"]);
+        assert_eq!(a.pos().as_deref(), Some("run"));
+        assert_eq!(a.opt("seed").unwrap().as_deref(), Some("42"));
+        assert!(a.flag("json"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn value_flag_without_value_is_a_usage_error() {
+        // trailing flag: `kraken run --seed`
+        let mut a = args(&["--seed"]);
+        let err = a.opt("seed").unwrap_err().to_string();
+        assert!(err.contains("--seed expects a value"), "{err}");
+        // flag directly followed by another flag: `--seed --json`
+        let mut a = args(&["--seed", "--json"]);
+        let err = a.opt("seed").unwrap_err().to_string();
+        assert!(err.contains("--seed expects a value"), "{err}");
+    }
+
+    #[test]
+    fn leftover_arguments_are_reported() {
+        let mut a = args(&["--sede", "42"]);
+        assert_eq!(a.opt("seed").unwrap(), None); // typo is not consumed
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("--sede"), "{err}");
+        args(&[]).finish().unwrap();
+    }
+
+    #[test]
+    fn absent_flags_stay_absent() {
+        let mut a = args(&["fleet"]);
+        assert_eq!(a.opt("seed").unwrap(), None);
+        assert!(!a.flag("json"));
+        assert_eq!(a.pos().as_deref(), Some("fleet"));
+        assert_eq!(a.pos(), None);
+    }
 }

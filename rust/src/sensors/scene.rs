@@ -24,6 +24,35 @@ pub enum SceneKind {
     Noise { density: f64, seed: u64 },
 }
 
+impl SceneKind {
+    /// Parse a CLI/protocol scene name into a `SceneKind` with canonical
+    /// parameters, seeding the stochastic scenes with `seed`. This is the
+    /// single name→scene mapping shared by `kraken run`/`fleet`, the grid
+    /// axes, and the serve protocol.
+    pub fn parse(name: &str, seed: u64) -> anyhow::Result<SceneKind> {
+        Ok(match name {
+            "corridor" => SceneKind::Corridor { speed_per_s: 0.5, seed },
+            "bar" => SceneKind::RotatingBar { omega_rad_s: 6.0 },
+            "edge" => SceneKind::TranslatingEdge { vel_per_s: 0.4 },
+            "ring" => SceneKind::ExpandingRing { rate_per_s: 0.5 },
+            "noise" => SceneKind::Noise { density: 0.05, seed },
+            other => anyhow::bail!("unknown scene '{other}' (corridor|bar|edge|ring|noise)"),
+        })
+    }
+
+    /// The canonical name `parse` accepts for this kind (grid-cell labels,
+    /// protocol echoes).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SceneKind::RotatingBar { .. } => "bar",
+            SceneKind::TranslatingEdge { .. } => "edge",
+            SceneKind::ExpandingRing { .. } => "ring",
+            SceneKind::Corridor { .. } => "corridor",
+            SceneKind::Noise { .. } => "noise",
+        }
+    }
+}
+
 /// A procedural scene instance.
 #[derive(Debug, Clone)]
 pub struct Scene {

@@ -1,0 +1,191 @@
+//! Deterministic result cache for `kraken serve`.
+//!
+//! Missions are bit-reproducible for a resolved config (the fleet
+//! determinism contract), so a response computed once is the answer
+//! forever: the cache maps a **canonical key** of the resolved
+//! `SocConfig` + mission configs to the exact serialized response line.
+//! A hit replays those bytes verbatim — repeated identical requests get
+//! byte-identical JSON, pinned by `tests/integration_serve.rs`.
+//!
+//! The canonical key is the request kind plus the `Debug` rendering of the
+//! resolved configs (`"{kind}|{soc:?}|{cfgs:?}"`). Rust's float formatting
+//! is shortest-roundtrip, so two configs share a key iff every field —
+//! including every `f64` bit pattern — is identical. Keys are indexed by a
+//! 64-bit FNV-1a hash; the full key string is kept in each entry and
+//! compared on lookup, so a hash collision degrades to a miss, never to a
+//! wrong answer. Eviction is least-recently-used at a fixed capacity.
+//!
+//! The bit-reproducibility premise only holds for analytical missions: a
+//! config with an `artifacts_dir` names external files whose contents can
+//! change between requests, so the server bypasses the cache for
+//! artifact-backed missions (see `Server::serve_cached`).
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use crate::config::SocConfig;
+use crate::coordinator::pipeline::MissionConfig;
+
+/// Canonical cache key of a resolved request (see module docs).
+pub fn canonical_key(kind: &str, soc: &SocConfig, cfgs: &[MissionConfig]) -> String {
+    format!("{kind}|{soc:?}|{cfgs:?}")
+}
+
+/// 64-bit FNV-1a.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+struct Entry {
+    key: String,
+    response: String,
+}
+
+/// LRU map from canonical key to serialized response. Capacity 0 disables
+/// caching entirely (every lookup is a miss).
+pub struct ResultCache {
+    cap: usize,
+    map: HashMap<u64, Entry>,
+    /// LRU order of hashes, front = coldest.
+    order: VecDeque<u64>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ResultCache {
+    pub fn new(cap: usize) -> ResultCache {
+        ResultCache {
+            cap,
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Look up the stored response for `key`, refreshing its LRU position.
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        let h = fnv1a(key.as_bytes());
+        let response = match self.map.get(&h) {
+            Some(e) if e.key == key => e.response.clone(),
+            _ => {
+                self.misses += 1;
+                return None;
+            }
+        };
+        self.hits += 1;
+        self.touch(h);
+        Some(response)
+    }
+
+    /// Store a response, evicting the coldest entries beyond capacity.
+    /// A hash collision overwrites the colliding entry (correctness is
+    /// preserved by the full-key comparison in `get`).
+    pub fn insert(&mut self, key: String, response: String) {
+        if self.cap == 0 {
+            return;
+        }
+        let h = fnv1a(key.as_bytes());
+        if self.map.insert(h, Entry { key, response }).is_none() {
+            self.order.push_back(h);
+        } else {
+            self.touch(h);
+        }
+        while self.map.len() > self.cap {
+            if let Some(cold) = self.order.pop_front() {
+                self.map.remove(&cold);
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn touch(&mut self, h: u64) {
+        if let Some(i) = self.order.iter().position(|&x| x == h) {
+            self.order.remove(i);
+        }
+        self.order.push_back(h);
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_replays_exact_bytes_and_counts() {
+        let mut c = ResultCache::new(4);
+        assert!(c.get("a").is_none());
+        c.insert("a".into(), "{\"ok\":true}".into());
+        assert_eq!(c.get("a").as_deref(), Some("{\"ok\":true}"));
+        assert_eq!((c.hits(), c.misses(), c.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_coldest_first() {
+        let mut c = ResultCache::new(2);
+        c.insert("a".into(), "1".into());
+        c.insert("b".into(), "2".into());
+        assert!(c.get("a").is_some()); // refresh a; b is now coldest
+        c.insert("c".into(), "3".into()); // evicts b
+        assert!(c.get("b").is_none());
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_cache() {
+        let mut c = ResultCache::new(0);
+        c.insert("a".into(), "1".into());
+        assert!(c.get("a").is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn canonical_key_separates_configs_bitwise() {
+        let soc = SocConfig::kraken();
+        let a = MissionConfig::default();
+        let mut b = MissionConfig::default();
+        let ka = canonical_key("run", &soc, std::slice::from_ref(&a));
+        assert_eq!(ka, canonical_key("run", &soc, std::slice::from_ref(&a)));
+        b.duration_s += 1e-9; // one ulp-scale change must change the key
+        assert_ne!(ka, canonical_key("run", &soc, std::slice::from_ref(&b)));
+        assert_ne!(ka, canonical_key("fleet", &soc, std::slice::from_ref(&a)));
+    }
+
+    #[test]
+    fn reinsert_same_hash_updates_value() {
+        let mut c = ResultCache::new(2);
+        c.insert("k".into(), "v1".into());
+        c.insert("k".into(), "v2".into());
+        assert_eq!(c.get("k").as_deref(), Some("v2"));
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,328 @@
+//! Config grids: the cross-product generalization of [`FleetConfig`].
+//!
+//! `FleetConfig` replicates one base mission over a seed range. A
+//! [`GridConfig`] generalizes that to a sharded parameter sweep: any subset
+//! of {seed, duration, scene, vdd, gating policy} can carry a list of
+//! values, and the grid is the cross-product of all non-empty axes (an
+//! empty axis inherits the base config's value). Cells are emitted in a
+//! fixed nested order — seed, then duration, then scene, then vdd, then
+//! gate, innermost last — so a grid is a deterministic `Vec<MissionConfig>`
+//! that runs through the existing fleet machinery
+//! ([`crate::coordinator::fleet::run_configs`]) or the serve worker pool,
+//! with bit-identical per-cell reports either way.
+//!
+//! `kraken fleet` and the bench sweeps (`task_rates`, `e2e_mission`) are
+//! grid consumers: a fleet is exactly [`GridConfig::from_fleet`] (seed axis
+//! only), and the DVFS/scene sweep tables are single-axis grids.
+
+use crate::config::SocConfig;
+use crate::coordinator::fleet::{run_configs, FleetConfig, FleetReport};
+use crate::coordinator::pipeline::MissionConfig;
+use crate::sensors::scene::SceneKind;
+use crate::util::json::Value;
+
+/// A parameter grid over a base mission config. Empty axes inherit the
+/// base value; non-empty axes cross-multiply.
+#[derive(Debug, Clone)]
+pub struct GridConfig {
+    pub soc: SocConfig,
+    pub base: MissionConfig,
+    pub seeds: Vec<u64>,
+    pub durations: Vec<f64>,
+    pub scenes: Vec<SceneKind>,
+    pub vdds: Vec<f64>,
+    /// Gating-policy axis: each element is an `idle_gate_s` value, with
+    /// `None` meaning gating disabled for that cell.
+    pub idle_gates: Vec<Option<f64>>,
+    pub threads: usize,
+}
+
+/// One grid cell: the resolved mission config plus a human/JSON label of
+/// its effective axis values.
+#[derive(Debug, Clone)]
+pub struct GridCell {
+    pub label: String,
+    pub cfg: MissionConfig,
+}
+
+/// Normalize an axis: empty = inherit base (one `None` cell), otherwise
+/// one `Some` per value.
+fn axis<T: Copy>(xs: &[T]) -> Vec<Option<T>> {
+    if xs.is_empty() {
+        vec![None]
+    } else {
+        xs.iter().map(|&x| Some(x)).collect()
+    }
+}
+
+/// Checked cross-product size of a grid's axis lengths (an empty axis
+/// counts as the single inherited cell). `None` on usize overflow — the
+/// protocol layer uses this to reject absurd grids before building them.
+pub fn cell_count(axis_lens: [usize; 5]) -> Option<usize> {
+    axis_lens
+        .iter()
+        .try_fold(1usize, |acc, &n| acc.checked_mul(n.max(1)))
+}
+
+impl GridConfig {
+    /// A grid with every axis empty (one cell: `base` itself). Callers set
+    /// just the axes they sweep.
+    pub fn new(soc: SocConfig, base: MissionConfig, threads: usize) -> GridConfig {
+        GridConfig {
+            soc,
+            base,
+            seeds: Vec::new(),
+            durations: Vec::new(),
+            scenes: Vec::new(),
+            vdds: Vec::new(),
+            idle_gates: Vec::new(),
+            threads,
+        }
+    }
+
+    /// The grid that reproduces a [`FleetConfig`]: the seed axis
+    /// `base_seed..base_seed + missions`, every other axis inherited.
+    /// `from_fleet(fc).mission_cfgs()` equals `fc.mission_cfgs()` for
+    /// `missions >= 1`. A zero-mission fleet has no grid equivalent — an
+    /// empty seed axis means "inherit the base seed", one cell, not zero
+    /// (debug-asserted; the CLI already requires `--missions >= 1`).
+    pub fn from_fleet(fc: &FleetConfig) -> GridConfig {
+        debug_assert!(fc.missions > 0, "a zero-mission fleet has no grid equivalent");
+        let mut grid = GridConfig::new(fc.soc.clone(), fc.base.clone(), fc.threads);
+        grid.seeds = (0..fc.missions)
+            .map(|i| fc.base_seed.wrapping_add(i as u64))
+            .collect();
+        grid
+    }
+
+    /// Number of cells (product of non-empty axis lengths), saturating on
+    /// overflow; [`cell_count`] is the checked form.
+    pub fn len(&self) -> usize {
+        cell_count([
+            self.seeds.len(),
+            self.durations.len(),
+            self.scenes.len(),
+            self.vdds.len(),
+            self.idle_gates.len(),
+        ])
+        .unwrap_or(usize::MAX)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // every axis has at least the inherited cell
+    }
+
+    /// All cells in deterministic nested order (seed outermost, gate
+    /// innermost). Axis values overwrite the base config only when the
+    /// axis is non-empty, so a grid of empty axes is exactly `[base]`.
+    pub fn cells(&self) -> Vec<GridCell> {
+        // capacity capped: len() saturates on overflow and the protocol
+        // rejects oversized grids, but a direct caller must not trigger a
+        // capacity-overflow abort here
+        let mut out = Vec::with_capacity(self.len().min(crate::serve::protocol::MAX_CELLS));
+        for &seed in &axis(&self.seeds) {
+            for &dur in &axis(&self.durations) {
+                for &scene in &axis(&self.scenes) {
+                    for &vdd in &axis(&self.vdds) {
+                        for &gate in &axis(&self.idle_gates) {
+                            let mut cfg = self.base.clone();
+                            if let Some(d) = dur {
+                                cfg.duration_s = d;
+                            }
+                            if let Some(s) = scene {
+                                cfg.scene = s;
+                            }
+                            if let Some(v) = vdd {
+                                cfg.policy.vdd = Some(v);
+                            }
+                            if let Some(g) = gate {
+                                cfg.policy.idle_gate_s = g;
+                            }
+                            // reseed last so the seed reaches the scene
+                            // (matches MissionConfig::with_seed discipline)
+                            if let Some(s) = seed {
+                                cfg = cfg.with_seed(s);
+                            }
+                            let vdd_s = match cfg.policy.vdd {
+                                Some(v) => format!("{v:.2}"),
+                                None => "auto".into(),
+                            };
+                            let gate_s = match cfg.policy.idle_gate_s {
+                                Some(g) => format!("{g:.3}"),
+                                None => "off".into(),
+                            };
+                            let label = format!(
+                                "seed={} dur={:.3}s scene={} vdd={} gate={}",
+                                cfg.seed,
+                                cfg.duration_s,
+                                cfg.scene.label(),
+                                vdd_s,
+                                gate_s
+                            );
+                            out.push(GridCell { label, cfg });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The per-cell mission configs, in cell order.
+    pub fn mission_cfgs(&self) -> Vec<MissionConfig> {
+        self.cells().into_iter().map(|c| c.cfg).collect()
+    }
+}
+
+/// Aggregate artifact of a grid run: the fleet-style report plus the cell
+/// labels, index-aligned with `fleet.reports`.
+#[derive(Debug, Clone)]
+pub struct GridReport {
+    pub cells: Vec<String>,
+    pub fleet: FleetReport,
+}
+
+impl GridReport {
+    /// JSON form: cell labels alongside the full fleet rollup.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "cells",
+                Value::Arr(self.cells.iter().map(|c| Value::Str(c.clone())).collect()),
+            ),
+            ("fleet", self.fleet.to_json()),
+        ])
+    }
+
+    /// Human-readable rollup: the fleet summary plus one line per cell.
+    pub fn summary(&self) -> String {
+        let mut s = self.fleet.summary();
+        s.push_str("\nper-cell reports:\n");
+        for (label, r) in self.cells.iter().zip(&self.fleet.reports) {
+            s.push_str(&format!(
+                "  {label:<52} {:>9} events  {:>8.1} mW  dropped {}\n",
+                r.events_total,
+                r.avg_power_w * 1e3,
+                r.dropped_windows
+            ));
+        }
+        s
+    }
+}
+
+/// Run every cell of a grid through the fleet runner (scoped threads,
+/// offline path — the serve pool is the resident-process equivalent).
+pub fn run_grid(grid: &GridConfig) -> crate::Result<GridReport> {
+    let cells = grid.cells();
+    let cfgs: Vec<MissionConfig> = cells.iter().map(|c| c.cfg.clone()).collect();
+    let fleet = run_configs(&grid.soc, &cfgs, grid.threads)?;
+    Ok(GridReport {
+        cells: cells.into_iter().map(|c| c.label).collect(),
+        fleet,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_grid() -> GridConfig {
+        GridConfig::new(
+            SocConfig::kraken(),
+            MissionConfig {
+                duration_s: 0.05,
+                dvs_sample_hz: 300.0,
+                ..Default::default()
+            },
+            2,
+        )
+    }
+
+    #[test]
+    fn empty_axes_yield_exactly_the_base() {
+        let g = base_grid();
+        assert_eq!(g.len(), 1);
+        let cells = g.cells();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(format!("{:?}", cells[0].cfg), format!("{:?}", g.base));
+    }
+
+    #[test]
+    fn cross_product_order_is_seed_outermost() {
+        let mut g = base_grid();
+        g.seeds = vec![1, 2];
+        g.vdds = vec![0.6, 0.8];
+        assert_eq!(g.len(), 4);
+        let cells = g.cells();
+        let got: Vec<(u64, f64)> = cells
+            .iter()
+            .map(|c| (c.cfg.seed, c.cfg.policy.vdd.unwrap()))
+            .collect();
+        assert_eq!(got, vec![(1, 0.6), (1, 0.8), (2, 0.6), (2, 0.8)]);
+        // seeds propagate into the (corridor) scene
+        for c in &cells {
+            match c.cfg.scene {
+                SceneKind::Corridor { seed, .. } => assert_eq!(seed, c.cfg.seed),
+                ref other => panic!("scene changed: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn from_fleet_reproduces_fleet_configs() {
+        let fc = FleetConfig {
+            missions: 3,
+            threads: 2,
+            base_seed: 40,
+            base: base_grid().base,
+            soc: SocConfig::kraken(),
+        };
+        let grid = GridConfig::from_fleet(&fc);
+        assert_eq!(grid.len(), 3);
+        let a = format!("{:?}", grid.mission_cfgs());
+        let b = format!("{:?}", fc.mission_cfgs());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn grid_run_matches_direct_fleet_run_bitwise() {
+        let mut g = base_grid();
+        g.vdds = vec![0.6, 0.8];
+        let gr = run_grid(&g).unwrap();
+        assert_eq!(gr.cells.len(), 2);
+        assert_eq!(gr.fleet.reports.len(), 2);
+        let direct = run_configs(&g.soc, &g.mission_cfgs(), 1).unwrap();
+        for (a, b) in gr.fleet.reports.iter().zip(&direct.reports) {
+            assert_eq!(a.events_total, b.events_total);
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        }
+        // lower voltage cell must not out-consume the 0.8 V cell
+        assert!(gr.fleet.reports[0].avg_power_w < gr.fleet.reports[1].avg_power_w);
+        let s = gr.summary();
+        assert!(s.contains("per-cell reports"));
+        assert!(s.contains("vdd=0.60"));
+        let json = gr.to_json();
+        assert_eq!(json.get("cells").and_then(|v| v.as_arr()).map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn cell_count_is_checked_against_overflow() {
+        assert_eq!(cell_count([0, 0, 0, 0, 0]), Some(1));
+        assert_eq!(cell_count([2, 0, 3, 0, 0]), Some(6));
+        assert_eq!(cell_count([usize::MAX, 2, 1, 1, 1]), None);
+        let mut g = base_grid();
+        g.seeds = vec![1, 2];
+        g.idle_gates = vec![Some(0.01), None, Some(0.1)];
+        assert_eq!(g.len(), 6);
+    }
+
+    #[test]
+    fn gate_axis_carries_disabled_cells() {
+        let mut g = base_grid();
+        g.idle_gates = vec![Some(0.02), None];
+        let cells = g.cells();
+        assert_eq!(cells[0].cfg.policy.idle_gate_s, Some(0.02));
+        assert_eq!(cells[1].cfg.policy.idle_gate_s, None);
+        assert!(cells[1].label.contains("gate=off"));
+    }
+}

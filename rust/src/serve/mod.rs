@@ -1,0 +1,323 @@
+//! `kraken serve` — the resident mission service.
+//!
+//! Deployed Kraken systems are persistent onboard services fed a continuous
+//! stream of perception requests, not one-shot process launches. This
+//! module exposes the simulator the same way: a long-running process that
+//! accepts JSON-lines mission requests ([`protocol`]) over stdio or TCP and
+//! answers from warm state. Three layers sit under the request loop:
+//!
+//! * [`pool`] — a persistent worker pool with a **bounded** queue and
+//!   explicit backpressure (a batch that does not fit is rejected with an
+//!   error, never buffered unboundedly);
+//! * [`cache`] — a deterministic result cache keyed by a canonical hash of
+//!   the resolved `MissionConfig`s + `SocConfig`; because missions are
+//!   bit-reproducible, a hit replays the exact response bytes;
+//! * [`grid`] — config grids (the cross-product generalization of
+//!   `FleetConfig`) so one request can shard a whole parameter sweep
+//!   across the pool and get a single aggregated report.
+//!
+//! Served results are bit-identical to offline `run_fleet`/`run_configs`
+//! runs of the same configs, regardless of `--workers`
+//! (`tests/integration_serve.rs`). See DESIGN.md § Serving for the wire
+//! schema and worked examples.
+
+pub mod cache;
+pub mod grid;
+pub mod pool;
+pub mod protocol;
+
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::SocConfig;
+use crate::coordinator::fleet::FleetReport;
+use crate::coordinator::pipeline::MissionConfig;
+use crate::util::json::Value;
+
+use cache::ResultCache;
+use grid::{GridConfig, GridReport};
+use pool::WorkerPool;
+use protocol::Request;
+
+/// The resident mission server: worker pool + result cache + counters.
+/// One instance serves any number of stdio/TCP request streams.
+pub struct Server {
+    soc: SocConfig,
+    pool: WorkerPool,
+    cache: Mutex<ResultCache>,
+    start: std::time::Instant,
+    requests: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl Server {
+    /// Build a server over `workers` resident threads, a `queue_cap`-slot
+    /// request queue and a `cache_cap`-entry result cache.
+    pub fn new(
+        soc: SocConfig,
+        workers: usize,
+        queue_cap: usize,
+        cache_cap: usize,
+    ) -> crate::Result<Server> {
+        soc.validate()?;
+        Ok(Server {
+            soc,
+            pool: WorkerPool::new(workers, queue_cap),
+            cache: Mutex::new(ResultCache::new(cache_cap)),
+            start: std::time::Instant::now(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Serve one protocol line. Returns `None` for blank lines, otherwise
+    /// exactly one response line (never panics on bad input — protocol
+    /// errors become `{"ok":false,...}` responses).
+    pub fn handle_line(&self, line: &str) -> Option<String> {
+        let line = line.trim();
+        if line.is_empty() {
+            return None;
+        }
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let resp = match self.dispatch(line) {
+            Ok(resp) => resp,
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                protocol::error_response(&format!("{e:#}")).to_string()
+            }
+        };
+        Some(resp)
+    }
+
+    fn dispatch(&self, line: &str) -> crate::Result<String> {
+        match Request::from_json(line)? {
+            Request::Stats => Ok(self.stats().to_string()),
+            Request::Run { cfg } => self.serve_cached("run", vec![cfg], None),
+            Request::Fleet { cfgs } => self.serve_cached("fleet", cfgs, None),
+            Request::Grid { base, seeds, durations, scenes, vdds, idle_gates } => {
+                let grid = GridConfig {
+                    soc: self.soc.clone(),
+                    base,
+                    seeds,
+                    durations,
+                    scenes,
+                    vdds,
+                    idle_gates,
+                    threads: self.pool.workers(),
+                };
+                let cells = grid.cells();
+                let labels = cells.iter().map(|c| c.label.clone()).collect();
+                let cfgs = cells.into_iter().map(|c| c.cfg).collect();
+                self.serve_cached("grid", cfgs, Some(labels))
+            }
+        }
+    }
+
+    /// The cacheable request path: canonical key -> replay stored bytes,
+    /// else run the batch on the pool and store the response verbatim.
+    /// Artifact-backed missions are never cached: the config only names the
+    /// artifacts directory, so regenerated artifact files would otherwise
+    /// be masked by a stale cached report.
+    fn serve_cached(
+        &self,
+        kind: &str,
+        cfgs: Vec<MissionConfig>,
+        labels: Option<Vec<String>>,
+    ) -> crate::Result<String> {
+        let cacheable = cfgs.iter().all(|c| c.artifacts_dir.is_none());
+        let key = cache::canonical_key(kind, &self.soc, &cfgs);
+        if cacheable {
+            if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+                return Ok(hit);
+            }
+        }
+        let (reports, wall_s) = self
+            .pool
+            .run_configs(&self.soc, &cfgs)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let report = match (kind, labels) {
+            ("run", _) => reports
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("empty run batch"))?
+                .to_json(),
+            (_, labels) => {
+                let fleet =
+                    FleetReport { reports, threads: self.pool.workers(), wall_s };
+                match labels {
+                    Some(cells) => GridReport { cells, fleet }.to_json(),
+                    None => fleet.to_json(),
+                }
+            }
+        };
+        let resp = protocol::ok_response(kind, report).to_string();
+        if cacheable {
+            self.cache.lock().unwrap().insert(key, resp.clone());
+        }
+        Ok(resp)
+    }
+
+    /// The `stats` response: uptime, queue state, cache hit rate.
+    fn stats(&self) -> Value {
+        let (hits, misses, entries, cap) = {
+            let c = self.cache.lock().unwrap();
+            (c.hits(), c.misses(), c.len(), c.cap())
+        };
+        Value::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("kind", Value::Str("stats".into())),
+            ("uptime_s", Value::Num(self.start.elapsed().as_secs_f64())),
+            ("requests", Value::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("errors", Value::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("workers", Value::Num(self.pool.workers() as f64)),
+            ("queue_depth", Value::Num(self.pool.queue_depth() as f64)),
+            ("queue_cap", Value::Num(self.pool.queue_cap() as f64)),
+            ("jobs_done", Value::Num(self.pool.jobs_done() as f64)),
+            (
+                "cache",
+                Value::obj(vec![
+                    ("hits", Value::Num(hits as f64)),
+                    ("misses", Value::Num(misses as f64)),
+                    ("entries", Value::Num(entries as f64)),
+                    ("cap", Value::Num(cap as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Serve JSON-lines over stdin/stdout until EOF (the `--stdio` mode,
+    /// also the CI smoke-test surface). Responses flush per line so a
+    /// piped client can interleave requests and responses.
+    pub fn serve_stdio(&self) -> crate::Result<()> {
+        eprintln!(
+            "kraken serve: stdio, {} workers, queue {}, cache {}",
+            self.pool.workers(),
+            self.pool.queue_cap(),
+            self.cache.lock().unwrap().cap()
+        );
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        for line in stdin.lock().lines() {
+            let line = line?;
+            if let Some(resp) = self.handle_line(&line) {
+                let mut out = stdout.lock();
+                out.write_all(resp.as_bytes())?;
+                out.write_all(b"\n")?;
+                out.flush()?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Serve JSON-lines over TCP: one thread per connection, all connections
+/// sharing the server's pool and cache (the `--listen ADDR` mode).
+pub fn serve_listen(server: Arc<Server>, addr: &str) -> crate::Result<()> {
+    let listener = std::net::TcpListener::bind(addr)?;
+    eprintln!(
+        "kraken serve: listening on {}, {} workers",
+        listener.local_addr()?,
+        server.workers()
+    );
+    for stream in listener.incoming() {
+        // a resident server must survive transient accept failures
+        // (ECONNABORTED, fd exhaustion): log and keep listening
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("kraken serve: accept error: {e}");
+                continue;
+            }
+        };
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            if let Err(e) = serve_conn(&server, stream) {
+                eprintln!("kraken serve: connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn serve_conn(server: &Server, stream: std::net::TcpStream) -> crate::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = std::io::BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if let Some(resp) = server.handle_line(&line) {
+            writer.write_all(resp.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn server() -> Server {
+        Server::new(SocConfig::kraken(), 2, 16, 8).unwrap()
+    }
+
+    const RUN: &str = r#"{"kind":"run","duration_s":0.05,"dvs_sample_hz":300.0,"seed":3}"#;
+
+    #[test]
+    fn run_request_returns_report() {
+        let s = server();
+        let resp = s.handle_line(RUN).unwrap();
+        let v = parse(&resp).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+        assert_eq!(v.get("kind").and_then(Value::as_str), Some("run"));
+        let report = v.get("report").unwrap();
+        assert!(report.get("energy_j").and_then(Value::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn repeated_request_hits_cache_with_identical_bytes() {
+        let s = server();
+        let a = s.handle_line(RUN).unwrap();
+        let b = s.handle_line(RUN).unwrap();
+        assert_eq!(a, b, "cache replay must be byte-identical");
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        let cache = stats.get("cache").unwrap();
+        assert_eq!(cache.get("hits").and_then(Value::as_u64), Some(1));
+        assert_eq!(cache.get("misses").and_then(Value::as_u64), Some(1));
+        assert_eq!(stats.get("requests").and_then(Value::as_u64), Some(3));
+    }
+
+    #[test]
+    fn bad_requests_become_error_responses() {
+        let s = server();
+        for line in ["not json", r#"{"kind":"warp"}"#, r#"{"kind":"run","vdd":2.0}"#] {
+            let v = parse(&s.handle_line(line).unwrap()).unwrap();
+            assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false), "{line}");
+            assert!(v.get("error").and_then(Value::as_str).is_some(), "{line}");
+        }
+        assert!(s.handle_line("   ").is_none());
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(stats.get("errors").and_then(Value::as_u64), Some(3));
+    }
+
+    #[test]
+    fn oversized_grid_is_rejected_by_backpressure() {
+        // queue of 2 cannot take a 4-cell grid
+        let s = Server::new(SocConfig::kraken(), 1, 2, 8).unwrap();
+        let line = r#"{"kind":"grid","duration_s":0.05,"dvs_sample_hz":300.0,
+                       "seed":[1,2],"vdd":[0.6,0.8]}"#
+            .replace('\n', " ");
+        let v = parse(&s.handle_line(&line).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+        let msg = v.get("error").and_then(Value::as_str).unwrap();
+        assert!(msg.contains("queue full"), "unexpected error: {msg}");
+        // the server stays serviceable
+        let ok = parse(&s.handle_line(RUN).unwrap()).unwrap();
+        assert_eq!(ok.get("ok").and_then(Value::as_bool), Some(true));
+    }
+}

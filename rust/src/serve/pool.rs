@@ -1,0 +1,320 @@
+//! The persistent mission worker pool behind `kraken serve`.
+//!
+//! Unlike [`crate::coordinator::fleet`], which spawns scoped threads per
+//! fleet call, the pool keeps `workers` OS threads resident for the life of
+//! the server and feeds them through a **bounded** job queue. Backpressure
+//! is explicit: a batch that does not fit in the queue's free space is
+//! rejected whole with [`PoolError::Busy`] — the server never buffers
+//! unboundedly and the client sees the overload immediately.
+//!
+//! Determinism carries over from the fleet layer unchanged: every job is an
+//! independent mission with its own `Soc`, results land in their submission
+//! slot, and the worker count only affects wall-clock — a batch served by
+//! the pool is report-identical to an offline
+//! [`crate::coordinator::fleet::run_configs`] run of the same configs
+//! (`tests/integration_serve.rs` pins this bit for bit).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::SocConfig;
+use crate::coordinator::pipeline::{Mission, MissionConfig, MissionReport};
+
+/// Why the pool could not serve a batch.
+#[derive(Debug)]
+pub enum PoolError {
+    /// The bounded queue cannot take the batch (explicit backpressure).
+    /// Batches are admitted all-or-nothing, so a batch larger than the
+    /// queue capacity can never be served.
+    Busy { asked: usize, free: usize, cap: usize },
+    /// A mission inside the batch failed; the whole batch fails.
+    Mission(String),
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::Busy { asked, free, cap } => write!(
+                f,
+                "queue full: {asked} jobs requested, {free} slots free (queue capacity {cap})"
+            ),
+            PoolError::Mission(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// One queued mission plus where its result goes.
+struct Job {
+    soc: SocConfig,
+    cfg: MissionConfig,
+    slot: usize,
+    batch: Arc<Batch>,
+}
+
+/// Result collector for one submitted batch: slot-addressed so report order
+/// matches config order regardless of which worker ran what.
+struct Batch {
+    state: Mutex<BatchState>,
+    done: Condvar,
+}
+
+struct BatchState {
+    slots: Vec<Option<Result<MissionReport, String>>>,
+    remaining: usize,
+}
+
+impl Batch {
+    fn new(n: usize) -> Arc<Batch> {
+        Arc::new(Batch {
+            state: Mutex::new(BatchState {
+                slots: (0..n).map(|_| None).collect(),
+                remaining: n,
+            }),
+            done: Condvar::new(),
+        })
+    }
+
+    fn fill(&self, slot: usize, result: Result<MissionReport, String>) {
+        let mut st = self.state.lock().unwrap();
+        st.slots[slot] = Some(result);
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Vec<Result<MissionReport, String>> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.slots
+            .drain(..)
+            .map(|slot| slot.expect("batch slot filled"))
+            .collect()
+    }
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    available: Condvar,
+    jobs_done: AtomicU64,
+}
+
+/// A fixed-size pool of resident mission workers over a bounded queue.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+    queue_cap: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` resident threads over a queue of `queue_cap` slots
+    /// (both floored at 1).
+    pub fn new(workers: usize, queue_cap: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let queue_cap = queue_cap.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+            jobs_done: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkerPool { shared, handles, workers, queue_cap }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Jobs currently waiting in the queue (not counting in-flight ones).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Missions completed by the pool since startup.
+    pub fn jobs_done(&self) -> u64 {
+        self.shared.jobs_done.load(Ordering::Relaxed)
+    }
+
+    /// Run one mission per config and return the reports in config order
+    /// plus the batch wall-clock. All-or-nothing admission: if the batch
+    /// does not fit in the queue's free space, nothing is enqueued and
+    /// [`PoolError::Busy`] reports the shortfall.
+    pub fn run_configs(
+        &self,
+        soc: &SocConfig,
+        cfgs: &[MissionConfig],
+    ) -> Result<(Vec<MissionReport>, f64), PoolError> {
+        if cfgs.is_empty() {
+            return Ok((Vec::new(), 0.0));
+        }
+        let start = std::time::Instant::now();
+        let batch = Batch::new(cfgs.len());
+        let jobs: Vec<Job> = cfgs
+            .iter()
+            .enumerate()
+            .map(|(slot, cfg)| Job {
+                soc: soc.clone(),
+                cfg: cfg.clone(),
+                slot,
+                batch: Arc::clone(&batch),
+            })
+            .collect();
+        self.try_submit(jobs)?;
+        let mut reports = Vec::with_capacity(cfgs.len());
+        for (i, result) in batch.wait().into_iter().enumerate() {
+            match result {
+                Ok(r) => reports.push(r),
+                Err(e) => return Err(PoolError::Mission(format!("mission {i} failed: {e}"))),
+            }
+        }
+        Ok((reports, start.elapsed().as_secs_f64()))
+    }
+
+    fn try_submit(&self, jobs: Vec<Job>) -> Result<(), PoolError> {
+        let mut q = self.shared.queue.lock().unwrap();
+        let free = self.queue_cap - q.jobs.len();
+        if jobs.len() > free {
+            return Err(PoolError::Busy { asked: jobs.len(), free, cap: self.queue_cap });
+        }
+        q.jobs.extend(jobs);
+        drop(q);
+        self.shared.available.notify_all();
+        Ok(())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        // one Soc per mission, built on this thread (mirrors fleet
+        // workers). A panicking mission must not kill the worker or leave
+        // its batch waiting forever: catch it and fail the slot instead.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Mission::new(job.soc, job.cfg)
+                .and_then(|mut m| m.run())
+                .map_err(|e| format!("{e:#}"))
+        }))
+        .unwrap_or_else(|panic| {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            Err(format!("mission panicked: {msg}"))
+        });
+        // count before fill: fill wakes the submitter, which may read
+        // jobs_done (stats, test assertions) immediately
+        shared.jobs_done.fetch_add(1, Ordering::Relaxed);
+        job.batch.fill(job.slot, result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(seed: u64) -> MissionConfig {
+        MissionConfig {
+            duration_s: 0.05,
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        }
+        .with_seed(seed)
+    }
+
+    #[test]
+    fn pool_runs_batch_in_config_order() {
+        let pool = WorkerPool::new(2, 8);
+        let soc = SocConfig::kraken();
+        let cfgs: Vec<MissionConfig> = (0..4u64).map(tiny).collect();
+        let (reports, wall) = pool.run_configs(&soc, &cfgs).unwrap();
+        assert_eq!(reports.len(), 4);
+        assert!(wall > 0.0);
+        assert_eq!(pool.jobs_done(), 4);
+        // slot order == config order: compare against serial runs
+        for (i, cfg) in cfgs.iter().enumerate() {
+            let want = Mission::new(soc.clone(), cfg.clone()).unwrap().run().unwrap();
+            assert_eq!(reports[i].events_total, want.events_total, "slot {i}");
+            assert_eq!(reports[i].energy_j.to_bits(), want.energy_j.to_bits(), "slot {i}");
+        }
+    }
+
+    #[test]
+    fn worker_count_never_changes_reports() {
+        let soc = SocConfig::kraken();
+        let cfgs: Vec<MissionConfig> = (10..14u64).map(tiny).collect();
+        let (a, _) = WorkerPool::new(1, 8).run_configs(&soc, &cfgs).unwrap();
+        let (b, _) = WorkerPool::new(4, 8).run_configs(&soc, &cfgs).unwrap();
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.events_total, rb.events_total);
+            assert_eq!(ra.energy_j.to_bits(), rb.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn oversized_batch_is_rejected_not_buffered() {
+        let pool = WorkerPool::new(1, 2);
+        let soc = SocConfig::kraken();
+        let cfgs: Vec<MissionConfig> = (0..3u64).map(tiny).collect();
+        match pool.run_configs(&soc, &cfgs) {
+            Err(PoolError::Busy { asked, free, cap }) => {
+                assert_eq!((asked, cap), (3, 2));
+                assert!(free <= 2);
+            }
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        // nothing was enqueued: a fitting batch still succeeds afterwards
+        let (reports, _) = pool.run_configs(&soc, &cfgs[..2]).unwrap();
+        assert_eq!(reports.len(), 2);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let pool = WorkerPool::new(1, 1);
+        let (reports, wall) = pool.run_configs(&SocConfig::kraken(), &[]).unwrap();
+        assert!(reports.is_empty());
+        assert_eq!(wall, 0.0);
+        assert_eq!(pool.queue_depth(), 0);
+    }
+}

@@ -1,0 +1,504 @@
+//! The JSON-lines request/response protocol of `kraken serve`.
+//!
+//! One request object per line in, one response object per line out, built
+//! on [`crate::util::json`]. Four request kinds (`DESIGN.md` § Serving has
+//! a worked example of each):
+//!
+//! * `run`   — one mission from scalar fields (`seed`, `duration_s`,
+//!   `scene`, `vdd`, `idle_gate_s`, `window_ms`, `frame_fps`,
+//!   `dvs_sample_hz`, `telemetry_dt_s`, `artifacts_dir`); defaults match
+//!   `kraken run`.
+//! * `fleet` — `missions` reseeded copies of the same mission fields
+//!   (seeds `seed..seed + missions`), the protocol twin of `kraken fleet`.
+//! * `grid`  — a config grid: `seed`, `duration_s`, `scene`, `vdd` and
+//!   `idle_gate_s` each accept a scalar **or an array**; arrays become
+//!   grid axes and the request runs their cross-product
+//!   ([`crate::serve::grid::GridConfig`]).
+//! * `stats` — server introspection (uptime, queue depth, cache hit rate).
+//!
+//! Responses are `{"ok":true,"kind":...,"report":...}` or
+//! `{"ok":false,"error":...}`. Unknown request keys are rejected rather
+//! than ignored — a typoed parameter must not silently run the default
+//! mission. Requests never carry server-side state (worker/thread counts),
+//! so the same request always resolves to the same configs — the property
+//! the result cache keys on.
+
+use crate::config::{VDD_MAX, VDD_MIN};
+use crate::coordinator::pipeline::MissionConfig;
+use crate::sensors::scene::SceneKind;
+use crate::util::json::{parse, Value};
+
+/// Hard ceiling on missions/cells a single request may resolve to; keeps a
+/// typo from turning into a billion-cell cross-product. The worker pool's
+/// bounded queue applies its own (usually tighter) backpressure below this.
+pub const MAX_CELLS: usize = 4096;
+
+/// A parsed, validated request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// One mission, fully resolved.
+    Run { cfg: MissionConfig },
+    /// N reseeded missions, fully resolved in seed order.
+    Fleet { cfgs: Vec<MissionConfig> },
+    /// A config grid; the server supplies `SocConfig` and thread count.
+    Grid {
+        base: MissionConfig,
+        seeds: Vec<u64>,
+        durations: Vec<f64>,
+        scenes: Vec<SceneKind>,
+        vdds: Vec<f64>,
+        idle_gates: Vec<Option<f64>>,
+    },
+    /// Server statistics.
+    Stats,
+}
+
+const MISSION_KEYS: &[&str] = &[
+    "kind",
+    "seed",
+    "duration_s",
+    "scene",
+    "vdd",
+    "idle_gate_s",
+    "window_ms",
+    "frame_fps",
+    "dvs_sample_hz",
+    "telemetry_dt_s",
+    "artifacts_dir",
+];
+
+impl Request {
+    /// Parse one request line.
+    pub fn from_json(text: &str) -> crate::Result<Request> {
+        let v = parse(text).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
+        Request::from_value(&v)
+    }
+
+    /// Parse a request from an already-parsed JSON value.
+    pub fn from_value(v: &Value) -> crate::Result<Request> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("request must be a JSON object"))?;
+        let kind = v
+            .get("kind")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("request needs a string \"kind\""))?;
+        match kind {
+            "run" => {
+                check_keys(obj, MISSION_KEYS)?;
+                Ok(Request::Run { cfg: mission_from(v)? })
+            }
+            "fleet" => {
+                let mut allowed = MISSION_KEYS.to_vec();
+                allowed.push("missions");
+                check_keys(obj, &allowed)?;
+                let missions = match v.get("missions") {
+                    None => 4,
+                    Some(m) => m.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("\"missions\" must be a non-negative integer")
+                    })?,
+                };
+                anyhow::ensure!(
+                    (1..=MAX_CELLS).contains(&missions),
+                    "\"missions\" must be in 1..={MAX_CELLS}, got {missions}"
+                );
+                let base = mission_from(v)?;
+                let base_seed = base.seed;
+                let cfgs = (0..missions)
+                    .map(|i| base.with_seed(base_seed.wrapping_add(i as u64)))
+                    .collect();
+                Ok(Request::Fleet { cfgs })
+            }
+            "grid" => {
+                check_keys(obj, MISSION_KEYS)?;
+                let seeds = u64_axis(v, "seed")?;
+                let durations = f64_axis(v, "duration_s")?;
+                let vdds = f64_axis(v, "vdd")?;
+                let idle_gates = gate_axis(v)?;
+                // scene names resolve against the first grid seed (the
+                // per-cell reseed overrides it for seeded scenes anyway)
+                let scene_seed = seeds.first().copied().unwrap_or(MissionConfig::default().seed);
+                let scenes = scene_axis(v, "scene", scene_seed)?;
+                for &d in &durations {
+                    check_duration(d)?;
+                }
+                for &x in &vdds {
+                    check_vdd(x)?;
+                }
+                let mut base = MissionConfig::default();
+                base.print_live = false;
+                mission_scalars(v, &mut base)?;
+                // checked product: an absurd axis combination must be
+                // rejected here, not wrap around and hang the pool
+                match crate::serve::grid::cell_count([
+                    seeds.len(),
+                    durations.len(),
+                    scenes.len(),
+                    vdds.len(),
+                    idle_gates.len(),
+                ]) {
+                    Some(cells) if cells <= MAX_CELLS => {}
+                    Some(cells) => {
+                        anyhow::bail!("grid resolves to {cells} cells, limit is {MAX_CELLS}")
+                    }
+                    None => anyhow::bail!(
+                        "grid axis product overflows, limit is {MAX_CELLS} cells"
+                    ),
+                }
+                Ok(Request::Grid { base, seeds, durations, scenes, vdds, idle_gates })
+            }
+            "stats" => {
+                check_keys(obj, &["kind"])?;
+                Ok(Request::Stats)
+            }
+            other => anyhow::bail!("unknown request kind '{other}' (run|fleet|grid|stats)"),
+        }
+    }
+}
+
+/// Successful response envelope.
+pub fn ok_response(kind: &str, report: Value) -> Value {
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("kind", Value::Str(kind.to_string())),
+        ("report", report),
+    ])
+}
+
+/// Error response envelope.
+pub fn error_response(msg: &str) -> Value {
+    Value::obj(vec![
+        ("ok", Value::Bool(false)),
+        ("error", Value::Str(msg.to_string())),
+    ])
+}
+
+fn check_keys(
+    obj: &std::collections::BTreeMap<String, Value>,
+    allowed: &[&str],
+) -> crate::Result<()> {
+    for k in obj.keys() {
+        anyhow::ensure!(
+            allowed.contains(&k.as_str()),
+            "unknown request key \"{k}\" (allowed: {})",
+            allowed.join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn check_duration(d: f64) -> crate::Result<()> {
+    anyhow::ensure!(
+        d.is_finite() && d > 0.0 && d <= 3600.0,
+        "duration_s must be in (0, 3600], got {d}"
+    );
+    Ok(())
+}
+
+fn check_vdd(v: f64) -> crate::Result<()> {
+    anyhow::ensure!(
+        (VDD_MIN..=VDD_MAX).contains(&v),
+        "vdd {v} outside [{VDD_MIN}, {VDD_MAX}]"
+    );
+    Ok(())
+}
+
+fn pos_f64(v: &Value, key: &str) -> crate::Result<Option<f64>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => {
+            let x = x
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("\"{key}\" must be a number"))?;
+            anyhow::ensure!(x.is_finite() && x > 0.0, "\"{key}\" must be positive, got {x}");
+            Ok(Some(x))
+        }
+    }
+}
+
+/// Like [`pos_f64`] but range-bounded: every rate/period knob on the
+/// network-exposed protocol gets a sane ceiling, so one request cannot
+/// encode a quasi-infinite simulation and wedge a pool worker.
+fn bounded_f64(v: &Value, key: &str, lo: f64, hi: f64) -> crate::Result<Option<f64>> {
+    match pos_f64(v, key)? {
+        None => Ok(None),
+        Some(x) => {
+            anyhow::ensure!(
+                (lo..=hi).contains(&x),
+                "\"{key}\" must be in [{lo}, {hi}], got {x}"
+            );
+            Ok(Some(x))
+        }
+    }
+}
+
+/// Apply the scalar-only mission fields shared by every mission-carrying
+/// request kind (everything except seed/duration/scene/vdd/gate, which
+/// `run` and `fleet` treat as scalars but `grid` treats as axes).
+fn mission_scalars(v: &Value, cfg: &mut MissionConfig) -> crate::Result<()> {
+    if let Some(x) = bounded_f64(v, "window_ms", 0.1, 10_000.0)? {
+        cfg.window_ms = x;
+    }
+    if let Some(x) = bounded_f64(v, "frame_fps", 0.1, 10_000.0)? {
+        cfg.frame_fps = x;
+    }
+    if let Some(x) = bounded_f64(v, "dvs_sample_hz", 1.0, 1_000_000.0)? {
+        cfg.dvs_sample_hz = x;
+    }
+    if let Some(x) = bounded_f64(v, "telemetry_dt_s", 0.001, 3600.0)? {
+        cfg.telemetry_dt_s = x;
+    }
+    if let Some(dir) = v.get("artifacts_dir") {
+        let dir = dir
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("\"artifacts_dir\" must be a string"))?;
+        cfg.artifacts_dir = Some(dir.into());
+    }
+    Ok(())
+}
+
+/// Resolve the full scalar mission config of a `run`/`fleet` request.
+fn mission_from(v: &Value) -> crate::Result<MissionConfig> {
+    let mut cfg = MissionConfig::default();
+    cfg.print_live = false;
+    let seed = match v.get("seed") {
+        None => cfg.seed,
+        Some(s) => s
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("\"seed\" must be a non-negative integer"))?,
+    };
+    mission_scalars(v, &mut cfg)?;
+    if let Some(x) = pos_f64(v, "duration_s")? {
+        check_duration(x)?;
+        cfg.duration_s = x;
+    }
+    if let Some(name) = v.get("scene") {
+        let name = name
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("\"scene\" must be a scene name string"))?;
+        cfg.scene = SceneKind::parse(name, seed)?;
+    }
+    if let Some(x) = v.get("vdd") {
+        let x = x
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("\"vdd\" must be a number"))?;
+        check_vdd(x)?;
+        cfg.policy.vdd = Some(x);
+    }
+    match v.get("idle_gate_s") {
+        None => {}
+        Some(Value::Null) => cfg.policy.idle_gate_s = None,
+        Some(x) => {
+            let g = x
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("\"idle_gate_s\" must be a number or null"))?;
+            anyhow::ensure!(g.is_finite() && g > 0.0, "idle_gate_s must be positive or null");
+            cfg.policy.idle_gate_s = Some(g);
+        }
+    }
+    Ok(cfg.with_seed(seed))
+}
+
+/// An explicitly-empty axis array is a client bug (a filtered-to-nothing
+/// value list), not a request for the default: reject it rather than
+/// silently running the inherited base value.
+fn check_axis_nonempty(key: &str, a: &[Value]) -> crate::Result<()> {
+    anyhow::ensure!(
+        !a.is_empty(),
+        "\"{key}\" axis array is empty — omit the key to inherit the default"
+    );
+    Ok(())
+}
+
+/// Grid axis of numbers: absent -> empty (inherit), scalar -> singleton,
+/// array -> one cell per element.
+fn f64_axis(v: &Value, key: &str) -> crate::Result<Vec<f64>> {
+    match v.get(key) {
+        None => Ok(Vec::new()),
+        Some(Value::Num(x)) => Ok(vec![*x]),
+        Some(Value::Arr(a)) => {
+            check_axis_nonempty(key, a)?;
+            a.iter()
+                .map(|x| {
+                    x.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("\"{key}\" array must hold numbers"))
+                })
+                .collect()
+        }
+        Some(_) => anyhow::bail!("\"{key}\" must be a number or an array of numbers"),
+    }
+}
+
+fn u64_axis(v: &Value, key: &str) -> crate::Result<Vec<u64>> {
+    match v.get(key) {
+        None => Ok(Vec::new()),
+        Some(Value::Arr(a)) => {
+            check_axis_nonempty(key, a)?;
+            a.iter()
+                .map(|x| {
+                    x.as_u64().ok_or_else(|| {
+                        anyhow::anyhow!("\"{key}\" array must hold non-negative integers")
+                    })
+                })
+                .collect()
+        }
+        Some(x) => Ok(vec![x.as_u64().ok_or_else(|| {
+            anyhow::anyhow!("\"{key}\" must be a non-negative integer or an array of them")
+        })?]),
+    }
+}
+
+fn scene_axis(v: &Value, key: &str, seed: u64) -> crate::Result<Vec<SceneKind>> {
+    match v.get(key) {
+        None => Ok(Vec::new()),
+        Some(Value::Str(name)) => Ok(vec![SceneKind::parse(name, seed)?]),
+        Some(Value::Arr(a)) => {
+            check_axis_nonempty(key, a)?;
+            a.iter()
+                .map(|x| {
+                    let name = x.as_str().ok_or_else(|| {
+                        anyhow::anyhow!("\"{key}\" array must hold scene names")
+                    })?;
+                    SceneKind::parse(name, seed)
+                })
+                .collect()
+        }
+        Some(_) => anyhow::bail!("\"{key}\" must be a scene name or an array of scene names"),
+    }
+}
+
+/// Gating axis: numbers are `idle_gate_s` values, `null` disables gating
+/// for that cell.
+fn gate_axis(v: &Value) -> crate::Result<Vec<Option<f64>>> {
+    let one = |x: &Value| -> crate::Result<Option<f64>> {
+        match x {
+            Value::Null => Ok(None),
+            _ => {
+                let g = x
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("\"idle_gate_s\" must hold numbers or null"))?;
+                anyhow::ensure!(g.is_finite() && g > 0.0, "idle_gate_s must be positive or null");
+                Ok(Some(g))
+            }
+        }
+    };
+    match v.get("idle_gate_s") {
+        None => Ok(Vec::new()),
+        Some(Value::Arr(a)) => {
+            check_axis_nonempty("idle_gate_s", a)?;
+            a.iter().map(one).collect()
+        }
+        Some(x) => Ok(vec![one(x)?]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_request_resolves_defaults_and_overrides() {
+        let r = Request::from_json(
+            r#"{"kind":"run","seed":11,"duration_s":0.5,"scene":"noise","vdd":0.6}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Run { cfg } => {
+                assert_eq!(cfg.seed, 11);
+                assert_eq!(cfg.duration_s, 0.5);
+                assert_eq!(cfg.policy.vdd, Some(0.6));
+                assert!(matches!(cfg.scene, SceneKind::Noise { seed: 11, .. }));
+                assert!(!cfg.print_live);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fleet_request_reseeds_in_order() {
+        let r =
+            Request::from_json(r#"{"kind":"fleet","missions":3,"seed":100,"duration_s":0.1}"#)
+                .unwrap();
+        match r {
+            Request::Fleet { cfgs } => {
+                let seeds: Vec<u64> = cfgs.iter().map(|c| c.seed).collect();
+                assert_eq!(seeds, vec![100, 101, 102]);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn grid_request_parses_scalar_and_array_axes() {
+        let r = Request::from_json(
+            r#"{"kind":"grid","seed":[1,2],"vdd":[0.6,0.8],"scene":"corridor",
+                "duration_s":0.2,"idle_gate_s":[0.05,null]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Grid { seeds, vdds, scenes, durations, idle_gates, base } => {
+                assert_eq!(seeds, vec![1, 2]);
+                assert_eq!(vdds, vec![0.6, 0.8]);
+                assert_eq!(scenes.len(), 1);
+                // scalar duration becomes a singleton axis
+                assert_eq!(durations, vec![0.2]);
+                assert_eq!(idle_gates, vec![Some(0.05), None]);
+                // base keeps its default; the duration axis overrides per cell
+                assert_eq!(base.duration_s, MissionConfig::default().duration_s);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_keys_and_kinds_are_rejected() {
+        assert!(Request::from_json(r#"{"kind":"run","duraton_s":1.0}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"teleport"}"#).is_err());
+        assert!(Request::from_json(r#"{"no_kind":1}"#).is_err());
+        assert!(Request::from_json(r#"[1,2]"#).is_err());
+        assert!(Request::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn out_of_range_values_are_rejected() {
+        assert!(Request::from_json(r#"{"kind":"run","vdd":1.5}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","duration_s":-1}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","duration_s":1e9}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"fleet","missions":0}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"fleet","missions":100000}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","scene":"matrix"}"#).is_err());
+        // protocol rate/period knobs are bounded (pool-worker protection)
+        assert!(Request::from_json(r#"{"kind":"run","dvs_sample_hz":1e12}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","window_ms":1e-6}"#).is_err());
+        // explicitly-empty axis arrays are client bugs, not defaults
+        assert!(Request::from_json(r#"{"kind":"grid","seed":[]}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"grid","vdd":[]}"#).is_err());
+        // 17 x 16 x 16 = 4352 > MAX_CELLS
+        let seeds: Vec<String> = (0..17).map(|i| i.to_string()).collect();
+        let vals: Vec<String> = (0..16).map(|i| format!("0.{:02}", 50 + i)).collect();
+        let req = format!(
+            r#"{{"kind":"grid","seed":[{}],"vdd":[{}],"duration_s":[{}]}}"#,
+            seeds.join(","),
+            vals.join(","),
+            vals.join(",")
+        );
+        assert!(Request::from_json(&req).is_err());
+    }
+
+    #[test]
+    fn stats_takes_no_parameters() {
+        assert!(matches!(
+            Request::from_json(r#"{"kind":"stats"}"#).unwrap(),
+            Request::Stats
+        ));
+        assert!(Request::from_json(r#"{"kind":"stats","workers":2}"#).is_err());
+    }
+
+    #[test]
+    fn response_envelopes_are_stable() {
+        let ok = ok_response("run", Value::Num(1.0)).to_string();
+        assert_eq!(ok, r#"{"kind":"run","ok":true,"report":1}"#);
+        let err = error_response("boom").to_string();
+        assert_eq!(err, r#"{"error":"boom","ok":false}"#);
+    }
+}

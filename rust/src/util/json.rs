@@ -47,6 +47,10 @@ impl Value {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
     }
 
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().and_then(|n| usize::try_from(n).ok())
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -408,5 +412,38 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse("[]").unwrap(), Value::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Value::Obj(Default::default()));
+    }
+
+    #[test]
+    fn float_printing_roundtrips_bitwise() {
+        // The serve wire protocol and its result cache rely on this:
+        // printing any finite f64 and parsing it back must reproduce the
+        // exact bit pattern (Rust float formatting is shortest-roundtrip).
+        for x in [
+            0.1,
+            1.0 / 3.0,
+            2.0f64.powi(-40),
+            9.87654321e-12,
+            0.098_000_000_000_000_04, // accumulated-sum style residue
+            1e300,
+            -2.5e-300,
+            123456789.123456789,
+        ] {
+            let v = Value::Num(x);
+            let re = parse(&v.to_string()).unwrap();
+            assert_eq!(
+                re.as_f64().unwrap().to_bits(),
+                x.to_bits(),
+                "float {x} drifted through print/parse"
+            );
+        }
+    }
+
+    #[test]
+    fn usize_accessor_rejects_fractions() {
+        assert_eq!(Value::Num(4.0).as_usize(), Some(4));
+        assert_eq!(Value::Num(4.5).as_usize(), None);
+        assert_eq!(Value::Num(-1.0).as_usize(), None);
+        assert_eq!(Value::Str("4".into()).as_usize(), None);
     }
 }

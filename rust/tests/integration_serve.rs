@@ -1,0 +1,215 @@
+//! Serving integration: the `kraken serve` acceptance contract.
+//!
+//! * **End-to-end determinism** — a `grid`/`fleet`/`run` request served
+//!   through the resident worker pool yields per-cell reports bit-identical
+//!   (`f64::to_bits`) to offline `run_configs`/`run_fleet`/`Mission::run`
+//!   executions of the same resolved configs, regardless of `--workers`.
+//!   (Wall-clock and the serving thread count are the only fields allowed
+//!   to differ — they measure the host, not the mission.)
+//! * **Cache** — a repeated identical request is answered from the result
+//!   cache with byte-identical JSON, and the hit is visible in `stats`.
+//! * **Wire safety** — `parse(to_json().to_string())` reproduces every
+//!   numeric field of `MissionReport`/`FleetReport`/`GridReport` bit for
+//!   bit, so no float drifts through the protocol.
+
+use kraken::config::SocConfig;
+use kraken::coordinator::{run_configs, run_fleet, FleetConfig, Mission, MissionConfig};
+use kraken::serve::grid::{run_grid, GridConfig};
+use kraken::serve::Server;
+use kraken::util::json::{parse, Value};
+
+/// Recursive bit-exact comparison of two JSON documents. Keys named in
+/// `skip` (host-dependent measurements) are ignored at any depth.
+fn assert_bits_eq(a: &Value, b: &Value, path: &str, skip: &[&str]) {
+    match (a, b) {
+        (Value::Obj(ma), Value::Obj(mb)) => {
+            let ka: Vec<&String> = ma.keys().collect();
+            let kb: Vec<&String> = mb.keys().collect();
+            assert_eq!(ka, kb, "{path}: key sets differ");
+            for (k, va) in ma {
+                if skip.contains(&k.as_str()) {
+                    continue;
+                }
+                assert_bits_eq(va, &mb[k], &format!("{path}.{k}"), skip);
+            }
+        }
+        (Value::Arr(xa), Value::Arr(xb)) => {
+            assert_eq!(xa.len(), xb.len(), "{path}: array lengths differ");
+            for (i, (va, vb)) in xa.iter().zip(xb).enumerate() {
+                assert_bits_eq(va, vb, &format!("{path}[{i}]"), skip);
+            }
+        }
+        (Value::Num(na), Value::Num(nb)) => {
+            assert_eq!(na.to_bits(), nb.to_bits(), "{path}: {na} vs {nb}");
+        }
+        (va, vb) => assert_eq!(va, vb, "{path}: values differ"),
+    }
+}
+
+/// Host-dependent fields: everything else must match bit for bit.
+const HOST_KEYS: &[&str] = &["wall_s", "threads"];
+
+fn served_report(server: &Server, line: &str) -> Value {
+    let resp = server.handle_line(line).expect("response expected");
+    let v = parse(&resp).unwrap_or_else(|e| panic!("unparseable response {resp}: {e}"));
+    assert_eq!(
+        v.get("ok").and_then(Value::as_bool),
+        Some(true),
+        "request failed: {resp}"
+    );
+    v.get("report").expect("report field").clone()
+}
+
+fn tiny_base() -> MissionConfig {
+    MissionConfig {
+        duration_s: 0.1,
+        dvs_sample_hz: 300.0,
+        ..Default::default()
+    }
+}
+
+const GRID_LINE: &str =
+    r#"{"kind":"grid","duration_s":0.1,"dvs_sample_hz":300.0,"seed":[5,6],"vdd":[0.6,0.8]}"#;
+
+/// The grid the server resolves `GRID_LINE` to, built offline.
+fn grid_line_offline() -> GridConfig {
+    let mut grid = GridConfig::new(
+        SocConfig::kraken(),
+        MissionConfig {
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        },
+        2,
+    );
+    grid.seeds = vec![5, 6];
+    grid.durations = vec![0.1];
+    grid.vdds = vec![0.6, 0.8];
+    grid
+}
+
+#[test]
+fn grid_request_is_bit_identical_to_offline_fleet_regardless_of_workers() {
+    let offline = run_configs(
+        &SocConfig::kraken(),
+        &grid_line_offline().mission_cfgs(),
+        2,
+    )
+    .unwrap();
+    assert_eq!(offline.reports.len(), 4);
+
+    for workers in [1, 3] {
+        let server = Server::new(SocConfig::kraken(), workers, 16, 4).unwrap();
+        let report = served_report(&server, GRID_LINE);
+        let cells = report.get("cells").and_then(Value::as_arr).expect("cells");
+        assert_eq!(cells.len(), 4);
+        // cell order: seed outermost, vdd innermost
+        assert!(cells[0].as_str().unwrap().contains("seed=5"));
+        assert!(cells[0].as_str().unwrap().contains("vdd=0.60"));
+        assert!(cells[3].as_str().unwrap().contains("seed=6"));
+        assert!(cells[3].as_str().unwrap().contains("vdd=0.80"));
+        let served = report.get("fleet").and_then(|f| f.get("reports")).unwrap();
+        for (i, want) in offline.reports.iter().enumerate() {
+            assert_bits_eq(
+                served.idx(i).unwrap(),
+                &want.to_json(),
+                &format!("workers={workers} cell[{i}]"),
+                HOST_KEYS,
+            );
+        }
+    }
+}
+
+#[test]
+fn run_request_matches_serial_mission_bitwise() {
+    let server = Server::new(SocConfig::kraken(), 2, 8, 4).unwrap();
+    let report = served_report(
+        &server,
+        r#"{"kind":"run","duration_s":0.1,"dvs_sample_hz":300.0,"seed":3}"#,
+    );
+    let cfg = tiny_base().with_seed(3);
+    let want = Mission::new(SocConfig::kraken(), cfg).unwrap().run().unwrap();
+    assert_bits_eq(&report, &want.to_json(), "run", HOST_KEYS);
+}
+
+#[test]
+fn fleet_request_matches_offline_run_fleet_bitwise() {
+    let server = Server::new(SocConfig::kraken(), 2, 8, 4).unwrap();
+    let report = served_report(
+        &server,
+        r#"{"kind":"fleet","missions":3,"seed":50,"duration_s":0.1,"dvs_sample_hz":300.0}"#,
+    );
+    let offline = run_fleet(&FleetConfig {
+        missions: 3,
+        threads: 2,
+        base_seed: 50,
+        base: tiny_base(),
+        soc: SocConfig::kraken(),
+    })
+    .unwrap();
+    assert_bits_eq(&report, &offline.to_json(), "fleet", HOST_KEYS);
+}
+
+#[test]
+fn repeated_grid_request_replays_cached_bytes() {
+    let server = Server::new(SocConfig::kraken(), 2, 16, 4).unwrap();
+    let first = server.handle_line(GRID_LINE).unwrap();
+    let second = server.handle_line(GRID_LINE).unwrap();
+    assert_eq!(first, second, "cache hit must replay byte-identical JSON");
+    let stats = parse(&server.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+    let cache = stats.get("cache").expect("cache stats");
+    assert_eq!(cache.get("hits").and_then(Value::as_u64), Some(1), "{stats:?}");
+    assert_eq!(cache.get("misses").and_then(Value::as_u64), Some(1));
+    assert_eq!(cache.get("entries").and_then(Value::as_u64), Some(1));
+    assert_eq!(stats.get("jobs_done").and_then(Value::as_u64), Some(4));
+    assert_eq!(stats.get("queue_depth").and_then(Value::as_u64), Some(0));
+    assert!(stats.get("uptime_s").and_then(Value::as_f64).unwrap() >= 0.0);
+}
+
+#[test]
+fn stats_and_errors_share_the_protocol_envelope() {
+    let server = Server::new(SocConfig::kraken(), 1, 4, 4).unwrap();
+    let err = parse(&server.handle_line(r#"{"kind":"grid","vdd":"high"}"#).unwrap()).unwrap();
+    assert_eq!(err.get("ok").and_then(Value::as_bool), Some(false));
+    let stats = parse(&server.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+    assert_eq!(stats.get("ok").and_then(Value::as_bool), Some(true));
+    assert_eq!(stats.get("errors").and_then(Value::as_u64), Some(1));
+    assert_eq!(stats.get("workers").and_then(Value::as_u64), Some(1));
+}
+
+// --- wire-format round trips (guards against float-formatting drift) -------
+
+#[test]
+fn mission_report_json_roundtrips_every_field_bitwise() {
+    let mut m = Mission::new(SocConfig::kraken(), tiny_base()).unwrap();
+    let r = m.run().unwrap();
+    let doc = r.to_json();
+    let compact = parse(&doc.to_string()).unwrap();
+    assert_bits_eq(&doc, &compact, "mission.compact", &[]);
+    let pretty = parse(&doc.pretty()).unwrap();
+    assert_bits_eq(&doc, &pretty, "mission.pretty", &[]);
+    // spot-check a couple of full-precision fields really are present
+    assert!(doc.get("energy_j").and_then(Value::as_f64).unwrap() > 0.0);
+    assert_eq!(
+        doc.get("events_total").and_then(Value::as_u64),
+        Some(r.events_total)
+    );
+}
+
+#[test]
+fn fleet_and_grid_report_json_roundtrip_bitwise() {
+    let fleet = run_fleet(&FleetConfig {
+        missions: 2,
+        threads: 2,
+        base_seed: 9,
+        base: tiny_base(),
+        soc: SocConfig::kraken(),
+    })
+    .unwrap();
+    let doc = fleet.to_json();
+    assert_bits_eq(&doc, &parse(&doc.to_string()).unwrap(), "fleet", &[]);
+
+    let grid = run_grid(&grid_line_offline()).unwrap();
+    let gdoc = grid.to_json();
+    assert_bits_eq(&gdoc, &parse(&gdoc.to_string()).unwrap(), "grid", &[]);
+    assert_bits_eq(&gdoc, &parse(&gdoc.pretty()).unwrap(), "grid.pretty", &[]);
+}

@@ -158,6 +158,39 @@ fn prop_split_by_time_partitions_events() {
 // --- coordinator: scheduler / fleet / binning ---------------------------------
 
 #[test]
+fn prop_percentile_nearest_rank_invariants() {
+    use kraken::coordinator::percentile;
+    check("percentile: single element, endpoints, q-monotonicity", 200, |rng| {
+        // single-element slices: every q returns the element exactly
+        let x = rng.gen_range_f64(-1e9, 1e9);
+        for q in [0.0, 0.25, 0.5, 0.9, 1.0] {
+            prop_assert!(percentile(&[x], q) == x, "single-element slice at q={q}");
+        }
+        // random ascending sample
+        let n = rng.gen_range_usize(1, 200);
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-1e6, 1e6)).collect();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        // endpoints are exact min/max
+        prop_assert!(percentile(&xs, 0.0) == xs[0], "q=0.0 must be the minimum");
+        prop_assert!(percentile(&xs, 1.0) == xs[n - 1], "q=1.0 must be the maximum");
+        // out-of-range q clamps to the endpoints
+        prop_assert!(percentile(&xs, -0.5) == xs[0], "q<0 clamps to min");
+        prop_assert!(percentile(&xs, 1.5) == xs[n - 1], "q>1 clamps to max");
+        // monotone in q, and nearest-rank always returns a sample member
+        let q1 = rng.gen_range_f64(0.0, 1.0);
+        let q2 = q1 + rng.gen_range_f64(0.0, 1.0 - q1);
+        let p1 = percentile(&xs, q1);
+        let p2 = percentile(&xs, q2);
+        prop_assert!(p1 <= p2, "q {q1}->{q2} decreased percentile {p1}->{p2}");
+        prop_assert!(
+            xs.iter().any(|&v| v == p1),
+            "nearest-rank percentile must be a member of the sample"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_scheduler_pops_in_time_order() {
     check("scheduler is a total order on (t, prio, insertion)", 100, |rng| {
         let mut s = Scheduler::new();
