@@ -18,7 +18,7 @@ use kraken::coordinator::{
 };
 use kraken::metrics::fmt_power;
 use kraken::sensors::scene::SceneKind;
-use kraken::serve::grid::{run_grid, GridConfig};
+use kraken::serve::grid::{run_grid, run_workload_grid, GridConfig};
 use kraken::util::bench::section;
 
 fn mission_cfg(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> MissionConfig {
@@ -117,6 +117,36 @@ fn main() {
             fmt_power(r.avg_power_w),
             r.dropped_windows
         );
+    }
+
+    section("tenant sweep (workload grid): 1/2/4/8 sensor streams sharing ONE SoC");
+    // the engine-sharing scale experiment: queueing delay and
+    // energy-proportionality vs. tenant count, via the grid tenants axis
+    let mut tgrid = GridConfig::new(soc.clone(), mission_cfg(1.0, false, 0.8, corridor), 4);
+    tgrid.tenants = vec![1, 2, 4, 8];
+    let wg = run_workload_grid(&tgrid).unwrap();
+    for (label, r) in wg.cells.iter().zip(&wg.fleet.reports) {
+        let sne_q = &r.contention[kraken::coordinator::workload::ENG_SNE];
+        let pulp = &r.contention[kraken::coordinator::workload::ENG_PULP];
+        println!(
+            "{} -> {}  {:.3} uJ/inf  SNE queue mean {:.1} us  PULP drops {}",
+            label,
+            fmt_power(r.avg_power_w),
+            r.j_per_inference() * 1e6,
+            sne_q.mean_queue_ns() / 1e3,
+            pulp.dropped,
+        );
+        for (i, t) in r.tenants.iter().enumerate() {
+            println!(
+                "    tenant {i}: {:>9.0} events/s  SNE {:>5.0} | CUTIE {:>5.0} | PULP {:>4.0} inf/s",
+                t.events_total as f64 / r.sim_s.max(1e-12),
+                t.sne_inf as f64 / r.sim_s.max(1e-12),
+                t.cutie_inf as f64 / r.sim_s.max(1e-12),
+                t.pulp_inf as f64 / r.sim_s.max(1e-12),
+            );
+        }
+        // the shared envelope holds at every tenancy level
+        assert!(r.avg_power_w < 0.31, "tenancy broke the envelope: {label}");
     }
 
     section("fleet scaling: 8 corridor missions, distinct seeds, 4 threads");

@@ -19,6 +19,7 @@ use std::sync::Mutex;
 
 use crate::config::SocConfig;
 use crate::coordinator::pipeline::{Mission, MissionConfig, MissionReport};
+use crate::coordinator::workload::{Workload, WorkloadConfig, WorkloadReport};
 use crate::util::json::Value;
 
 /// Parameters of a fleet run: `missions` copies of `base`, reseeded
@@ -42,6 +43,17 @@ impl FleetConfig {
     pub fn mission_cfgs(&self) -> Vec<MissionConfig> {
         (0..self.missions)
             .map(|i| self.base.with_seed(self.base_seed.wrapping_add(i as u64)))
+            .collect()
+    }
+
+    /// The multi-tenant form of this fleet: each reseeded mission fanned
+    /// out into a `tenants`-stream [`WorkloadConfig`] on its own SoC.
+    /// `workload_cfgs(1)` is `mission_cfgs()` lifted tenant-wise, and each
+    /// workload runs bit-identical to the corresponding mission.
+    pub fn workload_cfgs(&self, tenants: usize) -> Vec<WorkloadConfig> {
+        self.mission_cfgs()
+            .iter()
+            .map(|m| WorkloadConfig::fan_out(m, tenants))
             .collect()
     }
 }
@@ -173,17 +185,26 @@ impl FleetReport {
     }
 }
 
-/// Run one mission per config in `cfgs`, at most `threads` at a time.
-/// Report order matches config order; any mission failure fails the fleet.
-pub fn run_configs(
+/// The shared work-stealing scaffold of [`run_configs`] and
+/// [`run_workload_configs`]: run `run(soc, cfg)` once per config on at
+/// most `threads` scoped threads. Result order matches config order; any
+/// job failure fails the whole batch. Returns the reports plus the batch
+/// wall-clock; `what` names the job kind in error messages.
+fn run_each<C, R>(
     soc: &SocConfig,
-    cfgs: &[MissionConfig],
+    cfgs: &[C],
     threads: usize,
-) -> crate::Result<FleetReport> {
+    run: impl Fn(SocConfig, C) -> crate::Result<R> + Sync,
+    what: &str,
+) -> crate::Result<(Vec<R>, f64)>
+where
+    C: Clone + Sync,
+    R: Send,
+{
     let wall_start = std::time::Instant::now();
     let threads = threads.clamp(1, cfgs.len().max(1));
     let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<crate::Result<MissionReport>>>> =
+    let slots: Mutex<Vec<Option<crate::Result<R>>>> =
         Mutex::new((0..cfgs.len()).map(|_| None).collect());
 
     std::thread::scope(|scope| {
@@ -193,9 +214,8 @@ pub fn run_configs(
                 if i >= cfgs.len() {
                     break;
                 }
-                // one Soc per worker per mission, built on this thread
-                let result = Mission::new(soc.clone(), cfgs[i].clone())
-                    .and_then(|mut m| m.run());
+                // one Soc per worker per job, built on this thread
+                let result = run(soc.clone(), cfgs[i].clone());
                 slots.lock().unwrap()[i] = Some(result);
             });
         }
@@ -205,16 +225,104 @@ pub fn run_configs(
     for (i, slot) in slots.into_inner().unwrap().into_iter().enumerate() {
         match slot {
             Some(Ok(r)) => reports.push(r),
-            Some(Err(e)) => return Err(anyhow::anyhow!("mission {i} failed: {e:#}")),
-            None => return Err(anyhow::anyhow!("mission {i} was never scheduled")),
+            Some(Err(e)) => return Err(anyhow::anyhow!("{what} {i} failed: {e:#}")),
+            None => return Err(anyhow::anyhow!("{what} {i} was never scheduled")),
         }
     }
-    Ok(FleetReport { reports, threads, wall_s: wall_start.elapsed().as_secs_f64() })
+    Ok((reports, wall_start.elapsed().as_secs_f64()))
+}
+
+/// Run one mission per config in `cfgs`, at most `threads` at a time.
+/// Report order matches config order; any mission failure fails the fleet.
+pub fn run_configs(
+    soc: &SocConfig,
+    cfgs: &[MissionConfig],
+    threads: usize,
+) -> crate::Result<FleetReport> {
+    let threads = threads.clamp(1, cfgs.len().max(1));
+    let (reports, wall_s) = run_each(
+        soc,
+        cfgs,
+        threads,
+        |soc, cfg| Mission::new(soc, cfg).and_then(|mut m| m.run()),
+        "mission",
+    )?;
+    Ok(FleetReport { reports, threads, wall_s })
 }
 
 /// Run a [`FleetConfig`]: `missions` reseeded copies of the base config.
 pub fn run_fleet(cfg: &FleetConfig) -> crate::Result<FleetReport> {
     run_configs(&cfg.soc, &cfg.mission_cfgs(), cfg.threads)
+}
+
+/// Aggregate result of a workload fleet: `reports[i]` is workload `i`'s
+/// report, independent of which worker ran it.
+#[derive(Debug, Clone)]
+pub struct WorkloadFleetReport {
+    pub reports: Vec<WorkloadReport>,
+    pub threads: usize,
+    /// Wall-clock of the whole fleet (max over workers, not the sum).
+    pub wall_s: f64,
+}
+
+impl WorkloadFleetReport {
+    /// Summary statistics of `metric` across workloads.
+    pub fn stat(&self, metric: impl Fn(&WorkloadReport) -> f64) -> FleetStat {
+        FleetStat::of(self.reports.iter().map(metric).collect())
+    }
+
+    /// Total simulated seconds across the fleet.
+    pub fn sim_s_total(&self) -> f64 {
+        self.reports.iter().map(|r| r.sim_s).sum()
+    }
+
+    /// Total energy across the fleet (J).
+    pub fn energy_j_total(&self) -> f64 {
+        self.reports.iter().map(|r| r.energy_j).sum()
+    }
+
+    /// JSON form (the workload twin of [`FleetReport::to_json`]).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("workloads", Value::Num(self.reports.len() as f64)),
+            ("threads", Value::Num(self.threads as f64)),
+            ("wall_s", Value::Num(self.wall_s)),
+            ("sim_s_total", Value::Num(self.sim_s_total())),
+            ("energy_j_total", Value::Num(self.energy_j_total())),
+            ("avg_power_w", self.stat(|r| r.avg_power_w).to_json()),
+            ("j_per_inference", self.stat(|r| r.j_per_inference()).to_json()),
+            ("reports", Value::Arr(self.reports.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+}
+
+/// Run one workload per config in `cfgs`, at most `threads` at a time —
+/// the multi-tenant twin of [`run_configs`]. Each workload owns a full SoC
+/// and is single-threaded inside (the FC is one core); the fleet layer
+/// parallelizes *across* workloads, so the thread count never changes any
+/// report.
+pub fn run_workload_configs(
+    soc: &SocConfig,
+    cfgs: &[WorkloadConfig],
+    threads: usize,
+) -> crate::Result<WorkloadFleetReport> {
+    let threads = threads.clamp(1, cfgs.len().max(1));
+    let (reports, wall_s) = run_each(
+        soc,
+        cfgs,
+        threads,
+        |soc, cfg| Workload::new(soc, cfg).and_then(|mut w| w.run()),
+        "workload",
+    )?;
+    Ok(WorkloadFleetReport { reports, threads, wall_s })
+}
+
+/// Run a [`FleetConfig`] in its `tenants`-stream multi-tenant form.
+pub fn run_workload_fleet(
+    cfg: &FleetConfig,
+    tenants: usize,
+) -> crate::Result<WorkloadFleetReport> {
+    run_workload_configs(&cfg.soc, &cfg.workload_cfgs(tenants), cfg.threads)
 }
 
 #[cfg(test)]
@@ -267,6 +375,27 @@ mod tests {
                 format!("{:.12e}", rb.energy_j)
             );
         }
+    }
+
+    #[test]
+    fn workload_fleet_matches_mission_fleet_at_one_tenant() {
+        let fc = FleetConfig {
+            missions: 2,
+            threads: 2,
+            base_seed: 5,
+            base: tiny_base(),
+            soc: SocConfig::kraken(),
+        };
+        let mf = run_fleet(&fc).unwrap();
+        let wf = run_workload_fleet(&fc, 1).unwrap();
+        assert_eq!(wf.reports.len(), 2);
+        for (m, w) in mf.reports.iter().zip(&wf.reports) {
+            let wm = w.to_mission_report();
+            assert_eq!(m.events_total, wm.events_total);
+            assert_eq!(m.energy_j.to_bits(), wm.energy_j.to_bits());
+        }
+        let json = wf.to_json();
+        assert_eq!(json.get("workloads").and_then(|v| v.as_f64()), Some(2.0));
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //!   of the resident serving layer ([`crate::serve`]): the serve worker
 //!   pool and config grids both resolve to the same per-mission configs
 //!   and therefore the same bit-exact reports.
+//! * [`workload`] — multi-tenant workloads: N sensor streams
+//!   ([`workload::StreamConfig`]) sharing *one* SoC's engines with
+//!   deterministic round-robin arbitration and per-engine contention
+//!   stats. The single-tenant form replays [`pipeline`] bit for bit; the
+//!   ROADMAP "batching within a mission" surface.
 //! * [`fusion`] — combining SNE optical flow, CUTIE classification and
 //!   PULP DroNet outputs into navigation commands.
 //! * [`power_mgr`] — the FC's power policy: gate idle engines, DVFS.
@@ -39,11 +44,19 @@ pub mod pipeline;
 pub mod power_mgr;
 pub mod scheduler;
 pub mod telemetry;
+pub mod workload;
 
 pub use engine::{CutieAdapter, Engine, EngineSlot, PulpAdapter, SneAdapter};
-pub use fleet::{percentile, run_configs, run_fleet, FleetConfig, FleetReport, FleetStat};
+pub use fleet::{
+    percentile, run_configs, run_fleet, run_workload_configs, run_workload_fleet, FleetConfig,
+    FleetReport, FleetStat, WorkloadFleetReport,
+};
 pub use fusion::{FusionState, NavCommand};
 pub use pipeline::{Mission, MissionConfig, MissionReport};
 pub use power_mgr::PowerPolicy;
 pub use scheduler::{Scheduled, Scheduler};
 pub use telemetry::Snapshot;
+pub use workload::{
+    EngineContention, StreamConfig, TenantReport, Workload, WorkloadConfig, WorkloadReport,
+    MAX_TENANTS,
+};

@@ -22,7 +22,9 @@
 //! the scheduler is report-identical to the old hand-rolled interleaving.
 //! With `artifacts_dir: None` the pipeline runs analytical-only (no PJRT) —
 //! used by sweeps that only need timing/energy. For many missions in
-//! parallel, see [`crate::coordinator::fleet`].
+//! parallel, see [`crate::coordinator::fleet`]; for several tenant sensor
+//! streams sharing *one* SoC's engines, see [`crate::coordinator::workload`]
+//! (whose single-tenant form replays this pipeline bit for bit).
 
 use std::path::PathBuf;
 
@@ -605,7 +607,7 @@ pub fn rebin_events(
     out
 }
 
-fn argmax(v: &[f32]) -> usize {
+pub(crate) fn argmax(v: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in v.iter().enumerate() {
         if x > v[best] {

@@ -1,0 +1,1002 @@
+//! Multi-tenant workloads: N sensor streams sharing one SoC's engines.
+//!
+//! A [`Mission`](crate::coordinator::pipeline::Mission) models exactly one
+//! DVS + one frame camera. Kraken's headline capability, though, is
+//! *concurrent* multi-sensor processing under a single power envelope, and
+//! follow-on platforms (Kraken Shield, ColibriUAV) mount several event and
+//! frame sensors on one SoC. A [`Workload`] is that shape: **one SoC + N
+//! tenant streams** ([`StreamConfig`]), each with its own scene, seed and
+//! sensor rates, all contending for the same three [`Engine`] adapters,
+//! the same DMA channels and the same energy ledger.
+//!
+//! ## Arbitration and determinism
+//!
+//! The discrete-event schedule is the arbiter. Events order by
+//! `(timestamp, arbitration rank, event class)` where *rank* is the tenant
+//! id rotated round-robin per inference window / per frame — so at equal
+//! timestamps a deterministic, fairness-preserving total order decides who
+//! reaches `Engine::dispatch` first, and sustained overload (e.g. two
+//! 30 fps DroNet streams against a ~36 ms PULP job) alternates between
+//! tenants instead of starving the higher tenant id. The per-engine FIFO
+//! itself is the existing [`EngineSlot`](crate::coordinator::engine::EngineSlot)
+//! busy horizon: a job whose backlog exceeds one scheduling window is
+//! dropped (backpressure), exactly as in the single-tenant pipeline.
+//! Everything is bit-reproducible: same [`WorkloadConfig`] ⇒ byte-identical
+//! [`WorkloadReport`], on any thread/worker count.
+//!
+//! ## Compatibility contract
+//!
+//! A single-tenant workload built via [`WorkloadConfig::from_mission`]
+//! replays the legacy mission pipeline *exactly*: same event order, same
+//! arithmetic, same [`MissionReport`] bits
+//! (`tests/integration_workload.rs` pins this against `Mission::run`).
+//! The contention counters ([`EngineContention`]) observe dispatch without
+//! perturbing it.
+
+use std::path::PathBuf;
+
+use crate::config::{SocConfig, VDD_MAX};
+use crate::coordinator::engine::{CutieAdapter, Engine, PulpAdapter, SneAdapter, WAKE_NS};
+use crate::coordinator::fusion::{FlowSummary, FusionState, NavCommand};
+use crate::coordinator::pipeline::{argmax, rebin_events, MissionConfig, MissionReport};
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::telemetry::Snapshot;
+use crate::runtime::Runtime;
+use crate::sensors::frame::{downsample_square, to_int8_luma, to_ternary, FrameSensor};
+use crate::sensors::scene::Scene;
+use crate::sensors::DvsSim;
+use crate::soc::power::{DomainId, PowerManager};
+use crate::soc::Soc;
+use crate::util::json::Value;
+
+/// Hard cap on tenant streams per SoC. Well above what L2 capacity admits;
+/// keeps the scheduler's u8 tie-break priority space and protocol requests
+/// bounded.
+pub const MAX_TENANTS: usize = 16;
+
+/// Per-extra-tenant L2 context: offload descriptors, AER routing tables and
+/// a LIF-context swap slot. The big regions (frame staging, SNE state,
+/// DroNet weights) are shared across tenants — frames ping-pong through one
+/// uDMA buffer and LIF contexts swap through one state region — so L2, not
+/// the API, bounds tenancy.
+const TENANT_CTX_BYTES: usize = 8 * 1024;
+
+/// FireNet artifact timesteps per window (mirrors the mission pipeline).
+const TIMESTEPS: usize = 5;
+
+/// Engine indices of the per-engine contention stats.
+pub const ENG_SNE: usize = 0;
+pub const ENG_CUTIE: usize = 1;
+pub const ENG_PULP: usize = 2;
+const ENGINE_LABELS: [&str; 3] = ["sne", "cutie", "pulp"];
+
+/// One tenant sensor stream: its world, its seed, its sensor rates.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    pub scene: crate::sensors::scene::SceneKind,
+    /// Seed of this stream's DVS noise (and of its scene, where seeded).
+    pub seed: u64,
+    pub frame_fps: f64,
+    /// DVS sampling rate inside a window (Hz).
+    pub dvs_sample_hz: f64,
+}
+
+impl StreamConfig {
+    /// The stream a legacy mission config describes.
+    pub fn from_mission(m: &MissionConfig) -> StreamConfig {
+        StreamConfig {
+            scene: m.scene,
+            seed: m.seed,
+            frame_fps: m.frame_fps,
+            dvs_sample_hz: m.dvs_sample_hz,
+        }
+    }
+}
+
+/// A workload: one SoC, shared engines, N tenant streams.
+///
+/// SoC-level knobs (duration, inference window, power policy, telemetry
+/// cadence, artifacts) stay per-workload — they belong to the chip, not to
+/// a sensor. Per-sensor knobs live in [`StreamConfig`].
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub duration_s: f64,
+    /// Inference-window / scheduling quantum (ms), shared by every tenant:
+    /// the FC arbitrates and accounts power on this cadence.
+    pub window_ms: f64,
+    pub policy: crate::coordinator::power_mgr::PowerPolicy,
+    pub telemetry_dt_s: f64,
+    /// Load AOT artifacts from here; None = analytical-only.
+    pub artifacts_dir: Option<PathBuf>,
+    pub print_live: bool,
+    pub streams: Vec<StreamConfig>,
+}
+
+impl WorkloadConfig {
+    /// The 1-tenant compatibility form: a workload whose report is
+    /// bit-identical to `Mission::run` of the same mission config.
+    pub fn from_mission(m: &MissionConfig) -> WorkloadConfig {
+        WorkloadConfig::fan_out(m, 1)
+    }
+
+    /// Replicate a mission config into `tenants` streams. Stream `i` is
+    /// reseeded `m.seed + i` (the [`MissionConfig::with_seed`] discipline,
+    /// so seeded scenes diverge per stream); stream 0 keeps the mission's
+    /// scene verbatim.
+    pub fn fan_out(m: &MissionConfig, tenants: usize) -> WorkloadConfig {
+        let streams = (0..tenants)
+            .map(|i| {
+                if i == 0 {
+                    StreamConfig::from_mission(m)
+                } else {
+                    StreamConfig::from_mission(&m.with_seed(m.seed.wrapping_add(i as u64)))
+                }
+            })
+            .collect();
+        WorkloadConfig {
+            duration_s: m.duration_s,
+            window_ms: m.window_ms,
+            policy: m.policy.clone(),
+            telemetry_dt_s: m.telemetry_dt_s,
+            artifacts_dir: m.artifacts_dir.clone(),
+            print_live: m.print_live,
+            streams,
+        }
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            (1..=MAX_TENANTS).contains(&self.streams.len()),
+            "workload needs 1..={MAX_TENANTS} tenant streams, got {}",
+            self.streams.len()
+        );
+        Ok(())
+    }
+}
+
+/// Shared-engine contention observed at dispatch: how many jobs a tenant
+/// population pushed through an engine, how many the backlog dropped, and
+/// how long accepted jobs waited behind other tenants' work.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineContention {
+    pub dispatched: u64,
+    /// Jobs rejected because the backlog exceeded one scheduling window.
+    pub dropped: u64,
+    /// Total queueing delay (ns) accepted jobs spent behind the backlog.
+    pub queued_ns_total: u64,
+    pub queued_ns_max: u64,
+}
+
+impl EngineContention {
+    fn record(&mut self, wait_ns: u64) {
+        self.dispatched += 1;
+        self.queued_ns_total += wait_ns;
+        self.queued_ns_max = self.queued_ns_max.max(wait_ns);
+    }
+
+    /// Mean queueing delay (ns) per accepted job.
+    pub fn mean_queue_ns(&self) -> f64 {
+        if self.dispatched == 0 {
+            0.0
+        } else {
+            self.queued_ns_total as f64 / self.dispatched as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("dispatched", Value::Num(self.dispatched as f64)),
+            ("dropped", Value::Num(self.dropped as f64)),
+            ("queued_ns_total", Value::Num(self.queued_ns_total as f64)),
+            ("queued_ns_max", Value::Num(self.queued_ns_max as f64)),
+            ("queued_ns_mean", Value::Num(self.mean_queue_ns())),
+        ])
+    }
+}
+
+/// One tenant's slice of a workload: the per-stream counters a
+/// [`MissionReport`] carries, minus the SoC-level power/energy fields.
+#[derive(Debug, Clone, Default)]
+pub struct TenantReport {
+    pub sne_inf: u64,
+    pub cutie_inf: u64,
+    pub pulp_inf: u64,
+    pub commands: u64,
+    pub events_total: u64,
+    pub avg_activity: f64,
+    pub dropped_windows: u64,
+    pub avoid_fraction: f64,
+    pub snapshots: Vec<Snapshot>,
+    pub last_commands: Vec<NavCommand>,
+}
+
+impl TenantReport {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("sne_inf", Value::Num(self.sne_inf as f64)),
+            ("cutie_inf", Value::Num(self.cutie_inf as f64)),
+            ("pulp_inf", Value::Num(self.pulp_inf as f64)),
+            ("commands", Value::Num(self.commands as f64)),
+            ("events_total", Value::Num(self.events_total as f64)),
+            ("avg_activity", Value::Num(self.avg_activity)),
+            ("dropped_windows", Value::Num(self.dropped_windows as f64)),
+            ("avoid_fraction", Value::Num(self.avoid_fraction)),
+        ])
+    }
+}
+
+/// Workload rollup: per-tenant sub-reports plus the shared-SoC power,
+/// energy and contention statistics.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub sim_s: f64,
+    pub wall_s: f64,
+    pub avg_power_w: f64,
+    pub peak_power_w: f64,
+    pub energy_j: f64,
+    pub energy_per_domain_j: [f64; 4],
+    pub runtime_calls: u64,
+    pub tenants: Vec<TenantReport>,
+    /// Per-engine contention, indexed [`ENG_SNE`]/[`ENG_CUTIE`]/[`ENG_PULP`].
+    pub contention: [EngineContention; 3],
+}
+
+impl WorkloadReport {
+    /// Events captured across every tenant stream.
+    pub fn events_total(&self) -> u64 {
+        self.tenants.iter().map(|t| t.events_total).sum()
+    }
+
+    /// Inferences completed across every tenant and engine.
+    pub fn inferences_total(&self) -> u64 {
+        self.tenants.iter().map(|t| t.sne_inf + t.cutie_inf + t.pulp_inf).sum()
+    }
+
+    /// Energy per inference (J), the SNE-claim metric under shared load.
+    pub fn j_per_inference(&self) -> f64 {
+        self.energy_j / self.inferences_total().max(1) as f64
+    }
+
+    /// Collapse a single-tenant workload back into the legacy report form.
+    /// Panics on multi-tenant workloads — those have no mission equivalent.
+    pub fn to_mission_report(&self) -> MissionReport {
+        assert_eq!(
+            self.tenants.len(),
+            1,
+            "only single-tenant workloads have a mission-report form"
+        );
+        let t = &self.tenants[0];
+        MissionReport {
+            sim_s: self.sim_s,
+            wall_s: self.wall_s,
+            sne_inf: t.sne_inf,
+            cutie_inf: t.cutie_inf,
+            pulp_inf: t.pulp_inf,
+            commands: t.commands,
+            events_total: t.events_total,
+            avg_activity: t.avg_activity,
+            dropped_windows: t.dropped_windows,
+            avg_power_w: self.avg_power_w,
+            peak_power_w: self.peak_power_w,
+            energy_j: self.energy_j,
+            energy_per_domain_j: self.energy_per_domain_j,
+            avoid_fraction: t.avoid_fraction,
+            runtime_calls: self.runtime_calls,
+            snapshots: t.snapshots.clone(),
+            last_commands: t.last_commands.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("sim_s", Value::Num(self.sim_s)),
+            ("wall_s", Value::Num(self.wall_s)),
+            ("avg_power_w", Value::Num(self.avg_power_w)),
+            ("peak_power_w", Value::Num(self.peak_power_w)),
+            ("energy_j", Value::Num(self.energy_j)),
+            ("energy_per_domain_j", Value::arr_f64(&self.energy_per_domain_j)),
+            ("runtime_calls", Value::Num(self.runtime_calls as f64)),
+            ("events_total", Value::Num(self.events_total() as f64)),
+            ("j_per_inference", Value::Num(self.j_per_inference())),
+            (
+                "tenants",
+                Value::Arr(self.tenants.iter().map(|t| t.to_json()).collect()),
+            ),
+            (
+                "contention",
+                Value::obj(
+                    ENGINE_LABELS
+                        .iter()
+                        .zip(&self.contention)
+                        .map(|(label, c)| (*label, c.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable rollup for the `kraken workload` CLI.
+    pub fn summary(&self) -> String {
+        use crate::metrics::{fmt_energy, fmt_power};
+        let mut s = String::new();
+        s.push_str(&format!(
+            "workload: {} tenant stream(s) on one SoC — {:.2} s simulated in {:.2} s wall ({:.1}x real time)\n",
+            self.tenants.len(),
+            self.sim_s,
+            self.wall_s,
+            self.sim_s / self.wall_s.max(1e-9),
+        ));
+        s.push_str(&format!(
+            "power : avg {}  peak {}  energy {}  ({} / inference)\n",
+            fmt_power(self.avg_power_w),
+            fmt_power(self.peak_power_w),
+            fmt_energy(self.energy_j),
+            fmt_energy(self.j_per_inference()),
+        ));
+        s.push_str(&format!(
+            "{:<8}{:>10}{:>10}{:>10}{:>11}{:>10}{:>9}\n",
+            "tenant", "SNE", "CUTIE", "PULP", "events", "cmds", "dropped"
+        ));
+        for (i, t) in self.tenants.iter().enumerate() {
+            s.push_str(&format!(
+                "#{i:<7}{:>10}{:>10}{:>10}{:>11}{:>10}{:>9}\n",
+                t.sne_inf, t.cutie_inf, t.pulp_inf, t.events_total, t.commands, t.dropped_windows
+            ));
+        }
+        s.push_str("engine contention (shared-SoC arbitration):\n");
+        for (label, c) in ENGINE_LABELS.iter().zip(&self.contention) {
+            s.push_str(&format!(
+                "  {label:<6} dispatched {:>7}  dropped {:>6}  queue mean {:>8.1} us  max {:>8.1} us\n",
+                c.dispatched,
+                c.dropped,
+                c.mean_queue_ns() / 1e3,
+                c.queued_ns_max as f64 / 1e3,
+            ));
+        }
+        s
+    }
+}
+
+/// Typed workload events. Tie-break priorities encode
+/// `(arbitration rank, event class)` below the SoC-level accounting event;
+/// see [`Workload::prio_start`].
+#[derive(Debug, Clone, Copy)]
+enum WorkloadEvent {
+    /// Open inference window `w` for one tenant: DVS capture + SNE offload.
+    WindowStart { tenant: usize, w: u64 },
+    /// One tenant's camera frame is due: CPI + uDMA, CUTIE + PULP forks.
+    Frame { tenant: usize },
+    /// Close window `w` SoC-wide: per-tenant fusion, power accounting,
+    /// gating, telemetry. Always fires before any same-instant tenant event.
+    WindowEnd(u64),
+}
+
+const PRIO_WINDOW_END: u8 = 0;
+
+/// Queueing delay a job dispatched on `eng` at `now_ns` would incur: the
+/// engine's backlog plus the wake-up latency if it sits power-gated. Pure
+/// observation — reads exactly the state `Engine::dispatch` is about to
+/// consume.
+fn queue_wait_ns(eng: &dyn Engine, power: &PowerManager, now_ns: u64) -> u64 {
+    let backlog = eng.slot().busy_until_ns.saturating_sub(now_ns);
+    if power.is_gated(eng.domain()) {
+        backlog + WAKE_NS
+    } else {
+        backlog
+    }
+}
+
+/// Per-tenant simulation state.
+struct Tenant {
+    dvs: DvsSim,
+    cam: FrameSensor,
+    scene: Scene,
+    fusion: FusionState,
+    /// Persistent FireNet LIF state (functional path), one context per
+    /// tenant stream.
+    firenet_state: Vec<Vec<f32>>,
+    snap: Snapshot,
+    activity_sum: f64,
+    avoid_count: u64,
+    /// Frames scheduled so far — the rotation index of frame arbitration.
+    frames_scheduled: u64,
+    report: TenantReport,
+}
+
+/// SoC-level accumulators threaded through the event handlers.
+struct SocState {
+    vdd: f64,
+    window_ns: u64,
+    n_windows: u64,
+    snap_start_ns: u64,
+    peak_power_w: f64,
+    /// Cumulative per-domain ledger energy at each telemetry boundary —
+    /// the "stash cumulative, normalize after the loop" discipline the
+    /// legacy pipeline uses, kept SoC-level here.
+    cum_marks: Vec<[f64; 4]>,
+}
+
+/// The workload runner: one SoC, one scheduler, three shared engines,
+/// N tenant streams.
+pub struct Workload {
+    pub cfg: WorkloadConfig,
+    pub soc: Soc,
+    sne: SneAdapter,
+    cutie: CutieAdapter,
+    pulp: PulpAdapter,
+    runtime: Option<Runtime>,
+    tenants: Vec<Tenant>,
+    firenet_dims: (usize, usize),
+    contention: [EngineContention; 3],
+}
+
+impl Workload {
+    pub fn new(soc_cfg: SocConfig, cfg: WorkloadConfig) -> crate::Result<Self> {
+        cfg.validate()?;
+        let mut soc = Soc::new(soc_cfg.clone());
+        let vdd = cfg.policy.vdd.unwrap_or(VDD_MAX);
+        soc.power.set_vdd(vdd);
+        soc.power_on_all();
+
+        // The mission's L2 working set, shared across tenants: frames
+        // ping-pong through one uDMA staging buffer, per-tenant LIF
+        // contexts swap through one SNE state region, DroNet weights are
+        // common. Each extra tenant adds a small context; when it no
+        // longer fits, this errors exactly like oversized firmware would.
+        soc.l2.alloc(
+            "frame_raw",
+            crate::sensors::FRAME_WIDTH * crate::sensors::FRAME_HEIGHT,
+        )?;
+        soc.l2.alloc("firenet_state_8b", 64 * 64 * 96)?;
+        soc.l2.alloc("dronet_weights_8b", 330 * 1024)?;
+        soc.l2.alloc("event_staging", 64 * 1024)?;
+        for i in 1..cfg.streams.len() {
+            soc.l2.alloc(&format!("tenant{i}_ctx"), TENANT_CTX_BYTES)?;
+        }
+
+        let runtime = match &cfg.artifacts_dir {
+            Some(dir) => {
+                let rt = Runtime::load_subset(
+                    dir,
+                    &["firenet_window".into(), "cutie".into(), "dronet".into()],
+                )?;
+                // functional/analytical cross-check, as in the mission
+                rt.manifest
+                    .check_stats_macs("firenet", {
+                        let net = crate::nets::firenet_artifact();
+                        net.layers.iter().map(|l| l.macs()).sum::<u64>()
+                    })
+                    .ok(); // head conv differs; strict check in tests
+                Some(rt)
+            }
+            None => None,
+        };
+
+        let (fh, fw) = (64usize, 64usize);
+        let state_shapes = [(16, fh, fw), (32, fh, fw), (32, fh, fw), (16, fh, fw)];
+        let tenants = cfg
+            .streams
+            .iter()
+            .map(|s| Tenant {
+                dvs: DvsSim::new(
+                    crate::sensors::DVS_WIDTH,
+                    crate::sensors::DVS_HEIGHT,
+                    s.seed,
+                ),
+                cam: FrameSensor::new(
+                    crate::sensors::FRAME_WIDTH,
+                    crate::sensors::FRAME_HEIGHT,
+                    s.frame_fps,
+                ),
+                scene: Scene::new(s.scene),
+                fusion: FusionState::new(),
+                firenet_state: state_shapes
+                    .iter()
+                    .map(|&(c, h, w)| vec![0f32; c * h * w])
+                    .collect(),
+                snap: Snapshot::default(),
+                activity_sum: 0.0,
+                avoid_count: 0,
+                frames_scheduled: 0,
+                report: TenantReport::default(),
+            })
+            .collect();
+
+        Ok(Workload {
+            sne: SneAdapter::new(&soc_cfg),
+            cutie: CutieAdapter::new(&soc_cfg),
+            pulp: PulpAdapter::new(&soc_cfg),
+            runtime,
+            tenants,
+            firenet_dims: (fh, fw),
+            contention: [EngineContention::default(); 3],
+            soc,
+            cfg,
+        })
+    }
+
+    /// Total idle power (W) of the un-gated engines at the current
+    /// operating point.
+    pub fn engines_idle_power_w(&self) -> f64 {
+        let engines: [&dyn Engine; 3] = [&self.sne, &self.cutie, &self.pulp];
+        engines.iter().map(|e| e.idle_power(&self.soc.power)).sum()
+    }
+
+    /// Tie-break priority of tenant `tenant`'s window-start at window `w`:
+    /// `1 + 2 * rank`, rank = round-robin rotation of the tenant order by
+    /// window index. A single tenant always gets rank 0, reproducing the
+    /// legacy `WindowEnd(0) < WindowStart(1) < Frame(2)` priorities.
+    fn prio_start(&self, tenant: usize, w: u64) -> u8 {
+        let n = self.tenants.len();
+        let rank = (tenant + (w as usize) % n) % n;
+        1 + 2 * rank as u8
+    }
+
+    /// Frame tie-break priority: `2 + 2 * rank`, rank rotated by the
+    /// tenant's own frame index so contended frame slots alternate.
+    fn prio_frame(&self, tenant: usize, frame_idx: u64) -> u8 {
+        let n = self.tenants.len();
+        let rank = (tenant + (frame_idx as usize) % n) % n;
+        2 + 2 * rank as u8
+    }
+
+    /// Run the workload to completion.
+    pub fn run(&mut self) -> crate::Result<WorkloadReport> {
+        let wall_start = std::time::Instant::now();
+        let window_ns = (self.cfg.window_ms * 1e6) as u64;
+        let n_windows = (self.cfg.duration_s * 1e9 / window_ns as f64) as u64;
+        let end_ns = n_windows * window_ns;
+
+        let mut st = SocState {
+            vdd: self.soc.power.vdd(),
+            window_ns,
+            n_windows,
+            snap_start_ns: 0,
+            peak_power_w: 0.0,
+            cum_marks: Vec::new(),
+        };
+
+        let mut sched: Scheduler<WorkloadEvent> = Scheduler::new();
+        if n_windows > 0 {
+            for t in 0..self.tenants.len() {
+                sched.push(
+                    0,
+                    self.prio_start(t, 0),
+                    WorkloadEvent::WindowStart { tenant: t, w: 0 },
+                );
+                let first_frame = self.tenants[t].cam.next_frame_t_ns();
+                sched.push(first_frame, self.prio_frame(t, 0), WorkloadEvent::Frame { tenant: t });
+                self.tenants[t].frames_scheduled = 1;
+            }
+            sched.push(window_ns, PRIO_WINDOW_END, WorkloadEvent::WindowEnd(0));
+        }
+
+        while let Some(ev) = sched.pop() {
+            match ev.payload {
+                WorkloadEvent::WindowStart { tenant, w } => {
+                    self.on_window_start(tenant, w, &mut st)?;
+                }
+                WorkloadEvent::Frame { tenant } => {
+                    self.on_frame(tenant, &mut st)?;
+                    let next = self.tenants[tenant].cam.next_frame_t_ns();
+                    if next < end_ns {
+                        let idx = self.tenants[tenant].frames_scheduled;
+                        sched.push(next, self.prio_frame(tenant, idx), WorkloadEvent::Frame { tenant });
+                        self.tenants[tenant].frames_scheduled = idx + 1;
+                    }
+                }
+                WorkloadEvent::WindowEnd(w) => {
+                    self.on_window_end(w, &mut st);
+                    if w + 1 < n_windows {
+                        for t in 0..self.tenants.len() {
+                            sched.push(
+                                (w + 1) * window_ns,
+                                self.prio_start(t, w + 1),
+                                WorkloadEvent::WindowStart { tenant: t, w: w + 1 },
+                            );
+                        }
+                        sched.push((w + 2) * window_ns, PRIO_WINDOW_END, WorkloadEvent::WindowEnd(w + 1));
+                    }
+                }
+            }
+        }
+
+        // normalize stored snapshots: stashed cumulative energy -> power
+        for ten in &mut self.tenants {
+            let mut prev = [0.0f64; 4];
+            let mut prev_t = 0.0f64;
+            for s in &mut ten.report.snapshots {
+                let span = (s.t_s - prev_t).max(1e-9);
+                let cum = s.power_w;
+                for i in 0..4 {
+                    s.power_w[i] = (cum[i] - prev[i]) / span;
+                }
+                prev = cum;
+                prev_t = s.t_s;
+            }
+        }
+
+        let sim_s = self.soc.clock.now_s();
+        let energy_j = self.soc.power.ledger.total_j();
+        let mut energy_per_domain_j = [0.0; 4];
+        for (i, d) in DomainId::ALL.iter().enumerate() {
+            energy_per_domain_j[i] = self.soc.power.ledger.energy_of(*d);
+        }
+        let tenants: Vec<TenantReport> = self
+            .tenants
+            .iter_mut()
+            .map(|ten| {
+                let mut r = std::mem::take(&mut ten.report);
+                r.avg_activity = ten.activity_sum / n_windows.max(1) as f64;
+                r.avoid_fraction = ten.avoid_count as f64 / r.commands.max(1) as f64;
+                r
+            })
+            .collect();
+        Ok(WorkloadReport {
+            sim_s,
+            wall_s: wall_start.elapsed().as_secs_f64(),
+            avg_power_w: energy_j / sim_s.max(1e-12),
+            peak_power_w: st.peak_power_w,
+            energy_j,
+            energy_per_domain_j,
+            runtime_calls: self.runtime.as_ref().map_or(0, |r| r.calls.get()),
+            tenants,
+            contention: self.contention,
+        })
+    }
+
+    /// One tenant's window open: DVS capture over `[t0, t1)` and the SNE
+    /// optical-flow offload through the shared engine.
+    fn on_window_start(&mut self, tenant: usize, w: u64, st: &mut SocState) -> crate::Result<()> {
+        let window_ns = st.window_ns;
+        let t0 = w * window_ns;
+        let stream_hz = self.cfg.streams[tenant].dvs_sample_hz;
+        let ten = &mut self.tenants[tenant];
+
+        // -- 1. DVS capture over the window (AER stream) ---------------
+        let mut win = crate::event::EventWindow::new(ten.dvs.width, ten.dvs.height);
+        let n_samples = ((window_ns as f64 * 1e-9) * stream_hz).max(1.0) as u64;
+        for k in 0..=n_samples {
+            let ts = t0 + k * window_ns / (n_samples + 1);
+            ten.scene.advance(ts as f64 * 1e-9);
+            let part = ten.dvs.step(&ten.scene, ts);
+            for e in part.events {
+                win.push(e);
+            }
+        }
+        ten.report.events_total += win.len() as u64;
+
+        // -- 2. SNE optical flow (functional if artifacts) -------------
+        let mut hidden_spikes = 0f64;
+        let mut flow_summary = None;
+        if let Some(rt) = &self.runtime {
+            let (fh, fw) = self.firenet_dims;
+            let bins = rebin_events(&win, fh, fw, TIMESTEPS);
+            let mut seq = Vec::with_capacity(TIMESTEPS * 2 * fh * fw);
+            for bin in &bins {
+                seq.extend_from_slice(bin);
+            }
+            let inp: Vec<&[f32]> = std::iter::once(seq.as_slice())
+                .chain(ten.firenet_state.iter().map(|v| v.as_slice()))
+                .collect();
+            let mut out = rt.execute("firenet_window", &inp)?;
+            let counts = out.pop().expect("counts");
+            hidden_spikes += counts.iter().map(|&c| c as f64).sum::<f64>();
+            for i in (1..=4).rev() {
+                ten.firenet_state[i - 1] = out.remove(i);
+            }
+            let flow = out.remove(0);
+            flow_summary = Some(FlowSummary::from_flow(&flow, fh, fw));
+        }
+
+        // network activity, exactly the mission pipeline's estimate
+        let artifact_sites =
+            (self.firenet_dims.0 * self.firenet_dims.1) as f64 * 98.0 * TIMESTEPS as f64;
+        let input_sites = (ten.dvs.width * ten.dvs.height * 2 * TIMESTEPS) as f64;
+        let activity = if self.runtime.is_some() {
+            let scale = (self.firenet_dims.0 * self.firenet_dims.1) as f64
+                / (ten.dvs.width * ten.dvs.height) as f64;
+            ((win.len() as f64 * scale + hidden_spikes) / artifact_sites).min(1.0)
+        } else {
+            (win.len() as f64 / input_sites).min(1.0)
+        };
+        ten.activity_sum += activity;
+        ten.snap.activity += activity;
+        ten.snap.events += win.len() as u64;
+
+        let sne_dur = self.sne.job_ns(activity, st.vdd);
+        let wait_ns = queue_wait_ns(&self.sne, &self.soc.power, t0);
+        if self.sne.dispatch(&mut self.soc.power, t0, sne_dur, window_ns) {
+            self.contention[ENG_SNE].record(wait_ns);
+            ten.report.sne_inf += 1;
+            ten.snap.sne_inf += 1;
+            match flow_summary {
+                Some(fs) => ten.fusion.update_flow(fs),
+                None => ten.fusion.update_flow(FlowSummary::default()),
+            }
+        } else {
+            self.contention[ENG_SNE].dropped += 1;
+            ten.report.dropped_windows += 1;
+        }
+        Ok(())
+    }
+
+    /// One tenant's frame path: CPI capture + uDMA staging through the
+    /// shared DMA, then the CUTIE and PULP forks on the shared engines.
+    fn on_frame(&mut self, tenant: usize, st: &mut SocState) -> crate::Result<()> {
+        let window_ns = st.window_ns;
+        let ten = &mut self.tenants[tenant];
+        let (fts, img) = ten.cam.capture(&mut ten.scene);
+        let f_fab = self.soc.power.freq(DomainId::Fabric).max(1.0);
+        let tag = format!("frame{tenant}");
+        let dma_done = self.soc.dma.start(&tag, ten.cam.frame_bytes(), fts, f_fab);
+
+        // CUTIE classification
+        let cutie_dur = self.cutie.job_ns(st.vdd);
+        let wait_c = queue_wait_ns(&self.cutie, &self.soc.power, dma_done);
+        if self.cutie.dispatch(&mut self.soc.power, dma_done, cutie_dur, window_ns) {
+            self.contention[ENG_CUTIE].record(wait_c);
+            ten.report.cutie_inf += 1;
+            ten.snap.cutie_inf += 1;
+            let class = if let Some(rt) = &self.runtime {
+                let small = downsample_square(&img, ten.cam.width, ten.cam.height, 32);
+                let tern = to_ternary(&small, 3, 0.08);
+                let out = rt.execute("cutie", &[&tern])?;
+                argmax(&out[0])
+            } else {
+                (fts / 33_000_000 % 10) as usize // placeholder class
+            };
+            ten.fusion.update_class(class);
+        } else {
+            self.contention[ENG_CUTIE].dropped += 1;
+        }
+
+        // PULP DroNet
+        let pulp_dur = self.pulp.job_ns(st.vdd);
+        let wait_p = queue_wait_ns(&self.pulp, &self.soc.power, dma_done);
+        if self.pulp.dispatch(&mut self.soc.power, dma_done, pulp_dur, window_ns) {
+            self.contention[ENG_PULP].record(wait_p);
+            ten.report.pulp_inf += 1;
+            ten.snap.pulp_inf += 1;
+            let (steer, coll) = if let Some(rt) = &self.runtime {
+                let small = downsample_square(&img, ten.cam.width, ten.cam.height, 96);
+                let luma = to_int8_luma(&small);
+                let out = rt.execute("dronet", &[&luma])?;
+                (out[0][0], out[0][1])
+            } else {
+                let (s, c) = ten.scene.corridor_truth(fts as f64 * 1e-9);
+                (s as f32, if c { 3.0 } else { -3.0 })
+            };
+            ten.fusion.update_dronet(steer / 64.0, coll);
+        } else {
+            self.contention[ENG_PULP].dropped += 1;
+        }
+        Ok(())
+    }
+
+    /// SoC-wide window close: per-tenant fusion (in tenant order — the
+    /// same order the DES fires same-instant tenant events), shared power
+    /// accounting + gating policy, telemetry snapshots.
+    fn on_window_end(&mut self, w: u64, st: &mut SocState) {
+        let window_ns = st.window_ns;
+        let t1 = (w + 1) * window_ns;
+
+        // -- fusion, one command per tenant per window -----------------
+        for ten in &mut self.tenants {
+            let cmd = ten.fusion.command(t1);
+            if cmd.avoiding {
+                ten.avoid_count += 1;
+            }
+            ten.report.commands += 1;
+            ten.snap.commands += 1;
+            if ten.report.last_commands.len() < 32 {
+                ten.report.last_commands.push(cmd);
+            }
+        }
+
+        // -- power accounting + gating policy, once per SoC ------------
+        let dt_s = window_ns as f64 * 1e-9;
+        let mut any_gated_now = false;
+        let engines: [&mut dyn Engine; 3] = [&mut self.sne, &mut self.cutie, &mut self.pulp];
+        for eng in engines {
+            let d = eng.domain();
+            let busy_ns = eng.complete(window_ns);
+            let u = busy_ns as f64 / window_ns as f64;
+            self.soc.power.account(d, u, dt_s);
+            let idle_s = (t1.saturating_sub(eng.last_active_ns())) as f64 * 1e-9;
+            if !self.soc.power.is_gated(d) && self.cfg.policy.should_gate(d, idle_s) {
+                self.soc.power.gate(d);
+                any_gated_now = true;
+            }
+        }
+        if any_gated_now {
+            for ten in &mut self.tenants {
+                ten.snap.any_gated = true;
+            }
+        }
+        // fabric: DMA + dispatch + fusion code on the FC
+        self.soc.dma.retire(t1);
+        let fab_u = 0.15 + 0.1 * (self.soc.dma.busy_channels() as f64);
+        self.soc.power.account(DomainId::Fabric, fab_u.min(1.0), dt_s);
+        self.soc.power.advance_time(dt_s);
+        self.soc.clock.advance_to(t1);
+
+        // -- telemetry -------------------------------------------------
+        if (t1 - st.snap_start_ns) as f64 * 1e-9 >= self.cfg.telemetry_dt_s
+            || w + 1 == st.n_windows
+        {
+            let span_s = (t1 - st.snap_start_ns) as f64 * 1e-9;
+            let windows_in_span = (span_s / (window_ns as f64 * 1e-9)).max(1.0);
+            let mut p = [0.0; 4];
+            for (i, d) in DomainId::ALL.iter().enumerate() {
+                p[i] = self.soc.power.ledger.energy_of(*d);
+            }
+            // span-average power from the ledger delta; the stored
+            // snapshots stash cumulative energy and are normalized after
+            // the event loop, like the legacy pipeline
+            let mut power_now = [0.0f64; 4];
+            if let Some(prev) = st.cum_marks.last() {
+                for i in 0..4 {
+                    power_now[i] = (p[i] - prev[i]) / span_s;
+                }
+            } else {
+                for i in 0..4 {
+                    power_now[i] = p[i] / span_s;
+                }
+            }
+            for (idx, ten) in self.tenants.iter_mut().enumerate() {
+                ten.snap.t_s = t1 as f64 * 1e-9;
+                ten.snap.activity /= windows_in_span;
+                ten.snap.power_w = power_now;
+                if self.cfg.print_live {
+                    println!("[tenant {idx}] {}", ten.snap.line());
+                }
+                let mut stored = ten.snap.clone();
+                stored.power_w = p;
+                ten.report.snapshots.push(stored);
+                ten.snap = Snapshot::default();
+            }
+            let total_now: f64 = power_now.iter().sum();
+            st.peak_power_w = st.peak_power_w.max(total_now);
+            st.cum_marks.push(p);
+            st.snap_start_ns = t1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::Mission;
+    use crate::sensors::scene::SceneKind;
+
+    fn quick_mission() -> MissionConfig {
+        MissionConfig {
+            duration_s: 0.3,
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fan_out_reseeds_streams() {
+        let m = quick_mission();
+        let w = WorkloadConfig::fan_out(&m, 3);
+        assert_eq!(w.tenants(), 3);
+        assert_eq!(w.streams[0].seed, m.seed);
+        assert_eq!(w.streams[1].seed, m.seed + 1);
+        assert_eq!(w.streams[2].seed, m.seed + 2);
+        // seeded scenes pick up the stream seed
+        match w.streams[2].scene {
+            SceneKind::Corridor { seed, .. } => assert_eq!(seed, m.seed + 2),
+            other => panic!("scene kind changed: {other:?}"),
+        }
+        // stream 0 keeps the mission scene verbatim
+        assert_eq!(format!("{:?}", w.streams[0].scene), format!("{:?}", m.scene));
+    }
+
+    #[test]
+    fn tenant_count_is_validated() {
+        let m = quick_mission();
+        assert!(WorkloadConfig::fan_out(&m, 0).validate().is_err());
+        assert!(WorkloadConfig::fan_out(&m, 1).validate().is_ok());
+        assert!(WorkloadConfig::fan_out(&m, MAX_TENANTS).validate().is_ok());
+        let over = WorkloadConfig::fan_out(&m, MAX_TENANTS + 1);
+        assert!(Workload::new(SocConfig::kraken(), over).is_err());
+    }
+
+    #[test]
+    fn single_tenant_matches_mission_counters() {
+        let m = quick_mission();
+        let want = Mission::new(SocConfig::kraken(), m.clone()).unwrap().run().unwrap();
+        let mut w = Workload::new(SocConfig::kraken(), WorkloadConfig::from_mission(&m)).unwrap();
+        let got = w.run().unwrap().to_mission_report();
+        assert_eq!(got.sne_inf, want.sne_inf);
+        assert_eq!(got.cutie_inf, want.cutie_inf);
+        assert_eq!(got.pulp_inf, want.pulp_inf);
+        assert_eq!(got.events_total, want.events_total);
+        assert_eq!(got.commands, want.commands);
+        assert_eq!(got.energy_j.to_bits(), want.energy_j.to_bits());
+        assert_eq!(got.avg_power_w.to_bits(), want.avg_power_w.to_bits());
+        assert_eq!(got.peak_power_w.to_bits(), want.peak_power_w.to_bits());
+    }
+
+    #[test]
+    fn two_tenants_contend_without_starving() {
+        let cfg = WorkloadConfig::fan_out(&quick_mission(), 2);
+        let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+        let r = w.run().unwrap();
+        assert_eq!(r.tenants.len(), 2);
+        // both streams make progress on every engine
+        for (i, t) in r.tenants.iter().enumerate() {
+            assert!(t.sne_inf > 0, "tenant {i} starved on SNE");
+            assert!(t.cutie_inf > 0, "tenant {i} starved on CUTIE");
+            assert!(t.pulp_inf > 0, "tenant {i} starved on PULP");
+            assert!(t.commands > 0, "tenant {i} issued no commands");
+        }
+        // sharing one SNE makes the second dispatch of each window queue
+        assert!(
+            r.contention[ENG_SNE].queued_ns_total > 0,
+            "no SNE queueing under 2 tenants: {:?}",
+            r.contention
+        );
+        // two 30 fps DroNet streams cannot both fit a ~36 ms job budget
+        assert!(
+            r.contention[ENG_PULP].dropped > 0,
+            "PULP overload not visible: {:?}",
+            r.contention
+        );
+    }
+
+    #[test]
+    fn workload_is_deterministic() {
+        let run = || {
+            let cfg = WorkloadConfig::fan_out(&quick_mission(), 2);
+            let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+            let r = w.run().unwrap();
+            (
+                r.events_total(),
+                r.inferences_total(),
+                format!("{:.17e}", r.energy_j),
+                r.contention[ENG_SNE].queued_ns_total,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn power_envelope_holds_under_tenancy() {
+        for tenants in [1usize, 2, 4] {
+            let cfg = WorkloadConfig::fan_out(&quick_mission(), tenants);
+            let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+            let r = w.run().unwrap();
+            assert!(
+                r.avg_power_w < 0.31,
+                "{tenants} tenants: avg {} W",
+                r.avg_power_w
+            );
+            assert!(r.avg_power_w > 0.001);
+        }
+    }
+
+    #[test]
+    fn json_shape_carries_tenants_and_contention() {
+        let cfg = WorkloadConfig::fan_out(&quick_mission(), 2);
+        let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+        let r = w.run().unwrap();
+        let doc = r.to_json();
+        assert_eq!(
+            doc.get("tenants").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
+        let sne = doc.get("contention").and_then(|c| c.get("sne")).unwrap();
+        assert!(sne.get("dispatched").and_then(Value::as_f64).unwrap() > 0.0);
+        let s = r.summary();
+        assert!(s.contains("2 tenant stream(s)"));
+        assert!(s.contains("engine contention"));
+    }
+}

@@ -31,7 +31,12 @@
 //!   that drives the mission [`coordinator::pipeline`], and
 //! * a [`coordinator::fleet`] runner that executes N independent missions
 //!   in parallel across OS threads with per-mission seeds — the scaling
-//!   substrate for sweeps and batch serving (`kraken fleet`).
+//!   substrate for sweeps and batch serving (`kraken fleet`), and
+//! * a [`coordinator::workload`] runner for multi-tenant workloads: N
+//!   sensor streams sharing *one* SoC's engines under deterministic
+//!   round-robin arbitration, with per-engine queueing/drop statistics
+//!   (`kraken workload --tenants N`); the single-tenant form is
+//!   bit-identical to the mission pipeline.
 //!
 //! Every mission is bit-reproducible for its seed, and a fleet's mission
 //! reports are bit-identical to serial runs regardless of thread count.

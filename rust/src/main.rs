@@ -10,6 +10,8 @@
 //! * `kraken sweep vdd`         — efficiency vs voltage (DVFS curves)
 //! * `kraken run`               — the Fig. 2 mission (E6), live telemetry
 //! * `kraken fleet`             — N missions in parallel (coordinator::fleet)
+//! * `kraken workload`          — N tenant sensor streams sharing ONE SoC
+//!   (coordinator::workload): per-tenant reports + engine contention
 //! * `kraken serve`             — resident mission service (serve::Server)
 //! * `kraken check-artifacts`   — load + execute every AOT artifact once
 //!
@@ -19,7 +21,9 @@
 
 use kraken::baselines::{BinarEye, Tianjic, Vega};
 use kraken::config::{Precision, SocConfig};
-use kraken::coordinator::{FleetConfig, Mission, MissionConfig, PowerPolicy};
+use kraken::coordinator::{
+    FleetConfig, Mission, MissionConfig, PowerPolicy, Workload, WorkloadConfig,
+};
 use kraken::cutie::CutieEngine;
 use kraken::metrics::{fmt_eff, fmt_energy, fmt_power, Series};
 use kraken::nets;
@@ -50,12 +54,19 @@ COMMANDS:
         [--seed BASE] [--vdd V] [--json]
                                   run N missions in parallel (seeds
                                   BASE..BASE+N, one SoC per worker)
+  workload [--tenants N] [--duration S] [--scene ...] [--seed BASE]
+           [--vdd V] [--window-ms MS] [--json]
+                                  run N tenant sensor streams sharing ONE
+                                  SoC's engines (stream seeds BASE..BASE+N):
+                                  per-tenant rates plus shared-engine
+                                  queueing/drop statistics (DESIGN.md §8)
   serve [--stdio | --listen ADDR] [--workers N] [--queue N] [--cache-cap N]
                                   resident mission service: JSON-lines
-                                  requests (run|fleet|grid|stats) answered
-                                  from a persistent worker pool with a
-                                  deterministic result cache (DESIGN.md
-                                  § Serving)
+                                  requests (run|fleet|grid|workload|stats|
+                                  shutdown, optional protocol field "v")
+                                  answered from a persistent worker pool
+                                  with a deterministic result cache
+                                  (DESIGN.md § Serving, §8)
   check-artifacts [--dir DIR]     verify + execute every AOT artifact
   help                            this text
 ";
@@ -174,6 +185,17 @@ fn run() -> kraken::Result<()> {
             let json = args.flag("json");
             args.finish()?;
             run_fleet_cmd(cfg, missions, threads, duration, &scene, seed, vdd, json)
+        }
+        Some("workload") => {
+            let tenants: usize = args.opt("tenants")?.map_or(Ok(2), |s| s.parse())?;
+            let duration: f64 = args.opt("duration")?.map_or(Ok(1.0), |s| s.parse())?;
+            let scene = args.opt("scene")?.unwrap_or_else(|| "corridor".into());
+            let seed: u64 = args.opt("seed")?.map_or(Ok(7), |s| s.parse())?;
+            let vdd: f64 = args.opt("vdd")?.map_or(Ok(0.8), |s| s.parse())?;
+            let window_ms: f64 = args.opt("window-ms")?.map_or(Ok(10.0), |s| s.parse())?;
+            let json = args.flag("json");
+            args.finish()?;
+            run_workload_cmd(cfg, tenants, duration, &scene, seed, vdd, window_ms, json)
         }
         Some("serve") => {
             let stdio = args.flag("stdio");
@@ -441,6 +463,40 @@ fn run_fleet_cmd(
             r.dropped_windows,
         );
     }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_workload_cmd(
+    cfg: SocConfig,
+    tenants: usize,
+    duration: f64,
+    scene: &str,
+    seed: u64,
+    vdd: f64,
+    window_ms: f64,
+    json: bool,
+) -> kraken::Result<()> {
+    let base = MissionConfig {
+        duration_s: duration,
+        scene: SceneKind::parse(scene, seed)?,
+        seed,
+        window_ms,
+        policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
+        ..Default::default()
+    };
+    let wcfg = WorkloadConfig::fan_out(&base, tenants);
+    let mut workload = Workload::new(cfg, wcfg)?;
+    let r = workload.run()?;
+    if json {
+        println!("{}", r.to_json().pretty());
+        return Ok(());
+    }
+    print!("{}", r.summary());
+    println!(
+        "idle  : {} engine clocked-idle floor at workload end (gated engines excluded)",
+        fmt_power(workload.engines_idle_power_w())
+    );
     Ok(())
 }
 

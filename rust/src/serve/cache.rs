@@ -24,10 +24,12 @@ use std::collections::HashMap;
 use std::collections::VecDeque;
 
 use crate::config::SocConfig;
-use crate::coordinator::pipeline::MissionConfig;
 
-/// Canonical cache key of a resolved request (see module docs).
-pub fn canonical_key(kind: &str, soc: &SocConfig, cfgs: &[MissionConfig]) -> String {
+/// Canonical cache key of a resolved request (see module docs). Generic
+/// over the resolved config type — mission and workload requests share one
+/// cache, disambiguated by `kind` plus the configs' `Debug` rendering
+/// (`MissionConfig` and `WorkloadConfig` render distinctly).
+pub fn canonical_key<C: std::fmt::Debug>(kind: &str, soc: &SocConfig, cfgs: &[C]) -> String {
     format!("{kind}|{soc:?}|{cfgs:?}")
 }
 
@@ -136,6 +138,7 @@ impl ResultCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pipeline::MissionConfig;
 
     #[test]
     fn hit_replays_exact_bytes_and_counts() {
@@ -178,6 +181,24 @@ mod tests {
         b.duration_s += 1e-9; // one ulp-scale change must change the key
         assert_ne!(ka, canonical_key("run", &soc, std::slice::from_ref(&b)));
         assert_ne!(ka, canonical_key("fleet", &soc, std::slice::from_ref(&a)));
+    }
+
+    #[test]
+    fn mission_and_workload_configs_never_share_a_key() {
+        use crate::coordinator::workload::WorkloadConfig;
+        let soc = SocConfig::kraken();
+        let m = MissionConfig::default();
+        let w = WorkloadConfig::from_mission(&m);
+        assert_ne!(
+            canonical_key("run", &soc, std::slice::from_ref(&m)),
+            canonical_key("workload", &soc, std::slice::from_ref(&w))
+        );
+        // tenant count is part of the key: 1-tenant != 2-tenant
+        let w2 = WorkloadConfig::fan_out(&m, 2);
+        assert_ne!(
+            canonical_key("workload", &soc, std::slice::from_ref(&w)),
+            canonical_key("workload", &soc, std::slice::from_ref(&w2))
+        );
     }
 
     #[test]

@@ -16,8 +16,11 @@
 //! only), and the DVFS/scene sweep tables are single-axis grids.
 
 use crate::config::SocConfig;
-use crate::coordinator::fleet::{run_configs, FleetConfig, FleetReport};
+use crate::coordinator::fleet::{
+    run_configs, run_workload_configs, FleetConfig, FleetReport, WorkloadFleetReport,
+};
 use crate::coordinator::pipeline::MissionConfig;
+use crate::coordinator::workload::WorkloadConfig;
 use crate::sensors::scene::SceneKind;
 use crate::util::json::Value;
 
@@ -34,6 +37,14 @@ pub struct GridConfig {
     /// Gating-policy axis: each element is an `idle_gate_s` value, with
     /// `None` meaning gating disabled for that cell.
     pub idle_gates: Vec<Option<f64>>,
+    /// Tenant-count axis: each element fans the cell's mission out into
+    /// that many sensor streams sharing one SoC
+    /// ([`WorkloadConfig::fan_out`]). Empty = single-tenant cells. Grids
+    /// with any tenants axis (even all-1s — it still contributes cells
+    /// and labels) resolve through [`GridConfig::workload_cells`] /
+    /// [`run_workload_grid`]; the mission-level [`GridConfig::cells`]
+    /// path rejects them rather than silently dropping the axis.
+    pub tenants: Vec<usize>,
     pub threads: usize,
 }
 
@@ -58,7 +69,7 @@ fn axis<T: Copy>(xs: &[T]) -> Vec<Option<T>> {
 /// Checked cross-product size of a grid's axis lengths (an empty axis
 /// counts as the single inherited cell). `None` on usize overflow — the
 /// protocol layer uses this to reject absurd grids before building them.
-pub fn cell_count(axis_lens: [usize; 5]) -> Option<usize> {
+pub fn cell_count(axis_lens: [usize; 6]) -> Option<usize> {
     axis_lens
         .iter()
         .try_fold(1usize, |acc, &n| acc.checked_mul(n.max(1)))
@@ -76,6 +87,7 @@ impl GridConfig {
             scenes: Vec::new(),
             vdds: Vec::new(),
             idle_gates: Vec::new(),
+            tenants: Vec::new(),
             threads,
         }
     }
@@ -104,8 +116,15 @@ impl GridConfig {
             self.scenes.len(),
             self.vdds.len(),
             self.idle_gates.len(),
+            self.tenants.len(),
         ])
         .unwrap_or(usize::MAX)
+    }
+
+    /// Does this grid need the workload resolution path (a tenants axis
+    /// naming any multi-tenant cell)?
+    pub fn is_multi_tenant(&self) -> bool {
+        self.tenants.iter().any(|&t| t != 1)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -115,7 +134,21 @@ impl GridConfig {
     /// All cells in deterministic nested order (seed outermost, gate
     /// innermost). Axis values overwrite the base config only when the
     /// axis is non-empty, so a grid of empty axes is exactly `[base]`.
+    /// Mission cells cannot express a tenants axis — even an all-1s one
+    /// contributes cross-product cells and `tenants=N` labels, so any
+    /// tenants axis must resolve via [`GridConfig::workload_cells`]
+    /// (asserted here rather than silently dropping the axis).
     pub fn cells(&self) -> Vec<GridCell> {
+        assert!(
+            self.tenants.is_empty(),
+            "grid has a tenants axis; resolve it with workload_cells()"
+        );
+        self.mission_axis_cells()
+    }
+
+    /// The 5 mission axes resolved to cells, ignoring the tenants axis
+    /// (each of these fans out per tenants value in `workload_cells`).
+    fn mission_axis_cells(&self) -> Vec<GridCell> {
         // capacity capped: len() saturates on overflow and the protocol
         // rejects oversized grids, but a direct caller must not trigger a
         // capacity-overflow abort here
@@ -172,6 +205,39 @@ impl GridConfig {
     pub fn mission_cfgs(&self) -> Vec<MissionConfig> {
         self.cells().into_iter().map(|c| c.cfg).collect()
     }
+
+    /// All cells resolved as workloads: the 5 mission axes in their usual
+    /// nested order, then the tenants axis innermost. Every mission cell
+    /// fans out per tenants value ([`WorkloadConfig::fan_out`]); an empty
+    /// tenants axis yields single-tenant workloads, so
+    /// `workload_cells()[i].cfg` is exactly `cells()[i]` lifted — and runs
+    /// bit-identical to it.
+    pub fn workload_cells(&self) -> Vec<WorkloadGridCell> {
+        let mut out = Vec::with_capacity(self.len().min(crate::serve::protocol::MAX_CELLS));
+        for cell in self.mission_axis_cells() {
+            for &t in &axis(&self.tenants) {
+                let tenants = t.unwrap_or(1);
+                out.push(WorkloadGridCell {
+                    label: format!("{} tenants={tenants}", cell.label),
+                    cfg: WorkloadConfig::fan_out(&cell.cfg, tenants),
+                });
+            }
+        }
+        out
+    }
+
+    /// The per-cell workload configs, in cell order.
+    pub fn workload_cfgs(&self) -> Vec<WorkloadConfig> {
+        self.workload_cells().into_iter().map(|c| c.cfg).collect()
+    }
+}
+
+/// One workload grid cell: the resolved multi-tenant config plus a label
+/// of its effective axis values (the mission label + `tenants=N`).
+#[derive(Debug, Clone)]
+pub struct WorkloadGridCell {
+    pub label: String,
+    pub cfg: WorkloadConfig,
 }
 
 /// Aggregate artifact of a grid run: the fleet-style report plus the cell
@@ -213,10 +279,72 @@ impl GridReport {
 /// Run every cell of a grid through the fleet runner (scoped threads,
 /// offline path — the serve pool is the resident-process equivalent).
 pub fn run_grid(grid: &GridConfig) -> crate::Result<GridReport> {
+    anyhow::ensure!(
+        grid.tenants.is_empty(),
+        "grid has a tenants axis; run it with run_workload_grid"
+    );
     let cells = grid.cells();
     let cfgs: Vec<MissionConfig> = cells.iter().map(|c| c.cfg.clone()).collect();
     let fleet = run_configs(&grid.soc, &cfgs, grid.threads)?;
     Ok(GridReport {
+        cells: cells.into_iter().map(|c| c.label).collect(),
+        fleet,
+    })
+}
+
+/// Aggregate artifact of a workload grid run: cell labels index-aligned
+/// with the per-workload reports.
+#[derive(Debug, Clone)]
+pub struct WorkloadGridReport {
+    pub cells: Vec<String>,
+    pub fleet: WorkloadFleetReport,
+}
+
+impl WorkloadGridReport {
+    /// JSON form: cell labels alongside the workload-fleet rollup.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "cells",
+                Value::Arr(self.cells.iter().map(|c| Value::Str(c.clone())).collect()),
+            ),
+            ("fleet", self.fleet.to_json()),
+        ])
+    }
+
+    /// Human-readable rollup: one line per cell with tenancy-scaling
+    /// metrics (aggregate events/s, J/inference, PULP queueing).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "workload grid: {} cells on {} threads — {:.2} s simulated in {:.2} s wall\n",
+            self.cells.len(),
+            self.fleet.threads,
+            self.fleet.sim_s_total(),
+            self.fleet.wall_s,
+        ));
+        s.push_str("per-cell reports:\n");
+        for (label, r) in self.cells.iter().zip(&self.fleet.reports) {
+            let ev_per_s = r.events_total() as f64 / r.sim_s.max(1e-12);
+            s.push_str(&format!(
+                "  {label:<60} {:>9.0} ev/s  {:>8.1} mW  {:>9.3} uJ/inf  dropped {}\n",
+                ev_per_s,
+                r.avg_power_w * 1e3,
+                r.j_per_inference() * 1e6,
+                r.contention.iter().map(|c| c.dropped).sum::<u64>(),
+            ));
+        }
+        s
+    }
+}
+
+/// Run every cell of a workload grid through the workload-fleet runner —
+/// the multi-tenant twin of [`run_grid`].
+pub fn run_workload_grid(grid: &GridConfig) -> crate::Result<WorkloadGridReport> {
+    let cells = grid.workload_cells();
+    let cfgs: Vec<WorkloadConfig> = cells.iter().map(|c| c.cfg.clone()).collect();
+    let fleet = run_workload_configs(&grid.soc, &cfgs, grid.threads)?;
+    Ok(WorkloadGridReport {
         cells: cells.into_iter().map(|c| c.label).collect(),
         fleet,
     })
@@ -307,13 +435,53 @@ mod tests {
 
     #[test]
     fn cell_count_is_checked_against_overflow() {
-        assert_eq!(cell_count([0, 0, 0, 0, 0]), Some(1));
-        assert_eq!(cell_count([2, 0, 3, 0, 0]), Some(6));
-        assert_eq!(cell_count([usize::MAX, 2, 1, 1, 1]), None);
+        assert_eq!(cell_count([0, 0, 0, 0, 0, 0]), Some(1));
+        assert_eq!(cell_count([2, 0, 3, 0, 0, 0]), Some(6));
+        assert_eq!(cell_count([usize::MAX, 2, 1, 1, 1, 1]), None);
         let mut g = base_grid();
         g.seeds = vec![1, 2];
         g.idle_gates = vec![Some(0.01), None, Some(0.1)];
         assert_eq!(g.len(), 6);
+    }
+
+    #[test]
+    fn tenants_axis_fans_cells_out_innermost() {
+        let mut g = base_grid();
+        g.vdds = vec![0.6, 0.8];
+        g.tenants = vec![1, 2];
+        assert_eq!(g.len(), 4);
+        assert!(g.is_multi_tenant());
+        let cells = g.workload_cells();
+        assert_eq!(cells.len(), 4);
+        let got: Vec<(f64, usize)> = cells
+            .iter()
+            .map(|c| (c.cfg.policy.vdd.unwrap(), c.cfg.tenants()))
+            .collect();
+        assert_eq!(got, vec![(0.6, 1), (0.6, 2), (0.8, 1), (0.8, 2)]);
+        assert!(cells[1].label.contains("tenants=2"), "{}", cells[1].label);
+        // the mission path refuses to silently drop the axis
+        assert!(run_grid(&g).is_err());
+    }
+
+    #[test]
+    fn single_tenant_workload_grid_matches_mission_grid_bitwise() {
+        let mut g = base_grid();
+        g.vdds = vec![0.6, 0.8];
+        let mission = run_grid(&g).unwrap();
+        let workload = run_workload_grid(&g).unwrap();
+        assert_eq!(workload.fleet.reports.len(), 2);
+        for (m, w) in mission.fleet.reports.iter().zip(&workload.fleet.reports) {
+            let wm = w.to_mission_report();
+            assert_eq!(m.events_total, wm.events_total);
+            assert_eq!(m.energy_j.to_bits(), wm.energy_j.to_bits());
+        }
+        let s = workload.summary();
+        assert!(s.contains("per-cell reports"), "{s}");
+        let json = workload.to_json();
+        assert_eq!(
+            json.get("cells").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
     }
 
     #[test]

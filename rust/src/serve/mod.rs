@@ -3,23 +3,29 @@
 //! Deployed Kraken systems are persistent onboard services fed a continuous
 //! stream of perception requests, not one-shot process launches. This
 //! module exposes the simulator the same way: a long-running process that
-//! accepts JSON-lines mission requests ([`protocol`]) over stdio or TCP and
-//! answers from warm state. Three layers sit under the request loop:
+//! accepts JSON-lines requests ([`protocol`], version-gated by a `v`
+//! field) over stdio or TCP and answers from warm state. Three layers sit
+//! under the request loop:
 //!
 //! * [`pool`] — a persistent worker pool with a **bounded** queue and
 //!   explicit backpressure (a batch that does not fit is rejected with an
-//!   error, never buffered unboundedly);
+//!   error, never buffered unboundedly); it runs single-tenant missions
+//!   and multi-tenant workloads through the same queue;
 //! * [`cache`] — a deterministic result cache keyed by a canonical hash of
-//!   the resolved `MissionConfig`s + `SocConfig`; because missions are
-//!   bit-reproducible, a hit replays the exact response bytes;
+//!   the resolved configs (`MissionConfig`s or `WorkloadConfig`s) +
+//!   `SocConfig`; because simulations are bit-reproducible, a hit replays
+//!   the exact response bytes;
 //! * [`grid`] — config grids (the cross-product generalization of
-//!   `FleetConfig`) so one request can shard a whole parameter sweep
-//!   across the pool and get a single aggregated report.
+//!   `FleetConfig`, including a `tenants` axis) so one request can shard a
+//!   whole parameter sweep across the pool and get a single aggregated
+//!   report.
 //!
-//! Served results are bit-identical to offline `run_fleet`/`run_configs`
-//! runs of the same configs, regardless of `--workers`
-//! (`tests/integration_serve.rs`). See DESIGN.md § Serving for the wire
-//! schema and worked examples.
+//! Served results are bit-identical to offline
+//! `run_fleet`/`run_configs`/`run_workload_configs` runs of the same
+//! configs, regardless of `--workers` (`tests/integration_serve.rs`).
+//! A `shutdown` request drains the queue, joins the workers, answers with
+//! final stats and stops the serving loop. See DESIGN.md § Serving and §8
+//! for the wire schema and worked examples.
 
 pub mod cache;
 pub mod grid;
@@ -27,16 +33,17 @@ pub mod pool;
 pub mod protocol;
 
 use std::io::{BufRead, Write};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::SocConfig;
-use crate::coordinator::fleet::FleetReport;
+use crate::coordinator::fleet::{FleetReport, WorkloadFleetReport};
 use crate::coordinator::pipeline::MissionConfig;
+use crate::coordinator::workload::WorkloadConfig;
 use crate::util::json::Value;
 
 use cache::ResultCache;
-use grid::{GridConfig, GridReport};
+use grid::{GridConfig, GridReport, WorkloadGridReport};
 use pool::WorkerPool;
 use protocol::Request;
 
@@ -49,6 +56,14 @@ pub struct Server {
     start: std::time::Instant,
     requests: AtomicU64,
     errors: AtomicU64,
+    shutting_down: AtomicBool,
+    /// Bound TCP address, if serving over `--listen` — the shutdown path
+    /// nudges it so a blocking `accept` observes the flag.
+    listen_addr: Mutex<Option<std::net::SocketAddr>>,
+    /// Responses currently being computed/written by TCP connection
+    /// threads; the listener waits for zero before exiting on shutdown so
+    /// drained results are not truncated by process exit.
+    conn_work: AtomicU64,
 }
 
 impl Server {
@@ -68,11 +83,19 @@ impl Server {
             start: std::time::Instant::now(),
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+            listen_addr: Mutex::new(None),
+            conn_work: AtomicU64::new(0),
         })
     }
 
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Has a `shutdown` request been served? Serving loops exit once true.
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::Relaxed)
     }
 
     /// Serve one protocol line. Returns `None` for blank lines, otherwise
@@ -96,10 +119,12 @@ impl Server {
 
     fn dispatch(&self, line: &str) -> crate::Result<String> {
         match Request::from_json(line)? {
-            Request::Stats => Ok(self.stats().to_string()),
-            Request::Run { cfg } => self.serve_cached("run", vec![cfg], None),
-            Request::Fleet { cfgs } => self.serve_cached("fleet", cfgs, None),
-            Request::Grid { base, seeds, durations, scenes, vdds, idle_gates } => {
+            Request::Stats => Ok(self.stats_value("stats").to_string()),
+            Request::Shutdown => Ok(self.shutdown_now()),
+            Request::Run { cfg } => self.serve_missions("run", vec![cfg], None),
+            Request::Fleet { cfgs } => self.serve_missions("fleet", cfgs, None),
+            Request::Workload { cfg } => self.serve_workloads("workload", vec![cfg], None),
+            Request::Grid { base, seeds, durations, scenes, vdds, idle_gates, tenants } => {
                 let grid = GridConfig {
                     soc: self.soc.clone(),
                     base,
@@ -108,22 +133,55 @@ impl Server {
                     scenes,
                     vdds,
                     idle_gates,
+                    tenants,
                     threads: self.pool.workers(),
                 };
-                let cells = grid.cells();
-                let labels = cells.iter().map(|c| c.label.clone()).collect();
-                let cfgs = cells.into_iter().map(|c| c.cfg).collect();
-                self.serve_cached("grid", cfgs, Some(labels))
+                if !grid.tenants.is_empty() {
+                    // any tenants axis — even all-1s — lifts the whole grid
+                    // to the workload path, so the axis always contributes
+                    // its documented cross-product cells and `tenants=N`
+                    // labels (single-tenant cells stay bit-identical to
+                    // their mission form either way)
+                    let cells = grid.workload_cells();
+                    let labels = cells.iter().map(|c| c.label.clone()).collect();
+                    let cfgs = cells.into_iter().map(|c| c.cfg).collect();
+                    self.serve_workloads("grid", cfgs, Some(labels))
+                } else {
+                    let cells = grid.cells();
+                    let labels = cells.iter().map(|c| c.label.clone()).collect();
+                    let cfgs = cells.into_iter().map(|c| c.cfg).collect();
+                    self.serve_missions("grid", cfgs, Some(labels))
+                }
             }
         }
     }
 
-    /// The cacheable request path: canonical key -> replay stored bytes,
+    /// Replay `key` from the cache when `cacheable`, else compute the
+    /// response and store it verbatim.
+    fn with_cache(
+        &self,
+        cacheable: bool,
+        key: String,
+        compute: impl FnOnce() -> crate::Result<String>,
+    ) -> crate::Result<String> {
+        if cacheable {
+            if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+                return Ok(hit);
+            }
+        }
+        let resp = compute()?;
+        if cacheable {
+            self.cache.lock().unwrap().insert(key, resp.clone());
+        }
+        Ok(resp)
+    }
+
+    /// The mission request path: canonical key -> replay stored bytes,
     /// else run the batch on the pool and store the response verbatim.
     /// Artifact-backed missions are never cached: the config only names the
     /// artifacts directory, so regenerated artifact files would otherwise
     /// be masked by a stale cached report.
-    fn serve_cached(
+    fn serve_missions(
         &self,
         kind: &str,
         cfgs: Vec<MissionConfig>,
@@ -131,52 +189,125 @@ impl Server {
     ) -> crate::Result<String> {
         let cacheable = cfgs.iter().all(|c| c.artifacts_dir.is_none());
         let key = cache::canonical_key(kind, &self.soc, &cfgs);
-        if cacheable {
-            if let Some(hit) = self.cache.lock().unwrap().get(&key) {
-                return Ok(hit);
-            }
-        }
-        let (reports, wall_s) = self
-            .pool
-            .run_configs(&self.soc, &cfgs)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-        let report = match (kind, labels) {
-            ("run", _) => reports
-                .first()
-                .ok_or_else(|| anyhow::anyhow!("empty run batch"))?
-                .to_json(),
-            (_, labels) => {
-                let fleet =
-                    FleetReport { reports, threads: self.pool.workers(), wall_s };
-                match labels {
-                    Some(cells) => GridReport { cells, fleet }.to_json(),
-                    None => fleet.to_json(),
+        self.with_cache(cacheable, key, || {
+            let (reports, wall_s) = self
+                .pool
+                .run_configs(&self.soc, &cfgs)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let report = match (kind, labels) {
+                ("run", _) => reports
+                    .first()
+                    .ok_or_else(|| anyhow::anyhow!("empty run batch"))?
+                    .to_json(),
+                (_, labels) => {
+                    let fleet =
+                        FleetReport { reports, threads: self.pool.workers(), wall_s };
+                    match labels {
+                        Some(cells) => GridReport { cells, fleet }.to_json(),
+                        None => fleet.to_json(),
+                    }
                 }
-            }
-        };
-        let resp = protocol::ok_response(kind, report).to_string();
-        if cacheable {
-            self.cache.lock().unwrap().insert(key, resp.clone());
-        }
-        Ok(resp)
+            };
+            Ok(protocol::ok_response(kind, report).to_string())
+        })
     }
 
-    /// The `stats` response: uptime, queue state, cache hit rate.
-    fn stats(&self) -> Value {
+    /// The workload request path: one multi-tenant simulation per config
+    /// (a lone one for `workload`, one per cell for a tenants-axis
+    /// `grid`), cached under the same canonical-key discipline.
+    fn serve_workloads(
+        &self,
+        kind: &str,
+        cfgs: Vec<WorkloadConfig>,
+        labels: Option<Vec<String>>,
+    ) -> crate::Result<String> {
+        let cacheable = cfgs.iter().all(|c| c.artifacts_dir.is_none());
+        let key = cache::canonical_key(kind, &self.soc, &cfgs);
+        self.with_cache(cacheable, key, || {
+            let (reports, wall_s) = self
+                .pool
+                .run_workloads(&self.soc, &cfgs)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let report = match (kind, labels) {
+                ("workload", _) => reports
+                    .first()
+                    .ok_or_else(|| anyhow::anyhow!("empty workload batch"))?
+                    .to_json(),
+                (_, labels) => {
+                    let fleet = WorkloadFleetReport {
+                        reports,
+                        threads: self.pool.workers(),
+                        wall_s,
+                    };
+                    match labels {
+                        Some(cells) => WorkloadGridReport { cells, fleet }.to_json(),
+                        None => fleet.to_json(),
+                    }
+                }
+            };
+            Ok(protocol::ok_response(kind, report).to_string())
+        })
+    }
+
+    /// Serve a `shutdown` request: drain the bounded queue, join the
+    /// workers, mark the server as stopping (the stdio/TCP loops exit
+    /// after this response), and reply with the final statistics. The
+    /// TCP accept loop is nudged by [`serve_conn`] only *after* the
+    /// response has been flushed, so the client always sees the reply.
+    fn shutdown_now(&self) -> String {
+        self.pool.shutdown();
+        self.shutting_down.store(true, Ordering::Relaxed);
+        self.stats_value("shutdown").to_string()
+    }
+
+    /// Wake a blocking TCP `accept` (which cannot observe the shutdown
+    /// flag on its own) with a throwaway connection. No-op off TCP. A
+    /// wildcard bind (0.0.0.0 / [::]) is not connectable on every
+    /// platform, so the nudge targets loopback on the bound port.
+    fn nudge_listener(&self) {
+        if let Some(mut addr) = *self.listen_addr.lock().unwrap() {
+            if addr.ip().is_unspecified() {
+                addr.set_ip(match addr {
+                    std::net::SocketAddr::V4(_) => {
+                        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                    }
+                    std::net::SocketAddr::V6(_) => {
+                        std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                    }
+                });
+            }
+            let _ = std::net::TcpStream::connect(addr);
+        }
+    }
+
+    /// The statistics document: uptime, queue state, per-worker busy/job
+    /// counts, cache hit rate. `kind` is `stats` or `shutdown` (the
+    /// shutdown response is the final stats).
+    fn stats_value(&self, kind: &str) -> Value {
         let (hits, misses, entries, cap) = {
             let c = self.cache.lock().unwrap();
             (c.hits(), c.misses(), c.len(), c.cap())
         };
+        let worker_jobs: Vec<Value> = self
+            .pool
+            .worker_jobs()
+            .into_iter()
+            .map(|n| Value::Num(n as f64))
+            .collect();
         Value::obj(vec![
             ("ok", Value::Bool(true)),
-            ("kind", Value::Str("stats".into())),
+            ("kind", Value::Str(kind.to_string())),
+            ("v", Value::Num(protocol::PROTOCOL_VERSION as f64)),
             ("uptime_s", Value::Num(self.start.elapsed().as_secs_f64())),
             ("requests", Value::Num(self.requests.load(Ordering::Relaxed) as f64)),
             ("errors", Value::Num(self.errors.load(Ordering::Relaxed) as f64)),
             ("workers", Value::Num(self.pool.workers() as f64)),
+            ("busy_workers", Value::Num(self.pool.busy_workers() as f64)),
+            ("worker_jobs", Value::Arr(worker_jobs)),
             ("queue_depth", Value::Num(self.pool.queue_depth() as f64)),
             ("queue_cap", Value::Num(self.pool.queue_cap() as f64)),
             ("jobs_done", Value::Num(self.pool.jobs_done() as f64)),
+            ("shutting_down", Value::Bool(self.is_shutting_down() || self.pool.is_shut_down())),
             (
                 "cache",
                 Value::obj(vec![
@@ -189,9 +320,10 @@ impl Server {
         ])
     }
 
-    /// Serve JSON-lines over stdin/stdout until EOF (the `--stdio` mode,
-    /// also the CI smoke-test surface). Responses flush per line so a
-    /// piped client can interleave requests and responses.
+    /// Serve JSON-lines over stdin/stdout until EOF or a served `shutdown`
+    /// request (the `--stdio` mode, also the CI smoke-test surface).
+    /// Responses flush per line so a piped client can interleave requests
+    /// and responses.
     pub fn serve_stdio(&self) -> crate::Result<()> {
         eprintln!(
             "kraken serve: stdio, {} workers, queue {}, cache {}",
@@ -209,21 +341,30 @@ impl Server {
                 out.write_all(b"\n")?;
                 out.flush()?;
             }
+            if self.is_shutting_down() {
+                break;
+            }
         }
         Ok(())
     }
 }
 
 /// Serve JSON-lines over TCP: one thread per connection, all connections
-/// sharing the server's pool and cache (the `--listen ADDR` mode).
+/// sharing the server's pool and cache (the `--listen ADDR` mode). Exits
+/// once a `shutdown` request has been served on any connection.
 pub fn serve_listen(server: Arc<Server>, addr: &str) -> crate::Result<()> {
     let listener = std::net::TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    *server.listen_addr.lock().unwrap() = Some(local);
     eprintln!(
         "kraken serve: listening on {}, {} workers",
-        listener.local_addr()?,
+        local,
         server.workers()
     );
     for stream in listener.incoming() {
+        if server.is_shutting_down() {
+            break;
+        }
         // a resident server must survive transient accept failures
         // (ECONNABORTED, fd exhaustion): log and keep listening
         let stream = match stream {
@@ -240,18 +381,48 @@ pub fn serve_listen(server: Arc<Server>, addr: &str) -> crate::Result<()> {
             }
         });
     }
+    // other connections may still be serializing/writing responses whose
+    // jobs the shutdown drain just completed: wait for them to flush.
+    // Connections idle in read hold no work units, so this cannot hang.
+    // (Best-effort by design: a request racing the shutdown line itself —
+    // read but not yet registered — has no response-ordering guarantee.)
+    while server.conn_work.load(Ordering::SeqCst) > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
     Ok(())
 }
 
 fn serve_conn(server: &Server, stream: std::net::TcpStream) -> crate::Result<()> {
+    let result = serve_conn_inner(server, stream);
+    // whatever way this connection ends (clean break, client hang-up
+    // mid-write, read error), a shutting-down server must get its accept
+    // loop woken or the process never exits
+    if server.is_shutting_down() {
+        server.nudge_listener();
+    }
+    result
+}
+
+fn serve_conn_inner(server: &Server, stream: std::net::TcpStream) -> crate::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = std::io::BufReader::new(stream);
     for line in reader.lines() {
         let line = line?;
-        if let Some(resp) = server.handle_line(&line) {
-            writer.write_all(resp.as_bytes())?;
-            writer.write_all(b"\n")?;
-            writer.flush()?;
+        // hold a work unit across compute + write so a concurrent
+        // shutdown's listener exit waits for this response to flush
+        server.conn_work.fetch_add(1, Ordering::SeqCst);
+        let wrote = (|| -> crate::Result<()> {
+            if let Some(resp) = server.handle_line(&line) {
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            Ok(())
+        })();
+        server.conn_work.fetch_sub(1, Ordering::SeqCst);
+        wrote?;
+        if server.is_shutting_down() {
+            break;
         }
     }
     Ok(())
@@ -293,6 +464,61 @@ mod tests {
     }
 
     #[test]
+    fn workload_request_runs_multi_tenant_and_caches() {
+        let s = server();
+        let line = r#"{"kind":"workload","v":1,"tenants":2,"duration_s":0.05,"dvs_sample_hz":300.0,"seed":3}"#;
+        let a = s.handle_line(line).unwrap();
+        let v = parse(&a).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{a}");
+        assert_eq!(v.get("kind").and_then(Value::as_str), Some("workload"));
+        let report = v.get("report").unwrap();
+        assert_eq!(
+            report.get("tenants").and_then(Value::as_arr).map(|t| t.len()),
+            Some(2)
+        );
+        assert!(report.get("contention").is_some());
+        // byte-identical cache replay, like every other cacheable kind
+        let b = s.handle_line(line).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stats_reports_worker_visibility() {
+        let s = server();
+        s.handle_line(RUN).unwrap();
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(stats.get("busy_workers").and_then(Value::as_u64), Some(0));
+        let jobs = stats.get("worker_jobs").and_then(Value::as_arr).unwrap();
+        assert_eq!(jobs.len(), 2);
+        let total: f64 = jobs.iter().filter_map(Value::as_f64).sum();
+        assert_eq!(total as u64, 1);
+        assert_eq!(stats.get("queue_depth").and_then(Value::as_u64), Some(0));
+        assert_eq!(stats.get("shutting_down").and_then(Value::as_bool), Some(false));
+    }
+
+    #[test]
+    fn shutdown_drains_and_reports_final_stats() {
+        let s = server();
+        s.handle_line(RUN).unwrap();
+        let resp = parse(&s.handle_line(r#"{"kind":"shutdown"}"#).unwrap()).unwrap();
+        assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true));
+        assert_eq!(resp.get("kind").and_then(Value::as_str), Some("shutdown"));
+        assert_eq!(resp.get("jobs_done").and_then(Value::as_u64), Some(1));
+        assert_eq!(resp.get("shutting_down").and_then(Value::as_bool), Some(true));
+        assert!(s.is_shutting_down());
+        // post-shutdown requests that need the pool fail cleanly (an
+        // identical earlier request would replay from the cache, so ask
+        // for a fresh seed); stats still answer
+        let fresh = r#"{"kind":"run","duration_s":0.05,"dvs_sample_hz":300.0,"seed":4}"#;
+        let err = parse(&s.handle_line(fresh).unwrap()).unwrap();
+        assert_eq!(err.get("ok").and_then(Value::as_bool), Some(false));
+        let msg = err.get("error").and_then(Value::as_str).unwrap();
+        assert!(msg.contains("shut down"), "unexpected error: {msg}");
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(stats.get("shutting_down").and_then(Value::as_bool), Some(true));
+    }
+
+    #[test]
     fn bad_requests_become_error_responses() {
         let s = server();
         for line in ["not json", r#"{"kind":"warp"}"#, r#"{"kind":"run","vdd":2.0}"#] {
@@ -303,6 +529,15 @@ mod tests {
         assert!(s.handle_line("   ").is_none());
         let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
         assert_eq!(stats.get("errors").and_then(Value::as_u64), Some(3));
+    }
+
+    #[test]
+    fn unsupported_protocol_version_is_rejected() {
+        let s = server();
+        let v = parse(&s.handle_line(r#"{"kind":"run","v":2}"#).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+        let msg = v.get("error").and_then(Value::as_str).unwrap();
+        assert!(msg.contains("protocol version"), "{msg}");
     }
 
     #[test]
@@ -319,5 +554,28 @@ mod tests {
         // the server stays serviceable
         let ok = parse(&s.handle_line(RUN).unwrap()).unwrap();
         assert_eq!(ok.get("ok").and_then(Value::as_bool), Some(true));
+    }
+
+    #[test]
+    fn tenants_axis_grid_serves_workload_cells() {
+        let s = server();
+        let line = r#"{"kind":"grid","duration_s":0.05,"dvs_sample_hz":300.0,"seed":5,"tenants":[1,2]}"#;
+        let v = parse(&s.handle_line(line).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+        let report = v.get("report").unwrap();
+        let cells = report.get("cells").and_then(Value::as_arr).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].as_str().unwrap().contains("tenants=1"));
+        assert!(cells[1].as_str().unwrap().contains("tenants=2"));
+        let reports = report
+            .get("fleet")
+            .and_then(|f| f.get("reports"))
+            .and_then(Value::as_arr)
+            .unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(
+            reports[1].get("tenants").and_then(Value::as_arr).map(|t| t.len()),
+            Some(2)
+        );
     }
 }

@@ -1,4 +1,4 @@
-//! The persistent mission worker pool behind `kraken serve`.
+//! The persistent mission/workload worker pool behind `kraken serve`.
 //!
 //! Unlike [`crate::coordinator::fleet`], which spawns scoped threads per
 //! fleet call, the pool keeps `workers` OS threads resident for the life of
@@ -7,19 +7,31 @@
 //! rejected whole with [`PoolError::Busy`] — the server never buffers
 //! unboundedly and the client sees the overload immediately.
 //!
+//! A job is either a single-SoC mission or a multi-tenant
+//! [`WorkloadConfig`] (N sensor streams on one SoC); both run on the same
+//! workers through the same queue, so mission and workload requests share
+//! one backpressure budget.
+//!
 //! Determinism carries over from the fleet layer unchanged: every job is an
-//! independent mission with its own `Soc`, results land in their submission
-//! slot, and the worker count only affects wall-clock — a batch served by
-//! the pool is report-identical to an offline
-//! [`crate::coordinator::fleet::run_configs`] run of the same configs
-//! (`tests/integration_serve.rs` pins this bit for bit).
+//! independent simulation with its own `Soc`, results land in their
+//! submission slot, and the worker count only affects wall-clock — a batch
+//! served by the pool is report-identical to an offline
+//! [`crate::coordinator::fleet::run_configs`] /
+//! [`crate::coordinator::fleet::run_workload_configs`] run of the same
+//! configs (`tests/integration_serve.rs` pins this bit for bit).
+//!
+//! [`WorkerPool::shutdown`] is the graceful stop: it lets the workers
+//! drain every queued job, joins them, and leaves the pool rejecting
+//! further submissions with [`PoolError::ShutDown`] — the `shutdown`
+//! protocol request rides on it.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::SocConfig;
 use crate::coordinator::pipeline::{Mission, MissionConfig, MissionReport};
+use crate::coordinator::workload::{Workload, WorkloadConfig, WorkloadReport};
 
 /// Why the pool could not serve a batch.
 #[derive(Debug)]
@@ -28,8 +40,10 @@ pub enum PoolError {
     /// Batches are admitted all-or-nothing, so a batch larger than the
     /// queue capacity can never be served.
     Busy { asked: usize, free: usize, cap: usize },
-    /// A mission inside the batch failed; the whole batch fails.
+    /// A mission/workload inside the batch failed; the whole batch fails.
     Mission(String),
+    /// The pool has been shut down; no further work is admitted.
+    ShutDown,
 }
 
 impl std::fmt::Display for PoolError {
@@ -40,16 +54,30 @@ impl std::fmt::Display for PoolError {
                 "queue full: {asked} jobs requested, {free} slots free (queue capacity {cap})"
             ),
             PoolError::Mission(msg) => write!(f, "{msg}"),
+            PoolError::ShutDown => write!(f, "worker pool is shut down"),
         }
     }
 }
 
 impl std::error::Error for PoolError {}
 
-/// One queued mission plus where its result goes.
+/// One unit of queued work: a single-tenant mission or a multi-tenant
+/// workload, each an independent simulation on its own SoC.
+enum Work {
+    Mission(MissionConfig),
+    Workload(WorkloadConfig),
+}
+
+/// The report a unit of work produced (mirrors [`Work`]).
+enum WorkOutput {
+    Mission(MissionReport),
+    Workload(Box<WorkloadReport>),
+}
+
+/// One queued job plus where its result goes.
 struct Job {
     soc: SocConfig,
-    cfg: MissionConfig,
+    work: Work,
     slot: usize,
     batch: Arc<Batch>,
 }
@@ -62,7 +90,7 @@ struct Batch {
 }
 
 struct BatchState {
-    slots: Vec<Option<Result<MissionReport, String>>>,
+    slots: Vec<Option<Result<WorkOutput, String>>>,
     remaining: usize,
 }
 
@@ -77,7 +105,7 @@ impl Batch {
         })
     }
 
-    fn fill(&self, slot: usize, result: Result<MissionReport, String>) {
+    fn fill(&self, slot: usize, result: Result<WorkOutput, String>) {
         let mut st = self.state.lock().unwrap();
         st.slots[slot] = Some(result);
         st.remaining -= 1;
@@ -86,7 +114,7 @@ impl Batch {
         }
     }
 
-    fn wait(&self) -> Vec<Result<MissionReport, String>> {
+    fn wait(&self) -> Vec<Result<WorkOutput, String>> {
         let mut st = self.state.lock().unwrap();
         while st.remaining > 0 {
             st = self.done.wait(st).unwrap();
@@ -103,16 +131,24 @@ struct QueueState {
     shutdown: bool,
 }
 
+/// Per-worker observability: completed-job count and a live busy flag —
+/// what the `stats` response reports so reject-when-full is diagnosable.
+struct WorkerStat {
+    jobs: AtomicU64,
+    busy: AtomicBool,
+}
+
 struct Shared {
     queue: Mutex<QueueState>,
     available: Condvar,
     jobs_done: AtomicU64,
+    worker_stats: Vec<WorkerStat>,
 }
 
-/// A fixed-size pool of resident mission workers over a bounded queue.
+/// A fixed-size pool of resident simulation workers over a bounded queue.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     workers: usize,
     queue_cap: usize,
 }
@@ -127,14 +163,17 @@ impl WorkerPool {
             queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             available: Condvar::new(),
             jobs_done: AtomicU64::new(0),
+            worker_stats: (0..workers)
+                .map(|_| WorkerStat { jobs: AtomicU64::new(0), busy: AtomicBool::new(false) })
+                .collect(),
         });
         let handles = (0..workers)
-            .map(|_| {
+            .map(|id| {
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&shared))
+                std::thread::spawn(move || worker_loop(&shared, id))
             })
             .collect();
-        WorkerPool { shared, handles, workers, queue_cap }
+        WorkerPool { shared, handles: Mutex::new(handles), workers, queue_cap }
     }
 
     pub fn workers(&self) -> usize {
@@ -150,9 +189,44 @@ impl WorkerPool {
         self.shared.queue.lock().unwrap().jobs.len()
     }
 
-    /// Missions completed by the pool since startup.
+    /// Jobs completed by the pool since startup.
     pub fn jobs_done(&self) -> u64 {
         self.shared.jobs_done.load(Ordering::Relaxed)
+    }
+
+    /// Workers executing a job right now.
+    pub fn busy_workers(&self) -> usize {
+        self.shared
+            .worker_stats
+            .iter()
+            .filter(|w| w.busy.load(Ordering::Relaxed))
+            .count()
+    }
+
+    /// Jobs completed per worker, indexed by worker id.
+    pub fn worker_jobs(&self) -> Vec<u64> {
+        self.shared
+            .worker_stats
+            .iter()
+            .map(|w| w.jobs.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Has [`WorkerPool::shutdown`] run?
+    pub fn is_shut_down(&self) -> bool {
+        self.shared.queue.lock().unwrap().shutdown
+    }
+
+    /// Graceful stop: stop admitting work, let the workers drain every
+    /// queued job, and join them. Idempotent; later submissions fail with
+    /// [`PoolError::ShutDown`].
+    pub fn shutdown(&self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.available.notify_all();
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
     }
 
     /// Run one mission per config and return the reports in config order
@@ -164,34 +238,75 @@ impl WorkerPool {
         soc: &SocConfig,
         cfgs: &[MissionConfig],
     ) -> Result<(Vec<MissionReport>, f64), PoolError> {
-        if cfgs.is_empty() {
+        let work = cfgs.iter().map(|c| Work::Mission(c.clone())).collect();
+        let (outputs, wall) = self.run_batch(soc, work)?;
+        let reports = outputs
+            .into_iter()
+            .map(|o| match o {
+                WorkOutput::Mission(r) => r,
+                WorkOutput::Workload(_) => unreachable!("mission batch yielded a workload"),
+            })
+            .collect();
+        Ok((reports, wall))
+    }
+
+    /// Run one multi-tenant workload per config — the workload twin of
+    /// [`WorkerPool::run_configs`], sharing the same queue and admission
+    /// policy.
+    pub fn run_workloads(
+        &self,
+        soc: &SocConfig,
+        cfgs: &[WorkloadConfig],
+    ) -> Result<(Vec<WorkloadReport>, f64), PoolError> {
+        let work = cfgs.iter().map(|c| Work::Workload(c.clone())).collect();
+        let (outputs, wall) = self.run_batch(soc, work)?;
+        let reports = outputs
+            .into_iter()
+            .map(|o| match o {
+                WorkOutput::Workload(r) => *r,
+                WorkOutput::Mission(_) => unreachable!("workload batch yielded a mission"),
+            })
+            .collect();
+        Ok((reports, wall))
+    }
+
+    fn run_batch(
+        &self,
+        soc: &SocConfig,
+        work: Vec<Work>,
+    ) -> Result<(Vec<WorkOutput>, f64), PoolError> {
+        if work.is_empty() {
             return Ok((Vec::new(), 0.0));
         }
+        let n = work.len();
         let start = std::time::Instant::now();
-        let batch = Batch::new(cfgs.len());
-        let jobs: Vec<Job> = cfgs
-            .iter()
+        let batch = Batch::new(n);
+        let jobs: Vec<Job> = work
+            .into_iter()
             .enumerate()
-            .map(|(slot, cfg)| Job {
+            .map(|(slot, work)| Job {
                 soc: soc.clone(),
-                cfg: cfg.clone(),
+                work,
                 slot,
                 batch: Arc::clone(&batch),
             })
             .collect();
         self.try_submit(jobs)?;
-        let mut reports = Vec::with_capacity(cfgs.len());
+        let mut outputs = Vec::with_capacity(n);
         for (i, result) in batch.wait().into_iter().enumerate() {
             match result {
-                Ok(r) => reports.push(r),
-                Err(e) => return Err(PoolError::Mission(format!("mission {i} failed: {e}"))),
+                Ok(r) => outputs.push(r),
+                Err(e) => return Err(PoolError::Mission(format!("job {i} failed: {e}"))),
             }
         }
-        Ok((reports, start.elapsed().as_secs_f64()))
+        Ok((outputs, start.elapsed().as_secs_f64()))
     }
 
     fn try_submit(&self, jobs: Vec<Job>) -> Result<(), PoolError> {
         let mut q = self.shared.queue.lock().unwrap();
+        if q.shutdown {
+            return Err(PoolError::ShutDown);
+        }
         let free = self.queue_cap - q.jobs.len();
         if jobs.len() > free {
             return Err(PoolError::Busy { asked: jobs.len(), free, cap: self.queue_cap });
@@ -205,15 +320,11 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.shared.queue.lock().unwrap().shutdown = true;
-        self.shared.available.notify_all();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, id: usize) {
     loop {
         let job = {
             let mut q = shared.queue.lock().unwrap();
@@ -227,13 +338,22 @@ fn worker_loop(shared: &Shared) {
                 q = shared.available.wait(q).unwrap();
             }
         };
-        // one Soc per mission, built on this thread (mirrors fleet
-        // workers). A panicking mission must not kill the worker or leave
-        // its batch waiting forever: catch it and fail the slot instead.
+        let stat = &shared.worker_stats[id];
+        stat.busy.store(true, Ordering::Relaxed);
+        // one Soc per job, built on this thread (mirrors fleet workers).
+        // A panicking simulation must not kill the worker or leave its
+        // batch waiting forever: catch it and fail the slot instead.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            Mission::new(job.soc, job.cfg)
-                .and_then(|mut m| m.run())
-                .map_err(|e| format!("{e:#}"))
+            match job.work {
+                Work::Mission(cfg) => Mission::new(job.soc, cfg)
+                    .and_then(|mut m| m.run())
+                    .map(WorkOutput::Mission)
+                    .map_err(|e| format!("{e:#}")),
+                Work::Workload(cfg) => Workload::new(job.soc, cfg)
+                    .and_then(|mut w| w.run())
+                    .map(|r| WorkOutput::Workload(Box::new(r)))
+                    .map_err(|e| format!("{e:#}")),
+            }
         }))
         .unwrap_or_else(|panic| {
             let msg = panic
@@ -241,11 +361,13 @@ fn worker_loop(shared: &Shared) {
                 .map(|s| s.to_string())
                 .or_else(|| panic.downcast_ref::<String>().cloned())
                 .unwrap_or_else(|| "non-string panic payload".into());
-            Err(format!("mission panicked: {msg}"))
+            Err(format!("job panicked: {msg}"))
         });
         // count before fill: fill wakes the submitter, which may read
         // jobs_done (stats, test assertions) immediately
+        stat.jobs.fetch_add(1, Ordering::Relaxed);
         shared.jobs_done.fetch_add(1, Ordering::Relaxed);
+        stat.busy.store(false, Ordering::Relaxed);
         job.batch.fill(job.slot, result);
     }
 }
@@ -278,6 +400,9 @@ mod tests {
             assert_eq!(reports[i].events_total, want.events_total, "slot {i}");
             assert_eq!(reports[i].energy_j.to_bits(), want.energy_j.to_bits(), "slot {i}");
         }
+        // per-worker counters account for every job, none still busy
+        assert_eq!(pool.worker_jobs().iter().sum::<u64>(), 4);
+        assert_eq!(pool.busy_workers(), 0);
     }
 
     #[test]
@@ -290,6 +415,22 @@ mod tests {
             assert_eq!(ra.events_total, rb.events_total);
             assert_eq!(ra.energy_j.to_bits(), rb.energy_j.to_bits());
         }
+    }
+
+    #[test]
+    fn workload_batches_share_the_pool() {
+        let pool = WorkerPool::new(2, 8);
+        let soc = SocConfig::kraken();
+        let cfgs: Vec<WorkloadConfig> = (0..2u64)
+            .map(|s| WorkloadConfig::fan_out(&tiny(s), 2))
+            .collect();
+        let (reports, _) = pool.run_workloads(&soc, &cfgs).unwrap();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert_eq!(r.tenants.len(), 2);
+            assert!(r.energy_j > 0.0);
+        }
+        assert_eq!(pool.jobs_done(), 2);
     }
 
     #[test]
@@ -316,5 +457,24 @@ mod tests {
         assert!(reports.is_empty());
         assert_eq!(wall, 0.0);
         assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn shutdown_joins_workers_and_rejects_new_work() {
+        let pool = WorkerPool::new(2, 8);
+        let soc = SocConfig::kraken();
+        let (reports, _) = pool.run_configs(&soc, &[tiny(1)]).unwrap();
+        assert_eq!(reports.len(), 1);
+        assert!(!pool.is_shut_down());
+        pool.shutdown();
+        assert!(pool.is_shut_down());
+        pool.shutdown(); // idempotent
+        match pool.run_configs(&soc, &[tiny(2)]) {
+            Err(PoolError::ShutDown) => {}
+            other => panic!("expected ShutDown, got {other:?}"),
+        }
+        // stats remain readable after shutdown
+        assert_eq!(pool.jobs_done(), 1);
+        assert_eq!(pool.busy_workers(), 0);
     }
 }

@@ -1,8 +1,8 @@
 //! The JSON-lines request/response protocol of `kraken serve`.
 //!
 //! One request object per line in, one response object per line out, built
-//! on [`crate::util::json`]. Four request kinds (`DESIGN.md` § Serving has
-//! a worked example of each):
+//! on [`crate::util::json`]. Request kinds (`DESIGN.md` § Serving and §8
+//! have worked examples):
 //!
 //! * `run`   — one mission from scalar fields (`seed`, `duration_s`,
 //!   `scene`, `vdd`, `idle_gate_s`, `window_ms`, `frame_fps`,
@@ -10,11 +10,22 @@
 //!   `kraken run`.
 //! * `fleet` — `missions` reseeded copies of the same mission fields
 //!   (seeds `seed..seed + missions`), the protocol twin of `kraken fleet`.
-//! * `grid`  — a config grid: `seed`, `duration_s`, `scene`, `vdd` and
-//!   `idle_gate_s` each accept a scalar **or an array**; arrays become
-//!   grid axes and the request runs their cross-product
+//! * `grid`  — a config grid: `seed`, `duration_s`, `scene`, `vdd`,
+//!   `idle_gate_s` and `tenants` each accept a scalar **or an array**;
+//!   arrays become grid axes and the request runs their cross-product
 //!   ([`crate::serve::grid::GridConfig`]).
-//! * `stats` — server introspection (uptime, queue depth, cache hit rate).
+//! * `workload` — one SoC shared by N tenant sensor streams: either
+//!   `tenants: N` (the base mission fanned out, stream seeds
+//!   `seed..seed + N`) or an explicit `streams: [{scene, seed, frame_fps,
+//!   dvs_sample_hz}, ...]` array of per-tenant overrides (DESIGN.md §8).
+//! * `stats` — server introspection (uptime, queue depth, per-worker
+//!   busy/job counts, cache hit rate).
+//! * `shutdown` — graceful stop: drain the queue, join the workers, answer
+//!   with final stats; the serving loop exits after the response.
+//!
+//! Every request may carry a `v` protocol-version field; versions other
+//! than [`PROTOCOL_VERSION`] are rejected, so a future client cannot have
+//! new semantics silently misread (omitting `v` means "current").
 //!
 //! Responses are `{"ok":true,"kind":...,"report":...}` or
 //! `{"ok":false,"error":...}`. Unknown request keys are rejected rather
@@ -25,6 +36,7 @@
 
 use crate::config::{VDD_MAX, VDD_MIN};
 use crate::coordinator::pipeline::MissionConfig;
+use crate::coordinator::workload::{StreamConfig, WorkloadConfig, MAX_TENANTS};
 use crate::sensors::scene::SceneKind;
 use crate::util::json::{parse, Value};
 
@@ -32,6 +44,10 @@ use crate::util::json::{parse, Value};
 /// typo from turning into a billion-cell cross-product. The worker pool's
 /// bounded queue applies its own (usually tighter) backpressure below this.
 pub const MAX_CELLS: usize = 4096;
+
+/// The protocol version this server speaks. Clients may pin it with a `v`
+/// field; any other value is rejected with an error response.
+pub const PROTOCOL_VERSION: u64 = 1;
 
 /// A parsed, validated request.
 #[derive(Debug, Clone)]
@@ -48,13 +64,19 @@ pub enum Request {
         scenes: Vec<SceneKind>,
         vdds: Vec<f64>,
         idle_gates: Vec<Option<f64>>,
+        tenants: Vec<usize>,
     },
+    /// One SoC, N tenant streams, fully resolved.
+    Workload { cfg: WorkloadConfig },
     /// Server statistics.
     Stats,
+    /// Graceful shutdown: drain, join, reply with final stats, exit.
+    Shutdown,
 }
 
 const MISSION_KEYS: &[&str] = &[
     "kind",
+    "v",
     "seed",
     "duration_s",
     "scene",
@@ -79,6 +101,15 @@ impl Request {
         let obj = v
             .as_obj()
             .ok_or_else(|| anyhow::anyhow!("request must be a JSON object"))?;
+        if let Some(ver) = v.get("v") {
+            let ver = ver.as_u64().ok_or_else(|| {
+                anyhow::anyhow!("\"v\" must be a protocol version integer")
+            })?;
+            anyhow::ensure!(
+                ver == PROTOCOL_VERSION,
+                "unsupported protocol version {ver} (this server speaks v{PROTOCOL_VERSION})"
+            );
+        }
         let kind = v
             .get("kind")
             .and_then(Value::as_str)
@@ -110,11 +141,14 @@ impl Request {
                 Ok(Request::Fleet { cfgs })
             }
             "grid" => {
-                check_keys(obj, MISSION_KEYS)?;
+                let mut allowed = MISSION_KEYS.to_vec();
+                allowed.push("tenants");
+                check_keys(obj, &allowed)?;
                 let seeds = u64_axis(v, "seed")?;
                 let durations = f64_axis(v, "duration_s")?;
                 let vdds = f64_axis(v, "vdd")?;
                 let idle_gates = gate_axis(v)?;
+                let tenants = tenants_axis(v)?;
                 // scene names resolve against the first grid seed (the
                 // per-cell reseed overrides it for seeded scenes anyway)
                 let scene_seed = seeds.first().copied().unwrap_or(MissionConfig::default().seed);
@@ -125,8 +159,7 @@ impl Request {
                 for &x in &vdds {
                     check_vdd(x)?;
                 }
-                let mut base = MissionConfig::default();
-                base.print_live = false;
+                let mut base = MissionConfig { print_live: false, ..Default::default() };
                 mission_scalars(v, &mut base)?;
                 // checked product: an absurd axis combination must be
                 // rejected here, not wrap around and hang the pool
@@ -136,6 +169,7 @@ impl Request {
                     scenes.len(),
                     vdds.len(),
                     idle_gates.len(),
+                    tenants.len(),
                 ]) {
                     Some(cells) if cells <= MAX_CELLS => {}
                     Some(cells) => {
@@ -145,14 +179,121 @@ impl Request {
                         "grid axis product overflows, limit is {MAX_CELLS} cells"
                     ),
                 }
-                Ok(Request::Grid { base, seeds, durations, scenes, vdds, idle_gates })
+                Ok(Request::Grid { base, seeds, durations, scenes, vdds, idle_gates, tenants })
+            }
+            "workload" => {
+                let mut allowed = MISSION_KEYS.to_vec();
+                allowed.extend(["tenants", "streams"]);
+                check_keys(obj, &allowed)?;
+                let base = mission_from(v)?;
+                let cfg = match v.get("streams") {
+                    None => {
+                        let tenants = match v.get("tenants") {
+                            None => 1,
+                            Some(t) => t.as_usize().ok_or_else(|| {
+                                anyhow::anyhow!("\"tenants\" must be a positive integer")
+                            })?,
+                        };
+                        check_tenants(tenants)?;
+                        WorkloadConfig::fan_out(&base, tenants)
+                    }
+                    Some(Value::Arr(arr)) => {
+                        check_tenants(arr.len())?;
+                        if let Some(t) = v.get("tenants") {
+                            anyhow::ensure!(
+                                t.as_usize() == Some(arr.len()),
+                                "\"tenants\" disagrees with the \"streams\" array length"
+                            );
+                        }
+                        let mut cfg = WorkloadConfig::from_mission(&base);
+                        cfg.streams = arr
+                            .iter()
+                            .enumerate()
+                            .map(|(i, s)| stream_from(s, &base, i))
+                            .collect::<crate::Result<Vec<StreamConfig>>>()?;
+                        cfg
+                    }
+                    Some(_) => anyhow::bail!(
+                        "\"streams\" must be an array of per-tenant stream objects"
+                    ),
+                };
+                Ok(Request::Workload { cfg })
             }
             "stats" => {
-                check_keys(obj, &["kind"])?;
+                check_keys(obj, &["kind", "v"])?;
                 Ok(Request::Stats)
             }
-            other => anyhow::bail!("unknown request kind '{other}' (run|fleet|grid|stats)"),
+            "shutdown" => {
+                check_keys(obj, &["kind", "v"])?;
+                Ok(Request::Shutdown)
+            }
+            other => anyhow::bail!(
+                "unknown request kind '{other}' (run|fleet|grid|workload|stats|shutdown)"
+            ),
         }
+    }
+}
+
+fn check_tenants(tenants: usize) -> crate::Result<()> {
+    anyhow::ensure!(
+        (1..=MAX_TENANTS).contains(&tenants),
+        "\"tenants\"/\"streams\" must name 1..={MAX_TENANTS} streams, got {tenants}"
+    );
+    Ok(())
+}
+
+/// One per-tenant stream override of a `workload` request. Defaults follow
+/// the fan-out discipline (stream `i` inherits the base mission reseeded
+/// `seed + i`); explicit `seed`/`scene`/`frame_fps`/`dvs_sample_hz` fields
+/// override per stream.
+fn stream_from(x: &Value, base: &MissionConfig, i: usize) -> crate::Result<StreamConfig> {
+    let obj = x
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("\"streams[{i}]\" must be an object"))?;
+    check_keys(obj, &["scene", "seed", "frame_fps", "dvs_sample_hz"])?;
+    let mut m = if i == 0 {
+        base.clone()
+    } else {
+        base.with_seed(base.seed.wrapping_add(i as u64))
+    };
+    if let Some(sv) = x.get("seed") {
+        let seed = sv.as_u64().ok_or_else(|| {
+            anyhow::anyhow!("\"streams[{i}].seed\" must be a non-negative integer")
+        })?;
+        m = m.with_seed(seed);
+    }
+    if let Some(name) = x.get("scene") {
+        let name = name.as_str().ok_or_else(|| {
+            anyhow::anyhow!("\"streams[{i}].scene\" must be a scene name string")
+        })?;
+        m.scene = SceneKind::parse(name, m.seed)?;
+    }
+    let mut s = StreamConfig::from_mission(&m);
+    if let Some(f) = bounded_f64(x, "frame_fps", 0.1, 10_000.0)? {
+        s.frame_fps = f;
+    }
+    if let Some(hz) = bounded_f64(x, "dvs_sample_hz", 1.0, 1_000_000.0)? {
+        s.dvs_sample_hz = hz;
+    }
+    Ok(s)
+}
+
+/// Tenant-count grid axis: positive integers in `1..=MAX_TENANTS`.
+fn tenants_axis(v: &Value) -> crate::Result<Vec<usize>> {
+    let one = |x: &Value| -> crate::Result<usize> {
+        let t = x
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("\"tenants\" must hold positive integers"))?;
+        check_tenants(t)?;
+        Ok(t)
+    };
+    match v.get("tenants") {
+        None => Ok(Vec::new()),
+        Some(Value::Arr(a)) => {
+            check_axis_nonempty("tenants", a)?;
+            a.iter().map(one).collect()
+        }
+        Some(x) => Ok(vec![one(x)?]),
     }
 }
 
@@ -259,8 +400,7 @@ fn mission_scalars(v: &Value, cfg: &mut MissionConfig) -> crate::Result<()> {
 
 /// Resolve the full scalar mission config of a `run`/`fleet` request.
 fn mission_from(v: &Value) -> crate::Result<MissionConfig> {
-    let mut cfg = MissionConfig::default();
-    cfg.print_live = false;
+    let mut cfg = MissionConfig { print_live: false, ..Default::default() };
     let seed = match v.get("seed") {
         None => cfg.seed,
         Some(s) => s
@@ -436,18 +576,110 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Grid { seeds, vdds, scenes, durations, idle_gates, base } => {
+            Request::Grid { seeds, vdds, scenes, durations, idle_gates, tenants, base } => {
                 assert_eq!(seeds, vec![1, 2]);
                 assert_eq!(vdds, vec![0.6, 0.8]);
                 assert_eq!(scenes.len(), 1);
                 // scalar duration becomes a singleton axis
                 assert_eq!(durations, vec![0.2]);
                 assert_eq!(idle_gates, vec![Some(0.05), None]);
+                assert!(tenants.is_empty(), "absent tenants axis inherits");
                 // base keeps its default; the duration axis overrides per cell
                 assert_eq!(base.duration_s, MissionConfig::default().duration_s);
             }
             other => panic!("wrong kind: {other:?}"),
         }
+    }
+
+    #[test]
+    fn grid_request_accepts_a_tenants_axis() {
+        let r = Request::from_json(
+            r#"{"kind":"grid","v":1,"duration_s":0.2,"tenants":[1,2,4]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Grid { tenants, .. } => assert_eq!(tenants, vec![1, 2, 4]),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // tenant counts are bounded like any other knob
+        assert!(Request::from_json(r#"{"kind":"grid","tenants":[0]}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"grid","tenants":1000}"#).is_err());
+    }
+
+    #[test]
+    fn workload_request_fans_out_or_takes_explicit_streams() {
+        let r = Request::from_json(
+            r#"{"kind":"workload","tenants":3,"seed":10,"duration_s":0.5,"scene":"corridor"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Workload { cfg } => {
+                assert_eq!(cfg.tenants(), 3);
+                let seeds: Vec<u64> = cfg.streams.iter().map(|s| s.seed).collect();
+                assert_eq!(seeds, vec![10, 11, 12]);
+                assert_eq!(cfg.duration_s, 0.5);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let r = Request::from_json(
+            r#"{"kind":"workload","seed":7,"duration_s":0.5,
+                "streams":[{"scene":"corridor"},{"scene":"noise","seed":99,"frame_fps":60.0}]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Workload { cfg } => {
+                assert_eq!(cfg.tenants(), 2);
+                assert_eq!(cfg.streams[0].seed, 7);
+                assert_eq!(cfg.streams[1].seed, 99);
+                assert_eq!(cfg.streams[1].frame_fps, 60.0);
+                assert!(matches!(
+                    cfg.streams[1].scene,
+                    crate::sensors::scene::SceneKind::Noise { seed: 99, .. }
+                ));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // contradictory tenants/streams, bad counts, bad stream keys
+        assert!(Request::from_json(
+            r#"{"kind":"workload","tenants":3,"streams":[{"scene":"noise"}]}"#
+        )
+        .is_err());
+        assert!(Request::from_json(r#"{"kind":"workload","tenants":0}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"workload","streams":[]}"#).is_err());
+        assert!(Request::from_json(
+            r#"{"kind":"workload","streams":[{"sceen":"noise"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn protocol_version_field_gates_requests() {
+        // v:1 accepted on every kind
+        assert!(Request::from_json(r#"{"kind":"stats","v":1}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"run","v":1,"duration_s":0.1}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"shutdown","v":1}"#).is_ok());
+        // unknown versions are rejected, whatever the kind
+        for line in [
+            r#"{"kind":"stats","v":2}"#,
+            r#"{"kind":"run","v":0}"#,
+            r#"{"kind":"workload","v":99,"tenants":2}"#,
+            r#"{"kind":"stats","v":"1"}"#,
+        ] {
+            let err = Request::from_json(line).unwrap_err().to_string();
+            assert!(
+                err.contains("protocol version"),
+                "{line} -> unexpected error {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn shutdown_takes_no_parameters() {
+        assert!(matches!(
+            Request::from_json(r#"{"kind":"shutdown"}"#).unwrap(),
+            Request::Shutdown
+        ));
+        assert!(Request::from_json(r#"{"kind":"shutdown","now":true}"#).is_err());
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //!   bit, so no float drifts through the protocol.
 
 use kraken::config::SocConfig;
-use kraken::coordinator::{run_configs, run_fleet, FleetConfig, Mission, MissionConfig};
+use kraken::coordinator::{
+    run_configs, run_fleet, FleetConfig, Mission, MissionConfig, Workload, WorkloadConfig,
+};
 use kraken::serve::grid::{run_grid, GridConfig};
 use kraken::serve::Server;
 use kraken::util::json::{parse, Value};
@@ -174,6 +176,45 @@ fn stats_and_errors_share_the_protocol_envelope() {
     assert_eq!(stats.get("ok").and_then(Value::as_bool), Some(true));
     assert_eq!(stats.get("errors").and_then(Value::as_u64), Some(1));
     assert_eq!(stats.get("workers").and_then(Value::as_u64), Some(1));
+}
+
+#[test]
+fn workload_request_is_bit_identical_to_offline_workload_regardless_of_workers() {
+    const WORKLOAD_LINE: &str =
+        r#"{"kind":"workload","v":1,"tenants":2,"duration_s":0.1,"dvs_sample_hz":300.0,"seed":9}"#;
+    let offline = {
+        let base = tiny_base().with_seed(9);
+        let mut w =
+            Workload::new(SocConfig::kraken(), WorkloadConfig::fan_out(&base, 2)).unwrap();
+        w.run().unwrap()
+    };
+    for workers in [1, 3] {
+        let server = Server::new(SocConfig::kraken(), workers, 8, 4).unwrap();
+        let report = served_report(&server, WORKLOAD_LINE);
+        assert_bits_eq(
+            &report,
+            &offline.to_json(),
+            &format!("workers={workers}"),
+            HOST_KEYS,
+        );
+    }
+}
+
+#[test]
+fn shutdown_request_drains_queue_and_stops_the_server() {
+    let server = Server::new(SocConfig::kraken(), 2, 8, 4).unwrap();
+    // work before shutdown is fully served
+    let run = r#"{"kind":"run","duration_s":0.1,"dvs_sample_hz":300.0,"seed":2}"#;
+    assert!(server.handle_line(run).unwrap().contains("\"ok\":true"));
+    let resp = parse(&server.handle_line(r#"{"kind":"shutdown","v":1}"#).unwrap()).unwrap();
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true));
+    assert_eq!(resp.get("kind").and_then(Value::as_str), Some("shutdown"));
+    // the reply is the final stats: jobs drained, nothing queued or busy
+    assert_eq!(resp.get("jobs_done").and_then(Value::as_u64), Some(1));
+    assert_eq!(resp.get("queue_depth").and_then(Value::as_u64), Some(0));
+    assert_eq!(resp.get("busy_workers").and_then(Value::as_u64), Some(0));
+    assert_eq!(resp.get("shutting_down").and_then(Value::as_bool), Some(true));
+    assert!(server.is_shutting_down(), "serving loops must exit after this");
 }
 
 // --- wire-format round trips (guards against float-formatting drift) -------

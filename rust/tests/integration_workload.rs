@@ -1,0 +1,166 @@
+//! Workload acceptance contract (the multi-tenant API of ISSUE 3):
+//!
+//! * **Compatibility** — a single-tenant `Workload` built from a
+//!   `MissionConfig` reports **bit-identical** to the legacy
+//!   `Mission::run()`: every JSON field, every snapshot, every command.
+//! * **Contention visibility** — a 2-tenant workload on one SoC shows
+//!   nonzero per-engine queueing delay in its `WorkloadReport`.
+//! * **Thread invariance** — workload reports are byte-identical across
+//!   fleet thread counts and across serial/parallel execution.
+
+use kraken::config::SocConfig;
+use kraken::coordinator::workload::{ENG_PULP, ENG_SNE};
+use kraken::coordinator::{
+    run_workload_configs, Mission, MissionConfig, Workload, WorkloadConfig,
+};
+use kraken::util::json::Value;
+
+/// Recursive bit-exact comparison of two JSON documents. Keys named in
+/// `skip` (host-dependent measurements) are ignored at any depth.
+fn assert_bits_eq(a: &Value, b: &Value, path: &str, skip: &[&str]) {
+    match (a, b) {
+        (Value::Obj(ma), Value::Obj(mb)) => {
+            let ka: Vec<&String> = ma.keys().collect();
+            let kb: Vec<&String> = mb.keys().collect();
+            assert_eq!(ka, kb, "{path}: key sets differ");
+            for (k, va) in ma {
+                if skip.contains(&k.as_str()) {
+                    continue;
+                }
+                assert_bits_eq(va, &mb[k], &format!("{path}.{k}"), skip);
+            }
+        }
+        (Value::Arr(xa), Value::Arr(xb)) => {
+            assert_eq!(xa.len(), xb.len(), "{path}: array lengths differ");
+            for (i, (va, vb)) in xa.iter().zip(xb).enumerate() {
+                assert_bits_eq(va, vb, &format!("{path}[{i}]"), skip);
+            }
+        }
+        (Value::Num(na), Value::Num(nb)) => {
+            assert_eq!(na.to_bits(), nb.to_bits(), "{path}: {na} vs {nb}");
+        }
+        (va, vb) => assert_eq!(va, vb, "{path}: values differ"),
+    }
+}
+
+const HOST_KEYS: &[&str] = &["wall_s"];
+
+fn tiny_base() -> MissionConfig {
+    MissionConfig {
+        duration_s: 0.2,
+        dvs_sample_hz: 300.0,
+        ..Default::default()
+    }
+}
+
+/// Everything `MissionReport::to_json` does not carry, compared exactly:
+/// Debug rendering of f64 is shortest-roundtrip, so two reports render
+/// identically iff every float matches bit for bit (modulo wall time).
+fn deep_fields(r: &kraken::coordinator::MissionReport) -> String {
+    format!(
+        "peak={:x} snapshots={:?} cmds={:?}",
+        r.peak_power_w.to_bits(),
+        r.snapshots,
+        r.last_commands
+    )
+}
+
+#[test]
+fn single_tenant_workload_is_bit_identical_to_legacy_mission() {
+    for seed in [3u64, 7, 11] {
+        let m = tiny_base().with_seed(seed);
+        let want = Mission::new(SocConfig::kraken(), m.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let mut w =
+            Workload::new(SocConfig::kraken(), WorkloadConfig::from_mission(&m)).unwrap();
+        let got = w.run().unwrap().to_mission_report();
+        assert_bits_eq(
+            &got.to_json(),
+            &want.to_json(),
+            &format!("seed={seed}"),
+            HOST_KEYS,
+        );
+        assert_eq!(deep_fields(&got), deep_fields(&want), "seed={seed}");
+    }
+}
+
+#[test]
+fn two_tenant_workload_shows_engine_queueing() {
+    let cfg = WorkloadConfig::fan_out(&tiny_base(), 2);
+    let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+    let r = w.run().unwrap();
+    // nonzero queueing delay on the shared SNE: both tenants dispatch at
+    // each window start, the second waits behind the first
+    assert!(
+        r.contention[ENG_SNE].queued_ns_total > 0,
+        "no SNE queueing: {:?}",
+        r.contention
+    );
+    assert!(r.contention[ENG_SNE].queued_ns_max > 0);
+    assert!(r.contention[ENG_SNE].mean_queue_ns() > 0.0);
+    // two 30 fps DroNet streams exceed one PULP's budget: visible as drops
+    assert!(
+        r.contention[ENG_PULP].dropped > 0,
+        "PULP overload invisible: {:?}",
+        r.contention
+    );
+    // and the queueing delay is on the wire, not just in the struct
+    let json = r.to_json();
+    let sne = json.get("contention").and_then(|c| c.get("sne")).unwrap();
+    assert!(sne.get("queued_ns_total").and_then(Value::as_f64).unwrap() > 0.0);
+}
+
+#[test]
+fn workload_reports_are_identical_across_thread_counts() {
+    let base = tiny_base();
+    let cfgs: Vec<WorkloadConfig> = (0..3u64)
+        .map(|i| WorkloadConfig::fan_out(&base.with_seed(base.seed + i), 2))
+        .collect();
+    let serial = run_workload_configs(&SocConfig::kraken(), &cfgs, 1).unwrap();
+    let parallel = run_workload_configs(&SocConfig::kraken(), &cfgs, 3).unwrap();
+    assert_eq!(serial.reports.len(), 3);
+    for (i, (a, b)) in serial.reports.iter().zip(&parallel.reports).enumerate() {
+        assert_bits_eq(
+            &a.to_json(),
+            &b.to_json(),
+            &format!("workload[{i}]"),
+            HOST_KEYS,
+        );
+    }
+    // and a direct serial run matches the fleet-run slot bit for bit
+    let mut w = Workload::new(SocConfig::kraken(), cfgs[0].clone()).unwrap();
+    let direct = w.run().unwrap();
+    assert_bits_eq(&direct.to_json(), &serial.reports[0].to_json(), "direct", HOST_KEYS);
+}
+
+#[test]
+fn workload_json_roundtrips_bitwise() {
+    let cfg = WorkloadConfig::fan_out(&tiny_base(), 2);
+    let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+    let doc = w.run().unwrap().to_json();
+    let compact = kraken::util::json::parse(&doc.to_string()).unwrap();
+    assert_bits_eq(&doc, &compact, "workload.compact", &[]);
+    let pretty = kraken::util::json::parse(&doc.pretty()).unwrap();
+    assert_bits_eq(&doc, &pretty, "workload.pretty", &[]);
+}
+
+#[test]
+fn tenancy_scales_events_but_shares_the_envelope() {
+    // the engine-sharing scale experiment in miniature: more tenants means
+    // more captured events on one SoC, while the power envelope holds
+    let mut events = Vec::new();
+    for tenants in [1usize, 2, 4] {
+        let cfg = WorkloadConfig::fan_out(&tiny_base(), tenants);
+        let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+        let r = w.run().unwrap();
+        assert_eq!(r.tenants.len(), tenants);
+        assert!(r.avg_power_w < 0.31, "{tenants} tenants: {} W", r.avg_power_w);
+        events.push(r.events_total());
+    }
+    assert!(
+        events[1] > events[0] && events[2] > events[1],
+        "events don't scale with tenancy: {events:?}"
+    );
+}

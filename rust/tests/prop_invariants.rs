@@ -4,7 +4,11 @@
 use kraken::config::{Precision, SocConfig};
 use kraken::coordinator::pipeline::rebin_events;
 use kraken::coordinator::scheduler::Scheduler;
-use kraken::coordinator::{run_fleet, FleetConfig, Mission, MissionConfig};
+use kraken::coordinator::workload::WorkloadReport;
+use kraken::coordinator::{
+    run_fleet, run_workload_configs, FleetConfig, Mission, MissionConfig, Workload,
+    WorkloadConfig,
+};
 use kraken::cutie::CutieEngine;
 use kraken::event::{Event, EventWindow, Polarity};
 use kraken::nets::{ConvLayer, SnnDesc};
@@ -257,6 +261,95 @@ fn prop_fleet_equals_serial_missions() {
             prop_assert!(
                 got.last_commands == want.last_commands,
                 "mission {i}: command streams diverge"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Everything except host wall time, rendered exactly: Rust's f64 Debug is
+/// shortest-roundtrip, so two fingerprints match iff every float (energy,
+/// snapshots, commands, contention) matches bit for bit.
+fn workload_fingerprint(r: &WorkloadReport) -> String {
+    format!(
+        "{:x}|{:x}|{:?}|{:?}|{:?}",
+        r.energy_j.to_bits(),
+        r.peak_power_w.to_bits(),
+        r.energy_per_domain_j,
+        r.tenants,
+        r.contention
+    )
+}
+
+#[test]
+fn prop_workload_determinism_across_thread_counts() {
+    check("same workload config => byte-identical reports, any thread count", 3, |rng| {
+        let base_seed = rng.gen_below(10_000);
+        let base = MissionConfig {
+            duration_s: 0.1,
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        }
+        .with_seed(base_seed);
+        let cfgs: Vec<WorkloadConfig> = (0..3u64)
+            .map(|i| WorkloadConfig::fan_out(&base.with_seed(base_seed + i), 2))
+            .collect();
+        let a = run_workload_configs(&SocConfig::kraken(), &cfgs, 1).unwrap();
+        let b = run_workload_configs(&SocConfig::kraken(), &cfgs, 3).unwrap();
+        for (i, (ra, rb)) in a.reports.iter().zip(&b.reports).enumerate() {
+            prop_assert!(
+                workload_fingerprint(ra) == workload_fingerprint(rb),
+                "thread count changed workload {i}'s report"
+            );
+        }
+        // and a rerun of the same configs replays the same bytes
+        let c = run_workload_configs(&SocConfig::kraken(), &cfgs, 2).unwrap();
+        for (ra, rc) in a.reports.iter().zip(&c.reports) {
+            prop_assert!(
+                workload_fingerprint(ra) == workload_fingerprint(rc),
+                "rerun diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_workload_arbitration_no_starvation_under_symmetry() {
+    check("symmetric tenants all make progress on every engine", 3, |rng| {
+        let seed = rng.gen_below(10_000);
+        let base = MissionConfig {
+            duration_s: 0.4,
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        }
+        .with_seed(seed);
+        for tenants in [2usize, 3] {
+            let cfg = WorkloadConfig::fan_out(&base, tenants);
+            let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+            let r = w.run().unwrap();
+            // SNE is window-driven: every tenant gets every window (the
+            // N-tenant backlog stays inside one scheduling window)
+            let sne: Vec<u64> = r.tenants.iter().map(|t| t.sne_inf).collect();
+            prop_assert!(
+                sne.windows(2).all(|p| p[0] == p[1]) && sne[0] > 0,
+                "SNE inference counts diverge under symmetry: {sne:?}"
+            );
+            // PULP is overloaded (N x 30 fps DroNet > 1 PULP): round-robin
+            // arbitration must keep every stream progressing, bounded skew
+            let pulp: Vec<u64> = r.tenants.iter().map(|t| t.pulp_inf).collect();
+            let min = *pulp.iter().min().unwrap();
+            let max = *pulp.iter().max().unwrap();
+            prop_assert!(min > 0, "a tenant starved on PULP: {pulp:?}");
+            prop_assert!(
+                max <= 4 * min,
+                "unfair PULP arbitration under symmetric load: {pulp:?}"
+            );
+            // fusion cadence is the window: command counts are identical
+            let cmds: Vec<u64> = r.tenants.iter().map(|t| t.commands).collect();
+            prop_assert!(
+                cmds.windows(2).all(|p| p[0] == p[1]),
+                "command streams diverge: {cmds:?}"
             );
         }
         Ok(())
