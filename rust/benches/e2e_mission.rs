@@ -11,15 +11,17 @@
 //!
 //! Run: `cargo bench --bench e2e_mission`
 //! (uses artifacts/ if present for the functional PJRT path)
+//! Machine-readable: `-- --json` writes `BENCH_e2e_mission.json` with the
+//! per-sweep wall times (the §Perf trajectory record).
 
 use kraken::config::SocConfig;
 use kraken::coordinator::{
-    run_fleet, FleetConfig, Mission, MissionConfig, MissionReport, PowerPolicy,
+    run_configs, run_fleet, FleetConfig, Mission, MissionConfig, MissionReport, PowerPolicy,
 };
 use kraken::metrics::fmt_power;
 use kraken::sensors::scene::SceneKind;
 use kraken::serve::grid::{run_grid, run_workload_grid, GridConfig};
-use kraken::util::bench::section;
+use kraken::util::bench::BenchLog;
 
 fn mission_cfg(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> MissionConfig {
     let artdir = std::path::Path::new("artifacts");
@@ -43,8 +45,9 @@ fn run(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> MissionRep
 fn main() {
     let corridor = SceneKind::Corridor { speed_per_s: 0.6, seed: 42 };
     let soc = SocConfig::kraken();
+    let mut log = BenchLog::from_env("e2e_mission");
 
-    section("E6: 2 s corridor mission, analytical (timing/energy models only)");
+    log.section("E6: 2 s corridor mission, analytical (timing/energy models only)");
     let r = run(2.0, false, 0.8, corridor);
     let (s, c, p) = r.rates();
     println!(
@@ -59,8 +62,9 @@ fn main() {
         r.sim_s / r.wall_s.max(1e-9)
     );
     assert!(r.avg_power_w < 0.31, "power envelope");
+    log.note("mission 2 s analytical wall", r.wall_s * 1e9);
 
-    section("E6: same mission, functional (PJRT artifacts on the hot path)");
+    log.section("E6: same mission, functional (PJRT artifacts on the hot path)");
     let rf = run(2.0, true, 0.8, corridor);
     let (s, c, p) = rf.rates();
     println!(
@@ -74,8 +78,9 @@ fn main() {
         rf.wall_s,
         rf.sim_s / rf.wall_s.max(1e-9)
     );
+    log.note("mission 2 s functional wall", rf.wall_s * 1e9);
 
-    section("scene sweep (grid, analytical): activity drives SNE energy share");
+    log.section("scene sweep (grid, analytical): activity drives SNE energy share");
     let scenes = [
         ("static edge (noise only)", SceneKind::TranslatingEdge { vel_per_s: 0.0 }),
         ("corridor flight", corridor),
@@ -104,8 +109,9 @@ fn main() {
         fleet.wall_s,
         fleet.realtime_factor()
     );
+    log.note("scene sweep (4 cells) wall", fleet.wall_s * 1e9);
 
-    section("voltage sweep (grid, analytical): mission power vs DVFS");
+    log.section("voltage sweep (grid, analytical): mission power vs DVFS");
     let vdds = [0.8, 0.7, 0.6, 0.5];
     let mut vdd_grid = GridConfig::new(soc.clone(), mission_cfg(1.0, false, 0.8, corridor), 4);
     vdd_grid.vdds = vdds.to_vec();
@@ -118,8 +124,36 @@ fn main() {
             r.dropped_windows
         );
     }
+    log.note("vdd sweep (4 cells, shared trace) wall", gr.fleet.wall_s * 1e9);
 
-    section("tenant sweep (workload grid): 1/2/4/8 sensor streams sharing ONE SoC");
+    log.section("grid trace sharing: 1 scene/seed x 4 vdd x 2 gating (8 cells, sensor work 1x vs 8x)");
+    // the §Perf acceptance sweep: cells share every sensor axis, so the
+    // shared-trace grid senses once while per-cell live sensing pays the
+    // DVS front end eight times — reports must stay bit-identical
+    let mut share_grid =
+        GridConfig::new(soc.clone(), mission_cfg(1.0, false, 0.8, corridor), 4);
+    share_grid.vdds = vec![0.5, 0.6, 0.7, 0.8];
+    share_grid.idle_gates = vec![Some(0.05), None];
+    let cfgs = share_grid.mission_cfgs();
+    let t_live = std::time::Instant::now();
+    let live = run_configs(&share_grid.soc, &cfgs, 4).unwrap();
+    let live_wall = t_live.elapsed().as_secs_f64();
+    let t_shared = std::time::Instant::now();
+    let shared = run_grid(&share_grid).unwrap();
+    let shared_wall = t_shared.elapsed().as_secs_f64();
+    for (a, b) in live.reports.iter().zip(&shared.fleet.reports) {
+        assert_eq!(a.events_total, b.events_total, "trace replay changed a report");
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+    }
+    println!(
+        "8 cells: live sensing {live_wall:.3} s vs shared-trace {shared_wall:.3} s \
+         — {:.1}x faster, bit-identical reports",
+        live_wall / shared_wall.max(1e-9)
+    );
+    log.note("8-cell grid, live sensing wall", live_wall * 1e9);
+    log.note("8-cell grid, shared-trace wall", shared_wall * 1e9);
+
+    log.section("tenant sweep (workload grid): 1/2/4/8 sensor streams sharing ONE SoC");
     // the engine-sharing scale experiment: queueing delay and
     // energy-proportionality vs. tenant count, via the grid tenants axis
     let mut tgrid = GridConfig::new(soc.clone(), mission_cfg(1.0, false, 0.8, corridor), 4);
@@ -148,8 +182,9 @@ fn main() {
         // the shared envelope holds at every tenancy level
         assert!(r.avg_power_w < 0.31, "tenancy broke the envelope: {label}");
     }
+    log.note("tenant sweep (1/2/4/8) wall", wg.fleet.wall_s * 1e9);
 
-    section("fleet scaling: 8 corridor missions, distinct seeds, 4 threads");
+    log.section("fleet scaling: 8 corridor missions, distinct seeds, 4 threads");
     let fc = FleetConfig {
         missions: 8,
         threads: 4,
@@ -163,4 +198,7 @@ fn main() {
     let power = fr.stat(|r| r.avg_power_w);
     assert!(power.max < 0.31, "fleet max power {} W", power.max);
     assert_eq!(fr.reports.len(), 8);
+    log.note("fleet (8 seeds, 4 threads) wall", fr.wall_s * 1e9);
+
+    log.finish().expect("write BENCH_e2e_mission.json");
 }

@@ -8,85 +8,125 @@
 //! 3. engine timing-model evaluation (per job)
 //! 4. frame preprocessing (downsample + quantize, per frame)
 //! 5. PJRT artifact execution (per inference; needs artifacts/)
+//! 6. sensor-trace capture & replay (the grid/fleet sharing fast path)
 //!
 //! Run: `cargo bench --bench hotpath`
+//! Machine-readable: `cargo bench --bench hotpath -- --json` writes
+//! `BENCH_hotpath.json` (per-section ns/op; CI uploads it as an artifact
+//! so the perf trajectory is tracked across PRs).
+
+use std::sync::Arc;
 
 use kraken::config::{Precision, SocConfig};
-use kraken::coordinator::pipeline::rebin_events;
+use kraken::coordinator::pipeline::{rebin_events, Mission, MissionConfig};
 use kraken::cutie::CutieEngine;
 use kraken::nets;
 use kraken::pulp::kernels as pk;
 use kraken::runtime::Runtime;
 use kraken::sensors::frame::{downsample_square, to_int8_luma, to_ternary};
 use kraken::sensors::scene::{Scene, SceneKind};
+use kraken::sensors::trace::SensorTrace;
 use kraken::sensors::DvsSim;
 use kraken::sne::SneEngine;
-use kraken::util::bench::{bench, section};
+use kraken::util::bench::BenchLog;
 
 fn main() {
     let cfg = SocConfig::kraken();
+    let mut log = BenchLog::from_env("hotpath");
 
-    section("1. sensor front-end");
+    log.section("1. sensor front-end");
     let scene = Scene::new(SceneKind::Corridor { speed_per_s: 0.6, seed: 1 });
-    bench("scene.render 132x128", || scene.render(132, 128, 0.5));
+    log.bench("scene.render 132x128", || scene.render(132, 128, 0.5));
+    let noise = Scene::new(SceneKind::Noise { density: 0.1, seed: 2 });
+    log.bench("scene.render 132x128 (noise)", || noise.render(132, 128, 0.5));
     let mut dvs = DvsSim::new(132, 128, 1);
     let mut t = 0u64;
     dvs.step(&scene, 0);
-    bench("dvs.step (1 ms sample, 132x128)", || {
+    log.bench("dvs.step (1 ms sample, 132x128)", || {
         t += 1_000_000;
         dvs.step(&scene, t)
     });
 
-    section("2. event path");
+    log.section("2. event path");
     let mut dvs2 = DvsSim::new(132, 128, 2);
     let mut sc2 = Scene::new(SceneKind::RotatingBar { omega_rad_s: 8.0 });
     let win = dvs2.capture(&mut sc2, 0.01, 1000.0);
     println!("   (window: {} events)", win.len());
-    bench("window.bin(5) native resolution", || win.bin(5));
-    bench("rebin_events -> 64x64 x5 (artifact input)", || {
+    log.bench("window.bin(5) native resolution", || win.bin(5));
+    log.bench("rebin_events -> 64x64 x5 (artifact input)", || {
         rebin_events(&win, 64, 64, 5)
     });
-    bench("window.activity + polarity_counts", || {
+    log.bench("window.activity + polarity_counts", || {
         (win.activity(), win.polarity_counts())
     });
 
-    section("3. engine timing models (called per job)");
+    log.section("3. engine timing models (called per job)");
     let sne = SneEngine::new(&cfg);
     let cutie = CutieEngine::new(&cfg);
     let firenet = nets::firenet_paper();
     let tnet = nets::cutie_paper();
     let dnet = nets::dronet_paper();
-    bench("sne.inference", || sne.inference(&firenet, 0.07, 0.8));
-    bench("cutie.inference", || cutie.inference(&tnet, 0.8));
-    bench("pulp network_inference", || {
+    log.bench("sne.inference", || sne.inference(&firenet, 0.07, 0.8));
+    log.bench("cutie.inference", || cutie.inference(&tnet, 0.8));
+    log.bench("pulp network_inference", || {
         pk::network_inference(&cfg.pulp, &dnet, Precision::Int8, 0.8)
     });
 
-    section("4. frame preprocessing (per 320x240 frame)");
+    log.section("4. frame preprocessing (per 320x240 frame)");
     let img: Vec<f32> = (0..320 * 240).map(|i| ((i % 97) as f32) / 97.0).collect();
-    bench("downsample 320x240 -> 96x96", || {
+    log.bench("downsample 320x240 -> 96x96", || {
         downsample_square(&img, 320, 240, 96)
     });
-    bench("downsample 320x240 -> 32x32", || {
+    log.bench("downsample 320x240 -> 32x32", || {
         downsample_square(&img, 320, 240, 32)
     });
     let small96 = downsample_square(&img, 320, 240, 96);
     let small32 = downsample_square(&img, 320, 240, 32);
-    bench("to_int8_luma 96x96", || to_int8_luma(&small96));
-    bench("to_ternary 32x32 x3ch", || to_ternary(&small32, 3, 0.08));
+    log.bench("to_int8_luma 96x96", || to_int8_luma(&small96));
+    log.bench("to_ternary 32x32 x3ch", || to_ternary(&small32, 3, 0.08));
 
-    section("5. PJRT artifact execution");
+    log.section("5. PJRT artifact execution");
     let artdir = std::path::Path::new("artifacts");
     if artdir.join("manifest.json").exists() {
         let rt = Runtime::load(artdir).unwrap();
         for name in ["firenet", "firenet_window", "cutie", "dronet", "gesture"] {
             let inputs = rt.zero_inputs(name).unwrap();
             let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
-            bench(&format!("pjrt execute {name}"), || {
+            log.bench(&format!("pjrt execute {name}"), || {
                 rt.execute(name, std::hint::black_box(&refs)).unwrap()
             });
         }
     } else {
         println!("   (skipped: run `make artifacts`)");
     }
+
+    log.section("6. sensor trace capture & replay");
+    // a 0.25 s corridor mission at the mission-default 1 kHz sampling:
+    // capture senses once; replayed missions skip the sensor front end
+    let mcfg = MissionConfig { duration_s: 0.25, ..Default::default() };
+    let key = mcfg.trace_key();
+    log.bench("trace.capture (0.25 s corridor @1 kHz)", || {
+        SensorTrace::capture(&key)
+    });
+    let trace = Arc::new(SensorTrace::capture(&key));
+    println!(
+        "   (trace: {} events over {} windows, ~{} KiB)",
+        trace.len(),
+        trace.n_windows(),
+        trace.approx_bytes() / 1024
+    );
+    log.bench("mission 0.25 s, live sensing", || {
+        Mission::new(SocConfig::kraken(), mcfg.clone())
+            .unwrap()
+            .run()
+            .unwrap()
+    });
+    log.bench("mission 0.25 s, trace replay", || {
+        Mission::with_trace(SocConfig::kraken(), mcfg.clone(), Some(Arc::clone(&trace)))
+            .unwrap()
+            .run()
+            .unwrap()
+    });
+
+    log.finish().expect("write BENCH_hotpath.json");
 }

@@ -15,11 +15,12 @@
 //! * the thread count only changes wall-clock time, never any report.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::config::SocConfig;
 use crate::coordinator::pipeline::{Mission, MissionConfig, MissionReport};
 use crate::coordinator::workload::{Workload, WorkloadConfig, WorkloadReport};
+use crate::sensors::trace::{shared_traces, SensorTrace, TraceKey};
 use crate::util::json::Value;
 
 /// Parameters of a fleet run: `missions` copies of `base`, reseeded
@@ -255,6 +256,58 @@ pub fn run_fleet(cfg: &FleetConfig) -> crate::Result<FleetReport> {
     run_configs(&cfg.soc, &cfg.mission_cfgs(), cfg.threads)
 }
 
+/// The sensor-trace keys of a mission batch, gated on eligibility
+/// ([`MissionConfig::shareable_trace_key`]).
+fn mission_trace_keys(cfgs: &[MissionConfig]) -> Vec<Option<TraceKey>> {
+    cfgs.iter().map(MissionConfig::shareable_trace_key).collect()
+}
+
+/// [`run_configs`] with an explicit per-config sensor trace: `Some`
+/// positions replay the shared capture (`Arc`-shared across worker
+/// threads), `None` positions sense live. Reports are bit-identical
+/// either way (`tests/integration_trace.rs`).
+pub fn run_configs_traced(
+    soc: &SocConfig,
+    cfgs: &[MissionConfig],
+    threads: usize,
+    traces: Vec<Option<Arc<SensorTrace>>>,
+) -> crate::Result<FleetReport> {
+    anyhow::ensure!(
+        traces.len() == cfgs.len(),
+        "one trace slot per mission config: {} configs, {} slots",
+        cfgs.len(),
+        traces.len()
+    );
+    let threads = threads.clamp(1, cfgs.len().max(1));
+    let pairs: Vec<(MissionConfig, Option<Arc<SensorTrace>>)> =
+        cfgs.iter().cloned().zip(traces).collect();
+    let (reports, wall_s) = run_each(
+        soc,
+        &pairs,
+        threads,
+        |soc, (cfg, trace)| Mission::with_trace(soc, cfg, trace).and_then(|mut m| m.run()),
+        "mission",
+    )?;
+    Ok(FleetReport { reports, threads, wall_s })
+}
+
+/// [`run_configs`] with automatic sensor-trace sharing: configs whose
+/// sensor key ([`MissionConfig::trace_key`]) repeats share one capture —
+/// the sweep-shaped fast path (grid cells differing only in vdd/gating
+/// run the sensor front end once instead of once per cell). `wall_s`
+/// includes the capture, so measured speedups are honest.
+pub fn run_configs_shared(
+    soc: &SocConfig,
+    cfgs: &[MissionConfig],
+    threads: usize,
+) -> crate::Result<FleetReport> {
+    let wall_start = std::time::Instant::now();
+    let traces = shared_traces(&mission_trace_keys(cfgs), threads);
+    let mut fleet = run_configs_traced(soc, cfgs, threads, traces)?;
+    fleet.wall_s = wall_start.elapsed().as_secs_f64();
+    Ok(fleet)
+}
+
 /// Aggregate result of a workload fleet: `reports[i]` is workload `i`'s
 /// report, independent of which worker ran it.
 #[derive(Debug, Clone)]
@@ -323,6 +376,57 @@ pub fn run_workload_fleet(
     tenants: usize,
 ) -> crate::Result<WorkloadFleetReport> {
     run_workload_configs(&cfg.soc, &cfg.workload_cfgs(tenants), cfg.threads)
+}
+
+/// [`run_workload_configs`] with explicit per-workload, per-stream sensor
+/// traces — the multi-tenant twin of [`run_configs_traced`].
+pub fn run_workload_configs_traced(
+    soc: &SocConfig,
+    cfgs: &[WorkloadConfig],
+    threads: usize,
+    traces: Vec<Vec<Option<Arc<SensorTrace>>>>,
+) -> crate::Result<WorkloadFleetReport> {
+    anyhow::ensure!(
+        traces.len() == cfgs.len(),
+        "one trace vector per workload config: {} configs, {} vectors",
+        cfgs.len(),
+        traces.len()
+    );
+    let threads = threads.clamp(1, cfgs.len().max(1));
+    let pairs: Vec<(WorkloadConfig, Vec<Option<Arc<SensorTrace>>>)> =
+        cfgs.iter().cloned().zip(traces).collect();
+    let (reports, wall_s) = run_each(
+        soc,
+        &pairs,
+        threads,
+        |soc, (cfg, traces)| {
+            Workload::with_traces(soc, cfg, traces).and_then(|mut w| w.run())
+        },
+        "workload",
+    )?;
+    Ok(WorkloadFleetReport { reports, threads, wall_s })
+}
+
+/// [`run_workload_configs`] with automatic sensor-trace sharing across
+/// every tenant stream of every cell: a stream key repeating anywhere in
+/// the batch — across cells *or* across tenants — is captured once.
+/// `wall_s` includes the capture.
+pub fn run_workload_configs_shared(
+    soc: &SocConfig,
+    cfgs: &[WorkloadConfig],
+    threads: usize,
+) -> crate::Result<WorkloadFleetReport> {
+    let wall_start = std::time::Instant::now();
+    let keys: Vec<Option<TraceKey>> =
+        cfgs.iter().flat_map(WorkloadConfig::stream_trace_keys).collect();
+    let mut flat = shared_traces(&keys, threads).into_iter();
+    let traces: Vec<Vec<Option<Arc<SensorTrace>>>> = cfgs
+        .iter()
+        .map(|c| c.streams.iter().map(|_| flat.next().expect("slot")).collect())
+        .collect();
+    let mut fleet = run_workload_configs_traced(soc, cfgs, threads, traces)?;
+    fleet.wall_s = wall_start.elapsed().as_secs_f64();
+    Ok(fleet)
 }
 
 #[cfg(test)]

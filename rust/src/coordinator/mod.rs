@@ -48,8 +48,9 @@ pub mod workload;
 
 pub use engine::{CutieAdapter, Engine, EngineSlot, PulpAdapter, SneAdapter};
 pub use fleet::{
-    percentile, run_configs, run_fleet, run_workload_configs, run_workload_fleet, FleetConfig,
-    FleetReport, FleetStat, WorkloadFleetReport,
+    percentile, run_configs, run_configs_shared, run_configs_traced, run_fleet,
+    run_workload_configs, run_workload_configs_shared, run_workload_configs_traced,
+    run_workload_fleet, FleetConfig, FleetReport, FleetStat, WorkloadFleetReport,
 };
 pub use fusion::{FusionState, NavCommand};
 pub use pipeline::{Mission, MissionConfig, MissionReport};

@@ -25,8 +25,15 @@
 //! parallel, see [`crate::coordinator::fleet`]; for several tenant sensor
 //! streams sharing *one* SoC's engines, see [`crate::coordinator::workload`]
 //! (whose single-tenant form replays this pipeline bit for bit).
+//!
+//! The sensor front end sits behind an [`EventSource`]: live sensing, or
+//! replay of a shared [`SensorTrace`] captured once per distinct sensor
+//! key — bit-identical either way (DESIGN.md §9, `tests/integration_trace.rs`).
+//! Grid/fleet sweeps whose cells differ only in SoC-side axes share one
+//! capture across cells and worker threads.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::config::{SocConfig, VDD_MAX};
 use crate::coordinator::engine::{CutieAdapter, Engine, PulpAdapter, SneAdapter};
@@ -34,10 +41,11 @@ use crate::coordinator::fusion::{FlowSummary, FusionState, NavCommand};
 use crate::coordinator::power_mgr::PowerPolicy;
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::telemetry::Snapshot;
+use crate::event::Event;
 use crate::runtime::Runtime;
-use crate::sensors::frame::{downsample_square, to_int8_luma, to_ternary, FrameSensor};
-use crate::sensors::scene::{Scene, SceneKind};
-use crate::sensors::DvsSim;
+use crate::sensors::frame::{downsample_square, to_int8_luma, to_ternary};
+use crate::sensors::scene::SceneKind;
+use crate::sensors::trace::{EventSource, SensorTrace, TraceKey};
 use crate::soc::power::DomainId;
 use crate::soc::Soc;
 
@@ -90,6 +98,31 @@ impl MissionConfig {
             other => other,
         };
         cfg
+    }
+
+    /// The sensor-trace key of this mission: everything its sensor front
+    /// end depends on, and nothing SoC-side (vdd, gating, telemetry,
+    /// artifacts). Two configs with equal keys can share one captured
+    /// [`SensorTrace`] and stay bit-identical.
+    pub fn trace_key(&self) -> TraceKey {
+        TraceKey {
+            scene: self.scene,
+            seed: self.seed,
+            width: crate::sensors::DVS_WIDTH,
+            height: crate::sensors::DVS_HEIGHT,
+            dvs_sample_hz: self.dvs_sample_hz,
+            frame_fps: self.frame_fps,
+            duration_s: self.duration_s,
+            window_ms: self.window_ms,
+        }
+    }
+
+    /// [`MissionConfig::trace_key`] gated on eligibility: `None` for
+    /// artifact-backed configs, which must sense live (traces carry no
+    /// frame pixels). The single eligibility rule every sharing layer
+    /// (fleet, grid, serve) consults.
+    pub fn shareable_trace_key(&self) -> Option<TraceKey> {
+        self.artifacts_dir.is_none().then(|| self.trace_key())
     }
 }
 
@@ -183,9 +216,8 @@ pub struct Mission {
     sne: SneAdapter,
     cutie: CutieAdapter,
     pulp: PulpAdapter,
-    dvs: DvsSim,
-    cam: FrameSensor,
-    scene: Scene,
+    /// The sensor front end: live sensing or shared trace replay.
+    source: EventSource,
     fusion: FusionState,
     runtime: Option<Runtime>,
     /// Persistent FireNet LIF state (functional path).
@@ -196,7 +228,26 @@ pub struct Mission {
 const TIMESTEPS: usize = 5;
 
 impl Mission {
+    /// A mission sensing live — the classic form.
     pub fn new(soc_cfg: SocConfig, cfg: MissionConfig) -> crate::Result<Self> {
+        Mission::with_trace(soc_cfg, cfg, None)
+    }
+
+    /// A mission over an explicit sensor source: `Some(trace)` replays the
+    /// shared capture (bit-identical to live — `tests/integration_trace.rs`),
+    /// `None` senses live. Replay requires an analytical mission (traces
+    /// carry no frame pixels) and a trace whose key matches
+    /// [`MissionConfig::trace_key`] exactly.
+    pub fn with_trace(
+        soc_cfg: SocConfig,
+        cfg: MissionConfig,
+        trace: Option<Arc<SensorTrace>>,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            trace.is_none() || cfg.artifacts_dir.is_none(),
+            "sensor traces carry no frame pixels; artifact-backed \
+             (functional) missions must sense live"
+        );
         let mut soc = Soc::new(soc_cfg.clone());
         let vdd = cfg.policy.vdd.unwrap_or(VDD_MAX);
         soc.power.set_vdd(vdd);
@@ -238,17 +289,16 @@ impl Mission {
         let firenet_state =
             state_shapes.iter().map(|&(c, h, w)| vec![0f32; c * h * w]).collect();
 
+        let source = match trace {
+            Some(trace) => EventSource::replay_for(trace, &cfg.trace_key())?,
+            None => EventSource::live(cfg.seed, cfg.frame_fps, cfg.scene),
+        };
+
         Ok(Mission {
             sne: SneAdapter::new(&soc_cfg),
             cutie: CutieAdapter::new(&soc_cfg),
             pulp: PulpAdapter::new(&soc_cfg),
-            dvs: DvsSim::new(crate::sensors::DVS_WIDTH, crate::sensors::DVS_HEIGHT, cfg.seed),
-            cam: FrameSensor::new(
-                crate::sensors::FRAME_WIDTH,
-                crate::sensors::FRAME_HEIGHT,
-                cfg.frame_fps,
-            ),
-            scene: Scene::new(cfg.scene),
+            source,
             fusion: FusionState::new(),
             runtime,
             firenet_state,
@@ -304,7 +354,7 @@ impl Mission {
         let mut sched: Scheduler<MissionEvent> = Scheduler::new();
         if n_windows > 0 {
             sched.push(0, PRIO_WINDOW_START, MissionEvent::WindowStart(0));
-            sched.push(self.cam.next_frame_t_ns(), PRIO_FRAME, MissionEvent::Frame);
+            sched.push(self.source.next_frame_t_ns(), PRIO_FRAME, MissionEvent::Frame);
         }
 
         while let Some(ev) = sched.pop() {
@@ -315,7 +365,7 @@ impl Mission {
                 }
                 MissionEvent::Frame => {
                     self.on_frame(&mut st, &mut report)?;
-                    let next = self.cam.next_frame_t_ns();
+                    let next = self.source.next_frame_t_ns();
                     if next < end_ns {
                         sched.push(next, PRIO_FRAME, MissionEvent::Frame);
                     }
@@ -370,19 +420,13 @@ impl Mission {
         let window_ns = st.window_ns;
         let t0 = w * window_ns;
 
-        // -- 1. DVS capture over the window (AER stream) ---------------
-        let mut win = crate::event::EventWindow::new(self.dvs.width, self.dvs.height);
-        let n_samples =
-            ((window_ns as f64 * 1e-9) * self.cfg.dvs_sample_hz).max(1.0) as u64;
-        for k in 0..=n_samples {
-            let ts = t0 + k * window_ns / (n_samples + 1);
-            self.scene.advance(ts as f64 * 1e-9);
-            let part = self.dvs.step(&self.scene, ts);
-            for e in part.events {
-                win.push(e);
-            }
-        }
-        report.events_total += win.len() as u64;
+        // -- 1. DVS capture over the window (AER stream): sensed live or
+        //       handed back from the shared trace -----------------------
+        let (sw, sh) = self.source.dims();
+        let evs: &[Event] =
+            self.source.window_events(w, t0, window_ns, self.cfg.dvs_sample_hz);
+        let n_events = evs.len() as u64;
+        report.events_total += n_events;
 
         // -- 2. SNE optical flow --------------------------------------
         // functional inference (if artifacts): persistent LIF state
@@ -394,7 +438,7 @@ impl Mission {
             // state crosses timesteps device-side instead of being
             // marshalled 5x per window (EXPERIMENTS.md §Perf: 3.4x
             // faster functional missions than per-step execution)
-            let bins = rebin_events(&win, fh, fw, TIMESTEPS);
+            let bins = rebin_slice(evs, sw, sh, fh, fw, TIMESTEPS);
             let mut seq = Vec::with_capacity(TIMESTEPS * 2 * fh * fw);
             for bin in &bins {
                 seq.extend_from_slice(bin);
@@ -418,18 +462,17 @@ impl Mission {
         let artifact_sites = (self.firenet_dims.0 * self.firenet_dims.1) as f64
             * 98.0
             * TIMESTEPS as f64;
-        let input_sites =
-            (self.dvs.width * self.dvs.height * 2 * TIMESTEPS) as f64;
+        let input_sites = (sw * sh * 2 * TIMESTEPS) as f64;
         let activity = if self.runtime.is_some() {
-            let scale = (self.firenet_dims.0 * self.firenet_dims.1) as f64
-                / (self.dvs.width * self.dvs.height) as f64;
-            ((win.len() as f64 * scale + hidden_spikes) / artifact_sites).min(1.0)
+            let scale =
+                (self.firenet_dims.0 * self.firenet_dims.1) as f64 / (sw * sh) as f64;
+            ((n_events as f64 * scale + hidden_spikes) / artifact_sites).min(1.0)
         } else {
-            (win.len() as f64 / input_sites).min(1.0)
+            (n_events as f64 / input_sites).min(1.0)
         };
         st.activity_sum += activity;
         st.snap.activity += activity;
-        st.snap.events += win.len() as u64;
+        st.snap.events += n_events;
 
         let sne_dur = self.sne.job_ns(activity, st.vdd);
         if self.sne.dispatch(&mut self.soc.power, t0, sne_dur, window_ns) {
@@ -449,13 +492,18 @@ impl Mission {
     }
 
     /// Frame path: CPI capture + uDMA staging, then the CUTIE and PULP
-    /// forks dispatched when the DMA lands.
+    /// forks dispatched when the DMA lands. Analytical missions never
+    /// read frame pixels, so the source only renders them when the
+    /// functional runtime is live.
     fn on_frame(&mut self, st: &mut RunState, report: &mut MissionReport) -> crate::Result<()> {
         let window_ns = st.window_ns;
-        let (fts, img) = self.cam.capture(&mut self.scene);
+        let need_img = self.runtime.is_some();
+        let (cam_w, cam_h) = self.source.frame_dims();
+        let frame_bytes = self.source.frame_bytes();
+        let (fts, img, truth) = self.source.capture_frame(need_img);
         // CPI + uDMA staging into L2
         let f_fab = self.soc.power.freq(DomainId::Fabric).max(1.0);
-        let dma_done = self.soc.dma.start("frame", self.cam.frame_bytes(), fts, f_fab);
+        let dma_done = self.soc.dma.start("frame", frame_bytes, fts, f_fab);
 
         // CUTIE classification
         let cutie_dur = self.cutie.job_ns(st.vdd);
@@ -464,9 +512,9 @@ impl Mission {
             st.snap.cutie_inf += 1;
             let class = if let Some(rt) = &self.runtime {
                 let small = downsample_square(
-                    &img,
-                    self.cam.width,
-                    self.cam.height,
+                    img.as_deref().expect("functional missions sense live frames"),
+                    cam_w,
+                    cam_h,
                     32,
                 );
                 let tern = to_ternary(&small, 3, 0.08);
@@ -485,16 +533,16 @@ impl Mission {
             st.snap.pulp_inf += 1;
             let (steer, coll) = if let Some(rt) = &self.runtime {
                 let small = downsample_square(
-                    &img,
-                    self.cam.width,
-                    self.cam.height,
+                    img.as_deref().expect("functional missions sense live frames"),
+                    cam_w,
+                    cam_h,
                     96,
                 );
                 let luma = to_int8_luma(&small);
                 let out = rt.execute("dronet", &[&luma])?;
                 (out[0][0], out[0][1])
             } else {
-                let (s, c) = self.scene.corridor_truth(fts as f64 * 1e-9);
+                let (s, c) = truth;
                 (s as f32, if c { 3.0 } else { -3.0 })
             };
             self.fusion.update_dronet(steer / 64.0, coll);
@@ -590,17 +638,31 @@ pub fn rebin_events(
     w: usize,
     t_bins: usize,
 ) -> Vec<Vec<f32>> {
+    rebin_slice(&win.events, win.width, win.height, h, w, t_bins)
+}
+
+/// The slice form of [`rebin_events`]: rebin a time-sorted event slice at
+/// `src_w x src_h` sensor resolution (how trace replay feeds the
+/// artifact without materializing an `EventWindow`).
+pub fn rebin_slice(
+    events: &[Event],
+    src_w: usize,
+    src_h: usize,
+    h: usize,
+    w: usize,
+    t_bins: usize,
+) -> Vec<Vec<f32>> {
     let plane = h * w;
     let mut out = vec![vec![0f32; 2 * plane]; t_bins];
-    if win.events.is_empty() {
+    if events.is_empty() {
         return out;
     }
-    let t0 = win.events.first().unwrap().t_ns;
-    let span = win.span_ns().max(1);
-    for e in &win.events {
+    let t0 = events.first().unwrap().t_ns;
+    let span = (events.last().unwrap().t_ns - t0).max(1);
+    for e in events {
         let b = (((e.t_ns - t0) as u128 * t_bins as u128) / (span as u128 + 1)) as usize;
-        let x = (e.x as usize * w) / win.width;
-        let y = (e.y as usize * h) / win.height;
+        let x = (e.x as usize * w) / src_w;
+        let y = (e.y as usize * h) / src_h;
         let idx = e.polarity.channel() * plane + y * w + x;
         out[b][idx] += 1.0;
     }
@@ -716,6 +778,30 @@ mod tests {
         let mut cfg2 = quick_cfg();
         cfg2.scene = SceneKind::RotatingBar { omega_rad_s: 2.0 };
         assert!(matches!(cfg2.with_seed(9).scene, SceneKind::RotatingBar { .. }));
+    }
+
+    #[test]
+    fn trace_replay_matches_live_mission() {
+        let cfg = quick_cfg();
+        let live = Mission::new(SocConfig::kraken(), cfg.clone()).unwrap().run().unwrap();
+        let trace = Arc::new(SensorTrace::capture(&cfg.trace_key()));
+        let replay = Mission::with_trace(SocConfig::kraken(), cfg, Some(trace))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(replay.events_total, live.events_total);
+        assert_eq!(replay.sne_inf, live.sne_inf);
+        assert_eq!(replay.commands, live.commands);
+        assert_eq!(replay.energy_j.to_bits(), live.energy_j.to_bits());
+        assert_eq!(replay.avg_activity.to_bits(), live.avg_activity.to_bits());
+    }
+
+    #[test]
+    fn artifact_missions_refuse_trace_replay() {
+        let mut cfg = quick_cfg();
+        let trace = Arc::new(SensorTrace::capture(&cfg.trace_key()));
+        cfg.artifacts_dir = Some("artifacts".into());
+        assert!(Mission::with_trace(SocConfig::kraken(), cfg, Some(trace)).is_err());
     }
 
     #[test]

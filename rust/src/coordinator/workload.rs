@@ -34,17 +34,17 @@
 //! perturbing it.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::config::{SocConfig, VDD_MAX};
 use crate::coordinator::engine::{CutieAdapter, Engine, PulpAdapter, SneAdapter, WAKE_NS};
 use crate::coordinator::fusion::{FlowSummary, FusionState, NavCommand};
-use crate::coordinator::pipeline::{argmax, rebin_events, MissionConfig, MissionReport};
+use crate::coordinator::pipeline::{argmax, rebin_slice, MissionConfig, MissionReport};
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::telemetry::Snapshot;
 use crate::runtime::Runtime;
-use crate::sensors::frame::{downsample_square, to_int8_luma, to_ternary, FrameSensor};
-use crate::sensors::scene::Scene;
-use crate::sensors::DvsSim;
+use crate::sensors::frame::{downsample_square, to_int8_luma, to_ternary};
+use crate::sensors::trace::{EventSource, SensorTrace, TraceKey};
 use crate::soc::power::{DomainId, PowerManager};
 use crate::soc::Soc;
 use crate::util::json::Value;
@@ -89,6 +89,23 @@ impl StreamConfig {
             seed: m.seed,
             frame_fps: m.frame_fps,
             dvs_sample_hz: m.dvs_sample_hz,
+        }
+    }
+
+    /// The sensor-trace key of this stream inside a workload of the given
+    /// duration and scheduling window — the same key the equivalent
+    /// single-tenant [`MissionConfig::trace_key`] produces, so mission
+    /// and workload cells share captures.
+    pub fn trace_key(&self, duration_s: f64, window_ms: f64) -> TraceKey {
+        TraceKey {
+            scene: self.scene,
+            seed: self.seed,
+            width: crate::sensors::DVS_WIDTH,
+            height: crate::sensors::DVS_HEIGHT,
+            dvs_sample_hz: self.dvs_sample_hz,
+            frame_fps: self.frame_fps,
+            duration_s,
+            window_ms,
         }
     }
 }
@@ -146,6 +163,20 @@ impl WorkloadConfig {
 
     pub fn tenants(&self) -> usize {
         self.streams.len()
+    }
+
+    /// Per-stream shareable sensor-trace keys, in stream order: `None`
+    /// throughout for artifact-backed workloads (live sensing only) —
+    /// the workload twin of [`MissionConfig::shareable_trace_key`].
+    pub fn stream_trace_keys(&self) -> Vec<Option<TraceKey>> {
+        self.streams
+            .iter()
+            .map(|s| {
+                self.artifacts_dir
+                    .is_none()
+                    .then(|| s.trace_key(self.duration_s, self.window_ms))
+            })
+            .collect()
     }
 
     pub fn validate(&self) -> crate::Result<()> {
@@ -392,9 +423,8 @@ fn queue_wait_ns(eng: &dyn Engine, power: &PowerManager, now_ns: u64) -> u64 {
 
 /// Per-tenant simulation state.
 struct Tenant {
-    dvs: DvsSim,
-    cam: FrameSensor,
-    scene: Scene,
+    /// The tenant's sensor front end: live or shared trace replay.
+    source: EventSource,
     fusion: FusionState,
     /// Persistent FireNet LIF state (functional path), one context per
     /// tenant stream.
@@ -435,8 +465,33 @@ pub struct Workload {
 }
 
 impl Workload {
+    /// A workload whose every tenant senses live — the classic form.
     pub fn new(soc_cfg: SocConfig, cfg: WorkloadConfig) -> crate::Result<Self> {
+        Workload::with_traces(soc_cfg, cfg, Vec::new())
+    }
+
+    /// A workload over explicit per-tenant sensor sources: `traces` is
+    /// either empty (all tenants sense live) or one `Option` per stream,
+    /// where `Some(trace)` replays the shared capture bit-identically.
+    /// Replay requires an analytical workload and per-stream keys matching
+    /// [`StreamConfig::trace_key`] exactly.
+    pub fn with_traces(
+        soc_cfg: SocConfig,
+        cfg: WorkloadConfig,
+        traces: Vec<Option<Arc<SensorTrace>>>,
+    ) -> crate::Result<Self> {
         cfg.validate()?;
+        anyhow::ensure!(
+            traces.is_empty() || traces.len() == cfg.streams.len(),
+            "one trace slot per tenant stream: {} streams, {} slots",
+            cfg.streams.len(),
+            traces.len()
+        );
+        anyhow::ensure!(
+            traces.iter().all(Option::is_none) || cfg.artifacts_dir.is_none(),
+            "sensor traces carry no frame pixels; artifact-backed \
+             (functional) workloads must sense live"
+        );
         let mut soc = Soc::new(soc_cfg.clone());
         let vdd = cfg.policy.vdd.unwrap_or(VDD_MAX);
         soc.power.set_vdd(vdd);
@@ -478,21 +533,17 @@ impl Workload {
 
         let (fh, fw) = (64usize, 64usize);
         let state_shapes = [(16, fh, fw), (32, fh, fw), (32, fh, fw), (16, fh, fw)];
-        let tenants = cfg
-            .streams
-            .iter()
-            .map(|s| Tenant {
-                dvs: DvsSim::new(
-                    crate::sensors::DVS_WIDTH,
-                    crate::sensors::DVS_HEIGHT,
-                    s.seed,
-                ),
-                cam: FrameSensor::new(
-                    crate::sensors::FRAME_WIDTH,
-                    crate::sensors::FRAME_HEIGHT,
-                    s.frame_fps,
-                ),
-                scene: Scene::new(s.scene),
+        let mut tenants = Vec::with_capacity(cfg.streams.len());
+        for (i, s) in cfg.streams.iter().enumerate() {
+            let source = match traces.get(i).cloned().flatten() {
+                Some(t) => EventSource::replay_for(
+                    t,
+                    &s.trace_key(cfg.duration_s, cfg.window_ms),
+                )?,
+                None => EventSource::live(s.seed, s.frame_fps, s.scene),
+            };
+            tenants.push(Tenant {
+                source,
                 fusion: FusionState::new(),
                 firenet_state: state_shapes
                     .iter()
@@ -503,8 +554,8 @@ impl Workload {
                 avoid_count: 0,
                 frames_scheduled: 0,
                 report: TenantReport::default(),
-            })
-            .collect();
+            });
+        }
 
         Ok(Workload {
             sne: SneAdapter::new(&soc_cfg),
@@ -568,7 +619,7 @@ impl Workload {
                     self.prio_start(t, 0),
                     WorkloadEvent::WindowStart { tenant: t, w: 0 },
                 );
-                let first_frame = self.tenants[t].cam.next_frame_t_ns();
+                let first_frame = self.tenants[t].source.next_frame_t_ns();
                 sched.push(first_frame, self.prio_frame(t, 0), WorkloadEvent::Frame { tenant: t });
                 self.tenants[t].frames_scheduled = 1;
             }
@@ -582,7 +633,7 @@ impl Workload {
                 }
                 WorkloadEvent::Frame { tenant } => {
                     self.on_frame(tenant, &mut st)?;
-                    let next = self.tenants[tenant].cam.next_frame_t_ns();
+                    let next = self.tenants[tenant].source.next_frame_t_ns();
                     if next < end_ns {
                         let idx = self.tenants[tenant].frames_scheduled;
                         sched.push(next, self.prio_frame(tenant, idx), WorkloadEvent::Frame { tenant });
@@ -657,25 +708,19 @@ impl Workload {
         let stream_hz = self.cfg.streams[tenant].dvs_sample_hz;
         let ten = &mut self.tenants[tenant];
 
-        // -- 1. DVS capture over the window (AER stream) ---------------
-        let mut win = crate::event::EventWindow::new(ten.dvs.width, ten.dvs.height);
-        let n_samples = ((window_ns as f64 * 1e-9) * stream_hz).max(1.0) as u64;
-        for k in 0..=n_samples {
-            let ts = t0 + k * window_ns / (n_samples + 1);
-            ten.scene.advance(ts as f64 * 1e-9);
-            let part = ten.dvs.step(&ten.scene, ts);
-            for e in part.events {
-                win.push(e);
-            }
-        }
-        ten.report.events_total += win.len() as u64;
+        // -- 1. DVS capture over the window (AER stream): sensed live or
+        //       handed back from the shared trace -----------------------
+        let (sw, sh) = ten.source.dims();
+        let evs = ten.source.window_events(w, t0, window_ns, stream_hz);
+        let n_events = evs.len() as u64;
+        ten.report.events_total += n_events;
 
         // -- 2. SNE optical flow (functional if artifacts) -------------
         let mut hidden_spikes = 0f64;
         let mut flow_summary = None;
         if let Some(rt) = &self.runtime {
             let (fh, fw) = self.firenet_dims;
-            let bins = rebin_events(&win, fh, fw, TIMESTEPS);
+            let bins = rebin_slice(evs, sw, sh, fh, fw, TIMESTEPS);
             let mut seq = Vec::with_capacity(TIMESTEPS * 2 * fh * fw);
             for bin in &bins {
                 seq.extend_from_slice(bin);
@@ -696,17 +741,17 @@ impl Workload {
         // network activity, exactly the mission pipeline's estimate
         let artifact_sites =
             (self.firenet_dims.0 * self.firenet_dims.1) as f64 * 98.0 * TIMESTEPS as f64;
-        let input_sites = (ten.dvs.width * ten.dvs.height * 2 * TIMESTEPS) as f64;
+        let input_sites = (sw * sh * 2 * TIMESTEPS) as f64;
         let activity = if self.runtime.is_some() {
-            let scale = (self.firenet_dims.0 * self.firenet_dims.1) as f64
-                / (ten.dvs.width * ten.dvs.height) as f64;
-            ((win.len() as f64 * scale + hidden_spikes) / artifact_sites).min(1.0)
+            let scale =
+                (self.firenet_dims.0 * self.firenet_dims.1) as f64 / (sw * sh) as f64;
+            ((n_events as f64 * scale + hidden_spikes) / artifact_sites).min(1.0)
         } else {
-            (win.len() as f64 / input_sites).min(1.0)
+            (n_events as f64 / input_sites).min(1.0)
         };
         ten.activity_sum += activity;
         ten.snap.activity += activity;
-        ten.snap.events += win.len() as u64;
+        ten.snap.events += n_events;
 
         let sne_dur = self.sne.job_ns(activity, st.vdd);
         let wait_ns = queue_wait_ns(&self.sne, &self.soc.power, t0);
@@ -727,13 +772,17 @@ impl Workload {
 
     /// One tenant's frame path: CPI capture + uDMA staging through the
     /// shared DMA, then the CUTIE and PULP forks on the shared engines.
+    /// Frame pixels only render when the functional runtime is live.
     fn on_frame(&mut self, tenant: usize, st: &mut SocState) -> crate::Result<()> {
         let window_ns = st.window_ns;
+        let need_img = self.runtime.is_some();
         let ten = &mut self.tenants[tenant];
-        let (fts, img) = ten.cam.capture(&mut ten.scene);
+        let (cam_w, cam_h) = ten.source.frame_dims();
+        let frame_bytes = ten.source.frame_bytes();
+        let (fts, img, truth) = ten.source.capture_frame(need_img);
         let f_fab = self.soc.power.freq(DomainId::Fabric).max(1.0);
         let tag = format!("frame{tenant}");
-        let dma_done = self.soc.dma.start(&tag, ten.cam.frame_bytes(), fts, f_fab);
+        let dma_done = self.soc.dma.start(&tag, frame_bytes, fts, f_fab);
 
         // CUTIE classification
         let cutie_dur = self.cutie.job_ns(st.vdd);
@@ -743,7 +792,12 @@ impl Workload {
             ten.report.cutie_inf += 1;
             ten.snap.cutie_inf += 1;
             let class = if let Some(rt) = &self.runtime {
-                let small = downsample_square(&img, ten.cam.width, ten.cam.height, 32);
+                let small = downsample_square(
+                    img.as_deref().expect("functional workloads sense live frames"),
+                    cam_w,
+                    cam_h,
+                    32,
+                );
                 let tern = to_ternary(&small, 3, 0.08);
                 let out = rt.execute("cutie", &[&tern])?;
                 argmax(&out[0])
@@ -763,12 +817,17 @@ impl Workload {
             ten.report.pulp_inf += 1;
             ten.snap.pulp_inf += 1;
             let (steer, coll) = if let Some(rt) = &self.runtime {
-                let small = downsample_square(&img, ten.cam.width, ten.cam.height, 96);
+                let small = downsample_square(
+                    img.as_deref().expect("functional workloads sense live frames"),
+                    cam_w,
+                    cam_h,
+                    96,
+                );
                 let luma = to_int8_luma(&small);
                 let out = rt.execute("dronet", &[&luma])?;
                 (out[0][0], out[0][1])
             } else {
-                let (s, c) = ten.scene.corridor_truth(fts as f64 * 1e-9);
+                let (s, c) = truth;
                 (s as f32, if c { 3.0 } else { -3.0 })
             };
             ten.fusion.update_dronet(steer / 64.0, coll);
@@ -950,6 +1009,42 @@ mod tests {
             "PULP overload not visible: {:?}",
             r.contention
         );
+    }
+
+    #[test]
+    fn workload_trace_replay_matches_live() {
+        let cfg = WorkloadConfig::fan_out(&quick_mission(), 2);
+        let live = Workload::new(SocConfig::kraken(), cfg.clone()).unwrap().run().unwrap();
+        let traces: Vec<Option<Arc<SensorTrace>>> = cfg
+            .streams
+            .iter()
+            .map(|s| {
+                Some(Arc::new(SensorTrace::capture(
+                    &s.trace_key(cfg.duration_s, cfg.window_ms),
+                )))
+            })
+            .collect();
+        let replay = Workload::with_traces(SocConfig::kraken(), cfg, traces)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(replay.events_total(), live.events_total());
+        assert_eq!(replay.inferences_total(), live.inferences_total());
+        assert_eq!(replay.energy_j.to_bits(), live.energy_j.to_bits());
+        for (a, b) in live.tenants.iter().zip(&replay.tenants) {
+            assert_eq!(a.events_total, b.events_total);
+            assert_eq!(a.sne_inf, b.sne_inf);
+            assert_eq!(a.commands, b.commands);
+        }
+    }
+
+    #[test]
+    fn trace_slot_count_is_validated() {
+        let cfg = WorkloadConfig::fan_out(&quick_mission(), 2);
+        let one = vec![Some(Arc::new(SensorTrace::capture(
+            &cfg.streams[0].trace_key(cfg.duration_s, cfg.window_ms),
+        )))];
+        assert!(Workload::with_traces(SocConfig::kraken(), cfg, one).is_err());
     }
 
     #[test]

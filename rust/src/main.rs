@@ -51,9 +51,14 @@ COMMANDS:
       [--seed N] [--artifacts DIR] [--vdd V] [--live] [--json]
                                   run the Fig. 2 mission
   fleet [--missions N] [--threads T] [--duration S] [--scene ...]
-        [--seed BASE] [--vdd V] [--json]
+        [--seed BASE] [--vdd V] [--vdds V1,V2,...] [--gates G1,off,...]
+        [--json]
                                   run N missions in parallel (seeds
-                                  BASE..BASE+N, one SoC per worker)
+                                  BASE..BASE+N, one SoC per worker);
+                                  --vdds / --gates lift the fleet to a
+                                  config grid (cross-product cells) whose
+                                  cells share one captured sensor trace
+                                  per distinct scene/seed (DESIGN.md §9)
   workload [--tenants N] [--duration S] [--scene ...] [--seed BASE]
            [--vdd V] [--window-ms MS] [--json]
                                   run N tenant sensor streams sharing ONE
@@ -61,12 +66,14 @@ COMMANDS:
                                   per-tenant rates plus shared-engine
                                   queueing/drop statistics (DESIGN.md §8)
   serve [--stdio | --listen ADDR] [--workers N] [--queue N] [--cache-cap N]
+        [--trace-cache N]
                                   resident mission service: JSON-lines
                                   requests (run|fleet|grid|workload|stats|
                                   shutdown, optional protocol field "v")
                                   answered from a persistent worker pool
-                                  with a deterministic result cache
-                                  (DESIGN.md § Serving, §8)
+                                  with a deterministic result cache and a
+                                  bounded sensor-trace cache (0 disables;
+                                  DESIGN.md § Serving, §8, §9)
   check-artifacts [--dir DIR]     verify + execute every AOT artifact
   help                            this text
 ";
@@ -182,9 +189,11 @@ fn run() -> kraken::Result<()> {
             let scene = args.opt("scene")?.unwrap_or_else(|| "corridor".into());
             let seed: u64 = args.opt("seed")?.map_or(Ok(7), |s| s.parse())?;
             let vdd: f64 = args.opt("vdd")?.map_or(Ok(0.8), |s| s.parse())?;
+            let vdds = args.opt("vdds")?;
+            let gates = args.opt("gates")?;
             let json = args.flag("json");
             args.finish()?;
-            run_fleet_cmd(cfg, missions, threads, duration, &scene, seed, vdd, json)
+            run_fleet_cmd(cfg, missions, threads, duration, &scene, seed, vdd, vdds, gates, json)
         }
         Some("workload") => {
             let tenants: usize = args.opt("tenants")?.map_or(Ok(2), |s| s.parse())?;
@@ -203,12 +212,13 @@ fn run() -> kraken::Result<()> {
             let workers: usize = args.opt("workers")?.map_or(Ok(4), |s| s.parse())?;
             let queue: usize = args.opt("queue")?.map_or(Ok(256), |s| s.parse())?;
             let cache_cap: usize = args.opt("cache-cap")?.map_or(Ok(128), |s| s.parse())?;
+            let trace_cache: usize = args.opt("trace-cache")?.map_or(Ok(8), |s| s.parse())?;
             args.finish()?;
             anyhow::ensure!(
                 !(stdio && listen.is_some()),
                 "--stdio and --listen are mutually exclusive"
             );
-            let server = Server::new(cfg, workers, queue, cache_cap)?;
+            let server = Server::new(cfg, workers, queue, cache_cap, trace_cache)?;
             match listen {
                 Some(addr) => kraken::serve::serve_listen(std::sync::Arc::new(server), &addr),
                 None => server.serve_stdio(),
@@ -423,6 +433,36 @@ fn run_mission(
     Ok(())
 }
 
+/// Parse a comma-separated f64 list (`0.6,0.7,0.8`).
+fn parse_f64_list(s: &str) -> kraken::Result<Vec<f64>> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| {
+            t.trim()
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("bad value '{}': {e}", t.trim()))
+        })
+        .collect()
+}
+
+/// Parse a comma-separated gating-axis list: each element is an
+/// `idle_gate_s` in seconds, or `off` for gating disabled.
+fn parse_gate_list(s: &str) -> kraken::Result<Vec<Option<f64>>> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| {
+            let t = t.trim();
+            if t.eq_ignore_ascii_case("off") {
+                Ok(None)
+            } else {
+                t.parse::<f64>()
+                    .map(Some)
+                    .map_err(|e| anyhow::anyhow!("bad gate '{t}' (seconds or 'off'): {e}"))
+            }
+        })
+        .collect()
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_fleet_cmd(
     cfg: SocConfig,
@@ -432,6 +472,8 @@ fn run_fleet_cmd(
     scene: &str,
     base_seed: u64,
     vdd: f64,
+    vdds: Option<String>,
+    gates: Option<String>,
     json: bool,
 ) -> kraken::Result<()> {
     anyhow::ensure!(missions > 0, "--missions must be at least 1");
@@ -444,12 +486,31 @@ fn run_fleet_cmd(
     };
     let fleet = FleetConfig { missions, threads, base_seed, base, soc: cfg };
     // a fleet is the seed-axis special case of a config grid; run it
-    // through the grid layer (identical configs, identical reports)
-    let report = run_grid(&GridConfig::from_fleet(&fleet))?.fleet;
+    // through the grid layer (identical configs, identical reports).
+    // --vdds/--gates add SoC-side axes: every cell of one seed shares a
+    // single captured sensor trace (DESIGN.md §9)
+    let mut grid = GridConfig::from_fleet(&fleet);
+    if let Some(v) = vdds {
+        grid.vdds = parse_f64_list(&v)?;
+    }
+    if let Some(g) = gates {
+        grid.idle_gates = parse_gate_list(&g)?;
+    }
+    let has_axes = !grid.vdds.is_empty() || !grid.idle_gates.is_empty();
+    let gr = run_grid(&grid)?;
     if json {
-        println!("{}", report.to_json().pretty());
+        if has_axes {
+            println!("{}", gr.to_json().pretty());
+        } else {
+            println!("{}", gr.fleet.to_json().pretty());
+        }
         return Ok(());
     }
+    if has_axes {
+        print!("{}", gr.summary());
+        return Ok(());
+    }
+    let report = gr.fleet;
     print!("{}", report.summary());
     println!("\nper-mission reports (seed = base + index):");
     for (i, r) in report.reports.iter().enumerate() {
@@ -556,6 +617,17 @@ mod tests {
         let err = a.finish().unwrap_err().to_string();
         assert!(err.contains("--sede"), "{err}");
         args(&[]).finish().unwrap();
+    }
+
+    #[test]
+    fn axis_list_parsing() {
+        assert_eq!(super::parse_f64_list("0.6, 0.8").unwrap(), vec![0.6, 0.8]);
+        assert!(super::parse_f64_list("0.6,x").is_err());
+        assert_eq!(
+            super::parse_gate_list("0.05,off").unwrap(),
+            vec![Some(0.05), None]
+        );
+        assert!(super::parse_gate_list("soon").is_err());
     }
 
     #[test]

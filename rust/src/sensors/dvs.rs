@@ -21,12 +21,12 @@ pub struct DvsSim {
     pub height: usize,
     /// Contrast threshold on log intensity (typ. 0.2–0.4).
     pub threshold: f64,
-    /// Per-pixel refractory period (ns).
+    /// Per-pixel refractory period (ns), modeled as a cap on the number
+    /// of events one pixel may emit per sample interval.
     pub refractory_ns: u64,
     /// Background-activity noise rate per pixel (Hz).
     pub noise_rate_hz: f64,
     last_log: Vec<f64>,
-    last_event_ns: Vec<u64>,
     /// Per-pixel intensity band [lo, hi]: while the rendered intensity
     /// stays inside, no threshold crossing is possible and the pixel is
     /// skipped without touching `ln` (the fast path that makes kHz
@@ -37,6 +37,9 @@ pub struct DvsSim {
     staged: Vec<(u64, usize, Polarity)>,
     last_t_ns: u64,
     primed: bool,
+    /// The construction seed, kept so [`DvsSim::reset`] can rewind the
+    /// noise RNG to its power-on state.
+    seed: u64,
     rng: Rng,
 }
 
@@ -52,13 +55,13 @@ impl DvsSim {
             refractory_ns: 100_000, // 100 us, ~DVS132S at nominal biases
             noise_rate_hz: 2.0,
             last_log: vec![0.0; width * height],
-            last_event_ns: vec![0; width * height],
             band_lo: vec![0.0; width * height],
             band_hi: vec![0.0; width * height],
             render_buf: vec![0.0; width * height],
             staged: Vec::new(),
             last_t_ns: 0,
             primed: false,
+            seed,
             rng: Rng::seed_from_u64(seed),
         }
     }
@@ -71,14 +74,19 @@ impl DvsSim {
         self.band_hi[i] = ((l + self.threshold).exp() - EPS) as f32;
     }
 
-    /// Reset pixel state (e.g. between mission segments).
+    /// Reset the sensor to its power-on state (e.g. between mission
+    /// segments): pixel memories, bands, staged events, the render buffer
+    /// and the noise RNG all rewind, so a reset sensor replays the exact
+    /// event stream a freshly-constructed one would.
     pub fn reset(&mut self) {
         self.last_log.iter_mut().for_each(|v| *v = 0.0);
-        self.last_event_ns.iter_mut().for_each(|v| *v = 0);
         self.band_lo.iter_mut().for_each(|v| *v = 0.0);
         self.band_hi.iter_mut().for_each(|v| *v = 0.0);
+        self.render_buf.iter_mut().for_each(|v| *v = 0.0);
+        self.staged.clear();
         self.primed = false;
         self.last_t_ns = 0;
+        self.rng = Rng::seed_from_u64(self.seed);
     }
 
     /// Sample the scene at `t_ns` and emit events since the last sample.
@@ -87,9 +95,19 @@ impl DvsSim {
     /// emits a burst at power-on; we suppress it like the sensor's own
     /// initialization masking does).
     pub fn step(&mut self, scene: &Scene, t_ns: u64) -> EventWindow {
+        let mut win = EventWindow::new(self.width, self.height);
+        self.step_into(scene, t_ns, &mut win);
+        win
+    }
+
+    /// The allocation-free form of [`DvsSim::step`]: sample the scene at
+    /// `t_ns` and *append* the new events to `win`, which must share the
+    /// sensor's geometry. The mission pipeline reuses one window buffer
+    /// across every sample of an inference window (EXPERIMENTS.md §Perf).
+    pub fn step_into(&mut self, scene: &Scene, t_ns: u64, win: &mut EventWindow) {
+        debug_assert_eq!((win.width, win.height), (self.width, self.height));
         let mut img = std::mem::take(&mut self.render_buf);
         scene.render_into(self.width, self.height, t_ns as f64 * 1e-9, &mut img);
-        let mut win = EventWindow::new(self.width, self.height);
         if !self.primed {
             for i in 0..img.len() {
                 self.last_log[i] = ((img[i] as f64) + EPS).ln();
@@ -98,7 +116,7 @@ impl DvsSim {
             self.primed = true;
             self.last_t_ns = t_ns;
             self.render_buf = img;
-            return win;
+            return;
         }
         let dt = t_ns.saturating_sub(self.last_t_ns).max(1);
         let mut staged = std::mem::take(&mut self.staged);
@@ -142,7 +160,6 @@ impl DvsSim {
                 let signed = self.threshold * n_cross as f64;
                 dl = if pol == Polarity::On { signed } else { -signed };
                 self.last_log[i] += dl;
-                self.last_event_ns[i] = t_ns;
                 self.reband(i);
             }
         }
@@ -158,7 +175,6 @@ impl DvsSim {
         self.staged = staged;
         self.render_buf = img;
         self.last_t_ns = t_ns;
-        win
     }
 
     /// Convenience: run the sensor over [0, duration) at `sample_hz`,
@@ -250,5 +266,40 @@ mod tests {
             dvs.capture(&mut scene, 0.1, 200.0).events
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn reset_restores_power_on_state() {
+        let seq = |dvs: &mut DvsSim| {
+            let mut scene = Scene::new(SceneKind::Corridor { speed_per_s: 1.0, seed: 4 });
+            dvs.capture(&mut scene, 0.1, 300.0).events
+        };
+        let mut fresh = DvsSim::new(32, 32, 8);
+        fresh.noise_rate_hz = 50.0;
+        let want = seq(&mut fresh);
+        assert!(!want.is_empty());
+        // drive the sensor hard on a different scene, then reset: the
+        // replayed capture must match a fresh sensor event for event
+        let mut reused = DvsSim::new(32, 32, 8);
+        reused.noise_rate_hz = 50.0;
+        let mut other = Scene::new(SceneKind::RotatingBar { omega_rad_s: 9.0 });
+        reused.capture(&mut other, 0.05, 500.0);
+        reused.reset();
+        assert_eq!(seq(&mut reused), want);
+    }
+
+    #[test]
+    fn step_into_appends_across_samples() {
+        let mut a = DvsSim::new(32, 32, 6);
+        let mut b = DvsSim::new(32, 32, 6);
+        let scene = Scene::new(SceneKind::RotatingBar { omega_rad_s: 8.0 });
+        let mut acc = EventWindow::new(32, 32);
+        let mut want: Vec<Event> = Vec::new();
+        for k in 0..20u64 {
+            let t = k * 2_000_000;
+            a.step_into(&scene, t, &mut acc);
+            want.extend(b.step(&scene, t).events);
+        }
+        assert_eq!(acc.events, want);
     }
 }

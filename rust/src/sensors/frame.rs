@@ -29,11 +29,21 @@ impl FrameSensor {
 
     /// Capture the next frame in sequence; returns (t_ns, pixels in [0,1]).
     pub fn capture(&mut self, scene: &mut Scene) -> (u64, Vec<f32>) {
+        let t_ns = self.tick(scene);
+        let img = scene.render(self.width, self.height, t_ns as f64 * 1e-9);
+        (t_ns, img)
+    }
+
+    /// Advance to the next frame instant *without* rendering pixels:
+    /// the scene state still moves (obstacle re-rolls, ego-motion) exactly
+    /// as under [`FrameSensor::capture`], so analytical missions — whose
+    /// reports never read frame pixels — and trace capture can skip the
+    /// render entirely. Returns the frame timestamp (ns).
+    pub fn tick(&mut self, scene: &mut Scene) -> u64 {
         let t_ns = self.next_frame_t_ns();
         scene.advance(t_ns as f64 * 1e-9);
-        let img = scene.render(self.width, self.height, t_ns as f64 * 1e-9);
         self.frame_idx += 1;
-        (t_ns, img)
+        t_ns
     }
 
     /// Bytes per raw frame (8-bit luma) — DMA sizing for the CPI peripheral.

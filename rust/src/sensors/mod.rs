@@ -10,14 +10,22 @@
 //! The same generative models exist in `python/compile/data.py` so the
 //! accuracy experiments and the Rust end-to-end driver see statistically
 //! identical inputs.
+//!
+//! [`trace`] decouples stream generation from SoC evaluation: a
+//! [`SensorTrace`] captures a mission's full sensor input once (flat
+//! event buffer + frame records, keyed by [`TraceKey`]) and an
+//! [`EventSource`] lets the coordinator consume either live sensors or a
+//! shared replayed trace, bit-identically (DESIGN.md §9).
 
 pub mod dvs;
 pub mod frame;
 pub mod scene;
+pub mod trace;
 
 pub use dvs::DvsSim;
 pub use frame::FrameSensor;
 pub use scene::{Scene, SceneKind};
+pub use trace::{EventSource, SensorTrace, TraceKey};
 
 /// DVS132S geometry as integrated on the Kraken testbed (paper §III).
 pub const DVS_WIDTH: usize = 132;

@@ -191,47 +191,119 @@ impl Scene {
     /// Render into a caller-owned buffer (no allocation — the DVS samples
     /// at kHz rates and this is the simulator's hottest loop).
     ///
-    /// The corridor scene (the mission workload) has a specialized row-wise
-    /// loop: per row the heading line's center is constant, so only pixels
-    /// within the line's 3-sigma support pay an `exp`, and obstacle
-    /// membership is two range checks (EXPERIMENTS.md §Perf).
+    /// Every [`SceneKind`] has a specialized loop so the kind match and
+    /// all per-render / per-row invariants hoist out of the per-pixel
+    /// body, pinned pixel-identical to the reference [`Scene::intensity`]
+    /// by `specialized_render_matches_generic_path`:
+    ///
+    /// * **corridor** (the mission workload) — row-wise: the heading
+    ///   line's center is constant per row, so only pixels within the
+    ///   line's 3-sigma support pay an `exp`, and obstacle membership is
+    ///   two range checks;
+    /// * **bar** — `sin`/`cos` of the bar angle computed once per render
+    ///   instead of twice per pixel;
+    /// * **edge** — every row is identical: render row 0, memcpy the rest;
+    /// * **ring** — ring radius and band hoisted per render, `y*y` per row;
+    /// * **noise** — the row and time terms of the hash mix computed once
+    ///   per row / per render (EXPERIMENTS.md §Perf).
     pub fn render_into(&self, width: usize, height: usize, t_s: f64, img: &mut [f32]) {
         assert_eq!(img.len(), width * height);
         let inv_w = 1.0 / width as f64;
         let inv_h = 1.0 / height as f64;
-        if let SceneKind::Corridor { speed_per_s, .. } = self.kind {
-            let phase = (t_s * speed_per_s).fract();
-            let looming = phase > 0.4;
-            let scale = if looming { (phase - 0.4) / 0.6 } else { 0.0 };
-            let (ox, oy, s0) = self.obstacle;
-            let os = s0 * (0.3 + 1.2 * scale);
-            for yy in 0..height {
-                let y = (yy as f64 + 0.5) * inv_h - 0.5;
-                let center = self.steer * (y + 0.5 + 0.2 * phase);
-                let in_obst_row = looming && (y - oy).abs() < os;
-                let row = &mut img[yy * width..(yy + 1) * width];
-                for (xx, px) in row.iter_mut().enumerate() {
-                    let x = (xx as f64 + 0.5) * inv_w - 0.5;
-                    let d = (x - center).abs();
-                    let mut i = if d < 0.30 {
-                        0.15 + 0.75 * (-d * d / 0.01).exp()
-                    } else {
-                        0.15
-                    };
-                    if in_obst_row && (x - ox).abs() < os {
-                        i = 0.95;
+        match self.kind {
+            SceneKind::Corridor { speed_per_s, .. } => {
+                let phase = (t_s * speed_per_s).fract();
+                let looming = phase > 0.4;
+                let scale = if looming { (phase - 0.4) / 0.6 } else { 0.0 };
+                let (ox, oy, s0) = self.obstacle;
+                let os = s0 * (0.3 + 1.2 * scale);
+                for yy in 0..height {
+                    let y = (yy as f64 + 0.5) * inv_h - 0.5;
+                    let center = self.steer * (y + 0.5 + 0.2 * phase);
+                    let in_obst_row = looming && (y - oy).abs() < os;
+                    let row = &mut img[yy * width..(yy + 1) * width];
+                    for (xx, px) in row.iter_mut().enumerate() {
+                        let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                        let d = (x - center).abs();
+                        let mut i = if d < 0.30 {
+                            0.15 + 0.75 * (-d * d / 0.01).exp()
+                        } else {
+                            0.15
+                        };
+                        if in_obst_row && (x - ox).abs() < os {
+                            i = 0.95;
+                        }
+                        *px = i as f32;
                     }
-                    *px = i as f32;
                 }
             }
-            return;
-        }
-        for yy in 0..height {
-            let y = (yy as f64 + 0.5) * inv_h - 0.5;
-            let row = &mut img[yy * width..(yy + 1) * width];
-            for (xx, px) in row.iter_mut().enumerate() {
-                let x = (xx as f64 + 0.5) * inv_w - 0.5;
-                *px = self.intensity(x, y, t_s) as f32;
+            SceneKind::RotatingBar { omega_rad_s } => {
+                let ang = omega_rad_s * t_s;
+                let (sin_a, cos_a) = (ang.sin(), ang.cos());
+                for yy in 0..height {
+                    let y = (yy as f64 + 0.5) * inv_h - 0.5;
+                    let yc = y * cos_a;
+                    let y2 = y * y;
+                    let row = &mut img[yy * width..(yy + 1) * width];
+                    for (xx, px) in row.iter_mut().enumerate() {
+                        let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                        let d = (x * sin_a - yc).abs();
+                        let r2 = x * x + y2;
+                        // f64 intensity then cast, exactly like intensity()
+                        *px = (if d < 0.07 && r2 < 0.2 { 1.0f64 } else { 0.1 }) as f32;
+                    }
+                }
+            }
+            SceneKind::TranslatingEdge { vel_per_s } => {
+                if height == 0 {
+                    return;
+                }
+                let off = ((vel_per_s * t_s + 0.5).rem_euclid(1.0)) - 0.5;
+                for (xx, px) in img[..width].iter_mut().enumerate() {
+                    let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                    *px = (if x < off { 0.9f64 } else { 0.1 }) as f32;
+                }
+                for yy in 1..height {
+                    img.copy_within(0..width, yy * width);
+                }
+            }
+            SceneKind::ExpandingRing { rate_per_s } => {
+                let r0 = 0.05 + (rate_per_s * t_s).rem_euclid(0.4);
+                let r_in = r0 - 0.08;
+                for yy in 0..height {
+                    let y = (yy as f64 + 0.5) * inv_h - 0.5;
+                    let y2 = y * y;
+                    let row = &mut img[yy * width..(yy + 1) * width];
+                    for (xx, px) in row.iter_mut().enumerate() {
+                        let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                        let r = (x * x + y2).sqrt();
+                        *px = (if r < r0 && r > r_in { 1.0f64 } else { 0.1 }) as f32;
+                    }
+                }
+            }
+            SceneKind::Noise { density, .. } => {
+                let ti = (t_s * 1000.0) as u64;
+                let t_term = ti.wrapping_mul(0x94d049bb133111eb);
+                for yy in 0..height {
+                    let y = (yy as f64 + 0.5) * inv_h - 0.5;
+                    let yi = ((y + 0.5) * 4096.0) as u64;
+                    let y_term = yi.wrapping_mul(0xbf58476d1ce4e5b9);
+                    let row = &mut img[yy * width..(yy + 1) * width];
+                    for (xx, px) in row.iter_mut().enumerate() {
+                        let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                        let xi = ((x + 0.5) * 4096.0) as u64;
+                        let h = xi
+                            .wrapping_mul(0x9e3779b97f4a7c15)
+                            .wrapping_add(y_term)
+                            .wrapping_add(t_term);
+                        let h = (h ^ (h >> 31)).wrapping_mul(0xbf58476d1ce4e5b9);
+                        *px = (if ((h >> 40) as f64 / (1u64 << 24) as f64) < density {
+                            1.0f64
+                        } else {
+                            0.0
+                        }) as f32;
+                    }
+                }
             }
         }
     }
@@ -303,6 +375,40 @@ mod tests {
                         (want - got).abs() < 1e-6,
                         "t={t} ({xx},{yy}): {got} vs {want}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn specialized_render_matches_generic_path_for_every_kind() {
+        // each kind's hoisted row-wise renderer must be bit-identical to
+        // the reference per-pixel intensity() (the replay-identity
+        // contract of sensor traces rides on this)
+        let kinds = [
+            SceneKind::RotatingBar { omega_rad_s: 7.0 },
+            SceneKind::TranslatingEdge { vel_per_s: 0.4 },
+            SceneKind::ExpandingRing { rate_per_s: 0.6 },
+            SceneKind::Corridor { speed_per_s: 0.7, seed: 5 },
+            SceneKind::Noise { density: 0.12, seed: 3 },
+        ];
+        for kind in kinds {
+            let s = Scene::new(kind);
+            for &t in &[0.0, 0.05, 0.3, 0.55, 0.83, 1.4] {
+                let (w, h) = (66, 64);
+                let fast = s.render(w, h, t);
+                for yy in 0..h {
+                    for xx in 0..w {
+                        let y = (yy as f64 + 0.5) / h as f64 - 0.5;
+                        let x = (xx as f64 + 0.5) / w as f64 - 0.5;
+                        let want = s.intensity(x, y, t) as f32;
+                        let got = fast[yy * w + xx];
+                        assert_eq!(
+                            want.to_bits(),
+                            got.to_bits(),
+                            "{kind:?} t={t} ({xx},{yy}): {got} vs {want}"
+                        );
+                    }
                 }
             }
         }

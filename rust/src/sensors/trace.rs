@@ -1,0 +1,513 @@
+//! Sensor traces: capture a mission's full sensor input once, replay it
+//! everywhere.
+//!
+//! Profiling (`cargo bench --bench hotpath`) shows the mission loop is
+//! dominated by the sensor front end — the per-sample scene render plus
+//! the DVS pixel model at kHz rates. Yet for every grid/fleet cell that
+//! differs only in SoC-side axes (vdd, gating policy) the generated
+//! event/frame streams are *bit-identical*. The paper's own split —
+//! sensors produce streams, the SoC consumes them — and follow-on
+//! platforms that record event streams once and replay them against
+//! different processing configurations (ColibriUAV) both argue for
+//! decoupling stream generation from SoC evaluation. This module is that
+//! decoupling:
+//!
+//! * a [`TraceKey`] names everything the sensor front end depends on —
+//!   `(scene, seed, width x height, dvs_sample_hz, frame_fps, duration,
+//!   window_ms)` — and nothing it does not (vdd, gating, telemetry are
+//!   SoC-side). Two mission/stream configs with equal keys see
+//!   bit-identical sensor input;
+//! * a [`SensorTrace`] is the captured input: every inference window's
+//!   DVS event stream in **one flat buffer** with window offset indices
+//!   (no per-window `Vec` allocations) plus the frame timestamps and
+//!   ground-truth labels. Traces carry no frame *pixels*, so replay is
+//!   analytical-only — artifact-backed (functional) missions sense live;
+//! * an [`EventSource`] is what the mission/workload pipelines actually
+//!   hold: `Live` (scene + DVS + frame camera, sensing on demand) or
+//!   `Replay` (an `Arc<SensorTrace>` shared freely across cells and
+//!   worker threads). A replayed run is bit-identical to a live one —
+//!   `tests/integration_trace.rs` pins the whole report, snapshots
+//!   included, for every [`SceneKind`].
+//!
+//! Capture replicates the mission DES's sensor-visible event order
+//! exactly (at equal timestamps a window opens before a frame lands), so
+//! the scene's stochastic state — corridor obstacle re-rolls happen in
+//! `Scene::advance` — evolves identically under capture and live runs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::event::{Event, EventWindow};
+use crate::sensors::scene::{Scene, SceneKind};
+use crate::sensors::{DvsSim, FrameSensor, DVS_HEIGHT, DVS_WIDTH, FRAME_HEIGHT, FRAME_WIDTH};
+use crate::util::fnv1a;
+
+/// Everything the sensor front end of a mission/stream depends on. Two
+/// configs with equal keys (canonical-string equality: every float
+/// compared bit for bit via its shortest-roundtrip `Debug` form, the
+/// result-cache discipline) produce bit-identical sensor streams.
+#[derive(Debug, Clone)]
+pub struct TraceKey {
+    pub scene: SceneKind,
+    /// DVS noise seed (and the scene seed, where the scene carries one —
+    /// the mission seed discipline keeps them equal).
+    pub seed: u64,
+    /// DVS geometry.
+    pub width: usize,
+    pub height: usize,
+    /// DVS sampling rate inside a window (Hz).
+    pub dvs_sample_hz: f64,
+    pub frame_fps: f64,
+    pub duration_s: f64,
+    /// Inference-window length (ms): it shapes the per-window sample
+    /// instants, so it is part of the stream, not of the SoC.
+    pub window_ms: f64,
+}
+
+impl TraceKey {
+    /// The canonical string two keys are compared by (and hashed from).
+    pub fn canonical(&self) -> String {
+        format!(
+            "trace|{:?}|{}|{}x{}|hz={:?}|fps={:?}|dur={:?}|win={:?}",
+            self.scene,
+            self.seed,
+            self.width,
+            self.height,
+            self.dvs_sample_hz,
+            self.frame_fps,
+            self.duration_s,
+            self.window_ms
+        )
+    }
+
+    /// 64-bit FNV-1a of the canonical string (cache indexing).
+    pub fn fnv64(&self) -> u64 {
+        fnv1a(self.canonical().as_bytes())
+    }
+}
+
+/// One captured frame instant: its timestamp and the scene ground truth
+/// the analytical PULP path consumes. No pixels — see module docs.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameRecord {
+    pub t_ns: u64,
+    pub steer: f64,
+    pub collision: bool,
+}
+
+/// A captured sensor input: per-window DVS event streams in one flat
+/// buffer with window offsets, plus the frame records.
+#[derive(Debug, Clone)]
+pub struct SensorTrace {
+    pub key: TraceKey,
+    /// Frame-camera geometry (constant today, recorded for honesty).
+    pub frame_w: usize,
+    pub frame_h: usize,
+    /// All events of the whole mission, window-major, time-sorted.
+    events: Vec<Event>,
+    /// `offsets[w]..offsets[w + 1]` slices window `w` out of `events`.
+    offsets: Vec<usize>,
+    frames: Vec<FrameRecord>,
+}
+
+impl SensorTrace {
+    /// Run the sensor front end over the whole mission duration once,
+    /// recording every window's events and every frame's timestamp/truth.
+    /// The loop replicates the mission DES's sensor event order: windows
+    /// fire at `w * window_ns`, frames at the camera cadence, and at
+    /// equal timestamps the window opens first (the scheduler tie-break).
+    pub fn capture(key: &TraceKey) -> SensorTrace {
+        let window_ns = (key.window_ms * 1e6) as u64;
+        let n_windows = (key.duration_s * 1e9 / window_ns as f64) as u64;
+        let end_ns = n_windows * window_ns;
+
+        let mut dvs = DvsSim::new(key.width, key.height, key.seed);
+        let mut cam = FrameSensor::new(FRAME_WIDTH, FRAME_HEIGHT, key.frame_fps);
+        let mut scene = Scene::new(key.scene);
+        let mut win = EventWindow::new(key.width, key.height);
+        let mut events: Vec<Event> = Vec::new();
+        let mut offsets = Vec::with_capacity(n_windows as usize + 1);
+        offsets.push(0);
+        let mut frames: Vec<FrameRecord> = Vec::new();
+
+        fn grab_frame(cam: &mut FrameSensor, scene: &mut Scene, frames: &mut Vec<FrameRecord>) {
+            let t_ns = cam.tick(scene);
+            let (steer, collision) = scene.corridor_truth(t_ns as f64 * 1e-9);
+            frames.push(FrameRecord { t_ns, steer, collision });
+        }
+
+        // the first frame is scheduled unconditionally (mission run loop)
+        let mut next_frame = if n_windows > 0 { cam.next_frame_t_ns() } else { u64::MAX };
+        for w in 0..n_windows {
+            let t0 = w * window_ns;
+            while next_frame < t0 {
+                grab_frame(&mut cam, &mut scene, &mut frames);
+                let t = cam.next_frame_t_ns();
+                next_frame = if t < end_ns { t } else { u64::MAX };
+            }
+            win.events.clear();
+            let n_samples = ((window_ns as f64 * 1e-9) * key.dvs_sample_hz).max(1.0) as u64;
+            for k in 0..=n_samples {
+                let ts = t0 + k * window_ns / (n_samples + 1);
+                scene.advance(ts as f64 * 1e-9);
+                dvs.step_into(&scene, ts, &mut win);
+            }
+            events.extend_from_slice(&win.events);
+            offsets.push(events.len());
+        }
+        while next_frame < end_ns {
+            grab_frame(&mut cam, &mut scene, &mut frames);
+            let t = cam.next_frame_t_ns();
+            next_frame = if t < end_ns { t } else { u64::MAX };
+        }
+
+        SensorTrace {
+            key: key.clone(),
+            frame_w: FRAME_WIDTH,
+            frame_h: FRAME_HEIGHT,
+            events,
+            offsets,
+            frames,
+        }
+    }
+
+    /// Inference windows captured.
+    pub fn n_windows(&self) -> u64 {
+        (self.offsets.len() - 1) as u64
+    }
+
+    /// The event stream of window `w`.
+    pub fn window(&self, w: u64) -> &[Event] {
+        let w = w as usize;
+        &self.events[self.offsets[w]..self.offsets[w + 1]]
+    }
+
+    /// Total events across all windows.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Frame records, in capture order.
+    pub fn frames(&self) -> &[FrameRecord] {
+        &self.frames
+    }
+
+    /// Approximate resident size (bytes) — what the serve trace cache
+    /// reports so operators can size `--trace-cache`.
+    pub fn approx_bytes(&self) -> usize {
+        self.events.len() * std::mem::size_of::<Event>()
+            + self.offsets.len() * std::mem::size_of::<usize>()
+            + self.frames.len() * std::mem::size_of::<FrameRecord>()
+    }
+}
+
+/// Where a pipeline's sensor input comes from: a live simulated front end
+/// (boxed — it carries the whole pixel-array state) or a prerecorded
+/// trace shared via `Arc`.
+#[derive(Debug, Clone)]
+pub enum EventSource {
+    Live(Box<LiveSensors>),
+    Replay(TraceCursor),
+}
+
+/// The live front end: scene + DVS + frame camera, plus one reusable
+/// event-window staging buffer (no per-window allocation).
+#[derive(Debug, Clone)]
+pub struct LiveSensors {
+    dvs: DvsSim,
+    cam: FrameSensor,
+    scene: Scene,
+    win: EventWindow,
+}
+
+/// Replay position inside a shared trace.
+#[derive(Debug, Clone)]
+pub struct TraceCursor {
+    trace: Arc<SensorTrace>,
+    frame_idx: usize,
+}
+
+impl EventSource {
+    /// A live source at the standard testbed geometry (DVS132S + HM01B0).
+    pub fn live(seed: u64, frame_fps: f64, scene: SceneKind) -> EventSource {
+        EventSource::Live(Box::new(LiveSensors {
+            dvs: DvsSim::new(DVS_WIDTH, DVS_HEIGHT, seed),
+            cam: FrameSensor::new(FRAME_WIDTH, FRAME_HEIGHT, frame_fps),
+            scene: Scene::new(scene),
+            win: EventWindow::new(DVS_WIDTH, DVS_HEIGHT),
+        }))
+    }
+
+    /// A replay source over `trace`, validated against the key the
+    /// consuming mission/stream expects — a mismatched trace is a config
+    /// error, never a silently different stream.
+    pub fn replay_for(trace: Arc<SensorTrace>, want: &TraceKey) -> crate::Result<EventSource> {
+        anyhow::ensure!(
+            trace.key.canonical() == want.canonical(),
+            "sensor trace key mismatch:\n  trace:  {}\n  wanted: {}",
+            trace.key.canonical(),
+            want.canonical()
+        );
+        Ok(EventSource::Replay(TraceCursor { trace, frame_idx: 0 }))
+    }
+
+    pub fn is_replay(&self) -> bool {
+        matches!(self, EventSource::Replay(_))
+    }
+
+    /// DVS geometry (width, height).
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            EventSource::Live(l) => (l.dvs.width, l.dvs.height),
+            EventSource::Replay(r) => (r.trace.key.width, r.trace.key.height),
+        }
+    }
+
+    /// Frame-camera geometry (width, height).
+    pub fn frame_dims(&self) -> (usize, usize) {
+        match self {
+            EventSource::Live(l) => (l.cam.width, l.cam.height),
+            EventSource::Replay(r) => (r.trace.frame_w, r.trace.frame_h),
+        }
+    }
+
+    /// Bytes per raw frame (8-bit luma) — CPI DMA sizing.
+    pub fn frame_bytes(&self) -> usize {
+        let (w, h) = self.frame_dims();
+        w * h
+    }
+
+    /// Timestamp (ns) of the next frame. Replay reads the *recorded*
+    /// timestamps, so it stays bit-identical to capture even if the
+    /// camera's cadence model ever changes; past the last recorded frame
+    /// it reports `u64::MAX`, which the mission's `next < end_ns` guard
+    /// never schedules.
+    pub fn next_frame_t_ns(&self) -> u64 {
+        match self {
+            EventSource::Live(l) => l.cam.next_frame_t_ns(),
+            EventSource::Replay(r) => {
+                r.trace.frames.get(r.frame_idx).map_or(u64::MAX, |f| f.t_ns)
+            }
+        }
+    }
+
+    /// The DVS event stream of inference window `w` (`[t0, t0 +
+    /// window_ns)` sampled at `sample_hz`): live sources sense it, replay
+    /// sources hand back the captured slice without touching a pixel.
+    pub fn window_events(&mut self, w: u64, t0: u64, window_ns: u64, sample_hz: f64) -> &[Event] {
+        match self {
+            EventSource::Live(l) => l.sense_window(t0, window_ns, sample_hz),
+            EventSource::Replay(r) => r.trace.window(w),
+        }
+    }
+
+    /// Advance to the next frame: its timestamp, the rendered image when
+    /// `need_img` (live only — traces carry no pixels and must not be
+    /// paired with the functional runtime), and the scene ground truth
+    /// (steer, collision) at the frame instant.
+    pub fn capture_frame(&mut self, need_img: bool) -> (u64, Option<Vec<f32>>, (f64, bool)) {
+        match self {
+            EventSource::Live(l) => {
+                let (t_ns, img) = if need_img {
+                    let (t, img) = l.cam.capture(&mut l.scene);
+                    (t, Some(img))
+                } else {
+                    (l.cam.tick(&mut l.scene), None)
+                };
+                let truth = l.scene.corridor_truth(t_ns as f64 * 1e-9);
+                (t_ns, img, truth)
+            }
+            EventSource::Replay(r) => {
+                assert!(!need_img, "trace replay carries no frame pixels");
+                let f = r.trace.frames[r.frame_idx];
+                r.frame_idx += 1;
+                (f.t_ns, None, (f.steer, f.collision))
+            }
+        }
+    }
+}
+
+impl LiveSensors {
+    fn sense_window(&mut self, t0: u64, window_ns: u64, sample_hz: f64) -> &[Event] {
+        self.win.events.clear();
+        let n_samples = ((window_ns as f64 * 1e-9) * sample_hz).max(1.0) as u64;
+        for k in 0..=n_samples {
+            let ts = t0 + k * window_ns / (n_samples + 1);
+            self.scene.advance(ts as f64 * 1e-9);
+            self.dvs.step_into(&self.scene, ts, &mut self.win);
+        }
+        &self.win.events
+    }
+}
+
+/// Capture each *distinct* key once — in parallel over up to `threads`
+/// scoped threads — and hand every input position an `Arc` of its trace.
+/// Duplicate keys share one capture and one allocation.
+pub fn capture_all(keys: &[TraceKey], threads: usize) -> Vec<Arc<SensorTrace>> {
+    let mut slot_of: HashMap<String, usize> = HashMap::new();
+    let mut distinct: Vec<TraceKey> = Vec::new();
+    let mut slots: Vec<usize> = Vec::with_capacity(keys.len());
+    for k in keys {
+        let canon = k.canonical();
+        let next_slot = distinct.len();
+        let slot = *slot_of.entry(canon).or_insert_with(|| {
+            distinct.push(k.clone());
+            next_slot
+        });
+        slots.push(slot);
+    }
+    let threads = threads.clamp(1, distinct.len().max(1));
+    let next = AtomicUsize::new(0);
+    let captured: Vec<Mutex<Option<Arc<SensorTrace>>>> =
+        (0..distinct.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= distinct.len() {
+                    break;
+                }
+                *captured[i].lock().unwrap() = Some(Arc::new(SensorTrace::capture(&distinct[i])));
+            });
+        }
+    });
+    let captured: Vec<Arc<SensorTrace>> = captured
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("trace captured"))
+        .collect();
+    slots.into_iter().map(|s| Arc::clone(&captured[s])).collect()
+}
+
+/// The offline fleet/grid sharing policy: positions whose key repeats
+/// share one captured trace; unique keys (and `None` positions — e.g.
+/// artifact-backed configs) stay live, where capture-then-replay would
+/// only add memory for no sensing win.
+pub fn shared_traces(keys: &[Option<TraceKey>], threads: usize) -> Vec<Option<Arc<SensorTrace>>> {
+    let mut count: HashMap<String, usize> = HashMap::new();
+    for k in keys.iter().flatten() {
+        *count.entry(k.canonical()).or_insert(0) += 1;
+    }
+    let mut idx: Vec<usize> = Vec::new();
+    let mut repeated: Vec<TraceKey> = Vec::new();
+    for (i, k) in keys.iter().enumerate() {
+        if let Some(k) = k {
+            if count[&k.canonical()] > 1 {
+                idx.push(i);
+                repeated.push(k.clone());
+            }
+        }
+    }
+    let mut out: Vec<Option<Arc<SensorTrace>>> = vec![None; keys.len()];
+    for (i, t) in idx.into_iter().zip(capture_all(&repeated, threads)) {
+        out[i] = Some(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(seed: u64) -> TraceKey {
+        TraceKey {
+            scene: SceneKind::Corridor { speed_per_s: 0.5, seed },
+            seed,
+            width: DVS_WIDTH,
+            height: DVS_HEIGHT,
+            dvs_sample_hz: 300.0,
+            frame_fps: 30.0,
+            duration_s: 0.2,
+            window_ms: 10.0,
+        }
+    }
+
+    #[test]
+    fn capture_is_deterministic_and_windowed() {
+        let a = SensorTrace::capture(&key(3));
+        let b = SensorTrace::capture(&key(3));
+        assert_eq!(a.n_windows(), 20);
+        assert_eq!(a.len(), b.len());
+        for w in 0..a.n_windows() {
+            assert_eq!(a.window(w), b.window(w), "window {w}");
+        }
+        assert_eq!(a.frames().len(), b.frames().len());
+        // 0.2 s at 30 fps: frames 0..=5 fall inside [0, 0.2 s)
+        assert_eq!(a.frames().len(), 6);
+        assert!(a.approx_bytes() > 0);
+    }
+
+    #[test]
+    fn windows_concatenate_to_the_flat_buffer() {
+        let t = SensorTrace::capture(&key(5));
+        let total: usize = (0..t.n_windows()).map(|w| t.window(w).len()).sum();
+        assert_eq!(total, t.len());
+        assert!(!t.is_empty(), "corridor at 300 Hz must produce events");
+    }
+
+    #[test]
+    fn canonical_key_separates_sensor_axes_only() {
+        let base = key(1);
+        assert_eq!(base.canonical(), key(1).canonical());
+        assert_eq!(base.fnv64(), key(1).fnv64());
+        let mut hz = key(1);
+        hz.dvs_sample_hz += 1.0;
+        assert_ne!(base.canonical(), hz.canonical());
+        let mut dur = key(1);
+        dur.duration_s += 1e-9; // one ulp-scale change must change the key
+        assert_ne!(base.canonical(), dur.canonical());
+        assert_ne!(base.canonical(), key(2).canonical());
+    }
+
+    #[test]
+    fn replay_source_hands_back_captured_windows() {
+        let trace = Arc::new(SensorTrace::capture(&key(7)));
+        let mut src = EventSource::replay_for(Arc::clone(&trace), &key(7)).unwrap();
+        assert!(src.is_replay());
+        assert_eq!(src.dims(), (DVS_WIDTH, DVS_HEIGHT));
+        assert_eq!(src.frame_bytes(), FRAME_WIDTH * FRAME_HEIGHT);
+        let evs = src.window_events(2, 2 * 10_000_000, 10_000_000, 300.0);
+        assert_eq!(evs, trace.window(2));
+        // frames replay in order with the recorded truths
+        assert_eq!(src.next_frame_t_ns(), 0);
+        let (t0, img, _) = src.capture_frame(false);
+        assert_eq!(t0, trace.frames()[0].t_ns);
+        assert!(img.is_none());
+        assert_eq!(src.next_frame_t_ns(), (1f64 / 30.0 * 1e9) as u64);
+    }
+
+    #[test]
+    fn mismatched_replay_key_is_rejected() {
+        let trace = Arc::new(SensorTrace::capture(&key(7)));
+        assert!(EventSource::replay_for(trace, &key(8)).is_err());
+    }
+
+    #[test]
+    fn shared_traces_only_cover_repeated_keys() {
+        let keys = vec![Some(key(1)), Some(key(2)), Some(key(1)), None, Some(key(1))];
+        let out = shared_traces(&keys, 2);
+        assert!(out[0].is_some() && out[2].is_some() && out[4].is_some());
+        assert!(out[1].is_none(), "unique key stays live");
+        assert!(out[3].is_none(), "ineligible position stays live");
+        // repeated positions share the same allocation
+        assert!(Arc::ptr_eq(out[0].as_ref().unwrap(), out[2].as_ref().unwrap()));
+        assert!(Arc::ptr_eq(out[0].as_ref().unwrap(), out[4].as_ref().unwrap()));
+    }
+
+    #[test]
+    fn capture_all_dedups_across_threads() {
+        let keys = vec![key(1), key(2), key(1), key(2), key(1)];
+        let out = capture_all(&keys, 4);
+        assert_eq!(out.len(), 5);
+        assert!(Arc::ptr_eq(&out[0], &out[2]));
+        assert!(Arc::ptr_eq(&out[1], &out[3]));
+        assert!(!Arc::ptr_eq(&out[0], &out[1]));
+        // parallel capture matches serial capture
+        let serial = SensorTrace::capture(&key(2));
+        assert_eq!(out[1].len(), serial.len());
+    }
+}

@@ -19,11 +19,21 @@
 //! config with an `artifacts_dir` names external files whose contents can
 //! change between requests, so the server bypasses the cache for
 //! artifact-backed missions (see `Server::serve_cached`).
+//!
+//! Beside the result cache sits a [`TraceCache`]: the same LRU mechanics
+//! over captured [`crate::sensors::trace::SensorTrace`]s, keyed by the
+//! canonical sensor key, so requests that differ only in SoC-side axes
+//! (vdd, gating) reuse one sensor capture even when their result-cache
+//! keys differ (DESIGN.md §9).
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::config::SocConfig;
+use crate::sensors::trace::SensorTrace;
+
+pub use crate::util::fnv1a;
 
 /// Canonical cache key of a resolved request (see module docs). Generic
 /// over the resolved config type — mission and workload requests share one
@@ -33,35 +43,23 @@ pub fn canonical_key<C: std::fmt::Debug>(kind: &str, soc: &SocConfig, cfgs: &[C]
     format!("{kind}|{soc:?}|{cfgs:?}")
 }
 
-/// 64-bit FNV-1a.
-pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
-
-struct Entry {
-    key: String,
-    response: String,
-}
-
-/// LRU map from canonical key to serialized response. Capacity 0 disables
-/// caching entirely (every lookup is a miss).
-pub struct ResultCache {
+/// The shared LRU mechanics of [`ResultCache`] and [`TraceCache`]: a
+/// 64-bit-FNV-indexed map with full-key confirmation on lookup (a hash
+/// collision degrades to a miss, never a wrong answer) and
+/// least-recently-used eviction at a fixed capacity. Capacity 0 disables
+/// the cache entirely (every lookup is a miss).
+struct LruMap<V> {
     cap: usize,
-    map: HashMap<u64, Entry>,
+    map: HashMap<u64, (String, V)>,
     /// LRU order of hashes, front = coldest.
     order: VecDeque<u64>,
     hits: u64,
     misses: u64,
 }
 
-impl ResultCache {
-    pub fn new(cap: usize) -> ResultCache {
-        ResultCache {
+impl<V: Clone> LruMap<V> {
+    fn new(cap: usize) -> LruMap<V> {
+        LruMap {
             cap,
             map: HashMap::new(),
             order: VecDeque::new(),
@@ -70,11 +68,11 @@ impl ResultCache {
         }
     }
 
-    /// Look up the stored response for `key`, refreshing its LRU position.
-    pub fn get(&mut self, key: &str) -> Option<String> {
+    /// Look up the stored value for `key`, refreshing its LRU position.
+    fn get(&mut self, key: &str) -> Option<V> {
         let h = fnv1a(key.as_bytes());
-        let response = match self.map.get(&h) {
-            Some(e) if e.key == key => e.response.clone(),
+        let value = match self.map.get(&h) {
+            Some((k, v)) if k == key => v.clone(),
             _ => {
                 self.misses += 1;
                 return None;
@@ -82,18 +80,18 @@ impl ResultCache {
         };
         self.hits += 1;
         self.touch(h);
-        Some(response)
+        Some(value)
     }
 
-    /// Store a response, evicting the coldest entries beyond capacity.
-    /// A hash collision overwrites the colliding entry (correctness is
+    /// Store a value, evicting the coldest entries beyond capacity. A
+    /// hash collision overwrites the colliding entry (correctness is
     /// preserved by the full-key comparison in `get`).
-    pub fn insert(&mut self, key: String, response: String) {
+    fn insert(&mut self, key: String, value: V) {
         if self.cap == 0 {
             return;
         }
         let h = fnv1a(key.as_bytes());
-        if self.map.insert(h, Entry { key, response }).is_none() {
+        if self.map.insert(h, (key, value)).is_none() {
             self.order.push_back(h);
         } else {
             self.touch(h);
@@ -113,25 +111,101 @@ impl ResultCache {
         }
         self.order.push_back(h);
     }
+}
+
+/// LRU map from canonical key to serialized response. Capacity 0 disables
+/// caching entirely (every lookup is a miss).
+pub struct ResultCache {
+    inner: LruMap<String>,
+}
+
+impl ResultCache {
+    pub fn new(cap: usize) -> ResultCache {
+        ResultCache { inner: LruMap::new(cap) }
+    }
+
+    /// Look up the stored response for `key`, refreshing its LRU position.
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        self.inner.get(key)
+    }
+
+    /// Store a response, evicting the coldest entries beyond capacity.
+    pub fn insert(&mut self, key: String, response: String) {
+        self.inner.insert(key, response)
+    }
 
     pub fn hits(&self) -> u64 {
-        self.hits
+        self.inner.hits
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses
+        self.inner.misses
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.inner.map.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.inner.map.is_empty()
     }
 
     pub fn cap(&self) -> usize {
-        self.cap
+        self.inner.cap
+    }
+}
+
+/// The bounded sensor-trace cache beside the result cache: canonical
+/// [`crate::sensors::trace::TraceKey`] string → `Arc<SensorTrace>`.
+/// Where the result cache replays *response bytes* of configs seen
+/// before, this one replays *sensor input* across configs that differ in
+/// SoC-side axes only — a vdd/gating/policy sweep over one scene senses
+/// once. Entries are whole captures (potentially MBs — see
+/// `SensorTrace::approx_bytes`, surfaced in `stats`), so the default
+/// capacity is small and `--trace-cache 0` disables replay entirely.
+pub struct TraceCache {
+    inner: LruMap<Arc<SensorTrace>>,
+}
+
+impl TraceCache {
+    pub fn new(cap: usize) -> TraceCache {
+        TraceCache { inner: LruMap::new(cap) }
+    }
+
+    /// Look up the shared trace for a canonical key, refreshing its LRU
+    /// position.
+    pub fn get(&mut self, key: &str) -> Option<Arc<SensorTrace>> {
+        self.inner.get(key)
+    }
+
+    /// Store a captured trace, evicting the coldest beyond capacity.
+    pub fn insert(&mut self, key: String, trace: Arc<SensorTrace>) {
+        self.inner.insert(key, trace)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.inner.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.inner.misses
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.map.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.inner.cap
+    }
+
+    /// Approximate resident bytes across all cached traces.
+    pub fn bytes(&self) -> usize {
+        self.inner.map.values().map(|(_, t)| t.approx_bytes()).sum()
     }
 }
 
@@ -208,5 +282,36 @@ mod tests {
         c.insert("k".into(), "v2".into());
         assert_eq!(c.get("k").as_deref(), Some("v2"));
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn trace_cache_bounds_and_counts() {
+        use crate::sensors::scene::SceneKind;
+        use crate::sensors::trace::{SensorTrace, TraceKey};
+        let key = |seed| TraceKey {
+            scene: SceneKind::Corridor { speed_per_s: 0.5, seed },
+            seed,
+            width: 16,
+            height: 16,
+            dvs_sample_hz: 200.0,
+            frame_fps: 30.0,
+            duration_s: 0.05,
+            window_ms: 10.0,
+        };
+        let mut c = TraceCache::new(1);
+        assert!(c.get(&key(1).canonical()).is_none());
+        let t1 = Arc::new(SensorTrace::capture(&key(1)));
+        c.insert(key(1).canonical(), Arc::clone(&t1));
+        assert!(Arc::ptr_eq(&c.get(&key(1).canonical()).unwrap(), &t1));
+        assert!(c.bytes() > 0);
+        let t2 = Arc::new(SensorTrace::capture(&key(2)));
+        c.insert(key(2).canonical(), t2); // cap 1: evicts key(1)
+        assert!(c.get(&key(1).canonical()).is_none());
+        assert_eq!(c.len(), 1);
+        assert_eq!((c.hits(), c.misses()), (1, 2));
+        // capacity 0 disables trace caching
+        let mut off = TraceCache::new(0);
+        off.insert(key(1).canonical(), t1);
+        assert!(off.is_empty());
     }
 }

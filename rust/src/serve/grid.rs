@@ -17,7 +17,8 @@
 
 use crate::config::SocConfig;
 use crate::coordinator::fleet::{
-    run_configs, run_workload_configs, FleetConfig, FleetReport, WorkloadFleetReport,
+    run_configs_shared, run_workload_configs_shared, FleetConfig, FleetReport,
+    WorkloadFleetReport,
 };
 use crate::coordinator::pipeline::MissionConfig;
 use crate::coordinator::workload::WorkloadConfig;
@@ -278,6 +279,13 @@ impl GridReport {
 
 /// Run every cell of a grid through the fleet runner (scoped threads,
 /// offline path — the serve pool is the resident-process equivalent).
+///
+/// Cells are grouped by sensor key first: every distinct
+/// `(scene, seed, resolution, rates, duration, window)` captures its
+/// [`crate::sensors::trace::SensorTrace`] once and shares it across the
+/// vdd/gating/policy cells and worker threads that replay it — the
+/// sensor front end runs once per distinct stream instead of once per
+/// cell, with bit-identical cell reports (`tests/integration_trace.rs`).
 pub fn run_grid(grid: &GridConfig) -> crate::Result<GridReport> {
     anyhow::ensure!(
         grid.tenants.is_empty(),
@@ -285,7 +293,7 @@ pub fn run_grid(grid: &GridConfig) -> crate::Result<GridReport> {
     );
     let cells = grid.cells();
     let cfgs: Vec<MissionConfig> = cells.iter().map(|c| c.cfg.clone()).collect();
-    let fleet = run_configs(&grid.soc, &cfgs, grid.threads)?;
+    let fleet = run_configs_shared(&grid.soc, &cfgs, grid.threads)?;
     Ok(GridReport {
         cells: cells.into_iter().map(|c| c.label).collect(),
         fleet,
@@ -339,11 +347,13 @@ impl WorkloadGridReport {
 }
 
 /// Run every cell of a workload grid through the workload-fleet runner —
-/// the multi-tenant twin of [`run_grid`].
+/// the multi-tenant twin of [`run_grid`], with the same sensor-trace
+/// sharing applied per tenant stream (a stream key repeating across
+/// cells or tenants is captured once).
 pub fn run_workload_grid(grid: &GridConfig) -> crate::Result<WorkloadGridReport> {
     let cells = grid.workload_cells();
     let cfgs: Vec<WorkloadConfig> = cells.iter().map(|c| c.cfg.clone()).collect();
-    let fleet = run_workload_configs(&grid.soc, &cfgs, grid.threads)?;
+    let fleet = run_workload_configs_shared(&grid.soc, &cfgs, grid.threads)?;
     Ok(WorkloadGridReport {
         cells: cells.into_iter().map(|c| c.label).collect(),
         fleet,
@@ -353,6 +363,7 @@ pub fn run_workload_grid(grid: &GridConfig) -> crate::Result<WorkloadGridReport>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::fleet::run_configs;
 
     fn base_grid() -> GridConfig {
         GridConfig::new(

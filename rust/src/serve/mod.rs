@@ -14,7 +14,10 @@
 //! * [`cache`] — a deterministic result cache keyed by a canonical hash of
 //!   the resolved configs (`MissionConfig`s or `WorkloadConfig`s) +
 //!   `SocConfig`; because simulations are bit-reproducible, a hit replays
-//!   the exact response bytes;
+//!   the exact response bytes. Beside it sits a bounded sensor-trace
+//!   cache ([`cache::TraceCache`]): requests that differ only in SoC-side
+//!   axes (vdd, gating) reuse one captured sensor stream
+//!   (`crate::sensors::trace`), with hit counts in `stats`;
 //! * [`grid`] — config grids (the cross-product generalization of
 //!   `FleetConfig`, including a `tenants` axis) so one request can shard a
 //!   whole parameter sweep across the pool and get a single aggregated
@@ -40,19 +43,25 @@ use crate::config::SocConfig;
 use crate::coordinator::fleet::{FleetReport, WorkloadFleetReport};
 use crate::coordinator::pipeline::MissionConfig;
 use crate::coordinator::workload::WorkloadConfig;
+use crate::sensors::trace::{capture_all, SensorTrace, TraceKey};
 use crate::util::json::Value;
 
-use cache::ResultCache;
+use cache::{ResultCache, TraceCache};
 use grid::{GridConfig, GridReport, WorkloadGridReport};
 use pool::WorkerPool;
 use protocol::Request;
 
-/// The resident mission server: worker pool + result cache + counters.
-/// One instance serves any number of stdio/TCP request streams.
+/// The resident mission server: worker pool + result cache + sensor-trace
+/// cache + counters. One instance serves any number of stdio/TCP request
+/// streams.
 pub struct Server {
     soc: SocConfig,
     pool: WorkerPool,
     cache: Mutex<ResultCache>,
+    /// Bounded cache of captured sensor traces: requests that differ only
+    /// in SoC-side axes (vdd, gating) reuse one sensor capture even when
+    /// their result-cache keys differ.
+    traces: Mutex<TraceCache>,
     start: std::time::Instant,
     requests: AtomicU64,
     errors: AtomicU64,
@@ -68,18 +77,21 @@ pub struct Server {
 
 impl Server {
     /// Build a server over `workers` resident threads, a `queue_cap`-slot
-    /// request queue and a `cache_cap`-entry result cache.
+    /// request queue, a `cache_cap`-entry result cache and a
+    /// `trace_cap`-entry sensor-trace cache (0 disables trace replay).
     pub fn new(
         soc: SocConfig,
         workers: usize,
         queue_cap: usize,
         cache_cap: usize,
+        trace_cap: usize,
     ) -> crate::Result<Server> {
         soc.validate()?;
         Ok(Server {
             soc,
             pool: WorkerPool::new(workers, queue_cap),
             cache: Mutex::new(ResultCache::new(cache_cap)),
+            traces: Mutex::new(TraceCache::new(trace_cap)),
             start: std::time::Instant::now(),
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
@@ -176,6 +188,48 @@ impl Server {
         Ok(resp)
     }
 
+    /// Resolve each position's sensor-trace key against the bounded trace
+    /// cache: hits replay the cached capture, misses are captured once per
+    /// distinct key (in parallel, outside the lock) and cached for later
+    /// requests. `None` positions (artifact-backed configs) sense live,
+    /// as does everything when the cache capacity is 0.
+    ///
+    /// Concurrent connections missing on the same key race benignly: each
+    /// captures its own (identical) trace and the last insert wins — no
+    /// in-flight dedup, because captures are deterministic and the race
+    /// costs only duplicated work, never a wrong stream.
+    fn resolve_traces(&self, keys: Vec<Option<TraceKey>>) -> Vec<Option<Arc<SensorTrace>>> {
+        let mut out: Vec<Option<Arc<SensorTrace>>> = vec![None; keys.len()];
+        if self.traces.lock().unwrap().cap() == 0 {
+            return out;
+        }
+        let mut miss_idx: Vec<usize> = Vec::new();
+        let mut miss_keys: Vec<TraceKey> = Vec::new();
+        {
+            let mut tc = self.traces.lock().unwrap();
+            for (i, k) in keys.iter().enumerate() {
+                if let Some(k) = k {
+                    match tc.get(&k.canonical()) {
+                        Some(t) => out[i] = Some(t),
+                        None => {
+                            miss_idx.push(i);
+                            miss_keys.push(k.clone());
+                        }
+                    }
+                }
+            }
+        }
+        if !miss_keys.is_empty() {
+            let captured = capture_all(&miss_keys, self.pool.workers());
+            let mut tc = self.traces.lock().unwrap();
+            for ((i, k), t) in miss_idx.into_iter().zip(miss_keys.iter()).zip(captured) {
+                tc.insert(k.canonical(), Arc::clone(&t));
+                out[i] = Some(t);
+            }
+        }
+        out
+    }
+
     /// The mission request path: canonical key -> replay stored bytes,
     /// else run the batch on the pool and store the response verbatim.
     /// Artifact-backed missions are never cached: the config only names the
@@ -190,9 +244,17 @@ impl Server {
         let cacheable = cfgs.iter().all(|c| c.artifacts_dir.is_none());
         let key = cache::canonical_key(kind, &self.soc, &cfgs);
         self.with_cache(cacheable, key, || {
+            // reject batches that can never be admitted *before* paying
+            // for sensor capture — backpressure must bound server work
+            self.pool
+                .check_batch_fits(cfgs.len())
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let traces = self.resolve_traces(
+                cfgs.iter().map(MissionConfig::shareable_trace_key).collect(),
+            );
             let (reports, wall_s) = self
                 .pool
-                .run_configs(&self.soc, &cfgs)
+                .run_configs_traced(&self.soc, &cfgs, traces)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             let report = match (kind, labels) {
                 ("run", _) => reports
@@ -224,9 +286,19 @@ impl Server {
         let cacheable = cfgs.iter().all(|c| c.artifacts_dir.is_none());
         let key = cache::canonical_key(kind, &self.soc, &cfgs);
         self.with_cache(cacheable, key, || {
+            self.pool
+                .check_batch_fits(cfgs.len())
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let keys: Vec<Option<TraceKey>> =
+                cfgs.iter().flat_map(WorkloadConfig::stream_trace_keys).collect();
+            let mut flat = self.resolve_traces(keys).into_iter();
+            let traces: Vec<Vec<Option<Arc<SensorTrace>>>> = cfgs
+                .iter()
+                .map(|c| c.streams.iter().map(|_| flat.next().expect("slot")).collect())
+                .collect();
             let (reports, wall_s) = self
                 .pool
-                .run_workloads(&self.soc, &cfgs)
+                .run_workloads_traced(&self.soc, &cfgs, traces)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             let report = match (kind, labels) {
                 ("workload", _) => reports
@@ -288,6 +360,10 @@ impl Server {
             let c = self.cache.lock().unwrap();
             (c.hits(), c.misses(), c.len(), c.cap())
         };
+        let (t_hits, t_misses, t_entries, t_cap, t_bytes) = {
+            let t = self.traces.lock().unwrap();
+            (t.hits(), t.misses(), t.len(), t.cap(), t.bytes())
+        };
         let worker_jobs: Vec<Value> = self
             .pool
             .worker_jobs()
@@ -317,6 +393,16 @@ impl Server {
                     ("cap", Value::Num(cap as f64)),
                 ]),
             ),
+            (
+                "trace_cache",
+                Value::obj(vec![
+                    ("hits", Value::Num(t_hits as f64)),
+                    ("misses", Value::Num(t_misses as f64)),
+                    ("entries", Value::Num(t_entries as f64)),
+                    ("cap", Value::Num(t_cap as f64)),
+                    ("bytes", Value::Num(t_bytes as f64)),
+                ]),
+            ),
         ])
     }
 
@@ -326,10 +412,11 @@ impl Server {
     /// and responses.
     pub fn serve_stdio(&self) -> crate::Result<()> {
         eprintln!(
-            "kraken serve: stdio, {} workers, queue {}, cache {}",
+            "kraken serve: stdio, {} workers, queue {}, cache {}, trace cache {}",
             self.pool.workers(),
             self.pool.queue_cap(),
-            self.cache.lock().unwrap().cap()
+            self.cache.lock().unwrap().cap(),
+            self.traces.lock().unwrap().cap()
         );
         let stdin = std::io::stdin();
         let stdout = std::io::stdout();
@@ -434,7 +521,7 @@ mod tests {
     use crate::util::json::parse;
 
     fn server() -> Server {
-        Server::new(SocConfig::kraken(), 2, 16, 8).unwrap()
+        Server::new(SocConfig::kraken(), 2, 16, 8, 8).unwrap()
     }
 
     const RUN: &str = r#"{"kind":"run","duration_s":0.05,"dvs_sample_hz":300.0,"seed":3}"#;
@@ -480,6 +567,39 @@ mod tests {
         // byte-identical cache replay, like every other cacheable kind
         let b = s.handle_line(line).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn trace_cache_reuses_sensor_capture_across_soc_axes() {
+        let s = server();
+        // same sensor key, different vdd: distinct result-cache keys but
+        // one shared sensor capture
+        let lo = r#"{"kind":"run","duration_s":0.05,"dvs_sample_hz":300.0,"seed":6,"vdd":0.6}"#;
+        let hi = r#"{"kind":"run","duration_s":0.05,"dvs_sample_hz":300.0,"seed":6,"vdd":0.8}"#;
+        let a = parse(&s.handle_line(lo).unwrap()).unwrap();
+        assert_eq!(a.get("ok").and_then(Value::as_bool), Some(true));
+        let b = parse(&s.handle_line(hi).unwrap()).unwrap();
+        assert_eq!(b.get("ok").and_then(Value::as_bool), Some(true));
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        let tc = stats.get("trace_cache").unwrap();
+        assert_eq!(tc.get("hits").and_then(Value::as_u64), Some(1));
+        assert_eq!(tc.get("misses").and_then(Value::as_u64), Some(1));
+        assert_eq!(tc.get("entries").and_then(Value::as_u64), Some(1));
+        assert!(tc.get("bytes").and_then(Value::as_f64).unwrap() > 0.0);
+        // the result cache saw two distinct keys
+        let rc = stats.get("cache").unwrap();
+        assert_eq!(rc.get("misses").and_then(Value::as_u64), Some(2));
+    }
+
+    #[test]
+    fn trace_cap_zero_disables_replay_but_not_serving() {
+        let s = Server::new(SocConfig::kraken(), 1, 8, 8, 0).unwrap();
+        let v = parse(&s.handle_line(RUN).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        let tc = stats.get("trace_cache").unwrap();
+        assert_eq!(tc.get("entries").and_then(Value::as_u64), Some(0));
+        assert_eq!(tc.get("cap").and_then(Value::as_u64), Some(0));
     }
 
     #[test]
@@ -543,7 +663,7 @@ mod tests {
     #[test]
     fn oversized_grid_is_rejected_by_backpressure() {
         // queue of 2 cannot take a 4-cell grid
-        let s = Server::new(SocConfig::kraken(), 1, 2, 8).unwrap();
+        let s = Server::new(SocConfig::kraken(), 1, 2, 8, 8).unwrap();
         let line = r#"{"kind":"grid","duration_s":0.05,"dvs_sample_hz":300.0,
                        "seed":[1,2],"vdd":[0.6,0.8]}"#
             .replace('\n', " ");

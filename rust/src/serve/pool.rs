@@ -32,6 +32,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::config::SocConfig;
 use crate::coordinator::pipeline::{Mission, MissionConfig, MissionReport};
 use crate::coordinator::workload::{Workload, WorkloadConfig, WorkloadReport};
+use crate::sensors::trace::SensorTrace;
 
 /// Why the pool could not serve a batch.
 #[derive(Debug)]
@@ -62,10 +63,12 @@ impl std::fmt::Display for PoolError {
 impl std::error::Error for PoolError {}
 
 /// One unit of queued work: a single-tenant mission or a multi-tenant
-/// workload, each an independent simulation on its own SoC.
+/// workload, each an independent simulation on its own SoC, optionally
+/// replaying shared sensor traces (`Arc`-shared across workers — see
+/// `crate::sensors::trace`).
 enum Work {
-    Mission(MissionConfig),
-    Workload(WorkloadConfig),
+    Mission(MissionConfig, Option<Arc<SensorTrace>>),
+    Workload(WorkloadConfig, Vec<Option<Arc<SensorTrace>>>),
 }
 
 /// The report a unit of work produced (mirrors [`Work`]).
@@ -217,6 +220,27 @@ impl WorkerPool {
         self.shared.queue.lock().unwrap().shutdown
     }
 
+    /// Cheap pre-admission check: a batch larger than the whole queue can
+    /// never be admitted, and a shut-down pool admits nothing. The server
+    /// consults this *before* per-batch preparation work (sensor-trace
+    /// capture) so reject-when-full backpressure bounds server work, not
+    /// just queue depth. A batch that passes can still race a transiently
+    /// full queue and be rejected at submit time.
+    pub fn check_batch_fits(&self, asked: usize) -> Result<(), PoolError> {
+        let q = self.shared.queue.lock().unwrap();
+        if q.shutdown {
+            return Err(PoolError::ShutDown);
+        }
+        if asked > self.queue_cap {
+            return Err(PoolError::Busy {
+                asked,
+                free: self.queue_cap - q.jobs.len(),
+                cap: self.queue_cap,
+            });
+        }
+        Ok(())
+    }
+
     /// Graceful stop: stop admitting work, let the workers drain every
     /// queued job, and join them. Idempotent; later submissions fail with
     /// [`PoolError::ShutDown`].
@@ -238,7 +262,24 @@ impl WorkerPool {
         soc: &SocConfig,
         cfgs: &[MissionConfig],
     ) -> Result<(Vec<MissionReport>, f64), PoolError> {
-        let work = cfgs.iter().map(|c| Work::Mission(c.clone())).collect();
+        self.run_configs_traced(soc, cfgs, vec![None; cfgs.len()])
+    }
+
+    /// [`WorkerPool::run_configs`] with an explicit per-config sensor
+    /// trace: `Some` positions replay the shared capture, `None` sense
+    /// live. Reports are bit-identical either way.
+    pub fn run_configs_traced(
+        &self,
+        soc: &SocConfig,
+        cfgs: &[MissionConfig],
+        traces: Vec<Option<Arc<SensorTrace>>>,
+    ) -> Result<(Vec<MissionReport>, f64), PoolError> {
+        assert_eq!(cfgs.len(), traces.len(), "one trace slot per config");
+        let work = cfgs
+            .iter()
+            .zip(traces)
+            .map(|(c, t)| Work::Mission(c.clone(), t))
+            .collect();
         let (outputs, wall) = self.run_batch(soc, work)?;
         let reports = outputs
             .into_iter()
@@ -258,7 +299,23 @@ impl WorkerPool {
         soc: &SocConfig,
         cfgs: &[WorkloadConfig],
     ) -> Result<(Vec<WorkloadReport>, f64), PoolError> {
-        let work = cfgs.iter().map(|c| Work::Workload(c.clone())).collect();
+        self.run_workloads_traced(soc, cfgs, cfgs.iter().map(|_| Vec::new()).collect())
+    }
+
+    /// [`WorkerPool::run_workloads`] with explicit per-workload,
+    /// per-stream sensor traces (an empty inner vector senses live).
+    pub fn run_workloads_traced(
+        &self,
+        soc: &SocConfig,
+        cfgs: &[WorkloadConfig],
+        traces: Vec<Vec<Option<Arc<SensorTrace>>>>,
+    ) -> Result<(Vec<WorkloadReport>, f64), PoolError> {
+        assert_eq!(cfgs.len(), traces.len(), "one trace vector per config");
+        let work = cfgs
+            .iter()
+            .zip(traces)
+            .map(|(c, t)| Work::Workload(c.clone(), t))
+            .collect();
         let (outputs, wall) = self.run_batch(soc, work)?;
         let reports = outputs
             .into_iter()
@@ -345,11 +402,11 @@ fn worker_loop(shared: &Shared, id: usize) {
         // batch waiting forever: catch it and fail the slot instead.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             match job.work {
-                Work::Mission(cfg) => Mission::new(job.soc, cfg)
+                Work::Mission(cfg, trace) => Mission::with_trace(job.soc, cfg, trace)
                     .and_then(|mut m| m.run())
                     .map(WorkOutput::Mission)
                     .map_err(|e| format!("{e:#}")),
-                Work::Workload(cfg) => Workload::new(job.soc, cfg)
+                Work::Workload(cfg, traces) => Workload::with_traces(job.soc, cfg, traces)
                     .and_then(|mut w| w.run())
                     .map(|r| WorkOutput::Workload(Box::new(r)))
                     .map_err(|e| format!("{e:#}")),
@@ -448,6 +505,21 @@ mod tests {
         // nothing was enqueued: a fitting batch still succeeds afterwards
         let (reports, _) = pool.run_configs(&soc, &cfgs[..2]).unwrap();
         assert_eq!(reports.len(), 2);
+    }
+
+    #[test]
+    fn check_batch_fits_pre_screens_capacity_and_shutdown() {
+        let pool = WorkerPool::new(1, 2);
+        assert!(pool.check_batch_fits(2).is_ok());
+        match pool.check_batch_fits(3) {
+            Err(PoolError::Busy { asked, cap, .. }) => assert_eq!((asked, cap), (3, 2)),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        pool.shutdown();
+        match pool.check_batch_fits(1) {
+            Err(PoolError::ShutDown) => {}
+            other => panic!("expected ShutDown, got {other:?}"),
+        }
     }
 
     #[test]

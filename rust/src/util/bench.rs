@@ -5,8 +5,16 @@
 //! the *simulated*-time results the paper cares about come from the models
 //! themselves; this harness measures the simulator's own hot paths for the
 //! §Perf optimization pass.
+//!
+//! [`BenchLog`] adds a machine-readable spine: a bench target built over
+//! it (`cargo bench --bench hotpath -- --json`) writes
+//! `BENCH_<name>.json` with per-section ns/op, so the perf trajectory is
+//! tracked across PRs (CI uploads the file as an artifact —
+//! EXPERIMENTS.md §Perf).
 
 use std::time::Instant;
+
+use crate::util::json::Value;
 
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
@@ -28,6 +36,28 @@ impl BenchResult {
             fmt_ns(self.mean_ns),
             fmt_ns(self.p95_ns)
         )
+    }
+
+    /// A single-point measurement (e.g. one sweep's wall time) in result
+    /// form, so point metrics and timed loops share the JSON schema.
+    pub fn point(name: &str, ns: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            median_ns: ns,
+            mean_ns: ns,
+            p95_ns: ns,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("iters", Value::Num(self.iters as f64)),
+            ("median_ns", Value::Num(self.median_ns)),
+            ("mean_ns", Value::Num(self.mean_ns)),
+            ("p95_ns", Value::Num(self.p95_ns)),
+        ])
     }
 }
 
@@ -93,6 +123,87 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// A bench run's structured record: sections of [`BenchResult`]s,
+/// optionally written to `BENCH_<name>.json` when the target was invoked
+/// with `--json` (`cargo bench --bench <name> -- --json`).
+pub struct BenchLog {
+    name: String,
+    json: bool,
+    sections: Vec<(String, Vec<BenchResult>)>,
+}
+
+impl BenchLog {
+    /// A log for bench target `name`; JSON output is enabled when the
+    /// process arguments contain `--json`.
+    pub fn from_env(name: &str) -> BenchLog {
+        BenchLog {
+            name: name.to_string(),
+            json: std::env::args().any(|a| a == "--json"),
+            sections: Vec::new(),
+        }
+    }
+
+    /// Print a section header and open a new result group.
+    pub fn section(&mut self, title: &str) {
+        section(title);
+        self.sections.push((title.to_string(), Vec::new()));
+    }
+
+    /// Run [`bench`] and record the result under the current section.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        let r = bench_cfg(name, 20, 0.25, &mut f);
+        self.push(r.clone());
+        r
+    }
+
+    /// Record a single-point measurement (ns) under the current section.
+    pub fn note(&mut self, name: &str, ns: f64) {
+        self.push(BenchResult::point(name, ns));
+    }
+
+    fn push(&mut self, r: BenchResult) {
+        if self.sections.is_empty() {
+            self.sections.push((String::new(), Vec::new()));
+        }
+        self.sections.last_mut().unwrap().1.push(r);
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("bench", Value::Str(self.name.clone())),
+            (
+                "sections",
+                Value::Arr(
+                    self.sections
+                        .iter()
+                        .map(|(title, results)| {
+                            Value::obj(vec![
+                                ("title", Value::Str(title.clone())),
+                                (
+                                    "results",
+                                    Value::Arr(results.iter().map(|r| r.to_json()).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// When `--json` was passed, write `BENCH_<name>.json` (pretty JSON)
+    /// into the working directory and return the path.
+    pub fn finish(&self) -> std::io::Result<Option<String>> {
+        if !self.json {
+            return Ok(None);
+        }
+        let path = format!("BENCH_{}.json", self.name);
+        std::fs::write(&path, self.to_json().pretty())?;
+        println!("\nwrote {path}");
+        Ok(Some(path))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +228,35 @@ mod tests {
         assert_eq!(fmt_ns(1500.0), "1.500 us");
         assert_eq!(fmt_ns(2.5e6), "2.500 ms");
         assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn bench_log_collects_sections_into_json() {
+        let mut log = BenchLog {
+            name: "unit".into(),
+            json: false,
+            sections: Vec::new(),
+        };
+        log.section("alpha");
+        log.note("point metric", 1234.5);
+        log.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        let doc = log.to_json();
+        assert_eq!(doc.get("bench").and_then(|v| v.as_str()), Some("unit"));
+        let sections = doc.get("sections").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(sections.len(), 1);
+        let results = sections[0].get("results").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].get("median_ns").and_then(|v| v.as_f64()),
+            Some(1234.5)
+        );
+        // json=false: finish writes nothing
+        assert_eq!(log.finish().unwrap(), None);
     }
 }

@@ -16,3 +16,14 @@ pub mod rng;
 
 pub use json::Value;
 pub use rng::Rng;
+
+/// 64-bit FNV-1a — the canonical-key hash shared by the serve result
+/// cache, the sensor-trace cache and the trace keys themselves.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}

@@ -100,7 +100,7 @@ fn grid_request_is_bit_identical_to_offline_fleet_regardless_of_workers() {
     assert_eq!(offline.reports.len(), 4);
 
     for workers in [1, 3] {
-        let server = Server::new(SocConfig::kraken(), workers, 16, 4).unwrap();
+        let server = Server::new(SocConfig::kraken(), workers, 16, 4, 8).unwrap();
         let report = served_report(&server, GRID_LINE);
         let cells = report.get("cells").and_then(Value::as_arr).expect("cells");
         assert_eq!(cells.len(), 4);
@@ -123,7 +123,7 @@ fn grid_request_is_bit_identical_to_offline_fleet_regardless_of_workers() {
 
 #[test]
 fn run_request_matches_serial_mission_bitwise() {
-    let server = Server::new(SocConfig::kraken(), 2, 8, 4).unwrap();
+    let server = Server::new(SocConfig::kraken(), 2, 8, 4, 8).unwrap();
     let report = served_report(
         &server,
         r#"{"kind":"run","duration_s":0.1,"dvs_sample_hz":300.0,"seed":3}"#,
@@ -135,7 +135,7 @@ fn run_request_matches_serial_mission_bitwise() {
 
 #[test]
 fn fleet_request_matches_offline_run_fleet_bitwise() {
-    let server = Server::new(SocConfig::kraken(), 2, 8, 4).unwrap();
+    let server = Server::new(SocConfig::kraken(), 2, 8, 4, 8).unwrap();
     let report = served_report(
         &server,
         r#"{"kind":"fleet","missions":3,"seed":50,"duration_s":0.1,"dvs_sample_hz":300.0}"#,
@@ -153,7 +153,7 @@ fn fleet_request_matches_offline_run_fleet_bitwise() {
 
 #[test]
 fn repeated_grid_request_replays_cached_bytes() {
-    let server = Server::new(SocConfig::kraken(), 2, 16, 4).unwrap();
+    let server = Server::new(SocConfig::kraken(), 2, 16, 4, 8).unwrap();
     let first = server.handle_line(GRID_LINE).unwrap();
     let second = server.handle_line(GRID_LINE).unwrap();
     assert_eq!(first, second, "cache hit must replay byte-identical JSON");
@@ -169,7 +169,7 @@ fn repeated_grid_request_replays_cached_bytes() {
 
 #[test]
 fn stats_and_errors_share_the_protocol_envelope() {
-    let server = Server::new(SocConfig::kraken(), 1, 4, 4).unwrap();
+    let server = Server::new(SocConfig::kraken(), 1, 4, 4, 8).unwrap();
     let err = parse(&server.handle_line(r#"{"kind":"grid","vdd":"high"}"#).unwrap()).unwrap();
     assert_eq!(err.get("ok").and_then(Value::as_bool), Some(false));
     let stats = parse(&server.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
@@ -189,7 +189,7 @@ fn workload_request_is_bit_identical_to_offline_workload_regardless_of_workers()
         w.run().unwrap()
     };
     for workers in [1, 3] {
-        let server = Server::new(SocConfig::kraken(), workers, 8, 4).unwrap();
+        let server = Server::new(SocConfig::kraken(), workers, 8, 4, 8).unwrap();
         let report = served_report(&server, WORKLOAD_LINE);
         assert_bits_eq(
             &report,
@@ -202,7 +202,7 @@ fn workload_request_is_bit_identical_to_offline_workload_regardless_of_workers()
 
 #[test]
 fn shutdown_request_drains_queue_and_stops_the_server() {
-    let server = Server::new(SocConfig::kraken(), 2, 8, 4).unwrap();
+    let server = Server::new(SocConfig::kraken(), 2, 8, 4, 8).unwrap();
     // work before shutdown is fully served
     let run = r#"{"kind":"run","duration_s":0.1,"dvs_sample_hz":300.0,"seed":2}"#;
     assert!(server.handle_line(run).unwrap().contains("\"ok\":true"));

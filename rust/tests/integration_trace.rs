@@ -1,0 +1,244 @@
+//! Sensor-trace acceptance contract (DESIGN.md §9):
+//!
+//! * **Replay identity** — a mission/workload replaying a captured
+//!   [`SensorTrace`] is bit-identical to the same config sensing live:
+//!   every counter, every energy/power float (compared through the
+//!   shortest-roundtrip `Debug` rendering of the whole report, wall time
+//!   scrubbed), every telemetry snapshot — for every [`SceneKind`].
+//! * **Sharing** — a grid whose cells differ only in SoC-side axes
+//!   (vdd, gating) runs over one shared capture with reports and
+//!   `GridReport` JSON identical to per-cell live sensing, on any thread
+//!   count.
+//! * **Serving** — the serve trace cache reuses captures across requests
+//!   and reports hit counts in `stats`.
+
+use std::sync::Arc;
+
+use kraken::config::SocConfig;
+use kraken::coordinator::{
+    run_configs, run_workload_configs, Mission, MissionConfig, MissionReport, Workload,
+    WorkloadConfig, WorkloadReport,
+};
+use kraken::sensors::scene::SceneKind;
+use kraken::sensors::trace::SensorTrace;
+use kraken::serve::grid::{run_grid, run_workload_grid, GridConfig, GridReport};
+use kraken::serve::Server;
+use kraken::util::json::{parse, Value};
+
+fn cfg_for(scene: SceneKind, seed: u64) -> MissionConfig {
+    MissionConfig {
+        duration_s: 0.3,
+        dvs_sample_hz: 400.0,
+        scene,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// The whole report through shortest-roundtrip Debug (bit-faithful for
+/// every float), with the host-dependent wall clock scrubbed.
+fn scrub_mission(mut r: MissionReport) -> String {
+    r.wall_s = 0.0;
+    format!("{r:?}")
+}
+
+fn scrub_workload(mut r: WorkloadReport) -> String {
+    r.wall_s = 0.0;
+    format!("{r:?}")
+}
+
+fn scrub_grid_json(mut gr: GridReport) -> String {
+    gr.fleet.wall_s = 0.0;
+    for r in &mut gr.fleet.reports {
+        r.wall_s = 0.0;
+    }
+    gr.to_json().to_string()
+}
+
+#[test]
+fn replay_is_bit_identical_to_live_for_every_scene_kind() {
+    let kinds = [
+        SceneKind::Corridor { speed_per_s: 0.5, seed: 7 },
+        SceneKind::RotatingBar { omega_rad_s: 6.0 },
+        SceneKind::TranslatingEdge { vel_per_s: 0.4 },
+        SceneKind::ExpandingRing { rate_per_s: 0.5 },
+        SceneKind::Noise { density: 0.05, seed: 7 },
+    ];
+    for kind in kinds {
+        let cfg = cfg_for(kind, 7);
+        let live = Mission::new(SocConfig::kraken(), cfg.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let trace = Arc::new(SensorTrace::capture(&cfg.trace_key()));
+        let replay = Mission::with_trace(SocConfig::kraken(), cfg, Some(trace))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(live.events_total > 0 || matches!(kind, SceneKind::TranslatingEdge { .. }));
+        assert_eq!(scrub_mission(live), scrub_mission(replay), "{kind:?}");
+    }
+}
+
+#[test]
+fn workload_replay_is_bit_identical_to_live_for_every_scene_kind() {
+    for kind in [
+        SceneKind::Corridor { speed_per_s: 0.5, seed: 9 },
+        SceneKind::RotatingBar { omega_rad_s: 6.0 },
+        SceneKind::Noise { density: 0.05, seed: 9 },
+    ] {
+        let wcfg = WorkloadConfig::fan_out(&cfg_for(kind, 9), 2);
+        let live = Workload::new(SocConfig::kraken(), wcfg.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let traces: Vec<Option<Arc<SensorTrace>>> = wcfg
+            .streams
+            .iter()
+            .map(|s| {
+                Some(Arc::new(SensorTrace::capture(
+                    &s.trace_key(wcfg.duration_s, wcfg.window_ms),
+                )))
+            })
+            .collect();
+        let replay = Workload::with_traces(SocConfig::kraken(), wcfg, traces)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(scrub_workload(live), scrub_workload(replay), "{kind:?}");
+    }
+}
+
+#[test]
+fn mismatched_or_artifact_traces_are_rejected() {
+    let corridor = SceneKind::Corridor { speed_per_s: 0.5, seed: 1 };
+    let cfg = cfg_for(corridor, 1);
+    let other = Arc::new(SensorTrace::capture(&cfg_for(corridor, 2).trace_key()));
+    assert!(Mission::with_trace(SocConfig::kraken(), cfg.clone(), Some(other)).is_err());
+    let good = Arc::new(SensorTrace::capture(&cfg.trace_key()));
+    let mut acfg = cfg;
+    acfg.artifacts_dir = Some("artifacts".into());
+    assert!(Mission::with_trace(SocConfig::kraken(), acfg, Some(good)).is_err());
+}
+
+#[test]
+fn shared_trace_grid_matches_live_fleet_bitwise_on_any_thread_count() {
+    let mut g = GridConfig::new(
+        SocConfig::kraken(),
+        cfg_for(SceneKind::Corridor { speed_per_s: 0.5, seed: 5 }, 5),
+        2,
+    );
+    g.vdds = vec![0.6, 0.7, 0.8];
+    g.idle_gates = vec![Some(0.02), None];
+    let cfgs = g.mission_cfgs();
+
+    // pre-change semantics: per-cell live sensing through the fleet runner
+    let live = run_configs(&g.soc, &cfgs, 1).unwrap();
+    // post-change semantics: one captured trace shared across all 6 cells
+    let shared = run_grid(&g).unwrap();
+    assert_eq!(shared.fleet.reports.len(), 6);
+    for (a, b) in live.reports.iter().zip(&shared.fleet.reports) {
+        assert_eq!(scrub_mission(a.clone()), scrub_mission(b.clone()));
+    }
+
+    // thread count must not perturb shared-trace grids
+    let mut g4 = g.clone();
+    g4.threads = 4;
+    let shared4 = run_grid(&g4).unwrap();
+    assert_eq!(
+        scrub_grid_json(shared.clone()),
+        scrub_grid_json(shared4),
+        "thread count changed a shared-trace grid report"
+    );
+
+    // GridReport JSON byte-identical to the pre-change (live) output,
+    // modulo the host wall clock
+    let live_grid = GridReport {
+        cells: g.cells().into_iter().map(|c| c.label).collect(),
+        fleet: live,
+    };
+    assert_eq!(scrub_grid_json(live_grid), scrub_grid_json(shared));
+}
+
+#[test]
+fn workload_grid_with_tenants_axis_shares_stream_traces_bitwise() {
+    let mut g = GridConfig::new(
+        SocConfig::kraken(),
+        cfg_for(SceneKind::Corridor { speed_per_s: 0.5, seed: 3 }, 3),
+        2,
+    );
+    g.vdds = vec![0.6, 0.8];
+    g.tenants = vec![2];
+    let cfgs = g.workload_cfgs();
+    let live = run_workload_configs(&g.soc, &cfgs, 1).unwrap();
+    let shared = run_workload_grid(&g).unwrap();
+    assert_eq!(shared.fleet.reports.len(), 2);
+    for (a, b) in live.reports.iter().zip(&shared.fleet.reports) {
+        assert_eq!(scrub_workload(a.clone()), scrub_workload(b.clone()));
+    }
+}
+
+#[test]
+fn serve_trace_cache_spans_requests_and_reports_stats() {
+    let server = Server::new(SocConfig::kraken(), 2, 16, 8, 8).unwrap();
+    // a grid over 3 vdds: one sensor key probed three times (3 misses,
+    // since all probes precede the single shared capture), one entry
+    let grid = r#"{"kind":"grid","duration_s":0.1,"dvs_sample_hz":300.0,"seed":4,"vdd":[0.6,0.7,0.8]}"#;
+    let v = parse(&server.handle_line(grid).unwrap()).unwrap();
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+    let stats = parse(&server.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+    let tc = stats.get("trace_cache").expect("trace_cache stats");
+    assert_eq!(tc.get("misses").and_then(Value::as_u64), Some(3));
+    assert_eq!(tc.get("entries").and_then(Value::as_u64), Some(1));
+    assert_eq!(tc.get("hits").and_then(Value::as_u64), Some(0));
+
+    // a different SoC-side request over the same sensor key hits the
+    // trace cache even though the result cache misses
+    let run = r#"{"kind":"run","duration_s":0.1,"dvs_sample_hz":300.0,"seed":4,"vdd":0.7}"#;
+    let v = parse(&server.handle_line(run).unwrap()).unwrap();
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+    let stats = parse(&server.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+    let tc = stats.get("trace_cache").unwrap();
+    assert_eq!(tc.get("hits").and_then(Value::as_u64), Some(1));
+    assert_eq!(tc.get("entries").and_then(Value::as_u64), Some(1));
+    assert!(tc.get("bytes").and_then(Value::as_f64).unwrap() > 0.0);
+}
+
+#[test]
+fn served_grid_with_traces_is_bit_identical_to_offline_live() {
+    // the serve path (trace-cached) against offline live sensing: the
+    // response reports must carry bit-identical deterministic fields
+    let mut g = GridConfig::new(
+        SocConfig::kraken(),
+        MissionConfig {
+            duration_s: 0.1,
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        },
+        2,
+    );
+    g.seeds = vec![4];
+    g.durations = vec![0.1];
+    g.vdds = vec![0.6, 0.8];
+    let offline = run_configs(&g.soc, &g.mission_cfgs(), 1).unwrap();
+
+    let server = Server::new(SocConfig::kraken(), 2, 16, 4, 8).unwrap();
+    let line = r#"{"kind":"grid","duration_s":0.1,"dvs_sample_hz":300.0,"seed":4,"vdd":[0.6,0.8]}"#;
+    let resp = parse(&server.handle_line(line).unwrap()).unwrap();
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp:?}");
+    let reports = resp
+        .get("report")
+        .and_then(|r| r.get("fleet"))
+        .and_then(|f| f.get("reports"))
+        .and_then(Value::as_arr)
+        .expect("reports");
+    assert_eq!(reports.len(), 2);
+    for (served, want) in reports.iter().zip(&offline.reports) {
+        let energy = served.get("energy_j").and_then(Value::as_f64).unwrap();
+        assert_eq!(energy.to_bits(), want.energy_j.to_bits());
+        assert_eq!(
+            served.get("events_total").and_then(Value::as_u64),
+            Some(want.events_total)
+        );
+    }
+}

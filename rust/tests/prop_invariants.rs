@@ -267,6 +267,56 @@ fn prop_fleet_equals_serial_missions() {
     });
 }
 
+#[test]
+fn prop_trace_replay_equals_live_sensing() {
+    use kraken::sensors::scene::SceneKind;
+    use kraken::sensors::trace::SensorTrace;
+    use std::sync::Arc;
+    check("mission over a captured trace == live mission, any scene", 5, |rng| {
+        let seed = rng.gen_below(10_000);
+        let scene = match rng.gen_range_usize(0, 5) {
+            0 => SceneKind::Corridor { speed_per_s: 0.5, seed },
+            1 => SceneKind::RotatingBar { omega_rad_s: rng.gen_range_f64(2.0, 10.0) },
+            2 => SceneKind::TranslatingEdge { vel_per_s: rng.gen_range_f64(0.1, 0.8) },
+            3 => SceneKind::ExpandingRing { rate_per_s: rng.gen_range_f64(0.2, 0.8) },
+            _ => SceneKind::Noise { density: rng.gen_range_f64(0.01, 0.2), seed },
+        };
+        let cfg = MissionConfig {
+            duration_s: 0.15,
+            dvs_sample_hz: 300.0,
+            scene,
+            seed,
+            ..Default::default()
+        };
+        let want = Mission::new(SocConfig::kraken(), cfg.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let trace = Arc::new(SensorTrace::capture(&cfg.trace_key()));
+        let got = Mission::with_trace(SocConfig::kraken(), cfg, Some(trace))
+            .unwrap()
+            .run()
+            .unwrap();
+        prop_assert!(
+            got.events_total == want.events_total
+                && got.sne_inf == want.sne_inf
+                && got.commands == want.commands
+                && got.dropped_windows == want.dropped_windows,
+            "{scene:?}: counters diverge under replay"
+        );
+        prop_assert!(
+            got.energy_j.to_bits() == want.energy_j.to_bits()
+                && got.avg_activity.to_bits() == want.avg_activity.to_bits(),
+            "{scene:?}: energy/activity diverge under replay"
+        );
+        prop_assert!(
+            got.last_commands == want.last_commands,
+            "{scene:?}: command streams diverge under replay"
+        );
+        Ok(())
+    });
+}
+
 /// Everything except host wall time, rendered exactly: Rust's f64 Debug is
 /// shortest-roundtrip, so two fingerprints match iff every float (energy,
 /// snapshots, commands, contention) matches bit for bit.
