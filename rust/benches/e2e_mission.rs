@@ -16,7 +16,8 @@
 
 use kraken::config::SocConfig;
 use kraken::coordinator::{
-    run_configs, run_fleet, FleetConfig, Mission, MissionConfig, MissionReport, PowerPolicy,
+    run_configs, run_fleet, run_workload_configs, FleetConfig, GovernorKind, Mission,
+    MissionConfig, MissionReport, PowerConfig, Workload, WorkloadConfig,
 };
 use kraken::metrics::fmt_power;
 use kraken::sensors::scene::SceneKind;
@@ -29,7 +30,7 @@ fn mission_cfg(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> Mi
         duration_s: duration,
         scene,
         seed: 42,
-        policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
+        power: PowerConfig::fixed(vdd),
         artifacts_dir: (artifacts && artdir.join("manifest.json").exists())
             .then(|| artdir.to_path_buf()),
         ..Default::default()
@@ -183,6 +184,86 @@ fn main() {
         assert!(r.avg_power_w < 0.31, "tenancy broke the envelope: {label}");
     }
     log.note("tenant sweep (1/2/4/8) wall", wg.fleet.wall_s * 1e9);
+
+    log.section("governor sweep (workload): fixed vs ladder vs deadline at 1/4/8 tenants");
+    // the DVFS acceptance sweep (DESIGN.md §10): a bursty 10 fps frame
+    // load leaves rail headroom on every engine; the runtime governors
+    // must harvest it — lower total energy than the fixed 0.8 V rail —
+    // while the deadline governor's priority-0 tenant never misses a
+    // deadline (its QoS priority wins every contended dispatch)
+    let mut gov_base = mission_cfg(2.0, false, 0.8, corridor);
+    gov_base.frame_fps = 10.0;
+    let tenant_counts = [1usize, 4, 8];
+    let mut sweep_energy: Vec<(GovernorKind, f64)> = Vec::new();
+    for gov in [GovernorKind::Fixed, GovernorKind::Ladder, GovernorKind::DeadlineAware] {
+        let cfgs: Vec<WorkloadConfig> = tenant_counts
+            .iter()
+            .map(|&t| {
+                let mut c = WorkloadConfig::fan_out(&gov_base, t);
+                c.power.governor = gov;
+                if gov == GovernorKind::DeadlineAware {
+                    // tenant 0 is the safety-critical stream
+                    for (i, s) in c.streams.iter_mut().enumerate() {
+                        s.qos.priority = if i == 0 { 0 } else { 1 };
+                    }
+                }
+                c
+            })
+            .collect();
+        let fleet = run_workload_configs(&soc, &cfgs, 3).unwrap();
+        let mut total_j = 0.0;
+        for (&t, r) in tenant_counts.iter().zip(&fleet.reports) {
+            let misses: u64 = r.tenants.iter().map(|x| x.deadline_misses).sum();
+            // attempts = accepted jobs (late ones already inside) + drops
+            let dropped: u64 = r.contention.iter().map(|c| c.dropped).sum();
+            let jobs: u64 =
+                r.tenants.iter().map(|x| x.sne_inf + x.cutie_inf + x.pulp_inf).sum();
+            println!(
+                "{:<9} tenants={t}: {}  {:>8.3} uJ/inf  rail moves {:>3}  \
+                 miss rate {:>5.1}%  (tenant-0 misses: {})",
+                gov.label(),
+                fmt_power(r.avg_power_w),
+                r.j_per_inference() * 1e6,
+                r.rail_transitions,
+                100.0 * misses as f64 / (jobs + dropped).max(1) as f64,
+                r.tenants[0].deadline_misses,
+            );
+            if gov == GovernorKind::DeadlineAware {
+                assert_eq!(
+                    r.tenants[0].deadline_misses, 0,
+                    "priority-0 tenant missed deadlines at {t} tenants"
+                );
+            }
+            total_j += r.energy_j;
+        }
+        log.note(
+            &format!("governor sweep total energy, {} (nJ)", gov.label()),
+            total_j * 1e9,
+        );
+        sweep_energy.push((gov, total_j));
+    }
+    let fixed_j = sweep_energy[0].1;
+    for &(gov, j) in &sweep_energy[1..] {
+        assert!(
+            j < fixed_j,
+            "{} governor did not reduce sweep energy: {j} vs fixed {fixed_j} J",
+            gov.label()
+        );
+        println!(
+            "{:<9} sweep energy {j:.4} J vs fixed {fixed_j:.4} J ({:.1}% saved)",
+            gov.label(),
+            100.0 * (1.0 - j / fixed_j)
+        );
+    }
+    // keep the Workload import earning its keep: a direct single run of
+    // the deadline cell for eyeballing per-tenant slack
+    let mut spot = WorkloadConfig::fan_out(&gov_base, 4);
+    spot.power.governor = GovernorKind::DeadlineAware;
+    for (i, s) in spot.streams.iter_mut().enumerate() {
+        s.qos.priority = if i == 0 { 0 } else { 1 };
+    }
+    let spot = Workload::new(soc.clone(), spot).unwrap().run().unwrap();
+    print!("{}", spot.summary());
 
     log.section("fleet scaling: 8 corridor missions, distinct seeds, 4 threads");
     let fc = FleetConfig {

@@ -10,7 +10,7 @@
 //! Run: `cargo bench --bench task_rates`
 
 use kraken::config::{Precision, SocConfig};
-use kraken::coordinator::{MissionConfig, PowerPolicy};
+use kraken::coordinator::{MissionConfig, PowerConfig};
 use kraken::cutie::CutieEngine;
 use kraken::metrics::{fmt_energy, fmt_power};
 use kraken::nets;
@@ -86,7 +86,7 @@ fn main() {
             scene: SceneKind::Corridor { speed_per_s: 0.6, seed: 42 },
             seed: 42,
             dvs_sample_hz: 400.0,
-            policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(0.8) },
+            power: PowerConfig::fixed(0.8),
             ..Default::default()
         },
         4,

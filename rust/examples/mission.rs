@@ -13,7 +13,7 @@
 //! (falls back to analytical-only timing without artifacts)
 
 use kraken::config::SocConfig;
-use kraken::coordinator::{Mission, MissionConfig, PowerPolicy};
+use kraken::coordinator::{Mission, MissionConfig, PowerConfig};
 use kraken::metrics::{fmt_energy, fmt_power};
 use kraken::sensors::scene::SceneKind;
 
@@ -33,7 +33,7 @@ fn main() -> kraken::Result<()> {
         duration_s: duration,
         scene: SceneKind::Corridor { speed_per_s: 0.6, seed: 42 },
         seed: 42,
-        policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(0.8) },
+        power: PowerConfig::fixed(0.8),
         artifacts_dir: artifacts,
         print_live: true,
         ..Default::default()

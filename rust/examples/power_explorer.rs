@@ -8,7 +8,7 @@
 //! Run: `cargo run --release --example power_explorer`
 
 use kraken::config::{freq_scale, Precision, SocConfig, SRAM_RETENTION_W};
-use kraken::coordinator::{Mission, MissionConfig, PowerPolicy};
+use kraken::coordinator::{lowest_safe_rail, Mission, MissionConfig, PowerConfig};
 use kraken::cutie::CutieEngine;
 use kraken::metrics::{fmt_eff, fmt_power};
 use kraken::pulp::cluster::PulpCluster;
@@ -65,7 +65,7 @@ fn main() -> kraken::Result<()> {
         let mcfg = MissionConfig {
             duration_s: 1.0,
             scene: SceneKind::TranslatingEdge { vel_per_s: 0.0 },
-            policy: PowerPolicy { idle_gate_s: gate, vdd: Some(0.8) },
+            power: PowerConfig { idle_gate_s: gate, ..Default::default() },
             ..Default::default()
         };
         let mut m = Mission::new(cfg.clone(), mcfg)?;
@@ -82,7 +82,7 @@ fn main() -> kraken::Result<()> {
         let mcfg = MissionConfig {
             duration_s: 1.0,
             scene: SceneKind::Corridor { speed_per_s: 0.6, seed: 9 },
-            policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
+            power: PowerConfig::fixed(vdd),
             ..Default::default()
         };
         let mut m = Mission::new(cfg.clone(), mcfg)?;
@@ -95,6 +95,25 @@ fn main() -> kraken::Result<()> {
             pulp_rate,
             r.dropped_windows
         );
+        if vdd == 0.8 {
+            // the pre-mission auto pick: lowest rail whose slowdown keeps
+            // the measured 0.8 V busy fractions under the deadline guard
+            // band (what a mission planner would choose offline; the
+            // runtime governors of DESIGN.md §10 revisit this per epoch)
+            let busy = [
+                m.soc.power.ledger.busy_s[0] / r.sim_s,
+                m.soc.power.ledger.busy_s[1] / r.sim_s,
+                m.soc.power.ledger.busy_s[2] / r.sim_s,
+            ];
+            println!(
+                "  busy fractions at 0.8 V: SNE {:.2} CUTIE {:.2} PULP {:.2} \
+                 -> lowest safe rail {:.2} V",
+                busy[0],
+                busy[1],
+                busy[2],
+                lowest_safe_rail(busy)
+            );
+        }
     }
     Ok(())
 }

@@ -1,0 +1,743 @@
+//! The power-management subsystem: runtime DVFS governors + per-tenant QoS.
+//!
+//! The old `PowerPolicy` picked one rail voltage at mission start and never
+//! revisited it, so bursty event traffic — the very thing the SNE path
+//! exploits — was billed at worst-case voltage. This module replaces that
+//! static knob with an event-driven subsystem: the mission DES calls the
+//! [`Governor`] once per scheduling window (the *epoch tick*, the same
+//! cadence the energy ledger integrates on) with a [`LoadSnapshot`] of the
+//! epoch just ended, and the governor answers with a [`RailDecision`] —
+//! the shared rail voltage for the next epoch plus a per-engine gate
+//! request. Three deterministic built-ins:
+//!
+//! * [`Fixed`] — bit-identical to the legacy `PowerPolicy`: the rail never
+//!   moves (the decision echoes the live rail, so no transition is ever
+//!   issued) and engines gate after `idle_gate_s` of idleness. Every
+//!   pre-refactor report replays exactly (`tests/integration_governor.rs`).
+//! * [`Ladder`] — utilization-hysteresis stepping on the 31-point rail
+//!   ladder: demand is normalized to the `VDD_MAX` clock (so the estimate
+//!   is rail-invariant), a gated engine's next dispatch is debited its
+//!   [`WAKE_NS`] wake-up latency, and any rail move requires
+//!   `hold_epochs` since the previous move — the ladder can never
+//!   oscillate faster than its hysteresis window (property-pinned).
+//! * [`DeadlineAware`] — per-tenant [`QosSpec`] driven: picks the lowest
+//!   rail whose *projected* worst slack (over a sliding horizon of epoch
+//!   minima — a conservative stand-in for p99) stays positive for every
+//!   tenant that voltage can still help, with an engine-utilization guard.
+//!   Up-moves are immediate (deadline safety beats hysteresis); down-moves
+//!   are hold-gated. Tenant priorities additionally feed the workload's
+//!   arbitration rank, so high-QoS tenants win same-instant dispatch ties
+//!   ahead of the round-robin rotation (see `Workload::prio_start`).
+//!
+//! Rail changes go through `PowerManager::rail_transition`, which books a
+//! transition-cost model and opens a new rail segment in the
+//! [`crate::soc::power::EnergyLedger`]; DESIGN.md §10 documents the whole
+//! contract.
+
+use crate::config::{freq_scale, VDD_MAX, VDD_MIN};
+use crate::coordinator::engine::WAKE_NS;
+use crate::soc::power::DomainId;
+
+/// Rail quantization: the shared rail moves on a ladder of
+/// `RAIL_STEPS + 1` points spanning `VDD_MIN..=VDD_MAX` — the same 31
+/// points the legacy `PowerPolicy::choose_vdd` scan visited.
+pub const RAIL_STEPS: usize = 30;
+
+/// The engine power domains in [`crate::coordinator::workload`] stat order
+/// (`ENG_SNE`/`ENG_CUTIE`/`ENG_PULP`): every `[T; 3]` in this module is
+/// indexed the same way.
+pub const ENGINE_DOMAINS: [DomainId; 3] = [DomainId::Sne, DomainId::Cutie, DomainId::Pulp];
+
+/// Epochs a governor must hold between hysteresis-gated rail moves.
+pub const HOLD_EPOCHS: u64 = 8;
+
+/// Ladder: step up when projected utilization exceeds this.
+const LADDER_UP_UTIL: f64 = 0.85;
+/// Ladder: step down only when the projected utilization at the lower
+/// rung stays under this (refuses moves that would bounce straight back).
+const LADDER_DOWN_UTIL: f64 = 0.68;
+/// DeadlineAware: per-engine utilization guard — rails whose projected
+/// utilization exceeds this are rejected (queues would grow without bound
+/// and the slack projection would be invalid).
+const UTIL_CAP: f64 = 0.95;
+/// DeadlineAware: sliding horizon (epochs) of per-tenant slack minima.
+const SLACK_HORIZON: usize = 16;
+/// DeadlineAware: required slack margin as a fraction of the deadline.
+const SLACK_MARGIN_FRAC: f64 = 0.05;
+/// EWMA weight of the per-epoch demand estimate. Raw per-window busy
+/// fractions of a bursty engine flap between 0 and 1 (a 36 ms DroNet job
+/// at 10 fps saturates ~4 of every 10 scheduling windows); smoothing over
+/// a few epochs turns that into the true duty cycle without hiding a real
+/// sustained overload (the time constant sits under one hold window).
+const DEMAND_EWMA_ALPHA: f64 = 0.25;
+
+/// One EWMA step of the rail-invariant demand estimate: per-engine busy
+/// cycles per window, normalized to the `VDD_MAX` clock.
+fn smooth_demand(avg: &mut [f64; 3], busy_frac: &[f64; 3], scale_now: f64) {
+    for (a, &b) in avg.iter_mut().zip(busy_frac) {
+        *a = *a * (1.0 - DEMAND_EWMA_ALPHA) + b * scale_now * DEMAND_EWMA_ALPHA;
+    }
+}
+
+/// Rail voltage of ladder step `i` (0 = `VDD_MIN`, `RAIL_STEPS` =
+/// `VDD_MAX`, exact at both endpoints; interior points match the legacy
+/// 31-point scan bit for bit).
+pub fn rail_step(i: usize) -> f64 {
+    let i = i.min(RAIL_STEPS);
+    if i == RAIL_STEPS {
+        VDD_MAX
+    } else {
+        VDD_MIN + (VDD_MAX - VDD_MIN) * i as f64 / RAIL_STEPS as f64
+    }
+}
+
+/// The ladder step nearest to `v` (clamped to the rail range).
+pub fn nearest_rail_step(v: f64) -> usize {
+    let frac = (v.clamp(VDD_MIN, VDD_MAX) - VDD_MIN) / (VDD_MAX - VDD_MIN);
+    (frac * RAIL_STEPS as f64).round() as usize
+}
+
+/// The lowest rail whose DVFS slowdown keeps every busy fraction (measured
+/// at `VDD_MAX`) under the 0.9 deadline guard band — the legacy
+/// `PowerPolicy::choose_vdd` contract rebuilt on the shared [`rail_step`]
+/// ladder (same points, same guard, same early-out, no unused config
+/// parameter). This is the offline pre-mission auto pick (see
+/// `examples/power_explorer.rs`); the governors revisit the choice per
+/// epoch with live load instead.
+pub fn lowest_safe_rail(busy_frac: [f64; 3]) -> f64 {
+    let mut best = VDD_MAX;
+    for i in (0..=RAIL_STEPS).rev() {
+        let v = rail_step(i);
+        let slow = 1.0 / freq_scale(v);
+        if busy_frac.iter().all(|&b| b * slow < 0.9) {
+            best = v; // keep lowering while deadlines hold
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+/// Signed completion slack of a job against its deadline (ns): positive
+/// means the job finished `slack` early, negative is a deadline miss.
+pub fn job_slack_ns(deadline_ns: u64, arrival_ns: u64, done_ns: u64) -> i64 {
+    deadline_ns as i64 - done_ns.saturating_sub(arrival_ns) as i64
+}
+
+/// Fraction of its deadline a job consumed (1.0 = finished exactly on
+/// time) — the class-comparable form of [`job_slack_ns`] that feeds
+/// [`LoadSnapshot::tenant_service_frac`].
+pub fn service_frac(deadline_ns: u64, arrival_ns: u64, done_ns: u64) -> f64 {
+    done_ns.saturating_sub(arrival_ns) as f64 / deadline_ns.max(1) as f64
+}
+
+/// Fold one accepted job into an epoch's deadline signal — the min-slack
+/// / worst-service-fraction pair both the mission pipeline and the
+/// workload track per epoch (one shared definition, so the single-tenant
+/// workload keeps seeing the exact snapshots the mission sees).
+pub fn note_job(
+    epoch_slack_ns: &mut i64,
+    epoch_service_frac: &mut f64,
+    deadline_ns: u64,
+    arrival_ns: u64,
+    done_ns: u64,
+) {
+    *epoch_slack_ns = (*epoch_slack_ns).min(job_slack_ns(deadline_ns, arrival_ns, done_ns));
+    *epoch_service_frac =
+        epoch_service_frac.max(service_frac(deadline_ns, arrival_ns, done_ns));
+}
+
+/// The default frame-job deadline: the frame cadence, floored at one
+/// scheduling window — shared by the mission pipeline and
+/// `StreamConfig::frame_deadline_ns`.
+pub fn frame_cadence_ns(frame_fps: f64, window_ns: u64) -> u64 {
+    ((1e9 / frame_fps) as u64).max(window_ns)
+}
+
+/// Per-tenant quality-of-service contract, carried on
+/// [`crate::coordinator::workload::StreamConfig`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QosSpec {
+    /// Arbitration priority: 0 is highest. Tenants with equal priority
+    /// fall back to the legacy round-robin rotation (bit-identical
+    /// schedules); a lower value wins same-instant dispatch ties.
+    pub priority: u8,
+    /// Per-job completion deadline (ns from job arrival). 0 means
+    /// "cadence": each job must finish before its stream's next arrival
+    /// (the inference window for SNE jobs, the frame period for
+    /// CUTIE/PULP jobs).
+    pub deadline_ns: u64,
+}
+
+impl QosSpec {
+    /// Build a spec from the user-facing millisecond form — the single
+    /// validation both front doors (CLI `--qos`, protocol `qos` objects)
+    /// share, so they can never drift apart. `None` keeps the cadence
+    /// default; explicit deadlines are bounded to [0.001, 60000] ms, the
+    /// floor guaranteeing the ns conversion can never truncate onto the
+    /// 0 = cadence sentinel.
+    pub fn from_ms(priority: u8, deadline_ms: Option<f64>) -> crate::Result<QosSpec> {
+        let deadline_ns = match deadline_ms {
+            None => 0,
+            Some(ms) => {
+                anyhow::ensure!(
+                    ms.is_finite() && (0.001..=60_000.0).contains(&ms),
+                    "qos deadline must be in [0.001, 60000] ms, got {ms}"
+                );
+                // round, don't truncate: 33.3 ms must be 33_300_000 ns
+                (ms * 1e6).round() as u64
+            }
+        };
+        Ok(QosSpec { priority, deadline_ns })
+    }
+
+    /// The deadline to hold a job to: the explicit one, or the job's own
+    /// `cadence_ns` when unset.
+    pub fn deadline_or(&self, cadence_ns: u64) -> u64 {
+        if self.deadline_ns == 0 {
+            cadence_ns
+        } else {
+            self.deadline_ns
+        }
+    }
+}
+
+/// Which built-in [`Governor`] a config names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GovernorKind {
+    Fixed,
+    Ladder,
+    DeadlineAware,
+}
+
+impl GovernorKind {
+    /// Parse a CLI/protocol governor name — the single name→kind mapping
+    /// shared by `kraken workload --governor`, the grid axes and the
+    /// serve protocol.
+    pub fn parse(name: &str) -> crate::Result<GovernorKind> {
+        Ok(match name {
+            "fixed" => GovernorKind::Fixed,
+            "ladder" => GovernorKind::Ladder,
+            "deadline" | "deadline-aware" => GovernorKind::DeadlineAware,
+            other => anyhow::bail!("unknown governor '{other}' (fixed|ladder|deadline)"),
+        })
+    }
+
+    /// The canonical name `parse` accepts for this kind.
+    pub fn label(self) -> &'static str {
+        match self {
+            GovernorKind::Fixed => "fixed",
+            GovernorKind::Ladder => "ladder",
+            GovernorKind::DeadlineAware => "deadline",
+        }
+    }
+}
+
+/// Power-management configuration of a mission/workload: the initial rail,
+/// the idle-gating threshold, and which governor runs the epochs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerConfig {
+    /// Gate an engine idle longer than this (s). `None` disables gating.
+    pub idle_gate_s: Option<f64>,
+    /// Initial rail voltage; `None` = start at `VDD_MAX` and let the
+    /// governor descend.
+    pub vdd: Option<f64>,
+    /// The governor driven on the epoch tick.
+    pub governor: GovernorKind,
+}
+
+impl Default for PowerConfig {
+    fn default() -> Self {
+        PowerConfig { idle_gate_s: Some(0.050), vdd: Some(0.8), governor: GovernorKind::Fixed }
+    }
+}
+
+impl PowerConfig {
+    /// The classic fixed-rail config the CLI's `--vdd` flag maps to.
+    pub fn fixed(vdd: f64) -> PowerConfig {
+        PowerConfig { idle_gate_s: Some(0.05), vdd: Some(vdd), governor: GovernorKind::Fixed }
+    }
+
+    /// The rail the SoC powers on at (the governor moves it from here).
+    pub fn initial_vdd(&self) -> f64 {
+        self.vdd.unwrap_or(VDD_MAX)
+    }
+
+    /// Build the configured governor for `tenants` tenant streams (the
+    /// deadline governor keeps one slack-history ring per tenant; the
+    /// per-tenant deadlines themselves are applied by the caller when it
+    /// measures each job's service fraction — `QosSpec::deadline_or`).
+    pub fn build(&self, tenants: usize) -> Box<dyn Governor> {
+        match self.governor {
+            GovernorKind::Fixed => Box::new(Fixed { idle_gate_s: self.idle_gate_s }),
+            GovernorKind::Ladder => Box::new(Ladder::new(self.idle_gate_s, self.initial_vdd())),
+            GovernorKind::DeadlineAware => {
+                Box::new(DeadlineAware::new(self.idle_gate_s, self.initial_vdd(), tenants))
+            }
+        }
+    }
+}
+
+/// What the epoch just ended looked like — the governor's only input, so
+/// every implementation is a deterministic function of the simulation.
+#[derive(Debug, Clone)]
+pub struct LoadSnapshot<'a> {
+    /// Index of the scheduling window that just closed.
+    pub epoch: u64,
+    /// Epoch length (ns) — the scheduling window.
+    pub window_ns: u64,
+    /// The shared rail the epoch ran at (V).
+    pub vdd: f64,
+    /// Per-engine busy fraction of the epoch ([`ENGINE_DOMAINS`] order).
+    pub busy_frac: [f64; 3],
+    /// Per-engine idle time at epoch close (s since last job end).
+    pub idle_s: [f64; 3],
+    /// Per-engine power-gate state at epoch close.
+    pub gated: [bool; 3],
+    /// Per-tenant minimum job slack observed this epoch (ns);
+    /// `i64::MAX` when the tenant completed no jobs. One entry per
+    /// tenant stream (a plain mission has exactly one).
+    pub tenant_slack_ns: &'a [i64],
+    /// Per-tenant worst *service fraction* this epoch: the largest
+    /// `(completion - arrival) / deadline` over the tenant's accepted
+    /// jobs (0.0 = none). Each job is measured against its own class
+    /// deadline (SNE window vs frame period), so the fraction is
+    /// comparable across classes; 1.0 means a job consumed its whole
+    /// deadline at the current rail.
+    pub tenant_service_frac: &'a [f64],
+}
+
+/// The governor's answer: the rail for the next epoch plus per-engine
+/// gate requests (true = gate now if currently idle and ungated).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RailDecision {
+    pub vdd: f64,
+    pub gate: [bool; 3],
+}
+
+/// A deterministic power-management policy driven on the mission epoch
+/// tick: same snapshots in, same decisions out, on any host.
+pub trait Governor {
+    fn kind(&self) -> GovernorKind;
+
+    /// One decision per scheduling window, fed the epoch that just ended.
+    /// The caller applies the decision before the next epoch opens; a
+    /// `vdd` equal to `load.vdd` means "hold the rail" (no transition is
+    /// issued, no cost is booked).
+    fn on_epoch(&mut self, load: &LoadSnapshot<'_>) -> RailDecision;
+}
+
+/// The legacy idle-gating rule, shared by every built-in: gate an engine
+/// idle at least `idle_gate_s` (bit-identical to `PowerPolicy::should_gate`).
+fn idle_gates(idle_gate_s: Option<f64>, load: &LoadSnapshot<'_>) -> [bool; 3] {
+    let mut gate = [false; 3];
+    for (g, &idle) in gate.iter_mut().zip(&load.idle_s) {
+        *g = matches!(idle_gate_s, Some(limit) if idle >= limit);
+    }
+    gate
+}
+
+/// The static policy, behind the trait: the rail never moves (the
+/// decision echoes the live rail bit for bit, so the pipeline never issues
+/// a transition) and gating follows the idle threshold. Reports are
+/// byte-identical to the pre-governor code.
+#[derive(Debug, Clone)]
+pub struct Fixed {
+    pub idle_gate_s: Option<f64>,
+}
+
+impl Governor for Fixed {
+    fn kind(&self) -> GovernorKind {
+        GovernorKind::Fixed
+    }
+
+    fn on_epoch(&mut self, load: &LoadSnapshot<'_>) -> RailDecision {
+        RailDecision { vdd: load.vdd, gate: idle_gates(self.idle_gate_s, load) }
+    }
+}
+
+/// Utilization-hysteresis rail stepping (see module docs).
+#[derive(Debug, Clone)]
+pub struct Ladder {
+    idle_gate_s: Option<f64>,
+    /// Current ladder step.
+    step: usize,
+    /// Epochs since the last rail move.
+    since_change: u64,
+    hold_epochs: u64,
+    /// EWMA demand per engine, normalized to the `VDD_MAX` clock.
+    avg_demand: [f64; 3],
+}
+
+impl Ladder {
+    pub fn new(idle_gate_s: Option<f64>, initial_vdd: f64) -> Ladder {
+        Ladder {
+            idle_gate_s,
+            step: nearest_rail_step(initial_vdd),
+            since_change: 0,
+            hold_epochs: HOLD_EPOCHS,
+            avg_demand: [0.0; 3],
+        }
+    }
+
+    /// Worst projected per-engine utilization at ladder step `step`, from
+    /// demand normalized to the `VDD_MAX` clock plus the wake-up debit a
+    /// gated-but-loaded engine pays on its next dispatch.
+    fn util_at(&self, step: usize, demand: &[f64; 3], gated: &[bool; 3], wake_frac: f64) -> f64 {
+        let scale = freq_scale(rail_step(step));
+        demand
+            .iter()
+            .zip(gated)
+            .map(|(&d, &g)| {
+                let mut u = d / scale;
+                if g && d > 0.0 {
+                    u += wake_frac;
+                }
+                u
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+impl Governor for Ladder {
+    fn kind(&self) -> GovernorKind {
+        GovernorKind::Ladder
+    }
+
+    fn on_epoch(&mut self, load: &LoadSnapshot<'_>) -> RailDecision {
+        let gate = idle_gates(self.idle_gate_s, load);
+        self.since_change = self.since_change.saturating_add(1);
+        // smoothed busy cycles per window normalized to the VDD_MAX
+        // clock: rail-invariant (stepping never corrupts the next
+        // epoch's reading) and burst-tolerant (EWMA duty cycle)
+        let scale_now = freq_scale(load.vdd);
+        smooth_demand(&mut self.avg_demand, &load.busy_frac, scale_now);
+        let demand = self.avg_demand;
+        let wake_frac = WAKE_NS as f64 / load.window_ns as f64;
+        if self.since_change >= self.hold_epochs {
+            if self.util_at(self.step, &demand, &load.gated, wake_frac) > LADDER_UP_UTIL
+                && self.step < RAIL_STEPS
+            {
+                // overload: jump to the lowest rung that restores headroom
+                let mut s = self.step + 1;
+                while s < RAIL_STEPS
+                    && self.util_at(s, &demand, &load.gated, wake_frac) > LADDER_UP_UTIL
+                {
+                    s += 1;
+                }
+                self.step = s;
+                self.since_change = 0;
+            } else if self.step > 0
+                && self.util_at(self.step - 1, &demand, &load.gated, wake_frac)
+                    < LADDER_DOWN_UTIL
+            {
+                // headroom even one rung lower: descend a single rung
+                self.step -= 1;
+                self.since_change = 0;
+            }
+        }
+        RailDecision { vdd: rail_step(self.step), gate }
+    }
+}
+
+/// Per-tenant-deadline rail selection (see module docs).
+#[derive(Debug, Clone)]
+pub struct DeadlineAware {
+    idle_gate_s: Option<f64>,
+    step: usize,
+    since_change: u64,
+    hold_epochs: u64,
+    /// EWMA demand per engine, normalized to the `VDD_MAX` clock.
+    avg_demand: [f64; 3],
+    /// Sliding rings of rail-invariant worst service fractions, one per
+    /// tenant: each entry is `tenant_service_frac * freq_scale(vdd)` at
+    /// the sampling epoch, i.e. the fraction of its deadline the worst
+    /// job *would* consume at `VDD_MAX`. 0.0 = no jobs that epoch.
+    history: Vec<std::collections::VecDeque<f64>>,
+}
+
+impl DeadlineAware {
+    /// `tenants` sizes the per-tenant slack history (one ring each).
+    pub fn new(idle_gate_s: Option<f64>, initial_vdd: f64, tenants: usize) -> DeadlineAware {
+        let history = (0..tenants.max(1))
+            .map(|_| std::collections::VecDeque::with_capacity(SLACK_HORIZON))
+            .collect();
+        DeadlineAware {
+            idle_gate_s,
+            step: nearest_rail_step(initial_vdd),
+            since_change: 0,
+            hold_epochs: HOLD_EPOCHS,
+            avg_demand: [0.0; 3],
+            history,
+        }
+    }
+
+    /// Is ladder step `step` safe: projected engine utilization under the
+    /// cap, and every helpable tenant's projected worst service fraction
+    /// leaving at least the margin of deadline slack? An engine saturated
+    /// even at `VDD_MAX` vetoes every step — no rail can fix it but a
+    /// lower one sheds throughput and multiplies drops, so the caller's
+    /// `unwrap_or(RAIL_STEPS)` fallback pins the rail at max. Tenants
+    /// unmeetable even at `VDD_MAX` are excluded instead (their jobs
+    /// still complete, just late — holding max rail would burn energy
+    /// without fixing them). Service scales inversely with the clock, so
+    /// the projection at step `s` is exactly
+    /// `worst_at_max / freq_scale(s)`.
+    fn feasible(&self, step: usize, demand: &[f64; 3]) -> bool {
+        let scale = freq_scale(rail_step(step));
+        for &d in demand {
+            if d / scale > UTIL_CAP {
+                return false;
+            }
+        }
+        for ring in &self.history {
+            let worst_at_max = ring.iter().copied().fold(0.0f64, f64::max);
+            if worst_at_max <= 0.0 {
+                continue; // no jobs observed yet
+            }
+            if worst_at_max >= 1.0 {
+                continue; // unmeetable even at VDD_MAX: voltage can't help
+            }
+            if 1.0 - worst_at_max / scale <= SLACK_MARGIN_FRAC {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl Governor for DeadlineAware {
+    fn kind(&self) -> GovernorKind {
+        GovernorKind::DeadlineAware
+    }
+
+    fn on_epoch(&mut self, load: &LoadSnapshot<'_>) -> RailDecision {
+        let gate = idle_gates(self.idle_gate_s, load);
+        self.since_change = self.since_change.saturating_add(1);
+        let scale_now = freq_scale(load.vdd);
+        for (t, ring) in self.history.iter_mut().enumerate() {
+            let frac = load.tenant_service_frac.get(t).copied().unwrap_or(0.0);
+            if ring.len() == SLACK_HORIZON {
+                ring.pop_front();
+            }
+            ring.push_back(frac * scale_now);
+        }
+        smooth_demand(&mut self.avg_demand, &load.busy_frac, scale_now);
+        let demand = self.avg_demand;
+        let lowest = (0..=RAIL_STEPS)
+            .find(|&s| self.feasible(s, &demand))
+            .unwrap_or(RAIL_STEPS);
+        if lowest > self.step {
+            // deadline safety beats hysteresis: climb immediately
+            self.step = lowest;
+            self.since_change = 0;
+        } else if lowest < self.step && self.since_change >= self.hold_epochs {
+            // descend one rung per hold window toward the target
+            self.step -= 1;
+            self.since_change = 0;
+        }
+        RailDecision { vdd: rail_step(self.step), gate }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NO_JOBS: &[i64] = &[i64::MAX];
+
+    fn snap(vdd: f64, busy: [f64; 3], service_frac: &[f64]) -> LoadSnapshot<'_> {
+        LoadSnapshot {
+            epoch: 0,
+            window_ns: 10_000_000,
+            vdd,
+            busy_frac: busy,
+            idle_s: [0.0; 3],
+            gated: [false; 3],
+            tenant_slack_ns: NO_JOBS,
+            tenant_service_frac: service_frac,
+        }
+    }
+
+    #[test]
+    fn rail_ladder_is_exact_at_the_endpoints() {
+        assert_eq!(rail_step(0).to_bits(), VDD_MIN.to_bits());
+        assert_eq!(rail_step(RAIL_STEPS).to_bits(), VDD_MAX.to_bits());
+        assert_eq!(nearest_rail_step(VDD_MAX), RAIL_STEPS);
+        assert_eq!(nearest_rail_step(VDD_MIN), 0);
+        // monotone ladder
+        for i in 1..=RAIL_STEPS {
+            assert!(rail_step(i) > rail_step(i - 1));
+        }
+    }
+
+    #[test]
+    fn lowest_safe_rail_drops_when_lightly_loaded() {
+        // the legacy choose_vdd contract, minus the unused cfg parameter
+        let light = lowest_safe_rail([0.05, 0.05, 0.05]);
+        let heavy = lowest_safe_rail([0.92, 0.5, 0.5]);
+        assert!(light < heavy, "light {light} vs heavy {heavy}");
+        assert!((heavy - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gating_after_idle_threshold() {
+        // the legacy should_gate contract, behind every governor
+        let mut g = Fixed { idle_gate_s: Some(0.05) };
+        let mut s = snap(0.8, [0.0; 3], &[0.0]);
+        s.idle_s = [0.01, 0.06, 0.05];
+        let d = g.on_epoch(&s);
+        assert_eq!(d.gate, [false, true, true]);
+        assert_eq!(d.vdd.to_bits(), s.vdd.to_bits(), "fixed echoes the live rail");
+        let mut never = Fixed { idle_gate_s: None };
+        assert_eq!(never.on_epoch(&s).gate, [false; 3]);
+    }
+
+    #[test]
+    fn ladder_descends_under_light_load_and_climbs_under_heavy() {
+        let mut g = Ladder::new(Some(0.05), 0.8);
+        let mut vdd = 0.8;
+        // light load: after enough epochs the rail has stepped down
+        for _ in 0..(HOLD_EPOCHS * 10) {
+            let d = g.on_epoch(&snap(vdd, [0.10, 0.05, 0.30], &[0.0]));
+            vdd = d.vdd;
+        }
+        assert!(vdd < 0.75, "ladder never descended: {vdd}");
+        // heavy sustained load at the lowered rail: the ladder climbs back
+        // (busy fractions reported at the *current* rail, like the DES)
+        for _ in 0..(HOLD_EPOCHS * 10) {
+            let d = g.on_epoch(&snap(vdd, [0.95, 0.5, 0.95], &[0.0]));
+            vdd = d.vdd;
+        }
+        assert!((vdd - 0.8).abs() < 1e-9, "ladder never recovered: {vdd}");
+    }
+
+    #[test]
+    fn ladder_moves_respect_the_hysteresis_window() {
+        let mut g = Ladder::new(Some(0.05), 0.8);
+        let mut vdd = 0.8;
+        let mut last_move: Option<u64> = None;
+        let mut moves = 0u64;
+        // adversarial load flapping every epoch: moves must still be
+        // separated by at least HOLD_EPOCHS epochs
+        for epoch in 0..200u64 {
+            let busy = if epoch % 2 == 0 { [0.9, 0.9, 0.9] } else { [0.01, 0.01, 0.01] };
+            let d = g.on_epoch(&snap(vdd, busy, &[0.0]));
+            if d.vdd != vdd {
+                if let Some(prev) = last_move {
+                    assert!(
+                        epoch - prev >= HOLD_EPOCHS,
+                        "rail moved {} epochs after the previous move",
+                        epoch - prev
+                    );
+                }
+                last_move = Some(epoch);
+                moves += 1;
+                vdd = d.vdd;
+            }
+        }
+        assert!(moves > 0, "flapping load never moved the rail at all");
+    }
+
+    /// Model a job whose work is constant in cycles: the service fraction
+    /// observed at rail `vdd` is the `VDD_MAX` fraction divided by the
+    /// clock scale.
+    fn frac_at(base_at_max: f64, vdd: f64) -> f64 {
+        base_at_max / freq_scale(vdd)
+    }
+
+    #[test]
+    fn deadline_governor_holds_rail_for_tight_slack() {
+        let mut g = DeadlineAware::new(Some(0.05), 0.8, 1);
+        // a job consuming 98% of its deadline at VDD_MAX: any lower rail
+        // would blow the margin, so the rail must not move
+        let mut vdd = 0.8;
+        for _ in 0..(HOLD_EPOCHS * 6) {
+            let d = g.on_epoch(&snap(vdd, [0.3, 0.3, 0.3], &[frac_at(0.98, vdd)]));
+            vdd = d.vdd;
+        }
+        assert!((vdd - 0.8).abs() < 1e-9, "rail dropped under tight slack: {vdd}");
+    }
+
+    #[test]
+    fn deadline_governor_harvests_wide_slack() {
+        let mut g = DeadlineAware::new(Some(0.05), 0.8, 1);
+        // a job consuming 36% of its deadline at VDD_MAX (a 36 ms DroNet
+        // frame on a 100 ms cadence): plenty of rail headroom
+        let mut vdd = 0.8;
+        for _ in 0..(HOLD_EPOCHS * 40) {
+            let d = g.on_epoch(&snap(vdd, [0.3, 0.1, 0.36], &[frac_at(0.36, vdd)]));
+            vdd = d.vdd;
+        }
+        assert!(vdd < 0.65, "deadline governor never descended: {vdd}");
+        // and it settles where the margin binds instead of free-falling
+        assert!(vdd > 0.5, "deadline governor ignored the slack margin: {vdd}");
+    }
+
+    #[test]
+    fn deadline_governor_ignores_unhelpable_tenants() {
+        // a tenant whose job overruns its deadline even at VDD_MAX must
+        // not pin the rail high forever — voltage cannot help it
+        let mut g = DeadlineAware::new(Some(0.05), 0.8, 2);
+        let mut vdd = 0.8;
+        for _ in 0..(HOLD_EPOCHS * 40) {
+            let fracs = [frac_at(0.40, vdd), frac_at(1.30, vdd)];
+            let d = g.on_epoch(&snap(vdd, [0.2, 0.1, 0.2], &fracs));
+            vdd = d.vdd;
+        }
+        assert!(vdd < 0.75, "an unhelpable tenant pinned the rail: {vdd}");
+    }
+
+    #[test]
+    fn qos_defaults_and_cadence_deadlines() {
+        let q = QosSpec::default();
+        assert_eq!(q.priority, 0);
+        assert_eq!(q.deadline_or(10_000_000), 10_000_000, "0 lowers onto the cadence");
+        let q = QosSpec { priority: 2, deadline_ns: 5 };
+        assert_eq!(q.deadline_or(10_000_000), 5);
+        assert_eq!(job_slack_ns(100, 10, 60), 50);
+        assert_eq!(job_slack_ns(100, 10, 250), -140);
+        // the shared ms front door: rounds (never truncates onto the
+        // cadence sentinel) and bounds both ends
+        assert_eq!(QosSpec::from_ms(1, None).unwrap(), QosSpec { priority: 1, deadline_ns: 0 });
+        assert_eq!(QosSpec::from_ms(0, Some(33.3)).unwrap().deadline_ns, 33_300_000);
+        assert!(QosSpec::from_ms(0, Some(0.0000005)).is_err());
+        assert!(QosSpec::from_ms(0, Some(-1.0)).is_err());
+        assert!(QosSpec::from_ms(0, Some(1e9)).is_err());
+        // shared epoch-signal fold
+        let (mut slack, mut frac) = (i64::MAX, 0.0f64);
+        note_job(&mut slack, &mut frac, 100, 10, 60);
+        assert_eq!(slack, 50);
+        assert!((frac - 0.5).abs() < 1e-12);
+        note_job(&mut slack, &mut frac, 100, 0, 90);
+        assert_eq!(slack, 10);
+        assert!((frac - 0.9).abs() < 1e-12);
+        assert_eq!(frame_cadence_ns(10.0, 10_000_000), 100_000_000);
+        assert_eq!(frame_cadence_ns(1000.0, 10_000_000), 10_000_000, "floored at one window");
+    }
+
+    #[test]
+    fn governor_names_roundtrip() {
+        for kind in [GovernorKind::Fixed, GovernorKind::Ladder, GovernorKind::DeadlineAware] {
+            assert_eq!(GovernorKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert_eq!(
+            GovernorKind::parse("deadline-aware").unwrap(),
+            GovernorKind::DeadlineAware
+        );
+        assert!(GovernorKind::parse("turbo").is_err());
+    }
+
+    #[test]
+    fn config_builds_the_named_governor() {
+        for kind in [GovernorKind::Fixed, GovernorKind::Ladder, GovernorKind::DeadlineAware] {
+            let cfg = PowerConfig { governor: kind, ..Default::default() };
+            let g = cfg.build(1);
+            assert_eq!(g.kind(), kind);
+        }
+        assert_eq!(PowerConfig::fixed(0.65).vdd, Some(0.65));
+        assert_eq!(PowerConfig::default().initial_vdd(), 0.8);
+        let auto = PowerConfig { vdd: None, ..Default::default() };
+        assert_eq!(auto.initial_vdd(), VDD_MAX);
+    }
+}

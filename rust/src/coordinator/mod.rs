@@ -28,7 +28,12 @@
 //!   ROADMAP "batching within a mission" surface.
 //! * [`fusion`] — combining SNE optical flow, CUTIE classification and
 //!   PULP DroNet outputs into navigation commands.
-//! * [`power_mgr`] — the FC's power policy: gate idle engines, DVFS.
+//! * [`governor`] — the power-management subsystem: a deterministic
+//!   [`governor::Governor`] trait driven on the scheduling-window epoch
+//!   tick (`Fixed` replays the legacy static policy bit for bit; `Ladder`
+//!   and `DeadlineAware` do runtime DVFS), plus per-tenant
+//!   [`governor::QosSpec`] priorities/deadlines that feed workload
+//!   arbitration. DESIGN.md §10.
 //! * [`telemetry`] — periodic mission snapshots for the CLI/bench reports.
 //!
 //! Each *mission* is single-threaded by design: the FC that runs this
@@ -40,8 +45,8 @@
 pub mod engine;
 pub mod fleet;
 pub mod fusion;
+pub mod governor;
 pub mod pipeline;
-pub mod power_mgr;
 pub mod scheduler;
 pub mod telemetry;
 pub mod workload;
@@ -53,8 +58,10 @@ pub use fleet::{
     run_workload_fleet, FleetConfig, FleetReport, FleetStat, WorkloadFleetReport,
 };
 pub use fusion::{FusionState, NavCommand};
+pub use governor::{
+    lowest_safe_rail, Governor, GovernorKind, LoadSnapshot, PowerConfig, QosSpec, RailDecision,
+};
 pub use pipeline::{Mission, MissionConfig, MissionReport};
-pub use power_mgr::PowerPolicy;
 pub use scheduler::{Scheduled, Scheduler};
 pub use telemetry::Snapshot;
 pub use workload::{

@@ -13,8 +13,14 @@
 //! 2. **Frame** (30 fps): the CPI frame DMAs into L2 and forks to CUTIE
 //!    (ternary classification) and PULP (DroNet steering/collision);
 //! 3. **WindowEnd**: fusion turns the three streams into a navigation
-//!    command; the power manager gates idle engines and the ledger
-//!    integrates energy for every domain; telemetry snapshots.
+//!    command; the ledger integrates energy for every domain; the
+//!    [`Governor`] runs its epoch tick on the window's load snapshot and
+//!    its decision is applied (idle engines gate, the shared rail moves
+//!    through `PowerManager::rail_transition` when a DVFS governor asks);
+//!    telemetry snapshots. Under the default
+//!    [`Fixed`](crate::coordinator::governor::Fixed) governor the rail
+//!    never moves and every report is bit-identical to the pre-governor
+//!    pipeline (DESIGN.md §10).
 //!
 //! At equal timestamps events fire `WindowEnd < WindowStart < Frame`, which
 //! reproduces the legacy monolithic loop's intra-window order exactly:
@@ -35,10 +41,12 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::config::{SocConfig, VDD_MAX};
+use crate::config::SocConfig;
 use crate::coordinator::engine::{CutieAdapter, Engine, PulpAdapter, SneAdapter};
 use crate::coordinator::fusion::{FlowSummary, FusionState, NavCommand};
-use crate::coordinator::power_mgr::PowerPolicy;
+use crate::coordinator::governor::{
+    frame_cadence_ns, note_job, Governor, LoadSnapshot, PowerConfig, ENGINE_DOMAINS,
+};
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::telemetry::Snapshot;
 use crate::event::Event;
@@ -60,7 +68,9 @@ pub struct MissionConfig {
     pub frame_fps: f64,
     /// DVS sampling rate inside a window (Hz).
     pub dvs_sample_hz: f64,
-    pub policy: PowerPolicy,
+    /// Power management: initial rail, idle gating, and which
+    /// [`Governor`] runs the epoch ticks.
+    pub power: PowerConfig,
     pub telemetry_dt_s: f64,
     /// Load AOT artifacts from here; None = analytical-only mission.
     pub artifacts_dir: Option<PathBuf>,
@@ -76,7 +86,7 @@ impl Default for MissionConfig {
             window_ms: 10.0,
             frame_fps: 30.0,
             dvs_sample_hz: 1000.0,
-            policy: PowerPolicy::default(),
+            power: PowerConfig::default(),
             telemetry_dt_s: 0.25,
             artifacts_dir: None,
             print_live: false,
@@ -144,6 +154,8 @@ pub struct MissionReport {
     pub energy_per_domain_j: [f64; 4],
     pub avoid_fraction: f64,
     pub runtime_calls: u64,
+    /// Mid-mission rail moves the governor issued (0 under `Fixed`).
+    pub rail_transitions: u64,
     pub snapshots: Vec<Snapshot>,
     pub last_commands: Vec<NavCommand>,
 }
@@ -167,6 +179,7 @@ impl MissionReport {
             ("energy_per_domain_j", Value::arr_f64(&self.energy_per_domain_j)),
             ("avoid_fraction", Value::Num(self.avoid_fraction)),
             ("runtime_calls", Value::Num(self.runtime_calls as f64)),
+            ("rail_transitions", Value::Num(self.rail_transitions as f64)),
         ])
     }
 
@@ -194,9 +207,9 @@ enum MissionEvent {
 
 /// Tie-break priorities at equal timestamps: close the old window, open the
 /// new one, then land frames — the legacy loop's intra-window order.
-const PRIO_WINDOW_END: u8 = 0;
-const PRIO_WINDOW_START: u8 = 1;
-const PRIO_FRAME: u8 = 2;
+const PRIO_WINDOW_END: u16 = 0;
+const PRIO_WINDOW_START: u16 = 1;
+const PRIO_FRAME: u16 = 2;
 
 /// Per-run accumulators threaded through the event handlers.
 struct RunState {
@@ -207,6 +220,15 @@ struct RunState {
     snap_start_ns: u64,
     activity_sum: f64,
     avoid_count: u64,
+    /// Frame-job deadline (ns): the frame cadence, floored at one window.
+    frame_deadline_ns: u64,
+    /// Minimum job slack observed this epoch (`i64::MAX` = no jobs) —
+    /// the governor's per-epoch deadline signal.
+    epoch_slack_ns: i64,
+    /// Worst service fraction this epoch (0.0 = no jobs): the
+    /// class-comparable deadline signal the `DeadlineAware` governor
+    /// projects across rails.
+    epoch_service_frac: f64,
 }
 
 /// The mission runner: one SoC, one scheduler, three engines.
@@ -219,6 +241,8 @@ pub struct Mission {
     /// The sensor front end: live sensing or shared trace replay.
     source: EventSource,
     fusion: FusionState,
+    /// The power-management governor, ticked once per scheduling window.
+    governor: Box<dyn Governor>,
     runtime: Option<Runtime>,
     /// Persistent FireNet LIF state (functional path).
     firenet_state: Vec<Vec<f32>>,
@@ -249,8 +273,7 @@ impl Mission {
              (functional) missions must sense live"
         );
         let mut soc = Soc::new(soc_cfg.clone());
-        let vdd = cfg.policy.vdd.unwrap_or(VDD_MAX);
-        soc.power.set_vdd(vdd);
+        soc.power.set_vdd(cfg.power.initial_vdd());
         soc.power_on_all();
 
         // Stage the mission's working set in L2 — if it doesn't fit, this
@@ -294,12 +317,17 @@ impl Mission {
             None => EventSource::live(cfg.seed, cfg.frame_fps, cfg.scene),
         };
 
+        // a mission is the one-tenant QoS case: default priority, job
+        // deadlines lowered onto the cadences (window / frame period)
+        let governor = cfg.power.build(1);
+
         Ok(Mission {
             sne: SneAdapter::new(&soc_cfg),
             cutie: CutieAdapter::new(&soc_cfg),
             pulp: PulpAdapter::new(&soc_cfg),
             source,
             fusion: FusionState::new(),
+            governor,
             runtime,
             firenet_state,
             firenet_dims: (fh, fw),
@@ -338,6 +366,7 @@ impl Mission {
             energy_per_domain_j: [0.0; 4],
             avoid_fraction: 0.0,
             runtime_calls: 0,
+            rail_transitions: 0,
             snapshots: Vec::new(),
             last_commands: Vec::new(),
         };
@@ -349,6 +378,9 @@ impl Mission {
             snap_start_ns: 0,
             activity_sum: 0.0,
             avoid_count: 0,
+            frame_deadline_ns: frame_cadence_ns(self.cfg.frame_fps, window_ns),
+            epoch_slack_ns: i64::MAX,
+            epoch_service_frac: 0.0,
         };
 
         let mut sched: Scheduler<MissionEvent> = Scheduler::new();
@@ -406,6 +438,7 @@ impl Mission {
         report.avg_activity = st.activity_sum / n_windows.max(1) as f64;
         report.avoid_fraction = st.avoid_count as f64 / report.commands.max(1) as f64;
         report.runtime_calls = self.runtime.as_ref().map_or(0, |r| r.calls.get());
+        report.rail_transitions = self.soc.power.ledger.rail_transitions;
         Ok(report)
     }
 
@@ -476,6 +509,8 @@ impl Mission {
 
         let sne_dur = self.sne.job_ns(activity, st.vdd);
         if self.sne.dispatch(&mut self.soc.power, t0, sne_dur, window_ns) {
+            let done = self.sne.slot().busy_until_ns;
+            note_job(&mut st.epoch_slack_ns, &mut st.epoch_service_frac, window_ns, t0, done);
             report.sne_inf += 1;
             st.snap.sne_inf += 1;
             if let Some(fs) = flow_summary {
@@ -508,6 +543,14 @@ impl Mission {
         // CUTIE classification
         let cutie_dur = self.cutie.job_ns(st.vdd);
         if self.cutie.dispatch(&mut self.soc.power, dma_done, cutie_dur, window_ns) {
+            let done = self.cutie.slot().busy_until_ns;
+            note_job(
+                &mut st.epoch_slack_ns,
+                &mut st.epoch_service_frac,
+                st.frame_deadline_ns,
+                dma_done,
+                done,
+            );
             report.cutie_inf += 1;
             st.snap.cutie_inf += 1;
             let class = if let Some(rt) = &self.runtime {
@@ -529,6 +572,14 @@ impl Mission {
         // PULP DroNet
         let pulp_dur = self.pulp.job_ns(st.vdd);
         if self.pulp.dispatch(&mut self.soc.power, dma_done, pulp_dur, window_ns) {
+            let done = self.pulp.slot().busy_until_ns;
+            note_job(
+                &mut st.epoch_slack_ns,
+                &mut st.epoch_service_frac,
+                st.frame_deadline_ns,
+                dma_done,
+                done,
+            );
             report.pulp_inf += 1;
             st.snap.pulp_inf += 1;
             let (steer, coll) = if let Some(rt) = &self.runtime {
@@ -567,22 +618,22 @@ impl Mission {
             report.last_commands.push(cmd);
         }
 
-        // -- 5. power accounting + gating policy ----------------------
+        // -- 5. power accounting --------------------------------------
         let dt_s = window_ns as f64 * 1e-9;
+        let mut busy_frac = [0.0f64; 3];
+        let mut idle_s = [0.0f64; 3];
+        let mut gated = [false; 3];
         // built inline from disjoint fields so `self.soc.power` stays
         // borrowable inside the loop
         let engines: [&mut dyn Engine; 3] = [&mut self.sne, &mut self.cutie, &mut self.pulp];
-        for eng in engines {
+        for (i, eng) in engines.into_iter().enumerate() {
             let d = eng.domain();
             let busy_ns = eng.complete(window_ns);
             let u = busy_ns as f64 / window_ns as f64;
             self.soc.power.account(d, u, dt_s);
-            // gate if idle long enough
-            let idle_s = (t1.saturating_sub(eng.last_active_ns())) as f64 * 1e-9;
-            if !self.soc.power.is_gated(d) && self.cfg.policy.should_gate(d, idle_s) {
-                self.soc.power.gate(d);
-                st.snap.any_gated = true;
-            }
+            busy_frac[i] = u;
+            idle_s[i] = (t1.saturating_sub(eng.last_active_ns())) as f64 * 1e-9;
+            gated[i] = self.soc.power.is_gated(d);
         }
         // fabric: DMA + dispatch + fusion code on the FC
         self.soc.dma.retire(t1);
@@ -590,6 +641,33 @@ impl Mission {
         self.soc.power.account(DomainId::Fabric, fab_u.min(1.0), dt_s);
         self.soc.power.advance_time(dt_s);
         self.soc.clock.advance_to(t1);
+
+        // -- 6. the governor epoch ------------------------------------
+        // one decision per scheduling window, fed the window just
+        // accounted; gates apply to idle engines, a rail move (DVFS
+        // governors only) goes through the transition-cost model
+        let slack = [std::mem::replace(&mut st.epoch_slack_ns, i64::MAX)];
+        let frac = [std::mem::replace(&mut st.epoch_service_frac, 0.0)];
+        let decision = self.governor.on_epoch(&LoadSnapshot {
+            epoch: w,
+            window_ns,
+            vdd: st.vdd,
+            busy_frac,
+            idle_s,
+            gated,
+            tenant_slack_ns: &slack,
+            tenant_service_frac: &frac,
+        });
+        for (i, d) in ENGINE_DOMAINS.iter().enumerate() {
+            if decision.gate[i] && !self.soc.power.is_gated(*d) {
+                self.soc.power.gate(*d);
+                st.snap.any_gated = true;
+            }
+        }
+        if decision.vdd != st.vdd {
+            self.soc.power.rail_transition(decision.vdd);
+            st.vdd = self.soc.power.vdd();
+        }
 
         // -- telemetry --------------------------------------------
         if (t1 - st.snap_start_ns) as f64 * 1e-9 >= self.cfg.telemetry_dt_s
@@ -737,7 +815,7 @@ mod tests {
         let mut cfg = quick_cfg();
         // static scene, almost no events; aggressive gating
         cfg.scene = SceneKind::TranslatingEdge { vel_per_s: 0.0 };
-        cfg.policy = PowerPolicy { idle_gate_s: Some(0.02), vdd: Some(0.8) };
+        cfg.power = PowerConfig { idle_gate_s: Some(0.02), ..Default::default() };
         let mut m = Mission::new(SocConfig::kraken(), cfg).unwrap();
         let r = m.run().unwrap();
         // SNE still runs (windows always dispatch), but overall power must

@@ -19,8 +19,10 @@ use std::collections::BinaryHeap;
 pub struct Scheduled<T> {
     /// Fire time (simulated ns).
     pub t_ns: u64,
-    /// Tie-break class at equal timestamps (lower fires first).
-    pub prio: u8,
+    /// Tie-break class at equal timestamps (lower fires first). Wide
+    /// enough for the workload layer to fold QoS priority ranks into the
+    /// per-tenant rotation (up to `priority_rank * tenants + rotation`).
+    pub prio: u16,
     pub payload: T,
 }
 
@@ -29,13 +31,13 @@ pub struct Scheduled<T> {
 #[derive(Debug)]
 struct Entry<T> {
     t_ns: u64,
-    prio: u8,
+    prio: u16,
     seq: u64,
     payload: T,
 }
 
 impl<T> Entry<T> {
-    fn key(&self) -> (u64, u8, u64) {
+    fn key(&self) -> (u64, u16, u64) {
         (self.t_ns, self.prio, self.seq)
     }
 }
@@ -82,7 +84,7 @@ impl<T> Scheduler<T> {
     /// Schedule `payload` at absolute time `t_ns`. Scheduling into the past
     /// (before the most recently popped event) would break causality, so it
     /// is debug-asserted.
-    pub fn push(&mut self, t_ns: u64, prio: u8, payload: T) {
+    pub fn push(&mut self, t_ns: u64, prio: u16, payload: T) {
         debug_assert!(
             t_ns >= self.now_ns,
             "scheduling into the past: {t_ns} < now {}",

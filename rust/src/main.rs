@@ -22,7 +22,8 @@
 use kraken::baselines::{BinarEye, Tianjic, Vega};
 use kraken::config::{Precision, SocConfig};
 use kraken::coordinator::{
-    FleetConfig, Mission, MissionConfig, PowerPolicy, Workload, WorkloadConfig,
+    FleetConfig, GovernorKind, Mission, MissionConfig, PowerConfig, QosSpec, Workload,
+    WorkloadConfig,
 };
 use kraken::cutie::CutieEngine;
 use kraken::metrics::{fmt_eff, fmt_energy, fmt_power, Series};
@@ -52,19 +53,25 @@ COMMANDS:
                                   run the Fig. 2 mission
   fleet [--missions N] [--threads T] [--duration S] [--scene ...]
         [--seed BASE] [--vdd V] [--vdds V1,V2,...] [--gates G1,off,...]
-        [--json]
+        [--governors G1,G2,...] [--json]
                                   run N missions in parallel (seeds
                                   BASE..BASE+N, one SoC per worker);
-                                  --vdds / --gates lift the fleet to a
-                                  config grid (cross-product cells) whose
-                                  cells share one captured sensor trace
-                                  per distinct scene/seed (DESIGN.md §9)
+                                  --vdds / --gates / --governors lift the
+                                  fleet to a config grid (cross-product
+                                  cells) whose cells share one captured
+                                  sensor trace per distinct scene/seed
+                                  (DESIGN.md §9, §10)
   workload [--tenants N] [--duration S] [--scene ...] [--seed BASE]
-           [--vdd V] [--window-ms MS] [--json]
+           [--vdd V] [--window-ms MS]
+           [--governor fixed|ladder|deadline] [--qos P[:DLms],...] [--json]
                                   run N tenant sensor streams sharing ONE
                                   SoC's engines (stream seeds BASE..BASE+N):
                                   per-tenant rates plus shared-engine
-                                  queueing/drop statistics (DESIGN.md §8)
+                                  queueing/drop statistics (DESIGN.md §8);
+                                  --governor picks the DVFS governor and
+                                  --qos gives tenant i priority P (0 =
+                                  highest) and an optional deadline in ms
+                                  (DESIGN.md §10)
   serve [--stdio | --listen ADDR] [--workers N] [--queue N] [--cache-cap N]
         [--trace-cache N]
                                   resident mission service: JSON-lines
@@ -191,9 +198,13 @@ fn run() -> kraken::Result<()> {
             let vdd: f64 = args.opt("vdd")?.map_or(Ok(0.8), |s| s.parse())?;
             let vdds = args.opt("vdds")?;
             let gates = args.opt("gates")?;
+            let governors = args.opt("governors")?;
             let json = args.flag("json");
             args.finish()?;
-            run_fleet_cmd(cfg, missions, threads, duration, &scene, seed, vdd, vdds, gates, json)
+            run_fleet_cmd(
+                cfg, missions, threads, duration, &scene, seed, vdd, vdds, gates, governors,
+                json,
+            )
         }
         Some("workload") => {
             let tenants: usize = args.opt("tenants")?.map_or(Ok(2), |s| s.parse())?;
@@ -202,9 +213,13 @@ fn run() -> kraken::Result<()> {
             let seed: u64 = args.opt("seed")?.map_or(Ok(7), |s| s.parse())?;
             let vdd: f64 = args.opt("vdd")?.map_or(Ok(0.8), |s| s.parse())?;
             let window_ms: f64 = args.opt("window-ms")?.map_or(Ok(10.0), |s| s.parse())?;
+            let governor = args.opt("governor")?;
+            let qos = args.opt("qos")?;
             let json = args.flag("json");
             args.finish()?;
-            run_workload_cmd(cfg, tenants, duration, &scene, seed, vdd, window_ms, json)
+            run_workload_cmd(
+                cfg, tenants, duration, &scene, seed, vdd, window_ms, governor, qos, json,
+            )
         }
         Some("serve") => {
             let stdio = args.flag("stdio");
@@ -374,7 +389,7 @@ fn run_mission(
         duration_s: duration,
         scene,
         seed,
-        policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
+        power: PowerConfig::fixed(vdd),
         artifacts_dir: artifacts.map(Into::into),
         print_live: live,
         ..Default::default()
@@ -445,6 +460,42 @@ fn parse_f64_list(s: &str) -> kraken::Result<Vec<f64>> {
         .collect()
 }
 
+/// Parse a comma-separated governor-axis list (`fixed,ladder,deadline`).
+fn parse_governor_list(s: &str) -> kraken::Result<Vec<GovernorKind>> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| GovernorKind::parse(t.trim()))
+        .collect()
+}
+
+/// Parse the per-tenant `--qos` list: one `P` or `P:DLms` element per
+/// tenant, where `P` is the arbitration priority (0 = highest) and `DLms`
+/// an optional per-job deadline in milliseconds (default: the job's own
+/// cadence).
+fn parse_qos_list(s: &str) -> kraken::Result<Vec<QosSpec>> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| {
+            let t = t.trim();
+            let (p, dl) = match t.split_once(':') {
+                Some((p, dl)) => (p, Some(dl)),
+                None => (t, None),
+            };
+            let priority: u8 = p
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad qos priority '{p}': {e}"))?;
+            let deadline_ms = dl
+                .map(|dl| {
+                    dl.parse::<f64>()
+                        .map_err(|e| anyhow::anyhow!("bad qos deadline '{dl}' (ms): {e}"))
+                })
+                .transpose()?;
+            // bounds/sentinel handling shared with the serve protocol
+            QosSpec::from_ms(priority, deadline_ms)
+        })
+        .collect()
+}
+
 /// Parse a comma-separated gating-axis list: each element is an
 /// `idle_gate_s` in seconds, or `off` for gating disabled.
 fn parse_gate_list(s: &str) -> kraken::Result<Vec<Option<f64>>> {
@@ -474,6 +525,7 @@ fn run_fleet_cmd(
     vdd: f64,
     vdds: Option<String>,
     gates: Option<String>,
+    governors: Option<String>,
     json: bool,
 ) -> kraken::Result<()> {
     anyhow::ensure!(missions > 0, "--missions must be at least 1");
@@ -481,7 +533,7 @@ fn run_fleet_cmd(
         duration_s: duration,
         scene: SceneKind::parse(scene, base_seed)?,
         seed: base_seed,
-        policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
+        power: PowerConfig::fixed(vdd),
         ..Default::default()
     };
     let fleet = FleetConfig { missions, threads, base_seed, base, soc: cfg };
@@ -496,7 +548,11 @@ fn run_fleet_cmd(
     if let Some(g) = gates {
         grid.idle_gates = parse_gate_list(&g)?;
     }
-    let has_axes = !grid.vdds.is_empty() || !grid.idle_gates.is_empty();
+    if let Some(g) = governors {
+        grid.governors = parse_governor_list(&g)?;
+    }
+    let has_axes =
+        !grid.vdds.is_empty() || !grid.idle_gates.is_empty() || !grid.governors.is_empty();
     let gr = run_grid(&grid)?;
     if json {
         if has_axes {
@@ -536,6 +592,8 @@ fn run_workload_cmd(
     seed: u64,
     vdd: f64,
     window_ms: f64,
+    governor: Option<String>,
+    qos: Option<String>,
     json: bool,
 ) -> kraken::Result<()> {
     let base = MissionConfig {
@@ -543,10 +601,24 @@ fn run_workload_cmd(
         scene: SceneKind::parse(scene, seed)?,
         seed,
         window_ms,
-        policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(vdd) },
+        power: PowerConfig::fixed(vdd),
         ..Default::default()
     };
-    let wcfg = WorkloadConfig::fan_out(&base, tenants);
+    let mut wcfg = WorkloadConfig::fan_out(&base, tenants);
+    if let Some(g) = governor {
+        wcfg.power.governor = GovernorKind::parse(&g)?;
+    }
+    if let Some(q) = qos {
+        let specs = parse_qos_list(&q)?;
+        anyhow::ensure!(
+            specs.len() == tenants,
+            "--qos names {} tenant(s), the workload has {tenants}",
+            specs.len()
+        );
+        for (s, q) in wcfg.streams.iter_mut().zip(specs) {
+            s.qos = q;
+        }
+    }
     let mut workload = Workload::new(cfg, wcfg)?;
     let r = workload.run()?;
     if json {
@@ -628,6 +700,28 @@ mod tests {
             vec![Some(0.05), None]
         );
         assert!(super::parse_gate_list("soon").is_err());
+        use kraken::coordinator::GovernorKind;
+        assert_eq!(
+            super::parse_governor_list("fixed, ladder,deadline").unwrap(),
+            vec![GovernorKind::Fixed, GovernorKind::Ladder, GovernorKind::DeadlineAware]
+        );
+        assert!(super::parse_governor_list("overdrive").is_err());
+    }
+
+    #[test]
+    fn qos_list_parsing() {
+        let qos = super::parse_qos_list("0:33.3, 1, 2:100").unwrap();
+        assert_eq!(qos.len(), 3);
+        assert_eq!(qos[0].priority, 0);
+        assert_eq!(qos[0].deadline_ns, 33_300_000);
+        assert_eq!(qos[1].priority, 1);
+        assert_eq!(qos[1].deadline_ns, 0, "no deadline = cadence");
+        assert_eq!(qos[2].deadline_ns, 100_000_000);
+        assert!(super::parse_qos_list("best-effort").is_err());
+        assert!(super::parse_qos_list("0:-5").is_err());
+        // sub-microsecond deadlines would truncate onto the 0 = cadence
+        // sentinel; rejected like the serve protocol rejects them
+        assert!(super::parse_qos_list("0:0.0000005").is_err());
     }
 
     #[test]

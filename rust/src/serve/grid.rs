@@ -2,11 +2,12 @@
 //!
 //! `FleetConfig` replicates one base mission over a seed range. A
 //! [`GridConfig`] generalizes that to a sharded parameter sweep: any subset
-//! of {seed, duration, scene, vdd, gating policy} can carry a list of
-//! values, and the grid is the cross-product of all non-empty axes (an
-//! empty axis inherits the base config's value). Cells are emitted in a
-//! fixed nested order — seed, then duration, then scene, then vdd, then
-//! gate, innermost last — so a grid is a deterministic `Vec<MissionConfig>`
+//! of {seed, duration, scene, vdd, gating policy, power governor} can
+//! carry a list of values, and the grid is the cross-product of all
+//! non-empty axes (an empty axis inherits the base config's value). Cells
+//! are emitted in a fixed nested order — seed, then duration, then scene,
+//! then vdd, then gate, then governor, innermost last — so a grid is a
+//! deterministic `Vec<MissionConfig>`
 //! that runs through the existing fleet machinery
 //! ([`crate::coordinator::fleet::run_configs`]) or the serve worker pool,
 //! with bit-identical per-cell reports either way.
@@ -20,6 +21,7 @@ use crate::coordinator::fleet::{
     run_configs_shared, run_workload_configs_shared, FleetConfig, FleetReport,
     WorkloadFleetReport,
 };
+use crate::coordinator::governor::GovernorKind;
 use crate::coordinator::pipeline::MissionConfig;
 use crate::coordinator::workload::WorkloadConfig;
 use crate::sensors::scene::SceneKind;
@@ -38,6 +40,9 @@ pub struct GridConfig {
     /// Gating-policy axis: each element is an `idle_gate_s` value, with
     /// `None` meaning gating disabled for that cell.
     pub idle_gates: Vec<Option<f64>>,
+    /// Power-governor axis ([`GovernorKind`]); empty = inherit the base
+    /// config's governor. The fixed-vs-DVFS comparison surface.
+    pub governors: Vec<GovernorKind>,
     /// Tenant-count axis: each element fans the cell's mission out into
     /// that many sensor streams sharing one SoC
     /// ([`WorkloadConfig::fan_out`]). Empty = single-tenant cells. Grids
@@ -70,7 +75,7 @@ fn axis<T: Copy>(xs: &[T]) -> Vec<Option<T>> {
 /// Checked cross-product size of a grid's axis lengths (an empty axis
 /// counts as the single inherited cell). `None` on usize overflow — the
 /// protocol layer uses this to reject absurd grids before building them.
-pub fn cell_count(axis_lens: [usize; 6]) -> Option<usize> {
+pub fn cell_count(axis_lens: [usize; 7]) -> Option<usize> {
     axis_lens
         .iter()
         .try_fold(1usize, |acc, &n| acc.checked_mul(n.max(1)))
@@ -88,6 +93,7 @@ impl GridConfig {
             scenes: Vec::new(),
             vdds: Vec::new(),
             idle_gates: Vec::new(),
+            governors: Vec::new(),
             tenants: Vec::new(),
             threads,
         }
@@ -117,6 +123,7 @@ impl GridConfig {
             self.scenes.len(),
             self.vdds.len(),
             self.idle_gates.len(),
+            self.governors.len(),
             self.tenants.len(),
         ])
         .unwrap_or(usize::MAX)
@@ -132,7 +139,7 @@ impl GridConfig {
         false // every axis has at least the inherited cell
     }
 
-    /// All cells in deterministic nested order (seed outermost, gate
+    /// All cells in deterministic nested order (seed outermost, governor
     /// innermost). Axis values overwrite the base config only when the
     /// axis is non-empty, so a grid of empty axes is exactly `[base]`.
     /// Mission cells cannot express a tenants axis — even an all-1s one
@@ -147,7 +154,7 @@ impl GridConfig {
         self.mission_axis_cells()
     }
 
-    /// The 5 mission axes resolved to cells, ignoring the tenants axis
+    /// The 6 mission axes resolved to cells, ignoring the tenants axis
     /// (each of these fans out per tenants value in `workload_cells`).
     fn mission_axis_cells(&self) -> Vec<GridCell> {
         // capacity capped: len() saturates on overflow and the protocol
@@ -159,41 +166,47 @@ impl GridConfig {
                 for &scene in &axis(&self.scenes) {
                     for &vdd in &axis(&self.vdds) {
                         for &gate in &axis(&self.idle_gates) {
-                            let mut cfg = self.base.clone();
-                            if let Some(d) = dur {
-                                cfg.duration_s = d;
+                            for &gov in &axis(&self.governors) {
+                                let mut cfg = self.base.clone();
+                                if let Some(d) = dur {
+                                    cfg.duration_s = d;
+                                }
+                                if let Some(s) = scene {
+                                    cfg.scene = s;
+                                }
+                                if let Some(v) = vdd {
+                                    cfg.power.vdd = Some(v);
+                                }
+                                if let Some(g) = gate {
+                                    cfg.power.idle_gate_s = g;
+                                }
+                                if let Some(g) = gov {
+                                    cfg.power.governor = g;
+                                }
+                                // reseed last so the seed reaches the scene
+                                // (matches MissionConfig::with_seed discipline)
+                                if let Some(s) = seed {
+                                    cfg = cfg.with_seed(s);
+                                }
+                                let vdd_s = match cfg.power.vdd {
+                                    Some(v) => format!("{v:.2}"),
+                                    None => "auto".into(),
+                                };
+                                let gate_s = match cfg.power.idle_gate_s {
+                                    Some(g) => format!("{g:.3}"),
+                                    None => "off".into(),
+                                };
+                                let label = format!(
+                                    "seed={} dur={:.3}s scene={} vdd={} gate={} gov={}",
+                                    cfg.seed,
+                                    cfg.duration_s,
+                                    cfg.scene.label(),
+                                    vdd_s,
+                                    gate_s,
+                                    cfg.power.governor.label()
+                                );
+                                out.push(GridCell { label, cfg });
                             }
-                            if let Some(s) = scene {
-                                cfg.scene = s;
-                            }
-                            if let Some(v) = vdd {
-                                cfg.policy.vdd = Some(v);
-                            }
-                            if let Some(g) = gate {
-                                cfg.policy.idle_gate_s = g;
-                            }
-                            // reseed last so the seed reaches the scene
-                            // (matches MissionConfig::with_seed discipline)
-                            if let Some(s) = seed {
-                                cfg = cfg.with_seed(s);
-                            }
-                            let vdd_s = match cfg.policy.vdd {
-                                Some(v) => format!("{v:.2}"),
-                                None => "auto".into(),
-                            };
-                            let gate_s = match cfg.policy.idle_gate_s {
-                                Some(g) => format!("{g:.3}"),
-                                None => "off".into(),
-                            };
-                            let label = format!(
-                                "seed={} dur={:.3}s scene={} vdd={} gate={}",
-                                cfg.seed,
-                                cfg.duration_s,
-                                cfg.scene.label(),
-                                vdd_s,
-                                gate_s
-                            );
-                            out.push(GridCell { label, cfg });
                         }
                     }
                 }
@@ -207,7 +220,7 @@ impl GridConfig {
         self.cells().into_iter().map(|c| c.cfg).collect()
     }
 
-    /// All cells resolved as workloads: the 5 mission axes in their usual
+    /// All cells resolved as workloads: the 6 mission axes in their usual
     /// nested order, then the tenants axis innermost. Every mission cell
     /// fans out per tenants value ([`WorkloadConfig::fan_out`]); an empty
     /// tenants axis yields single-tenant workloads, so
@@ -395,7 +408,7 @@ mod tests {
         let cells = g.cells();
         let got: Vec<(u64, f64)> = cells
             .iter()
-            .map(|c| (c.cfg.seed, c.cfg.policy.vdd.unwrap()))
+            .map(|c| (c.cfg.seed, c.cfg.power.vdd.unwrap()))
             .collect();
         assert_eq!(got, vec![(1, 0.6), (1, 0.8), (2, 0.6), (2, 0.8)]);
         // seeds propagate into the (corridor) scene
@@ -446,9 +459,9 @@ mod tests {
 
     #[test]
     fn cell_count_is_checked_against_overflow() {
-        assert_eq!(cell_count([0, 0, 0, 0, 0, 0]), Some(1));
-        assert_eq!(cell_count([2, 0, 3, 0, 0, 0]), Some(6));
-        assert_eq!(cell_count([usize::MAX, 2, 1, 1, 1, 1]), None);
+        assert_eq!(cell_count([0, 0, 0, 0, 0, 0, 0]), Some(1));
+        assert_eq!(cell_count([2, 0, 3, 0, 0, 0, 0]), Some(6));
+        assert_eq!(cell_count([usize::MAX, 2, 1, 1, 1, 1, 1]), None);
         let mut g = base_grid();
         g.seeds = vec![1, 2];
         g.idle_gates = vec![Some(0.01), None, Some(0.1)];
@@ -466,7 +479,7 @@ mod tests {
         assert_eq!(cells.len(), 4);
         let got: Vec<(f64, usize)> = cells
             .iter()
-            .map(|c| (c.cfg.policy.vdd.unwrap(), c.cfg.tenants()))
+            .map(|c| (c.cfg.power.vdd.unwrap(), c.cfg.tenants()))
             .collect();
         assert_eq!(got, vec![(0.6, 1), (0.6, 2), (0.8, 1), (0.8, 2)]);
         assert!(cells[1].label.contains("tenants=2"), "{}", cells[1].label);
@@ -496,12 +509,31 @@ mod tests {
     }
 
     #[test]
+    fn governor_axis_fans_out_and_labels() {
+        let mut g = base_grid();
+        g.governors = vec![GovernorKind::Fixed, GovernorKind::Ladder];
+        assert_eq!(g.len(), 2);
+        let cells = g.cells();
+        assert_eq!(cells[0].cfg.power.governor, GovernorKind::Fixed);
+        assert_eq!(cells[1].cfg.power.governor, GovernorKind::Ladder);
+        assert!(cells[0].label.contains("gov=fixed"), "{}", cells[0].label);
+        assert!(cells[1].label.contains("gov=ladder"), "{}", cells[1].label);
+        // the governor axis composes with the workload path too
+        g.tenants = vec![1, 2];
+        let wcells = g.workload_cells();
+        assert_eq!(wcells.len(), 4);
+        assert_eq!(wcells[3].cfg.power.governor, GovernorKind::Ladder);
+        assert_eq!(wcells[3].cfg.tenants(), 2);
+        assert!(wcells[3].label.contains("tenants=2"), "{}", wcells[3].label);
+    }
+
+    #[test]
     fn gate_axis_carries_disabled_cells() {
         let mut g = base_grid();
         g.idle_gates = vec![Some(0.02), None];
         let cells = g.cells();
-        assert_eq!(cells[0].cfg.policy.idle_gate_s, Some(0.02));
-        assert_eq!(cells[1].cfg.policy.idle_gate_s, None);
+        assert_eq!(cells[0].cfg.power.idle_gate_s, Some(0.02));
+        assert_eq!(cells[1].cfg.power.idle_gate_s, None);
         assert!(cells[1].label.contains("gate=off"));
     }
 }

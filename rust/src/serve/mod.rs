@@ -7,10 +7,13 @@
 //! field) over stdio or TCP and answers from warm state. Three layers sit
 //! under the request loop:
 //!
-//! * [`pool`] — a persistent worker pool with a **bounded** queue and
-//!   explicit backpressure (a batch that does not fit is rejected with an
-//!   error, never buffered unboundedly); it runs single-tenant missions
-//!   and multi-tenant workloads through the same queue;
+//! * [`pool`] — a persistent worker pool with a **bounded**,
+//!   priority-ordered queue and explicit backpressure (a batch that does
+//!   not fit is rejected with an error, never buffered unboundedly); it
+//!   runs single-tenant missions and multi-tenant workloads through the
+//!   same queue, popping the best `QosSpec` priority first (FIFO within a
+//!   class), and exposes each worker's live rail state (vdd, gated
+//!   domains, rail transitions) to `stats`;
 //! * [`cache`] — a deterministic result cache keyed by a canonical hash of
 //!   the resolved configs (`MissionConfig`s or `WorkloadConfig`s) +
 //!   `SocConfig`; because simulations are bit-reproducible, a hit replays
@@ -136,7 +139,16 @@ impl Server {
             Request::Run { cfg } => self.serve_missions("run", vec![cfg], None),
             Request::Fleet { cfgs } => self.serve_missions("fleet", cfgs, None),
             Request::Workload { cfg } => self.serve_workloads("workload", vec![cfg], None),
-            Request::Grid { base, seeds, durations, scenes, vdds, idle_gates, tenants } => {
+            Request::Grid {
+                base,
+                seeds,
+                durations,
+                scenes,
+                vdds,
+                idle_gates,
+                governors,
+                tenants,
+            } => {
                 let grid = GridConfig {
                     soc: self.soc.clone(),
                     base,
@@ -145,6 +157,7 @@ impl Server {
                     scenes,
                     vdds,
                     idle_gates,
+                    governors,
                     tenants,
                     threads: self.pool.workers(),
                 };
@@ -370,6 +383,27 @@ impl Server {
             .into_iter()
             .map(|n| Value::Num(n as f64))
             .collect();
+        // live rail state per worker: current vdd + gated domains of the
+        // running (or last) simulation, plus cumulative rail transitions
+        let rails = self.pool.worker_rails();
+        let rail_transitions_total: u64 = rails.iter().map(|r| r.rail_transitions).sum();
+        let rail_workers: Vec<Value> = rails
+            .iter()
+            .map(|r| {
+                let gated: Vec<Value> = crate::soc::power::DomainId::ALL
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| r.gated_mask & (1 << i) != 0)
+                    .map(|(_, d)| Value::Str(d.label().to_string()))
+                    .collect();
+                Value::obj(vec![
+                    ("busy", Value::Bool(r.busy)),
+                    ("vdd", Value::Num(r.vdd)),
+                    ("gated", Value::Arr(gated)),
+                    ("rail_transitions", Value::Num(r.rail_transitions as f64)),
+                ])
+            })
+            .collect();
         Value::obj(vec![
             ("ok", Value::Bool(true)),
             ("kind", Value::Str(kind.to_string())),
@@ -383,6 +417,13 @@ impl Server {
             ("queue_depth", Value::Num(self.pool.queue_depth() as f64)),
             ("queue_cap", Value::Num(self.pool.queue_cap() as f64)),
             ("jobs_done", Value::Num(self.pool.jobs_done() as f64)),
+            (
+                "rail",
+                Value::obj(vec![
+                    ("transitions_total", Value::Num(rail_transitions_total as f64)),
+                    ("workers", Value::Arr(rail_workers)),
+                ]),
+            ),
             ("shutting_down", Value::Bool(self.is_shutting_down() || self.pool.is_shut_down())),
             (
                 "cache",
@@ -600,6 +641,31 @@ mod tests {
         let tc = stats.get("trace_cache").unwrap();
         assert_eq!(tc.get("entries").and_then(Value::as_u64), Some(0));
         assert_eq!(tc.get("cap").and_then(Value::as_u64), Some(0));
+    }
+
+    #[test]
+    fn stats_report_rail_state_per_worker() {
+        let s = server();
+        s.handle_line(RUN).unwrap();
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        let rail = stats.get("rail").expect("rail stats");
+        assert_eq!(rail.get("transitions_total").and_then(Value::as_u64), Some(0));
+        let workers = rail.get("workers").and_then(Value::as_arr).unwrap();
+        assert_eq!(workers.len(), 2);
+        // the worker that ran the fixed mission shows the default rail
+        assert!(workers
+            .iter()
+            .any(|w| w.get("vdd").and_then(Value::as_f64) == Some(0.8)));
+        // a DVFS-governed workload leaves its transitions in the totals
+        let line = r#"{"kind":"workload","v":2,"tenants":1,"duration_s":1.0,"frame_fps":10.0,"dvs_sample_hz":300.0,"governor":"ladder","seed":5}"#;
+        let v = parse(&s.handle_line(line).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+        let report = v.get("report").unwrap();
+        assert_eq!(report.get("governor").and_then(Value::as_str), Some("ladder"));
+        assert!(report.get("rail_transitions").and_then(Value::as_f64).unwrap() > 0.0);
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        let rail = stats.get("rail").expect("rail stats");
+        assert!(rail.get("transitions_total").and_then(Value::as_u64).unwrap() > 0);
     }
 
     #[test]

@@ -7,6 +7,20 @@
 //! rejected whole with [`PoolError::Busy`] — the server never buffers
 //! unboundedly and the client sees the overload immediately.
 //!
+//! The queue is **priority-ordered** by the same [`QosSpec`] the workload
+//! layer arbitrates with: a job's priority is the best (lowest) priority
+//! among its tenant streams (missions default to 0), and workers pop the
+//! lowest `(priority, submission seq)` first — FIFO within a priority
+//! class, so equal-priority work keeps today's order bit for bit while a
+//! high-QoS workload overtakes queued low-priority batches. Priority is
+//! **strict** by design (no aging — aging on wall-clock would make pop
+//! order nondeterministic): a queued low-priority batch waits as long as
+//! higher-priority traffic keeps arriving. The bounded queue keeps that
+//! wait observable rather than unbounded — sustained high-priority load
+//! fills the queue and later arrivals are *rejected* with
+//! [`PoolError::Busy`] instead of piling up in front of the starved
+//! batch, and `stats` exposes the live queue depth.
+//!
 //! A job is either a single-SoC mission or a multi-tenant
 //! [`WorkloadConfig`] (N sensor streams on one SoC); both run on the same
 //! workers through the same queue, so mission and workload requests share
@@ -25,14 +39,16 @@
 //! further submissions with [`PoolError::ShutDown`] — the `shutdown`
 //! protocol request rides on it.
 
-use std::collections::VecDeque;
+use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::SocConfig;
+use crate::coordinator::governor::QosSpec;
 use crate::coordinator::pipeline::{Mission, MissionConfig, MissionReport};
 use crate::coordinator::workload::{Workload, WorkloadConfig, WorkloadReport};
 use crate::sensors::trace::SensorTrace;
+use crate::soc::power::RailTelemetry;
 
 /// Why the pool could not serve a batch.
 #[derive(Debug)]
@@ -69,6 +85,19 @@ impl std::error::Error for PoolError {}
 enum Work {
     Mission(MissionConfig, Option<Arc<SensorTrace>>),
     Workload(WorkloadConfig, Vec<Option<Arc<SensorTrace>>>),
+}
+
+impl Work {
+    /// Queue priority: the best (lowest) [`QosSpec::priority`] among the
+    /// job's tenant streams; missions run at the default priority.
+    fn priority(&self) -> u8 {
+        match self {
+            Work::Mission(..) => QosSpec::default().priority,
+            Work::Workload(cfg, _) => {
+                cfg.streams.iter().map(|s| s.qos.priority).min().unwrap_or(0)
+            }
+        }
+    }
 }
 
 /// The report a unit of work produced (mirrors [`Work`]).
@@ -129,16 +158,71 @@ impl Batch {
     }
 }
 
+/// One queued entry: ordered by `(priority, seq)` — priority classes
+/// first, submission order within a class.
+struct QueuedJob {
+    priority: u8,
+    seq: u64,
+    job: Job,
+}
+
+impl QueuedJob {
+    fn key(&self) -> (u8, u64) {
+        (self.priority, self.seq)
+    }
+}
+
+impl PartialEq for QueuedJob {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for QueuedJob {}
+
+impl PartialOrd for QueuedJob {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedJob {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed so the max-heap pops the smallest (priority, seq)
+        other.key().cmp(&self.key())
+    }
+}
+
 struct QueueState {
-    jobs: VecDeque<Job>,
+    jobs: BinaryHeap<QueuedJob>,
+    /// Monotonic submission counter — the FIFO tie-break within a
+    /// priority class.
+    seq: u64,
     shutdown: bool,
 }
 
-/// Per-worker observability: completed-job count and a live busy flag —
-/// what the `stats` response reports so reject-when-full is diagnosable.
+/// Live per-worker rail state for `stats` (see
+/// [`crate::soc::power::RailTelemetry`]).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerRail {
+    pub busy: bool,
+    /// Rail voltage of the worker's current (or last) simulation; 0.0
+    /// before the worker has run anything.
+    pub vdd: f64,
+    /// `DomainId`-indexed gate mask of the current simulation.
+    pub gated_mask: u64,
+    /// Rail transitions observed across all of this worker's jobs.
+    pub rail_transitions: u64,
+}
+
+/// Per-worker observability: completed-job count, a live busy flag, and
+/// the rail telemetry handle attached to every simulation the worker runs
+/// — what the `stats` response reports so reject-when-full is diagnosable
+/// and the live rail state is visible per busy worker.
 struct WorkerStat {
     jobs: AtomicU64,
     busy: AtomicBool,
+    rail: Arc<RailTelemetry>,
 }
 
 struct Shared {
@@ -163,11 +247,19 @@ impl WorkerPool {
         let workers = workers.max(1);
         let queue_cap = queue_cap.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            queue: Mutex::new(QueueState {
+                jobs: BinaryHeap::new(),
+                seq: 0,
+                shutdown: false,
+            }),
             available: Condvar::new(),
             jobs_done: AtomicU64::new(0),
             worker_stats: (0..workers)
-                .map(|_| WorkerStat { jobs: AtomicU64::new(0), busy: AtomicBool::new(false) })
+                .map(|_| WorkerStat {
+                    jobs: AtomicU64::new(0),
+                    busy: AtomicBool::new(false),
+                    rail: Arc::new(RailTelemetry::default()),
+                })
                 .collect(),
         });
         let handles = (0..workers)
@@ -212,6 +304,21 @@ impl WorkerPool {
             .worker_stats
             .iter()
             .map(|w| w.jobs.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Live rail state per worker (current vdd, gated domains, cumulative
+    /// rail transitions), indexed by worker id.
+    pub fn worker_rails(&self) -> Vec<WorkerRail> {
+        self.shared
+            .worker_stats
+            .iter()
+            .map(|w| WorkerRail {
+                busy: w.busy.load(Ordering::Relaxed),
+                vdd: f64::from_bits(w.rail.vdd_bits.load(Ordering::Relaxed)),
+                gated_mask: w.rail.gated_mask.load(Ordering::Relaxed),
+                rail_transitions: w.rail.rail_transitions.load(Ordering::Relaxed),
+            })
             .collect()
     }
 
@@ -368,7 +475,12 @@ impl WorkerPool {
         if jobs.len() > free {
             return Err(PoolError::Busy { asked: jobs.len(), free, cap: self.queue_cap });
         }
-        q.jobs.extend(jobs);
+        for job in jobs {
+            let priority = job.work.priority();
+            let seq = q.seq;
+            q.seq += 1;
+            q.jobs.push(QueuedJob { priority, seq, job });
+        }
         drop(q);
         self.shared.available.notify_all();
         Ok(())
@@ -386,8 +498,8 @@ fn worker_loop(shared: &Shared, id: usize) {
         let job = {
             let mut q = shared.queue.lock().unwrap();
             loop {
-                if let Some(job) = q.jobs.pop_front() {
-                    break job;
+                if let Some(entry) = q.jobs.pop() {
+                    break entry.job;
                 }
                 if q.shutdown {
                     return;
@@ -397,17 +509,26 @@ fn worker_loop(shared: &Shared, id: usize) {
         };
         let stat = &shared.worker_stats[id];
         stat.busy.store(true, Ordering::Relaxed);
-        // one Soc per job, built on this thread (mirrors fleet workers).
+        // one Soc per job, built on this thread (mirrors fleet workers);
+        // the worker's rail telemetry handle rides along so `stats` can
+        // see the live rail state of whatever is running right now.
         // A panicking simulation must not kill the worker or leave its
         // batch waiting forever: catch it and fail the slot instead.
+        let rail = Arc::clone(&stat.rail);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             match job.work {
                 Work::Mission(cfg, trace) => Mission::with_trace(job.soc, cfg, trace)
-                    .and_then(|mut m| m.run())
+                    .and_then(|mut m| {
+                        m.soc.power.attach_telemetry(Arc::clone(&rail));
+                        m.run()
+                    })
                     .map(WorkOutput::Mission)
                     .map_err(|e| format!("{e:#}")),
                 Work::Workload(cfg, traces) => Workload::with_traces(job.soc, cfg, traces)
-                    .and_then(|mut w| w.run())
+                    .and_then(|mut w| {
+                        w.soc.power.attach_telemetry(Arc::clone(&rail));
+                        w.run()
+                    })
                     .map(|r| WorkOutput::Workload(Box::new(r)))
                     .map_err(|e| format!("{e:#}")),
             }
@@ -529,6 +650,62 @@ mod tests {
         assert!(reports.is_empty());
         assert_eq!(wall, 0.0);
         assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn queue_pops_priority_classes_then_fifo() {
+        // directly exercise the heap ordering: lowest (priority, seq) first
+        let batch = Batch::new(4);
+        let mk = |slot: usize| Job {
+            soc: SocConfig::kraken(),
+            work: Work::Mission(tiny(slot as u64), None),
+            slot,
+            batch: Arc::clone(&batch),
+        };
+        let mut q = QueueState { jobs: BinaryHeap::new(), seq: 0, shutdown: false };
+        for (prio, slot) in [(1u8, 0usize), (0, 1), (1, 2), (0, 3)] {
+            let seq = q.seq;
+            q.seq += 1;
+            q.jobs.push(QueuedJob { priority: prio, seq, job: mk(slot) });
+        }
+        let order: Vec<usize> =
+            std::iter::from_fn(|| q.jobs.pop().map(|e| e.job.slot)).collect();
+        assert_eq!(order, vec![1, 3, 0, 2], "priority classes first, FIFO within");
+    }
+
+    #[test]
+    fn work_priority_is_the_best_stream_priority() {
+        let m = tiny(1);
+        assert_eq!(Work::Mission(m.clone(), None).priority(), 0);
+        let mut w = WorkloadConfig::fan_out(&m, 2);
+        w.streams[0].qos.priority = 3;
+        w.streams[1].qos.priority = 1;
+        assert_eq!(Work::Workload(w, Vec::new()).priority(), 1);
+    }
+
+    #[test]
+    fn worker_rails_expose_live_rail_state() {
+        let pool = WorkerPool::new(1, 4);
+        let soc = SocConfig::kraken();
+        let (reports, _) = pool.run_configs(&soc, &[tiny(1)]).unwrap();
+        assert_eq!(reports.len(), 1);
+        let rails = pool.worker_rails();
+        assert_eq!(rails.len(), 1);
+        assert!(!rails[0].busy);
+        assert_eq!(rails[0].vdd, 0.8, "fixed-rail mission leaves the default rail");
+        assert_eq!(rails[0].rail_transitions, 0);
+        // a DVFS-governed workload leaves its rail transitions visible
+        let mut wcfg = WorkloadConfig::fan_out(&tiny(2), 1);
+        wcfg.duration_s = 1.0;
+        wcfg.streams[0].frame_fps = 10.0;
+        wcfg.power.governor = crate::coordinator::governor::GovernorKind::Ladder;
+        let (wr, _) = pool.run_workloads(&soc, &[wcfg]).unwrap();
+        assert!(wr[0].rail_transitions > 0, "ladder workload never moved the rail");
+        assert_eq!(
+            pool.worker_rails()[0].rail_transitions,
+            wr[0].rail_transitions,
+            "worker telemetry must accumulate the run's transitions"
+        );
     }
 
     #[test]

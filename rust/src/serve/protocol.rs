@@ -23,9 +23,17 @@
 //! * `shutdown` — graceful stop: drain the queue, join the workers, answer
 //!   with final stats; the serving loop exits after the response.
 //!
-//! Every request may carry a `v` protocol-version field; versions other
-//! than [`PROTOCOL_VERSION`] are rejected, so a future client cannot have
-//! new semantics silently misread (omitting `v` means "current").
+//! Every request may carry a `v` protocol-version field; versions outside
+//! [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`] are rejected, so a
+//! future client cannot have new semantics silently misread (omitting `v`
+//! means "current"). v2 adds the power-management surface: a `governor`
+//! field (`fixed|ladder|deadline`, a scalar on `run`/`fleet`/`workload`
+//! and a scalar-or-array axis on `grid`) and per-tenant `qos` objects
+//! (`{"priority": N, "deadline_ms": X}`) on `workload` — either a
+//! top-level `qos` array paired with `tenants`, or per-stream `qos` keys
+//! inside `streams[]`. Clients still pinning `v:1` get the old semantics
+//! (the `Fixed` governor, default QoS) and an error — not silent
+//! acceptance — if they send the v2 fields.
 //!
 //! Responses are `{"ok":true,"kind":...,"report":...}` or
 //! `{"ok":false,"error":...}`. Unknown request keys are rejected rather
@@ -35,6 +43,7 @@
 //! the result cache keys on.
 
 use crate::config::{VDD_MAX, VDD_MIN};
+use crate::coordinator::governor::{GovernorKind, QosSpec};
 use crate::coordinator::pipeline::MissionConfig;
 use crate::coordinator::workload::{StreamConfig, WorkloadConfig, MAX_TENANTS};
 use crate::sensors::scene::SceneKind;
@@ -45,9 +54,16 @@ use crate::util::json::{parse, Value};
 /// bounded queue applies its own (usually tighter) backpressure below this.
 pub const MAX_CELLS: usize = 4096;
 
-/// The protocol version this server speaks. Clients may pin it with a `v`
-/// field; any other value is rejected with an error response.
-pub const PROTOCOL_VERSION: u64 = 1;
+/// The newest protocol version this server speaks. Clients may pin an
+/// older (still-supported) version with a `v` field; anything outside
+/// [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`] is rejected with an
+/// error response.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// The oldest protocol version still accepted. v1 requests keep their old
+/// semantics: the v2-only fields (`governor`, `qos`) are rejected rather
+/// than silently honored.
+pub const MIN_PROTOCOL_VERSION: u64 = 1;
 
 /// A parsed, validated request.
 #[derive(Debug, Clone)]
@@ -64,6 +80,7 @@ pub enum Request {
         scenes: Vec<SceneKind>,
         vdds: Vec<f64>,
         idle_gates: Vec<Option<f64>>,
+        governors: Vec<GovernorKind>,
         tenants: Vec<usize>,
     },
     /// One SoC, N tenant streams, fully resolved.
@@ -82,12 +99,29 @@ const MISSION_KEYS: &[&str] = &[
     "scene",
     "vdd",
     "idle_gate_s",
+    "governor",
     "window_ms",
     "frame_fps",
     "dvs_sample_hz",
     "telemetry_dt_s",
     "artifacts_dir",
 ];
+
+/// Reject v2-only fields on requests pinned to an older protocol version
+/// — a v1 client must get its v1 semantics or an error, never a silent
+/// upgrade.
+fn require_v2(v: &Value, ver: u64, keys: &[&str]) -> crate::Result<()> {
+    if ver >= 2 {
+        return Ok(());
+    }
+    for k in keys {
+        anyhow::ensure!(
+            v.get(k).is_none(),
+            "\"{k}\" requires protocol v2 (request pinned v{ver})"
+        );
+    }
+    Ok(())
+}
 
 impl Request {
     /// Parse one request line.
@@ -101,15 +135,20 @@ impl Request {
         let obj = v
             .as_obj()
             .ok_or_else(|| anyhow::anyhow!("request must be a JSON object"))?;
-        if let Some(ver) = v.get("v") {
-            let ver = ver.as_u64().ok_or_else(|| {
-                anyhow::anyhow!("\"v\" must be a protocol version integer")
-            })?;
-            anyhow::ensure!(
-                ver == PROTOCOL_VERSION,
-                "unsupported protocol version {ver} (this server speaks v{PROTOCOL_VERSION})"
-            );
-        }
+        let ver = match v.get("v") {
+            None => PROTOCOL_VERSION,
+            Some(x) => {
+                let x = x.as_u64().ok_or_else(|| {
+                    anyhow::anyhow!("\"v\" must be a protocol version integer")
+                })?;
+                anyhow::ensure!(
+                    (MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&x),
+                    "unsupported protocol version {x} (this server speaks \
+                     v{MIN_PROTOCOL_VERSION}..v{PROTOCOL_VERSION})"
+                );
+                x
+            }
+        };
         let kind = v
             .get("kind")
             .and_then(Value::as_str)
@@ -117,12 +156,14 @@ impl Request {
         match kind {
             "run" => {
                 check_keys(obj, MISSION_KEYS)?;
+                require_v2(v, ver, &["governor"])?;
                 Ok(Request::Run { cfg: mission_from(v)? })
             }
             "fleet" => {
                 let mut allowed = MISSION_KEYS.to_vec();
                 allowed.push("missions");
                 check_keys(obj, &allowed)?;
+                require_v2(v, ver, &["governor"])?;
                 let missions = match v.get("missions") {
                     None => 4,
                     Some(m) => m.as_usize().ok_or_else(|| {
@@ -144,10 +185,12 @@ impl Request {
                 let mut allowed = MISSION_KEYS.to_vec();
                 allowed.push("tenants");
                 check_keys(obj, &allowed)?;
+                require_v2(v, ver, &["governor"])?;
                 let seeds = u64_axis(v, "seed")?;
                 let durations = f64_axis(v, "duration_s")?;
                 let vdds = f64_axis(v, "vdd")?;
                 let idle_gates = gate_axis(v)?;
+                let governors = governor_axis(v)?;
                 let tenants = tenants_axis(v)?;
                 // scene names resolve against the first grid seed (the
                 // per-cell reseed overrides it for seeded scenes anyway)
@@ -169,6 +212,7 @@ impl Request {
                     scenes.len(),
                     vdds.len(),
                     idle_gates.len(),
+                    governors.len(),
                     tenants.len(),
                 ]) {
                     Some(cells) if cells <= MAX_CELLS => {}
@@ -179,14 +223,24 @@ impl Request {
                         "grid axis product overflows, limit is {MAX_CELLS} cells"
                     ),
                 }
-                Ok(Request::Grid { base, seeds, durations, scenes, vdds, idle_gates, tenants })
+                Ok(Request::Grid {
+                    base,
+                    seeds,
+                    durations,
+                    scenes,
+                    vdds,
+                    idle_gates,
+                    governors,
+                    tenants,
+                })
             }
             "workload" => {
                 let mut allowed = MISSION_KEYS.to_vec();
-                allowed.extend(["tenants", "streams"]);
+                allowed.extend(["tenants", "streams", "qos"]);
                 check_keys(obj, &allowed)?;
+                require_v2(v, ver, &["governor", "qos"])?;
                 let base = mission_from(v)?;
-                let cfg = match v.get("streams") {
+                let mut cfg = match v.get("streams") {
                     None => {
                         let tenants = match v.get("tenants") {
                             None => 1,
@@ -205,11 +259,15 @@ impl Request {
                                 "\"tenants\" disagrees with the \"streams\" array length"
                             );
                         }
+                        anyhow::ensure!(
+                            v.get("qos").is_none(),
+                            "set \"qos\" inside each \"streams\" object, not at the top level"
+                        );
                         let mut cfg = WorkloadConfig::from_mission(&base);
                         cfg.streams = arr
                             .iter()
                             .enumerate()
-                            .map(|(i, s)| stream_from(s, &base, i))
+                            .map(|(i, s)| stream_from(s, &base, i, ver))
                             .collect::<crate::Result<Vec<StreamConfig>>>()?;
                         cfg
                     }
@@ -217,6 +275,25 @@ impl Request {
                         "\"streams\" must be an array of per-tenant stream objects"
                     ),
                 };
+                // fan-out form: a top-level per-tenant qos array
+                match v.get("qos") {
+                    None => {}
+                    Some(Value::Arr(arr)) => {
+                        anyhow::ensure!(
+                            arr.len() == cfg.streams.len(),
+                            "\"qos\" names {} tenants, the workload has {}",
+                            arr.len(),
+                            cfg.streams.len()
+                        );
+                        for (i, (s, q)) in cfg.streams.iter_mut().zip(arr).enumerate() {
+                            s.qos = qos_from(q, &format!("qos[{i}]"))?;
+                        }
+                    }
+                    Some(_) => anyhow::bail!(
+                        "\"qos\" must be an array of per-tenant objects \
+                         ({{\"priority\": N, \"deadline_ms\": X}})"
+                    ),
+                }
                 Ok(Request::Workload { cfg })
             }
             "stats" => {
@@ -244,13 +321,17 @@ fn check_tenants(tenants: usize) -> crate::Result<()> {
 
 /// One per-tenant stream override of a `workload` request. Defaults follow
 /// the fan-out discipline (stream `i` inherits the base mission reseeded
-/// `seed + i`); explicit `seed`/`scene`/`frame_fps`/`dvs_sample_hz` fields
-/// override per stream.
-fn stream_from(x: &Value, base: &MissionConfig, i: usize) -> crate::Result<StreamConfig> {
+/// `seed + i`); explicit `seed`/`scene`/`frame_fps`/`dvs_sample_hz`/`qos`
+/// fields override per stream (`qos` needs protocol v2).
+fn stream_from(x: &Value, base: &MissionConfig, i: usize, ver: u64) -> crate::Result<StreamConfig> {
     let obj = x
         .as_obj()
         .ok_or_else(|| anyhow::anyhow!("\"streams[{i}]\" must be an object"))?;
-    check_keys(obj, &["scene", "seed", "frame_fps", "dvs_sample_hz"])?;
+    check_keys(obj, &["scene", "seed", "frame_fps", "dvs_sample_hz", "qos"])?;
+    anyhow::ensure!(
+        ver >= 2 || x.get("qos").is_none(),
+        "\"streams[{i}].qos\" requires protocol v2 (request pinned v{ver})"
+    );
     let mut m = if i == 0 {
         base.clone()
     } else {
@@ -275,7 +356,52 @@ fn stream_from(x: &Value, base: &MissionConfig, i: usize) -> crate::Result<Strea
     if let Some(hz) = bounded_f64(x, "dvs_sample_hz", 1.0, 1_000_000.0)? {
         s.dvs_sample_hz = hz;
     }
+    if let Some(q) = x.get("qos") {
+        s.qos = qos_from(q, &format!("streams[{i}].qos"))?;
+    }
     Ok(s)
+}
+
+/// Parse one per-tenant QoS object: `{"priority": N, "deadline_ms": X}`,
+/// both optional (priority 0, cadence deadline). Bounds and the cadence
+/// sentinel live in [`QosSpec::from_ms`], shared with the CLI.
+fn qos_from(x: &Value, path: &str) -> crate::Result<QosSpec> {
+    let obj = x
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("\"{path}\" must be a QoS object"))?;
+    check_keys(obj, &["priority", "deadline_ms"])?;
+    let priority = match x.get("priority") {
+        None => 0,
+        Some(p) => p
+            .as_u64()
+            .filter(|&p| p <= u8::MAX as u64)
+            .ok_or_else(|| anyhow::anyhow!("\"{path}.priority\" must be an integer in 0..=255"))?
+            as u8,
+    };
+    let deadline_ms = pos_f64(x, "deadline_ms")?;
+    QosSpec::from_ms(priority, deadline_ms)
+}
+
+/// Governor grid axis / scalar: governor names, absent = inherit.
+fn governor_axis(v: &Value) -> crate::Result<Vec<GovernorKind>> {
+    match v.get("governor") {
+        None => Ok(Vec::new()),
+        Some(Value::Str(name)) => Ok(vec![GovernorKind::parse(name)?]),
+        Some(Value::Arr(a)) => {
+            check_axis_nonempty("governor", a)?;
+            a.iter()
+                .map(|x| {
+                    let name = x.as_str().ok_or_else(|| {
+                        anyhow::anyhow!("\"governor\" array must hold governor names")
+                    })?;
+                    GovernorKind::parse(name)
+                })
+                .collect()
+        }
+        Some(_) => {
+            anyhow::bail!("\"governor\" must be a governor name or an array of governor names")
+        }
+    }
 }
 
 /// Tenant-count grid axis: positive integers in `1..=MAX_TENANTS`.
@@ -423,18 +549,24 @@ fn mission_from(v: &Value) -> crate::Result<MissionConfig> {
             .as_f64()
             .ok_or_else(|| anyhow::anyhow!("\"vdd\" must be a number"))?;
         check_vdd(x)?;
-        cfg.policy.vdd = Some(x);
+        cfg.power.vdd = Some(x);
     }
     match v.get("idle_gate_s") {
         None => {}
-        Some(Value::Null) => cfg.policy.idle_gate_s = None,
+        Some(Value::Null) => cfg.power.idle_gate_s = None,
         Some(x) => {
             let g = x
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("\"idle_gate_s\" must be a number or null"))?;
             anyhow::ensure!(g.is_finite() && g > 0.0, "idle_gate_s must be positive or null");
-            cfg.policy.idle_gate_s = Some(g);
+            cfg.power.idle_gate_s = Some(g);
         }
+    }
+    if let Some(g) = v.get("governor") {
+        let name = g
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("\"governor\" must be a governor name string"))?;
+        cfg.power.governor = GovernorKind::parse(name)?;
     }
     Ok(cfg.with_seed(seed))
 }
@@ -546,7 +678,8 @@ mod tests {
             Request::Run { cfg } => {
                 assert_eq!(cfg.seed, 11);
                 assert_eq!(cfg.duration_s, 0.5);
-                assert_eq!(cfg.policy.vdd, Some(0.6));
+                assert_eq!(cfg.power.vdd, Some(0.6));
+                assert_eq!(cfg.power.governor, GovernorKind::Fixed);
                 assert!(matches!(cfg.scene, SceneKind::Noise { seed: 11, .. }));
                 assert!(!cfg.print_live);
             }
@@ -576,18 +709,112 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Grid { seeds, vdds, scenes, durations, idle_gates, tenants, base } => {
+            Request::Grid {
+                seeds,
+                vdds,
+                scenes,
+                durations,
+                idle_gates,
+                governors,
+                tenants,
+                base,
+            } => {
                 assert_eq!(seeds, vec![1, 2]);
                 assert_eq!(vdds, vec![0.6, 0.8]);
                 assert_eq!(scenes.len(), 1);
                 // scalar duration becomes a singleton axis
                 assert_eq!(durations, vec![0.2]);
                 assert_eq!(idle_gates, vec![Some(0.05), None]);
+                assert!(governors.is_empty(), "absent governor axis inherits");
                 assert!(tenants.is_empty(), "absent tenants axis inherits");
                 // base keeps its default; the duration axis overrides per cell
                 assert_eq!(base.duration_s, MissionConfig::default().duration_s);
             }
             other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn governor_and_qos_fields_parse_on_v2() {
+        let r = Request::from_json(
+            r#"{"kind":"run","v":2,"duration_s":0.2,"governor":"ladder"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Run { cfg } => assert_eq!(cfg.power.governor, GovernorKind::Ladder),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // grid: governor names become an axis
+        let r = Request::from_json(
+            r#"{"kind":"grid","duration_s":0.2,"governor":["fixed","deadline"]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Grid { governors, .. } => {
+                assert_eq!(governors, vec![GovernorKind::Fixed, GovernorKind::DeadlineAware]);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // workload: top-level qos array pairs with fan-out tenants
+        let r = Request::from_json(
+            r#"{"kind":"workload","tenants":2,"duration_s":0.2,"governor":"deadline",
+                "qos":[{"priority":0,"deadline_ms":20.0},{"priority":3}]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Workload { cfg } => {
+                assert_eq!(cfg.power.governor, GovernorKind::DeadlineAware);
+                assert_eq!(cfg.streams[0].qos.priority, 0);
+                assert_eq!(cfg.streams[0].qos.deadline_ns, 20_000_000);
+                assert_eq!(cfg.streams[1].qos.priority, 3);
+                assert_eq!(cfg.streams[1].qos.deadline_ns, 0, "cadence default");
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // workload: per-stream qos objects
+        let r = Request::from_json(
+            r#"{"kind":"workload","duration_s":0.2,
+                "streams":[{"scene":"corridor","qos":{"priority":1}},{"scene":"noise"}]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Workload { cfg } => {
+                assert_eq!(cfg.streams[0].qos.priority, 1);
+                assert_eq!(cfg.streams[1].qos.priority, 0);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // malformed qos is rejected, as are conflicting placements
+        assert!(Request::from_json(
+            r#"{"kind":"workload","tenants":2,"qos":[{"priority":0}]}"#
+        )
+        .is_err());
+        assert!(Request::from_json(
+            r#"{"kind":"workload","tenants":1,"qos":[{"prio":0}]}"#
+        )
+        .is_err());
+        assert!(Request::from_json(
+            r#"{"kind":"workload","qos":[{}],
+                "streams":[{"scene":"noise"}]}"#
+        )
+        .is_err());
+        assert!(Request::from_json(r#"{"kind":"run","governor":"turbo"}"#).is_err());
+    }
+
+    #[test]
+    fn v1_requests_reject_v2_fields_but_keep_old_semantics() {
+        // a v1 pin still parses the classic surface
+        assert!(Request::from_json(r#"{"kind":"run","v":1,"duration_s":0.2}"#).is_ok());
+        // ...but the v2 power-management fields are refused, not ignored
+        for line in [
+            r#"{"kind":"run","v":1,"governor":"ladder"}"#,
+            r#"{"kind":"fleet","v":1,"governor":"fixed"}"#,
+            r#"{"kind":"grid","v":1,"governor":["fixed"]}"#,
+            r#"{"kind":"workload","v":1,"tenants":1,"qos":[{"priority":0}]}"#,
+            r#"{"kind":"workload","v":1,"streams":[{"qos":{"priority":1}}]}"#,
+        ] {
+            let err = Request::from_json(line).unwrap_err().to_string();
+            assert!(err.contains("requires protocol v2"), "{line} -> {err}");
         }
     }
 
@@ -654,13 +881,15 @@ mod tests {
 
     #[test]
     fn protocol_version_field_gates_requests() {
-        // v:1 accepted on every kind
+        // every supported version accepted on every kind
         assert!(Request::from_json(r#"{"kind":"stats","v":1}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"stats","v":2}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":1,"duration_s":0.1}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"run","v":2,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"shutdown","v":1}"#).is_ok());
         // unknown versions are rejected, whatever the kind
         for line in [
-            r#"{"kind":"stats","v":2}"#,
+            r#"{"kind":"stats","v":3}"#,
             r#"{"kind":"run","v":0}"#,
             r#"{"kind":"workload","v":99,"tenants":2}"#,
             r#"{"kind":"stats","v":"1"}"#,

@@ -11,10 +11,28 @@
 //!
 //! The [`EnergyLedger`] integrates per-domain power over simulated-time
 //! intervals reported by the coordinator; every Joule in EXPERIMENTS.md
-//! flows through here.
+//! flows through here. With a runtime DVFS governor
+//! ([`crate::coordinator::governor`]) the rail can move mid-mission:
+//! [`PowerManager::rail_transition`] books a transition-cost model,
+//! counts the move and opens a new [`RailSegment`] in the ledger, so
+//! energy stays attributable per rail (DESIGN.md §10). A
+//! [`RailTelemetry`] handle can be attached for lock-free live
+//! observability (the serve pool's per-worker rail state in `stats`).
 
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::config::{DomainCfg, SocConfig, VDD_MAX, VDD_MIN};
+
+/// Effective capacitance (F) of the shared rail + header network the DVFS
+/// transition-cost model charges: each rail move dissipates
+/// `0.5 * C * |V1^2 - V2^2|` in the regulator/headers, booked to the
+/// always-on fabric domain. Tens of nF is typical for an on-die rail of
+/// this size plus its decap — ~10 nJ per full-swing move, negligible next
+/// to mission energy unless a governor thrashes (which the transition
+/// counter makes visible).
+pub const RAIL_CAP_F: f64 = 47.0e-9;
 
 /// The four power domains of the Kraken die.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -57,17 +75,61 @@ struct DomainState {
     f_hz: f64,
 }
 
-/// Per-domain energy totals (J) plus busy time (s).
+/// One rail segment: the simulated time and energy integrated while the
+/// shared rail sat at one voltage. A mission that never moves the rail
+/// has exactly one segment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RailSegment {
+    pub vdd: f64,
+    /// Simulated seconds spent on this rail.
+    pub dur_s: f64,
+    /// Energy (J, all domains) integrated while on this rail.
+    pub energy_j: f64,
+}
+
+/// Per-domain energy totals (J) plus busy time (s), and the per-rail
+/// epoch accounting the DVFS governors introduce: every Joule lands both
+/// in its domain bucket and in the rail segment that was live when it
+/// was spent.
 #[derive(Debug, Clone, Default)]
 pub struct EnergyLedger {
     pub energy_j: [f64; 4],
     pub busy_s: [f64; 4],
     pub total_s: f64,
+    /// Mid-run rail moves ([`PowerManager::rail_transition`] calls that
+    /// actually changed the voltage). 0 under the `Fixed` governor.
+    pub rail_transitions: u64,
+    /// Chronological rail segments (the open segment is last).
+    pub segments: Vec<RailSegment>,
 }
 
 impl EnergyLedger {
     pub fn total_j(&self) -> f64 {
         self.energy_j.iter().sum()
+    }
+
+    /// Segments aggregated by rail voltage (first-seen order): the
+    /// bounded per-rail rollup reports serialize (at most 31 entries,
+    /// however often a governor moved).
+    pub fn rail_summary(&self) -> Vec<RailSegment> {
+        let mut out: Vec<RailSegment> = Vec::new();
+        for seg in &self.segments {
+            match out.iter_mut().find(|s| s.vdd.to_bits() == seg.vdd.to_bits()) {
+                Some(s) => {
+                    s.dur_s += seg.dur_s;
+                    s.energy_j += seg.energy_j;
+                }
+                None => out.push(*seg),
+            }
+        }
+        out
+    }
+
+    /// Charge `e_j` of energy to the open rail segment.
+    fn seg_energy(&mut self, e_j: f64) {
+        if let Some(seg) = self.segments.last_mut() {
+            seg.energy_j += e_j;
+        }
     }
 
     /// Average SoC power over the ledger's lifetime (W).
@@ -84,12 +146,28 @@ impl EnergyLedger {
     }
 }
 
+/// Lock-free live rail observability: a handle the serve pool attaches to
+/// each worker's `PowerManager` so `stats` can report the rail state of a
+/// simulation *while it runs* (current vdd, gated domains, cumulative
+/// rail transitions) without touching the simulation's determinism.
+#[derive(Debug, Default)]
+pub struct RailTelemetry {
+    /// `f64::to_bits` of the current rail voltage (0 before first attach).
+    pub vdd_bits: AtomicU64,
+    /// Bit `i` set = the domain with `DomainId` index `i` is gated.
+    pub gated_mask: AtomicU64,
+    /// Cumulative mid-run rail transitions observed through this handle.
+    pub rail_transitions: AtomicU64,
+}
+
 /// Owns domain states, applies DVFS/gating, accounts energy.
 #[derive(Debug)]
 pub struct PowerManager {
     vdd: f64,
     domains: [DomainState; 4],
     pub ledger: EnergyLedger,
+    /// Optional write-through observability handle (serve pool workers).
+    telemetry: Option<Arc<RailTelemetry>>,
 }
 
 impl PowerManager {
@@ -99,6 +177,8 @@ impl PowerManager {
             gated,
             f_hz: d.f_at(cfg.vdd),
         };
+        let mut ledger = EnergyLedger::default();
+        ledger.segments.push(RailSegment { vdd: cfg.vdd, dur_s: 0.0, energy_j: 0.0 });
         PowerManager {
             vdd: cfg.vdd,
             domains: [
@@ -107,7 +187,8 @@ impl PowerManager {
                 mk(&cfg.pulp.domain, true),
                 mk(&cfg.fabric.domain, false),
             ],
-            ledger: EnergyLedger::default(),
+            ledger,
+            telemetry: None,
         }
     }
 
@@ -115,14 +196,63 @@ impl PowerManager {
         self.vdd
     }
 
+    /// Attach a live observability handle and publish the current state.
+    /// Pure write-through: simulation behavior is unchanged.
+    pub fn attach_telemetry(&mut self, t: Arc<RailTelemetry>) {
+        self.telemetry = Some(t);
+        self.publish();
+    }
+
+    fn publish(&self) {
+        if let Some(t) = &self.telemetry {
+            t.vdd_bits.store(self.vdd.to_bits(), Ordering::Relaxed);
+            let mut mask = 0u64;
+            for (i, d) in self.domains.iter().enumerate() {
+                if d.gated {
+                    mask |= 1 << i;
+                }
+            }
+            t.gated_mask.store(mask, Ordering::Relaxed);
+        }
+    }
+
     /// Set the shared rail voltage; all domain clocks re-clamp to their
-    /// maximum at the new voltage (the FC firmware does the same).
+    /// maximum at the new voltage (the FC firmware does the same). This is
+    /// the pre-mission / test-bench knob: it re-homes the ledger's open
+    /// rail segment without counting a transition or booking a cost —
+    /// runtime governor moves go through [`PowerManager::rail_transition`].
     pub fn set_vdd(&mut self, v: f64) {
         let v = v.clamp(VDD_MIN, VDD_MAX);
         self.vdd = v;
         for d in &mut self.domains {
             d.f_hz = d.cfg.f_at(v);
         }
+        match self.ledger.segments.last_mut() {
+            // nothing accounted yet on the open segment: re-home it
+            Some(seg) if seg.dur_s == 0.0 && seg.energy_j == 0.0 => seg.vdd = v,
+            _ => self.ledger.segments.push(RailSegment { vdd: v, dur_s: 0.0, energy_j: 0.0 }),
+        }
+        self.publish();
+    }
+
+    /// A governor-commanded mid-run DVFS move: books the rail
+    /// transition-cost model (`0.5 * RAIL_CAP_F * |V1^2 - V2^2|`, charged
+    /// to the always-on fabric domain in the closing segment), counts the
+    /// transition, and opens a new rail segment at the target voltage.
+    /// No-op at the current voltage (the `Fixed` governor's steady state).
+    pub fn rail_transition(&mut self, v: f64) {
+        let v = v.clamp(VDD_MIN, VDD_MAX);
+        if v == self.vdd {
+            return;
+        }
+        let cost_j = 0.5 * RAIL_CAP_F * (self.vdd * self.vdd - v * v).abs();
+        self.ledger.energy_j[DomainId::Fabric.index()] += cost_j;
+        self.ledger.seg_energy(cost_j);
+        self.ledger.rail_transitions += 1;
+        if let Some(t) = &self.telemetry {
+            t.rail_transitions.fetch_add(1, Ordering::Relaxed);
+        }
+        self.set_vdd(v);
     }
 
     /// Current clock of a domain (Hz). Zero when gated.
@@ -149,10 +279,12 @@ impl PowerManager {
     pub fn gate(&mut self, id: DomainId) {
         assert!(id != DomainId::Fabric, "fabric domain is always-on");
         self.domains[id.index()].gated = true;
+        self.publish();
     }
 
     pub fn ungate(&mut self, id: DomainId) {
         self.domains[id.index()].gated = false;
+        self.publish();
     }
 
     /// Instantaneous power of one domain at utilization `u` (W).
@@ -180,6 +312,7 @@ impl PowerManager {
         let p = self.domain_power(id, u);
         let i = id.index();
         self.ledger.energy_j[i] += p * dt_s;
+        self.ledger.seg_energy(p * dt_s);
         if u > 0.0 {
             self.ledger.busy_s[i] += dt_s;
         }
@@ -189,6 +322,9 @@ impl PowerManager {
     /// after the per-domain `account` calls for that interval).
     pub fn advance_time(&mut self, dt_s: f64) {
         self.ledger.total_s += dt_s;
+        if let Some(seg) = self.ledger.segments.last_mut() {
+            seg.dur_s += dt_s;
+        }
     }
 }
 
@@ -264,5 +400,70 @@ mod tests {
     #[should_panic(expected = "always-on")]
     fn fabric_cannot_gate() {
         pm().gate(DomainId::Fabric);
+    }
+
+    #[test]
+    fn rail_transition_counts_costs_and_segments() {
+        let mut p = pm();
+        p.ungate(DomainId::Pulp);
+        // pre-mission set_vdd re-homes the open segment, no transition
+        p.set_vdd(0.8);
+        assert_eq!(p.ledger.rail_transitions, 0);
+        assert_eq!(p.ledger.segments.len(), 1);
+        p.account(DomainId::Pulp, 1.0, 1.0);
+        p.advance_time(1.0);
+        let e_before = p.ledger.total_j();
+        // a runtime move counts, costs, and opens a new segment
+        p.rail_transition(0.6);
+        assert_eq!(p.ledger.rail_transitions, 1);
+        assert_eq!(p.ledger.segments.len(), 2);
+        let cost = 0.5 * RAIL_CAP_F * (0.8 * 0.8 - 0.6 * 0.6);
+        assert!((p.ledger.total_j() - e_before - cost).abs() < 1e-15);
+        assert!((p.vdd() - 0.6).abs() < 1e-12);
+        // moving to the current rail is a free no-op
+        p.rail_transition(0.6);
+        assert_eq!(p.ledger.rail_transitions, 1);
+        // energy lands in the open segment; durations track advance_time
+        p.account(DomainId::Pulp, 1.0, 2.0);
+        p.advance_time(2.0);
+        assert_eq!(p.ledger.segments[0].vdd, 0.8);
+        assert!((p.ledger.segments[0].dur_s - 1.0).abs() < 1e-12);
+        assert_eq!(p.ledger.segments[1].vdd, 0.6);
+        assert!((p.ledger.segments[1].dur_s - 2.0).abs() < 1e-12);
+        let seg_sum: f64 = p.ledger.segments.iter().map(|s| s.energy_j).sum();
+        assert!((seg_sum - p.ledger.total_j()).abs() < 1e-15, "segments must sum to the total");
+    }
+
+    #[test]
+    fn rail_summary_merges_repeated_rails() {
+        let mut p = pm();
+        p.ungate(DomainId::Sne);
+        for _ in 0..3 {
+            p.advance_time(0.5);
+            p.rail_transition(0.6);
+            p.advance_time(0.5);
+            p.rail_transition(0.8);
+        }
+        assert_eq!(p.ledger.rail_transitions, 6);
+        let summary = p.ledger.rail_summary();
+        assert_eq!(summary.len(), 2, "{summary:?}");
+        assert!((summary.iter().map(|s| s.dur_s).sum::<f64>() - p.ledger.total_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn telemetry_publishes_rail_state() {
+        let mut p = pm();
+        let t = Arc::new(RailTelemetry::default());
+        p.attach_telemetry(Arc::clone(&t));
+        assert_eq!(f64::from_bits(t.vdd_bits.load(Ordering::Relaxed)), p.vdd());
+        // sne/cutie/pulp start gated, fabric on
+        assert_eq!(t.gated_mask.load(Ordering::Relaxed), 0b0111);
+        p.ungate(DomainId::Cutie);
+        assert_eq!(t.gated_mask.load(Ordering::Relaxed), 0b0101);
+        p.rail_transition(0.55);
+        assert_eq!(t.rail_transitions.load(Ordering::Relaxed), 1);
+        assert_eq!(f64::from_bits(t.vdd_bits.load(Ordering::Relaxed)), p.vdd());
+        p.gate(DomainId::Cutie);
+        assert_eq!(t.gated_mask.load(Ordering::Relaxed), 0b0111);
     }
 }

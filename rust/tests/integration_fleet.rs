@@ -6,7 +6,7 @@
 
 use kraken::config::SocConfig;
 use kraken::coordinator::{
-    run_configs, run_fleet, FleetConfig, Mission, MissionConfig, MissionReport, PowerPolicy,
+    run_configs, run_fleet, FleetConfig, Mission, MissionConfig, MissionReport, PowerConfig,
 };
 use kraken::sensors::scene::SceneKind;
 
@@ -116,7 +116,7 @@ fn heterogeneous_fleet_sweeps_scenes_in_parallel() {
         .iter()
         .map(|&scene| MissionConfig {
             scene,
-            policy: PowerPolicy { idle_gate_s: Some(0.05), vdd: Some(0.8) },
+            power: PowerConfig::fixed(0.8),
             ..base_cfg()
         })
         .collect();

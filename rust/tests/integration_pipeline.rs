@@ -5,7 +5,7 @@
 use std::path::{Path, PathBuf};
 
 use kraken::config::SocConfig;
-use kraken::coordinator::{Mission, MissionConfig, PowerPolicy};
+use kraken::coordinator::{Mission, MissionConfig, PowerConfig};
 use kraken::sensors::scene::SceneKind;
 
 fn artdir() -> Option<PathBuf> {
@@ -57,7 +57,7 @@ fn busier_scenes_cost_more_sne_energy() {
     let run = |scene: SceneKind| {
         let mut cfg = base_cfg();
         cfg.scene = scene;
-        cfg.policy = PowerPolicy { idle_gate_s: None, vdd: Some(0.8) };
+        cfg.power = PowerConfig { idle_gate_s: None, ..Default::default() };
         let mut m = Mission::new(SocConfig::kraken(), cfg).unwrap();
         let r = m.run().unwrap();
         (r.events_total, r.energy_per_domain_j[0])
@@ -75,7 +75,7 @@ fn busier_scenes_cost_more_sne_energy() {
 fn dvfs_trades_rate_for_power() {
     let run = |vdd: f64| {
         let mut cfg = base_cfg();
-        cfg.policy = PowerPolicy { idle_gate_s: None, vdd: Some(vdd) };
+        cfg.power = PowerConfig { idle_gate_s: None, vdd: Some(vdd), ..Default::default() };
         let mut m = Mission::new(SocConfig::kraken(), cfg).unwrap();
         m.run().unwrap()
     };

@@ -202,7 +202,7 @@ fn prop_scheduler_pops_in_time_order() {
         let mut keys = Vec::with_capacity(n);
         for i in 0..n {
             let t = rng.gen_below(1_000_000);
-            let prio = rng.gen_range_usize(0, 4) as u8;
+            let prio = rng.gen_range_usize(0, 4) as u16;
             s.push(t, prio, i);
             keys.push((t, prio, i));
         }
@@ -400,6 +400,51 @@ fn prop_workload_arbitration_no_starvation_under_symmetry() {
             prop_assert!(
                 cmds.windows(2).all(|p| p[0] == p[1]),
                 "command streams diverge: {cmds:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_qos_priorities_replay_legacy_arbitration() {
+    // the arbitration-rank formula (DESIGN.md §10) sorts tenants by
+    // (priority, round-robin rotation); any *uniform* priority level must
+    // therefore reproduce the default round-robin schedule bit for bit
+    check("uniform explicit priorities == default round-robin, bitwise", 3, |rng| {
+        let seed = rng.gen_below(10_000);
+        let level = rng.gen_range_usize(0, 5) as u8;
+        let base = MissionConfig {
+            duration_s: 0.2,
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        }
+        .with_seed(seed);
+        let run_with = |priority: Option<u8>| {
+            let mut cfg = WorkloadConfig::fan_out(&base, 3);
+            if let Some(p) = priority {
+                for s in &mut cfg.streams {
+                    s.qos.priority = p;
+                }
+            }
+            let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+            w.run().unwrap()
+        };
+        let a = run_with(None);
+        let b = run_with(Some(level));
+        prop_assert!(
+            a.energy_j.to_bits() == b.energy_j.to_bits(),
+            "uniform priority {level} changed the energy ledger"
+        );
+        for (i, (ta, tb)) in a.tenants.iter().zip(&b.tenants).enumerate() {
+            let ka = (ta.sne_inf, ta.cutie_inf, ta.pulp_inf, ta.events_total, ta.commands);
+            let kb = (tb.sne_inf, tb.cutie_inf, tb.pulp_inf, tb.events_total, tb.commands);
+            prop_assert!(ka == kb, "tenant {i} schedule moved under uniform priority: {ka:?} vs {kb:?}");
+        }
+        for (ca, cb) in a.contention.iter().zip(&b.contention) {
+            prop_assert!(
+                ca.dispatched == cb.dispatched && ca.queued_ns_total == cb.queued_ns_total,
+                "contention changed under uniform priority"
             );
         }
         Ok(())
