@@ -9,6 +9,8 @@
 //! 4. frame preprocessing (downsample + quantize, per frame)
 //! 5. PJRT artifact execution (per inference; needs artifacts/)
 //! 6. sensor-trace capture & replay (the grid/fleet sharing fast path)
+//! 7. DVS row-mask step: the vectorized lane scan against the retained
+//!    scalar reference, at three event-sparsity levels (DESIGN.md §11)
 //!
 //! Run: `cargo bench --bench hotpath`
 //! Machine-readable: `cargo bench --bench hotpath -- --json` writes
@@ -127,6 +129,35 @@ fn main() {
             .run()
             .unwrap()
     });
+
+    log.section("7. dvs row-mask step (scalar vs vectorized)");
+    // the vectorized front end's win depends on event sparsity: a static
+    // scene (every lane chunk in-band — pure mask scan), the corridor
+    // mission scene (structured, sparse crossings), and dense hash noise
+    // (most chunks cross — gather/scatter dominated). Both paths run the
+    // same 1 ms sample cadence at DVS132S geometry.
+    let cases = [
+        ("sparse/static", SceneKind::TranslatingEdge { vel_per_s: 0.0 }),
+        ("medium/corridor", SceneKind::Corridor { speed_per_s: 0.6, seed: 1 }),
+        ("dense/noise 0.3", SceneKind::Noise { density: 0.3, seed: 2 }),
+    ];
+    for (label, kind) in cases {
+        let scene = Scene::new(kind);
+        let mut vec_dvs = DvsSim::new(132, 128, 7);
+        let mut sc_dvs = DvsSim::new(132, 128, 7);
+        vec_dvs.step(&scene, 0);
+        sc_dvs.step_scalar(&scene, 0);
+        let mut tv = 0u64;
+        log.bench(&format!("dvs.step vectorized, {label}"), || {
+            tv += 1_000_000;
+            vec_dvs.step(&scene, tv)
+        });
+        let mut ts = 0u64;
+        log.bench(&format!("dvs.step scalar ref, {label}"), || {
+            ts += 1_000_000;
+            sc_dvs.step_scalar(&scene, ts)
+        });
+    }
 
     log.finish().expect("write BENCH_hotpath.json");
 }

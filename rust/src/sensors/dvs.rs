@@ -9,10 +9,39 @@
 //! previous sample and linearly interpolates event timestamps within the
 //! sample interval, producing the time-sorted COO stream the AER peripheral
 //! (soc::peripherals) carries into the SoC.
+//!
+//! # Vectorized front end (DESIGN.md §11)
+//!
+//! Pixel state is structure-of-arrays (`last_log` / `band_lo` / `band_hi`
+//! as contiguous per-plane buffers) and the per-sample scan runs in fixed
+//! [`DVS_LANES`]-wide f32 lanes, the way the real chip's sensor interface
+//! handles events in parallel rather than pixel-serially:
+//!
+//! 1. **masked scan** — each lane chunk folds the per-pixel no-crossing
+//!    band check into one branchless bitmask; an event-sparse chunk costs
+//!    a single test instead of `DVS_LANES` branchy compares
+//!    ([`scan_out_of_band`]);
+//! 2. **gather → batched math** — the (sparse) out-of-band pixel indices
+//!    are gathered into a compact buffer and the `ln` transform runs over
+//!    it in one tight pass, out of the branchy scan loop;
+//! 3. **scatter** — each crossing pixel emits its events and updates its
+//!    SoA state through [`DvsSim::emit_pixel`], the single crossing body
+//!    shared with the scalar reference path so the two cannot drift.
+//!
+//! The hard contract: the vectorized step is **bit-identical** to the
+//! scalar reference [`DvsSim::step_into_scalar`] — same events, same
+//! order, same band state, same RNG draw sequence for the noise budget —
+//! pinned by `prop_vectorized_step_equals_scalar` and the sensor-trace
+//! fingerprints in `tests/integration_trace.rs`.
 
 use crate::event::{Event, EventWindow, Polarity};
-use crate::util::rng::Rng;
 use crate::sensors::scene::Scene;
+use crate::util::rng::Rng;
+
+/// Lane width of the vectorized pixel scan: 8 f32 lanes fill one 256-bit
+/// vector register; on narrower ISAs LLVM splits the chunk, on wider ones
+/// it unrolls — either way the mask fold stays branchless.
+pub const DVS_LANES: usize = 8;
 
 /// DVS pixel-array simulator.
 #[derive(Debug, Clone)]
@@ -26,6 +55,7 @@ pub struct DvsSim {
     pub refractory_ns: u64,
     /// Background-activity noise rate per pixel (Hz).
     pub noise_rate_hz: f64,
+    /// SoA pixel memory: log-intensity at each pixel's last event.
     last_log: Vec<f64>,
     /// Per-pixel intensity band [lo, hi]: while the rendered intensity
     /// stays inside, no threshold crossing is possible and the pixel is
@@ -35,6 +65,10 @@ pub struct DvsSim {
     band_hi: Vec<f32>,
     render_buf: Vec<f32>,
     staged: Vec<(u64, usize, Polarity)>,
+    /// Gathered out-of-band pixel indices (ascending), reused per step.
+    crossing: Vec<u32>,
+    /// Batched `ln` results for the gathered pixels, reused per step.
+    log_batch: Vec<f64>,
     last_t_ns: u64,
     primed: bool,
     /// The construction seed, kept so [`DvsSim::reset`] can rewind the
@@ -45,6 +79,51 @@ pub struct DvsSim {
 
 /// Floor for the log-intensity transform (keeps log finite on black).
 const EPS: f64 = 0.02;
+
+/// Fold the per-pixel band check into a per-chunk lane bitmask: a chunk
+/// of [`DVS_LANES`] pixels is compared branchlessly against its band
+/// planes and reduced to one `u32` mask, so event-sparse chunks cost a
+/// single test. Out-of-band indices land in `out` in ascending order —
+/// exactly the order the scalar reference loop visits them.
+fn scan_out_of_band(img: &[f32], lo: &[f32], hi: &[f32], out: &mut Vec<u32>) {
+    debug_assert_eq!(img.len(), lo.len());
+    debug_assert_eq!(img.len(), hi.len());
+    debug_assert!(img.len() <= u32::MAX as usize, "pixel index must fit u32");
+    out.clear();
+    let n = img.len();
+    let head = n - n % DVS_LANES;
+    let mut base = 0;
+    while base < head {
+        let mut mask = 0u32;
+        for lane in 0..DVS_LANES {
+            let i = base + lane;
+            // out-of-band ⇔ the scalar fast path would fall through
+            let in_band = img[i] > lo[i] && img[i] < hi[i];
+            mask |= (!in_band as u32) << lane;
+        }
+        if mask != 0 {
+            let mut m = mask;
+            while m != 0 {
+                let lane = m.trailing_zeros() as usize;
+                out.push((base + lane) as u32);
+                m &= m - 1;
+            }
+        }
+        base += DVS_LANES;
+    }
+    // tail lanes: the last n % DVS_LANES pixels run the same predicate
+    // one at a time
+    for i in head..n {
+        let in_band = img[i] > lo[i] && img[i] < hi[i];
+        if !in_band {
+            out.push(i as u32);
+        }
+    }
+    debug_assert!(
+        out.windows(2).all(|w| w[0] < w[1]),
+        "lane scan must yield strictly ascending pixel indices"
+    );
+}
 
 impl DvsSim {
     pub fn new(width: usize, height: usize, seed: u64) -> Self {
@@ -59,6 +138,8 @@ impl DvsSim {
             band_hi: vec![0.0; width * height],
             render_buf: vec![0.0; width * height],
             staged: Vec::new(),
+            crossing: Vec::new(),
+            log_batch: Vec::new(),
             last_t_ns: 0,
             primed: false,
             seed,
@@ -66,12 +147,21 @@ impl DvsSim {
         }
     }
 
-    /// Recompute the no-event intensity band of pixel `i` from its stored
-    /// log level: crossing happens when |ln(I+eps) - L| >= C.
-    fn reband(&mut self, i: usize) {
-        let l = self.last_log[i];
-        self.band_lo[i] = ((l - self.threshold).exp() - EPS) as f32;
-        self.band_hi[i] = ((l + self.threshold).exp() - EPS) as f32;
+    /// The threshold's exp pair, hoisted out of the crossing loop: band
+    /// edges are `exp(L ± C) - EPS = exp(L)·exp(±C) - EPS`, so a crossing
+    /// pixel pays one `exp` instead of two.
+    #[inline]
+    fn exp_pair(&self) -> (f64, f64) {
+        (self.threshold.exp(), (-self.threshold).exp())
+    }
+
+    /// The no-event intensity band of a pixel whose stored log level is
+    /// `l`: crossing happens when |ln(I+eps) - L| >= C. `exp_th` /
+    /// `exp_nth` are the hoisted `exp(±C)` pair from [`DvsSim::exp_pair`].
+    #[inline]
+    fn band_edges(l: f64, exp_th: f64, exp_nth: f64) -> (f32, f32) {
+        let e = l.exp();
+        ((e * exp_nth - EPS) as f32, (e * exp_th - EPS) as f32)
     }
 
     /// Reset the sensor to its power-on state (e.g. between mission
@@ -84,6 +174,8 @@ impl DvsSim {
         self.band_hi.iter_mut().for_each(|v| *v = 0.0);
         self.render_buf.iter_mut().for_each(|v| *v = 0.0);
         self.staged.clear();
+        self.crossing.clear();
+        self.log_batch.clear();
         self.primed = false;
         self.last_t_ns = 0;
         self.rng = Rng::seed_from_u64(self.seed);
@@ -104,39 +196,65 @@ impl DvsSim {
     /// `t_ns` and *append* the new events to `win`, which must share the
     /// sensor's geometry. The mission pipeline reuses one window buffer
     /// across every sample of an inference window (EXPERIMENTS.md §Perf).
+    ///
+    /// This is the vectorized path (module docs): lane-masked band scan,
+    /// then a gather → batched-`ln` → scatter pass over the sparse
+    /// out-of-band pixels. Bit-identical to
+    /// [`DvsSim::step_into_scalar`].
     pub fn step_into(&mut self, scene: &Scene, t_ns: u64, win: &mut EventWindow) {
         debug_assert_eq!((win.width, win.height), (self.width, self.height));
         let mut img = std::mem::take(&mut self.render_buf);
         scene.render_into(self.width, self.height, t_ns as f64 * 1e-9, &mut img);
         if !self.primed {
-            for i in 0..img.len() {
-                self.last_log[i] = ((img[i] as f64) + EPS).ln();
-                self.reband(i);
-            }
-            self.primed = true;
-            self.last_t_ns = t_ns;
+            self.prime(&img, t_ns);
             self.render_buf = img;
             return;
         }
         let dt = t_ns.saturating_sub(self.last_t_ns).max(1);
         let mut staged = std::mem::take(&mut self.staged);
         staged.clear();
-        // noise first: Poisson-thinned over the whole array so the fast
-        // path below never rolls the RNG per pixel
-        let p_noise = self.noise_rate_hz * dt as f64 * 1e-9;
-        if p_noise > 0.0 {
-            let expected = p_noise * img.len() as f64;
-            let mut budget = expected.floor() as usize;
-            if self.rng.gen_f64() < expected - budget as f64 {
-                budget += 1;
-            }
-            for _ in 0..budget {
-                let i = self.rng.gen_range_usize(0, img.len());
-                let ts = self.last_t_ns + self.rng.gen_below(dt);
-                let pol = if self.rng.gen_bool() { Polarity::On } else { Polarity::Off };
-                staged.push((ts, i, pol));
-            }
+        self.stage_noise(img.len(), dt, &mut staged);
+
+        // 1. lane-masked scan over the SoA band planes
+        let mut crossing = std::mem::take(&mut self.crossing);
+        scan_out_of_band(&img, &self.band_lo, &self.band_hi, &mut crossing);
+
+        // 2. gather the crossing pixels and batch the log transform over
+        //    the compact buffer (out of the branchy scan loop)
+        let mut log_batch = std::mem::take(&mut self.log_batch);
+        log_batch.clear();
+        log_batch.extend(crossing.iter().map(|&i| ((img[i as usize] as f64) + EPS).ln()));
+
+        // 3. scatter: emit events + update SoA state per crossing pixel
+        let (exp_th, exp_nth) = self.exp_pair();
+        for (&i, &l_new) in crossing.iter().zip(&log_batch) {
+            self.emit_pixel(i as usize, l_new, dt, exp_th, exp_nth, &mut staged);
         }
+        self.crossing = crossing;
+        self.log_batch = log_batch;
+        self.commit(staged, img, t_ns, win);
+    }
+
+    /// The scalar reference step: the pre-vectorization per-pixel loop,
+    /// kept (behind the default-on `scalar-ref` feature) as the ground
+    /// truth the lane path is property-pinned against, and as the
+    /// baseline leg of hotpath bench §7. Shares the noise staging and the
+    /// crossing body with the vectorized path — only the scan differs.
+    #[cfg(any(test, feature = "scalar-ref"))]
+    pub fn step_into_scalar(&mut self, scene: &Scene, t_ns: u64, win: &mut EventWindow) {
+        debug_assert_eq!((win.width, win.height), (self.width, self.height));
+        let mut img = std::mem::take(&mut self.render_buf);
+        scene.render_into(self.width, self.height, t_ns as f64 * 1e-9, &mut img);
+        if !self.primed {
+            self.prime(&img, t_ns);
+            self.render_buf = img;
+            return;
+        }
+        let dt = t_ns.saturating_sub(self.last_t_ns).max(1);
+        let mut staged = std::mem::take(&mut self.staged);
+        staged.clear();
+        self.stage_noise(img.len(), dt, &mut staged);
+        let (exp_th, exp_nth) = self.exp_pair();
         for i in 0..img.len() {
             // fast path: intensity inside the pixel's no-crossing band
             let v = img[i];
@@ -144,25 +262,117 @@ impl DvsSim {
                 continue;
             }
             let l_new = ((v as f64) + EPS).ln();
-            let mut dl = l_new - self.last_log[i];
-            let pol = if dl >= 0.0 { Polarity::On } else { Polarity::Off };
-            let mut n_cross = (dl.abs() / self.threshold) as usize;
-            // refractory limits the event rate per pixel
-            let max_ev = (dt / self.refractory_ns.max(1)).max(1) as usize;
-            n_cross = n_cross.min(max_ev);
-            if n_cross > 0 {
-                for k in 0..n_cross {
-                    // interpolate crossing times across the interval
-                    let frac = (k as f64 + 1.0) / (n_cross as f64 + 1.0);
-                    let ts = self.last_t_ns + (frac * dt as f64) as u64;
-                    staged.push((ts, i, pol));
-                }
-                let signed = self.threshold * n_cross as f64;
-                dl = if pol == Polarity::On { signed } else { -signed };
-                self.last_log[i] += dl;
-                self.reband(i);
+            self.emit_pixel(i, l_new, dt, exp_th, exp_nth, &mut staged);
+        }
+        self.commit(staged, img, t_ns, win);
+    }
+
+    /// Allocating convenience over [`DvsSim::step_into_scalar`], the
+    /// twin of [`DvsSim::step`] (hotpath bench §7).
+    #[cfg(any(test, feature = "scalar-ref"))]
+    pub fn step_scalar(&mut self, scene: &Scene, t_ns: u64) -> EventWindow {
+        let mut win = EventWindow::new(self.width, self.height);
+        self.step_into_scalar(scene, t_ns, &mut win);
+        win
+    }
+
+    /// The SoA pixel state `(last_log, band_lo, band_hi)` — exposed so
+    /// the scalar/vectorized equivalence property can assert the two
+    /// paths leave identical state behind, not just identical events.
+    #[cfg(any(test, feature = "scalar-ref"))]
+    pub fn band_state(&self) -> (&[f64], &[f32], &[f32]) {
+        (&self.last_log, &self.band_lo, &self.band_hi)
+    }
+
+    /// The next u64 the noise RNG would draw, without advancing it:
+    /// proves the vectorized path leaves the RNG at the same position as
+    /// the scalar reference (the noise budget contract).
+    #[cfg(any(test, feature = "scalar-ref"))]
+    pub fn rng_probe(&self) -> u64 {
+        self.rng.clone().next_u64()
+    }
+
+    /// First-sample initialization: prime pixel memories and bands from
+    /// the rendered image, emitting nothing.
+    fn prime(&mut self, img: &[f32], t_ns: u64) {
+        let (exp_th, exp_nth) = self.exp_pair();
+        for (i, &v) in img.iter().enumerate() {
+            let l = ((v as f64) + EPS).ln();
+            self.last_log[i] = l;
+            let (lo, hi) = Self::band_edges(l, exp_th, exp_nth);
+            self.band_lo[i] = lo;
+            self.band_hi[i] = hi;
+        }
+        self.primed = true;
+        self.last_t_ns = t_ns;
+    }
+
+    /// Poisson-thinned background noise over the whole array, staged
+    /// before the pixel scan so the fast path never rolls the RNG per
+    /// pixel. Shared by both step paths: the RNG draw sequence is part of
+    /// the bit-identity contract.
+    fn stage_noise(&mut self, n_px: usize, dt: u64, staged: &mut Vec<(u64, usize, Polarity)>) {
+        let p_noise = self.noise_rate_hz * dt as f64 * 1e-9;
+        if p_noise > 0.0 {
+            let expected = p_noise * n_px as f64;
+            let mut budget = expected.floor() as usize;
+            if self.rng.gen_f64() < expected - budget as f64 {
+                budget += 1;
+            }
+            for _ in 0..budget {
+                let i = self.rng.gen_range_usize(0, n_px);
+                let ts = self.last_t_ns + self.rng.gen_below(dt);
+                let pol = if self.rng.gen_bool() { Polarity::On } else { Polarity::Off };
+                staged.push((ts, i, pol));
             }
         }
+    }
+
+    /// The crossing body: emit the threshold-crossing events of
+    /// out-of-band pixel `i` (log level `l_new`) and update its SoA state.
+    /// Shared verbatim by the vectorized and scalar paths so they cannot
+    /// drift.
+    #[inline]
+    fn emit_pixel(
+        &mut self,
+        i: usize,
+        l_new: f64,
+        dt: u64,
+        exp_th: f64,
+        exp_nth: f64,
+        staged: &mut Vec<(u64, usize, Polarity)>,
+    ) {
+        let mut dl = l_new - self.last_log[i];
+        let pol = if dl >= 0.0 { Polarity::On } else { Polarity::Off };
+        let mut n_cross = (dl.abs() / self.threshold) as usize;
+        // refractory limits the event rate per pixel
+        let max_ev = (dt / self.refractory_ns.max(1)).max(1) as usize;
+        n_cross = n_cross.min(max_ev);
+        if n_cross > 0 {
+            for k in 0..n_cross {
+                // interpolate crossing times across the interval
+                let frac = (k as f64 + 1.0) / (n_cross as f64 + 1.0);
+                let ts = self.last_t_ns + (frac * dt as f64) as u64;
+                staged.push((ts, i, pol));
+            }
+            let signed = self.threshold * n_cross as f64;
+            dl = if pol == Polarity::On { signed } else { -signed };
+            self.last_log[i] += dl;
+            let (lo, hi) = Self::band_edges(self.last_log[i], exp_th, exp_nth);
+            self.band_lo[i] = lo;
+            self.band_hi[i] = hi;
+        }
+    }
+
+    /// Shared step epilogue: time-sort the staged events, append them to
+    /// `win`, and park the reusable buffers for the next sample.
+    fn commit(
+        &mut self,
+        mut staged: Vec<(u64, usize, Polarity)>,
+        img: Vec<f32>,
+        t_ns: u64,
+        win: &mut EventWindow,
+    ) {
         staged.sort_unstable_by_key(|&(t, i, _)| (t, i));
         for &(t, i, p) in &staged {
             win.push(Event {
@@ -301,5 +511,61 @@ mod tests {
             want.extend(b.step(&scene, t).events);
         }
         assert_eq!(acc.events, want);
+    }
+
+    #[test]
+    fn scan_covers_chunks_and_tail_lanes() {
+        // geometry chosen so the pixel count is NOT a lane multiple:
+        // 13*5 = 65 = 8*8 + 1 — one full tail lane past the last chunk
+        let n = 65usize;
+        assert_ne!(n % DVS_LANES, 0);
+        let lo = vec![0.25f32; n];
+        let hi = vec![0.75f32; n];
+        let mut img = vec![0.5f32; n];
+        let mut out = Vec::new();
+        scan_out_of_band(&img, &lo, &hi, &mut out);
+        assert!(out.is_empty(), "all in-band must gather nothing");
+        // mark out-of-band pixels across chunk boundaries and in the tail
+        for &i in &[0usize, 7, 8, 31, 63, 64] {
+            img[i] = 0.9;
+        }
+        scan_out_of_band(&img, &lo, &hi, &mut out);
+        assert_eq!(out, vec![0u32, 7, 8, 31, 63, 64]);
+        // band edges are exclusive: a pixel sitting exactly on an edge is
+        // out of band, matching the scalar `>`/`<` predicate
+        img.iter_mut().for_each(|v| *v = 0.5);
+        img[3] = 0.25;
+        img[64] = 0.75;
+        scan_out_of_band(&img, &lo, &hi, &mut out);
+        assert_eq!(out, vec![3u32, 64]);
+    }
+
+    #[test]
+    fn vectorized_step_matches_scalar_reference() {
+        // tail-heavy geometry (37*29 = 1073 ≡ 1 mod 8) + noise on: the
+        // lane path must match the scalar loop event for event, band for
+        // band, and leave the RNG at the same position
+        for kind in [
+            SceneKind::Corridor { speed_per_s: 0.8, seed: 3 },
+            SceneKind::RotatingBar { omega_rad_s: 7.0 },
+            SceneKind::Noise { density: 0.15, seed: 5 },
+        ] {
+            let mut vec_dvs = DvsSim::new(37, 29, 11);
+            let mut sc_dvs = DvsSim::new(37, 29, 11);
+            vec_dvs.noise_rate_hz = 120.0;
+            sc_dvs.noise_rate_hz = 120.0;
+            let mut scene_a = Scene::new(kind);
+            let mut scene_b = Scene::new(kind);
+            for k in 0..12u64 {
+                let t = k * 1_700_000;
+                scene_a.advance(t as f64 * 1e-9);
+                scene_b.advance(t as f64 * 1e-9);
+                let wa = vec_dvs.step(&scene_a, t);
+                let wb = sc_dvs.step_scalar(&scene_b, t);
+                assert_eq!(wa.events, wb.events, "{kind:?} step {k}");
+            }
+            assert_eq!(vec_dvs.band_state(), sc_dvs.band_state(), "{kind:?}");
+            assert_eq!(vec_dvs.rng_probe(), sc_dvs.rng_probe(), "{kind:?}");
+        }
     }
 }

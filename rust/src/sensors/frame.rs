@@ -53,6 +53,13 @@ impl FrameSensor {
 }
 
 /// Center-crop to square then box-downsample to `out` x `out`.
+///
+/// Row-hoisted like the scene renderers: the source-row span is constant
+/// across an output row and the source-column spans depend only on the
+/// output column, so both are computed once instead of per output pixel,
+/// and the box sum walks contiguous source-row slices (hotpath §4). The
+/// summation order (source rows ascending, columns ascending) is
+/// unchanged, so results stay bit-identical to the per-pixel form.
 pub fn downsample_square(img: &[f32], w: usize, h: usize, out: usize) -> Vec<f32> {
     assert_eq!(img.len(), w * h);
     let side = w.min(h);
@@ -60,22 +67,28 @@ pub fn downsample_square(img: &[f32], w: usize, h: usize, out: usize) -> Vec<f32
     let y0 = (h - side) / 2;
     let mut res = vec![0f32; out * out];
     let scale = side as f64 / out as f64;
-    for oy in 0..out {
-        for ox in 0..out {
-            // box filter over the source rectangle of this output pixel
-            let sy0 = y0 + (oy as f64 * scale) as usize;
-            let sy1 = (y0 + ((oy + 1) as f64 * scale).ceil() as usize).min(y0 + side);
+    let xspan: Vec<(usize, usize)> = (0..out)
+        .map(|ox| {
             let sx0 = x0 + (ox as f64 * scale) as usize;
             let sx1 = (x0 + ((ox + 1) as f64 * scale).ceil() as usize).min(x0 + side);
+            (sx0, sx1.max(sx0 + 1))
+        })
+        .collect();
+    for (oy, orow) in res.chunks_exact_mut(out).enumerate() {
+        let sy0 = y0 + (oy as f64 * scale) as usize;
+        let sy1 = (y0 + ((oy + 1) as f64 * scale).ceil() as usize).min(y0 + side);
+        let sy1 = sy1.max(sy0 + 1);
+        for (px, &(sx0, sx1)) in orow.iter_mut().zip(&xspan) {
+            // box filter over the source rectangle of this output pixel
             let mut sum = 0f64;
             let mut n = 0usize;
-            for yy in sy0..sy1.max(sy0 + 1) {
-                for xx in sx0..sx1.max(sx0 + 1) {
-                    sum += img[yy * w + xx] as f64;
+            for yy in sy0..sy1 {
+                for &v in &img[yy * w + sx0..yy * w + sx1] {
+                    sum += v as f64;
                     n += 1;
                 }
             }
-            res[oy * out + ox] = (sum / n as f64) as f32;
+            *px = (sum / n as f64) as f32;
         }
     }
     res

@@ -16,13 +16,18 @@
 //! event buffer + frame records, keyed by [`TraceKey`]) and an
 //! [`EventSource`] lets the coordinator consume either live sensors or a
 //! shared replayed trace, bit-identically (DESIGN.md §9).
+//!
+//! The front end itself is vectorized (DESIGN.md §11): pixel state is
+//! structure-of-arrays and the DVS band scan runs in [`DVS_LANES`]-wide
+//! f32 lanes over the same row-contiguous buffers the per-kind scene
+//! renderers emit, bit-identical to the retained scalar reference path.
 
 pub mod dvs;
 pub mod frame;
 pub mod scene;
 pub mod trace;
 
-pub use dvs::DvsSim;
+pub use dvs::{DvsSim, DVS_LANES};
 pub use frame::FrameSensor;
 pub use scene::{Scene, SceneKind};
 pub use trace::{EventSource, SensorTrace, TraceKey};

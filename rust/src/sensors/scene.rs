@@ -6,6 +6,35 @@
 
 use crate::util::rng::Rng;
 
+/// The shared row loop of the per-kind `render_into` specializations:
+/// hands each row's normalized y and its contiguous row slice to
+/// `per_row`, which emits the row in the same lane-contiguous layout the
+/// vectorized DVS scan consumes (`sensors::dvs`). Keeping the row
+/// coordinate arithmetic in one place pins every specialization to the
+/// same normalization — and the same f32 bit patterns — so they can't
+/// drift apart.
+#[inline]
+fn render_rows(img: &mut [f32], width: usize, height: usize, mut per_row: impl FnMut(f64, &mut [f32])) {
+    if width == 0 {
+        return;
+    }
+    let inv_h = 1.0 / height as f64;
+    for (yy, row) in img.chunks_exact_mut(width).enumerate() {
+        let y = (yy as f64 + 0.5) * inv_h - 0.5;
+        per_row(y, row);
+    }
+}
+
+/// The shared pixel loop: fill one row from a per-pixel intensity closure
+/// over normalized x (the row-loop twin of [`render_rows`]).
+#[inline]
+fn fill_row(row: &mut [f32], inv_w: f64, mut px: impl FnMut(f64) -> f32) {
+    for (xx, p) in row.iter_mut().enumerate() {
+        let x = (xx as f64 + 0.5) * inv_w - 0.5;
+        *p = px(x);
+    }
+}
+
 /// Scene selector used by the CLI and the mission driver.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SceneKind {
@@ -193,8 +222,12 @@ impl Scene {
     ///
     /// Every [`SceneKind`] has a specialized loop so the kind match and
     /// all per-render / per-row invariants hoist out of the per-pixel
-    /// body, pinned pixel-identical to the reference [`Scene::intensity`]
-    /// by `specialized_render_matches_generic_path`:
+    /// body. The specializations share one row/pixel emission pair
+    /// ([`render_rows`] / [`fill_row`]) — so the coordinate normalization
+    /// cannot drift between kinds and every row lands in the contiguous
+    /// lane layout the vectorized DVS scan consumes — and each is pinned
+    /// pixel-identical to the reference [`Scene::intensity`] by
+    /// `specialized_render_matches_generic_path`:
     ///
     /// * **corridor** (the mission workload) — row-wise: the heading
     ///   line's center is constant per row, so only pixels within the
@@ -209,7 +242,6 @@ impl Scene {
     pub fn render_into(&self, width: usize, height: usize, t_s: f64, img: &mut [f32]) {
         assert_eq!(img.len(), width * height);
         let inv_w = 1.0 / width as f64;
-        let inv_h = 1.0 / height as f64;
         match self.kind {
             SceneKind::Corridor { speed_per_s, .. } => {
                 let phase = (t_s * speed_per_s).fract();
@@ -217,13 +249,10 @@ impl Scene {
                 let scale = if looming { (phase - 0.4) / 0.6 } else { 0.0 };
                 let (ox, oy, s0) = self.obstacle;
                 let os = s0 * (0.3 + 1.2 * scale);
-                for yy in 0..height {
-                    let y = (yy as f64 + 0.5) * inv_h - 0.5;
+                render_rows(img, width, height, |y, row| {
                     let center = self.steer * (y + 0.5 + 0.2 * phase);
                     let in_obst_row = looming && (y - oy).abs() < os;
-                    let row = &mut img[yy * width..(yy + 1) * width];
-                    for (xx, px) in row.iter_mut().enumerate() {
-                        let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                    fill_row(row, inv_w, |x| {
                         let d = (x - center).abs();
                         let mut i = if d < 0.30 {
                             0.15 + 0.75 * (-d * d / 0.01).exp()
@@ -233,36 +262,32 @@ impl Scene {
                         if in_obst_row && (x - ox).abs() < os {
                             i = 0.95;
                         }
-                        *px = i as f32;
-                    }
-                }
+                        i as f32
+                    });
+                });
             }
             SceneKind::RotatingBar { omega_rad_s } => {
                 let ang = omega_rad_s * t_s;
                 let (sin_a, cos_a) = (ang.sin(), ang.cos());
-                for yy in 0..height {
-                    let y = (yy as f64 + 0.5) * inv_h - 0.5;
+                render_rows(img, width, height, |y, row| {
                     let yc = y * cos_a;
                     let y2 = y * y;
-                    let row = &mut img[yy * width..(yy + 1) * width];
-                    for (xx, px) in row.iter_mut().enumerate() {
-                        let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                    fill_row(row, inv_w, |x| {
                         let d = (x * sin_a - yc).abs();
                         let r2 = x * x + y2;
                         // f64 intensity then cast, exactly like intensity()
-                        *px = (if d < 0.07 && r2 < 0.2 { 1.0f64 } else { 0.1 }) as f32;
-                    }
-                }
+                        (if d < 0.07 && r2 < 0.2 { 1.0f64 } else { 0.1 }) as f32
+                    });
+                });
             }
             SceneKind::TranslatingEdge { vel_per_s } => {
                 if height == 0 {
                     return;
                 }
                 let off = ((vel_per_s * t_s + 0.5).rem_euclid(1.0)) - 0.5;
-                for (xx, px) in img[..width].iter_mut().enumerate() {
-                    let x = (xx as f64 + 0.5) * inv_w - 0.5;
-                    *px = (if x < off { 0.9f64 } else { 0.1 }) as f32;
-                }
+                fill_row(&mut img[..width], inv_w, |x| {
+                    (if x < off { 0.9f64 } else { 0.1 }) as f32
+                });
                 for yy in 1..height {
                     img.copy_within(0..width, yy * width);
                 }
@@ -270,40 +295,34 @@ impl Scene {
             SceneKind::ExpandingRing { rate_per_s } => {
                 let r0 = 0.05 + (rate_per_s * t_s).rem_euclid(0.4);
                 let r_in = r0 - 0.08;
-                for yy in 0..height {
-                    let y = (yy as f64 + 0.5) * inv_h - 0.5;
+                render_rows(img, width, height, |y, row| {
                     let y2 = y * y;
-                    let row = &mut img[yy * width..(yy + 1) * width];
-                    for (xx, px) in row.iter_mut().enumerate() {
-                        let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                    fill_row(row, inv_w, |x| {
                         let r = (x * x + y2).sqrt();
-                        *px = (if r < r0 && r > r_in { 1.0f64 } else { 0.1 }) as f32;
-                    }
-                }
+                        (if r < r0 && r > r_in { 1.0f64 } else { 0.1 }) as f32
+                    });
+                });
             }
             SceneKind::Noise { density, .. } => {
                 let ti = (t_s * 1000.0) as u64;
                 let t_term = ti.wrapping_mul(0x94d049bb133111eb);
-                for yy in 0..height {
-                    let y = (yy as f64 + 0.5) * inv_h - 0.5;
+                render_rows(img, width, height, |y, row| {
                     let yi = ((y + 0.5) * 4096.0) as u64;
                     let y_term = yi.wrapping_mul(0xbf58476d1ce4e5b9);
-                    let row = &mut img[yy * width..(yy + 1) * width];
-                    for (xx, px) in row.iter_mut().enumerate() {
-                        let x = (xx as f64 + 0.5) * inv_w - 0.5;
+                    fill_row(row, inv_w, |x| {
                         let xi = ((x + 0.5) * 4096.0) as u64;
                         let h = xi
                             .wrapping_mul(0x9e3779b97f4a7c15)
                             .wrapping_add(y_term)
                             .wrapping_add(t_term);
                         let h = (h ^ (h >> 31)).wrapping_mul(0xbf58476d1ce4e5b9);
-                        *px = (if ((h >> 40) as f64 / (1u64 << 24) as f64) < density {
+                        (if ((h >> 40) as f64 / (1u64 << 24) as f64) < density {
                             1.0f64
                         } else {
                             0.0
-                        }) as f32;
-                    }
-                }
+                        }) as f32
+                    });
+                });
             }
         }
     }

@@ -117,7 +117,32 @@ impl SensorTrace {
     /// The loop replicates the mission DES's sensor event order: windows
     /// fire at `w * window_ns`, frames at the camera cadence, and at
     /// equal timestamps the window opens first (the scheduler tie-break).
+    ///
+    /// Capture rides the vectorized DVS step (`sensors::dvs`), which is
+    /// bit-identical to the scalar reference —
+    /// [`SensorTrace::capture_scalar_reference`] runs the *same* loop
+    /// over the scalar step so `tests/integration_trace.rs` can pin the
+    /// whole trace (windows + frames) against it for every [`SceneKind`].
     pub fn capture(key: &TraceKey) -> SensorTrace {
+        Self::capture_with(key, |dvs, scene, ts, win| dvs.step_into(scene, ts, win))
+    }
+
+    /// The scalar-reference twin of [`SensorTrace::capture`]: identical
+    /// capture loop, scalar DVS step. Kept behind the default-on
+    /// `scalar-ref` feature purely as the bit-identity anchor of the
+    /// vectorized front end.
+    #[cfg(any(test, feature = "scalar-ref"))]
+    pub fn capture_scalar_reference(key: &TraceKey) -> SensorTrace {
+        Self::capture_with(key, |dvs, scene, ts, win| dvs.step_into_scalar(scene, ts, win))
+    }
+
+    /// The one capture loop both entry points share, parameterized over
+    /// the DVS step so the vectorized and scalar-reference captures
+    /// cannot drift in frame interleaving or window sampling.
+    fn capture_with(
+        key: &TraceKey,
+        mut step: impl FnMut(&mut DvsSim, &Scene, u64, &mut EventWindow),
+    ) -> SensorTrace {
         let window_ns = (key.window_ms * 1e6) as u64;
         let n_windows = (key.duration_s * 1e9 / window_ns as f64) as u64;
         let end_ns = n_windows * window_ns;
@@ -139,6 +164,8 @@ impl SensorTrace {
 
         // the first frame is scheduled unconditionally (mission run loop)
         let mut next_frame = if n_windows > 0 { cam.next_frame_t_ns() } else { u64::MAX };
+        // per-window sample count is invariant across windows: hoist it
+        let n_samples = ((window_ns as f64 * 1e-9) * key.dvs_sample_hz).max(1.0) as u64;
         for w in 0..n_windows {
             let t0 = w * window_ns;
             while next_frame < t0 {
@@ -147,11 +174,10 @@ impl SensorTrace {
                 next_frame = if t < end_ns { t } else { u64::MAX };
             }
             win.events.clear();
-            let n_samples = ((window_ns as f64 * 1e-9) * key.dvs_sample_hz).max(1.0) as u64;
             for k in 0..=n_samples {
                 let ts = t0 + k * window_ns / (n_samples + 1);
                 scene.advance(ts as f64 * 1e-9);
-                dvs.step_into(&scene, ts, &mut win);
+                step(&mut dvs, &scene, ts, &mut win);
             }
             events.extend_from_slice(&win.events);
             offsets.push(events.len());

@@ -81,6 +81,50 @@ fn replay_is_bit_identical_to_live_for_every_scene_kind() {
 }
 
 #[test]
+fn vectorized_capture_matches_scalar_reference_for_every_scene_kind() {
+    // the vectorized sensor front end (DESIGN.md §11) under the trace
+    // contract: a capture through the lane-masked DVS step must be
+    // bit-identical — every window's event slice, every frame record —
+    // to the same capture run through the retained scalar reference
+    // step, and a mission replaying either trace must produce the same
+    // whole-report fingerprint. Covers capture + replay per SceneKind.
+    let kinds = [
+        SceneKind::Corridor { speed_per_s: 0.5, seed: 11 },
+        SceneKind::RotatingBar { omega_rad_s: 6.0 },
+        SceneKind::TranslatingEdge { vel_per_s: 0.4 },
+        SceneKind::ExpandingRing { rate_per_s: 0.5 },
+        SceneKind::Noise { density: 0.05, seed: 11 },
+    ];
+    for kind in kinds {
+        let cfg = cfg_for(kind, 11);
+        let key = cfg.trace_key();
+        let vec_trace = SensorTrace::capture(&key);
+        let ref_trace = SensorTrace::capture_scalar_reference(&key);
+        assert_eq!(vec_trace.n_windows(), ref_trace.n_windows(), "{kind:?}");
+        for w in 0..vec_trace.n_windows() {
+            assert_eq!(vec_trace.window(w), ref_trace.window(w), "{kind:?} window {w}");
+        }
+        // frame records carry f64 truth: Debug is shortest-roundtrip, so
+        // string equality is bit equality
+        assert_eq!(
+            format!("{:?}", vec_trace.frames()),
+            format!("{:?}", ref_trace.frames()),
+            "{kind:?} frame records"
+        );
+        let vec_replay =
+            Mission::with_trace(SocConfig::kraken(), cfg.clone(), Some(Arc::new(vec_trace)))
+                .unwrap()
+                .run()
+                .unwrap();
+        let ref_replay = Mission::with_trace(SocConfig::kraken(), cfg, Some(Arc::new(ref_trace)))
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(scrub_mission(vec_replay), scrub_mission(ref_replay), "{kind:?}");
+    }
+}
+
+#[test]
 fn workload_replay_is_bit_identical_to_live_for_every_scene_kind() {
     for kind in [
         SceneKind::Corridor { speed_per_s: 0.5, seed: 9 },

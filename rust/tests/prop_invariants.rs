@@ -268,6 +268,67 @@ fn prop_fleet_equals_serial_missions() {
 }
 
 #[test]
+fn prop_vectorized_step_equals_scalar() {
+    use kraken::sensors::scene::{Scene, SceneKind};
+    use kraken::sensors::{DvsSim, DVS_LANES};
+    // the bit-identity contract of the vectorized sensor front end
+    // (DESIGN.md §11): over random scenes x seeds x thresholds x
+    // geometries (deliberately lane-misaligned), the lane-masked step
+    // must match the scalar reference event for event — and leave
+    // identical band state and RNG position behind.
+    check("lane-masked DVS step == scalar reference step", 25, |rng| {
+        let seed = rng.gen_below(1 << 20);
+        let w = rng.gen_range_usize(3, 70);
+        let h = rng.gen_range_usize(3, 70);
+        let kind = match rng.gen_range_usize(0, 5) {
+            0 => SceneKind::Corridor { speed_per_s: rng.gen_range_f64(0.3, 1.2), seed },
+            1 => SceneKind::RotatingBar { omega_rad_s: rng.gen_range_f64(2.0, 10.0) },
+            2 => SceneKind::TranslatingEdge { vel_per_s: rng.gen_range_f64(0.1, 0.8) },
+            3 => SceneKind::ExpandingRing { rate_per_s: rng.gen_range_f64(0.2, 0.8) },
+            _ => SceneKind::Noise { density: rng.gen_range_f64(0.01, 0.3), seed },
+        };
+        let mut vec_dvs = DvsSim::new(w, h, seed);
+        let mut sc_dvs = DvsSim::new(w, h, seed);
+        let threshold = rng.gen_range_f64(0.08, 0.5);
+        let noise_hz = rng.gen_range_f64(0.0, 400.0);
+        for d in [&mut vec_dvs, &mut sc_dvs] {
+            d.threshold = threshold;
+            d.noise_rate_hz = noise_hz;
+        }
+        let mut scene_a = Scene::new(kind);
+        let mut scene_b = Scene::new(kind);
+        let mut win_a = EventWindow::new(w, h);
+        let mut win_b = EventWindow::new(w, h);
+        let steps = rng.gen_range_usize(2, 12);
+        let mut t = 0u64;
+        for _ in 0..steps {
+            t += rng.gen_below(3_000_000) + 1;
+            scene_a.advance(t as f64 * 1e-9);
+            scene_b.advance(t as f64 * 1e-9);
+            vec_dvs.step_into(&scene_a, t, &mut win_a);
+            sc_dvs.step_into_scalar(&scene_b, t, &mut win_b);
+        }
+        prop_assert!(
+            win_a.events == win_b.events,
+            "event streams diverge: {kind:?} {w}x{h} (tail {}) th={threshold}",
+            (w * h) % DVS_LANES
+        );
+        let (log_a, lo_a, hi_a) = vec_dvs.band_state();
+        let (log_b, lo_b, hi_b) = sc_dvs.band_state();
+        prop_assert!(log_a == log_b, "last_log planes diverge: {kind:?} {w}x{h}");
+        prop_assert!(
+            lo_a == lo_b && hi_a == hi_b,
+            "band planes diverge: {kind:?} {w}x{h}"
+        );
+        prop_assert!(
+            vec_dvs.rng_probe() == sc_dvs.rng_probe(),
+            "noise RNG position diverges: {kind:?} {w}x{h}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_trace_replay_equals_live_sensing() {
     use kraken::sensors::scene::SceneKind;
     use kraken::sensors::trace::SensorTrace;
