@@ -11,6 +11,10 @@
 //! 6. sensor-trace capture & replay (the grid/fleet sharing fast path)
 //! 7. DVS row-mask step: the vectorized lane scan against the retained
 //!    scalar reference, at three event-sparsity levels (DESIGN.md §11)
+//! 8. timeline recorder overhead: the same mission with the trace
+//!    recorder off vs on — the recorder-off number is the §12
+//!    zero-perturbation contract's perf half (off must be within noise
+//!    of the pre-observability baseline)
 //!
 //! Run: `cargo bench --bench hotpath`
 //! Machine-readable: `cargo bench --bench hotpath -- --json` writes
@@ -158,6 +162,23 @@ fn main() {
             sc_dvs.step_scalar(&scene, ts)
         });
     }
+
+    log.section("8. timeline recorder overhead (0.25 s mission)");
+    // recorder off: the Option<TraceRecorder> field stays None, so every
+    // emission site is one branch — this is the overhead a non-traced
+    // mission pays for the observability hooks existing at all
+    log.bench("mission 0.25 s, recorder off", || {
+        Mission::new(SocConfig::kraken(), mcfg.clone())
+            .unwrap()
+            .run()
+            .unwrap()
+    });
+    log.bench("mission 0.25 s, recorder on", || {
+        let mut m = Mission::new(SocConfig::kraken(), mcfg.clone()).unwrap();
+        m.record_timeline();
+        let r = m.run().unwrap();
+        (r, m.take_timeline())
+    });
 
     log.finish().expect("write BENCH_hotpath.json");
 }

@@ -315,6 +315,18 @@ pub struct RailDecision {
     pub gate: [bool; 3],
 }
 
+impl RailDecision {
+    /// The gate requests packed as a bitmask in [`ENGINE_DOMAINS`] order
+    /// (bit 0 = SNE, 1 = CUTIE, 2 = PULP) — the compact form the
+    /// timeline recorder stamps onto governor-epoch events.
+    pub fn gate_mask(&self) -> u32 {
+        self.gate
+            .iter()
+            .enumerate()
+            .fold(0u32, |m, (i, &g)| if g { m | (1 << i) } else { m })
+    }
+}
+
 /// A deterministic power-management policy driven on the mission epoch
 /// tick: same snapshots in, same decisions out, on any host.
 pub trait Governor {
@@ -588,6 +600,7 @@ mod tests {
         s.idle_s = [0.01, 0.06, 0.05];
         let d = g.on_epoch(&s);
         assert_eq!(d.gate, [false, true, true]);
+        assert_eq!(d.gate_mask(), 0b110, "mask packs ENGINE_DOMAINS order");
         assert_eq!(d.vdd.to_bits(), s.vdd.to_bits(), "fixed echoes the live rail");
         let mut never = Fixed { idle_gate_s: None };
         assert_eq!(never.on_epoch(&s).gate, [false; 3]);

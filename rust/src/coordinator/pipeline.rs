@@ -50,6 +50,8 @@ use crate::coordinator::governor::{
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::telemetry::Snapshot;
 use crate::event::Event;
+use crate::obs::timeline as tl;
+use crate::obs::timeline::TraceRecorder;
 use crate::runtime::Runtime;
 use crate::sensors::frame::{downsample_square, to_int8_luma, to_ternary};
 use crate::sensors::scene::SceneKind;
@@ -247,6 +249,10 @@ pub struct Mission {
     /// Persistent FireNet LIF state (functional path).
     firenet_state: Vec<Vec<f32>>,
     firenet_dims: (usize, usize), // artifact (h, w)
+    /// Optional deterministic timeline recorder (DESIGN.md §12). Reads
+    /// only already-computed simulation values and DES timestamps, so
+    /// reports are bit-identical with it on, off or absent.
+    recorder: Option<TraceRecorder>,
 }
 
 const TIMESTEPS: usize = 5;
@@ -331,9 +337,25 @@ impl Mission {
             runtime,
             firenet_state,
             firenet_dims: (fh, fw),
+            recorder: None,
             soc,
             cfg,
         })
+    }
+
+    /// Attach a fresh timeline recorder: the next [`Mission::run`] records
+    /// a deterministic DES trace (window opens/closes, engine spans and
+    /// drops, frames, governor epochs, rail moves, gate toggles). Zero
+    /// perturbation: emission reads only values the simulation already
+    /// computed, so the report is bit-identical either way (pinned in
+    /// `tests/integration_obs.rs`).
+    pub fn record_timeline(&mut self) {
+        self.recorder = Some(TraceRecorder::new());
+    }
+
+    /// Detach the recorder with everything recorded so far, if any.
+    pub fn take_timeline(&mut self) -> Option<TraceRecorder> {
+        self.recorder.take()
     }
 
     /// Total idle power (W) of keeping every un-gated engine clocked at the
@@ -413,6 +435,13 @@ impl Mission {
                     }
                 }
             }
+        }
+
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.counter("des", "des.events", tl::PID_SOC, tl::TID_GOVERNOR, end_ns, vec![(
+                "popped",
+                sched.events_popped() as f64,
+            )]);
         }
 
         // normalize snapshots: convert stashed cumulative energy to power
@@ -507,12 +536,34 @@ impl Mission {
         st.snap.activity += activity;
         st.snap.events += n_events;
 
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.instant(
+                "window",
+                "window.open",
+                tl::pid_of_tenant(0),
+                tl::TID_WINDOW,
+                t0,
+                vec![("w", w as f64), ("events", n_events as f64), ("activity", activity)],
+            );
+        }
+
         let sne_dur = self.sne.job_ns(activity, st.vdd);
         if self.sne.dispatch(&mut self.soc.power, t0, sne_dur, window_ns) {
             let done = self.sne.slot().busy_until_ns;
             note_job(&mut st.epoch_slack_ns, &mut st.epoch_service_frac, window_ns, t0, done);
             report.sne_inf += 1;
             st.snap.sne_inf += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.span(
+                    "engine",
+                    "sne",
+                    tl::pid_of_tenant(0),
+                    tl::TID_SNE,
+                    t0,
+                    done,
+                    vec![("w", w as f64), ("activity", activity)],
+                );
+            }
             if let Some(fs) = flow_summary {
                 self.fusion.update_flow(fs);
             } else {
@@ -522,6 +573,16 @@ impl Mission {
             }
         } else {
             report.dropped_windows += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.instant(
+                    "engine",
+                    "sne.drop",
+                    tl::pid_of_tenant(0),
+                    tl::TID_SNE,
+                    t0,
+                    vec![("w", w as f64)],
+                );
+            }
         }
         Ok(())
     }
@@ -540,6 +601,18 @@ impl Mission {
         let f_fab = self.soc.power.freq(DomainId::Fabric).max(1.0);
         let dma_done = self.soc.dma.start("frame", frame_bytes, fts, f_fab);
 
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.span(
+                "frame",
+                "frame.dma",
+                tl::pid_of_tenant(0),
+                tl::TID_FRAME,
+                fts,
+                dma_done,
+                vec![("bytes", frame_bytes as f64)],
+            );
+        }
+
         // CUTIE classification
         let cutie_dur = self.cutie.job_ns(st.vdd);
         if self.cutie.dispatch(&mut self.soc.power, dma_done, cutie_dur, window_ns) {
@@ -553,6 +626,9 @@ impl Mission {
             );
             report.cutie_inf += 1;
             st.snap.cutie_inf += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.span("engine", "cutie", tl::pid_of_tenant(0), tl::TID_CUTIE, dma_done, done, vec![]);
+            }
             let class = if let Some(rt) = &self.runtime {
                 let small = downsample_square(
                     img.as_deref().expect("functional missions sense live frames"),
@@ -567,6 +643,8 @@ impl Mission {
                 (fts / 33_000_000 % 10) as usize // placeholder class
             };
             self.fusion.update_class(class);
+        } else if let Some(rec) = self.recorder.as_mut() {
+            rec.instant("engine", "cutie.drop", tl::pid_of_tenant(0), tl::TID_CUTIE, dma_done, vec![]);
         }
 
         // PULP DroNet
@@ -582,6 +660,9 @@ impl Mission {
             );
             report.pulp_inf += 1;
             st.snap.pulp_inf += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.span("engine", "pulp", tl::pid_of_tenant(0), tl::TID_PULP, dma_done, done, vec![]);
+            }
             let (steer, coll) = if let Some(rt) = &self.runtime {
                 let small = downsample_square(
                     img.as_deref().expect("functional missions sense live frames"),
@@ -597,6 +678,8 @@ impl Mission {
                 (s as f32, if c { 3.0 } else { -3.0 })
             };
             self.fusion.update_dronet(steer / 64.0, coll);
+        } else if let Some(rec) = self.recorder.as_mut() {
+            rec.instant("engine", "pulp.drop", tl::pid_of_tenant(0), tl::TID_PULP, dma_done, vec![]);
         }
         Ok(())
     }
@@ -614,6 +697,24 @@ impl Mission {
         }
         report.commands += 1;
         st.snap.commands += 1;
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.instant(
+                "fusion",
+                "command",
+                tl::pid_of_tenant(0),
+                tl::TID_FUSION,
+                t1,
+                vec![("avoiding", if cmd.avoiding { 1.0 } else { 0.0 })],
+            );
+            rec.instant(
+                "window",
+                "window.close",
+                tl::pid_of_tenant(0),
+                tl::TID_WINDOW,
+                t1,
+                vec![("w", w as f64)],
+            );
+        }
         if report.last_commands.len() < 32 {
             report.last_commands.push(cmd);
         }
@@ -658,15 +759,43 @@ impl Mission {
             tenant_slack_ns: &slack,
             tenant_service_frac: &frac,
         });
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.instant(
+                "governor",
+                "epoch",
+                tl::PID_SOC,
+                tl::TID_GOVERNOR,
+                t1,
+                vec![
+                    ("epoch", w as f64),
+                    ("vdd", st.vdd),
+                    ("target_vdd", decision.vdd),
+                    ("gate_mask", decision.gate_mask() as f64),
+                ],
+            );
+        }
         for (i, d) in ENGINE_DOMAINS.iter().enumerate() {
             if decision.gate[i] && !self.soc.power.is_gated(*d) {
                 self.soc.power.gate(*d);
                 st.snap.any_gated = true;
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.instant("gate", d.label(), tl::PID_SOC, tl::TID_GATE, t1, vec![(
+                        "domain",
+                        i as f64,
+                    )]);
+                }
             }
         }
         if decision.vdd != st.vdd {
+            let from = st.vdd;
             self.soc.power.rail_transition(decision.vdd);
             st.vdd = self.soc.power.vdd();
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.instant("rail", "transition", tl::PID_SOC, tl::TID_RAIL, t1, vec![
+                    ("from", from),
+                    ("to", st.vdd),
+                ]);
+            }
         }
 
         // -- telemetry --------------------------------------------
@@ -880,6 +1009,25 @@ mod tests {
         let trace = Arc::new(SensorTrace::capture(&cfg.trace_key()));
         cfg.artifacts_dir = Some("artifacts".into());
         assert!(Mission::with_trace(SocConfig::kraken(), cfg, Some(trace)).is_err());
+    }
+
+    #[test]
+    fn timeline_recorder_does_not_perturb_the_mission() {
+        let mut plain = Mission::new(SocConfig::kraken(), quick_cfg()).unwrap();
+        let r_plain = plain.run().unwrap();
+        let mut traced = Mission::new(SocConfig::kraken(), quick_cfg()).unwrap();
+        traced.record_timeline();
+        let r_traced = traced.run().unwrap();
+        assert_eq!(r_plain.energy_j.to_bits(), r_traced.energy_j.to_bits());
+        assert_eq!(r_plain.sne_inf, r_traced.sne_inf);
+        assert_eq!(r_plain.commands, r_traced.commands);
+        let rec = traced.take_timeline().expect("recorder attached");
+        assert!(!rec.is_empty(), "a mission leaves a trace");
+        assert!(traced.take_timeline().is_none(), "take detaches");
+        let json = rec.export();
+        for cat in ["window", "frame", "engine", "governor", "fusion"] {
+            assert!(json.contains(&format!("\"cat\":\"{cat}\"")), "missing {cat}");
+        }
     }
 
     #[test]

@@ -68,6 +68,7 @@ pub struct Scheduler<T> {
     heap: BinaryHeap<Entry<T>>,
     seq: u64,
     now_ns: u64,
+    popped: u64,
 }
 
 impl<T> Default for Scheduler<T> {
@@ -78,7 +79,7 @@ impl<T> Default for Scheduler<T> {
 
 impl<T> Scheduler<T> {
     pub fn new() -> Self {
-        Scheduler { heap: BinaryHeap::new(), seq: 0, now_ns: 0 }
+        Scheduler { heap: BinaryHeap::new(), seq: 0, now_ns: 0, popped: 0 }
     }
 
     /// Schedule `payload` at absolute time `t_ns`. Scheduling into the past
@@ -100,6 +101,7 @@ impl<T> Scheduler<T> {
     pub fn pop(&mut self) -> Option<Scheduled<T>> {
         let e = self.heap.pop()?;
         self.now_ns = self.now_ns.max(e.t_ns);
+        self.popped += 1;
         Some(Scheduled { t_ns: e.t_ns, prio: e.prio, payload: e.payload })
     }
 
@@ -111,6 +113,12 @@ impl<T> Scheduler<T> {
     /// Time of the most recently popped event (simulated ns).
     pub fn now_ns(&self) -> u64 {
         self.now_ns
+    }
+
+    /// Events dispatched so far — the DES volume counter the timeline
+    /// recorder stamps onto exported traces (`crate::obs::timeline`).
+    pub fn events_popped(&self) -> u64 {
+        self.popped
     }
 
     pub fn len(&self) -> usize {
@@ -172,5 +180,6 @@ mod tests {
         assert_eq!(s.now_ns(), 9);
         assert!(s.is_empty());
         assert_eq!(s.len(), 0);
+        assert_eq!(s.events_popped(), 2);
     }
 }

@@ -50,6 +50,8 @@ use crate::coordinator::governor::{
 use crate::coordinator::pipeline::{argmax, rebin_slice, MissionConfig, MissionReport};
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::telemetry::Snapshot;
+use crate::obs::timeline as tl;
+use crate::obs::timeline::TraceRecorder;
 use crate::runtime::Runtime;
 use crate::sensors::frame::{downsample_square, to_int8_luma, to_ternary};
 use crate::sensors::trace::{EventSource, SensorTrace, TraceKey};
@@ -583,6 +585,10 @@ pub struct Workload {
     /// window-close path is the DES hot loop, so no per-epoch allocs.
     slack_scratch: Vec<i64>,
     frac_scratch: Vec<f64>,
+    /// Optional deterministic timeline recorder (DESIGN.md §12). Reads
+    /// only already-computed simulation values and DES timestamps, so
+    /// reports are bit-identical with it on, off or absent.
+    recorder: Option<TraceRecorder>,
 }
 
 impl Workload {
@@ -696,9 +702,23 @@ impl Workload {
             governor,
             slack_scratch: Vec::with_capacity(n),
             frac_scratch: Vec::with_capacity(n),
+            recorder: None,
             soc,
             cfg,
         })
+    }
+
+    /// Attach a fresh timeline recorder: the next [`Workload::run`]
+    /// records a deterministic DES trace with one process row per tenant
+    /// plus the SoC row (governor, rail, gates). Zero perturbation —
+    /// reports are bit-identical either way (`tests/integration_obs.rs`).
+    pub fn record_timeline(&mut self) {
+        self.recorder = Some(TraceRecorder::new());
+    }
+
+    /// Detach the recorder with everything recorded so far, if any.
+    pub fn take_timeline(&mut self) -> Option<TraceRecorder> {
+        self.recorder.take()
     }
 
     /// Total idle power (W) of the un-gated engines at the current
@@ -797,6 +817,13 @@ impl Workload {
                     }
                 }
             }
+        }
+
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.counter("des", "des.events", tl::PID_SOC, tl::TID_GOVERNOR, end_ns, vec![(
+                "popped",
+                sched.events_popped() as f64,
+            )]);
         }
 
         // normalize stored snapshots: stashed cumulative energy -> power
@@ -906,14 +933,37 @@ impl Workload {
         ten.snap.activity += activity;
         ten.snap.events += n_events;
 
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.instant(
+                "window",
+                "window.open",
+                tl::pid_of_tenant(tenant),
+                tl::TID_WINDOW,
+                t0,
+                vec![("w", w as f64), ("events", n_events as f64), ("activity", activity)],
+            );
+        }
+
         let sne_dur = self.sne.job_ns(activity, st.vdd);
         let wait_ns = queue_wait_ns(&self.sne, &self.soc.power, t0);
         if self.sne.dispatch(&mut self.soc.power, t0, sne_dur, window_ns) {
             self.contention[ENG_SNE].record(wait_ns);
             let deadline = self.cfg.streams[tenant].window_deadline_ns(window_ns);
-            ten.note_slack(deadline, t0, self.sne.slot().busy_until_ns);
+            let done = self.sne.slot().busy_until_ns;
+            ten.note_slack(deadline, t0, done);
             ten.report.sne_inf += 1;
             ten.snap.sne_inf += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.span(
+                    "engine",
+                    "sne",
+                    tl::pid_of_tenant(tenant),
+                    tl::TID_SNE,
+                    t0,
+                    done,
+                    vec![("w", w as f64), ("wait_ns", wait_ns as f64)],
+                );
+            }
             match flow_summary {
                 Some(fs) => ten.fusion.update_flow(fs),
                 None => ten.fusion.update_flow(FlowSummary::default()),
@@ -923,6 +973,16 @@ impl Workload {
             ten.report.dropped_windows += 1;
             // a dropped job can never meet its deadline
             ten.report.deadline_misses += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.instant(
+                    "engine",
+                    "sne.drop",
+                    tl::pid_of_tenant(tenant),
+                    tl::TID_SNE,
+                    t0,
+                    vec![("w", w as f64)],
+                );
+            }
         }
         Ok(())
     }
@@ -943,14 +1003,38 @@ impl Workload {
 
         let frame_deadline = self.cfg.streams[tenant].frame_deadline_ns(window_ns);
 
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.span(
+                "frame",
+                "frame.dma",
+                tl::pid_of_tenant(tenant),
+                tl::TID_FRAME,
+                fts,
+                dma_done,
+                vec![("bytes", frame_bytes as f64)],
+            );
+        }
+
         // CUTIE classification
         let cutie_dur = self.cutie.job_ns(st.vdd);
         let wait_c = queue_wait_ns(&self.cutie, &self.soc.power, dma_done);
         if self.cutie.dispatch(&mut self.soc.power, dma_done, cutie_dur, window_ns) {
             self.contention[ENG_CUTIE].record(wait_c);
-            ten.note_slack(frame_deadline, dma_done, self.cutie.slot().busy_until_ns);
+            let done = self.cutie.slot().busy_until_ns;
+            ten.note_slack(frame_deadline, dma_done, done);
             ten.report.cutie_inf += 1;
             ten.snap.cutie_inf += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.span(
+                    "engine",
+                    "cutie",
+                    tl::pid_of_tenant(tenant),
+                    tl::TID_CUTIE,
+                    dma_done,
+                    done,
+                    vec![("wait_ns", wait_c as f64)],
+                );
+            }
             let class = if let Some(rt) = &self.runtime {
                 let small = downsample_square(
                     img.as_deref().expect("functional workloads sense live frames"),
@@ -968,6 +1052,16 @@ impl Workload {
         } else {
             self.contention[ENG_CUTIE].dropped += 1;
             ten.report.deadline_misses += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.instant(
+                    "engine",
+                    "cutie.drop",
+                    tl::pid_of_tenant(tenant),
+                    tl::TID_CUTIE,
+                    dma_done,
+                    vec![],
+                );
+            }
         }
 
         // PULP DroNet
@@ -975,9 +1069,21 @@ impl Workload {
         let wait_p = queue_wait_ns(&self.pulp, &self.soc.power, dma_done);
         if self.pulp.dispatch(&mut self.soc.power, dma_done, pulp_dur, window_ns) {
             self.contention[ENG_PULP].record(wait_p);
-            ten.note_slack(frame_deadline, dma_done, self.pulp.slot().busy_until_ns);
+            let done = self.pulp.slot().busy_until_ns;
+            ten.note_slack(frame_deadline, dma_done, done);
             ten.report.pulp_inf += 1;
             ten.snap.pulp_inf += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.span(
+                    "engine",
+                    "pulp",
+                    tl::pid_of_tenant(tenant),
+                    tl::TID_PULP,
+                    dma_done,
+                    done,
+                    vec![("wait_ns", wait_p as f64)],
+                );
+            }
             let (steer, coll) = if let Some(rt) = &self.runtime {
                 let small = downsample_square(
                     img.as_deref().expect("functional workloads sense live frames"),
@@ -996,6 +1102,16 @@ impl Workload {
         } else {
             self.contention[ENG_PULP].dropped += 1;
             ten.report.deadline_misses += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.instant(
+                    "engine",
+                    "pulp.drop",
+                    tl::pid_of_tenant(tenant),
+                    tl::TID_PULP,
+                    dma_done,
+                    vec![],
+                );
+            }
         }
         Ok(())
     }
@@ -1008,13 +1124,31 @@ impl Workload {
         let t1 = (w + 1) * window_ns;
 
         // -- fusion, one command per tenant per window -----------------
-        for ten in &mut self.tenants {
+        for (idx, ten) in self.tenants.iter_mut().enumerate() {
             let cmd = ten.fusion.command(t1);
             if cmd.avoiding {
                 ten.avoid_count += 1;
             }
             ten.report.commands += 1;
             ten.snap.commands += 1;
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.instant(
+                    "fusion",
+                    "command",
+                    tl::pid_of_tenant(idx),
+                    tl::TID_FUSION,
+                    t1,
+                    vec![("avoiding", if cmd.avoiding { 1.0 } else { 0.0 })],
+                );
+                rec.instant(
+                    "window",
+                    "window.close",
+                    tl::pid_of_tenant(idx),
+                    tl::TID_WINDOW,
+                    t1,
+                    vec![("w", w as f64)],
+                );
+            }
             if ten.report.last_commands.len() < 32 {
                 ten.report.last_commands.push(cmd);
             }
@@ -1061,11 +1195,32 @@ impl Workload {
             tenant_slack_ns: &self.slack_scratch,
             tenant_service_frac: &self.frac_scratch,
         });
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.instant(
+                "governor",
+                "epoch",
+                tl::PID_SOC,
+                tl::TID_GOVERNOR,
+                t1,
+                vec![
+                    ("epoch", w as f64),
+                    ("vdd", st.vdd),
+                    ("target_vdd", decision.vdd),
+                    ("gate_mask", decision.gate_mask() as f64),
+                ],
+            );
+        }
         let mut any_gated_now = false;
         for (i, d) in ENGINE_DOMAINS.iter().enumerate() {
             if decision.gate[i] && !self.soc.power.is_gated(*d) {
                 self.soc.power.gate(*d);
                 any_gated_now = true;
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.instant("gate", d.label(), tl::PID_SOC, tl::TID_GATE, t1, vec![(
+                        "domain",
+                        i as f64,
+                    )]);
+                }
             }
         }
         if any_gated_now {
@@ -1074,8 +1229,15 @@ impl Workload {
             }
         }
         if decision.vdd != st.vdd {
+            let from = st.vdd;
             self.soc.power.rail_transition(decision.vdd);
             st.vdd = self.soc.power.vdd();
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.instant("rail", "transition", tl::PID_SOC, tl::TID_RAIL, t1, vec![
+                    ("from", from),
+                    ("to", st.vdd),
+                ]);
+            }
         }
 
         // -- telemetry -------------------------------------------------
@@ -1299,6 +1461,28 @@ mod tests {
         assert!(s.contains("engine contention"));
         assert!(s.contains("governor fixed"));
         assert!(s.contains("misses"));
+    }
+
+    #[test]
+    fn timeline_recorder_does_not_perturb_the_workload() {
+        let cfg = WorkloadConfig::fan_out(&quick_mission(), 2);
+        let mut plain = Workload::new(SocConfig::kraken(), cfg.clone()).unwrap();
+        let r_plain = plain.run().unwrap();
+        let mut traced = Workload::new(SocConfig::kraken(), cfg).unwrap();
+        traced.record_timeline();
+        let r_traced = traced.run().unwrap();
+        assert_eq!(r_plain.energy_j.to_bits(), r_traced.energy_j.to_bits());
+        assert_eq!(r_plain.inferences_total(), r_traced.inferences_total());
+        assert_eq!(r_plain.events_total(), r_traced.events_total());
+        let rec = traced.take_timeline().expect("recorder attached");
+        assert!(!rec.is_empty());
+        let json = rec.export();
+        // both tenant process rows appear, plus the guaranteed categories
+        assert!(json.contains("\"name\":\"tenant 0\""));
+        assert!(json.contains("\"name\":\"tenant 1\""));
+        for cat in ["window", "frame", "engine", "governor", "fusion"] {
+            assert!(json.contains(&format!("\"cat\":\"{cat}\"")), "missing {cat}");
+        }
     }
 
     #[test]

@@ -99,6 +99,7 @@ pub mod cutie;
 pub mod event;
 pub mod metrics;
 pub mod nets;
+pub mod obs;
 pub mod pulp;
 pub mod quant;
 pub mod runtime;

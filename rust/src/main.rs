@@ -50,7 +50,11 @@ COMMANDS:
                                   regenerate paper figure series
   run [--duration S] [--scene corridor|bar|edge|ring|noise]
       [--seed N] [--artifacts DIR] [--vdd V] [--live] [--json]
-                                  run the Fig. 2 mission
+      [--timeline PATH]
+                                  run the Fig. 2 mission; --timeline writes
+                                  a deterministic Chrome-trace JSON of the
+                                  DES (Perfetto / chrome://tracing loadable,
+                                  DESIGN.md §12)
   fleet [--missions N] [--threads T] [--duration S] [--scene ...]
         [--seed BASE] [--vdd V] [--vdds V1,V2,...] [--gates G1,off,...]
         [--governors G1,G2,...] [--json]
@@ -64,6 +68,7 @@ COMMANDS:
   workload [--tenants N] [--duration S] [--scene ...] [--seed BASE]
            [--vdd V] [--window-ms MS]
            [--governor fixed|ladder|deadline] [--qos P[:DLms],...] [--json]
+           [--timeline PATH]
                                   run N tenant sensor streams sharing ONE
                                   SoC's engines (stream seeds BASE..BASE+N):
                                   per-tenant rates plus shared-engine
@@ -71,12 +76,14 @@ COMMANDS:
                                   --governor picks the DVFS governor and
                                   --qos gives tenant i priority P (0 =
                                   highest) and an optional deadline in ms
-                                  (DESIGN.md §10)
+                                  (DESIGN.md §10); --timeline writes the
+                                  deterministic Chrome-trace JSON (§12)
   serve [--stdio | --listen ADDR] [--workers N] [--queue N] [--cache-cap N]
         [--trace-cache N]
                                   resident mission service: JSON-lines
-                                  requests (run|fleet|grid|workload|stats|
-                                  shutdown, optional protocol field "v")
+                                  requests (run|fleet|grid|workload|timeline|
+                                  stats|metrics|shutdown, optional protocol
+                                  field "v")
                                   answered from a persistent worker pool
                                   with a deterministic result cache and a
                                   bounded sensor-trace cache (0 disables;
@@ -186,8 +193,9 @@ fn run() -> kraken::Result<()> {
             let vdd: f64 = args.opt("vdd")?.map_or(Ok(0.8), |s| s.parse())?;
             let live = args.flag("live");
             let json = args.flag("json");
+            let timeline = args.opt("timeline")?;
             args.finish()?;
-            run_mission(cfg, duration, &scene, seed, artifacts, vdd, live, json)
+            run_mission(cfg, duration, &scene, seed, artifacts, vdd, live, json, timeline)
         }
         Some("fleet") => {
             let missions: usize = args.opt("missions")?.map_or(Ok(8), |s| s.parse())?;
@@ -216,9 +224,11 @@ fn run() -> kraken::Result<()> {
             let governor = args.opt("governor")?;
             let qos = args.opt("qos")?;
             let json = args.flag("json");
+            let timeline = args.opt("timeline")?;
             args.finish()?;
             run_workload_cmd(
                 cfg, tenants, duration, &scene, seed, vdd, window_ms, governor, qos, json,
+                timeline,
             )
         }
         Some("serve") => {
@@ -383,6 +393,7 @@ fn run_mission(
     vdd: f64,
     live: bool,
     json: bool,
+    timeline: Option<String>,
 ) -> kraken::Result<()> {
     let scene = SceneKind::parse(scene, seed)?;
     let mcfg = MissionConfig {
@@ -395,7 +406,17 @@ fn run_mission(
         ..Default::default()
     };
     let mut mission = Mission::new(cfg, mcfg)?;
+    if timeline.is_some() {
+        mission.record_timeline();
+    }
     let r = mission.run()?;
+    if let Some(path) = &timeline {
+        let rec = mission.take_timeline().expect("recorder was attached");
+        std::fs::write(path, rec.export())?;
+        if !json {
+            println!("timeline: wrote {path} ({} events)", rec.len());
+        }
+    }
     if json {
         println!("{}", r.to_json().pretty());
         return Ok(());
@@ -595,6 +616,7 @@ fn run_workload_cmd(
     governor: Option<String>,
     qos: Option<String>,
     json: bool,
+    timeline: Option<String>,
 ) -> kraken::Result<()> {
     let base = MissionConfig {
         duration_s: duration,
@@ -620,7 +642,17 @@ fn run_workload_cmd(
         }
     }
     let mut workload = Workload::new(cfg, wcfg)?;
+    if timeline.is_some() {
+        workload.record_timeline();
+    }
     let r = workload.run()?;
+    if let Some(path) = &timeline {
+        let rec = workload.take_timeline().expect("recorder was attached");
+        std::fs::write(path, rec.export())?;
+        if !json {
+            println!("timeline: wrote {path} ({} events)", rec.len());
+        }
+    }
     if json {
         println!("{}", r.to_json().pretty());
         return Ok(());

@@ -1,0 +1,327 @@
+//! Process-wide serve metrics: counters, gauges and log2-bucket latency
+//! histograms — no dependencies, lock-free recording (atomics only).
+//!
+//! One [`Metrics`] registry is shared by the serve front door and its
+//! worker pool. The pool records per-request-kind queue wait and
+//! execution latency plus backpressure (rejected requests, queue-depth
+//! high-water mark); the server surfaces the registry as p50/p95/p99 in
+//! `stats` and through the dedicated `metrics` request kind. All values
+//! are **monotonic since process start** — there is no reset endpoint,
+//! so two samples can always be differenced (DESIGN.md §12).
+//!
+//! These are *host-side* measurements (wall-clock latency of the serving
+//! layer), deliberately separate from the simulation's deterministic
+//! timeline ([`super::timeline`]): nothing here ever feeds back into a
+//! mission, so the zero-perturbation contract is untouched.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Value;
+
+/// Bucket count of the log2 histogram: bucket `b` spans `[2^b, 2^(b+1))`
+/// (bucket 0 also holds zero), covering the full `u64` range.
+pub const HIST_BUCKETS: usize = 64;
+
+/// A fixed-bucket log2 histogram. Recording is one `fetch_add` per
+/// sample; percentile estimates come back as the upper edge of the
+/// bucket holding the requested rank, so an estimate is always within
+/// one bucket's relative error (< 2x) of the exact sample percentile
+/// (property-pinned in `tests/prop_invariants.rs`).
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+    total: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// The bucket of value `v`: `floor(log2 v)` (0 for `v <= 1`).
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (63 - v.leading_zeros()) as usize
+        }
+    }
+
+    /// Inclusive upper edge of bucket `b`.
+    pub fn bucket_hi(b: usize) -> u64 {
+        if b >= HIST_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << (b + 1)) - 1
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.counts[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Percentile estimate for `q` in `[0, 100]`: the upper edge of the
+    /// bucket containing the rank-`q` sample (0 when empty). Biased up
+    /// by design — the estimate never under-reports a latency, and is
+    /// within one bucket (a factor of 2) of the exact percentile.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Self::bucket_hi(b);
+            }
+        }
+        Self::bucket_hi(HIST_BUCKETS - 1)
+    }
+
+    /// `{count, mean, p50, p95, p99}` — the serving summary shape.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("count", Value::Num(self.count() as f64)),
+            ("mean", Value::Num(self.mean())),
+            ("p50", Value::Num(self.percentile(50.0) as f64)),
+            ("p95", Value::Num(self.percentile(95.0) as f64)),
+            ("p99", Value::Num(self.percentile(99.0) as f64)),
+        ])
+    }
+}
+
+/// The request kinds the serving layer meters. `Stats`/`metrics`
+/// introspection requests are not metered (they would meter themselves).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqKind {
+    Run,
+    Fleet,
+    Grid,
+    Workload,
+    Timeline,
+}
+
+impl ReqKind {
+    pub const ALL: [ReqKind; 5] =
+        [ReqKind::Run, ReqKind::Fleet, ReqKind::Grid, ReqKind::Workload, ReqKind::Timeline];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ReqKind::Run => "run",
+            ReqKind::Fleet => "fleet",
+            ReqKind::Grid => "grid",
+            ReqKind::Workload => "workload",
+            ReqKind::Timeline => "timeline",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            ReqKind::Run => 0,
+            ReqKind::Fleet => 1,
+            ReqKind::Grid => 2,
+            ReqKind::Workload => 3,
+            ReqKind::Timeline => 4,
+        }
+    }
+}
+
+/// The serve-layer metrics registry (see module docs). All counters are
+/// monotonic since process start; concurrent recording is lock-free.
+#[derive(Debug)]
+pub struct Metrics {
+    queue_wait_ns: [Histogram; ReqKind::ALL.len()],
+    exec_ns: [Histogram; ReqKind::ALL.len()],
+    rejected: AtomicU64,
+    queue_depth_hwm: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            queue_wait_ns: std::array::from_fn(|_| Histogram::new()),
+            exec_ns: std::array::from_fn(|_| Histogram::new()),
+            rejected: AtomicU64::new(0),
+            queue_depth_hwm: AtomicU64::new(0),
+        }
+    }
+
+    /// Time a job of `kind` sat in the pool queue before a worker took it.
+    pub fn note_queue_wait(&self, kind: ReqKind, ns: u64) {
+        self.queue_wait_ns[kind.index()].record(ns);
+    }
+
+    /// Wall time a request of `kind` spent executing.
+    pub fn note_exec(&self, kind: ReqKind, ns: u64) {
+        self.exec_ns[kind.index()].record(ns);
+    }
+
+    /// One request bounced by backpressure (queue full or oversized).
+    pub fn note_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observe the queue depth after an enqueue; keeps the high-water mark.
+    pub fn note_queue_depth(&self, depth: u64) {
+        self.queue_depth_hwm.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth_hwm(&self) -> u64 {
+        self.queue_depth_hwm.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_wait(&self, kind: ReqKind) -> &Histogram {
+        &self.queue_wait_ns[kind.index()]
+    }
+
+    pub fn exec(&self, kind: ReqKind) -> &Histogram {
+        &self.exec_ns[kind.index()]
+    }
+
+    /// The full registry as JSON: backpressure gauges plus per-kind
+    /// `{queue_wait_ns, exec_ns}` histogram summaries (every kind always
+    /// present, zeroed when unused, so the shape is stable).
+    pub fn to_json(&self) -> Value {
+        let kinds = ReqKind::ALL
+            .iter()
+            .map(|k| {
+                (
+                    k.label(),
+                    Value::obj(vec![
+                        ("queue_wait_ns", self.queue_wait(*k).to_json()),
+                        ("exec_ns", self.exec(*k).to_json()),
+                    ]),
+                )
+            })
+            .collect();
+        Value::obj(vec![
+            ("kinds", Value::obj(kinds)),
+            ("queue_depth_hwm", Value::Num(self.queue_depth_hwm() as f64)),
+            ("rejected", Value::Num(self.rejected() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cover_the_u64_range() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 63);
+        assert_eq!(Histogram::bucket_hi(0), 1);
+        assert_eq!(Histogram::bucket_hi(1), 3);
+        assert_eq!(Histogram::bucket_hi(63), u64::MAX);
+        // every value lands inside its bucket's range
+        for v in [0u64, 1, 2, 7, 8, 1023, 1024, 1 << 40] {
+            let b = Histogram::bucket_of(v);
+            assert!(v <= Histogram::bucket_hi(b));
+            if b > 0 {
+                assert!(v > Histogram::bucket_hi(b - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn percentiles_bracket_recorded_samples() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(99.0), 0, "empty histogram reads 0");
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+        // exact p50 = 500 (bucket 8: 256..=511 -> hi 511)
+        let p50 = h.percentile(50.0);
+        assert!((500..=1023).contains(&p50), "p50 {p50}");
+        assert!(p50 >= 500, "estimate must not under-report");
+        let p99 = h.percentile(99.0);
+        assert!((990..=1023).contains(&p99), "p99 {p99}");
+        assert!(h.percentile(100.0) >= 1000);
+    }
+
+    #[test]
+    fn registry_tracks_kinds_and_backpressure() {
+        let m = Metrics::new();
+        m.note_queue_wait(ReqKind::Run, 1_500);
+        m.note_exec(ReqKind::Run, 2_000_000);
+        m.note_exec(ReqKind::Workload, 3_000_000);
+        m.note_reject();
+        m.note_reject();
+        m.note_queue_depth(5);
+        m.note_queue_depth(3); // below the mark: must not lower it
+        assert_eq!(m.rejected(), 2);
+        assert_eq!(m.queue_depth_hwm(), 5);
+        assert_eq!(m.exec(ReqKind::Run).count(), 1);
+        assert_eq!(m.exec(ReqKind::Fleet).count(), 0);
+        let doc = m.to_json();
+        assert_eq!(doc.get("rejected").and_then(Value::as_u64), Some(2));
+        assert_eq!(doc.get("queue_depth_hwm").and_then(Value::as_u64), Some(5));
+        let run = doc.get("kinds").and_then(|k| k.get("run")).unwrap();
+        assert_eq!(
+            run.get("exec_ns").and_then(|e| e.get("count")).and_then(Value::as_u64),
+            Some(1)
+        );
+        assert!(
+            run.get("exec_ns").and_then(|e| e.get("p50")).and_then(Value::as_u64).unwrap()
+                >= 2_000_000
+        );
+        // stable shape: unused kinds are present and zeroed
+        let fleet = doc.get("kinds").and_then(|k| k.get("fleet")).unwrap();
+        assert_eq!(
+            fleet.get("queue_wait_ns").and_then(|e| e.get("count")).and_then(Value::as_u64),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn labels_are_unique_and_roundtrip() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in ReqKind::ALL {
+            assert!(seen.insert(k.label()), "duplicate label {}", k.label());
+        }
+    }
+}

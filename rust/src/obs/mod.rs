@@ -1,0 +1,20 @@
+//! Observability: deterministic DES timelines + process-wide serve
+//! metrics (DESIGN.md §12).
+//!
+//! Two pillars, deliberately separate:
+//!
+//! * [`timeline`] — a [`TraceRecorder`] threaded through the mission and
+//!   workload DES loops, recording typed spans/instants with simulated
+//!   timestamps only (zero perturbation: reports are bit-identical with
+//!   the recorder on, off or absent) and exporting Chrome `trace_event`
+//!   JSON for Perfetto / `chrome://tracing`.
+//! * [`metrics`] — a lock-free [`Metrics`] registry (counters, gauges,
+//!   log2-bucket histograms) attached to the serve pool: per-request-kind
+//!   queue-wait/execution latency percentiles and backpressure counters,
+//!   surfaced in `stats` and the `metrics` request kind.
+
+pub mod metrics;
+pub mod timeline;
+
+pub use metrics::{Histogram, Metrics, ReqKind, HIST_BUCKETS};
+pub use timeline::{pid_of_tenant, TraceEvent, TraceRecorder, PID_SOC};

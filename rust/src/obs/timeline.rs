@@ -1,0 +1,279 @@
+//! Deterministic mission timelines: typed DES events → Chrome trace JSON.
+//!
+//! A [`TraceRecorder`] rides along a mission or workload run and records
+//! what the discrete-event schedule already computed — engine dispatch
+//! spans, window opens/closes, frame arrivals, governor epochs, rail
+//! transitions, gate toggles, fusion decisions — into a flat per-run
+//! buffer. The export is Chrome `trace_event` JSON (the "JSON Array
+//! Format" consumed by Perfetto and `chrome://tracing`), so a mission's
+//! concurrency structure can be read off a real trace viewer.
+//!
+//! ## Zero-perturbation contract (DESIGN.md §12)
+//!
+//! Recording must never change what it observes:
+//!
+//! * every timestamp is a DES timestamp (`t_ns`) the simulation already
+//!   produced — the recorder never reads a wall clock;
+//! * the recorder draws no randomness and calls nothing with side
+//!   effects — emission sites only *copy* values the handlers computed;
+//! * the recorder hangs off `Mission`/`Workload` as an `Option` attached
+//!   *after* config resolution, so it is invisible to config `Debug`
+//!   renderings (and therefore to serve cache keys).
+//!
+//! Consequently reports are bit-identical with the recorder on, off or
+//! absent, and the same config+seed yields a byte-identical timeline
+//! (`Value::Obj` is a `BTreeMap` — sorted keys — and float printing is
+//! shortest-roundtrip, so `export()` is deterministic down to the byte).
+
+use crate::util::json::Value;
+
+/// Track ids within one process row of the timeline. Tenant-scoped
+/// events use `pid = tenant + 1`; SoC-scoped events (governor, rail,
+/// gates) use [`PID_SOC`].
+pub const TID_WINDOW: u32 = 0;
+pub const TID_SNE: u32 = 1;
+pub const TID_CUTIE: u32 = 2;
+pub const TID_PULP: u32 = 3;
+pub const TID_FRAME: u32 = 4;
+pub const TID_FUSION: u32 = 5;
+pub const TID_GOVERNOR: u32 = 6;
+pub const TID_RAIL: u32 = 7;
+pub const TID_GATE: u32 = 8;
+
+/// Process row of SoC-scoped events (governor/rail/gate/DES counters).
+pub const PID_SOC: u32 = 0;
+
+/// The process row of tenant `t`'s events (windows, frames, engine jobs,
+/// fusion commands). A plain mission is tenant 0.
+pub fn pid_of_tenant(tenant: usize) -> u32 {
+    tenant as u32 + 1
+}
+
+fn tid_label(tid: u32) -> &'static str {
+    match tid {
+        TID_WINDOW => "windows",
+        TID_SNE => "sne",
+        TID_CUTIE => "cutie",
+        TID_PULP => "pulp",
+        TID_FRAME => "frames",
+        TID_FUSION => "fusion",
+        TID_GOVERNOR => "governor",
+        TID_RAIL => "rail",
+        TID_GATE => "gates",
+        _ => "track",
+    }
+}
+
+fn pid_label(pid: u32) -> String {
+    if pid == PID_SOC {
+        "soc".to_string()
+    } else {
+        format!("tenant {}", pid - 1)
+    }
+}
+
+/// One recorded event. `ph` follows the Chrome trace phase alphabet:
+/// `'X'` complete span (with `dur_ns`), `'i'` instant, `'C'` counter.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub ph: char,
+    pub t_ns: u64,
+    /// Span length; meaningful only for `ph == 'X'`.
+    pub dur_ns: u64,
+    pub pid: u32,
+    pub tid: u32,
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// The per-run event buffer (see module docs). Events are appended in
+/// DES emission order; the export sorts nothing, so the buffer order is
+/// itself deterministic.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        TraceRecorder { events: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// A complete span `['X']` covering `[t0_ns, t1_ns)`.
+    #[allow(clippy::too_many_arguments)] // mirrors the trace_event row fields
+    pub fn span(
+        &mut self,
+        cat: &'static str,
+        name: &'static str,
+        pid: u32,
+        tid: u32,
+        t0_ns: u64,
+        t1_ns: u64,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        self.events.push(TraceEvent {
+            cat,
+            name,
+            ph: 'X',
+            t_ns: t0_ns,
+            dur_ns: t1_ns.saturating_sub(t0_ns),
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// A thread-scoped instant `['i']` at `t_ns`.
+    pub fn instant(
+        &mut self,
+        cat: &'static str,
+        name: &'static str,
+        pid: u32,
+        tid: u32,
+        t_ns: u64,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        self.events.push(TraceEvent { cat, name, ph: 'i', t_ns, dur_ns: 0, pid, tid, args });
+    }
+
+    /// A counter sample `['C']` at `t_ns`; `args` are the series values.
+    pub fn counter(
+        &mut self,
+        cat: &'static str,
+        name: &'static str,
+        pid: u32,
+        tid: u32,
+        t_ns: u64,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        self.events.push(TraceEvent { cat, name, ph: 'C', t_ns, dur_ns: 0, pid, tid, args });
+    }
+
+    /// The Chrome `trace_event` document: metadata rows naming every
+    /// process/track seen, then the events in emission order. Timestamps
+    /// are microseconds (`ts = t_ns / 1000`), the unit the format fixes.
+    pub fn to_chrome_json(&self) -> Value {
+        let mut out: Vec<Value> = Vec::with_capacity(self.events.len() + 16);
+        // metadata: one process_name per pid, one thread_name per track,
+        // collected through BTreeSets so emission order is canonical
+        let pids: std::collections::BTreeSet<u32> =
+            self.events.iter().map(|e| e.pid).collect();
+        let tracks: std::collections::BTreeSet<(u32, u32)> =
+            self.events.iter().map(|e| (e.pid, e.tid)).collect();
+        for pid in &pids {
+            out.push(Value::obj(vec![
+                ("args", Value::obj(vec![("name", Value::Str(pid_label(*pid)))])),
+                ("name", Value::Str("process_name".into())),
+                ("ph", Value::Str("M".into())),
+                ("pid", Value::Num(*pid as f64)),
+                ("tid", Value::Num(0.0)),
+            ]));
+        }
+        for (pid, tid) in &tracks {
+            out.push(Value::obj(vec![
+                ("args", Value::obj(vec![("name", Value::Str(tid_label(*tid).into()))])),
+                ("name", Value::Str("thread_name".into())),
+                ("ph", Value::Str("M".into())),
+                ("pid", Value::Num(*pid as f64)),
+                ("tid", Value::Num(*tid as f64)),
+            ]));
+        }
+        for e in &self.events {
+            let args = Value::Obj(
+                e.args
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), Value::Num(*v)))
+                    .collect(),
+            );
+            let mut fields = vec![
+                ("args", args),
+                ("cat", Value::Str(e.cat.into())),
+                ("name", Value::Str(e.name.into())),
+                ("ph", Value::Str(e.ph.to_string())),
+                ("pid", Value::Num(e.pid as f64)),
+                ("tid", Value::Num(e.tid as f64)),
+                ("ts", Value::Num(e.t_ns as f64 / 1000.0)),
+            ];
+            if e.ph == 'X' {
+                fields.push(("dur", Value::Num(e.dur_ns as f64 / 1000.0)));
+            }
+            if e.ph == 'i' {
+                // instant scope: thread
+                fields.push(("s", Value::Str("t".into())));
+            }
+            out.push(Value::obj(fields));
+        }
+        Value::obj(vec![
+            ("displayTimeUnit", Value::Str("ms".into())),
+            ("traceEvents", Value::Arr(out)),
+        ])
+    }
+
+    /// The byte-deterministic serialized timeline (compact JSON).
+    pub fn export(&self) -> String {
+        self.to_chrome_json().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn export_carries_required_chrome_fields() {
+        let mut r = TraceRecorder::new();
+        r.span("engine", "sne", pid_of_tenant(0), TID_SNE, 1_000, 5_000, vec![("w", 3.0)]);
+        r.instant("window", "open", pid_of_tenant(0), TID_WINDOW, 1_000, vec![]);
+        r.counter("window", "activity", PID_SOC, TID_WINDOW, 2_000, vec![("activity", 0.5)]);
+        assert_eq!(r.len(), 3);
+        let doc = parse(&r.export()).unwrap();
+        let evs = doc.get("traceEvents").and_then(Value::as_arr).unwrap();
+        // 2 process_name + 2 thread_name rows precede the 3 events
+        assert_eq!(evs.len(), 7);
+        let span = evs.iter().find(|e| e.get("ph").and_then(Value::as_str) == Some("X")).unwrap();
+        assert_eq!(span.get("ts").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(span.get("dur").and_then(Value::as_f64), Some(4.0));
+        assert_eq!(span.get("pid").and_then(Value::as_u64), Some(1));
+        assert_eq!(span.get("tid").and_then(Value::as_u64), Some(TID_SNE as u64));
+        assert_eq!(span.get("args").unwrap().get("w").and_then(Value::as_f64), Some(3.0));
+        let inst = evs.iter().find(|e| e.get("ph").and_then(Value::as_str) == Some("i")).unwrap();
+        assert_eq!(inst.get("s").and_then(Value::as_str), Some("t"));
+        let meta = &evs[0];
+        assert_eq!(meta.get("ph").and_then(Value::as_str), Some("M"));
+    }
+
+    #[test]
+    fn export_is_byte_deterministic() {
+        let build = || {
+            let mut r = TraceRecorder::new();
+            r.instant("frame", "arrive", pid_of_tenant(1), TID_FRAME, 33_333_333, vec![
+                ("bytes", 76_800.0),
+            ]);
+            r.span("engine", "pulp", pid_of_tenant(1), TID_PULP, 33_400_000, 69_400_000, vec![]);
+            r.export()
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn empty_recorder_exports_empty_event_list() {
+        let r = TraceRecorder::new();
+        assert!(r.is_empty());
+        let doc = parse(&r.export()).unwrap();
+        assert_eq!(doc.get("traceEvents").and_then(Value::as_arr).map(<[Value]>::len), Some(0));
+    }
+}

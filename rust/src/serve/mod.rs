@@ -44,15 +44,16 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::SocConfig;
 use crate::coordinator::fleet::{FleetReport, WorkloadFleetReport};
-use crate::coordinator::pipeline::MissionConfig;
-use crate::coordinator::workload::WorkloadConfig;
+use crate::coordinator::pipeline::{Mission, MissionConfig};
+use crate::coordinator::workload::{Workload, WorkloadConfig};
+use crate::obs::{Metrics, ReqKind};
 use crate::sensors::trace::{capture_all, SensorTrace, TraceKey};
 use crate::util::json::Value;
 
 use cache::{ResultCache, TraceCache};
 use grid::{GridConfig, GridReport, WorkloadGridReport};
 use pool::WorkerPool;
-use protocol::Request;
+use protocol::{Request, TimelineTarget};
 
 /// The resident mission server: worker pool + result cache + sensor-trace
 /// cache + counters. One instance serves any number of stdio/TCP request
@@ -60,6 +61,11 @@ use protocol::Request;
 pub struct Server {
     soc: SocConfig,
     pool: WorkerPool,
+    /// The process-wide metrics registry, shared with the pool (which
+    /// records queue wait / execution latency / backpressure into it);
+    /// surfaced by `stats` and the `metrics` request kind. Monotonic
+    /// since process start — no reset endpoint.
+    metrics: Arc<Metrics>,
     cache: Mutex<ResultCache>,
     /// Bounded cache of captured sensor traces: requests that differ only
     /// in SoC-side axes (vdd, gating) reuse one sensor capture even when
@@ -90,9 +96,12 @@ impl Server {
         trace_cap: usize,
     ) -> crate::Result<Server> {
         soc.validate()?;
+        let pool = WorkerPool::new(workers, queue_cap);
+        let metrics = pool.metrics();
         Ok(Server {
             soc,
-            pool: WorkerPool::new(workers, queue_cap),
+            pool,
+            metrics,
             cache: Mutex::new(ResultCache::new(cache_cap)),
             traces: Mutex::new(TraceCache::new(trace_cap)),
             start: std::time::Instant::now(),
@@ -135,10 +144,13 @@ impl Server {
     fn dispatch(&self, line: &str) -> crate::Result<String> {
         match Request::from_json(line)? {
             Request::Stats => Ok(self.stats_value("stats").to_string()),
+            Request::Metrics => Ok(protocol::ok_response("metrics", self.metrics.to_json())
+                .to_string()),
             Request::Shutdown => Ok(self.shutdown_now()),
             Request::Run { cfg } => self.serve_missions("run", vec![cfg], None),
             Request::Fleet { cfgs } => self.serve_missions("fleet", cfgs, None),
             Request::Workload { cfg } => self.serve_workloads("workload", vec![cfg], None),
+            Request::Timeline { target } => self.serve_timeline(target),
             Request::Grid {
                 base,
                 seeds,
@@ -265,9 +277,16 @@ impl Server {
             let traces = self.resolve_traces(
                 cfgs.iter().map(MissionConfig::shareable_trace_key).collect(),
             );
+            let rk = if kind == "fleet" {
+                ReqKind::Fleet
+            } else if kind == "grid" {
+                ReqKind::Grid
+            } else {
+                ReqKind::Run
+            };
             let (reports, wall_s) = self
                 .pool
-                .run_configs_traced(&self.soc, &cfgs, traces)
+                .run_configs_as(rk, &self.soc, &cfgs, traces)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             let report = match (kind, labels) {
                 ("run", _) => reports
@@ -309,9 +328,10 @@ impl Server {
                 .iter()
                 .map(|c| c.streams.iter().map(|_| flat.next().expect("slot")).collect())
                 .collect();
+            let rk = if kind == "grid" { ReqKind::Grid } else { ReqKind::Workload };
             let (reports, wall_s) = self
                 .pool
-                .run_workloads_traced(&self.soc, &cfgs, traces)
+                .run_workloads_as(rk, &self.soc, &cfgs, traces)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             let report = match (kind, labels) {
                 ("workload", _) => reports
@@ -332,6 +352,47 @@ impl Server {
             };
             Ok(protocol::ok_response(kind, report).to_string())
         })
+    }
+
+    /// The `timeline` request path: run the mission/workload with the
+    /// deterministic trace recorder attached and answer with the Chrome
+    /// trace JSON as the report. Runs **inline on the request thread**
+    /// rather than on the pool — the pool's work channel returns reports,
+    /// not recorders, and a timeline run is a one-off diagnostic, not
+    /// throughput work. Cached under the same canonical-key discipline as
+    /// every other kind: the simulation and the exporter are both
+    /// deterministic, so a cache replay is byte-identical to a recompute.
+    fn serve_timeline(&self, target: TimelineTarget) -> crate::Result<String> {
+        let exec_start = std::time::Instant::now();
+        let resp = match target {
+            TimelineTarget::Mission(cfg) => {
+                let cacheable = cfg.artifacts_dir.is_none();
+                let key =
+                    cache::canonical_key("timeline", &self.soc, std::slice::from_ref(&cfg));
+                self.with_cache(cacheable, key, || {
+                    let mut m = Mission::new(self.soc.clone(), cfg)?;
+                    m.record_timeline();
+                    m.run()?;
+                    let rec = m.take_timeline().expect("recorder was attached");
+                    Ok(protocol::ok_response("timeline", rec.to_chrome_json()).to_string())
+                })
+            }
+            TimelineTarget::Workload(cfg) => {
+                let cacheable = cfg.artifacts_dir.is_none();
+                let key =
+                    cache::canonical_key("timeline", &self.soc, std::slice::from_ref(&cfg));
+                self.with_cache(cacheable, key, || {
+                    let mut w = Workload::new(self.soc.clone(), cfg)?;
+                    w.record_timeline();
+                    w.run()?;
+                    let rec = w.take_timeline().expect("recorder was attached");
+                    Ok(protocol::ok_response("timeline", rec.to_chrome_json()).to_string())
+                })
+            }
+        };
+        self.metrics
+            .note_exec(ReqKind::Timeline, exec_start.elapsed().as_nanos() as u64);
+        resp
     }
 
     /// Serve a `shutdown` request: drain the bounded queue, join the
@@ -417,6 +478,10 @@ impl Server {
             ("queue_depth", Value::Num(self.pool.queue_depth() as f64)),
             ("queue_cap", Value::Num(self.pool.queue_cap() as f64)),
             ("jobs_done", Value::Num(self.pool.jobs_done() as f64)),
+            // per-kind latency percentiles + backpressure gauges; all
+            // values monotonic since process start (no reset endpoint),
+            // so two stats samples can always be differenced
+            ("metrics", self.metrics.to_json()),
             (
                 "rail",
                 Value::obj(vec![
@@ -720,7 +785,7 @@ mod tests {
     #[test]
     fn unsupported_protocol_version_is_rejected() {
         let s = server();
-        let v = parse(&s.handle_line(r#"{"kind":"run","v":2}"#).unwrap()).unwrap();
+        let v = parse(&s.handle_line(r#"{"kind":"run","v":99}"#).unwrap()).unwrap();
         assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
         let msg = v.get("error").and_then(Value::as_str).unwrap();
         assert!(msg.contains("protocol version"), "{msg}");
@@ -740,6 +805,87 @@ mod tests {
         // the server stays serviceable
         let ok = parse(&s.handle_line(RUN).unwrap()).unwrap();
         assert_eq!(ok.get("ok").and_then(Value::as_bool), Some(true));
+    }
+
+    #[test]
+    fn stats_and_metrics_report_latency_percentiles() {
+        let s = server();
+        s.handle_line(RUN).unwrap();
+        // stats carries the registry inline...
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        let m = stats.get("metrics").expect("metrics section in stats");
+        assert_eq!(m.get("rejected").and_then(Value::as_u64), Some(0));
+        let run = m.get("kinds").and_then(|k| k.get("run")).unwrap();
+        assert_eq!(
+            run.get("exec_ns").and_then(|e| e.get("count")).and_then(Value::as_u64),
+            Some(1)
+        );
+        for p in ["p50", "p95", "p99"] {
+            assert!(
+                run.get("exec_ns").and_then(|e| e.get(p)).and_then(Value::as_f64).unwrap()
+                    > 0.0,
+                "{p} of a served run must be nonzero"
+            );
+        }
+        // ...and the dedicated v3 kind returns the same shape as a report
+        let v = parse(&s.handle_line(r#"{"kind":"metrics","v":3}"#).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true));
+        assert_eq!(v.get("kind").and_then(Value::as_str), Some("metrics"));
+        let report = v.get("report").unwrap();
+        assert!(report.get("kinds").and_then(|k| k.get("workload")).is_some());
+        assert!(report.get("queue_depth_hwm").is_some());
+        // a rejected batch shows up in the reject counter
+        let tiny = Server::new(SocConfig::kraken(), 1, 2, 8, 8).unwrap();
+        let big = r#"{"kind":"fleet","missions":3,"duration_s":0.05,"dvs_sample_hz":300.0}"#;
+        let v = parse(&tiny.handle_line(big).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+        let v = parse(&tiny.handle_line(r#"{"kind":"metrics"}"#).unwrap()).unwrap();
+        assert_eq!(
+            v.get("report").and_then(|r| r.get("rejected")).and_then(Value::as_u64),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn timeline_request_returns_deterministic_chrome_trace() {
+        let s = server();
+        let line = r#"{"kind":"timeline","v":3,"duration_s":0.05,"dvs_sample_hz":300.0,"seed":3}"#;
+        let a = s.handle_line(line).unwrap();
+        let v = parse(&a).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{a}");
+        assert_eq!(v.get("kind").and_then(Value::as_str), Some("timeline"));
+        let events = v
+            .get("report")
+            .and_then(|r| r.get("traceEvents"))
+            .and_then(Value::as_arr)
+            .expect("traceEvents array");
+        assert!(!events.is_empty());
+        // every event row carries the Chrome-trace envelope fields
+        for e in events {
+            assert!(e.get("ph").is_some() && e.get("pid").is_some());
+        }
+        // byte-identical across servers with different worker counts:
+        // the timeline is a DES artifact, not a host-scheduling one
+        let other = Server::new(SocConfig::kraken(), 4, 16, 8, 8).unwrap();
+        assert_eq!(a, other.handle_line(line).unwrap());
+        // cache replay is byte-identical too
+        assert_eq!(a, s.handle_line(line).unwrap());
+        // workload form: one process row per tenant
+        let wline = r#"{"kind":"timeline","tenants":2,"duration_s":0.05,"dvs_sample_hz":300.0,"seed":3}"#;
+        let w = s.handle_line(wline).unwrap();
+        assert!(w.contains("\"tenant 0\"") && w.contains("\"tenant 1\""), "{wline}");
+        // timeline executions are metered under their own kind
+        let m = parse(&s.handle_line(r#"{"kind":"metrics"}"#).unwrap()).unwrap();
+        let t = m
+            .get("report")
+            .and_then(|r| r.get("kinds"))
+            .and_then(|k| k.get("timeline"))
+            .unwrap();
+        assert_eq!(
+            t.get("exec_ns").and_then(|e| e.get("count")).and_then(Value::as_u64),
+            Some(3),
+            "two mission timelines (one cached) + one workload timeline"
+        );
     }
 
     #[test]

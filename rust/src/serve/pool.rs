@@ -42,11 +42,13 @@
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::config::SocConfig;
 use crate::coordinator::governor::QosSpec;
 use crate::coordinator::pipeline::{Mission, MissionConfig, MissionReport};
 use crate::coordinator::workload::{Workload, WorkloadConfig, WorkloadReport};
+use crate::obs::{Metrics, ReqKind};
 use crate::sensors::trace::SensorTrace;
 use crate::soc::power::RailTelemetry;
 
@@ -159,10 +161,14 @@ impl Batch {
 }
 
 /// One queued entry: ordered by `(priority, seq)` — priority classes
-/// first, submission order within a class.
+/// first, submission order within a class. Carries the request kind and
+/// enqueue instant so the pop side can meter per-kind queue wait; neither
+/// participates in the ordering key, so metering never changes pop order.
 struct QueuedJob {
     priority: u8,
     seq: u64,
+    kind: ReqKind,
+    enqueued: Instant,
     job: Job,
 }
 
@@ -230,6 +236,9 @@ struct Shared {
     available: Condvar,
     jobs_done: AtomicU64,
     worker_stats: Vec<WorkerStat>,
+    /// Shared with the serve front door ([`WorkerPool::metrics`]); the
+    /// pool records queue wait, execution latency and backpressure here.
+    metrics: Arc<Metrics>,
 }
 
 /// A fixed-size pool of resident simulation workers over a bounded queue.
@@ -261,6 +270,7 @@ impl WorkerPool {
                     rail: Arc::new(RailTelemetry::default()),
                 })
                 .collect(),
+            metrics: Arc::new(Metrics::new()),
         });
         let handles = (0..workers)
             .map(|id| {
@@ -282,6 +292,14 @@ impl WorkerPool {
     /// Jobs currently waiting in the queue (not counting in-flight ones).
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// The pool's metrics registry — per-kind queue-wait/execution
+    /// histograms, reject count, queue-depth high-water mark. Shared with
+    /// the server so the `metrics`/`stats` responses read the same
+    /// registry the pool records into.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.shared.metrics)
     }
 
     /// Jobs completed by the pool since startup.
@@ -339,6 +357,7 @@ impl WorkerPool {
             return Err(PoolError::ShutDown);
         }
         if asked > self.queue_cap {
+            self.shared.metrics.note_reject();
             return Err(PoolError::Busy {
                 asked,
                 free: self.queue_cap - q.jobs.len(),
@@ -381,13 +400,27 @@ impl WorkerPool {
         cfgs: &[MissionConfig],
         traces: Vec<Option<Arc<SensorTrace>>>,
     ) -> Result<(Vec<MissionReport>, f64), PoolError> {
+        self.run_configs_as(ReqKind::Run, soc, cfgs, traces)
+    }
+
+    /// [`WorkerPool::run_configs_traced`] metered under an explicit
+    /// request kind — the serve layer passes `Fleet`/`Grid` here so the
+    /// metrics registry attributes queue wait and execution latency to
+    /// the request kind the client actually sent.
+    pub fn run_configs_as(
+        &self,
+        kind: ReqKind,
+        soc: &SocConfig,
+        cfgs: &[MissionConfig],
+        traces: Vec<Option<Arc<SensorTrace>>>,
+    ) -> Result<(Vec<MissionReport>, f64), PoolError> {
         assert_eq!(cfgs.len(), traces.len(), "one trace slot per config");
         let work = cfgs
             .iter()
             .zip(traces)
             .map(|(c, t)| Work::Mission(c.clone(), t))
             .collect();
-        let (outputs, wall) = self.run_batch(soc, work)?;
+        let (outputs, wall) = self.run_batch(kind, soc, work)?;
         let reports = outputs
             .into_iter()
             .map(|o| match o {
@@ -417,13 +450,25 @@ impl WorkerPool {
         cfgs: &[WorkloadConfig],
         traces: Vec<Vec<Option<Arc<SensorTrace>>>>,
     ) -> Result<(Vec<WorkloadReport>, f64), PoolError> {
+        self.run_workloads_as(ReqKind::Workload, soc, cfgs, traces)
+    }
+
+    /// [`WorkerPool::run_workloads_traced`] metered under an explicit
+    /// request kind (see [`WorkerPool::run_configs_as`]).
+    pub fn run_workloads_as(
+        &self,
+        kind: ReqKind,
+        soc: &SocConfig,
+        cfgs: &[WorkloadConfig],
+        traces: Vec<Vec<Option<Arc<SensorTrace>>>>,
+    ) -> Result<(Vec<WorkloadReport>, f64), PoolError> {
         assert_eq!(cfgs.len(), traces.len(), "one trace vector per config");
         let work = cfgs
             .iter()
             .zip(traces)
             .map(|(c, t)| Work::Workload(c.clone(), t))
             .collect();
-        let (outputs, wall) = self.run_batch(soc, work)?;
+        let (outputs, wall) = self.run_batch(kind, soc, work)?;
         let reports = outputs
             .into_iter()
             .map(|o| match o {
@@ -436,6 +481,7 @@ impl WorkerPool {
 
     fn run_batch(
         &self,
+        kind: ReqKind,
         soc: &SocConfig,
         work: Vec<Work>,
     ) -> Result<(Vec<WorkOutput>, f64), PoolError> {
@@ -443,7 +489,7 @@ impl WorkerPool {
             return Ok((Vec::new(), 0.0));
         }
         let n = work.len();
-        let start = std::time::Instant::now();
+        let start = Instant::now();
         let batch = Batch::new(n);
         let jobs: Vec<Job> = work
             .into_iter()
@@ -455,7 +501,7 @@ impl WorkerPool {
                 batch: Arc::clone(&batch),
             })
             .collect();
-        self.try_submit(jobs)?;
+        self.try_submit(kind, jobs)?;
         let mut outputs = Vec::with_capacity(n);
         for (i, result) in batch.wait().into_iter().enumerate() {
             match result {
@@ -466,21 +512,24 @@ impl WorkerPool {
         Ok((outputs, start.elapsed().as_secs_f64()))
     }
 
-    fn try_submit(&self, jobs: Vec<Job>) -> Result<(), PoolError> {
+    fn try_submit(&self, kind: ReqKind, jobs: Vec<Job>) -> Result<(), PoolError> {
         let mut q = self.shared.queue.lock().unwrap();
         if q.shutdown {
             return Err(PoolError::ShutDown);
         }
         let free = self.queue_cap - q.jobs.len();
         if jobs.len() > free {
+            self.shared.metrics.note_reject();
             return Err(PoolError::Busy { asked: jobs.len(), free, cap: self.queue_cap });
         }
+        let enqueued = Instant::now();
         for job in jobs {
             let priority = job.work.priority();
             let seq = q.seq;
             q.seq += 1;
-            q.jobs.push(QueuedJob { priority, seq, job });
+            q.jobs.push(QueuedJob { priority, seq, kind, enqueued, job });
         }
+        self.shared.metrics.note_queue_depth(q.jobs.len() as u64);
         drop(q);
         self.shared.available.notify_all();
         Ok(())
@@ -495,11 +544,15 @@ impl Drop for WorkerPool {
 
 fn worker_loop(shared: &Shared, id: usize) {
     loop {
-        let job = {
+        let (job, kind) = {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if let Some(entry) = q.jobs.pop() {
-                    break entry.job;
+                    shared.metrics.note_queue_wait(
+                        entry.kind,
+                        entry.enqueued.elapsed().as_nanos() as u64,
+                    );
+                    break (entry.job, entry.kind);
                 }
                 if q.shutdown {
                     return;
@@ -507,6 +560,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                 q = shared.available.wait(q).unwrap();
             }
         };
+        let exec_start = Instant::now();
         let stat = &shared.worker_stats[id];
         stat.busy.store(true, Ordering::Relaxed);
         // one Soc per job, built on this thread (mirrors fleet workers);
@@ -542,7 +596,9 @@ fn worker_loop(shared: &Shared, id: usize) {
             Err(format!("job panicked: {msg}"))
         });
         // count before fill: fill wakes the submitter, which may read
-        // jobs_done (stats, test assertions) immediately
+        // jobs_done or the metrics registry (stats, test assertions)
+        // immediately
+        shared.metrics.note_exec(kind, exec_start.elapsed().as_nanos() as u64);
         stat.jobs.fetch_add(1, Ordering::Relaxed);
         shared.jobs_done.fetch_add(1, Ordering::Relaxed);
         stat.busy.store(false, Ordering::Relaxed);
@@ -666,7 +722,13 @@ mod tests {
         for (prio, slot) in [(1u8, 0usize), (0, 1), (1, 2), (0, 3)] {
             let seq = q.seq;
             q.seq += 1;
-            q.jobs.push(QueuedJob { priority: prio, seq, job: mk(slot) });
+            q.jobs.push(QueuedJob {
+                priority: prio,
+                seq,
+                kind: ReqKind::Run,
+                enqueued: Instant::now(),
+                job: mk(slot),
+            });
         }
         let order: Vec<usize> =
             std::iter::from_fn(|| q.jobs.pop().map(|e| e.job.slot)).collect();
@@ -706,6 +768,32 @@ mod tests {
             wr[0].rail_transitions,
             "worker telemetry must accumulate the run's transitions"
         );
+    }
+
+    #[test]
+    fn pool_meters_queue_wait_exec_and_backpressure() {
+        let pool = WorkerPool::new(2, 2);
+        let soc = SocConfig::kraken();
+        let m = pool.metrics();
+        // two mission jobs under the default Run kind
+        let cfgs: Vec<MissionConfig> = (0..2u64).map(tiny).collect();
+        pool.run_configs(&soc, &cfgs).unwrap();
+        assert_eq!(m.exec(ReqKind::Run).count(), 2, "one exec sample per job");
+        assert_eq!(m.queue_wait(ReqKind::Run).count(), 2);
+        assert!(m.queue_depth_hwm() >= 2, "both jobs were enqueued together");
+        // an explicit kind attributes samples to that kind
+        pool.run_configs_as(ReqKind::Fleet, &soc, &cfgs[..1], vec![None]).unwrap();
+        assert_eq!(m.exec(ReqKind::Fleet).count(), 1);
+        // backpressure rejections count, at submit and at the pre-check
+        assert_eq!(m.rejected(), 0);
+        let big: Vec<MissionConfig> = (0..3u64).map(tiny).collect();
+        assert!(pool.run_configs(&soc, &big).is_err());
+        assert!(pool.check_batch_fits(3).is_err());
+        assert_eq!(m.rejected(), 2);
+        // workload jobs land under the Workload kind
+        let w = WorkloadConfig::fan_out(&tiny(5), 2);
+        pool.run_workloads(&soc, &[w]).unwrap();
+        assert_eq!(m.exec(ReqKind::Workload).count(), 1);
     }
 
     #[test]

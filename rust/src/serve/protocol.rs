@@ -18,8 +18,15 @@
 //!   `tenants: N` (the base mission fanned out, stream seeds
 //!   `seed..seed + N`) or an explicit `streams: [{scene, seed, frame_fps,
 //!   dvs_sample_hz}, ...]` array of per-tenant overrides (DESIGN.md §8).
+//! * `timeline` — run one mission (mission fields) or one workload
+//!   (`tenants`/`streams`/`qos` present) with the deterministic trace
+//!   recorder attached and answer with the Chrome-trace JSON timeline
+//!   (DESIGN.md §12) instead of a report. Requires protocol v3.
 //! * `stats` — server introspection (uptime, queue depth, per-worker
-//!   busy/job counts, cache hit rate).
+//!   busy/job counts, cache hit rate, request-latency percentiles).
+//! * `metrics` — the full process-wide metrics registry: per-request-kind
+//!   queue-wait and execution-latency histograms (p50/p95/p99), reject
+//!   counts, queue-depth high-water mark. Requires protocol v3.
 //! * `shutdown` — graceful stop: drain the queue, join the workers, answer
 //!   with final stats; the serving loop exits after the response.
 //!
@@ -33,7 +40,9 @@
 //! top-level `qos` array paired with `tenants`, or per-stream `qos` keys
 //! inside `streams[]`. Clients still pinning `v:1` get the old semantics
 //! (the `Fixed` governor, default QoS) and an error — not silent
-//! acceptance — if they send the v2 fields.
+//! acceptance — if they send the v2 fields. v3 adds the observability
+//! surface: the `timeline` and `metrics` request kinds; clients pinning
+//! v1/v2 get an error — not silent acceptance — if they send them.
 //!
 //! Responses are `{"ok":true,"kind":...,"report":...}` or
 //! `{"ok":false,"error":...}`. Unknown request keys are rejected rather
@@ -58,11 +67,11 @@ pub const MAX_CELLS: usize = 4096;
 /// older (still-supported) version with a `v` field; anything outside
 /// [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`] is rejected with an
 /// error response.
-pub const PROTOCOL_VERSION: u64 = 2;
+pub const PROTOCOL_VERSION: u64 = 3;
 
-/// The oldest protocol version still accepted. v1 requests keep their old
-/// semantics: the v2-only fields (`governor`, `qos`) are rejected rather
-/// than silently honored.
+/// The oldest protocol version still accepted. Older pins keep their old
+/// semantics: the v2-only fields (`governor`, `qos`) and the v3-only kinds
+/// (`timeline`, `metrics`) are rejected rather than silently honored.
 pub const MIN_PROTOCOL_VERSION: u64 = 1;
 
 /// A parsed, validated request.
@@ -85,10 +94,26 @@ pub enum Request {
     },
     /// One SoC, N tenant streams, fully resolved.
     Workload { cfg: WorkloadConfig },
+    /// One traced run (mission or workload); answers with the Chrome-trace
+    /// timeline JSON instead of a report. Protocol v3.
+    Timeline { target: TimelineTarget },
     /// Server statistics.
     Stats,
+    /// The full metrics registry (latency histograms, rejects, queue
+    /// high-water mark). Protocol v3.
+    Metrics,
     /// Graceful shutdown: drain, join, reply with final stats, exit.
     Shutdown,
+}
+
+/// What a `timeline` request traces: one mission, or one multi-tenant
+/// workload when the request carries `tenants`/`streams`/`qos` fields.
+#[derive(Debug, Clone)]
+pub enum TimelineTarget {
+    /// Trace a single mission.
+    Mission(MissionConfig),
+    /// Trace a multi-tenant workload.
+    Workload(WorkloadConfig),
 }
 
 const MISSION_KEYS: &[&str] = &[
@@ -239,76 +264,110 @@ impl Request {
                 allowed.extend(["tenants", "streams", "qos"]);
                 check_keys(obj, &allowed)?;
                 require_v2(v, ver, &["governor", "qos"])?;
-                let base = mission_from(v)?;
-                let mut cfg = match v.get("streams") {
-                    None => {
-                        let tenants = match v.get("tenants") {
-                            None => 1,
-                            Some(t) => t.as_usize().ok_or_else(|| {
-                                anyhow::anyhow!("\"tenants\" must be a positive integer")
-                            })?,
-                        };
-                        check_tenants(tenants)?;
-                        WorkloadConfig::fan_out(&base, tenants)
-                    }
-                    Some(Value::Arr(arr)) => {
-                        check_tenants(arr.len())?;
-                        if let Some(t) = v.get("tenants") {
-                            anyhow::ensure!(
-                                t.as_usize() == Some(arr.len()),
-                                "\"tenants\" disagrees with the \"streams\" array length"
-                            );
-                        }
-                        anyhow::ensure!(
-                            v.get("qos").is_none(),
-                            "set \"qos\" inside each \"streams\" object, not at the top level"
-                        );
-                        let mut cfg = WorkloadConfig::from_mission(&base);
-                        cfg.streams = arr
-                            .iter()
-                            .enumerate()
-                            .map(|(i, s)| stream_from(s, &base, i, ver))
-                            .collect::<crate::Result<Vec<StreamConfig>>>()?;
-                        cfg
-                    }
-                    Some(_) => anyhow::bail!(
-                        "\"streams\" must be an array of per-tenant stream objects"
-                    ),
+                Ok(Request::Workload { cfg: workload_from(v, ver)? })
+            }
+            "timeline" => {
+                anyhow::ensure!(
+                    ver >= 3,
+                    "request kind \"timeline\" requires protocol v3 (request pinned v{ver})"
+                );
+                let mut allowed = MISSION_KEYS.to_vec();
+                allowed.extend(["tenants", "streams", "qos"]);
+                check_keys(obj, &allowed)?;
+                let multi = ["tenants", "streams", "qos"]
+                    .iter()
+                    .any(|k| v.get(k).is_some());
+                let target = if multi {
+                    TimelineTarget::Workload(workload_from(v, ver)?)
+                } else {
+                    TimelineTarget::Mission(mission_from(v)?)
                 };
-                // fan-out form: a top-level per-tenant qos array
-                match v.get("qos") {
-                    None => {}
-                    Some(Value::Arr(arr)) => {
-                        anyhow::ensure!(
-                            arr.len() == cfg.streams.len(),
-                            "\"qos\" names {} tenants, the workload has {}",
-                            arr.len(),
-                            cfg.streams.len()
-                        );
-                        for (i, (s, q)) in cfg.streams.iter_mut().zip(arr).enumerate() {
-                            s.qos = qos_from(q, &format!("qos[{i}]"))?;
-                        }
-                    }
-                    Some(_) => anyhow::bail!(
-                        "\"qos\" must be an array of per-tenant objects \
-                         ({{\"priority\": N, \"deadline_ms\": X}})"
-                    ),
-                }
-                Ok(Request::Workload { cfg })
+                Ok(Request::Timeline { target })
             }
             "stats" => {
                 check_keys(obj, &["kind", "v"])?;
                 Ok(Request::Stats)
+            }
+            "metrics" => {
+                anyhow::ensure!(
+                    ver >= 3,
+                    "request kind \"metrics\" requires protocol v3 (request pinned v{ver})"
+                );
+                check_keys(obj, &["kind", "v"])?;
+                Ok(Request::Metrics)
             }
             "shutdown" => {
                 check_keys(obj, &["kind", "v"])?;
                 Ok(Request::Shutdown)
             }
             other => anyhow::bail!(
-                "unknown request kind '{other}' (run|fleet|grid|workload|stats|shutdown)"
+                "unknown request kind '{other}' \
+                 (run|fleet|grid|workload|timeline|stats|metrics|shutdown)"
             ),
         }
     }
+}
+
+/// Resolve the multi-tenant workload body shared by the `workload` and
+/// `timeline` request kinds: fan-out (`tenants`) or explicit `streams`,
+/// with optional per-tenant QoS.
+fn workload_from(v: &Value, ver: u64) -> crate::Result<WorkloadConfig> {
+    let base = mission_from(v)?;
+    let mut cfg = match v.get("streams") {
+        None => {
+            let tenants = match v.get("tenants") {
+                None => 1,
+                Some(t) => t.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!("\"tenants\" must be a positive integer")
+                })?,
+            };
+            check_tenants(tenants)?;
+            WorkloadConfig::fan_out(&base, tenants)
+        }
+        Some(Value::Arr(arr)) => {
+            check_tenants(arr.len())?;
+            if let Some(t) = v.get("tenants") {
+                anyhow::ensure!(
+                    t.as_usize() == Some(arr.len()),
+                    "\"tenants\" disagrees with the \"streams\" array length"
+                );
+            }
+            anyhow::ensure!(
+                v.get("qos").is_none(),
+                "set \"qos\" inside each \"streams\" object, not at the top level"
+            );
+            let mut cfg = WorkloadConfig::from_mission(&base);
+            cfg.streams = arr
+                .iter()
+                .enumerate()
+                .map(|(i, s)| stream_from(s, &base, i, ver))
+                .collect::<crate::Result<Vec<StreamConfig>>>()?;
+            cfg
+        }
+        Some(_) => {
+            anyhow::bail!("\"streams\" must be an array of per-tenant stream objects")
+        }
+    };
+    // fan-out form: a top-level per-tenant qos array
+    match v.get("qos") {
+        None => {}
+        Some(Value::Arr(arr)) => {
+            anyhow::ensure!(
+                arr.len() == cfg.streams.len(),
+                "\"qos\" names {} tenants, the workload has {}",
+                arr.len(),
+                cfg.streams.len()
+            );
+            for (i, (s, q)) in cfg.streams.iter_mut().zip(arr).enumerate() {
+                s.qos = qos_from(q, &format!("qos[{i}]"))?;
+            }
+        }
+        Some(_) => anyhow::bail!(
+            "\"qos\" must be an array of per-tenant objects \
+             ({{\"priority\": N, \"deadline_ms\": X}})"
+        ),
+    }
+    Ok(cfg)
 }
 
 fn check_tenants(tenants: usize) -> crate::Result<()> {
@@ -884,12 +943,14 @@ mod tests {
         // every supported version accepted on every kind
         assert!(Request::from_json(r#"{"kind":"stats","v":1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"stats","v":2}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"stats","v":3}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":1,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":2,"duration_s":0.1}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"run","v":3,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"shutdown","v":1}"#).is_ok());
         // unknown versions are rejected, whatever the kind
         for line in [
-            r#"{"kind":"stats","v":3}"#,
+            r#"{"kind":"stats","v":4}"#,
             r#"{"kind":"run","v":0}"#,
             r#"{"kind":"workload","v":99,"tenants":2}"#,
             r#"{"kind":"stats","v":"1"}"#,
@@ -899,6 +960,58 @@ mod tests {
                 err.contains("protocol version"),
                 "{line} -> unexpected error {err}"
             );
+        }
+    }
+
+    #[test]
+    fn timeline_and_metrics_kinds_require_v3() {
+        // a timeline request with only mission fields traces one mission
+        let r = Request::from_json(
+            r#"{"kind":"timeline","seed":5,"duration_s":0.2,"scene":"corridor"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Timeline { target: TimelineTarget::Mission(cfg) } => {
+                assert_eq!(cfg.seed, 5);
+                assert_eq!(cfg.duration_s, 0.2);
+                assert!(!cfg.print_live);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // tenants/streams/qos switch the same request to a workload trace
+        let r = Request::from_json(
+            r#"{"kind":"timeline","v":3,"tenants":2,"seed":9,"duration_s":0.2}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Timeline { target: TimelineTarget::Workload(cfg) } => {
+                assert_eq!(cfg.tenants(), 2);
+                let seeds: Vec<u64> = cfg.streams.iter().map(|s| s.seed).collect();
+                assert_eq!(seeds, vec![9, 10]);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        assert!(matches!(
+            Request::from_json(r#"{"kind":"metrics"}"#).unwrap(),
+            Request::Metrics
+        ));
+        assert!(matches!(
+            Request::from_json(r#"{"kind":"metrics","v":3}"#).unwrap(),
+            Request::Metrics
+        ));
+        // metrics takes no parameters beyond kind/v
+        assert!(Request::from_json(r#"{"kind":"metrics","workers":2}"#).is_err());
+        // unknown keys still rejected on the timeline kind
+        assert!(Request::from_json(r#"{"kind":"timeline","duraton_s":1.0}"#).is_err());
+        // ...and clients pinning v1/v2 get an error, not silent acceptance
+        for line in [
+            r#"{"kind":"timeline","v":1,"duration_s":0.1}"#,
+            r#"{"kind":"timeline","v":2,"duration_s":0.1}"#,
+            r#"{"kind":"metrics","v":1}"#,
+            r#"{"kind":"metrics","v":2}"#,
+        ] {
+            let err = Request::from_json(line).unwrap_err().to_string();
+            assert!(err.contains("requires protocol v3"), "{line} -> {err}");
         }
     }
 

@@ -203,16 +203,20 @@ impl PowerManager {
         self.publish();
     }
 
+    /// Gated domains packed as a bitmask in [`DomainId::ALL`] index order
+    /// (bit `i` set = domain `i` gated) — the compact form both the rail
+    /// telemetry handle and the timeline recorder consume.
+    pub fn gated_mask(&self) -> u64 {
+        self.domains
+            .iter()
+            .enumerate()
+            .fold(0u64, |m, (i, d)| if d.gated { m | (1 << i) } else { m })
+    }
+
     fn publish(&self) {
         if let Some(t) = &self.telemetry {
             t.vdd_bits.store(self.vdd.to_bits(), Ordering::Relaxed);
-            let mut mask = 0u64;
-            for (i, d) in self.domains.iter().enumerate() {
-                if d.gated {
-                    mask |= 1 << i;
-                }
-            }
-            t.gated_mask.store(mask, Ordering::Relaxed);
+            t.gated_mask.store(self.gated_mask(), Ordering::Relaxed);
         }
     }
 
@@ -458,6 +462,7 @@ mod tests {
         assert_eq!(f64::from_bits(t.vdd_bits.load(Ordering::Relaxed)), p.vdd());
         // sne/cutie/pulp start gated, fabric on
         assert_eq!(t.gated_mask.load(Ordering::Relaxed), 0b0111);
+        assert_eq!(p.gated_mask(), 0b0111, "telemetry mirrors gated_mask()");
         p.ungate(DomainId::Cutie);
         assert_eq!(t.gated_mask.load(Ordering::Relaxed), 0b0101);
         p.rail_transition(0.55);

@@ -8,9 +8,11 @@
 //!
 //! [`BenchLog`] adds a machine-readable spine: a bench target built over
 //! it (`cargo bench --bench hotpath -- --json`) writes
-//! `BENCH_<name>.json` with per-section ns/op, so the perf trajectory is
-//! tracked across PRs (CI uploads the file as an artifact —
-//! EXPERIMENTS.md §Perf).
+//! `BENCH_<name>.json` with per-section ns/op plus a provenance header
+//! (`meta`: git commit, rustc version, enabled cargo features), so the
+//! perf trajectory is tracked across PRs and every logged number ties
+//! back to the code that produced it (CI uploads the file as an artifact
+//! — EXPERIMENTS.md §Perf).
 
 use std::time::Instant;
 
@@ -123,6 +125,40 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// First line of `cmd args...` stdout, or `"unknown"` — bench metadata
+/// must degrade gracefully on hosts without git/rustc in PATH (or outside
+/// a checkout) rather than fail the bench run.
+fn tool_line(cmd: &str, args: &[&str]) -> String {
+    std::process::Command::new(cmd)
+        .args(args)
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| {
+            String::from_utf8(o.stdout)
+                .ok()
+                .and_then(|s| s.lines().next().map(|l| l.trim().to_string()))
+        })
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// The provenance header stamped into every `BENCH_*.json`: git commit,
+/// rustc version, and the enabled cargo features — so a logged number can
+/// always be tied back to the exact code and toolchain that produced it.
+fn meta_json() -> Value {
+    let features: Vec<Value> = [("scalar-ref", cfg!(feature = "scalar-ref"))]
+        .iter()
+        .filter(|&&(_, on)| on)
+        .map(|&(name, _)| Value::Str(name.to_string()))
+        .collect();
+    Value::obj(vec![
+        ("git_commit", Value::Str(tool_line("git", &["rev-parse", "HEAD"]))),
+        ("rustc", Value::Str(tool_line("rustc", &["--version"]))),
+        ("features", Value::Arr(features)),
+    ])
+}
+
 /// A bench run's structured record: sections of [`BenchResult`]s,
 /// optionally written to `BENCH_<name>.json` when the target was invoked
 /// with `--json` (`cargo bench --bench <name> -- --json`).
@@ -171,6 +207,7 @@ impl BenchLog {
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("bench", Value::Str(self.name.clone())),
+            ("meta", meta_json()),
             (
                 "sections",
                 Value::Arr(
@@ -248,6 +285,13 @@ mod tests {
         });
         let doc = log.to_json();
         assert_eq!(doc.get("bench").and_then(|v| v.as_str()), Some("unit"));
+        // provenance header: always present, never empty strings
+        let meta = doc.get("meta").expect("meta header");
+        for key in ["git_commit", "rustc"] {
+            let s = meta.get(key).and_then(|v| v.as_str()).unwrap();
+            assert!(!s.is_empty(), "{key} must be a value or \"unknown\"");
+        }
+        assert!(meta.get("features").and_then(|v| v.as_arr()).is_some());
         let sections = doc.get("sections").and_then(|v| v.as_arr()).unwrap();
         assert_eq!(sections.len(), 1);
         let results = sections[0].get("results").and_then(|v| v.as_arr()).unwrap();

@@ -1,0 +1,217 @@
+//! Observability acceptance contract (DESIGN.md §12):
+//!
+//! * **Zero perturbation** — a mission/workload run with the timeline
+//!   recorder attached is bit-identical (whole-report Debug fingerprint,
+//!   wall clock scrubbed) to the same config run without it; the recorder
+//!   only reads values the simulation already computed.
+//! * **Determinism** — the same config + seed exports byte-identical
+//!   Chrome-trace JSON on every run, and a served `timeline` response is
+//!   byte-identical across server worker counts.
+//! * **Schema** — the export parses as JSON, carries the Chrome
+//!   `trace_event` envelope fields (`ph`/`ts`/`pid`/`tid`), and has at
+//!   least one event in every always-on category.
+//! * **Serving** — `stats` reports per-request-kind latency percentiles,
+//!   `metrics`/`timeline` round-trip under protocol v3 while v1/v2
+//!   requests keep working.
+
+use kraken::config::SocConfig;
+use kraken::coordinator::{
+    Mission, MissionConfig, MissionReport, Workload, WorkloadConfig, WorkloadReport,
+};
+use kraken::sensors::scene::SceneKind;
+use kraken::serve::Server;
+use kraken::util::json::{parse, Value};
+
+fn cfg_for(scene: SceneKind, seed: u64) -> MissionConfig {
+    MissionConfig {
+        duration_s: 0.3,
+        dvs_sample_hz: 400.0,
+        scene,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// The whole report through shortest-roundtrip Debug (bit-faithful for
+/// every float), with the host-dependent wall clock scrubbed.
+fn scrub_mission(mut r: MissionReport) -> String {
+    r.wall_s = 0.0;
+    format!("{r:?}")
+}
+
+fn scrub_workload(mut r: WorkloadReport) -> String {
+    r.wall_s = 0.0;
+    format!("{r:?}")
+}
+
+/// Categories every mission/workload timeline must populate (rail/gate
+/// events need a DVFS governor or idle gating, so they are not in this
+/// always-on set).
+const ALWAYS_ON_CATS: [&str; 5] = ["window", "frame", "engine", "governor", "fusion"];
+
+#[test]
+fn mission_report_is_bit_identical_with_recorder_on_off() {
+    for kind in [
+        SceneKind::Corridor { speed_per_s: 0.5, seed: 21 },
+        SceneKind::Noise { density: 0.05, seed: 21 },
+    ] {
+        let cfg = cfg_for(kind, 21);
+        let plain = Mission::new(SocConfig::kraken(), cfg.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let mut traced = Mission::new(SocConfig::kraken(), cfg).unwrap();
+        traced.record_timeline();
+        let traced_report = traced.run().unwrap();
+        assert_eq!(
+            scrub_mission(plain),
+            scrub_mission(traced_report),
+            "{kind:?}: recorder perturbed the mission report"
+        );
+        assert!(!traced.take_timeline().unwrap().is_empty());
+    }
+}
+
+#[test]
+fn workload_report_is_bit_identical_with_recorder_on_off() {
+    let wcfg = WorkloadConfig::fan_out(
+        &cfg_for(SceneKind::Corridor { speed_per_s: 0.5, seed: 23 }, 23),
+        2,
+    );
+    let plain = Workload::new(SocConfig::kraken(), wcfg.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+    let mut traced = Workload::new(SocConfig::kraken(), wcfg).unwrap();
+    traced.record_timeline();
+    let traced_report = traced.run().unwrap();
+    assert_eq!(
+        scrub_workload(plain),
+        scrub_workload(traced_report),
+        "recorder perturbed the workload report"
+    );
+    assert!(!traced.take_timeline().unwrap().is_empty());
+}
+
+#[test]
+fn timeline_export_is_byte_identical_across_runs_and_valid_chrome_json() {
+    let cfg = cfg_for(SceneKind::Corridor { speed_per_s: 0.5, seed: 31 }, 31);
+    let export = |cfg: MissionConfig| {
+        let mut m = Mission::new(SocConfig::kraken(), cfg).unwrap();
+        m.record_timeline();
+        m.run().unwrap();
+        m.take_timeline().unwrap().export()
+    };
+    let a = export(cfg.clone());
+    let b = export(cfg);
+    assert_eq!(a, b, "same config+seed must export byte-identical timelines");
+
+    // the export is loadable JSON with the Chrome trace_event envelope
+    let doc = parse(&a).expect("timeline must parse as JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    for e in events {
+        assert!(e.get("ph").and_then(Value::as_str).is_some(), "every row has ph");
+        assert!(e.get("pid").is_some() && e.get("tid").is_some());
+        assert!(e.get("name").and_then(Value::as_str).is_some());
+        // metadata rows (ph:"M") have no timestamp; all others do
+        if e.get("ph").and_then(Value::as_str) != Some("M") {
+            assert!(e.get("ts").is_some(), "non-metadata row missing ts");
+        }
+    }
+    for cat in ALWAYS_ON_CATS {
+        assert!(
+            a.contains(&format!("\"cat\":\"{cat}\"")),
+            "mission timeline missing category {cat}"
+        );
+    }
+}
+
+#[test]
+fn workload_timeline_is_byte_identical_and_tracks_tenants() {
+    let wcfg = WorkloadConfig::fan_out(
+        &cfg_for(SceneKind::Corridor { speed_per_s: 0.5, seed: 37 }, 37),
+        2,
+    );
+    let export = |cfg: WorkloadConfig| {
+        let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+        w.record_timeline();
+        w.run().unwrap();
+        w.take_timeline().unwrap().export()
+    };
+    let a = export(wcfg.clone());
+    assert_eq!(a, export(wcfg), "workload timeline must be deterministic");
+    for cat in ALWAYS_ON_CATS {
+        assert!(a.contains(&format!("\"cat\":\"{cat}\"")), "missing category {cat}");
+    }
+    // one process row per tenant
+    assert!(a.contains("\"tenant 0\"") && a.contains("\"tenant 1\""));
+}
+
+#[test]
+fn served_timeline_is_byte_identical_across_worker_counts() {
+    let line =
+        r#"{"kind":"timeline","v":3,"duration_s":0.1,"dvs_sample_hz":300.0,"seed":41}"#;
+    let one = Server::new(SocConfig::kraken(), 1, 8, 8, 8).unwrap();
+    let four = Server::new(SocConfig::kraken(), 4, 8, 8, 8).unwrap();
+    let a = one.handle_line(line).unwrap();
+    assert_eq!(a, four.handle_line(line).unwrap());
+    let v = parse(&a).unwrap();
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{a}");
+    assert!(v
+        .get("report")
+        .and_then(|r| r.get("traceEvents"))
+        .and_then(Value::as_arr)
+        .is_some_and(|e| !e.is_empty()));
+}
+
+#[test]
+fn serve_v3_observability_coexists_with_v1_v2_clients() {
+    let s = Server::new(SocConfig::kraken(), 2, 16, 8, 8).unwrap();
+    // old clients keep their surface
+    let v1 = r#"{"kind":"run","v":1,"duration_s":0.05,"dvs_sample_hz":300.0,"seed":2}"#;
+    let v2 = r#"{"kind":"workload","v":2,"tenants":2,"duration_s":0.05,"dvs_sample_hz":300.0,"seed":2}"#;
+    for line in [v1, v2] {
+        let v = parse(&s.handle_line(line).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{line}");
+    }
+    // ...but cannot reach the v3 kinds
+    for line in [r#"{"kind":"metrics","v":2}"#, r#"{"kind":"timeline","v":1,"duration_s":0.05}"#] {
+        let v = parse(&s.handle_line(line).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false), "{line}");
+        assert!(v
+            .get("error")
+            .and_then(Value::as_str)
+            .unwrap()
+            .contains("requires protocol v3"));
+    }
+    // stats carries per-kind percentiles for the work served above
+    let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+    let kinds = stats
+        .get("metrics")
+        .and_then(|m| m.get("kinds"))
+        .expect("metrics.kinds in stats");
+    for (kind, served) in [("run", 1u64), ("workload", 1), ("fleet", 0)] {
+        let k = kinds.get(kind).unwrap();
+        for hist in ["queue_wait_ns", "exec_ns"] {
+            let h = k.get(hist).unwrap();
+            assert_eq!(
+                h.get("count").and_then(Value::as_u64),
+                Some(served),
+                "{kind}.{hist}"
+            );
+            for p in ["p50", "p95", "p99"] {
+                assert!(h.get(p).is_some(), "{kind}.{hist}.{p}");
+            }
+        }
+    }
+    // the metrics kind round-trips the full registry
+    let m = parse(&s.handle_line(r#"{"kind":"metrics"}"#).unwrap()).unwrap();
+    assert_eq!(m.get("ok").and_then(Value::as_bool), Some(true));
+    let report = m.get("report").unwrap();
+    assert_eq!(report.get("rejected").and_then(Value::as_u64), Some(0));
+    assert!(report.get("queue_depth_hwm").and_then(Value::as_u64).unwrap() >= 1);
+}

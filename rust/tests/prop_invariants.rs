@@ -195,6 +195,42 @@ fn prop_percentile_nearest_rank_invariants() {
 }
 
 #[test]
+fn prop_obs_histogram_percentiles_within_one_bucket() {
+    use kraken::obs::Histogram;
+    // the serve-metrics histogram (DESIGN.md §12): a percentile estimate
+    // is the upper edge of the log2 bucket holding the nearest-rank
+    // sample, so it must (a) never under-report the exact percentile and
+    // (b) stay inside that sample's bucket — within one bucket's
+    // relative error (< 2x) of exact.
+    check("log2 histogram p50/p95/p99 bracket exact percentiles", 100, |rng| {
+        let n = rng.gen_range_usize(1, 2000);
+        let h = Histogram::new();
+        // span many magnitudes so every bucket regime gets exercised
+        let mut vals: Vec<u64> = (0..n)
+            .map(|_| rng.gen_below(1u64 << rng.gen_range_usize(1, 40)))
+            .collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for q in [50.0, 95.0, 99.0] {
+            let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as usize;
+            let exact = vals[rank - 1];
+            let est = h.percentile(q);
+            prop_assert!(
+                est >= exact,
+                "q={q}: estimate {est} under-reports exact {exact} (n={n})"
+            );
+            prop_assert!(
+                Histogram::bucket_of(est) == Histogram::bucket_of(exact),
+                "q={q}: estimate {est} left the exact sample's bucket ({exact}, n={n})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_scheduler_pops_in_time_order() {
     check("scheduler is a total order on (t, prio, insertion)", 100, |rng| {
         let mut s = Scheduler::new();
