@@ -15,6 +15,9 @@
 //!    recorder off vs on — the recorder-off number is the §12
 //!    zero-perturbation contract's perf half (off must be within noise
 //!    of the pre-observability baseline)
+//! 9. store-backed replay: the same replayed mission reading events
+//!    from the heap (serve memory tier) vs an mmap of the on-disk
+//!    `.ktr` file (the warm-restart tier, DESIGN.md §13)
 //!
 //! Run: `cargo bench --bench hotpath`
 //! Machine-readable: `cargo bench --bench hotpath -- --json` writes
@@ -31,9 +34,10 @@ use kraken::pulp::kernels as pk;
 use kraken::runtime::Runtime;
 use kraken::sensors::frame::{downsample_square, to_int8_luma, to_ternary};
 use kraken::sensors::scene::{Scene, SceneKind};
-use kraken::sensors::trace::SensorTrace;
+use kraken::sensors::trace::{SensorTrace, TraceHandle};
 use kraken::sensors::DvsSim;
 use kraken::sne::SneEngine;
+use kraken::store::Store;
 use kraken::util::bench::BenchLog;
 
 fn main() {
@@ -179,6 +183,44 @@ fn main() {
         let r = m.run().unwrap();
         (r, m.take_timeline())
     });
+
+    log.section("9. store-backed replay (in-memory vs mmap)");
+    // the §6 replayed mission again, this time distinguishing the two
+    // trace tiers: the heap Arc<SensorTrace> the serve caches hold in
+    // memory, and an mmap of the on-disk .ktr the warm-restart path
+    // reads. Steady state both walk resident pages; the delta is the
+    // mmap view's indirection (offset arithmetic instead of slices).
+    let sdir = std::env::temp_dir().join(format!("kraken-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&sdir);
+    let bstore = Store::open(&sdir).expect("open bench store");
+    bstore.save_trace(&trace).expect("persist bench trace");
+    let mapped = bstore.load_trace(&key).expect("map bench trace");
+    println!(
+        "   (store file: {} KiB, mmap-backed: {})",
+        mapped.file_bytes() / 1024,
+        mapped.is_mmap()
+    );
+    log.bench("mission 0.25 s, in-memory replay", || {
+        Mission::with_handle(
+            SocConfig::kraken(),
+            mcfg.clone(),
+            Some(TraceHandle::Mem(Arc::clone(&trace))),
+        )
+        .unwrap()
+        .run()
+        .unwrap()
+    });
+    log.bench("mission 0.25 s, mmap replay", || {
+        Mission::with_handle(
+            SocConfig::kraken(),
+            mcfg.clone(),
+            Some(TraceHandle::Mapped(Arc::clone(&mapped))),
+        )
+        .unwrap()
+        .run()
+        .unwrap()
+    });
+    let _ = std::fs::remove_dir_all(&sdir);
 
     log.finish().expect("write BENCH_hotpath.json");
 }

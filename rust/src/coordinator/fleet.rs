@@ -20,7 +20,8 @@ use std::sync::{Arc, Mutex};
 use crate::config::SocConfig;
 use crate::coordinator::pipeline::{Mission, MissionConfig, MissionReport};
 use crate::coordinator::workload::{Workload, WorkloadConfig, WorkloadReport};
-use crate::sensors::trace::{shared_traces, SensorTrace, TraceKey};
+use crate::sensors::trace::{shared_handles, SensorTrace, TraceHandle, TraceKey};
+use crate::store::Store;
 use crate::util::json::Value;
 
 /// Parameters of a fleet run: `missions` copies of `base`, reseeded
@@ -278,14 +279,32 @@ pub fn run_configs_traced(
         cfgs.len(),
         traces.len()
     );
+    run_configs_handles(soc, cfgs, threads, traces.into_iter().map(|t| t.map(TraceHandle::Mem)).collect())
+}
+
+/// [`run_configs_traced`] generalized over both trace tiers: a
+/// [`TraceHandle::Mapped`] slot replays that mission's windows straight
+/// off a verified store file.
+pub fn run_configs_handles(
+    soc: &SocConfig,
+    cfgs: &[MissionConfig],
+    threads: usize,
+    traces: Vec<Option<TraceHandle>>,
+) -> crate::Result<FleetReport> {
+    anyhow::ensure!(
+        traces.len() == cfgs.len(),
+        "one trace slot per mission config: {} configs, {} slots",
+        cfgs.len(),
+        traces.len()
+    );
     let threads = threads.clamp(1, cfgs.len().max(1));
-    let pairs: Vec<(MissionConfig, Option<Arc<SensorTrace>>)> =
+    let pairs: Vec<(MissionConfig, Option<TraceHandle>)> =
         cfgs.iter().cloned().zip(traces).collect();
     let (reports, wall_s) = run_each(
         soc,
         &pairs,
         threads,
-        |soc, (cfg, trace)| Mission::with_trace(soc, cfg, trace).and_then(|mut m| m.run()),
+        |soc, (cfg, trace)| Mission::with_handle(soc, cfg, trace).and_then(|mut m| m.run()),
         "mission",
     )?;
     Ok(FleetReport { reports, threads, wall_s })
@@ -301,9 +320,22 @@ pub fn run_configs_shared(
     cfgs: &[MissionConfig],
     threads: usize,
 ) -> crate::Result<FleetReport> {
+    run_configs_stored(soc, cfgs, threads, None)
+}
+
+/// [`run_configs_shared`] over an optional persistent store: with a
+/// corpus directory, every shareable key is first looked up on disk
+/// (mmap replay), and fresh captures are persisted — capture-once
+/// becomes capture-once-*ever* per corpus (`kraken fleet --store`).
+pub fn run_configs_stored(
+    soc: &SocConfig,
+    cfgs: &[MissionConfig],
+    threads: usize,
+    store: Option<&Store>,
+) -> crate::Result<FleetReport> {
     let wall_start = std::time::Instant::now();
-    let traces = shared_traces(&mission_trace_keys(cfgs), threads);
-    let mut fleet = run_configs_traced(soc, cfgs, threads, traces)?;
+    let traces = shared_handles(&mission_trace_keys(cfgs), threads, store);
+    let mut fleet = run_configs_handles(soc, cfgs, threads, traces)?;
     fleet.wall_s = wall_start.elapsed().as_secs_f64();
     Ok(fleet)
 }
@@ -386,6 +418,25 @@ pub fn run_workload_configs_traced(
     threads: usize,
     traces: Vec<Vec<Option<Arc<SensorTrace>>>>,
 ) -> crate::Result<WorkloadFleetReport> {
+    run_workload_configs_handles(
+        soc,
+        cfgs,
+        threads,
+        traces
+            .into_iter()
+            .map(|v| v.into_iter().map(|t| t.map(TraceHandle::Mem)).collect())
+            .collect(),
+    )
+}
+
+/// [`run_workload_configs_traced`] generalized over both trace tiers —
+/// the multi-tenant twin of [`run_configs_handles`].
+pub fn run_workload_configs_handles(
+    soc: &SocConfig,
+    cfgs: &[WorkloadConfig],
+    threads: usize,
+    traces: Vec<Vec<Option<TraceHandle>>>,
+) -> crate::Result<WorkloadFleetReport> {
     anyhow::ensure!(
         traces.len() == cfgs.len(),
         "one trace vector per workload config: {} configs, {} vectors",
@@ -393,14 +444,14 @@ pub fn run_workload_configs_traced(
         traces.len()
     );
     let threads = threads.clamp(1, cfgs.len().max(1));
-    let pairs: Vec<(WorkloadConfig, Vec<Option<Arc<SensorTrace>>>)> =
+    let pairs: Vec<(WorkloadConfig, Vec<Option<TraceHandle>>)> =
         cfgs.iter().cloned().zip(traces).collect();
     let (reports, wall_s) = run_each(
         soc,
         &pairs,
         threads,
         |soc, (cfg, traces)| {
-            Workload::with_traces(soc, cfg, traces).and_then(|mut w| w.run())
+            Workload::with_handles(soc, cfg, traces).and_then(|mut w| w.run())
         },
         "workload",
     )?;
@@ -416,15 +467,27 @@ pub fn run_workload_configs_shared(
     cfgs: &[WorkloadConfig],
     threads: usize,
 ) -> crate::Result<WorkloadFleetReport> {
+    run_workload_configs_stored(soc, cfgs, threads, None)
+}
+
+/// [`run_workload_configs_shared`] over an optional persistent store —
+/// the multi-tenant twin of [`run_configs_stored`]: disk-tier hits replay
+/// via mmap, fresh captures are persisted for every future run.
+pub fn run_workload_configs_stored(
+    soc: &SocConfig,
+    cfgs: &[WorkloadConfig],
+    threads: usize,
+    store: Option<&Store>,
+) -> crate::Result<WorkloadFleetReport> {
     let wall_start = std::time::Instant::now();
     let keys: Vec<Option<TraceKey>> =
         cfgs.iter().flat_map(WorkloadConfig::stream_trace_keys).collect();
-    let mut flat = shared_traces(&keys, threads).into_iter();
-    let traces: Vec<Vec<Option<Arc<SensorTrace>>>> = cfgs
+    let mut flat = shared_handles(&keys, threads, store).into_iter();
+    let traces: Vec<Vec<Option<TraceHandle>>> = cfgs
         .iter()
         .map(|c| c.streams.iter().map(|_| flat.next().expect("slot")).collect())
         .collect();
-    let mut fleet = run_workload_configs_traced(soc, cfgs, threads, traces)?;
+    let mut fleet = run_workload_configs_handles(soc, cfgs, threads, traces)?;
     fleet.wall_s = wall_start.elapsed().as_secs_f64();
     Ok(fleet)
 }

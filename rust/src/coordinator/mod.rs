@@ -53,8 +53,9 @@ pub mod workload;
 
 pub use engine::{CutieAdapter, Engine, EngineSlot, PulpAdapter, SneAdapter};
 pub use fleet::{
-    percentile, run_configs, run_configs_shared, run_configs_traced, run_fleet,
-    run_workload_configs, run_workload_configs_shared, run_workload_configs_traced,
+    percentile, run_configs, run_configs_handles, run_configs_shared, run_configs_stored,
+    run_configs_traced, run_fleet, run_workload_configs, run_workload_configs_handles,
+    run_workload_configs_shared, run_workload_configs_stored, run_workload_configs_traced,
     run_workload_fleet, FleetConfig, FleetReport, FleetStat, WorkloadFleetReport,
 };
 pub use fusion::{FusionState, NavCommand};

@@ -55,7 +55,7 @@ use crate::obs::timeline::TraceRecorder;
 use crate::runtime::Runtime;
 use crate::sensors::frame::{downsample_square, to_int8_luma, to_ternary};
 use crate::sensors::scene::SceneKind;
-use crate::sensors::trace::{EventSource, SensorTrace, TraceKey};
+use crate::sensors::trace::{EventSource, SensorTrace, TraceHandle, TraceKey};
 use crate::soc::power::DomainId;
 use crate::soc::Soc;
 
@@ -273,6 +273,20 @@ impl Mission {
         cfg: MissionConfig,
         trace: Option<Arc<SensorTrace>>,
     ) -> crate::Result<Self> {
+        Mission::with_handle(soc_cfg, cfg, trace.map(TraceHandle::Mem))
+    }
+
+    /// [`Mission::with_trace`] generalized over both trace tiers: a
+    /// `TraceHandle::Mapped` streams the mission's windows straight off a
+    /// verified store file (mmap, per-window decode), a
+    /// `TraceHandle::Mem` replays the resident capture. Reports are
+    /// bit-identical across live, resident replay and mapped replay
+    /// (`tests/integration_store.rs`).
+    pub fn with_handle(
+        soc_cfg: SocConfig,
+        cfg: MissionConfig,
+        trace: Option<TraceHandle>,
+    ) -> crate::Result<Self> {
         anyhow::ensure!(
             trace.is_none() || cfg.artifacts_dir.is_none(),
             "sensor traces carry no frame pixels; artifact-backed \
@@ -319,7 +333,7 @@ impl Mission {
             state_shapes.iter().map(|&(c, h, w)| vec![0f32; c * h * w]).collect();
 
         let source = match trace {
-            Some(trace) => EventSource::replay_for(trace, &cfg.trace_key())?,
+            Some(handle) => handle.source_for(&cfg.trace_key())?,
             None => EventSource::live(cfg.seed, cfg.frame_fps, cfg.scene),
         };
 

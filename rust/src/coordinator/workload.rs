@@ -54,7 +54,7 @@ use crate::obs::timeline as tl;
 use crate::obs::timeline::TraceRecorder;
 use crate::runtime::Runtime;
 use crate::sensors::frame::{downsample_square, to_int8_luma, to_ternary};
-use crate::sensors::trace::{EventSource, SensorTrace, TraceKey};
+use crate::sensors::trace::{EventSource, SensorTrace, TraceHandle, TraceKey};
 use crate::soc::power::{DomainId, PowerManager, RailSegment};
 use crate::soc::Soc;
 use crate::util::json::Value;
@@ -607,6 +607,19 @@ impl Workload {
         cfg: WorkloadConfig,
         traces: Vec<Option<Arc<SensorTrace>>>,
     ) -> crate::Result<Self> {
+        let handles = traces.into_iter().map(|t| t.map(TraceHandle::Mem)).collect();
+        Workload::with_handles(soc_cfg, cfg, handles)
+    }
+
+    /// [`Workload::with_traces`] generalized over both trace tiers (see
+    /// [`crate::coordinator::pipeline::Mission::with_handle`]): a
+    /// `TraceHandle::Mapped` slot streams that tenant's windows straight
+    /// off a verified store file.
+    pub fn with_handles(
+        soc_cfg: SocConfig,
+        cfg: WorkloadConfig,
+        traces: Vec<Option<TraceHandle>>,
+    ) -> crate::Result<Self> {
         cfg.validate()?;
         anyhow::ensure!(
             traces.is_empty() || traces.len() == cfg.streams.len(),
@@ -662,10 +675,7 @@ impl Workload {
         let mut tenants = Vec::with_capacity(cfg.streams.len());
         for (i, s) in cfg.streams.iter().enumerate() {
             let source = match traces.get(i).cloned().flatten() {
-                Some(t) => EventSource::replay_for(
-                    t,
-                    &s.trace_key(cfg.duration_s, cfg.window_ms),
-                )?,
+                Some(h) => h.source_for(&s.trace_key(cfg.duration_s, cfg.window_ms))?,
                 None => EventSource::live(s.seed, s.frame_fps, s.scene),
             };
             tenants.push(Tenant {

@@ -107,6 +107,7 @@ pub mod sensors;
 pub mod serve;
 pub mod sne;
 pub mod soc;
+pub mod store;
 pub mod util;
 
 pub use config::SocConfig;

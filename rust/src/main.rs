@@ -31,8 +31,10 @@ use kraken::nets;
 use kraken::pulp::cluster::PulpCluster;
 use kraken::runtime::Runtime;
 use kraken::sensors::scene::SceneKind;
-use kraken::serve::grid::{run_grid, GridConfig};
+use kraken::sensors::trace::capture_all;
+use kraken::serve::grid::{run_grid_stored, GridConfig};
 use kraken::serve::Server;
+use kraken::store::Store;
 use kraken::sne::SneEngine;
 use kraken::soc::power::DomainId;
 use kraken::soc::Soc;
@@ -57,7 +59,7 @@ COMMANDS:
                                   DESIGN.md §12)
   fleet [--missions N] [--threads T] [--duration S] [--scene ...]
         [--seed BASE] [--vdd V] [--vdds V1,V2,...] [--gates G1,off,...]
-        [--governors G1,G2,...] [--json]
+        [--governors G1,G2,...] [--store DIR] [--json]
                                   run N missions in parallel (seeds
                                   BASE..BASE+N, one SoC per worker);
                                   --vdds / --gates / --governors lift the
@@ -79,15 +81,35 @@ COMMANDS:
                                   (DESIGN.md §10); --timeline writes the
                                   deterministic Chrome-trace JSON (§12)
   serve [--stdio | --listen ADDR] [--workers N] [--queue N] [--cache-cap N]
-        [--trace-cache N]
+        [--trace-cache N] [--store DIR]
                                   resident mission service: JSON-lines
                                   requests (run|fleet|grid|workload|timeline|
                                   stats|metrics|shutdown, optional protocol
-                                  field "v")
+                                  field \"v\")
                                   answered from a persistent worker pool
                                   with a deterministic result cache and a
                                   bounded sensor-trace cache (0 disables;
-                                  DESIGN.md § Serving, §8, §9)
+                                  DESIGN.md § Serving, §8, §9); --store adds
+                                  a persistent disk tier under both caches
+                                  (sensor captures write through, results
+                                  spill on eviction or the protocol-v4
+                                  \"persist\" hint) so a restarted server
+                                  answers warm and byte-identically from
+                                  the same directory (DESIGN.md §13)
+  trace record --store DIR [--seed BASE] [--count N] [--duration S]
+               [--scene ...] [--window-ms MS] [--frame-fps FPS]
+               [--dvs-sample-hz HZ] [--threads T]
+                                  capture N deterministic sensor traces
+                                  (seeds BASE..BASE+N) into the store —
+                                  replays, in this process or any later
+                                  one, are bit-identical to live sensing
+  trace ls --store DIR            list the stored trace corpus (+ files
+                                  that fail integrity checks, read-only)
+  trace gc --store DIR --max-bytes N
+                                  shrink the corpus to N bytes, oldest
+                                  first; quarantined/tmp debris always goes
+  trace verify --store DIR        integrity-check every store file,
+                                  quarantining the ones that fail
   check-artifacts [--dir DIR]     verify + execute every AOT artifact
   help                            this text
 ";
@@ -207,11 +229,12 @@ fn run() -> kraken::Result<()> {
             let vdds = args.opt("vdds")?;
             let gates = args.opt("gates")?;
             let governors = args.opt("governors")?;
+            let store = args.opt("store")?;
             let json = args.flag("json");
             args.finish()?;
             run_fleet_cmd(
                 cfg, missions, threads, duration, &scene, seed, vdd, vdds, gates, governors,
-                json,
+                store, json,
             )
         }
         Some("workload") => {
@@ -238,16 +261,24 @@ fn run() -> kraken::Result<()> {
             let queue: usize = args.opt("queue")?.map_or(Ok(256), |s| s.parse())?;
             let cache_cap: usize = args.opt("cache-cap")?.map_or(Ok(128), |s| s.parse())?;
             let trace_cache: usize = args.opt("trace-cache")?.map_or(Ok(8), |s| s.parse())?;
+            let store = args.opt("store")?;
             args.finish()?;
             anyhow::ensure!(
                 !(stdio && listen.is_some()),
                 "--stdio and --listen are mutually exclusive"
             );
-            let server = Server::new(cfg, workers, queue, cache_cap, trace_cache)?;
+            let store = store
+                .map(|dir| Store::open(dir).map(std::sync::Arc::new))
+                .transpose()?;
+            let server = Server::with_store(cfg, workers, queue, cache_cap, trace_cache, store)?;
             match listen {
                 Some(addr) => kraken::serve::serve_listen(std::sync::Arc::new(server), &addr),
                 None => server.serve_stdio(),
             }
+        }
+        Some("trace") => {
+            let what = args.pos().unwrap_or_default();
+            trace_cmd(&what, args)
         }
         Some("check-artifacts") => {
             let dir = args.opt("dir")?.unwrap_or_else(|| "artifacts".into());
@@ -547,6 +578,7 @@ fn run_fleet_cmd(
     vdds: Option<String>,
     gates: Option<String>,
     governors: Option<String>,
+    store: Option<String>,
     json: bool,
 ) -> kraken::Result<()> {
     anyhow::ensure!(missions > 0, "--missions must be at least 1");
@@ -574,7 +606,11 @@ fn run_fleet_cmd(
     }
     let has_axes =
         !grid.vdds.is_empty() || !grid.idle_gates.is_empty() || !grid.governors.is_empty();
-    let gr = run_grid(&grid)?;
+    // --store: capture each distinct sensor key once *ever* — cells replay
+    // traces recorded by any earlier fleet/serve process from disk, and
+    // this run's fresh captures persist for the next one (DESIGN.md §13)
+    let store = store.map(Store::open).transpose()?;
+    let gr = run_grid_stored(&grid, store.as_ref())?;
     if json {
         if has_axes {
             println!("{}", gr.to_json().pretty());
@@ -662,6 +698,104 @@ fn run_workload_cmd(
         "idle  : {} engine clocked-idle floor at workload end (gated engines excluded)",
         fmt_power(workload.engines_idle_power_w())
     );
+    Ok(())
+}
+
+/// `kraken trace <record|ls|gc|verify>` — manage the persistent trace
+/// corpus (DESIGN.md §13). Every subcommand takes `--store DIR`; the
+/// directory is created by `record` and opened read-mostly by the rest.
+fn trace_cmd(what: &str, mut args: Args) -> kraken::Result<()> {
+    let dir = args
+        .opt("store")?
+        .ok_or_else(|| anyhow::anyhow!("trace {what} needs --store DIR (see `kraken help`)"))?;
+    match what {
+        "record" => {
+            let seed: u64 = args.opt("seed")?.map_or(Ok(7), |s| s.parse())?;
+            let count: usize = args.opt("count")?.map_or(Ok(1), |s| s.parse())?;
+            let duration: f64 = args.opt("duration")?.map_or(Ok(1.0), |s| s.parse())?;
+            let scene = args.opt("scene")?.unwrap_or_else(|| "corridor".into());
+            let window_ms = args.opt("window-ms")?.map(|s| s.parse()).transpose()?;
+            let frame_fps = args.opt("frame-fps")?.map(|s| s.parse()).transpose()?;
+            let dvs_hz = args.opt("dvs-sample-hz")?.map(|s| s.parse()).transpose()?;
+            let threads: usize = args.opt("threads")?.map_or(Ok(4), |s| s.parse())?;
+            args.finish()?;
+            anyhow::ensure!(count >= 1, "--count must be at least 1");
+            let store = Store::open(&dir)?;
+            // the keys a serve/fleet request with the same knobs resolves
+            // to: MissionConfig defaults + overrides, reseeded per index
+            let mut base = MissionConfig {
+                duration_s: duration,
+                scene: SceneKind::parse(&scene, seed)?,
+                seed,
+                print_live: false,
+                ..Default::default()
+            };
+            if let Some(w) = window_ms {
+                base.window_ms = w;
+            }
+            if let Some(f) = frame_fps {
+                base.frame_fps = f;
+            }
+            if let Some(hz) = dvs_hz {
+                base.dvs_sample_hz = hz;
+            }
+            let keys: Vec<_> = (0..count)
+                .filter_map(|i| {
+                    base.with_seed(seed.wrapping_add(i as u64)).shareable_trace_key()
+                })
+                .collect();
+            let mut fresh = 0u64;
+            for (key, trace) in keys.iter().zip(capture_all(&keys, threads)) {
+                let saved = store.save_trace(&trace)?;
+                fresh += saved as u64;
+                println!(
+                    "{}  {}  ({} events, {} frames)",
+                    if saved { "recorded" } else { "on disk " },
+                    key.canonical(),
+                    trace.len(),
+                    trace.frames().len(),
+                );
+            }
+            println!(
+                "trace record: {fresh} new, {} already stored, corpus {}",
+                keys.len() as u64 - fresh,
+                dir
+            );
+        }
+        "ls" => {
+            args.finish()?;
+            let (good, bad) = Store::open(&dir)?.ls()?;
+            for e in &good {
+                println!(
+                    "{:>10} B  {:>4} windows  {:>9} events  {:>5} frames  {}",
+                    e.bytes, e.n_windows, e.n_events, e.n_frames, e.canonical
+                );
+            }
+            for (path, err) in &bad {
+                println!("UNREADABLE  {}: {err}", path.display());
+            }
+            println!("{} trace(s), {} unreadable", good.len(), bad.len());
+        }
+        "gc" => {
+            let max_bytes: u64 = args
+                .opt("max-bytes")?
+                .ok_or_else(|| anyhow::anyhow!("trace gc needs --max-bytes N"))?
+                .parse()?;
+            args.finish()?;
+            let r = Store::open(&dir)?.gc(max_bytes)?;
+            println!(
+                "trace gc: removed {} file(s) ({} B), kept {} ({} B)",
+                r.removed_files, r.removed_bytes, r.kept_files, r.kept_bytes
+            );
+        }
+        "verify" => {
+            args.finish()?;
+            let r = Store::open(&dir)?.verify()?;
+            println!("trace verify: {} ok, {} quarantined", r.ok, r.quarantined);
+            anyhow::ensure!(r.quarantined == 0, "{} store file(s) failed integrity checks (renamed *.quarantined)", r.quarantined);
+        }
+        other => anyhow::bail!("unknown trace subcommand '{other}' (record|ls|gc|verify)"),
+    }
     Ok(())
 }
 

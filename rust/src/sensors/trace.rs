@@ -41,6 +41,7 @@ use std::sync::{Arc, Mutex};
 use crate::event::{Event, EventWindow};
 use crate::sensors::scene::{Scene, SceneKind};
 use crate::sensors::{DvsSim, FrameSensor, DVS_HEIGHT, DVS_WIDTH, FRAME_HEIGHT, FRAME_WIDTH};
+use crate::store::{MappedTrace, Store};
 use crate::util::fnv1a;
 
 /// Everything the sensor front end of a mission/stream depends on. Two
@@ -230,15 +231,88 @@ impl SensorTrace {
             + self.offsets.len() * std::mem::size_of::<usize>()
             + self.frames.len() * std::mem::size_of::<FrameRecord>()
     }
+
+    /// The flat event buffer and its window-offset index — what the
+    /// store serializer (`crate::store::format`) writes out.
+    pub(crate) fn raw_events(&self) -> (&[Event], &[usize]) {
+        (&self.events, &self.offsets)
+    }
+
+    /// Reassemble a trace from its serialized parts (the store decode
+    /// path). Private shape invariants (window-major flat buffer,
+    /// `offsets[0] == 0`, `offsets.last() == events.len()`) are the
+    /// writer's responsibility; `crate::store::format::parse_trace`
+    /// verifies them before this is reachable.
+    pub(crate) fn from_parts(
+        key: TraceKey,
+        frame_w: usize,
+        frame_h: usize,
+        events: Vec<Event>,
+        offsets: Vec<usize>,
+        frames: Vec<FrameRecord>,
+    ) -> SensorTrace {
+        SensorTrace { key, frame_w, frame_h, events, offsets, frames }
+    }
+}
+
+/// A shareable, replayable sensor trace in either tier: resident
+/// ([`SensorTrace`], the memory tier / fresh captures) or mapped from a
+/// store file ([`MappedTrace`], the disk tier — events stay on disk and
+/// stream per window). Both replay bit-identically to live sensing; the
+/// serve cache and the pool pass these around so a disk-tier hit never
+/// forces a wholesale decode.
+#[derive(Debug, Clone)]
+pub enum TraceHandle {
+    Mem(Arc<SensorTrace>),
+    Mapped(Arc<MappedTrace>),
+}
+
+impl TraceHandle {
+    pub fn key(&self) -> &TraceKey {
+        match self {
+            TraceHandle::Mem(t) => &t.key,
+            TraceHandle::Mapped(m) => m.key(),
+        }
+    }
+
+    /// Build the replay [`EventSource`] for a consumer expecting `want`
+    /// (canonical-key validated, like [`EventSource::replay_for`]).
+    pub fn source_for(&self, want: &TraceKey) -> crate::Result<EventSource> {
+        match self {
+            TraceHandle::Mem(t) => EventSource::replay_for(Arc::clone(t), want),
+            TraceHandle::Mapped(m) => EventSource::mapped_for(Arc::clone(m), want),
+        }
+    }
+
+    /// Resident bytes of this entry (memory-tier accounting): the full
+    /// buffers for `Mem`, just the decoded index for `Mapped`.
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            TraceHandle::Mem(t) => t.approx_bytes(),
+            TraceHandle::Mapped(m) => m.resident_bytes(),
+        }
+    }
+
+    /// Bytes this entry keeps on disk (disk-tier accounting): the store
+    /// file size for `Mapped`, zero for `Mem`.
+    pub fn disk_bytes(&self) -> usize {
+        match self {
+            TraceHandle::Mem(_) => 0,
+            TraceHandle::Mapped(m) => m.file_bytes(),
+        }
+    }
 }
 
 /// Where a pipeline's sensor input comes from: a live simulated front end
-/// (boxed — it carries the whole pixel-array state) or a prerecorded
-/// trace shared via `Arc`.
+/// (boxed — it carries the whole pixel-array state), a prerecorded
+/// in-memory trace shared via `Arc`, or a store file mapped read-only
+/// (events decoded per window straight off the mapping — the whole
+/// corpus is never deserialized).
 #[derive(Debug, Clone)]
 pub enum EventSource {
     Live(Box<LiveSensors>),
     Replay(TraceCursor),
+    Mapped(MappedCursor),
 }
 
 /// The live front end: scene + DVS + frame camera, plus one reusable
@@ -256,6 +330,16 @@ pub struct LiveSensors {
 pub struct TraceCursor {
     trace: Arc<SensorTrace>,
     frame_idx: usize,
+}
+
+/// Replay position inside a mapped store file, plus one reusable staging
+/// buffer the current window is decoded into (per-window decode is the
+/// only per-replay allocation; the events themselves stay on disk).
+#[derive(Debug, Clone)]
+pub struct MappedCursor {
+    map: Arc<MappedTrace>,
+    frame_idx: usize,
+    staging: Vec<Event>,
 }
 
 impl EventSource {
@@ -282,8 +366,20 @@ impl EventSource {
         Ok(EventSource::Replay(TraceCursor { trace, frame_idx: 0 }))
     }
 
+    /// A replay source streaming from a verified store mapping —
+    /// key-validated exactly like [`EventSource::replay_for`].
+    pub fn mapped_for(map: Arc<MappedTrace>, want: &TraceKey) -> crate::Result<EventSource> {
+        anyhow::ensure!(
+            map.key().canonical() == want.canonical(),
+            "sensor trace key mismatch:\n  trace:  {}\n  wanted: {}",
+            map.key().canonical(),
+            want.canonical()
+        );
+        Ok(EventSource::Mapped(MappedCursor { map, frame_idx: 0, staging: Vec::new() }))
+    }
+
     pub fn is_replay(&self) -> bool {
-        matches!(self, EventSource::Replay(_))
+        !matches!(self, EventSource::Live(_))
     }
 
     /// DVS geometry (width, height).
@@ -291,6 +387,7 @@ impl EventSource {
         match self {
             EventSource::Live(l) => (l.dvs.width, l.dvs.height),
             EventSource::Replay(r) => (r.trace.key.width, r.trace.key.height),
+            EventSource::Mapped(m) => (m.map.key().width, m.map.key().height),
         }
     }
 
@@ -299,6 +396,7 @@ impl EventSource {
         match self {
             EventSource::Live(l) => (l.cam.width, l.cam.height),
             EventSource::Replay(r) => (r.trace.frame_w, r.trace.frame_h),
+            EventSource::Mapped(m) => m.map.frame_dims(),
         }
     }
 
@@ -319,16 +417,25 @@ impl EventSource {
             EventSource::Replay(r) => {
                 r.trace.frames.get(r.frame_idx).map_or(u64::MAX, |f| f.t_ns)
             }
+            EventSource::Mapped(m) => {
+                m.map.frames().get(m.frame_idx).map_or(u64::MAX, |f| f.t_ns)
+            }
         }
     }
 
     /// The DVS event stream of inference window `w` (`[t0, t0 +
     /// window_ns)` sampled at `sample_hz`): live sources sense it, replay
-    /// sources hand back the captured slice without touching a pixel.
+    /// sources hand back the captured slice without touching a pixel, and
+    /// mapped sources decode exactly window `w` off the store file into
+    /// the cursor's staging buffer.
     pub fn window_events(&mut self, w: u64, t0: u64, window_ns: u64, sample_hz: f64) -> &[Event] {
         match self {
             EventSource::Live(l) => l.sense_window(t0, window_ns, sample_hz),
             EventSource::Replay(r) => r.trace.window(w),
+            EventSource::Mapped(m) => {
+                m.map.window_into(w, &mut m.staging);
+                &m.staging
+            }
         }
     }
 
@@ -352,6 +459,12 @@ impl EventSource {
                 assert!(!need_img, "trace replay carries no frame pixels");
                 let f = r.trace.frames[r.frame_idx];
                 r.frame_idx += 1;
+                (f.t_ns, None, (f.steer, f.collision))
+            }
+            EventSource::Mapped(m) => {
+                assert!(!need_img, "trace replay carries no frame pixels");
+                let f = m.map.frames()[m.frame_idx];
+                m.frame_idx += 1;
                 (f.t_ns, None, (f.steer, f.collision))
             }
         }
@@ -433,6 +546,51 @@ pub fn shared_traces(keys: &[Option<TraceKey>], threads: usize) -> Vec<Option<Ar
         out[i] = Some(t);
     }
     out
+}
+
+/// The store-aware sharing policy — [`shared_traces`] generalized over a
+/// corpus directory. Without a store it is exactly [`shared_traces`]
+/// (only repeated keys shared). With one, capture-once becomes
+/// **capture-once-ever**: *every* shareable key first consults the store
+/// (a hit replays via mmap — [`TraceHandle::Mapped`] — without decoding
+/// the corpus), and the distinct keys the store doesn't have yet are
+/// captured once and persisted, so the next process pays nothing.
+/// Store I/O is best-effort: a write failure logs and degrades to the
+/// in-memory handle, never fails the run.
+pub fn shared_handles(
+    keys: &[Option<TraceKey>],
+    threads: usize,
+    store: Option<&Store>,
+) -> Vec<Option<TraceHandle>> {
+    let Some(store) = store else {
+        return shared_traces(keys, threads)
+            .into_iter()
+            .map(|t| t.map(TraceHandle::Mem))
+            .collect();
+    };
+    // disk tier first: one open per *distinct* key
+    let mut by_canon: HashMap<String, Option<TraceHandle>> = HashMap::new();
+    let mut to_capture: Vec<TraceKey> = Vec::new();
+    for k in keys.iter().flatten() {
+        let canon = k.canonical();
+        if by_canon.contains_key(&canon) {
+            continue;
+        }
+        let hit = store.load_trace(k).map(TraceHandle::Mapped);
+        if hit.is_none() {
+            to_capture.push(k.clone());
+        }
+        by_canon.insert(canon, hit);
+    }
+    for (k, t) in to_capture.iter().zip(capture_all(&to_capture, threads)) {
+        if let Err(e) = store.save_trace(&t) {
+            eprintln!("store: could not persist {}: {e:#}", k.canonical());
+        }
+        by_canon.insert(k.canonical(), Some(TraceHandle::Mem(t)));
+    }
+    keys.iter()
+        .map(|k| k.as_ref().and_then(|k| by_canon[&k.canonical()].clone()))
+        .collect()
 }
 
 #[cfg(test)]

@@ -25,13 +25,21 @@
 //! canonical sensor key, so requests that differ only in SoC-side axes
 //! (vdd, gating) reuse one sensor capture even when their result-cache
 //! keys differ (DESIGN.md §9).
+//!
+//! Both caches optionally sit on a [`crate::store::Store`] disk tier
+//! (`kraken serve --store DIR`, DESIGN.md §13): a memory miss falls
+//! through to an integrity-checked store lookup before recomputing, fresh
+//! trace captures are written through (capture-once-ever), and evicted or
+//! `persist`-hinted results spill to disk — so a restarted server answers
+//! warm from the corpus instead of re-sensing and re-simulating.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::config::SocConfig;
-use crate::sensors::trace::SensorTrace;
+use crate::sensors::trace::{SensorTrace, TraceHandle, TraceKey};
+use crate::store::Store;
 
 pub use crate::util::fnv1a;
 
@@ -85,10 +93,11 @@ impl<V: Clone> LruMap<V> {
 
     /// Store a value, evicting the coldest entries beyond capacity. A
     /// hash collision overwrites the colliding entry (correctness is
-    /// preserved by the full-key comparison in `get`).
-    fn insert(&mut self, key: String, value: V) {
+    /// preserved by the full-key comparison in `get`). Returns the
+    /// evicted entries so a disk-backed cache can spill them.
+    fn insert(&mut self, key: String, value: V) -> Vec<(String, V)> {
         if self.cap == 0 {
-            return;
+            return Vec::new();
         }
         let h = fnv1a(key.as_bytes());
         if self.map.insert(h, (key, value)).is_none() {
@@ -96,13 +105,17 @@ impl<V: Clone> LruMap<V> {
         } else {
             self.touch(h);
         }
+        let mut evicted = Vec::new();
         while self.map.len() > self.cap {
             if let Some(cold) = self.order.pop_front() {
-                self.map.remove(&cold);
+                if let Some(entry) = self.map.remove(&cold) {
+                    evicted.push(entry);
+                }
             } else {
                 break;
             }
         }
+        evicted
     }
 
     fn touch(&mut self, h: u64) {
@@ -113,25 +126,71 @@ impl<V: Clone> LruMap<V> {
     }
 }
 
-/// LRU map from canonical key to serialized response. Capacity 0 disables
-/// caching entirely (every lookup is a miss).
+/// LRU map from canonical key to serialized response, optionally backed
+/// by a [`Store`] disk tier. Capacity 0 disables the memory tier (every
+/// memory lookup is a miss), but a disk tier still serves hits.
 pub struct ResultCache {
     inner: LruMap<String>,
+    store: Option<Arc<Store>>,
 }
 
 impl ResultCache {
     pub fn new(cap: usize) -> ResultCache {
-        ResultCache { inner: LruMap::new(cap) }
+        ResultCache::with_store(cap, None)
     }
 
-    /// Look up the stored response for `key`, refreshing its LRU position.
+    /// A result cache over an optional persistent disk tier: memory
+    /// misses fall through to an integrity-checked store lookup, LRU
+    /// evictions spill to disk, and `persist`-hinted responses are
+    /// written through immediately.
+    pub fn with_store(cap: usize, store: Option<Arc<Store>>) -> ResultCache {
+        ResultCache { inner: LruMap::new(cap), store }
+    }
+
+    /// Look up the stored response for `key`, refreshing its LRU
+    /// position. A memory miss falls through to the disk tier (when
+    /// configured); a disk hit is promoted into the memory tier.
     pub fn get(&mut self, key: &str) -> Option<String> {
-        self.inner.get(key)
+        if let Some(v) = self.inner.get(key) {
+            return Some(v);
+        }
+        let payload = self.store.as_ref()?.load_result(key)?;
+        // promote without re-persisting (the bytes just came off disk);
+        // anything this evicts still spills below
+        let evicted = self.inner.insert(key.to_string(), payload.clone());
+        self.spill(evicted);
+        Some(payload)
     }
 
-    /// Store a response, evicting the coldest entries beyond capacity.
+    /// Store a response, evicting the coldest entries beyond capacity
+    /// (evictions spill to the disk tier when one is configured).
     pub fn insert(&mut self, key: String, response: String) {
-        self.inner.insert(key, response)
+        self.insert_hinted(key, response, false);
+    }
+
+    /// [`ResultCache::insert`] with the protocol-v4 `persist` hint: a
+    /// hinted response is written through to the disk tier immediately
+    /// instead of waiting for LRU eviction.
+    pub fn insert_hinted(&mut self, key: String, response: String, persist: bool) {
+        if persist {
+            if let Some(store) = &self.store {
+                if let Err(e) = store.save_result(&key, &response) {
+                    eprintln!("store: persist result failed: {e:#}");
+                }
+            }
+        }
+        let evicted = self.inner.insert(key, response);
+        self.spill(evicted);
+    }
+
+    fn spill(&self, evicted: Vec<(String, String)>) {
+        if let Some(store) = &self.store {
+            for (k, v) in evicted {
+                if let Err(e) = store.save_result(&k, &v) {
+                    eprintln!("store: spill result failed: {e:#}");
+                }
+            }
+        }
     }
 
     pub fn hits(&self) -> u64 {
@@ -156,31 +215,60 @@ impl ResultCache {
 }
 
 /// The bounded sensor-trace cache beside the result cache: canonical
-/// [`crate::sensors::trace::TraceKey`] string → `Arc<SensorTrace>`.
-/// Where the result cache replays *response bytes* of configs seen
-/// before, this one replays *sensor input* across configs that differ in
-/// SoC-side axes only — a vdd/gating/policy sweep over one scene senses
-/// once. Entries are whole captures (potentially MBs — see
-/// `SensorTrace::approx_bytes`, surfaced in `stats`), so the default
-/// capacity is small and `--trace-cache 0` disables replay entirely.
+/// [`TraceKey`] string → [`TraceHandle`] (a resident capture or a
+/// verified mmapped store file). Where the result cache replays
+/// *response bytes* of configs seen before, this one replays *sensor
+/// input* across configs that differ in SoC-side axes only — a
+/// vdd/gating/policy sweep over one scene senses once. Resident entries
+/// are whole captures (potentially MBs — see `SensorTrace::approx_bytes`,
+/// surfaced in `stats` as `mem_bytes`), so the default capacity is small
+/// and `--trace-cache 0` disables replay entirely.
+///
+/// With a disk tier, fresh captures are **written through** on insert
+/// (capture-once-ever per corpus directory) and memory misses fall
+/// through to a store lookup that yields a mapped handle — a warm
+/// restart replays the corpus instead of re-sensing.
 pub struct TraceCache {
-    inner: LruMap<Arc<SensorTrace>>,
+    inner: LruMap<TraceHandle>,
+    store: Option<Arc<Store>>,
 }
 
 impl TraceCache {
     pub fn new(cap: usize) -> TraceCache {
-        TraceCache { inner: LruMap::new(cap) }
+        TraceCache::with_store(cap, None)
     }
 
-    /// Look up the shared trace for a canonical key, refreshing its LRU
-    /// position.
-    pub fn get(&mut self, key: &str) -> Option<Arc<SensorTrace>> {
-        self.inner.get(key)
+    /// A trace cache over an optional persistent disk tier.
+    pub fn with_store(cap: usize, store: Option<Arc<Store>>) -> TraceCache {
+        TraceCache { inner: LruMap::new(cap), store }
+    }
+
+    /// Look up the shared trace for a key, refreshing its LRU position.
+    /// A memory miss falls through to the disk tier (when configured);
+    /// a disk hit is promoted into the memory tier as a mapped handle.
+    pub fn get(&mut self, key: &TraceKey) -> Option<TraceHandle> {
+        let canon = key.canonical();
+        if let Some(h) = self.inner.get(&canon) {
+            return Some(h);
+        }
+        let mapped = self.store.as_ref()?.load_trace(key)?;
+        let handle = TraceHandle::Mapped(mapped);
+        // evicted trace entries need no spill: with a store attached,
+        // every Mem insert was already written through
+        self.inner.insert(canon, handle.clone());
+        Some(handle)
     }
 
     /// Store a captured trace, evicting the coldest beyond capacity.
-    pub fn insert(&mut self, key: String, trace: Arc<SensorTrace>) {
-        self.inner.insert(key, trace)
+    /// Resident captures are written through to the disk tier when one
+    /// is configured, so a trace key is captured at most once per corpus.
+    pub fn insert(&mut self, key: String, handle: TraceHandle) {
+        if let (Some(store), TraceHandle::Mem(t)) = (&self.store, &handle) {
+            if let Err(e) = store.save_trace(t) {
+                eprintln!("store: persist trace failed: {e:#}");
+            }
+        }
+        self.inner.insert(key, handle);
     }
 
     pub fn hits(&self) -> u64 {
@@ -203,9 +291,16 @@ impl TraceCache {
         self.inner.cap
     }
 
-    /// Approximate resident bytes across all cached traces.
-    pub fn bytes(&self) -> usize {
-        self.inner.map.values().map(|(_, t)| t.approx_bytes()).sum()
+    /// Resident bytes across cached entries: full buffers for memory-tier
+    /// entries, just the decoded index for mapped ones.
+    pub fn mem_bytes(&self) -> usize {
+        self.inner.map.values().map(|(_, h)| h.mem_bytes()).sum()
+    }
+
+    /// Bytes the cached mapped entries keep on disk (zero without a
+    /// store tier).
+    pub fn disk_bytes(&self) -> usize {
+        self.inner.map.values().map(|(_, h)| h.disk_bytes()).sum()
     }
 }
 
@@ -284,11 +379,9 @@ mod tests {
         assert_eq!(c.len(), 1);
     }
 
-    #[test]
-    fn trace_cache_bounds_and_counts() {
+    fn trace_key(seed: u64) -> TraceKey {
         use crate::sensors::scene::SceneKind;
-        use crate::sensors::trace::{SensorTrace, TraceKey};
-        let key = |seed| TraceKey {
+        TraceKey {
             scene: SceneKind::Corridor { speed_per_s: 0.5, seed },
             seed,
             width: 16,
@@ -297,21 +390,88 @@ mod tests {
             frame_fps: 30.0,
             duration_s: 0.05,
             window_ms: 10.0,
-        };
+        }
+    }
+
+    #[test]
+    fn trace_cache_bounds_and_counts() {
+        let key = trace_key;
         let mut c = TraceCache::new(1);
-        assert!(c.get(&key(1).canonical()).is_none());
+        assert!(c.get(&key(1)).is_none());
         let t1 = Arc::new(SensorTrace::capture(&key(1)));
-        c.insert(key(1).canonical(), Arc::clone(&t1));
-        assert!(Arc::ptr_eq(&c.get(&key(1).canonical()).unwrap(), &t1));
-        assert!(c.bytes() > 0);
+        c.insert(key(1).canonical(), TraceHandle::Mem(Arc::clone(&t1)));
+        match c.get(&key(1)).unwrap() {
+            TraceHandle::Mem(t) => assert!(Arc::ptr_eq(&t, &t1)),
+            other => panic!("expected the resident handle, got {other:?}"),
+        }
+        assert!(c.mem_bytes() > 0);
+        assert_eq!(c.disk_bytes(), 0, "no store tier, nothing on disk");
         let t2 = Arc::new(SensorTrace::capture(&key(2)));
-        c.insert(key(2).canonical(), t2); // cap 1: evicts key(1)
-        assert!(c.get(&key(1).canonical()).is_none());
+        c.insert(key(2).canonical(), TraceHandle::Mem(t2)); // cap 1: evicts key(1)
+        assert!(c.get(&key(1)).is_none());
         assert_eq!(c.len(), 1);
         assert_eq!((c.hits(), c.misses()), (1, 2));
         // capacity 0 disables trace caching
         let mut off = TraceCache::new(0);
-        off.insert(key(1).canonical(), t1);
+        off.insert(key(1).canonical(), TraceHandle::Mem(t1));
         assert!(off.is_empty());
+    }
+
+    fn tmp_store(tag: &str) -> Arc<Store> {
+        let dir = std::env::temp_dir()
+            .join(format!("kraken-cache-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        Arc::new(Store::open(dir).unwrap())
+    }
+
+    #[test]
+    fn trace_cache_disk_tier_survives_a_fresh_cache() {
+        let key = trace_key;
+        let store = tmp_store("trace-tier");
+        let mut c = TraceCache::with_store(2, Some(Arc::clone(&store)));
+        let t1 = Arc::new(SensorTrace::capture(&key(1)));
+        // insert writes through to disk
+        c.insert(key(1).canonical(), TraceHandle::Mem(Arc::clone(&t1)));
+        assert_eq!(store.disk_usage().trace_files, 1);
+        // a *fresh* cache (new process stand-in) over the same store
+        // answers from disk as a mapped handle with identical windows
+        let mut warm = TraceCache::with_store(2, Some(Arc::clone(&store)));
+        let h = warm.get(&key(1)).expect("disk-tier hit");
+        match &h {
+            TraceHandle::Mapped(m) => {
+                let mut buf = Vec::new();
+                for w in 0..t1.n_windows() {
+                    m.window_into(w, &mut buf);
+                    assert_eq!(buf.as_slice(), t1.window(w), "window {w}");
+                }
+                assert!(h.disk_bytes() > 0);
+            }
+            other => panic!("expected a mapped handle, got {other:?}"),
+        }
+        // promoted: the next lookup is a memory-tier hit
+        assert!(warm.get(&key(1)).is_some());
+        assert_eq!(warm.hits(), 1);
+        assert_eq!(store.counters().trace_hits, 1);
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn result_cache_spills_evictions_and_persist_hints_to_disk() {
+        let store = tmp_store("result-tier");
+        let mut c = ResultCache::with_store(1, Some(Arc::clone(&store)));
+        c.insert("a".into(), "1".into());
+        assert_eq!(store.disk_usage().result_files, 0, "no hint, no eviction yet");
+        c.insert("b".into(), "2".into()); // cap 1: evicts "a" -> spills
+        assert_eq!(store.disk_usage().result_files, 1);
+        // evicted from memory, but the disk tier still answers, byte-identically
+        assert_eq!(c.get("a").as_deref(), Some("1"));
+        // the persist hint writes through immediately
+        c.insert_hinted("p".into(), "3".into(), true);
+        let mut warm = ResultCache::with_store(1, Some(Arc::clone(&store)));
+        assert_eq!(warm.get("p").as_deref(), Some("3"));
+        // cap 0 disables the memory tier but not the disk tier
+        let mut off = ResultCache::with_store(0, Some(Arc::clone(&store)));
+        assert_eq!(off.get("p").as_deref(), Some("3"));
+        std::fs::remove_dir_all(store.dir()).ok();
     }
 }

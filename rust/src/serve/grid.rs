@@ -18,13 +18,14 @@
 
 use crate::config::SocConfig;
 use crate::coordinator::fleet::{
-    run_configs_shared, run_workload_configs_shared, FleetConfig, FleetReport,
+    run_configs_stored, run_workload_configs_stored, FleetConfig, FleetReport,
     WorkloadFleetReport,
 };
 use crate::coordinator::governor::GovernorKind;
 use crate::coordinator::pipeline::MissionConfig;
 use crate::coordinator::workload::WorkloadConfig;
 use crate::sensors::scene::SceneKind;
+use crate::store::Store;
 use crate::util::json::Value;
 
 /// A parameter grid over a base mission config. Empty axes inherit the
@@ -300,13 +301,21 @@ impl GridReport {
 /// sensor front end runs once per distinct stream instead of once per
 /// cell, with bit-identical cell reports (`tests/integration_trace.rs`).
 pub fn run_grid(grid: &GridConfig) -> crate::Result<GridReport> {
+    run_grid_stored(grid, None)
+}
+
+/// [`run_grid`] over an optional persistent trace store: distinct sensor
+/// keys are looked up on disk first (mmap replay) and fresh captures are
+/// persisted, so a corpus directory turns capture-once-per-batch into
+/// capture-once-*ever* (`kraken fleet --store`).
+pub fn run_grid_stored(grid: &GridConfig, store: Option<&Store>) -> crate::Result<GridReport> {
     anyhow::ensure!(
         grid.tenants.is_empty(),
         "grid has a tenants axis; run it with run_workload_grid"
     );
     let cells = grid.cells();
     let cfgs: Vec<MissionConfig> = cells.iter().map(|c| c.cfg.clone()).collect();
-    let fleet = run_configs_shared(&grid.soc, &cfgs, grid.threads)?;
+    let fleet = run_configs_stored(&grid.soc, &cfgs, grid.threads, store)?;
     Ok(GridReport {
         cells: cells.into_iter().map(|c| c.label).collect(),
         fleet,
@@ -364,9 +373,18 @@ impl WorkloadGridReport {
 /// sharing applied per tenant stream (a stream key repeating across
 /// cells or tenants is captured once).
 pub fn run_workload_grid(grid: &GridConfig) -> crate::Result<WorkloadGridReport> {
+    run_workload_grid_stored(grid, None)
+}
+
+/// [`run_workload_grid`] over an optional persistent trace store — the
+/// multi-tenant twin of [`run_grid_stored`].
+pub fn run_workload_grid_stored(
+    grid: &GridConfig,
+    store: Option<&Store>,
+) -> crate::Result<WorkloadGridReport> {
     let cells = grid.workload_cells();
     let cfgs: Vec<WorkloadConfig> = cells.iter().map(|c| c.cfg.clone()).collect();
-    let fleet = run_workload_configs_shared(&grid.soc, &cfgs, grid.threads)?;
+    let fleet = run_workload_configs_stored(&grid.soc, &cfgs, grid.threads, store)?;
     Ok(WorkloadGridReport {
         cells: cells.into_iter().map(|c| c.label).collect(),
         fleet,

@@ -47,7 +47,8 @@ use crate::coordinator::fleet::{FleetReport, WorkloadFleetReport};
 use crate::coordinator::pipeline::{Mission, MissionConfig};
 use crate::coordinator::workload::{Workload, WorkloadConfig};
 use crate::obs::{Metrics, ReqKind};
-use crate::sensors::trace::{capture_all, SensorTrace, TraceKey};
+use crate::sensors::trace::{capture_all, TraceHandle, TraceKey};
+use crate::store::Store;
 use crate::util::json::Value;
 
 use cache::{ResultCache, TraceCache};
@@ -71,6 +72,11 @@ pub struct Server {
     /// in SoC-side axes (vdd, gating) reuse one sensor capture even when
     /// their result-cache keys differ.
     traces: Mutex<TraceCache>,
+    /// Optional persistent disk tier under both caches (`--store DIR`):
+    /// trace captures write through, results spill on eviction or the
+    /// protocol-v4 `persist` hint, and a restarted server answers warm
+    /// from the same directory.
+    store: Option<Arc<Store>>,
     start: std::time::Instant,
     requests: AtomicU64,
     errors: AtomicU64,
@@ -95,6 +101,23 @@ impl Server {
         cache_cap: usize,
         trace_cap: usize,
     ) -> crate::Result<Server> {
+        Server::with_store(soc, workers, queue_cap, cache_cap, trace_cap, None)
+    }
+
+    /// [`Server::new`] with an optional persistent store directory under
+    /// both caches (`kraken serve --store DIR`): sensor captures persist
+    /// write-through, cached results spill on LRU eviction or the
+    /// protocol-v4 `persist` hint, and a fresh process over the same
+    /// directory answers from disk — byte-identically — instead of
+    /// re-sensing and re-simulating.
+    pub fn with_store(
+        soc: SocConfig,
+        workers: usize,
+        queue_cap: usize,
+        cache_cap: usize,
+        trace_cap: usize,
+        store: Option<Arc<Store>>,
+    ) -> crate::Result<Server> {
         soc.validate()?;
         let pool = WorkerPool::new(workers, queue_cap);
         let metrics = pool.metrics();
@@ -102,8 +125,9 @@ impl Server {
             soc,
             pool,
             metrics,
-            cache: Mutex::new(ResultCache::new(cache_cap)),
-            traces: Mutex::new(TraceCache::new(trace_cap)),
+            cache: Mutex::new(ResultCache::with_store(cache_cap, store.clone())),
+            traces: Mutex::new(TraceCache::with_store(trace_cap, store.clone())),
+            store,
             start: std::time::Instant::now(),
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
@@ -144,12 +168,26 @@ impl Server {
     fn dispatch(&self, line: &str) -> crate::Result<String> {
         match Request::from_json(line)? {
             Request::Stats => Ok(self.stats_value("stats").to_string()),
-            Request::Metrics => Ok(protocol::ok_response("metrics", self.metrics.to_json())
-                .to_string()),
+            Request::Metrics => {
+                // the registry plus the store section (v4) — same store
+                // counters `stats` carries, so either kind can watch the
+                // disk tier
+                let mut m = self.metrics.to_json();
+                if let Value::Obj(map) = &mut m {
+                    map.insert("store".into(), self.store_value());
+                }
+                Ok(protocol::ok_response("metrics", m).to_string())
+            }
             Request::Shutdown => Ok(self.shutdown_now()),
-            Request::Run { cfg } => self.serve_missions("run", vec![cfg], None),
-            Request::Fleet { cfgs } => self.serve_missions("fleet", cfgs, None),
-            Request::Workload { cfg } => self.serve_workloads("workload", vec![cfg], None),
+            Request::Run { cfg, persist } => {
+                self.serve_missions("run", vec![cfg], None, persist)
+            }
+            Request::Fleet { cfgs, persist } => {
+                self.serve_missions("fleet", cfgs, None, persist)
+            }
+            Request::Workload { cfg, persist } => {
+                self.serve_workloads("workload", vec![cfg], None, persist)
+            }
             Request::Timeline { target } => self.serve_timeline(target),
             Request::Grid {
                 base,
@@ -160,6 +198,7 @@ impl Server {
                 idle_gates,
                 governors,
                 tenants,
+                persist,
             } => {
                 let grid = GridConfig {
                     soc: self.soc.clone(),
@@ -182,22 +221,24 @@ impl Server {
                     let cells = grid.workload_cells();
                     let labels = cells.iter().map(|c| c.label.clone()).collect();
                     let cfgs = cells.into_iter().map(|c| c.cfg).collect();
-                    self.serve_workloads("grid", cfgs, Some(labels))
+                    self.serve_workloads("grid", cfgs, Some(labels), persist)
                 } else {
                     let cells = grid.cells();
                     let labels = cells.iter().map(|c| c.label.clone()).collect();
                     let cfgs = cells.into_iter().map(|c| c.cfg).collect();
-                    self.serve_missions("grid", cfgs, Some(labels))
+                    self.serve_missions("grid", cfgs, Some(labels), persist)
                 }
             }
         }
     }
 
     /// Replay `key` from the cache when `cacheable`, else compute the
-    /// response and store it verbatim.
+    /// response and store it verbatim. A `persist`-hinted response (v4)
+    /// is additionally written through to the store disk tier.
     fn with_cache(
         &self,
         cacheable: bool,
+        persist: bool,
         key: String,
         compute: impl FnOnce() -> crate::Result<String>,
     ) -> crate::Result<String> {
@@ -208,24 +249,26 @@ impl Server {
         }
         let resp = compute()?;
         if cacheable {
-            self.cache.lock().unwrap().insert(key, resp.clone());
+            self.cache.lock().unwrap().insert_hinted(key, resp.clone(), persist);
         }
         Ok(resp)
     }
 
-    /// Resolve each position's sensor-trace key against the bounded trace
-    /// cache: hits replay the cached capture, misses are captured once per
-    /// distinct key (in parallel, outside the lock) and cached for later
-    /// requests. `None` positions (artifact-backed configs) sense live,
-    /// as does everything when the cache capacity is 0.
+    /// Resolve each position's sensor-trace key against the tiered trace
+    /// cache: memory hits replay the cached capture, store hits replay
+    /// the mmapped corpus file, and misses are captured once per distinct
+    /// key (in parallel, outside the lock), cached for later requests and
+    /// — with a store — persisted for every future process. `None`
+    /// positions (artifact-backed configs) sense live, as does everything
+    /// when the cache capacity is 0 and no store is configured.
     ///
     /// Concurrent connections missing on the same key race benignly: each
     /// captures its own (identical) trace and the last insert wins — no
     /// in-flight dedup, because captures are deterministic and the race
     /// costs only duplicated work, never a wrong stream.
-    fn resolve_traces(&self, keys: Vec<Option<TraceKey>>) -> Vec<Option<Arc<SensorTrace>>> {
-        let mut out: Vec<Option<Arc<SensorTrace>>> = vec![None; keys.len()];
-        if self.traces.lock().unwrap().cap() == 0 {
+    fn resolve_traces(&self, keys: Vec<Option<TraceKey>>) -> Vec<Option<TraceHandle>> {
+        let mut out: Vec<Option<TraceHandle>> = vec![None; keys.len()];
+        if self.traces.lock().unwrap().cap() == 0 && self.store.is_none() {
             return out;
         }
         let mut miss_idx: Vec<usize> = Vec::new();
@@ -234,8 +277,8 @@ impl Server {
             let mut tc = self.traces.lock().unwrap();
             for (i, k) in keys.iter().enumerate() {
                 if let Some(k) = k {
-                    match tc.get(&k.canonical()) {
-                        Some(t) => out[i] = Some(t),
+                    match tc.get(k) {
+                        Some(h) => out[i] = Some(h),
                         None => {
                             miss_idx.push(i);
                             miss_keys.push(k.clone());
@@ -248,8 +291,9 @@ impl Server {
             let captured = capture_all(&miss_keys, self.pool.workers());
             let mut tc = self.traces.lock().unwrap();
             for ((i, k), t) in miss_idx.into_iter().zip(miss_keys.iter()).zip(captured) {
-                tc.insert(k.canonical(), Arc::clone(&t));
-                out[i] = Some(t);
+                let handle = TraceHandle::Mem(t);
+                tc.insert(k.canonical(), handle.clone());
+                out[i] = Some(handle);
             }
         }
         out
@@ -265,10 +309,11 @@ impl Server {
         kind: &str,
         cfgs: Vec<MissionConfig>,
         labels: Option<Vec<String>>,
+        persist: bool,
     ) -> crate::Result<String> {
         let cacheable = cfgs.iter().all(|c| c.artifacts_dir.is_none());
         let key = cache::canonical_key(kind, &self.soc, &cfgs);
-        self.with_cache(cacheable, key, || {
+        self.with_cache(cacheable, persist, key, || {
             // reject batches that can never be admitted *before* paying
             // for sensor capture — backpressure must bound server work
             self.pool
@@ -314,17 +359,18 @@ impl Server {
         kind: &str,
         cfgs: Vec<WorkloadConfig>,
         labels: Option<Vec<String>>,
+        persist: bool,
     ) -> crate::Result<String> {
         let cacheable = cfgs.iter().all(|c| c.artifacts_dir.is_none());
         let key = cache::canonical_key(kind, &self.soc, &cfgs);
-        self.with_cache(cacheable, key, || {
+        self.with_cache(cacheable, persist, key, || {
             self.pool
                 .check_batch_fits(cfgs.len())
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             let keys: Vec<Option<TraceKey>> =
                 cfgs.iter().flat_map(WorkloadConfig::stream_trace_keys).collect();
             let mut flat = self.resolve_traces(keys).into_iter();
-            let traces: Vec<Vec<Option<Arc<SensorTrace>>>> = cfgs
+            let traces: Vec<Vec<Option<TraceHandle>>> = cfgs
                 .iter()
                 .map(|c| c.streams.iter().map(|_| flat.next().expect("slot")).collect())
                 .collect();
@@ -369,7 +415,7 @@ impl Server {
                 let cacheable = cfg.artifacts_dir.is_none();
                 let key =
                     cache::canonical_key("timeline", &self.soc, std::slice::from_ref(&cfg));
-                self.with_cache(cacheable, key, || {
+                self.with_cache(cacheable, false, key, || {
                     let mut m = Mission::new(self.soc.clone(), cfg)?;
                     m.record_timeline();
                     m.run()?;
@@ -381,7 +427,7 @@ impl Server {
                 let cacheable = cfg.artifacts_dir.is_none();
                 let key =
                     cache::canonical_key("timeline", &self.soc, std::slice::from_ref(&cfg));
-                self.with_cache(cacheable, key, || {
+                self.with_cache(cacheable, false, key, || {
                     let mut w = Workload::new(self.soc.clone(), cfg)?;
                     w.record_timeline();
                     w.run()?;
@@ -434,9 +480,9 @@ impl Server {
             let c = self.cache.lock().unwrap();
             (c.hits(), c.misses(), c.len(), c.cap())
         };
-        let (t_hits, t_misses, t_entries, t_cap, t_bytes) = {
+        let (t_hits, t_misses, t_entries, t_cap, t_mem_bytes, t_disk_bytes) = {
             let t = self.traces.lock().unwrap();
-            (t.hits(), t.misses(), t.len(), t.cap(), t.bytes())
+            (t.hits(), t.misses(), t.len(), t.cap(), t.mem_bytes(), t.disk_bytes())
         };
         let worker_jobs: Vec<Value> = self
             .pool
@@ -506,9 +552,36 @@ impl Server {
                     ("misses", Value::Num(t_misses as f64)),
                     ("entries", Value::Num(t_entries as f64)),
                     ("cap", Value::Num(t_cap as f64)),
-                    ("bytes", Value::Num(t_bytes as f64)),
+                    // tiered accounting: resident buffers vs bytes the
+                    // mapped entries keep on disk (never conflated)
+                    ("mem_bytes", Value::Num(t_mem_bytes as f64)),
+                    ("disk_bytes", Value::Num(t_disk_bytes as f64)),
                 ]),
             ),
+            ("store", self.store_value()),
+        ])
+    }
+
+    /// The `store` section of `stats`/`metrics` (v4): the disk tier's
+    /// directory, footprint and hit/miss/save/quarantine counters, or
+    /// `null` when no `--store` is configured.
+    fn store_value(&self) -> Value {
+        let Some(store) = &self.store else { return Value::Null };
+        let c = store.counters();
+        let u = store.disk_usage();
+        Value::obj(vec![
+            ("dir", Value::Str(store.dir().display().to_string())),
+            ("trace_hits", Value::Num(c.trace_hits as f64)),
+            ("trace_misses", Value::Num(c.trace_misses as f64)),
+            ("result_hits", Value::Num(c.result_hits as f64)),
+            ("result_misses", Value::Num(c.result_misses as f64)),
+            ("saves", Value::Num(c.saves as f64)),
+            ("quarantined", Value::Num(c.quarantined as f64)),
+            ("trace_files", Value::Num(u.trace_files as f64)),
+            ("trace_bytes", Value::Num(u.trace_bytes as f64)),
+            ("result_files", Value::Num(u.result_files as f64)),
+            ("result_bytes", Value::Num(u.result_bytes as f64)),
+            ("quarantined_files", Value::Num(u.quarantined_files as f64)),
         ])
     }
 
@@ -518,11 +591,15 @@ impl Server {
     /// and responses.
     pub fn serve_stdio(&self) -> crate::Result<()> {
         eprintln!(
-            "kraken serve: stdio, {} workers, queue {}, cache {}, trace cache {}",
+            "kraken serve: stdio, {} workers, queue {}, cache {}, trace cache {}{}",
             self.pool.workers(),
             self.pool.queue_cap(),
             self.cache.lock().unwrap().cap(),
-            self.traces.lock().unwrap().cap()
+            self.traces.lock().unwrap().cap(),
+            match &self.store {
+                Some(s) => format!(", store {}", s.dir().display()),
+                None => String::new(),
+            }
         );
         let stdin = std::io::stdin();
         let stdout = std::io::stdout();
@@ -691,7 +768,10 @@ mod tests {
         assert_eq!(tc.get("hits").and_then(Value::as_u64), Some(1));
         assert_eq!(tc.get("misses").and_then(Value::as_u64), Some(1));
         assert_eq!(tc.get("entries").and_then(Value::as_u64), Some(1));
-        assert!(tc.get("bytes").and_then(Value::as_f64).unwrap() > 0.0);
+        assert!(tc.get("mem_bytes").and_then(Value::as_f64).unwrap() > 0.0);
+        assert_eq!(tc.get("disk_bytes").and_then(Value::as_f64), Some(0.0));
+        // no --store configured: the stats store section is null
+        assert!(matches!(stats.get("store"), Some(Value::Null)));
         // the result cache saw two distinct keys
         let rc = stats.get("cache").unwrap();
         assert_eq!(rc.get("misses").and_then(Value::as_u64), Some(2));
@@ -909,5 +989,78 @@ mod tests {
             reports[1].get("tenants").and_then(Value::as_arr).map(|t| t.len()),
             Some(2)
         );
+    }
+
+    fn tmp_store(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("kraken-serve-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn stored_server(dir: &std::path::Path) -> Server {
+        let store = Arc::new(Store::open(dir).unwrap());
+        Server::with_store(SocConfig::kraken(), 2, 16, 8, 8, Some(store)).unwrap()
+    }
+
+    #[test]
+    fn warm_restart_answers_byte_identically_from_the_store() {
+        let dir = tmp_store("warm");
+        let grid = r#"{"kind":"grid","v":4,"persist":true,"duration_s":0.05,
+                       "dvs_sample_hz":300.0,"seed":[7,8],"vdd":[0.6,0.8]}"#
+            .replace('\n', " ");
+
+        // server A: cold — captures sensors, simulates, persists
+        let a = {
+            let s = stored_server(&dir);
+            let resp = s.handle_line(&grid).unwrap();
+            assert!(parse(&resp).unwrap().get("ok").and_then(Value::as_bool) == Some(true));
+            let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+            let st = stats.get("store").expect("store stats section");
+            // persist:true wrote the response through; the two distinct
+            // sensor keys (seed axis) wrote through on capture
+            assert!(st.get("result_files").and_then(Value::as_u64) >= Some(1), "{st:?}");
+            assert_eq!(st.get("trace_files").and_then(Value::as_u64), Some(2), "{st:?}");
+            resp
+        };
+
+        // server B: a fresh process image over the same directory must
+        // answer byte-identically from disk, without recomputing
+        let s = stored_server(&dir);
+        let b = s.handle_line(&grid).unwrap();
+        assert_eq!(a, b, "restarted server must replay identical bytes");
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        let st = stats.get("store").unwrap();
+        assert!(
+            st.get("result_hits").and_then(Value::as_u64) >= Some(1),
+            "grid must be answered from the disk tier: {st:?}"
+        );
+        // the in-memory result cache never saw this key before the hit
+        let rc = stats.get("cache").unwrap();
+        assert_eq!(rc.get("hits").and_then(Value::as_u64), Some(0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_serves_traces_to_a_restarted_process_without_recapture() {
+        let dir = tmp_store("traces");
+        // server A captures seed 12's sensors once (un-persisted result)
+        let run = r#"{"kind":"run","duration_s":0.05,"dvs_sample_hz":300.0,"seed":12}"#;
+        let a = {
+            let s = stored_server(&dir);
+            s.handle_line(run).unwrap()
+        };
+        // server B misses the (capacity-bounded, now empty) memory tiers
+        // but finds the trace on disk: same answer, zero re-sensing, and
+        // the mapped entry accounts its bytes under disk, not memory
+        let s = stored_server(&dir);
+        let b = s.handle_line(run).unwrap();
+        assert_eq!(a, b);
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        let st = stats.get("store").unwrap();
+        assert_eq!(st.get("trace_hits").and_then(Value::as_u64), Some(1), "{st:?}");
+        let tc = stats.get("trace_cache").unwrap();
+        assert!(tc.get("disk_bytes").and_then(Value::as_f64).unwrap() > 0.0, "{tc:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -49,7 +49,7 @@ use crate::coordinator::governor::QosSpec;
 use crate::coordinator::pipeline::{Mission, MissionConfig, MissionReport};
 use crate::coordinator::workload::{Workload, WorkloadConfig, WorkloadReport};
 use crate::obs::{Metrics, ReqKind};
-use crate::sensors::trace::SensorTrace;
+use crate::sensors::trace::{SensorTrace, TraceHandle};
 use crate::soc::power::RailTelemetry;
 
 /// Why the pool could not serve a batch.
@@ -83,10 +83,11 @@ impl std::error::Error for PoolError {}
 /// One unit of queued work: a single-tenant mission or a multi-tenant
 /// workload, each an independent simulation on its own SoC, optionally
 /// replaying shared sensor traces (`Arc`-shared across workers — see
-/// `crate::sensors::trace`).
+/// `crate::sensors::trace`). A [`TraceHandle::Mapped`] slot replays
+/// straight off an mmapped store file instead of an in-memory capture.
 enum Work {
-    Mission(MissionConfig, Option<Arc<SensorTrace>>),
-    Workload(WorkloadConfig, Vec<Option<Arc<SensorTrace>>>),
+    Mission(MissionConfig, Option<TraceHandle>),
+    Workload(WorkloadConfig, Vec<Option<TraceHandle>>),
 }
 
 impl Work {
@@ -400,19 +401,25 @@ impl WorkerPool {
         cfgs: &[MissionConfig],
         traces: Vec<Option<Arc<SensorTrace>>>,
     ) -> Result<(Vec<MissionReport>, f64), PoolError> {
-        self.run_configs_as(ReqKind::Run, soc, cfgs, traces)
+        self.run_configs_as(
+            ReqKind::Run,
+            soc,
+            cfgs,
+            traces.into_iter().map(|t| t.map(TraceHandle::Mem)).collect(),
+        )
     }
 
-    /// [`WorkerPool::run_configs_traced`] metered under an explicit
-    /// request kind — the serve layer passes `Fleet`/`Grid` here so the
-    /// metrics registry attributes queue wait and execution latency to
-    /// the request kind the client actually sent.
+    /// [`WorkerPool::run_configs_traced`] over [`TraceHandle`] slots (both
+    /// trace tiers), metered under an explicit request kind — the serve
+    /// layer passes `Fleet`/`Grid` here so the metrics registry attributes
+    /// queue wait and execution latency to the request kind the client
+    /// actually sent.
     pub fn run_configs_as(
         &self,
         kind: ReqKind,
         soc: &SocConfig,
         cfgs: &[MissionConfig],
-        traces: Vec<Option<Arc<SensorTrace>>>,
+        traces: Vec<Option<TraceHandle>>,
     ) -> Result<(Vec<MissionReport>, f64), PoolError> {
         assert_eq!(cfgs.len(), traces.len(), "one trace slot per config");
         let work = cfgs
@@ -450,17 +457,26 @@ impl WorkerPool {
         cfgs: &[WorkloadConfig],
         traces: Vec<Vec<Option<Arc<SensorTrace>>>>,
     ) -> Result<(Vec<WorkloadReport>, f64), PoolError> {
-        self.run_workloads_as(ReqKind::Workload, soc, cfgs, traces)
+        self.run_workloads_as(
+            ReqKind::Workload,
+            soc,
+            cfgs,
+            traces
+                .into_iter()
+                .map(|v| v.into_iter().map(|t| t.map(TraceHandle::Mem)).collect())
+                .collect(),
+        )
     }
 
-    /// [`WorkerPool::run_workloads_traced`] metered under an explicit
-    /// request kind (see [`WorkerPool::run_configs_as`]).
+    /// [`WorkerPool::run_workloads_traced`] over [`TraceHandle`] slots,
+    /// metered under an explicit request kind (see
+    /// [`WorkerPool::run_configs_as`]).
     pub fn run_workloads_as(
         &self,
         kind: ReqKind,
         soc: &SocConfig,
         cfgs: &[WorkloadConfig],
-        traces: Vec<Vec<Option<Arc<SensorTrace>>>>,
+        traces: Vec<Vec<Option<TraceHandle>>>,
     ) -> Result<(Vec<WorkloadReport>, f64), PoolError> {
         assert_eq!(cfgs.len(), traces.len(), "one trace vector per config");
         let work = cfgs
@@ -571,14 +587,14 @@ fn worker_loop(shared: &Shared, id: usize) {
         let rail = Arc::clone(&stat.rail);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             match job.work {
-                Work::Mission(cfg, trace) => Mission::with_trace(job.soc, cfg, trace)
+                Work::Mission(cfg, trace) => Mission::with_handle(job.soc, cfg, trace)
                     .and_then(|mut m| {
                         m.soc.power.attach_telemetry(Arc::clone(&rail));
                         m.run()
                     })
                     .map(WorkOutput::Mission)
                     .map_err(|e| format!("{e:#}")),
-                Work::Workload(cfg, traces) => Workload::with_traces(job.soc, cfg, traces)
+                Work::Workload(cfg, traces) => Workload::with_handles(job.soc, cfg, traces)
                     .and_then(|mut w| {
                         w.soc.power.attach_telemetry(Arc::clone(&rail));
                         w.run()

@@ -42,7 +42,14 @@
 //! (the `Fixed` governor, default QoS) and an error — not silent
 //! acceptance — if they send the v2 fields. v3 adds the observability
 //! surface: the `timeline` and `metrics` request kinds; clients pinning
-//! v1/v2 get an error — not silent acceptance — if they send them.
+//! v1/v2 get an error — not silent acceptance — if they send them. v4
+//! adds the persistent-store surface: a boolean `persist` hint on
+//! `run`/`fleet`/`grid`/`workload` (write the response through to the
+//! disk-backed result store immediately instead of waiting for LRU
+//! eviction; a no-op when the server has no `--store`), and a `store`
+//! section in the `stats`/`metrics` responses (disk-tier hit/miss/save/
+//! quarantine counters and on-disk footprint, `null` without a store).
+//! Clients pinning v1–v3 get an error if they send `persist`.
 //!
 //! Responses are `{"ok":true,"kind":...,"report":...}` or
 //! `{"ok":false,"error":...}`. Unknown request keys are rejected rather
@@ -67,20 +74,22 @@ pub const MAX_CELLS: usize = 4096;
 /// older (still-supported) version with a `v` field; anything outside
 /// [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`] is rejected with an
 /// error response.
-pub const PROTOCOL_VERSION: u64 = 3;
+pub const PROTOCOL_VERSION: u64 = 4;
 
 /// The oldest protocol version still accepted. Older pins keep their old
-/// semantics: the v2-only fields (`governor`, `qos`) and the v3-only kinds
-/// (`timeline`, `metrics`) are rejected rather than silently honored.
+/// semantics: the v2-only fields (`governor`, `qos`), the v3-only kinds
+/// (`timeline`, `metrics`) and the v4-only `persist` hint are rejected
+/// rather than silently honored.
 pub const MIN_PROTOCOL_VERSION: u64 = 1;
 
 /// A parsed, validated request.
 #[derive(Debug, Clone)]
 pub enum Request {
-    /// One mission, fully resolved.
-    Run { cfg: MissionConfig },
+    /// One mission, fully resolved. `persist` (v4) writes the response
+    /// through to the disk-backed result store immediately.
+    Run { cfg: MissionConfig, persist: bool },
     /// N reseeded missions, fully resolved in seed order.
-    Fleet { cfgs: Vec<MissionConfig> },
+    Fleet { cfgs: Vec<MissionConfig>, persist: bool },
     /// A config grid; the server supplies `SocConfig` and thread count.
     Grid {
         base: MissionConfig,
@@ -91,9 +100,10 @@ pub enum Request {
         idle_gates: Vec<Option<f64>>,
         governors: Vec<GovernorKind>,
         tenants: Vec<usize>,
+        persist: bool,
     },
     /// One SoC, N tenant streams, fully resolved.
-    Workload { cfg: WorkloadConfig },
+    Workload { cfg: WorkloadConfig, persist: bool },
     /// One traced run (mission or workload); answers with the Chrome-trace
     /// timeline JSON instead of a report. Protocol v3.
     Timeline { target: TimelineTarget },
@@ -131,6 +141,23 @@ const MISSION_KEYS: &[&str] = &[
     "telemetry_dt_s",
     "artifacts_dir",
 ];
+
+/// Resolve the v4 `persist` hint: absent means false; present requires a
+/// v4 pin (or no pin) and a boolean — an older client sending it gets an
+/// error, never a silently-dropped hint.
+fn persist_flag(v: &Value, ver: u64) -> crate::Result<bool> {
+    match v.get("persist") {
+        None => Ok(false),
+        Some(x) => {
+            anyhow::ensure!(
+                ver >= 4,
+                "\"persist\" requires protocol v4 (request pinned v{ver})"
+            );
+            x.as_bool()
+                .ok_or_else(|| anyhow::anyhow!("\"persist\" must be a boolean"))
+        }
+    }
+}
 
 /// Reject v2-only fields on requests pinned to an older protocol version
 /// — a v1 client must get its v1 semantics or an error, never a silent
@@ -180,13 +207,15 @@ impl Request {
             .ok_or_else(|| anyhow::anyhow!("request needs a string \"kind\""))?;
         match kind {
             "run" => {
-                check_keys(obj, MISSION_KEYS)?;
+                let mut allowed = MISSION_KEYS.to_vec();
+                allowed.push("persist");
+                check_keys(obj, &allowed)?;
                 require_v2(v, ver, &["governor"])?;
-                Ok(Request::Run { cfg: mission_from(v)? })
+                Ok(Request::Run { cfg: mission_from(v)?, persist: persist_flag(v, ver)? })
             }
             "fleet" => {
                 let mut allowed = MISSION_KEYS.to_vec();
-                allowed.push("missions");
+                allowed.extend(["missions", "persist"]);
                 check_keys(obj, &allowed)?;
                 require_v2(v, ver, &["governor"])?;
                 let missions = match v.get("missions") {
@@ -204,11 +233,11 @@ impl Request {
                 let cfgs = (0..missions)
                     .map(|i| base.with_seed(base_seed.wrapping_add(i as u64)))
                     .collect();
-                Ok(Request::Fleet { cfgs })
+                Ok(Request::Fleet { cfgs, persist: persist_flag(v, ver)? })
             }
             "grid" => {
                 let mut allowed = MISSION_KEYS.to_vec();
-                allowed.push("tenants");
+                allowed.extend(["tenants", "persist"]);
                 check_keys(obj, &allowed)?;
                 require_v2(v, ver, &["governor"])?;
                 let seeds = u64_axis(v, "seed")?;
@@ -257,14 +286,18 @@ impl Request {
                     idle_gates,
                     governors,
                     tenants,
+                    persist: persist_flag(v, ver)?,
                 })
             }
             "workload" => {
                 let mut allowed = MISSION_KEYS.to_vec();
-                allowed.extend(["tenants", "streams", "qos"]);
+                allowed.extend(["tenants", "streams", "qos", "persist"]);
                 check_keys(obj, &allowed)?;
                 require_v2(v, ver, &["governor", "qos"])?;
-                Ok(Request::Workload { cfg: workload_from(v, ver)? })
+                Ok(Request::Workload {
+                    cfg: workload_from(v, ver)?,
+                    persist: persist_flag(v, ver)?,
+                })
             }
             "timeline" => {
                 anyhow::ensure!(
@@ -734,13 +767,14 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Run { cfg } => {
+            Request::Run { cfg, persist } => {
                 assert_eq!(cfg.seed, 11);
                 assert_eq!(cfg.duration_s, 0.5);
                 assert_eq!(cfg.power.vdd, Some(0.6));
                 assert_eq!(cfg.power.governor, GovernorKind::Fixed);
                 assert!(matches!(cfg.scene, SceneKind::Noise { seed: 11, .. }));
                 assert!(!cfg.print_live);
+                assert!(!persist, "persist defaults to false");
             }
             other => panic!("wrong kind: {other:?}"),
         }
@@ -752,7 +786,7 @@ mod tests {
             Request::from_json(r#"{"kind":"fleet","missions":3,"seed":100,"duration_s":0.1}"#)
                 .unwrap();
         match r {
-            Request::Fleet { cfgs } => {
+            Request::Fleet { cfgs, .. } => {
                 let seeds: Vec<u64> = cfgs.iter().map(|c| c.seed).collect();
                 assert_eq!(seeds, vec![100, 101, 102]);
             }
@@ -777,7 +811,9 @@ mod tests {
                 governors,
                 tenants,
                 base,
+                persist,
             } => {
+                assert!(!persist, "persist defaults to false");
                 assert_eq!(seeds, vec![1, 2]);
                 assert_eq!(vdds, vec![0.6, 0.8]);
                 assert_eq!(scenes.len(), 1);
@@ -800,7 +836,7 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Run { cfg } => assert_eq!(cfg.power.governor, GovernorKind::Ladder),
+            Request::Run { cfg, .. } => assert_eq!(cfg.power.governor, GovernorKind::Ladder),
             other => panic!("wrong kind: {other:?}"),
         }
         // grid: governor names become an axis
@@ -821,7 +857,7 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Workload { cfg } => {
+            Request::Workload { cfg, .. } => {
                 assert_eq!(cfg.power.governor, GovernorKind::DeadlineAware);
                 assert_eq!(cfg.streams[0].qos.priority, 0);
                 assert_eq!(cfg.streams[0].qos.deadline_ns, 20_000_000);
@@ -837,7 +873,7 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Workload { cfg } => {
+            Request::Workload { cfg, .. } => {
                 assert_eq!(cfg.streams[0].qos.priority, 1);
                 assert_eq!(cfg.streams[1].qos.priority, 0);
             }
@@ -899,7 +935,7 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Workload { cfg } => {
+            Request::Workload { cfg, .. } => {
                 assert_eq!(cfg.tenants(), 3);
                 let seeds: Vec<u64> = cfg.streams.iter().map(|s| s.seed).collect();
                 assert_eq!(seeds, vec![10, 11, 12]);
@@ -913,7 +949,7 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Workload { cfg } => {
+            Request::Workload { cfg, .. } => {
                 assert_eq!(cfg.tenants(), 2);
                 assert_eq!(cfg.streams[0].seed, 7);
                 assert_eq!(cfg.streams[1].seed, 99);
@@ -944,13 +980,15 @@ mod tests {
         assert!(Request::from_json(r#"{"kind":"stats","v":1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"stats","v":2}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"stats","v":3}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"stats","v":4}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":1,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":2,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":3,"duration_s":0.1}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"run","v":4,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"shutdown","v":1}"#).is_ok());
         // unknown versions are rejected, whatever the kind
         for line in [
-            r#"{"kind":"stats","v":4}"#,
+            r#"{"kind":"stats","v":5}"#,
             r#"{"kind":"run","v":0}"#,
             r#"{"kind":"workload","v":99,"tenants":2}"#,
             r#"{"kind":"stats","v":"1"}"#,
@@ -1013,6 +1051,49 @@ mod tests {
             let err = Request::from_json(line).unwrap_err().to_string();
             assert!(err.contains("requires protocol v3"), "{line} -> {err}");
         }
+    }
+
+    #[test]
+    fn persist_hint_requires_v4() {
+        // explicit v4 pin and the unpinned (current) form both parse
+        for line in [
+            r#"{"kind":"run","v":4,"duration_s":0.1,"persist":true}"#,
+            r#"{"kind":"run","duration_s":0.1,"persist":true}"#,
+        ] {
+            match Request::from_json(line).unwrap() {
+                Request::Run { persist, .. } => assert!(persist, "{line}"),
+                other => panic!("wrong kind: {other:?}"),
+            }
+        }
+        match Request::from_json(r#"{"kind":"grid","duration_s":0.1,"persist":true}"#).unwrap() {
+            Request::Grid { persist, .. } => assert!(persist),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        match Request::from_json(
+            r#"{"kind":"workload","tenants":2,"duration_s":0.1,"persist":false}"#,
+        )
+        .unwrap()
+        {
+            Request::Workload { persist, .. } => assert!(!persist),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // older pins get an error, not a silently-dropped hint
+        for line in [
+            r#"{"kind":"run","v":1,"duration_s":0.1,"persist":true}"#,
+            r#"{"kind":"fleet","v":2,"duration_s":0.1,"persist":true}"#,
+            r#"{"kind":"grid","v":3,"duration_s":0.1,"persist":true}"#,
+            r#"{"kind":"workload","v":3,"tenants":1,"persist":false}"#,
+        ] {
+            let err = Request::from_json(line).unwrap_err().to_string();
+            assert!(err.contains("requires protocol v4"), "{line} -> {err}");
+        }
+        // non-boolean persist and persist on kinds without a cached report
+        assert!(Request::from_json(r#"{"kind":"run","persist":1}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"stats","persist":true}"#).is_err());
+        assert!(Request::from_json(
+            r#"{"kind":"timeline","duration_s":0.1,"persist":true}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,537 @@
+//! The on-disk binary formats of the persistent store (DESIGN.md §13).
+//!
+//! Two file kinds live in a store directory:
+//!
+//! * **`.ktr` — a serialized [`SensorTrace`]**: a fixed header carrying
+//!   the [`TraceKey`] (both as typed fields and as the canonical string
+//!   the cache discipline compares by), the section counts, and one
+//!   length-mixed FNV-1a-64 checksum per section, followed by three flat
+//!   little-endian sections (window offsets, events, frames) laid out so
+//!   a reader can slice any window straight out of an mmap without
+//!   deserializing the rest of the file;
+//! * **`.krr` — a cached serve result**: the canonical request key and
+//!   the exact response payload bytes, each with its own checksum.
+//!
+//! Every multi-byte field is little-endian. The formats are versioned by
+//! [`FORMAT_VERSION`]; readers reject any other version (the store layer
+//! then quarantines the file). Integrity is end-to-end: a reader verifies
+//! magic, version, total length and every section checksum *before*
+//! trusting a single record, so any single-byte corruption or truncation
+//! surfaces as a clean error, never as different events
+//! (`tests/integration_store.rs` pins this property).
+//!
+//! ```text
+//! .ktr layout                          .krr layout
+//! ┌────────────────────────────┐       ┌───────────────────────────┐
+//! │ 0   magic  "KRKNTRC\n"  8B │       │ 0   magic "KRKNRES\n"  8B │
+//! │ 8   format version      4B │       │ 8   format version     4B │
+//! │ 12  header length H     4B │       │ 12  key length         4B │
+//! │ 16  header payload      HB │       │ 16  payload length     4B │
+//! │      key fields + counts   │       │ 20  key checksum       8B │
+//! │      + section checksums   │       │ 28  payload checksum   8B │
+//! │      + canonical string    │       │ 36  key bytes             │
+//! │ 16+H header checksum    8B │       │ ..  payload bytes         │
+//! │ ..  offsets (n_w+1)×u64    │       └───────────────────────────┘
+//! │ ..  events   n_e × 16B     │
+//! │ ..  frames   n_f × 24B     │
+//! └────────────────────────────┘
+//! ```
+
+use crate::event::{Event, Polarity};
+use crate::sensors::scene::SceneKind;
+use crate::sensors::trace::{FrameRecord, SensorTrace, TraceKey};
+use crate::util::{fnv1a_len, Fnv1a};
+
+pub const TRACE_MAGIC: [u8; 8] = *b"KRKNTRC\n";
+pub const RESULT_MAGIC: [u8; 8] = *b"KRKNRES\n";
+/// Bumped on any layout change; readers reject every other version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Bytes per serialized event record: t_ns u64 | x u16 | y u16 |
+/// polarity u8 | 3 zero pad.
+pub const EVENT_RECORD: usize = 16;
+/// Bytes per serialized frame record: t_ns u64 | steer f64 bits |
+/// collision u8 | 7 zero pad.
+pub const FRAME_RECORD: usize = 24;
+
+// ---------------------------------------------------------------- write
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+}
+
+/// `(tag, a, b)` encoding of a [`SceneKind`] — the header keeps the key
+/// reconstructible without parsing the canonical string.
+fn encode_scene(scene: &SceneKind) -> (u8, u64, u64) {
+    match *scene {
+        SceneKind::RotatingBar { omega_rad_s } => (0, omega_rad_s.to_bits(), 0),
+        SceneKind::TranslatingEdge { vel_per_s } => (1, vel_per_s.to_bits(), 0),
+        SceneKind::ExpandingRing { rate_per_s } => (2, rate_per_s.to_bits(), 0),
+        SceneKind::Corridor { speed_per_s, seed } => (3, speed_per_s.to_bits(), seed),
+        SceneKind::Noise { density, seed } => (4, density.to_bits(), seed),
+    }
+}
+
+fn decode_scene(tag: u8, a: u64, b: u64) -> crate::Result<SceneKind> {
+    Ok(match tag {
+        0 => SceneKind::RotatingBar { omega_rad_s: f64::from_bits(a) },
+        1 => SceneKind::TranslatingEdge { vel_per_s: f64::from_bits(a) },
+        2 => SceneKind::ExpandingRing { rate_per_s: f64::from_bits(a) },
+        3 => SceneKind::Corridor { speed_per_s: f64::from_bits(a), seed: b },
+        4 => SceneKind::Noise { density: f64::from_bits(a), seed: b },
+        other => anyhow::bail!("unknown scene tag {other}"),
+    })
+}
+
+fn encode_event(out: &mut Vec<u8>, e: &Event) {
+    out.extend_from_slice(&e.t_ns.to_le_bytes());
+    out.extend_from_slice(&e.x.to_le_bytes());
+    out.extend_from_slice(&e.y.to_le_bytes());
+    out.push(match e.polarity {
+        Polarity::On => 1,
+        Polarity::Off => 0,
+    });
+    out.extend_from_slice(&[0u8; 3]);
+}
+
+/// Decode one [`EVENT_RECORD`]-sized record. Callers only reach this
+/// after the events-section checksum verified, so the polarity byte is
+/// trusted to be 0/1 (any flip was already rejected at open).
+#[inline]
+pub fn decode_event(rec: &[u8]) -> Event {
+    Event {
+        t_ns: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
+        x: u16::from_le_bytes(rec[8..10].try_into().unwrap()),
+        y: u16::from_le_bytes(rec[10..12].try_into().unwrap()),
+        polarity: if rec[12] != 0 { Polarity::On } else { Polarity::Off },
+    }
+}
+
+fn encode_frame(out: &mut Vec<u8>, f: &FrameRecord) {
+    out.extend_from_slice(&f.t_ns.to_le_bytes());
+    out.extend_from_slice(&f.steer.to_bits().to_le_bytes());
+    out.push(f.collision as u8);
+    out.extend_from_slice(&[0u8; 7]);
+}
+
+fn decode_frame(rec: &[u8]) -> FrameRecord {
+    FrameRecord {
+        t_ns: u64::from_le_bytes(rec[0..8].try_into().unwrap()),
+        steer: f64::from_bits(u64::from_le_bytes(rec[8..16].try_into().unwrap())),
+        collision: rec[16] != 0,
+    }
+}
+
+/// Serialize a captured trace into the `.ktr` byte layout.
+pub fn encode_trace(t: &SensorTrace) -> Vec<u8> {
+    let (events, offsets) = t.raw_events();
+    let frames = t.frames();
+    let canonical = t.key.canonical();
+
+    // sections first: their checksums go into the header
+    let mut off_sec = Vec::with_capacity(offsets.len() * 8);
+    for &o in offsets {
+        off_sec.extend_from_slice(&(o as u64).to_le_bytes());
+    }
+    let mut ev_sec = Vec::with_capacity(events.len() * EVENT_RECORD);
+    for e in events {
+        encode_event(&mut ev_sec, e);
+    }
+    let mut fr_sec = Vec::with_capacity(frames.len() * FRAME_RECORD);
+    for f in frames {
+        encode_frame(&mut fr_sec, f);
+    }
+
+    let (tag, a, b) = encode_scene(&t.key.scene);
+    let mut h = Writer { buf: Vec::with_capacity(160 + canonical.len()) };
+    h.u8(tag);
+    h.u64(a);
+    h.u64(b);
+    h.u64(t.key.seed);
+    h.u64(t.key.width as u64);
+    h.u64(t.key.height as u64);
+    h.f64(t.key.dvs_sample_hz);
+    h.f64(t.key.frame_fps);
+    h.f64(t.key.duration_s);
+    h.f64(t.key.window_ms);
+    h.u64(t.frame_w as u64);
+    h.u64(t.frame_h as u64);
+    h.u64(offsets.len() as u64 - 1); // n_windows
+    h.u64(events.len() as u64);
+    h.u64(frames.len() as u64);
+    h.u64(fnv1a_len(&off_sec));
+    h.u64(fnv1a_len(&ev_sec));
+    h.u64(fnv1a_len(&fr_sec));
+    h.u32(canonical.len() as u32);
+    h.buf.extend_from_slice(canonical.as_bytes());
+    let header = h.buf;
+
+    let mut out =
+        Vec::with_capacity(24 + header.len() + off_sec.len() + ev_sec.len() + fr_sec.len());
+    out.extend_from_slice(&TRACE_MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(&header);
+    out.extend_from_slice(&fnv1a_len(&header).to_le_bytes());
+    out.extend_from_slice(&off_sec);
+    out.extend_from_slice(&ev_sec);
+    out.extend_from_slice(&fr_sec);
+    out
+}
+
+// ----------------------------------------------------------------- read
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.at + n <= self.buf.len(),
+            "truncated header: wanted {n} bytes at {}, have {}",
+            self.at,
+            self.buf.len()
+        );
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+}
+
+/// The fully verified view of a `.ktr` byte buffer: small sections
+/// (offsets, frames) decoded, the event section left in place as a byte
+/// range so the caller (an mmap) can decode windows on demand.
+#[derive(Debug)]
+pub struct TraceFileView {
+    pub key: TraceKey,
+    pub frame_w: usize,
+    pub frame_h: usize,
+    /// `offsets[w]..offsets[w+1]` indexes window `w`'s events.
+    pub offsets: Vec<u64>,
+    pub frames: Vec<FrameRecord>,
+    /// Byte offset of the events section inside the file.
+    pub events_at: usize,
+    pub n_events: usize,
+}
+
+/// Parse and *fully verify* a `.ktr` buffer: magic, version, exact total
+/// length, header checksum, and all three section checksums. Only then
+/// are the small sections decoded. Every failure is a descriptive error;
+/// no partially-verified data escapes.
+pub fn parse_trace(bytes: &[u8]) -> crate::Result<TraceFileView> {
+    anyhow::ensure!(bytes.len() >= 24, "file too short for a trace header ({}B)", bytes.len());
+    anyhow::ensure!(bytes[..8] == TRACE_MAGIC, "bad magic: not a kraken trace file");
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    anyhow::ensure!(
+        version == FORMAT_VERSION,
+        "trace format v{version} (reader speaks v{FORMAT_VERSION})"
+    );
+    let hlen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        hlen.checked_add(24).is_some_and(|n| n <= bytes.len()),
+        "truncated: header length {hlen} exceeds file"
+    );
+    let header = &bytes[16..16 + hlen];
+    let stored_hck = u64::from_le_bytes(bytes[16 + hlen..24 + hlen].try_into().unwrap());
+    anyhow::ensure!(fnv1a_len(header) == stored_hck, "header checksum mismatch");
+
+    let mut r = Reader { buf: header, at: 0 };
+    let tag = r.u8()?;
+    let (a, b) = (r.u64()?, r.u64()?);
+    let seed = r.u64()?;
+    let width = r.u64()? as usize;
+    let height = r.u64()? as usize;
+    let dvs_sample_hz = r.f64()?;
+    let frame_fps = r.f64()?;
+    let duration_s = r.f64()?;
+    let window_ms = r.f64()?;
+    let frame_w = r.u64()? as usize;
+    let frame_h = r.u64()? as usize;
+    let n_windows = r.u64()?;
+    let n_events = r.u64()?;
+    let n_frames = r.u64()?;
+    let offsets_ck = r.u64()?;
+    let events_ck = r.u64()?;
+    let frames_ck = r.u64()?;
+    let clen = r.u32()? as usize;
+    let canonical = std::str::from_utf8(r.take(clen)?)
+        .map_err(|_| anyhow::anyhow!("canonical key is not UTF-8"))?;
+    anyhow::ensure!(r.at == header.len(), "header has trailing bytes");
+
+    let key = TraceKey {
+        scene: decode_scene(tag, a, b)?,
+        seed,
+        width,
+        height,
+        dvs_sample_hz,
+        frame_fps,
+        duration_s,
+        window_ms,
+    };
+    // writer/reader skew guard: the typed fields must reproduce the
+    // stored canonical string bit for bit
+    anyhow::ensure!(
+        key.canonical() == canonical,
+        "header fields do not reproduce the stored canonical key:\n  fields: {}\n  stored: {canonical}",
+        key.canonical()
+    );
+
+    // exact-length check — catches truncation and appended garbage alike
+    let off_len = (n_windows.checked_add(1))
+        .and_then(|n| n.checked_mul(8))
+        .ok_or_else(|| anyhow::anyhow!("window count overflows"))?;
+    let ev_len = n_events
+        .checked_mul(EVENT_RECORD as u64)
+        .ok_or_else(|| anyhow::anyhow!("event count overflows"))?;
+    let fr_len = n_frames
+        .checked_mul(FRAME_RECORD as u64)
+        .ok_or_else(|| anyhow::anyhow!("frame count overflows"))?;
+    let body = 24u64 + hlen as u64;
+    let want = body
+        .checked_add(off_len)
+        .and_then(|n| n.checked_add(ev_len))
+        .and_then(|n| n.checked_add(fr_len))
+        .ok_or_else(|| anyhow::anyhow!("section sizes overflow"))?;
+    anyhow::ensure!(
+        want == bytes.len() as u64,
+        "file is {}B, sections say {want}B (truncated or padded)",
+        bytes.len()
+    );
+
+    let off_at = body as usize;
+    let ev_at = off_at + off_len as usize;
+    let fr_at = ev_at + ev_len as usize;
+    let off_sec = &bytes[off_at..ev_at];
+    let ev_sec = &bytes[ev_at..fr_at];
+    let fr_sec = &bytes[fr_at..];
+    anyhow::ensure!(fnv1a_len(off_sec) == offsets_ck, "offsets section checksum mismatch");
+    anyhow::ensure!(fnv1a_len(ev_sec) == events_ck, "events section checksum mismatch");
+    anyhow::ensure!(fnv1a_len(fr_sec) == frames_ck, "frames section checksum mismatch");
+
+    let offsets: Vec<u64> = off_sec
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    // structural invariants of the offset index (post-checksum, so these
+    // only fire on writer bugs — but a reader must never index past the
+    // event section on *any* input)
+    anyhow::ensure!(
+        offsets.windows(2).all(|p| p[0] <= p[1]),
+        "offsets are not monotonically nondecreasing"
+    );
+    anyhow::ensure!(offsets.first() == Some(&0), "offsets must start at 0");
+    anyhow::ensure!(
+        offsets.last() == Some(&n_events),
+        "offsets must end at the event count"
+    );
+    let frames: Vec<FrameRecord> = fr_sec.chunks_exact(FRAME_RECORD).map(decode_frame).collect();
+
+    Ok(TraceFileView {
+        key,
+        frame_w,
+        frame_h,
+        offsets,
+        frames,
+        events_at: ev_at,
+        n_events: n_events as usize,
+    })
+}
+
+// --------------------------------------------------------------- result
+
+/// Serialize a cached serve result (`canonical key -> payload JSON`).
+pub fn encode_result(key: &str, payload: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(36 + key.len() + payload.len());
+    out.extend_from_slice(&RESULT_MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(key.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a_len(key.as_bytes()).to_le_bytes());
+    out.extend_from_slice(&fnv1a_len(payload.as_bytes()).to_le_bytes());
+    out.extend_from_slice(key.as_bytes());
+    out.extend_from_slice(payload.as_bytes());
+    out
+}
+
+/// Parse and verify a `.krr` buffer into `(key, payload)`.
+pub fn parse_result(bytes: &[u8]) -> crate::Result<(String, String)> {
+    anyhow::ensure!(bytes.len() >= 36, "file too short for a result header ({}B)", bytes.len());
+    anyhow::ensure!(bytes[..8] == RESULT_MAGIC, "bad magic: not a kraken result file");
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    anyhow::ensure!(
+        version == FORMAT_VERSION,
+        "result format v{version} (reader speaks v{FORMAT_VERSION})"
+    );
+    let klen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let plen = u32::from_le_bytes(bytes[16..20].try_into().unwrap()) as usize;
+    let key_ck = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    let payload_ck = u64::from_le_bytes(bytes[28..36].try_into().unwrap());
+    let want = 36usize
+        .checked_add(klen)
+        .and_then(|n| n.checked_add(plen))
+        .ok_or_else(|| anyhow::anyhow!("result lengths overflow"))?;
+    anyhow::ensure!(
+        want == bytes.len(),
+        "file is {}B, lengths say {want}B (truncated or padded)",
+        bytes.len()
+    );
+    let key = &bytes[36..36 + klen];
+    let payload = &bytes[36 + klen..];
+    anyhow::ensure!(fnv1a_len(key) == key_ck, "result key checksum mismatch");
+    anyhow::ensure!(fnv1a_len(payload) == payload_ck, "result payload checksum mismatch");
+    let key = std::str::from_utf8(key)
+        .map_err(|_| anyhow::anyhow!("result key is not UTF-8"))?
+        .to_string();
+    let payload = std::str::from_utf8(payload)
+        .map_err(|_| anyhow::anyhow!("result payload is not UTF-8"))?
+        .to_string();
+    Ok((key, payload))
+}
+
+/// Verify a trace checksum set incrementally from a stream of chunks —
+/// the `kraken trace verify` path reuses [`parse_trace`] on a full map,
+/// so this helper only backs unit tests of the streaming hasher against
+/// section checksums.
+pub fn section_checksum(chunks: &[&[u8]]) -> u64 {
+    let mut h = Fnv1a::new();
+    for c in chunks {
+        h.update(c);
+    }
+    h.digest_len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensors::{DVS_HEIGHT, DVS_WIDTH};
+
+    fn key(seed: u64) -> TraceKey {
+        TraceKey {
+            scene: SceneKind::Corridor { speed_per_s: 0.5, seed },
+            seed,
+            width: DVS_WIDTH,
+            height: DVS_HEIGHT,
+            dvs_sample_hz: 300.0,
+            frame_fps: 30.0,
+            duration_s: 0.1,
+            window_ms: 10.0,
+        }
+    }
+
+    #[test]
+    fn trace_roundtrips_bit_exactly() {
+        let t = SensorTrace::capture(&key(9));
+        let bytes = encode_trace(&t);
+        let v = parse_trace(&bytes).unwrap();
+        assert_eq!(v.key.canonical(), t.key.canonical());
+        assert_eq!((v.frame_w, v.frame_h), (t.frame_w, t.frame_h));
+        assert_eq!(v.n_events, t.len());
+        assert_eq!(v.frames.len(), t.frames().len());
+        for (a, b) in v.frames.iter().zip(t.frames()) {
+            assert_eq!(a.t_ns, b.t_ns);
+            assert_eq!(a.steer.to_bits(), b.steer.to_bits());
+            assert_eq!(a.collision, b.collision);
+        }
+        // every window decodes to the exact captured events
+        for w in 0..t.n_windows() {
+            let (lo, hi) = (v.offsets[w as usize] as usize, v.offsets[w as usize + 1] as usize);
+            let sec = &bytes[v.events_at..];
+            let decoded: Vec<Event> = (lo..hi)
+                .map(|i| decode_event(&sec[i * EVENT_RECORD..(i + 1) * EVENT_RECORD]))
+                .collect();
+            assert_eq!(decoded, t.window(w), "window {w}");
+        }
+    }
+
+    #[test]
+    fn every_scene_kind_roundtrips_through_the_header() {
+        let scenes = [
+            SceneKind::RotatingBar { omega_rad_s: 6.25 },
+            SceneKind::TranslatingEdge { vel_per_s: 0.4 },
+            SceneKind::ExpandingRing { rate_per_s: 0.5 },
+            SceneKind::Corridor { speed_per_s: 0.55, seed: 17 },
+            SceneKind::Noise { density: 0.05, seed: 3 },
+        ];
+        for scene in scenes {
+            let (tag, a, b) = encode_scene(&scene);
+            let back = decode_scene(tag, a, b).unwrap();
+            assert_eq!(format!("{back:?}"), format!("{scene:?}"));
+        }
+        assert!(decode_scene(200, 0, 0).is_err());
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_cleanly() {
+        let t = SensorTrace::capture(&key(2));
+        let mut bytes = encode_trace(&t);
+        bytes[8] = 99;
+        let err = parse_trace(&bytes).unwrap_err().to_string();
+        assert!(err.contains("format v99"), "got: {err}");
+    }
+
+    #[test]
+    fn truncation_is_rejected_cleanly() {
+        let t = SensorTrace::capture(&key(2));
+        let bytes = encode_trace(&t);
+        for cut in [0, 7, 23, bytes.len() / 2, bytes.len() - 1] {
+            assert!(parse_trace(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        // appended garbage is also a length error
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(parse_trace(&padded).is_err());
+    }
+
+    #[test]
+    fn result_roundtrips_and_rejects_corruption() {
+        let bytes = encode_result("grid|Soc|cfg", "{\"ok\":true}");
+        let (k, p) = parse_result(&bytes).unwrap();
+        assert_eq!(k, "grid|Soc|cfg");
+        assert_eq!(p, "{\"ok\":true}");
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(parse_result(&bad).is_err(), "flip at byte {i} must fail");
+        }
+        assert!(parse_result(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn streaming_section_checksum_matches_the_stored_one() {
+        let t = SensorTrace::capture(&key(4));
+        let bytes = encode_trace(&t);
+        let v = parse_trace(&bytes).unwrap();
+        let ev = &bytes[v.events_at..v.events_at + v.n_events * EVENT_RECORD];
+        let mid = ev.len() / 2;
+        assert_eq!(section_checksum(&[&ev[..mid], &ev[mid..]]), fnv1a_len(ev));
+    }
+}

@@ -1,0 +1,215 @@
+//! Read-only file mapping with a plain `pread` fallback.
+//!
+//! The offline build carries no `libc` crate, but `std` already links the
+//! platform C library, so on unix the two syscalls we need are declared
+//! directly. Everything else goes through the fallback: the whole file is
+//! read into an owned buffer via positional reads (`pread`), which keeps
+//! the reader semantics identical — [`Mapping`] always dereferences to
+//! the complete file bytes.
+//!
+//! Setting `KRAKEN_STORE_NO_MMAP=1` forces the fallback on unix too
+//! (exercised by tests so both paths stay bit-identical).
+
+use std::fs::File;
+use std::io;
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+enum Inner {
+    /// A live `mmap(2)` region (unmapped on drop).
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+    /// The pread fallback: the file's bytes, owned.
+    Owned(Vec<u8>),
+}
+
+/// The complete bytes of one file, either mapped or owned. Immutable and
+/// shareable across threads (the mapping is `PROT_READ`/`MAP_PRIVATE`).
+pub struct Mapping {
+    inner: Inner,
+}
+
+// SAFETY: the region is read-only and private; no interior mutation.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map (or read) `path` in full.
+    pub fn open(path: &Path) -> io::Result<Mapping> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "file exceeds address space"))?;
+        if len == 0 {
+            // zero-length mmap is EINVAL; an empty buffer is equivalent
+            return Ok(Mapping { inner: Inner::Owned(Vec::new()) });
+        }
+        #[cfg(unix)]
+        if std::env::var_os("KRAKEN_STORE_NO_MMAP").is_none() {
+            if let Some(m) = Self::try_mmap(&file, len) {
+                return Ok(m);
+            }
+        }
+        Ok(Mapping { inner: Inner::Owned(Self::pread_all(&file, len)?) })
+    }
+
+    #[cfg(unix)]
+    fn try_mmap(file: &File, len: usize) -> Option<Mapping> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            return None; // fall back to pread
+        }
+        Some(Mapping { inner: Inner::Mapped { ptr: ptr as *const u8, len } })
+    }
+
+    fn pread_all(file: &File, len: usize) -> io::Result<Vec<u8>> {
+        let mut buf = vec![0u8; len];
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            let mut at = 0usize;
+            while at < len {
+                let n = file.read_at(&mut buf[at..], at as u64)?;
+                if n == 0 {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "file shrank while reading",
+                    ));
+                }
+                at += n;
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::Read;
+            let mut f = file;
+            f.read_exact(&mut buf)?;
+        }
+        Ok(buf)
+    }
+
+    /// Is this a real mapping (vs. the owned-buffer fallback)?
+    pub fn is_mmap(&self) -> bool {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Mapped { .. } => true,
+            Inner::Owned(_) => false,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Mapped { ptr, len } =>
+            // SAFETY: ptr/len come from a successful PROT_READ mmap that
+            // lives until drop; the region is never written.
+            unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Inner::Owned(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::ops::Deref for Mapping {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Inner::Mapped { ptr, len } = self.inner {
+            // SAFETY: exactly the region mmap returned, unmapped once.
+            unsafe {
+                sys::munmap(ptr as *mut std::os::raw::c_void, len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mapping({} B, {})", self.len(), if self.is_mmap() { "mmap" } else { "owned" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(tag: &str, data: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("kraken-mmap-{tag}-{}", std::process::id()));
+        let mut f = File::create(&p).unwrap();
+        f.write_all(data).unwrap();
+        p
+    }
+
+    #[test]
+    fn mapping_hands_back_the_exact_file_bytes() {
+        let data: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        let p = tmpfile("exact", &data);
+        let m = Mapping::open(&p).unwrap();
+        assert_eq!(&m[..], &data[..]);
+        #[cfg(unix)]
+        assert!(m.is_mmap());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn pread_fallback_is_bit_identical_to_the_mapping() {
+        let data: Vec<u8> = (0..4096u32).flat_map(|i| (i * 7).to_le_bytes()).collect();
+        let p = tmpfile("fallback", &data);
+        let mapped = Mapping::open(&p).unwrap();
+        let owned = Mapping { inner: Inner::Owned(Mapping::pread_all(&File::open(&p).unwrap(), data.len()).unwrap()) };
+        assert!(!owned.is_mmap());
+        assert_eq!(&mapped[..], &owned[..]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_to_an_empty_slice() {
+        let p = tmpfile("empty", b"");
+        let m = Mapping::open(&p).unwrap();
+        assert!(m.is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,619 @@
+//! The persistent trace/result store (DESIGN.md §13).
+//!
+//! A store is one flat directory holding two kinds of content-addressed
+//! files — serialized [`SensorTrace`]s (`t_<fnv64>.ktr`) and cached serve
+//! result payloads (`r_<fnv64>.krr`) — named by the FNV-1a-64 of their
+//! canonical key string. It is the disk tier under both serve caches and
+//! the corpus `kraken trace record|ls|gc|verify` manages: once a trace
+//! key has been captured into a store directory it is never captured
+//! again (*capture-once-ever*), whether the consumer is a fresh serve
+//! process, a fleet run, or a bench.
+//!
+//! Trust discipline:
+//!
+//! * every load fully verifies magic, version, total length and all
+//!   section checksums *before* any record is decoded;
+//! * a file that fails verification is **quarantined** — renamed to
+//!   `<name>.quarantined` so it stops matching lookups but stays on disk
+//!   for post-mortem — and the lookup degrades to a miss (re-capture),
+//!   never to wrong data;
+//! * hash collisions degrade the same way: the full canonical key stored
+//!   in the file must equal the requested one, else the load is a miss;
+//! * writes are atomic (temp file + rename), so a crashed writer leaves
+//!   either the old file or a stray `.tmp` — never a half-written entry
+//!   that could verify.
+//!
+//! Replay from a store file is bit-identical to live sensing — the same
+//! contract in-memory [`SensorTrace`] replay pins — across process
+//! boundaries (`tests/integration_store.rs`).
+
+pub mod format;
+pub mod mmap;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::event::Event;
+use crate::sensors::trace::{FrameRecord, SensorTrace, TraceKey};
+use crate::util::fnv1a;
+
+use format::{decode_event, TraceFileView, EVENT_RECORD};
+use mmap::Mapping;
+
+/// A verified, opened `.ktr` file: small sections (window offsets, frame
+/// records) decoded eagerly, the event section left in the mapping so
+/// replay decodes one window at a time straight off the file — opening a
+/// corpus never deserializes it wholesale.
+#[derive(Debug)]
+pub struct MappedTrace {
+    key: TraceKey,
+    frame_w: usize,
+    frame_h: usize,
+    offsets: Vec<u64>,
+    frames: Vec<FrameRecord>,
+    map: Mapping,
+    events_at: usize,
+    n_events: usize,
+    path: PathBuf,
+}
+
+impl MappedTrace {
+    /// Map `path` and verify it end to end (see [`format::parse_trace`]).
+    pub fn open(path: &Path) -> crate::Result<MappedTrace> {
+        let map = Mapping::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+        let TraceFileView { key, frame_w, frame_h, offsets, frames, events_at, n_events } =
+            format::parse_trace(&map)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Ok(MappedTrace {
+            key,
+            frame_w,
+            frame_h,
+            offsets,
+            frames,
+            map,
+            events_at,
+            n_events,
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn key(&self) -> &TraceKey {
+        &self.key
+    }
+
+    pub fn frame_dims(&self) -> (usize, usize) {
+        (self.frame_w, self.frame_h)
+    }
+
+    pub fn n_windows(&self) -> u64 {
+        (self.offsets.len() - 1) as u64
+    }
+
+    /// Total events across all windows.
+    pub fn len(&self) -> usize {
+        self.n_events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_events == 0
+    }
+
+    pub fn frames(&self) -> &[FrameRecord] {
+        &self.frames
+    }
+
+    /// Decode window `w`'s events off the mapping into `out` (cleared
+    /// first) — the replay staging path; nothing else is touched.
+    pub fn window_into(&self, w: u64, out: &mut Vec<Event>) {
+        let (lo, hi) = (self.offsets[w as usize] as usize, self.offsets[w as usize + 1] as usize);
+        let sec = &self.map[self.events_at + lo * EVENT_RECORD..self.events_at + hi * EVENT_RECORD];
+        out.clear();
+        out.extend(sec.chunks_exact(EVENT_RECORD).map(decode_event));
+    }
+
+    /// Fully decode into an in-memory [`SensorTrace`] (the cache
+    /// promote path — one pass over the mapping).
+    pub fn to_sensor_trace(&self) -> SensorTrace {
+        let sec = &self.map[self.events_at..self.events_at + self.n_events * EVENT_RECORD];
+        let events: Vec<Event> = sec.chunks_exact(EVENT_RECORD).map(decode_event).collect();
+        let offsets: Vec<usize> = self.offsets.iter().map(|&o| o as usize).collect();
+        SensorTrace::from_parts(
+            self.key.clone(),
+            self.frame_w,
+            self.frame_h,
+            events,
+            offsets,
+            self.frames.clone(),
+        )
+    }
+
+    /// On-disk size — what the disk tier reports per entry.
+    pub fn file_bytes(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Resident size: just the decoded index/frames, not the events.
+    pub fn resident_bytes(&self) -> usize {
+        self.offsets.len() * 8 + self.frames.len() * std::mem::size_of::<FrameRecord>()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn is_mmap(&self) -> bool {
+        self.map.is_mmap()
+    }
+}
+
+/// Monotonic store counters, surfaced in serve `stats`/`metrics`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreCounters {
+    pub trace_hits: u64,
+    pub trace_misses: u64,
+    pub result_hits: u64,
+    pub result_misses: u64,
+    pub saves: u64,
+    pub quarantined: u64,
+}
+
+/// On-disk footprint of a store directory.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DiskUsage {
+    pub trace_files: u64,
+    pub trace_bytes: u64,
+    pub result_files: u64,
+    pub result_bytes: u64,
+    pub quarantined_files: u64,
+}
+
+/// One `kraken trace ls` row.
+#[derive(Debug)]
+pub struct TraceEntry {
+    pub path: PathBuf,
+    pub canonical: String,
+    pub n_windows: u64,
+    pub n_events: usize,
+    pub n_frames: usize,
+    pub bytes: u64,
+}
+
+/// What `gc` did.
+#[derive(Debug, Default)]
+pub struct GcReport {
+    pub removed_files: u64,
+    pub removed_bytes: u64,
+    pub kept_files: u64,
+    pub kept_bytes: u64,
+}
+
+/// What `verify` found.
+#[derive(Debug, Default)]
+pub struct VerifyReport {
+    pub ok: u64,
+    pub quarantined: u64,
+}
+
+/// One store directory: the disk tier under the serve caches and the
+/// replay corpus of the CLI/fleet paths.
+#[derive(Debug)]
+pub struct Store {
+    dir: PathBuf,
+    trace_hits: AtomicU64,
+    trace_misses: AtomicU64,
+    result_hits: AtomicU64,
+    result_misses: AtomicU64,
+    saves: AtomicU64,
+    quarantined: AtomicU64,
+}
+
+impl Store {
+    /// Open (creating if needed) a store directory.
+    pub fn open(dir: impl Into<PathBuf>) -> crate::Result<Store> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("create store dir {}: {e}", dir.display()))?;
+        Ok(Store {
+            dir,
+            trace_hits: AtomicU64::new(0),
+            trace_misses: AtomicU64::new(0),
+            result_hits: AtomicU64::new(0),
+            result_misses: AtomicU64::new(0),
+            saves: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn trace_path(&self, key: &TraceKey) -> PathBuf {
+        self.dir.join(format!("t_{:016x}.ktr", key.fnv64()))
+    }
+
+    fn result_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("r_{:016x}.krr", fnv1a(key.as_bytes())))
+    }
+
+    /// Persist a captured trace if its key isn't on disk yet. Returns
+    /// whether a file was written — `false` means the corpus already had
+    /// it (the capture-once-ever fast path).
+    pub fn save_trace(&self, trace: &SensorTrace) -> crate::Result<bool> {
+        let path = self.trace_path(&trace.key);
+        if path.exists() {
+            return Ok(false);
+        }
+        self.write_atomic(&path, &format::encode_trace(trace))?;
+        self.saves.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Look a trace up by key: `None` on absence, hash collision, or a
+    /// corrupt/truncated/version-skewed file (which is quarantined). The
+    /// returned mapping is verified end to end.
+    pub fn load_trace(&self, want: &TraceKey) -> Option<Arc<MappedTrace>> {
+        let path = self.trace_path(want);
+        if !path.exists() {
+            self.trace_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        match MappedTrace::open(&path) {
+            Ok(m) => {
+                if m.key().canonical() != want.canonical() {
+                    // fnv64 collision: a different key owns this slot —
+                    // degrade to a miss, never to the wrong stream
+                    self.trace_misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                self.trace_hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::new(m))
+            }
+            Err(e) => {
+                self.quarantine(&path, &e);
+                self.trace_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Persist a cached serve result payload under its canonical key.
+    /// Overwrites (results are tiny and the newest payload wins — for a
+    /// deterministic request the bytes are identical anyway).
+    pub fn save_result(&self, key: &str, payload: &str) -> crate::Result<()> {
+        self.write_atomic(&self.result_path(key), &format::encode_result(key, payload))?;
+        self.saves.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Look a result payload up by canonical key — same degradation
+    /// rules as [`Store::load_trace`].
+    pub fn load_result(&self, key: &str) -> Option<String> {
+        let path = self.result_path(key);
+        if !path.exists() {
+            self.result_misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let parsed = Mapping::open(&path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))
+            .and_then(|m| format::parse_result(&m));
+        match parsed {
+            Ok((stored_key, payload)) => {
+                if stored_key != key {
+                    self.result_misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                self.result_hits.fetch_add(1, Ordering::Relaxed);
+                Some(payload)
+            }
+            Err(e) => {
+                self.quarantine(&path, &e);
+                self.result_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> crate::Result<()> {
+        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+        fs::write(&tmp, bytes)
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", tmp.display()))?;
+        fs::rename(&tmp, path).map_err(|e| {
+            fs::remove_file(&tmp).ok();
+            anyhow::anyhow!("rename into {}: {e}", path.display())
+        })
+    }
+
+    /// Rename a failed-verification file to `<name>.quarantined` so it
+    /// stops matching lookups but survives for post-mortem.
+    fn quarantine(&self, path: &Path, err: &anyhow::Error) {
+        let mut q = path.as_os_str().to_os_string();
+        q.push(".quarantined");
+        let renamed = fs::rename(path, &q).is_ok();
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "store: quarantined {}{}: {err:#}",
+            path.display(),
+            if renamed { "" } else { " (rename failed; left in place)" }
+        );
+    }
+
+    /// Snapshot of the in-process counters.
+    pub fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            trace_hits: self.trace_hits.load(Ordering::Relaxed),
+            trace_misses: self.trace_misses.load(Ordering::Relaxed),
+            result_hits: self.result_hits.load(Ordering::Relaxed),
+            result_misses: self.result_misses.load(Ordering::Relaxed),
+            saves: self.saves.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+        }
+    }
+
+    fn entries(&self) -> crate::Result<Vec<(PathBuf, u64, std::time::SystemTime)>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(&self.dir)
+            .map_err(|e| anyhow::anyhow!("read store dir {}: {e}", self.dir.display()))?
+        {
+            let entry = entry?;
+            let md = entry.metadata()?;
+            if md.is_file() {
+                out.push((
+                    entry.path(),
+                    md.len(),
+                    md.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH),
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Scan the directory's footprint (cheap: one readdir, no opens).
+    pub fn disk_usage(&self) -> DiskUsage {
+        let mut u = DiskUsage::default();
+        for (path, len, _) in self.entries().unwrap_or_default() {
+            match path.extension().and_then(|e| e.to_str()) {
+                Some("ktr") => {
+                    u.trace_files += 1;
+                    u.trace_bytes += len;
+                }
+                Some("krr") => {
+                    u.result_files += 1;
+                    u.result_bytes += len;
+                }
+                Some("quarantined") => u.quarantined_files += 1,
+                _ => {}
+            }
+        }
+        u
+    }
+
+    /// Open + verify every trace file, newest first — the `kraken trace
+    /// ls` listing. Unverifiable files are reported, not quarantined
+    /// (ls stays read-only).
+    pub fn ls(&self) -> crate::Result<(Vec<TraceEntry>, Vec<(PathBuf, String)>)> {
+        let mut good = Vec::new();
+        let mut bad = Vec::new();
+        let mut files = self.entries()?;
+        files.sort_by(|a, b| b.2.cmp(&a.2).then_with(|| a.0.cmp(&b.0)));
+        for (path, len, _) in files {
+            if path.extension().and_then(|e| e.to_str()) != Some("ktr") {
+                continue;
+            }
+            match MappedTrace::open(&path) {
+                Ok(m) => good.push(TraceEntry {
+                    canonical: m.key().canonical(),
+                    n_windows: m.n_windows(),
+                    n_events: m.len(),
+                    n_frames: m.frames().len(),
+                    bytes: len,
+                    path,
+                }),
+                Err(e) => bad.push((path, format!("{e:#}"))),
+            }
+        }
+        Ok((good, bad))
+    }
+
+    /// Shrink the corpus to at most `max_bytes` of trace+result files by
+    /// deleting the oldest (mtime) first; stray `.quarantined` and
+    /// `.tmp*` files are always removed.
+    pub fn gc(&self, max_bytes: u64) -> crate::Result<GcReport> {
+        let mut report = GcReport::default();
+        let mut live: Vec<(PathBuf, u64, std::time::SystemTime)> = Vec::new();
+        for (path, len, mtime) in self.entries()? {
+            match path.extension().and_then(|e| e.to_str()) {
+                Some("ktr") | Some("krr") => live.push((path, len, mtime)),
+                _ => {
+                    // quarantined / tmp debris goes unconditionally
+                    if fs::remove_file(&path).is_ok() {
+                        report.removed_files += 1;
+                        report.removed_bytes += len;
+                    }
+                }
+            }
+        }
+        live.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+        let mut total: u64 = live.iter().map(|(_, len, _)| len).sum();
+        for (path, len, _) in &live {
+            if total <= max_bytes {
+                report.kept_files += 1;
+                report.kept_bytes += len;
+                continue;
+            }
+            match fs::remove_file(path) {
+                Ok(()) => {
+                    report.removed_files += 1;
+                    report.removed_bytes += len;
+                    total -= len;
+                }
+                Err(_) => {
+                    report.kept_files += 1;
+                    report.kept_bytes += len;
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Open + verify every store file, quarantining the ones that fail —
+    /// `kraken trace verify`.
+    pub fn verify(&self) -> crate::Result<VerifyReport> {
+        let mut report = VerifyReport::default();
+        for (path, _, _) in self.entries()? {
+            let res = match path.extension().and_then(|e| e.to_str()) {
+                Some("ktr") => MappedTrace::open(&path).map(|_| ()),
+                Some("krr") => Mapping::open(&path)
+                    .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))
+                    .and_then(|m| format::parse_result(&m).map(|_| ())),
+                _ => continue,
+            };
+            match res {
+                Ok(()) => report.ok += 1,
+                Err(e) => {
+                    self.quarantine(&path, &e);
+                    report.quarantined += 1;
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensors::scene::SceneKind;
+    use crate::sensors::{DVS_HEIGHT, DVS_WIDTH};
+
+    fn key(seed: u64) -> TraceKey {
+        TraceKey {
+            scene: SceneKind::Corridor { speed_per_s: 0.5, seed },
+            seed,
+            width: DVS_WIDTH,
+            height: DVS_HEIGHT,
+            dvs_sample_hz: 300.0,
+            frame_fps: 30.0,
+            duration_s: 0.1,
+            window_ms: 10.0,
+        }
+    }
+
+    fn tmpstore(tag: &str) -> Store {
+        let dir = std::env::temp_dir()
+            .join(format!("kraken-store-{tag}-{}", std::process::id()));
+        fs::remove_dir_all(&dir).ok();
+        Store::open(dir).unwrap()
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_capture_once_ever() {
+        let store = tmpstore("roundtrip");
+        let t = SensorTrace::capture(&key(1));
+        assert!(store.save_trace(&t).unwrap(), "first save writes");
+        assert!(!store.save_trace(&t).unwrap(), "second save is a no-op");
+        let m = store.load_trace(&key(1)).expect("hit");
+        assert_eq!(m.key().canonical(), t.key.canonical());
+        assert_eq!(m.n_windows(), t.n_windows());
+        assert_eq!(m.len(), t.len());
+        let mut buf = Vec::new();
+        for w in 0..t.n_windows() {
+            m.window_into(w, &mut buf);
+            assert_eq!(buf.as_slice(), t.window(w), "window {w}");
+        }
+        // full decode matches too
+        let decoded = m.to_sensor_trace();
+        assert_eq!(decoded.len(), t.len());
+        for w in 0..t.n_windows() {
+            assert_eq!(decoded.window(w), t.window(w));
+        }
+        let c = store.counters();
+        assert_eq!((c.trace_hits, c.trace_misses, c.saves), (1, 0, 1));
+        fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn absent_key_is_a_counted_miss() {
+        let store = tmpstore("miss");
+        assert!(store.load_trace(&key(42)).is_none());
+        assert_eq!(store.counters().trace_misses, 1);
+        fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn corrupt_trace_is_quarantined_and_degrades_to_a_miss() {
+        let store = tmpstore("corrupt");
+        let t = SensorTrace::capture(&key(2));
+        store.save_trace(&t).unwrap();
+        let path = store.trace_path(&key(2));
+        // flip one byte deep in the events section
+        let mut bytes = fs::read(&path).unwrap();
+        let at = bytes.len() - 9;
+        bytes[at] ^= 0x10;
+        fs::write(&path, &bytes).unwrap();
+        assert!(store.load_trace(&key(2)).is_none(), "corrupt file must miss");
+        let c = store.counters();
+        assert_eq!(c.quarantined, 1);
+        assert!(!path.exists(), "file was renamed away");
+        assert!(
+            path.with_extension("ktr.quarantined").exists(),
+            "quarantined copy kept for post-mortem"
+        );
+        // the slot is free again: a re-save + load works
+        store.save_trace(&t).unwrap();
+        assert!(store.load_trace(&key(2)).is_some());
+        fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn result_roundtrip_with_counters() {
+        let store = tmpstore("results");
+        assert!(store.load_result("grid|x").is_none());
+        store.save_result("grid|x", "{\"cells\":3}").unwrap();
+        assert_eq!(store.load_result("grid|x").as_deref(), Some("{\"cells\":3}"));
+        let c = store.counters();
+        assert_eq!((c.result_hits, c.result_misses), (1, 1));
+        fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn ls_gc_verify_manage_the_corpus() {
+        let store = tmpstore("mgmt");
+        for s in 1..=3u64 {
+            store.save_trace(&SensorTrace::capture(&key(s))).unwrap();
+        }
+        store.save_result("k", "v").unwrap();
+        let (entries, bad) = store.ls().unwrap();
+        assert_eq!(entries.len(), 3);
+        assert!(bad.is_empty());
+        assert!(entries.iter().all(|e| e.canonical.starts_with("trace|")));
+        let v = store.verify().unwrap();
+        assert_eq!((v.ok, v.quarantined), (4, 0));
+        // corrupt one file: verify quarantines it
+        let p = store.trace_path(&key(2));
+        let mut bytes = fs::read(&p).unwrap();
+        bytes[30] ^= 0xff;
+        fs::write(&p, &bytes).unwrap();
+        let v = store.verify().unwrap();
+        assert_eq!((v.ok, v.quarantined), (3, 1));
+        // gc to zero: everything (incl. the quarantined file) goes
+        let gc = store.gc(0).unwrap();
+        assert!(gc.removed_files >= 4);
+        assert_eq!(store.disk_usage().trace_files, 0);
+        fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn disk_usage_accounts_by_kind() {
+        let store = tmpstore("usage");
+        store.save_trace(&SensorTrace::capture(&key(1))).unwrap();
+        store.save_result("k", "v").unwrap();
+        let u = store.disk_usage();
+        assert_eq!((u.trace_files, u.result_files), (1, 1));
+        assert!(u.trace_bytes > u.result_bytes);
+        fs::remove_dir_all(store.dir()).ok();
+    }
+}

@@ -20,10 +20,94 @@ pub use rng::Rng;
 /// 64-bit FNV-1a — the canonical-key hash shared by the serve result
 /// cache, the sensor-trace cache and the trace keys themselves.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.digest()
+}
+
+/// Streaming 64-bit FNV-1a. Feeding bytes through any sequence of
+/// [`Fnv1a::update`] calls digests to the same value as one
+/// [`fnv1a`] call over the concatenation, so the trace-store writer can
+/// checksum sections as it serializes them without staging a copy.
+#[derive(Debug, Clone)]
+pub struct Fnv1a {
+    h: u64,
+    len: u64,
+}
+
+impl Fnv1a {
+    const BASIS: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Fnv1a {
+        Fnv1a { h: Self::BASIS, len: 0 }
     }
-    h
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(Self::PRIME);
+        }
+        self.len += bytes.len() as u64;
+    }
+
+    /// Plain FNV-1a of everything fed so far.
+    pub fn digest(&self) -> u64 {
+        self.h
+    }
+
+    /// Length-mixed digest: the stream length (LE bytes) is folded in as
+    /// a trailing block. Plain FNV-1a maps every prefix of zero bytes to
+    /// a hash reachable from a shorter input, so a truncated-then-padded
+    /// section could collide with its original; mixing the length in
+    /// breaks that class. This is the on-disk section checksum of the
+    /// trace/result store (`crate::store`).
+    pub fn digest_len(&self) -> u64 {
+        let mut tail = Fnv1a { h: self.h, len: 0 };
+        tail.update(&self.len.to_le_bytes());
+        tail.h
+    }
+}
+
+/// One-shot length-mixed FNV-1a-64 (see [`Fnv1a::digest_len`]).
+pub fn fnv1a_len(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.digest_len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_pins_known_vectors() {
+        // reference vectors from the FNV test suite (Noll's fnv64a)
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_digest_matches_one_shot_for_any_chunking() {
+        let data = b"kraken sensor trace section checksum";
+        for split in 0..data.len() {
+            let mut h = Fnv1a::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.digest(), fnv1a(data), "split at {split}");
+            assert_eq!(h.digest_len(), fnv1a_len(data), "split at {split}");
+        }
+    }
+
+    #[test]
+    fn length_mixing_separates_padded_prefixes() {
+        // plain FNV-1a of "" extended by the length block must differ from
+        // the plain digest, and two streams that collide by zero-padding
+        // tricks separate once length is mixed in
+        assert_eq!(fnv1a_len(b""), fnv1a(&0u64.to_le_bytes()));
+        assert_ne!(fnv1a_len(b""), fnv1a(b""));
+        assert_ne!(fnv1a_len(b"\0"), fnv1a_len(b"\0\0"));
+    }
 }

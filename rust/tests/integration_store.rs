@@ -1,0 +1,245 @@
+//! Persistent-store acceptance contract (DESIGN.md §13):
+//!
+//! * **Mapped replay identity** — a mission replaying a trace mapped from
+//!   a store file is bit-identical to the same config sensing live
+//!   (whole-report fingerprints, wall time scrubbed).
+//! * **Cross-process identity** — a corpus recorded by a *child process*
+//!   (`kraken trace record`) replays bit-identically in this process:
+//!   the on-disk format, not shared memory, carries the determinism.
+//! * **Integrity** — any single-byte corruption and any truncation of a
+//!   trace file yields a clean integrity error at open time, never a
+//!   plausible-but-wrong event stream; the store quarantines such files
+//!   instead of serving them.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use kraken::config::SocConfig;
+use kraken::coordinator::{Mission, MissionConfig, MissionReport};
+use kraken::sensors::scene::SceneKind;
+use kraken::sensors::trace::{SensorTrace, TraceHandle};
+use kraken::store::{MappedTrace, Store};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "kraken-store-it-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cfg_for(seed: u64) -> MissionConfig {
+    MissionConfig {
+        duration_s: 0.3,
+        dvs_sample_hz: 400.0,
+        // the CLI's scene resolution, so `kraken trace record` children
+        // produce exactly this key
+        scene: SceneKind::parse("corridor", seed).unwrap(),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// The whole report through shortest-roundtrip Debug (bit-faithful for
+/// every float), with the host-dependent wall clock scrubbed.
+fn scrub(mut r: MissionReport) -> String {
+    r.wall_s = 0.0;
+    format!("{r:?}")
+}
+
+#[test]
+fn mapped_replay_is_bit_identical_to_live_sensing() {
+    let dir = tmp_dir("mapped");
+    let store = Store::open(&dir).unwrap();
+    for kind in [
+        SceneKind::Corridor { speed_per_s: 0.5, seed: 17 },
+        SceneKind::ExpandingRing { rate_per_s: 0.5 },
+        SceneKind::Noise { density: 0.05, seed: 17 },
+    ] {
+        let cfg = MissionConfig { scene: kind, ..cfg_for(17) };
+        let live = Mission::new(SocConfig::kraken(), cfg.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let key = cfg.trace_key();
+        assert!(store.save_trace(&SensorTrace::capture(&key)).unwrap());
+        let mapped = store.load_trace(&key).expect("just saved");
+        assert_eq!(mapped.key().canonical(), key.canonical());
+        let replay =
+            Mission::with_handle(SocConfig::kraken(), cfg, Some(TraceHandle::Mapped(mapped)))
+                .unwrap()
+                .run()
+                .unwrap();
+        assert_eq!(scrub(live), scrub(replay), "{kind:?}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corpus_recorded_by_a_child_process_replays_bit_identically() {
+    let dir = tmp_dir("child");
+    let cfg = cfg_for(21);
+    let out = Command::new(env!("CARGO_BIN_EXE_kraken"))
+        .args([
+            "trace",
+            "record",
+            "--store",
+            dir.to_str().unwrap(),
+            "--seed",
+            "21",
+            "--count",
+            "1",
+            "--duration",
+            "0.3",
+            "--scene",
+            "corridor",
+            "--dvs-sample-hz",
+            "400",
+        ])
+        .output()
+        .expect("spawn kraken trace record");
+    assert!(
+        out.status.success(),
+        "trace record failed: {}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // a fresh Store in *this* process replays the child's bytes
+    let store = Store::open(&dir).unwrap();
+    let mapped = store
+        .load_trace(&cfg.trace_key())
+        .expect("child-recorded trace must resolve for the same config");
+    let live = Mission::new(SocConfig::kraken(), cfg.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+    let replay =
+        Mission::with_handle(SocConfig::kraken(), cfg, Some(TraceHandle::Mapped(mapped)))
+            .unwrap()
+            .run()
+            .unwrap();
+    assert_eq!(
+        scrub(live),
+        scrub(replay),
+        "cross-process mapped replay diverged from live sensing"
+    );
+
+    // re-recording the same corpus is a no-op (capture-once-ever), and
+    // the child's verify pass agrees the corpus is intact
+    let again = Command::new(env!("CARGO_BIN_EXE_kraken"))
+        .args(["trace", "record", "--store", dir.to_str().unwrap(), "--seed", "21"])
+        .args(["--count", "1", "--duration", "0.3", "--scene", "corridor"])
+        .args(["--dvs-sample-hz", "400"])
+        .output()
+        .unwrap();
+    assert!(again.status.success());
+    let text = String::from_utf8_lossy(&again.stdout);
+    assert!(text.contains("0 new"), "second record must not re-capture: {text}");
+    let verify = Command::new(env!("CARGO_BIN_EXE_kraken"))
+        .args(["trace", "verify", "--store", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(verify.status.success());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn every_single_byte_corruption_and_truncation_is_a_clean_integrity_error() {
+    let dir = tmp_dir("corrupt");
+    let store = Store::open(&dir).unwrap();
+    // a small corpus keeps the exhaustive flip loop fast
+    let key = MissionConfig {
+        duration_s: 0.05,
+        dvs_sample_hz: 300.0,
+        ..cfg_for(5)
+    }
+    .trace_key();
+    store.save_trace(&SensorTrace::capture(&key)).unwrap();
+    let path = store.trace_path(&key);
+    let good = std::fs::read(&path).unwrap();
+    assert!(MappedTrace::open(&path).is_ok(), "pristine file must verify");
+
+    let scratch = dir.join("scratch.ktr");
+    // every single-byte flip must fail integrity verification at open —
+    // magic and version bytes by their own checks, everything else by a
+    // section checksum. No flip may ever open into an event stream.
+    for i in 0..good.len() {
+        let mut bad = good.clone();
+        bad[i] ^= 0x01;
+        std::fs::write(&scratch, &bad).unwrap();
+        assert!(
+            MappedTrace::open(&scratch).is_err(),
+            "flipping byte {i}/{} opened cleanly",
+            good.len()
+        );
+    }
+    // every truncation must fail too (bounds checks before checksums)
+    let mut t = 0;
+    while t < good.len() {
+        std::fs::write(&scratch, &good[..t]).unwrap();
+        assert!(
+            MappedTrace::open(&scratch).is_err(),
+            "truncation to {t}/{} opened cleanly",
+            good.len()
+        );
+        t += 7; // prime stride: covers every section boundary class
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_store_files_are_quarantined_not_served() {
+    let dir = tmp_dir("quarantine");
+    let store = Store::open(&dir).unwrap();
+    let key = MissionConfig {
+        duration_s: 0.05,
+        dvs_sample_hz: 300.0,
+        ..cfg_for(6)
+    }
+    .trace_key();
+    store.save_trace(&SensorTrace::capture(&key)).unwrap();
+    let path = store.trace_path(&key);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    // the load degrades to a miss; the file is renamed *.quarantined so
+    // it is never probed (or served) again
+    assert!(store.load_trace(&key).is_none(), "corrupt trace must not load");
+    assert!(!path.exists(), "corrupt file must be renamed away");
+    assert_eq!(store.counters().quarantined, 1);
+    assert_eq!(store.disk_usage().quarantined_files, 1);
+
+    // a re-capture heals the corpus in place
+    assert!(store.save_trace(&SensorTrace::capture(&key)).unwrap());
+    let healed = store.load_trace(&key).expect("healed trace loads");
+    assert_eq!(healed.key().canonical(), key.canonical());
+    drop(healed);
+    // gc sweeps the quarantined debris, keeps the live corpus
+    let r = store.gc(u64::MAX).unwrap();
+    assert_eq!(r.removed_files, 1, "quarantined file should be swept");
+    assert_eq!(store.disk_usage().quarantined_files, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The result tier round-trips across Store instances (the serve caches'
+/// disk tier is pinned end-to-end in `serve::tests`; this pins the raw
+/// store API the caches ride on).
+#[test]
+fn result_payloads_survive_a_fresh_store_instance() {
+    let dir = tmp_dir("results");
+    {
+        let store = Store::open(&dir).unwrap();
+        store.save_result("grid|SocConfig{..}|[cfg]", "{\"ok\":true}").unwrap();
+    }
+    let store = Store::open(&dir).unwrap();
+    assert_eq!(
+        store.load_result("grid|SocConfig{..}|[cfg]").as_deref(),
+        Some("{\"ok\":true}")
+    );
+    assert!(store.load_result("some|other|key").is_none());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

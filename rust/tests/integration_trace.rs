@@ -245,7 +245,7 @@ fn serve_trace_cache_spans_requests_and_reports_stats() {
     let tc = stats.get("trace_cache").unwrap();
     assert_eq!(tc.get("hits").and_then(Value::as_u64), Some(1));
     assert_eq!(tc.get("entries").and_then(Value::as_u64), Some(1));
-    assert!(tc.get("bytes").and_then(Value::as_f64).unwrap() > 0.0);
+    assert!(tc.get("mem_bytes").and_then(Value::as_f64).unwrap() > 0.0);
 }
 
 #[test]
