@@ -19,6 +19,7 @@ use kraken::coordinator::{
     run_configs, run_fleet, run_workload_configs, FleetConfig, GovernorKind, Mission,
     MissionConfig, MissionReport, PowerConfig, Workload, WorkloadConfig,
 };
+use kraken::faults::FaultPlan;
 use kraken::metrics::fmt_power;
 use kraken::sensors::scene::SceneKind;
 use kraken::serve::grid::{run_grid, run_workload_grid, GridConfig};
@@ -264,6 +265,52 @@ fn main() {
     }
     let spot = Workload::new(soc.clone(), spot).unwrap().run().unwrap();
     print!("{}", spot.summary());
+
+    log.section("resilience sweep (fault x governor): brownout at a 0.6 V rail, fixed vs deadline");
+    // the graceful-degradation acceptance comparison (DESIGN.md §14): a
+    // brownout stalls every dispatch while the rail sits below 0.7 V. A
+    // fixed 0.6 V rail is hostage for the whole mission; the deadline
+    // governor sees the negative slack and escapes by raising the rail,
+    // so its degradation score (vs its own fault-free twin) must come in
+    // strictly below the fixed rail's.
+    let mut res_base = mission_cfg(2.0, false, 0.6, corridor);
+    res_base.frame_fps = 10.0;
+    res_base.faults = FaultPlan::parse("brownout:0.7").unwrap();
+    let mut scores: Vec<(GovernorKind, f64)> = Vec::new();
+    for gov in [GovernorKind::Fixed, GovernorKind::DeadlineAware] {
+        let mut c = WorkloadConfig::fan_out(&res_base, 4);
+        c.power.governor = gov;
+        let r = Workload::new(soc.clone(), c).unwrap().run().unwrap();
+        let res = r.resilience.as_ref().expect("faulted workload must score");
+        println!(
+            "{:<9} brownout: score {:>9.2}  stalls {:>6}  browned epochs {:>4}  \
+             degraded tenants {}/4  rail moves {}",
+            gov.label(),
+            res.total_score(),
+            res.counters.brownout_stalls,
+            res.counters.brownout_epochs,
+            res.degraded_tenants(),
+            r.rail_transitions,
+        );
+        log.note(
+            &format!("brownout degradation score, {}", gov.label()),
+            res.total_score(),
+        );
+        scores.push((gov, res.total_score()));
+    }
+    assert!(
+        scores[0].1 > 0.0,
+        "a brownout under a 0.6 V fixed rail must degrade the workload"
+    );
+    assert!(
+        scores[1].1 < scores[0].1,
+        "deadline governor must degrade less than fixed under brownout: {:?}",
+        scores
+    );
+    println!(
+        "deadline governor absorbs the brownout: {:.1}% of the fixed-rail degradation",
+        100.0 * scores[1].1 / scores[0].1.max(1e-12)
+    );
 
     log.section("fleet scaling: 8 corridor missions, distinct seeds, 4 threads");
     let fc = FleetConfig {

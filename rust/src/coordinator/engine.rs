@@ -22,6 +22,7 @@
 
 use crate::config::{Precision, PulpCfg, SocConfig};
 use crate::cutie::CutieEngine;
+use crate::faults::FaultSession;
 use crate::nets::{self, CnnDesc, SnnDesc};
 use crate::pulp::kernels as pulp_kernels;
 use crate::sne::SneEngine;
@@ -72,6 +73,20 @@ impl EngineSlot {
     }
 }
 
+/// What one fault-gated dispatch attempt did (DESIGN.md §14): whether the
+/// job was accepted, how many transient-failure retries it burned, how long
+/// the fault gate stalled its start, and whether a rejection came from the
+/// fault (exhausted retries) rather than backpressure.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DispatchOutcome {
+    pub accepted: bool,
+    pub retries: u32,
+    pub stall_ns: u64,
+    /// True when the fault gate dropped the job before the engine ever saw
+    /// it (transient failure exhausted [`crate::faults::RETRY_MAX`]).
+    pub faulted_drop: bool,
+}
+
 /// Uniform engine contract the coordinator schedules against.
 pub trait Engine {
     /// Power domain this engine lives in.
@@ -98,6 +113,35 @@ pub trait Engine {
     ) -> bool {
         let domain = self.domain();
         self.slot_mut().dispatch(domain, power, now_ns, dur_ns, window_ns)
+    }
+
+    /// [`Engine::dispatch`] behind the fault gate: an active brownout
+    /// stalls the job start by one scheduling window, a transient dispatch
+    /// failure retries with bounded deterministic backoff
+    /// ([`crate::faults::RETRY_MAX`] × [`crate::faults::RETRY_BACKOFF_NS`])
+    /// and drops the job when exhausted. With no active engine fault this
+    /// reduces to `dispatch(power, now_ns, ...)` exactly (`now_ns + 0`),
+    /// preserving the empty-plan bit-identity contract.
+    fn dispatch_faulted(
+        &mut self,
+        faults: &mut FaultSession,
+        tenant: usize,
+        power: &mut PowerManager,
+        now_ns: u64,
+        dur_ns: u64,
+        window_ns: u64,
+    ) -> DispatchOutcome {
+        let gate = faults.engine_gate(tenant, now_ns, power.vdd(), window_ns);
+        if gate.drop {
+            return DispatchOutcome {
+                accepted: false,
+                retries: gate.retries,
+                stall_ns: gate.delay_ns,
+                faulted_drop: true,
+            };
+        }
+        let accepted = self.dispatch(power, now_ns + gate.delay_ns, dur_ns, window_ns);
+        DispatchOutcome { accepted, retries: gate.retries, stall_ns: gate.delay_ns, faulted_drop: false }
     }
 
     /// Drain and return the busy time (ns, capped at `window_ns`) this
@@ -302,6 +346,37 @@ mod tests {
         assert!(e.idle_power(&pm) > 0.0);
         pm.gate(DomainId::Sne);
         assert_eq!(e.idle_power(&pm), 0.0);
+    }
+
+    #[test]
+    fn faulted_dispatch_reduces_to_plain_dispatch_without_active_faults() {
+        use crate::faults::FaultPlan;
+        let window = 10_000_000;
+        let mut fs = FaultPlan::parse("brownout:0.65~100-200").unwrap().session(7, window, 1);
+        let mut pm = powered_pm();
+        let mut a = CutieAdapter::new(&SocConfig::kraken());
+        let mut b = CutieAdapter::new(&SocConfig::kraken());
+        // the spec's activation window is long past: outcomes must mirror
+        // the plain dispatch path exactly
+        let out = a.dispatch_faulted(&mut fs, 0, &mut pm, 1_000_000_000, 3_000_000, window);
+        let plain = b.dispatch(&mut pm, 1_000_000_000, 3_000_000, window);
+        assert_eq!(out.accepted, plain);
+        assert_eq!((out.retries, out.stall_ns, out.faulted_drop), (0, 0, false));
+        assert_eq!(a.slot().busy_until_ns, b.slot().busy_until_ns);
+    }
+
+    #[test]
+    fn brownout_stalls_the_job_start_by_one_window() {
+        use crate::faults::FaultPlan;
+        let window = 10_000_000;
+        let mut fs = FaultPlan::parse("brownout:0.65").unwrap().session(7, window, 1);
+        let mut pm = powered_pm();
+        pm.set_vdd(0.6);
+        let mut e = CutieAdapter::new(&SocConfig::kraken());
+        let out = e.dispatch_faulted(&mut fs, 0, &mut pm, 0, 3_000_000, window);
+        assert!(out.accepted);
+        assert_eq!(out.stall_ns, window);
+        assert_eq!(e.slot().busy_until_ns, window + 3_000_000);
     }
 
     #[test]

@@ -50,6 +50,7 @@ use crate::coordinator::governor::{
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::telemetry::Snapshot;
 use crate::event::Event;
+use crate::faults::{FaultPlan, FaultSession, ResilienceReport, TenantObservation};
 use crate::obs::timeline as tl;
 use crate::obs::timeline::TraceRecorder;
 use crate::runtime::Runtime;
@@ -77,6 +78,11 @@ pub struct MissionConfig {
     /// Load AOT artifacts from here; None = analytical-only mission.
     pub artifacts_dir: Option<PathBuf>,
     pub print_live: bool,
+    /// Deterministic fault injection (DESIGN.md §14). The default empty
+    /// plan is bit-identical to the healthy pipeline; a non-empty plan
+    /// additionally scores degradation against an inline fault-free twin
+    /// ([`MissionReport::resilience`]).
+    pub faults: FaultPlan,
 }
 
 impl Default for MissionConfig {
@@ -92,6 +98,7 @@ impl Default for MissionConfig {
             telemetry_dt_s: 0.25,
             artifacts_dir: None,
             print_live: false,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -160,13 +167,16 @@ pub struct MissionReport {
     pub rail_transitions: u64,
     pub snapshots: Vec<Snapshot>,
     pub last_commands: Vec<NavCommand>,
+    /// Graceful-degradation scorecard — `Some` iff the mission ran a
+    /// non-empty [`FaultPlan`] (scored against an inline fault-free twin).
+    pub resilience: Option<ResilienceReport>,
 }
 
 impl MissionReport {
     /// JSON form for `--json` CLI output.
     pub fn to_json(&self) -> crate::util::json::Value {
         use crate::util::json::Value;
-        Value::obj(vec![
+        let mut fields = vec![
             ("sim_s", Value::Num(self.sim_s)),
             ("wall_s", Value::Num(self.wall_s)),
             ("sne_inf", Value::Num(self.sne_inf as f64)),
@@ -182,7 +192,13 @@ impl MissionReport {
             ("avoid_fraction", Value::Num(self.avoid_fraction)),
             ("runtime_calls", Value::Num(self.runtime_calls as f64)),
             ("rail_transitions", Value::Num(self.rail_transitions as f64)),
-        ])
+        ];
+        // key present only for faulted runs: empty-plan JSON stays
+        // byte-identical to the pre-fault pipeline
+        if let Some(res) = &self.resilience {
+            fields.push(("resilience", res.to_json()));
+        }
+        Value::obj(fields)
     }
 
     /// Effective inference rates (per simulated second).
@@ -253,6 +269,12 @@ pub struct Mission {
     /// only already-computed simulation values and DES timestamps, so
     /// reports are bit-identical with it on, off or absent.
     recorder: Option<TraceRecorder>,
+    /// Live fault-injection state — `None` for the empty plan, so the
+    /// healthy pipeline never touches a fault hook (DESIGN.md §14).
+    faults: Option<FaultSession>,
+    /// Scratch buffer the sensor-fault transform writes into (reused
+    /// across windows; untouched when no sensor fault is active).
+    evbuf: Vec<Event>,
 }
 
 const TIMESTEPS: usize = 5;
@@ -341,6 +363,9 @@ impl Mission {
         // deadlines lowered onto the cadences (window / frame period)
         let governor = cfg.power.build(1);
 
+        let faults = (!cfg.faults.is_empty())
+            .then(|| cfg.faults.session(cfg.seed, (cfg.window_ms * 1e6) as u64, 1));
+
         Ok(Mission {
             sne: SneAdapter::new(&soc_cfg),
             cutie: CutieAdapter::new(&soc_cfg),
@@ -352,6 +377,8 @@ impl Mission {
             firenet_state,
             firenet_dims: (fh, fw),
             recorder: None,
+            faults,
+            evbuf: Vec::new(),
             soc,
             cfg,
         })
@@ -405,6 +432,7 @@ impl Mission {
             rail_transitions: 0,
             snapshots: Vec::new(),
             last_commands: Vec::new(),
+            resilience: None,
         };
         let mut st = RunState {
             vdd: self.soc.power.vdd(),
@@ -482,6 +510,22 @@ impl Mission {
         report.avoid_fraction = st.avoid_count as f64 / report.commands.max(1) as f64;
         report.runtime_calls = self.runtime.as_ref().map_or(0, |r| r.calls.get());
         report.rail_transitions = self.soc.power.ledger.rail_transitions;
+
+        // graceful-degradation scoring: a faulted run is scored against an
+        // inline fault-free twin of the exact same config (whose plan is
+        // empty, so the recursion terminates after one level)
+        if let Some(fs) = self.faults.as_ref() {
+            let mut twin_cfg = self.cfg.clone();
+            twin_cfg.faults = FaultPlan::default();
+            twin_cfg.print_live = false;
+            let baseline = Mission::new(self.soc.cfg.clone(), twin_cfg)?.run()?;
+            report.resilience = Some(ResilienceReport::score(
+                &self.cfg.faults,
+                fs,
+                &[mission_observation(&baseline)],
+                &[mission_observation(&report)],
+            ));
+        }
         Ok(report)
     }
 
@@ -501,6 +545,17 @@ impl Mission {
         let (sw, sh) = self.source.dims();
         let evs: &[Event] =
             self.source.window_events(w, t0, window_ns, self.cfg.dvs_sample_hz);
+        // sensor faults bite here — between the (trace-shareable) front end
+        // and the DES — so capture/replay bit-identity is preserved
+        let evs: &[Event] = if let Some(fs) = self.faults.as_mut() {
+            if fs.transform_window(0, (sw, sh), t0, window_ns, evs, &mut self.evbuf) {
+                &self.evbuf
+            } else {
+                evs
+            }
+        } else {
+            evs
+        };
         let n_events = evs.len() as u64;
         report.events_total += n_events;
 
@@ -562,7 +617,15 @@ impl Mission {
         }
 
         let sne_dur = self.sne.job_ns(activity, st.vdd);
-        if self.sne.dispatch(&mut self.soc.power, t0, sne_dur, window_ns) {
+        let accepted = match self.faults.as_mut() {
+            Some(fs) => {
+                self.sne
+                    .dispatch_faulted(fs, 0, &mut self.soc.power, t0, sne_dur, window_ns)
+                    .accepted
+            }
+            None => self.sne.dispatch(&mut self.soc.power, t0, sne_dur, window_ns),
+        };
+        if accepted {
             let done = self.sne.slot().busy_until_ns;
             note_job(&mut st.epoch_slack_ns, &mut st.epoch_service_frac, window_ns, t0, done);
             report.sne_inf += 1;
@@ -611,9 +674,24 @@ impl Mission {
         let (cam_w, cam_h) = self.source.frame_dims();
         let frame_bytes = self.source.frame_bytes();
         let (fts, img, truth) = self.source.capture_frame(need_img);
+        // frame-sensor blackout: the capture happened (source state
+        // advances identically) but the frame never reaches the DMA
+        if let Some(fs) = self.faults.as_mut() {
+            if fs.frame_blacked(0, fts) {
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.instant("frame", "frame.blackout", tl::pid_of_tenant(0), tl::TID_FRAME, fts, vec![]);
+                }
+                return Ok(());
+            }
+        }
         // CPI + uDMA staging into L2
         let f_fab = self.soc.power.freq(DomainId::Fabric).max(1.0);
         let dma_done = self.soc.dma.start("frame", frame_bytes, fts, f_fab);
+        // a DMA timeout pushes the completion (and both frame forks) late
+        let dma_done = match self.faults.as_mut() {
+            Some(fs) => fs.dma_delay(0, dma_done),
+            None => dma_done,
+        };
 
         if let Some(rec) = self.recorder.as_mut() {
             rec.span(
@@ -629,7 +707,15 @@ impl Mission {
 
         // CUTIE classification
         let cutie_dur = self.cutie.job_ns(st.vdd);
-        if self.cutie.dispatch(&mut self.soc.power, dma_done, cutie_dur, window_ns) {
+        let accepted = match self.faults.as_mut() {
+            Some(fs) => {
+                self.cutie
+                    .dispatch_faulted(fs, 0, &mut self.soc.power, dma_done, cutie_dur, window_ns)
+                    .accepted
+            }
+            None => self.cutie.dispatch(&mut self.soc.power, dma_done, cutie_dur, window_ns),
+        };
+        if accepted {
             let done = self.cutie.slot().busy_until_ns;
             note_job(
                 &mut st.epoch_slack_ns,
@@ -663,7 +749,15 @@ impl Mission {
 
         // PULP DroNet
         let pulp_dur = self.pulp.job_ns(st.vdd);
-        if self.pulp.dispatch(&mut self.soc.power, dma_done, pulp_dur, window_ns) {
+        let accepted = match self.faults.as_mut() {
+            Some(fs) => {
+                self.pulp
+                    .dispatch_faulted(fs, 0, &mut self.soc.power, dma_done, pulp_dur, window_ns)
+                    .accepted
+            }
+            None => self.pulp.dispatch(&mut self.soc.power, dma_done, pulp_dur, window_ns),
+        };
+        if accepted {
             let done = self.pulp.slot().busy_until_ns;
             note_job(
                 &mut st.epoch_slack_ns,
@@ -757,6 +851,11 @@ impl Mission {
         self.soc.power.advance_time(dt_s);
         self.soc.clock.advance_to(t1);
 
+        // fault bookkeeping: windows spent with a brownout pinning the rail
+        if let Some(fs) = self.faults.as_mut() {
+            fs.note_epoch(t1, st.vdd);
+        }
+
         // -- 6. the governor epoch ------------------------------------
         // one decision per scheduling window, fed the window just
         // accounted; gates apply to idle engines, a rail move (DVFS
@@ -848,6 +947,18 @@ impl Mission {
             st.snap = Snapshot::default();
             st.snap_start_ns = t1;
         }
+    }
+}
+
+/// Lower a mission report onto the observables the degradation score
+/// compares ([`TenantDegradation`](crate::faults::TenantDegradation)):
+/// the mission analog of a deadline miss is a dropped window.
+pub fn mission_observation(r: &MissionReport) -> TenantObservation {
+    TenantObservation {
+        deadline_misses: r.dropped_windows,
+        events_total: r.events_total,
+        avoid_fraction: r.avoid_fraction,
+        steers: r.last_commands.iter().map(|c| c.steer).collect(),
     }
 }
 
@@ -1042,6 +1153,54 @@ mod tests {
         for cat in ["window", "frame", "engine", "governor", "fusion"] {
             assert!(json.contains(&format!("\"cat\":\"{cat}\"")), "missing {cat}");
         }
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_and_unreported() {
+        let plain = Mission::new(SocConfig::kraken(), quick_cfg()).unwrap().run().unwrap();
+        let mut cfg = quick_cfg();
+        cfg.faults = FaultPlan::default();
+        let faulted = Mission::new(SocConfig::kraken(), cfg).unwrap().run().unwrap();
+        assert_eq!(plain.energy_j.to_bits(), faulted.energy_j.to_bits());
+        assert_eq!(plain.events_total, faulted.events_total);
+        assert!(faulted.resilience.is_none(), "empty plan must not score");
+        assert!(!faulted.to_json().to_string().contains("resilience"));
+    }
+
+    #[test]
+    fn dropout_degrades_and_scores_the_mission() {
+        let mut cfg = quick_cfg();
+        cfg.faults = FaultPlan::parse("dvs_dropout").unwrap();
+        let r = Mission::new(SocConfig::kraken(), cfg).unwrap().run().unwrap();
+        assert_eq!(r.events_total, 0, "whole-run dropout silences the DVS");
+        let res = r.resilience.expect("faulted run must score");
+        assert!(res.counters.suppressed_events > 0);
+        assert_eq!(res.tenants.len(), 1);
+        assert!(res.tenants[0].events_lost > 0);
+        assert!(res.tenants[0].score > 0.0);
+        assert!(r.to_json().to_string().contains("\"resilience\""));
+    }
+
+    #[test]
+    fn frame_blackout_starves_the_frame_engines() {
+        let mut cfg = quick_cfg();
+        cfg.faults = FaultPlan::parse("frame_blackout").unwrap();
+        let r = Mission::new(SocConfig::kraken(), cfg).unwrap().run().unwrap();
+        assert_eq!(r.cutie_inf, 0);
+        assert_eq!(r.pulp_inf, 0);
+        let res = r.resilience.expect("faulted run must score");
+        assert!(res.counters.frames_blacked > 0);
+    }
+
+    #[test]
+    fn faulted_mission_is_deterministic() {
+        let run = || {
+            let mut cfg = quick_cfg();
+            cfg.faults = FaultPlan::parse("hot_pixels:8+jitter:200+flaky:0.3").unwrap();
+            let r = Mission::new(SocConfig::kraken(), cfg).unwrap().run().unwrap();
+            (r.events_total, r.energy_j.to_bits(), format!("{:?}", r.resilience))
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -50,6 +50,8 @@ use crate::coordinator::governor::{
 use crate::coordinator::pipeline::{argmax, rebin_slice, MissionConfig, MissionReport};
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::telemetry::Snapshot;
+use crate::event::Event;
+use crate::faults::{FaultPlan, FaultSession, ResilienceReport, TenantObservation};
 use crate::obs::timeline as tl;
 use crate::obs::timeline::TraceRecorder;
 use crate::runtime::Runtime;
@@ -93,6 +95,10 @@ pub struct StreamConfig {
     /// Arbitration priority + per-job deadline. The default (priority 0,
     /// cadence deadlines) reproduces the legacy arbitration bit for bit.
     pub qos: QosSpec,
+    /// Deterministic fault injection for this stream (DESIGN.md §14). The
+    /// per-SoC session is the exact-dedup union across streams, so the
+    /// fan-out copies of one mission plan apply once.
+    pub faults: FaultPlan,
 }
 
 impl StreamConfig {
@@ -104,6 +110,7 @@ impl StreamConfig {
             frame_fps: m.frame_fps,
             dvs_sample_hz: m.dvs_sample_hz,
             qos: QosSpec::default(),
+            faults: m.faults.clone(),
         }
     }
 
@@ -325,6 +332,9 @@ pub struct WorkloadReport {
     pub tenants: Vec<TenantReport>,
     /// Per-engine contention, indexed [`ENG_SNE`]/[`ENG_CUTIE`]/[`ENG_PULP`].
     pub contention: [EngineContention; 3],
+    /// Graceful-degradation scorecard — `Some` iff any stream ran a
+    /// non-empty [`FaultPlan`] (scored against an inline fault-free twin).
+    pub resilience: Option<ResilienceReport>,
 }
 
 impl WorkloadReport {
@@ -371,11 +381,12 @@ impl WorkloadReport {
             rail_transitions: self.rail_transitions,
             snapshots: t.snapshots.clone(),
             last_commands: t.last_commands.clone(),
+            resilience: self.resilience.clone(),
         }
     }
 
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("sim_s", Value::Num(self.sim_s)),
             ("wall_s", Value::Num(self.wall_s)),
             ("avg_power_w", Value::Num(self.avg_power_w)),
@@ -416,7 +427,13 @@ impl WorkloadReport {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        // key present only for faulted runs: empty-plan JSON stays
+        // byte-identical to the pre-fault runner
+        if let Some(res) = &self.resilience {
+            fields.push(("resilience", res.to_json()));
+        }
+        Value::obj(fields)
     }
 
     /// Human-readable rollup for the `kraken workload` CLI.
@@ -471,6 +488,15 @@ impl WorkloadReport {
                 c.dropped,
                 c.mean_queue_ns() / 1e3,
                 c.queued_ns_max as f64 / 1e3,
+            ));
+        }
+        if let Some(res) = &self.resilience {
+            s.push_str(&format!(
+                "faults: {}  degraded {}/{} tenant(s)  total degradation score {:.2}\n",
+                res.plan,
+                res.degraded_tenants(),
+                self.tenants.len(),
+                res.total_score(),
             ));
         }
         s
@@ -589,6 +615,13 @@ pub struct Workload {
     /// only already-computed simulation values and DES timestamps, so
     /// reports are bit-identical with it on, off or absent.
     recorder: Option<TraceRecorder>,
+    /// `Some` iff any stream carries a non-empty [`FaultPlan`] — the
+    /// healthy path never touches a fault hook, so empty-plan workloads
+    /// stay bit-identical to the pre-fault runner (DESIGN.md §14).
+    faults: Option<FaultSession>,
+    /// Reusable buffer the sensor-fault transform writes into (the
+    /// window-open path is the DES hot loop, so no per-window allocs).
+    evbuf: Vec<Event>,
 }
 
 impl Workload {
@@ -701,6 +734,14 @@ impl Workload {
         let governor = cfg.power.build(cfg.streams.len());
         let n = tenants.len();
 
+        // one session per SoC: the exact-dedup union across streams, so a
+        // fan-out's copies of one mission plan apply once; seeded from
+        // stream 0 so a single-tenant workload matches the mission exactly
+        let plan = FaultPlan::union(cfg.streams.iter().map(|s| &s.faults));
+        let faults = (!plan.is_empty()).then(|| {
+            plan.session(cfg.streams[0].seed, (cfg.window_ms * 1e6) as u64, n)
+        });
+
         Ok(Workload {
             sne: SneAdapter::new(&soc_cfg),
             cutie: CutieAdapter::new(&soc_cfg),
@@ -713,6 +754,8 @@ impl Workload {
             slack_scratch: Vec::with_capacity(n),
             frac_scratch: Vec::with_capacity(n),
             recorder: None,
+            faults,
+            evbuf: Vec::new(),
             soc,
             cfg,
         })
@@ -874,7 +917,7 @@ impl Workload {
                 r
             })
             .collect();
-        Ok(WorkloadReport {
+        let mut report = WorkloadReport {
             sim_s,
             wall_s: wall_start.elapsed().as_secs_f64(),
             avg_power_w: energy_j / sim_s.max(1e-12),
@@ -887,7 +930,26 @@ impl Workload {
             rails: self.soc.power.ledger.rail_summary(),
             tenants,
             contention: self.contention,
-        })
+            resilience: None,
+        };
+
+        // graceful-degradation scoring: a faulted workload is scored
+        // against an inline fault-free twin of the exact same config
+        // (whose every stream plan is empty, so the recursion terminates
+        // after one level). Tenants no fault touched score exactly 0.
+        if let Some(fs) = self.faults.as_ref() {
+            let mut twin_cfg = self.cfg.clone();
+            for s in &mut twin_cfg.streams {
+                s.faults = FaultPlan::default();
+            }
+            twin_cfg.print_live = false;
+            let baseline = Workload::new(self.soc.cfg.clone(), twin_cfg)?.run()?;
+            let plan = FaultPlan::union(self.cfg.streams.iter().map(|s| &s.faults));
+            let base_obs: Vec<_> = baseline.tenants.iter().map(tenant_observation).collect();
+            let fault_obs: Vec<_> = report.tenants.iter().map(tenant_observation).collect();
+            report.resilience = Some(ResilienceReport::score(&plan, fs, &base_obs, &fault_obs));
+        }
+        Ok(report)
     }
 
     /// One tenant's window open: DVS capture over `[t0, t1)` and the SNE
@@ -902,6 +964,17 @@ impl Workload {
         //       handed back from the shared trace -----------------------
         let (sw, sh) = ten.source.dims();
         let evs = ten.source.window_events(w, t0, window_ns, stream_hz);
+        // sensor faults bite here — between the (trace-shareable) front end
+        // and the DES — so capture/replay bit-identity is preserved
+        let evs: &[Event] = if let Some(fs) = self.faults.as_mut() {
+            if fs.transform_window(tenant, (sw, sh), t0, window_ns, evs, &mut self.evbuf) {
+                &self.evbuf
+            } else {
+                evs
+            }
+        } else {
+            evs
+        };
         let n_events = evs.len() as u64;
         ten.report.events_total += n_events;
 
@@ -956,7 +1029,15 @@ impl Workload {
 
         let sne_dur = self.sne.job_ns(activity, st.vdd);
         let wait_ns = queue_wait_ns(&self.sne, &self.soc.power, t0);
-        if self.sne.dispatch(&mut self.soc.power, t0, sne_dur, window_ns) {
+        let accepted = match self.faults.as_mut() {
+            Some(fs) => {
+                self.sne
+                    .dispatch_faulted(fs, tenant, &mut self.soc.power, t0, sne_dur, window_ns)
+                    .accepted
+            }
+            None => self.sne.dispatch(&mut self.soc.power, t0, sne_dur, window_ns),
+        };
+        if accepted {
             self.contention[ENG_SNE].record(wait_ns);
             let deadline = self.cfg.streams[tenant].window_deadline_ns(window_ns);
             let done = self.sne.slot().busy_until_ns;
@@ -1007,9 +1088,33 @@ impl Workload {
         let (cam_w, cam_h) = ten.source.frame_dims();
         let frame_bytes = ten.source.frame_bytes();
         let (fts, img, truth) = ten.source.capture_frame(need_img);
+        // frame-sensor blackout: the capture happened (source state
+        // advances identically) but the frame never reaches the DMA, and
+        // the tenant eats the missed frame deadline
+        if let Some(fs) = self.faults.as_mut() {
+            if fs.frame_blacked(tenant, fts) {
+                ten.report.deadline_misses += 1;
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.instant(
+                        "frame",
+                        "frame.blackout",
+                        tl::pid_of_tenant(tenant),
+                        tl::TID_FRAME,
+                        fts,
+                        vec![],
+                    );
+                }
+                return Ok(());
+            }
+        }
         let f_fab = self.soc.power.freq(DomainId::Fabric).max(1.0);
         let tag = format!("frame{tenant}");
         let dma_done = self.soc.dma.start(&tag, frame_bytes, fts, f_fab);
+        // a DMA timeout pushes the completion (and both frame forks) late
+        let dma_done = match self.faults.as_mut() {
+            Some(fs) => fs.dma_delay(tenant, dma_done),
+            None => dma_done,
+        };
 
         let frame_deadline = self.cfg.streams[tenant].frame_deadline_ns(window_ns);
 
@@ -1028,7 +1133,15 @@ impl Workload {
         // CUTIE classification
         let cutie_dur = self.cutie.job_ns(st.vdd);
         let wait_c = queue_wait_ns(&self.cutie, &self.soc.power, dma_done);
-        if self.cutie.dispatch(&mut self.soc.power, dma_done, cutie_dur, window_ns) {
+        let accepted = match self.faults.as_mut() {
+            Some(fs) => {
+                self.cutie
+                    .dispatch_faulted(fs, tenant, &mut self.soc.power, dma_done, cutie_dur, window_ns)
+                    .accepted
+            }
+            None => self.cutie.dispatch(&mut self.soc.power, dma_done, cutie_dur, window_ns),
+        };
+        if accepted {
             self.contention[ENG_CUTIE].record(wait_c);
             let done = self.cutie.slot().busy_until_ns;
             ten.note_slack(frame_deadline, dma_done, done);
@@ -1077,7 +1190,15 @@ impl Workload {
         // PULP DroNet
         let pulp_dur = self.pulp.job_ns(st.vdd);
         let wait_p = queue_wait_ns(&self.pulp, &self.soc.power, dma_done);
-        if self.pulp.dispatch(&mut self.soc.power, dma_done, pulp_dur, window_ns) {
+        let accepted = match self.faults.as_mut() {
+            Some(fs) => {
+                self.pulp
+                    .dispatch_faulted(fs, tenant, &mut self.soc.power, dma_done, pulp_dur, window_ns)
+                    .accepted
+            }
+            None => self.pulp.dispatch(&mut self.soc.power, dma_done, pulp_dur, window_ns),
+        };
+        if accepted {
             self.contention[ENG_PULP].record(wait_p);
             let done = self.pulp.slot().busy_until_ns;
             ten.note_slack(frame_deadline, dma_done, done);
@@ -1186,6 +1307,11 @@ impl Workload {
         self.soc.power.advance_time(dt_s);
         self.soc.clock.advance_to(t1);
 
+        // fault bookkeeping: windows spent with a brownout pinning the rail
+        if let Some(fs) = self.faults.as_mut() {
+            fs.note_epoch(t1, st.vdd);
+        }
+
         // -- the governor epoch: one decision per scheduling window ----
         // drain the per-tenant epoch signals into the reusable scratch
         // buffers (this is the DES hot loop: no per-epoch allocations)
@@ -1290,6 +1416,18 @@ impl Workload {
             st.cum_marks.push(p);
             st.snap_start_ns = t1;
         }
+    }
+}
+
+/// Lower one tenant's report onto the observables the degradation score
+/// compares ([`TenantDegradation`](crate::faults::TenantDegradation)).
+/// Unlike the mission form, tenants carry a real deadline-miss counter.
+pub fn tenant_observation(t: &TenantReport) -> TenantObservation {
+    TenantObservation {
+        deadline_misses: t.deadline_misses,
+        events_total: t.events_total,
+        avoid_fraction: t.avoid_fraction,
+        steers: t.last_commands.iter().map(|c| c.steer).collect(),
     }
 }
 
@@ -1566,5 +1704,58 @@ mod tests {
             r.energy_j,
             fixed.energy_j
         );
+    }
+
+    #[test]
+    fn inactive_fault_windows_are_bit_identical_to_the_healthy_run() {
+        let cfg = WorkloadConfig::fan_out(&quick_mission(), 2);
+        let healthy = Workload::new(SocConfig::kraken(), cfg.clone()).unwrap().run().unwrap();
+        assert!(healthy.resilience.is_none());
+        assert!(!healthy.to_json().to_string().contains("resilience"));
+        // a plan whose window opens after the run ends arms the session but
+        // every hook takes the zero-work path: counters bit-identical
+        let mut armed = cfg;
+        armed.streams[0].faults = FaultPlan::parse("dvs_dropout~5-6").unwrap();
+        let r = Workload::new(SocConfig::kraken(), armed).unwrap().run().unwrap();
+        assert_eq!(r.events_total(), healthy.events_total());
+        assert_eq!(r.inferences_total(), healthy.inferences_total());
+        assert_eq!(r.energy_j.to_bits(), healthy.energy_j.to_bits());
+        let res = r.resilience.expect("armed plan reports resilience");
+        assert_eq!(res.degraded_tenants(), 0, "nothing fired: {res:?}");
+        assert_eq!(res.total_score(), 0.0);
+    }
+
+    #[test]
+    fn dropout_on_one_stream_degrades_only_that_tenant() {
+        let mut cfg = WorkloadConfig::fan_out(&quick_mission(), 2);
+        cfg.streams[0].faults = FaultPlan::parse("dvs_dropout@0").unwrap();
+        let r = Workload::new(SocConfig::kraken(), cfg).unwrap().run().unwrap();
+        assert_eq!(r.tenants[0].events_total, 0, "dropout lets DVS events through");
+        assert!(r.tenants[1].events_total > 0);
+        let res = r.resilience.as_ref().expect("faulted run reports resilience");
+        assert!(res.counters.suppressed_events > 0);
+        assert!(res.tenants[0].score > 0.0, "faulted tenant must degrade: {res:?}");
+        assert_eq!(res.tenants[1].score, 0.0, "healthy tenant must not: {res:?}");
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"resilience\""));
+        assert!(json.contains("dvs_dropout"));
+        // the single-tenant collapse carries the scorecard along
+        let mut solo = WorkloadConfig::fan_out(&quick_mission(), 1);
+        solo.streams[0].faults = FaultPlan::parse("dvs_dropout").unwrap();
+        let m = Workload::new(SocConfig::kraken(), solo).unwrap().run().unwrap();
+        assert!(m.to_mission_report().resilience.is_some());
+    }
+
+    #[test]
+    fn faulted_workload_is_deterministic() {
+        let run = || {
+            let mut cfg = WorkloadConfig::fan_out(&quick_mission(), 2);
+            cfg.streams[0].faults =
+                FaultPlan::parse("hot_pixels:8+jitter:200+flaky:0.3").unwrap();
+            let mut w = Workload::new(SocConfig::kraken(), cfg).unwrap();
+            let r = w.run().unwrap();
+            (r.events_total(), r.energy_j.to_bits(), format!("{:?}", r.resilience))
+        };
+        assert_eq!(run(), run());
     }
 }

@@ -1,0 +1,1103 @@
+//! Deterministic fault injection with graceful-degradation scoring
+//! (DESIGN.md §14).
+//!
+//! A [`FaultPlan`] is a list of typed [`FaultSpec`]s, each with an
+//! activation window `[t0_ns, t1_ns)` and an optional tenant filter. Two
+//! fault families exist:
+//!
+//! * **Sensor faults** — DVS dropout intervals, stuck/hot pixels,
+//!   timestamp jitter, frame-sensor blackout. These are applied *between*
+//!   the sensor front end ([`EventSource`]) and the DES: the source (live
+//!   or trace replay) stays fault-free, so trace capture/replay
+//!   bit-identity (DESIGN.md §9) is untouched and a faulted grid cell
+//!   shares its capture with the healthy cells.
+//! * **Engine faults** — brownout-at-low-rail dispatch stall, transient
+//!   dispatch failure with bounded deterministic retry/backoff, DMA
+//!   timeout. These surface through
+//!   [`Engine::dispatch_faulted`](crate::coordinator::engine::Engine::dispatch_faulted)
+//!   and the frame-DMA hook, so the coordinator observes them exactly
+//!   where the hardware would: at the offload boundary.
+//!
+//! ## Determinism rules
+//!
+//! Everything is a pure function of `(config, seed, plan)`:
+//!
+//! * hot-pixel positions derive from a [`Rng`] seeded by
+//!   `(run seed, spec index)` — never from host state;
+//! * timestamp jitter is *hash-based* per event (FNV-1a of
+//!   `(seed, t_ns, x, y)`), so it is independent of evaluation order;
+//! * the transient-failure coin flips advance a per-spec PCG stream in
+//!   DES dispatch order, which is itself deterministic;
+//! * an **empty plan is bit-identical to no plan at all**: every hook
+//!   checks activation before doing any arithmetic, and inactive specs
+//!   take the exact same code path as absent ones
+//!   (`tests/integration_faults.rs`, `prop_fault_free_plan_is_identity`).
+//!
+//! Retry/backoff bounds: a transient dispatch failure retries at most
+//! [`RETRY_MAX`] times, each retry delaying the job start by one more
+//! [`RETRY_BACKOFF_NS`]; a job that fails every attempt is dropped (and
+//! counted as a deadline miss, like a backpressure drop).
+//!
+//! [`EventSource`]: crate::sensors::trace::EventSource
+
+use crate::event::{Event, Polarity};
+use crate::util::fnv1a;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// Maximum transient-dispatch retries before the job is dropped.
+pub const RETRY_MAX: u32 = 3;
+/// Deterministic backoff per retry (ns): retry `k` starts `k * backoff`
+/// after the original dispatch instant.
+pub const RETRY_BACKOFF_NS: u64 = 100_000;
+/// Hot-pixel firing period (ns): each stuck pixel emits one spurious
+/// event per millisecond while the spec is active.
+pub const HOT_PIXEL_PERIOD_NS: u64 = 1_000_000;
+/// Default stuck-pixel population for `hot_pixels` without an argument.
+pub const DEFAULT_HOT_PIXELS: u32 = 8;
+/// Default timestamp-jitter amplitude (us) for `jitter` without an
+/// argument.
+pub const DEFAULT_JITTER_US: f64 = 200.0;
+/// Default brownout threshold (V): engine dispatch stalls while the
+/// shared rail sits strictly below this.
+pub const DEFAULT_BROWNOUT_VDD: f64 = 0.65;
+/// Default transient dispatch-failure probability for `flaky`.
+pub const DEFAULT_FLAKY_P: f64 = 0.1;
+/// Default DMA-timeout penalty (us) added to the frame DMA completion.
+pub const DEFAULT_DMA_PENALTY_US: f64 = 2_000.0;
+
+/// Degradation-score weights (documented in DESIGN.md §14). Chosen so a
+/// tenant untouched by any fault scores exactly 0.0.
+const W_MISS: f64 = 1.0;
+const W_EVENT: f64 = 0.01;
+const W_STEER: f64 = 100.0;
+const W_COLL: f64 = 10.0;
+const W_RETRY: f64 = 0.5;
+const W_BLACKOUT: f64 = 1.0;
+const W_DEGRADED_MS: f64 = 0.05;
+
+/// One typed fault. Parameters carry physical units in their names.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// DVS goes silent: every event inside the activation window is
+    /// suppressed before it reaches the DES.
+    DvsDropout,
+    /// `pixels` stuck/hot DVS pixels fire spuriously at
+    /// [`HOT_PIXEL_PERIOD_NS`] while active (positions seeded from the
+    /// run seed + spec index).
+    HotPixels { pixels: u32 },
+    /// Per-event timestamp jitter, uniform in `[-amp_us, +amp_us]`,
+    /// clamped to the scheduling window and re-sorted to stay monotonic.
+    TimestampJitter { amp_us: f64 },
+    /// The frame sensor yields nothing: captured frames inside the window
+    /// are discarded before DMA (the frame job never runs — one deadline
+    /// miss per blacked frame).
+    FrameBlackout,
+    /// Engines stall while the shared rail sits below `below_vdd`: each
+    /// dispatch is delayed by one full scheduling window, which drives the
+    /// job's slack negative — the signal a `DeadlineAware` governor
+    /// escapes by raising the rail, and a `Fixed` one cannot.
+    Brownout { below_vdd: f64 },
+    /// Transient dispatch failure with probability `p` per attempt,
+    /// retried deterministically up to [`RETRY_MAX`] times with
+    /// [`RETRY_BACKOFF_NS`] linear backoff; exhausted retries drop the job.
+    FlakyDispatch { p: f64 },
+    /// Frame DMA completion is delayed by `penalty_us` (a bus timeout +
+    /// replay), pushing the CUTIE/PULP forks toward their deadline.
+    DmaTimeout { penalty_us: f64 },
+}
+
+impl FaultKind {
+    /// Canonical spec name (the string [`FaultPlan::parse`] accepts).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::DvsDropout => "dvs_dropout",
+            FaultKind::HotPixels { .. } => "hot_pixels",
+            FaultKind::TimestampJitter { .. } => "jitter",
+            FaultKind::FrameBlackout => "frame_blackout",
+            FaultKind::Brownout { .. } => "brownout",
+            FaultKind::FlakyDispatch { .. } => "flaky",
+            FaultKind::DmaTimeout { .. } => "dma_timeout",
+        }
+    }
+
+    /// Is this a SoC-wide engine fault (tenant filter ignored)?
+    pub fn is_soc_wide(&self) -> bool {
+        matches!(self, FaultKind::Brownout { .. } | FaultKind::FlakyDispatch { .. })
+    }
+}
+
+/// One fault with its activation window and tenant filter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Activation window start (ns of simulated mission time).
+    pub t0_ns: u64,
+    /// Activation window end (exclusive); `u64::MAX` = whole run.
+    pub t1_ns: u64,
+    /// Tenant this fault targets; `None` = every tenant. Ignored by
+    /// SoC-wide faults ([`FaultKind::is_soc_wide`]).
+    pub tenant: Option<usize>,
+}
+
+impl FaultSpec {
+    /// A whole-run spec targeting tenant 0 (the CLI shorthand default for
+    /// per-sensor faults) or the whole SoC for engine faults.
+    pub fn whole_run(kind: FaultKind) -> FaultSpec {
+        let tenant = if kind.is_soc_wide() { None } else { Some(0) };
+        FaultSpec { kind, t0_ns: 0, t1_ns: u64::MAX, tenant }
+    }
+
+    /// Does the activation window overlap `[t0, t0 + span)`?
+    fn overlaps(&self, t0: u64, span: u64) -> bool {
+        self.t0_ns < t0.saturating_add(span) && self.t1_ns > t0
+    }
+
+    /// Is instant `t` inside the activation window?
+    fn covers(&self, t: u64) -> bool {
+        self.t0_ns <= t && t < self.t1_ns
+    }
+
+    /// Does this spec apply to `tenant` (SoC-wide faults apply to all)?
+    fn applies_to(&self, tenant: usize) -> bool {
+        self.kind.is_soc_wide() || self.tenant.is_none_or(|t| t == tenant)
+    }
+
+    /// Canonical text form, parseable by [`FaultPlan::parse`].
+    pub fn label(&self) -> String {
+        let mut s = match self.kind {
+            FaultKind::DvsDropout | FaultKind::FrameBlackout => self.kind.name().to_string(),
+            FaultKind::HotPixels { pixels } => format!("hot_pixels:{pixels}"),
+            FaultKind::TimestampJitter { amp_us } => format!("jitter:{amp_us}"),
+            FaultKind::Brownout { below_vdd } => format!("brownout:{below_vdd}"),
+            FaultKind::FlakyDispatch { p } => format!("flaky:{p}"),
+            FaultKind::DmaTimeout { penalty_us } => format!("dma_timeout:{penalty_us}"),
+        };
+        match self.tenant {
+            Some(t) if !self.kind.is_soc_wide() => s.push_str(&format!("@{t}")),
+            _ => {}
+        }
+        if self.t0_ns != 0 || self.t1_ns != u64::MAX {
+            s.push_str(&format!("~{}-{}", self.t0_ns as f64 * 1e-9, self.t1_ns as f64 * 1e-9));
+        }
+        s
+    }
+}
+
+/// An ordered list of fault specs — the per-run (or per-stream) plan.
+/// The default (empty) plan is the healthy SoC, bit for bit.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// A single whole-run fault — the common CLI/bench shorthand.
+    pub fn single(kind: FaultKind) -> FaultPlan {
+        FaultPlan { specs: vec![FaultSpec::whole_run(kind)] }
+    }
+
+    /// Canonical text form: `none` for the empty plan, otherwise specs
+    /// joined by `+` — round-trips through [`FaultPlan::parse`] and names
+    /// grid cells (`faults=`).
+    pub fn label(&self) -> String {
+        if self.specs.is_empty() {
+            "none".to_string()
+        } else {
+            self.specs.iter().map(|s| s.label()).collect::<Vec<_>>().join("+")
+        }
+    }
+
+    /// Parse a plan spec: `none` (or empty) is the empty plan, otherwise
+    /// `+`-joined fault tokens of the form `name[:arg][@tenant][~t0-t1]`
+    /// with `t0`/`t1` in seconds. Per-sensor faults default to tenant 0
+    /// (`@all` lifts the filter); engine faults are SoC-wide.
+    ///
+    /// Examples: `dvs_dropout`, `hot_pixels:16@1`, `brownout:0.65`,
+    /// `jitter:500~0.2-0.8`, `dvs_dropout+flaky:0.2`.
+    pub fn parse(s: &str) -> crate::Result<FaultPlan> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" || s == "off" {
+            return Ok(FaultPlan::default());
+        }
+        let mut specs = Vec::new();
+        for token in s.split('+') {
+            specs.push(Self::parse_spec(token.trim())?);
+        }
+        Ok(FaultPlan { specs })
+    }
+
+    fn parse_spec(token: &str) -> crate::Result<FaultSpec> {
+        anyhow::ensure!(!token.is_empty(), "empty fault token");
+        // peel the ~t0-t1 window, then the @tenant filter, then :arg
+        let (head, window) = match token.split_once('~') {
+            Some((h, w)) => (h, Some(w)),
+            None => (token, None),
+        };
+        let (head, tenant_s) = match head.split_once('@') {
+            Some((h, t)) => (h, Some(t)),
+            None => (head, None),
+        };
+        let (name, arg) = match head.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (head, None),
+        };
+        let num = |a: &str, what: &str| -> crate::Result<f64> {
+            let v: f64 = a
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad {what} '{a}' in fault '{token}'"))?;
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "{what} must be finite and >= 0, got {v}");
+            Ok(v)
+        };
+        let kind = match name {
+            "dvs_dropout" => {
+                anyhow::ensure!(arg.is_none(), "dvs_dropout takes no argument");
+                FaultKind::DvsDropout
+            }
+            "hot_pixels" => FaultKind::HotPixels {
+                pixels: match arg {
+                    Some(a) => num(a, "pixel count")? as u32,
+                    None => DEFAULT_HOT_PIXELS,
+                },
+            },
+            "jitter" => FaultKind::TimestampJitter {
+                amp_us: match arg {
+                    Some(a) => num(a, "jitter amplitude (us)")?,
+                    None => DEFAULT_JITTER_US,
+                },
+            },
+            "frame_blackout" => {
+                anyhow::ensure!(arg.is_none(), "frame_blackout takes no argument");
+                FaultKind::FrameBlackout
+            }
+            "brownout" => FaultKind::Brownout {
+                below_vdd: match arg {
+                    Some(a) => num(a, "brownout threshold (V)")?,
+                    None => DEFAULT_BROWNOUT_VDD,
+                },
+            },
+            "flaky" => {
+                let p = match arg {
+                    Some(a) => num(a, "failure probability")?,
+                    None => DEFAULT_FLAKY_P,
+                };
+                anyhow::ensure!(p < 1.0, "flaky probability must be < 1, got {p}");
+                FaultKind::FlakyDispatch { p }
+            }
+            "dma_timeout" => FaultKind::DmaTimeout {
+                penalty_us: match arg {
+                    Some(a) => num(a, "DMA penalty (us)")?,
+                    None => DEFAULT_DMA_PENALTY_US,
+                },
+            },
+            other => anyhow::bail!(
+                "unknown fault '{other}' (dvs_dropout|hot_pixels|jitter|frame_blackout|\
+                 brownout|flaky|dma_timeout)"
+            ),
+        };
+        let tenant = match tenant_s {
+            None => {
+                if kind.is_soc_wide() {
+                    None
+                } else {
+                    Some(0)
+                }
+            }
+            Some("all") => None,
+            Some(t) => Some(
+                t.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad tenant '{t}' in fault '{token}'"))?,
+            ),
+        };
+        let (t0_ns, t1_ns) = match window {
+            None => (0, u64::MAX),
+            Some(w) => {
+                let (a, b) = w
+                    .split_once('-')
+                    .ok_or_else(|| anyhow::anyhow!("bad window '{w}' (want t0-t1 seconds)"))?;
+                let t0 = num(a, "window start (s)")?;
+                let t1 = num(b, "window end (s)")?;
+                anyhow::ensure!(t1 > t0, "fault window must end after it starts");
+                ((t0 * 1e9) as u64, (t1 * 1e9) as u64)
+            }
+        };
+        Ok(FaultSpec { kind, t0_ns, t1_ns, tenant })
+    }
+
+    /// The exact-dedup union of several plans: fan-out replicates one
+    /// mission plan into every stream, so the per-SoC session must not
+    /// double-apply identical specs.
+    pub fn union<'a>(plans: impl IntoIterator<Item = &'a FaultPlan>) -> FaultPlan {
+        let mut specs: Vec<FaultSpec> = Vec::new();
+        for plan in plans {
+            for s in &plan.specs {
+                if !specs.contains(s) {
+                    specs.push(*s);
+                }
+            }
+        }
+        FaultPlan { specs }
+    }
+
+    /// Build the per-run injection state. `seed` is the run seed (stream 0
+    /// for workloads), `window_ns` the scheduling quantum, `tenants` the
+    /// stream count.
+    pub fn session(&self, seed: u64, window_ns: u64, tenants: usize) -> FaultSession {
+        FaultSession {
+            specs: self.specs.clone(),
+            seed,
+            window_ns: window_ns.max(1),
+            hot_pixels: vec![None; self.specs.len()],
+            flaky_rng: self
+                .specs
+                .iter()
+                .enumerate()
+                .map(|(i, _)| Rng::seed_from_u64(mix(seed, i as u64)))
+                .collect(),
+            counters: FaultCounters::default(),
+            per_tenant: vec![TenantFaultStats::default(); tenants.max(1)],
+            last_degraded_win: vec![None; tenants.max(1)],
+        }
+    }
+}
+
+/// Mix a seed and a spec index into an independent RNG seed.
+fn mix(seed: u64, idx: u64) -> u64 {
+    seed ^ idx.wrapping_mul(0x9e3779b97f4a7c15).rotate_left(17)
+}
+
+/// Order-independent per-event jitter offset in `[-amp_ns, +amp_ns]`.
+fn jitter_offset_ns(seed: u64, e: &Event, amp_ns: u64) -> i64 {
+    if amp_ns == 0 {
+        return 0;
+    }
+    let mut buf = [0u8; 20];
+    buf[..8].copy_from_slice(&seed.to_le_bytes());
+    buf[8..16].copy_from_slice(&e.t_ns.to_le_bytes());
+    buf[16..18].copy_from_slice(&e.x.to_le_bytes());
+    buf[18..20].copy_from_slice(&e.y.to_le_bytes());
+    let h = fnv1a(&buf);
+    (h % (2 * amp_ns + 1)) as i64 - amp_ns as i64
+}
+
+/// Plan-level injection counters, accumulated over one run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultCounters {
+    /// Spurious hot-pixel events added to the DES input.
+    pub injected_events: u64,
+    /// Real sensor events suppressed by dropout.
+    pub suppressed_events: u64,
+    /// Transient-failure retries that eventually dispatched.
+    pub engine_retries: u64,
+    /// Jobs dropped after exhausting every retry.
+    pub engine_drops: u64,
+    /// Dispatches stalled by a brownout.
+    pub brownout_stalls: u64,
+    /// Scheduling windows closed while a brownout held the rail hostage.
+    pub brownout_epochs: u64,
+    /// Frame DMAs hit by a timeout penalty.
+    pub dma_timeouts: u64,
+    /// Frames discarded by a sensor blackout.
+    pub frames_blacked: u64,
+}
+
+/// Per-tenant fault attribution (feeds [`TenantDegradation`]).
+#[derive(Debug, Clone, Copy, Default)]
+struct TenantFaultStats {
+    retries: u64,
+    frames_blacked: u64,
+    degraded_windows: u64,
+}
+
+/// What [`FaultSession::engine_gate`] decided for one dispatch attempt.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineGate {
+    /// Transient failure exhausted its retries: drop the job.
+    pub drop: bool,
+    /// Total start delay (brownout stall + retry backoff), ns.
+    pub delay_ns: u64,
+    /// Retries spent before the verdict.
+    pub retries: u32,
+}
+
+/// Live injection state for one run: the specs plus their seeded RNG
+/// streams and the attribution counters. One session per SoC.
+#[derive(Debug, Clone)]
+pub struct FaultSession {
+    specs: Vec<FaultSpec>,
+    seed: u64,
+    window_ns: u64,
+    /// Lazily drawn stuck-pixel positions, one slot per spec.
+    hot_pixels: Vec<Option<Vec<(u16, u16)>>>,
+    /// Per-spec transient-failure coin streams.
+    flaky_rng: Vec<Rng>,
+    pub counters: FaultCounters,
+    per_tenant: Vec<TenantFaultStats>,
+    last_degraded_win: Vec<Option<u64>>,
+}
+
+impl FaultSession {
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Mark `tenant` degraded in the scheduling window containing `t_ns`
+    /// (counted once per window).
+    fn touch(&mut self, tenant: usize, t_ns: u64) {
+        let t = tenant.min(self.per_tenant.len() - 1);
+        let w = t_ns / self.window_ns;
+        if self.last_degraded_win[t] != Some(w) {
+            self.last_degraded_win[t] = Some(w);
+            self.per_tenant[t].degraded_windows += 1;
+        }
+    }
+
+    /// Apply the sensor faults to one captured window. Returns `true`
+    /// when `out` holds the transformed stream (suppressions, injections
+    /// and jitter applied, re-sorted); `false` leaves `evs` authoritative
+    /// with zero work done — the empty/inactive-plan fast path.
+    pub fn transform_window(
+        &mut self,
+        tenant: usize,
+        dims: (usize, usize),
+        t0: u64,
+        window_ns: u64,
+        evs: &[Event],
+        out: &mut Vec<Event>,
+    ) -> bool {
+        let mut any = false;
+        for s in &self.specs {
+            if s.applies_to(tenant)
+                && s.overlaps(t0, window_ns)
+                && matches!(
+                    s.kind,
+                    FaultKind::DvsDropout
+                        | FaultKind::HotPixels { .. }
+                        | FaultKind::TimestampJitter { .. }
+                )
+            {
+                any = true;
+                break;
+            }
+        }
+        if !any {
+            return false;
+        }
+
+        out.clear();
+        let t_end = t0 + window_ns;
+        let mut suppressed = 0u64;
+        let mut jittered = false;
+        'events: for e in evs {
+            let mut ev = *e;
+            for s in &self.specs {
+                if !s.applies_to(tenant) || !s.covers(e.t_ns) {
+                    continue;
+                }
+                match s.kind {
+                    FaultKind::DvsDropout => {
+                        suppressed += 1;
+                        continue 'events;
+                    }
+                    FaultKind::TimestampJitter { amp_us } => {
+                        let amp_ns = (amp_us * 1e3) as u64;
+                        let off = jitter_offset_ns(self.seed, e, amp_ns);
+                        ev.t_ns = ev
+                            .t_ns
+                            .saturating_add_signed(off)
+                            .clamp(t0, t_end.saturating_sub(1));
+                        jittered = true;
+                    }
+                    _ => {}
+                }
+            }
+            out.push(ev);
+        }
+
+        // hot pixels: spurious events on the stuck positions, one per
+        // period tick inside (activation window ∩ this window)
+        let mut injected = 0u64;
+        for i in 0..self.specs.len() {
+            let s = self.specs[i];
+            let FaultKind::HotPixels { pixels } = s.kind else { continue };
+            if !s.applies_to(tenant) || !s.overlaps(t0, window_ns) {
+                continue;
+            }
+            let px = self.hot_pixels[i].get_or_insert_with(|| {
+                let (w, h) = dims;
+                let mut rng = Rng::seed_from_u64(mix(self.seed, i as u64));
+                (0..pixels)
+                    .map(|_| {
+                        (
+                            rng.gen_below(w.max(1) as u64) as u16,
+                            rng.gen_below(h.max(1) as u64) as u16,
+                        )
+                    })
+                    .collect()
+            });
+            let lo = t0.max(s.t0_ns);
+            let hi = t_end.min(s.t1_ns);
+            let mut k = lo.div_ceil(HOT_PIXEL_PERIOD_NS);
+            while k * HOT_PIXEL_PERIOD_NS < hi {
+                let t = k * HOT_PIXEL_PERIOD_NS;
+                for &(x, y) in px.iter() {
+                    out.push(Event { t_ns: t, x, y, polarity: Polarity::On });
+                    injected += 1;
+                }
+                k += 1;
+            }
+        }
+
+        if jittered || injected > 0 {
+            out.sort_by_key(|e| e.t_ns);
+        }
+        self.counters.suppressed_events += suppressed;
+        self.counters.injected_events += injected;
+        if suppressed > 0 || injected > 0 || jittered {
+            self.touch(tenant, t0);
+        }
+        true
+    }
+
+    /// Is the frame captured at `fts` for `tenant` blacked out?
+    pub fn frame_blacked(&mut self, tenant: usize, fts: u64) -> bool {
+        let hit = self.specs.iter().any(|s| {
+            matches!(s.kind, FaultKind::FrameBlackout) && s.applies_to(tenant) && s.covers(fts)
+        });
+        if hit {
+            self.counters.frames_blacked += 1;
+            let t = tenant.min(self.per_tenant.len() - 1);
+            self.per_tenant[t].frames_blacked += 1;
+            self.touch(tenant, fts);
+        }
+        hit
+    }
+
+    /// Apply any active DMA-timeout penalty to a frame DMA completion.
+    pub fn dma_delay(&mut self, tenant: usize, done_ns: u64) -> u64 {
+        let mut done = done_ns;
+        let mut hit = false;
+        for s in &self.specs {
+            let FaultKind::DmaTimeout { penalty_us } = s.kind else { continue };
+            if s.applies_to(tenant) && s.covers(done_ns) {
+                done = done.saturating_add((penalty_us * 1e3) as u64);
+                hit = true;
+            }
+        }
+        if hit {
+            self.counters.dma_timeouts += 1;
+            self.touch(tenant, done_ns);
+        }
+        done
+    }
+
+    /// Gate one engine dispatch: brownout stall (one scheduling window of
+    /// start delay while the rail sits below the threshold) plus the
+    /// transient-failure retry loop. Pure bookkeeping — the caller (the
+    /// [`Engine::dispatch_faulted`] default) applies the verdict.
+    ///
+    /// [`Engine::dispatch_faulted`]: crate::coordinator::engine::Engine::dispatch_faulted
+    pub fn engine_gate(
+        &mut self,
+        tenant: usize,
+        now_ns: u64,
+        vdd: f64,
+        window_ns: u64,
+    ) -> EngineGate {
+        let mut gate = EngineGate::default();
+        let mut hit = false;
+        for i in 0..self.specs.len() {
+            let s = self.specs[i];
+            if !s.covers(now_ns) {
+                continue;
+            }
+            match s.kind {
+                FaultKind::Brownout { below_vdd } => {
+                    if vdd < below_vdd {
+                        gate.delay_ns += window_ns;
+                        self.counters.brownout_stalls += 1;
+                        hit = true;
+                    }
+                }
+                FaultKind::FlakyDispatch { p } => {
+                    let rng = &mut self.flaky_rng[i];
+                    let mut attempts = 0u32;
+                    loop {
+                        let failed = rng.gen_f64() < p;
+                        if !failed {
+                            break;
+                        }
+                        attempts += 1;
+                        if attempts > RETRY_MAX {
+                            gate.drop = true;
+                            break;
+                        }
+                    }
+                    if attempts > 0 {
+                        let retries = attempts.min(RETRY_MAX);
+                        gate.retries += retries;
+                        gate.delay_ns += retries as u64 * RETRY_BACKOFF_NS;
+                        self.counters.engine_retries += retries as u64;
+                        let t = tenant.min(self.per_tenant.len() - 1);
+                        self.per_tenant[t].retries += retries as u64;
+                        hit = true;
+                    }
+                    if gate.drop {
+                        self.counters.engine_drops += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if hit {
+            self.touch(tenant, now_ns);
+        }
+        gate
+    }
+
+    /// Epoch tick (call at every window close): counts windows spent with
+    /// a brownout active at the current rail.
+    pub fn note_epoch(&mut self, t1_ns: u64, vdd: f64) {
+        let browned = self.specs.iter().any(|s| {
+            matches!(s.kind, FaultKind::Brownout { below_vdd } if vdd < below_vdd)
+                && s.covers(t1_ns.saturating_sub(1))
+        });
+        if browned {
+            self.counters.brownout_epochs += 1;
+        }
+    }
+
+    /// Time tenant `t` spent in degraded windows (ms).
+    pub fn degraded_ms(&self, tenant: usize) -> f64 {
+        self.per_tenant
+            .get(tenant)
+            .map_or(0.0, |s| s.degraded_windows as f64 * self.window_ns as f64 * 1e-6)
+    }
+
+    pub fn tenant_retries(&self, tenant: usize) -> u64 {
+        self.per_tenant.get(tenant).map_or(0, |s| s.retries)
+    }
+
+    pub fn tenant_frames_blacked(&self, tenant: usize) -> u64 {
+        self.per_tenant.get(tenant).map_or(0, |s| s.frames_blacked)
+    }
+}
+
+/// The per-tenant observables the degradation score compares between the
+/// faulted run and its fault-free twin. Both mission and workload reports
+/// lower onto this shape.
+#[derive(Debug, Clone, Default)]
+pub struct TenantObservation {
+    pub deadline_misses: u64,
+    pub events_total: u64,
+    pub avoid_fraction: f64,
+    /// Steer values of the first recorded commands (bounded sample).
+    pub steers: Vec<f32>,
+}
+
+/// One tenant's graceful-degradation scorecard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantDegradation {
+    pub tenant: usize,
+    /// Extra deadline misses vs the fault-free twin (saturating at 0).
+    pub deadline_misses: u64,
+    /// Mean |Δ steer| over the paired command sample.
+    pub steer_divergence: f64,
+    /// |Δ avoid_fraction| vs the twin — collision-behaviour divergence.
+    pub collision_divergence: f64,
+    /// Twin events minus faulted events (negative = spurious injection).
+    pub events_lost: i64,
+    /// Engine retries attributed to this tenant.
+    pub retries: u64,
+    pub frames_blacked: u64,
+    /// Time spent in windows where a fault touched this tenant (ms).
+    pub degraded_ms: f64,
+    /// The weighted rollup; exactly 0.0 for an untouched tenant.
+    pub score: f64,
+}
+
+impl TenantDegradation {
+    /// Score one tenant: faulted run vs its fault-free twin plus the
+    /// session's attribution counters.
+    pub fn from_observations(
+        tenant: usize,
+        baseline: &TenantObservation,
+        faulted: &TenantObservation,
+        session: &FaultSession,
+    ) -> TenantDegradation {
+        let misses = faulted.deadline_misses.saturating_sub(baseline.deadline_misses);
+        let n = baseline.steers.len().min(faulted.steers.len());
+        let steer_divergence = if n == 0 {
+            0.0
+        } else {
+            baseline.steers[..n]
+                .iter()
+                .zip(&faulted.steers[..n])
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / n as f64
+        };
+        let collision_divergence = (faulted.avoid_fraction - baseline.avoid_fraction).abs();
+        let events_lost = baseline.events_total as i64 - faulted.events_total as i64;
+        let retries = session.tenant_retries(tenant);
+        let frames_blacked = session.tenant_frames_blacked(tenant);
+        let degraded_ms = session.degraded_ms(tenant);
+        let score = W_MISS * misses as f64
+            + W_EVENT * events_lost.unsigned_abs() as f64
+            + W_STEER * steer_divergence
+            + W_COLL * collision_divergence
+            + W_RETRY * retries as f64
+            + W_BLACKOUT * frames_blacked as f64
+            + W_DEGRADED_MS * degraded_ms;
+        TenantDegradation {
+            tenant,
+            deadline_misses: misses,
+            steer_divergence,
+            collision_divergence,
+            events_lost,
+            retries,
+            frames_blacked,
+            degraded_ms,
+            score,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("tenant", Value::Num(self.tenant as f64)),
+            ("deadline_misses", Value::Num(self.deadline_misses as f64)),
+            ("steer_divergence", Value::Num(self.steer_divergence)),
+            ("collision_divergence", Value::Num(self.collision_divergence)),
+            ("events_lost", Value::Num(self.events_lost as f64)),
+            ("retries", Value::Num(self.retries as f64)),
+            ("frames_blacked", Value::Num(self.frames_blacked as f64)),
+            ("degraded_ms", Value::Num(self.degraded_ms)),
+            ("score", Value::Num(self.score)),
+        ])
+    }
+}
+
+/// The resilience rollup a faulted run attaches to its report: plan-level
+/// injection counters plus one [`TenantDegradation`] per tenant, scored
+/// against an inline fault-free twin of the same config. Deterministic for
+/// `(config, seed, plan)` on any worker count. Absent (and the report
+/// byte-identical to the healthy pipeline) when the plan is empty.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceReport {
+    pub plan: String,
+    pub counters: FaultCounters,
+    pub tenants: Vec<TenantDegradation>,
+}
+
+impl ResilienceReport {
+    /// Build from the faulted/baseline observation pairs.
+    pub fn score(
+        plan: &FaultPlan,
+        session: &FaultSession,
+        baseline: &[TenantObservation],
+        faulted: &[TenantObservation],
+    ) -> ResilienceReport {
+        debug_assert_eq!(baseline.len(), faulted.len());
+        let tenants = baseline
+            .iter()
+            .zip(faulted)
+            .enumerate()
+            .map(|(i, (b, f))| TenantDegradation::from_observations(i, b, f, session))
+            .collect();
+        ResilienceReport { plan: plan.label(), counters: session.counters, tenants }
+    }
+
+    /// Tenants whose degradation score is nonzero.
+    pub fn degraded_tenants(&self) -> u64 {
+        self.tenants.iter().filter(|t| t.score > 0.0).count() as u64
+    }
+
+    /// Total degradation score across tenants — the governor-comparison
+    /// metric of the e2e resilience bench.
+    pub fn total_score(&self) -> f64 {
+        self.tenants.iter().map(|t| t.score).sum()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let c = &self.counters;
+        Value::obj(vec![
+            ("plan", Value::Str(self.plan.clone())),
+            ("injected_events", Value::Num(c.injected_events as f64)),
+            ("suppressed_events", Value::Num(c.suppressed_events as f64)),
+            ("engine_retries", Value::Num(c.engine_retries as f64)),
+            ("engine_drops", Value::Num(c.engine_drops as f64)),
+            ("brownout_stalls", Value::Num(c.brownout_stalls as f64)),
+            ("brownout_epochs", Value::Num(c.brownout_epochs as f64)),
+            ("dma_timeouts", Value::Num(c.dma_timeouts as f64)),
+            ("frames_blacked", Value::Num(c.frames_blacked as f64)),
+            ("degraded_tenants", Value::Num(self.degraded_tenants() as f64)),
+            ("total_score", Value::Num(self.total_score())),
+            ("tenants", Value::Arr(self.tenants.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_ns: u64, x: u16, y: u16) -> Event {
+        Event { t_ns, x, y, polarity: Polarity::On }
+    }
+
+    #[test]
+    fn parse_round_trips_through_labels() {
+        for s in [
+            "dvs_dropout",
+            "hot_pixels:16@1",
+            "jitter:500",
+            "frame_blackout@2",
+            "brownout:0.65",
+            "flaky:0.2",
+            "dma_timeout:1500",
+            "dvs_dropout+flaky:0.2",
+            "jitter:250~0.2-0.8",
+        ] {
+            let plan = FaultPlan::parse(s).unwrap();
+            let again = FaultPlan::parse(&plan.label()).unwrap();
+            assert_eq!(plan, again, "label round-trip broke for '{s}'");
+        }
+        assert!(FaultPlan::parse("none").unwrap().is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert_eq!(FaultPlan::default().label(), "none");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("warp_core_breach").is_err());
+        assert!(FaultPlan::parse("flaky:1.5").is_err());
+        assert!(FaultPlan::parse("jitter:nan").is_err());
+        assert!(FaultPlan::parse("jitter:-5").is_err());
+        assert!(FaultPlan::parse("dvs_dropout~2-1").is_err());
+        assert!(FaultPlan::parse("dvs_dropout@x").is_err());
+        assert!(FaultPlan::parse("dvs_dropout:3").is_err());
+    }
+
+    #[test]
+    fn sensor_fault_defaults_to_tenant_zero_engine_faults_to_all() {
+        let p = FaultPlan::parse("dvs_dropout").unwrap();
+        assert_eq!(p.specs[0].tenant, Some(0));
+        let p = FaultPlan::parse("dvs_dropout@all").unwrap();
+        assert_eq!(p.specs[0].tenant, None);
+        let p = FaultPlan::parse("brownout").unwrap();
+        assert_eq!(p.specs[0].tenant, None);
+        assert!(p.specs[0].kind.is_soc_wide());
+    }
+
+    #[test]
+    fn inactive_specs_leave_the_window_untouched() {
+        // a spec whose activation window sits beyond the run must take the
+        // zero-work path: transform returns false, gates return zeros
+        let plan = FaultPlan::parse("dvs_dropout~100-200").unwrap();
+        let mut s = plan.session(7, 10_000_000, 1);
+        let evs = [ev(1_000, 3, 4), ev(2_000, 5, 6)];
+        let mut out = Vec::new();
+        assert!(!s.transform_window(0, (132, 128), 0, 10_000_000, &evs, &mut out));
+        assert!(out.is_empty());
+        let g = s.engine_gate(0, 0, 0.8, 10_000_000);
+        assert!(!g.drop);
+        assert_eq!((g.delay_ns, g.retries), (0, 0));
+        assert_eq!(s.dma_delay(0, 5_000), 5_000);
+        assert!(!s.frame_blacked(0, 5_000));
+        assert_eq!(s.counters, FaultCounters::default());
+    }
+
+    #[test]
+    fn dropout_suppresses_only_covered_events() {
+        let plan = FaultPlan::parse("dvs_dropout~0-0.000002").unwrap(); // [0, 2000) ns
+        let mut s = plan.session(7, 10_000_000, 1);
+        let evs = [ev(1_000, 1, 1), ev(2_000, 2, 2), ev(3_000, 3, 3)];
+        let mut out = Vec::new();
+        assert!(s.transform_window(0, (132, 128), 0, 10_000_000, &evs, &mut out));
+        assert_eq!(out, vec![ev(2_000, 2, 2), ev(3_000, 3, 3)]);
+        assert_eq!(s.counters.suppressed_events, 1);
+        assert!(s.degraded_ms(0) > 0.0);
+    }
+
+    #[test]
+    fn dropout_respects_the_tenant_filter() {
+        let plan = FaultPlan::parse("dvs_dropout@1").unwrap();
+        let mut s = plan.session(7, 10_000_000, 2);
+        let evs = [ev(1_000, 1, 1)];
+        let mut out = Vec::new();
+        assert!(!s.transform_window(0, (132, 128), 0, 10_000_000, &evs, &mut out));
+        assert!(s.transform_window(1, (132, 128), 0, 10_000_000, &evs, &mut out));
+        assert!(out.is_empty());
+        assert_eq!(s.counters.suppressed_events, 1);
+        assert_eq!(s.degraded_ms(0), 0.0);
+        assert!(s.degraded_ms(1) > 0.0);
+    }
+
+    #[test]
+    fn hot_pixels_inject_deterministic_sorted_events() {
+        let plan = FaultPlan::parse("hot_pixels:4").unwrap();
+        let run = || {
+            let mut s = plan.session(42, 10_000_000, 1);
+            let evs = [ev(500_000, 1, 1), ev(9_500_000, 2, 2)];
+            let mut out = Vec::new();
+            assert!(s.transform_window(0, (132, 128), 0, 10_000_000, &evs, &mut out));
+            (out, s.counters.injected_events)
+        };
+        let (a, na) = run();
+        let (b, nb) = run();
+        assert_eq!(a, b, "hot-pixel injection must be deterministic");
+        assert_eq!(na, nb);
+        // 9 ticks (1..=9 ms) x 4 pixels, plus the two real events
+        assert_eq!(na, 36);
+        assert_eq!(a.len(), 38);
+        assert!(a.windows(2).all(|w| w[0].t_ns <= w[1].t_ns), "must stay sorted");
+        for e in &a {
+            assert!((e.x as usize) < 132 && (e.y as usize) < 128);
+        }
+    }
+
+    #[test]
+    fn jitter_is_order_independent_and_clamped() {
+        let plan = FaultPlan::parse("jitter:100").unwrap();
+        let evs = [ev(50_000, 1, 1), ev(5_000_000, 2, 2), ev(9_990_000, 3, 3)];
+        let mut s1 = plan.session(7, 10_000_000, 1);
+        let mut out1 = Vec::new();
+        assert!(s1.transform_window(0, (132, 128), 0, 10_000_000, &evs, &mut out1));
+        // same events presented in a different order jitter identically
+        let rev = [evs[2], evs[1], evs[0]];
+        let mut s2 = plan.session(7, 10_000_000, 1);
+        let mut out2 = Vec::new();
+        assert!(s2.transform_window(0, (132, 128), 0, 10_000_000, &rev, &mut out2));
+        let mut o1 = out1.clone();
+        let mut o2 = out2.clone();
+        o1.sort_by_key(|e| (e.t_ns, e.x));
+        o2.sort_by_key(|e| (e.t_ns, e.x));
+        assert_eq!(o1, o2, "jitter must be hash-based, not order-based");
+        for e in &out1 {
+            assert!(e.t_ns < 10_000_000, "jitter escaped the window");
+        }
+        assert!(out1.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+    }
+
+    #[test]
+    fn brownout_stalls_below_threshold_only() {
+        let plan = FaultPlan::parse("brownout:0.65").unwrap();
+        let mut s = plan.session(7, 10_000_000, 1);
+        let g = s.engine_gate(0, 0, 0.8, 10_000_000);
+        assert_eq!(g.delay_ns, 0);
+        let g = s.engine_gate(0, 0, 0.6, 10_000_000);
+        assert_eq!(g.delay_ns, 10_000_000);
+        assert_eq!(s.counters.brownout_stalls, 1);
+        s.note_epoch(10_000_000, 0.6);
+        s.note_epoch(20_000_000, 0.8);
+        assert_eq!(s.counters.brownout_epochs, 1);
+    }
+
+    #[test]
+    fn flaky_retries_are_bounded_and_deterministic() {
+        let plan = FaultPlan::parse("flaky:0.9").unwrap();
+        let run = || {
+            let mut s = plan.session(7, 10_000_000, 1);
+            let mut drops = 0u64;
+            let mut retries = 0u64;
+            let mut max_delay = 0u64;
+            for i in 0..200u64 {
+                let g = s.engine_gate(0, i * 1_000, 0.8, 10_000_000);
+                if g.drop {
+                    drops += 1;
+                }
+                retries += g.retries as u64;
+                max_delay = max_delay.max(g.delay_ns);
+                assert!(g.retries <= RETRY_MAX);
+            }
+            (drops, retries, max_delay, s.counters)
+        };
+        let a = run();
+        assert_eq!(a, run(), "flaky stream must replay bit-identically");
+        assert!(a.0 > 0, "p=0.9 must exhaust retries sometimes");
+        assert!(a.1 > 0);
+        assert!(a.2 <= RETRY_MAX as u64 * RETRY_BACKOFF_NS);
+        assert_eq!(a.3.engine_drops, a.0);
+    }
+
+    #[test]
+    fn dma_timeout_delays_completion() {
+        let plan = FaultPlan::parse("dma_timeout:1000").unwrap();
+        let mut s = plan.session(7, 10_000_000, 1);
+        assert_eq!(s.dma_delay(0, 5_000), 1_005_000);
+        assert_eq!(s.counters.dma_timeouts, 1);
+    }
+
+    #[test]
+    fn frame_blackout_hits_covered_frames() {
+        let plan = FaultPlan::parse("frame_blackout~0-0.1").unwrap();
+        let mut s = plan.session(7, 10_000_000, 1);
+        assert!(s.frame_blacked(0, 50_000_000));
+        assert!(!s.frame_blacked(0, 150_000_000));
+        assert_eq!(s.counters.frames_blacked, 1);
+        assert_eq!(s.tenant_frames_blacked(0), 1);
+    }
+
+    #[test]
+    fn union_dedups_fanned_out_plans() {
+        let p = FaultPlan::parse("dvs_dropout+brownout:0.65").unwrap();
+        let copies = vec![p.clone(), p.clone(), p.clone()];
+        let u = FaultPlan::union(copies.iter());
+        assert_eq!(u, p, "fan-out copies must not double-apply");
+    }
+
+    #[test]
+    fn untouched_tenant_scores_exactly_zero() {
+        let plan = FaultPlan::parse("dvs_dropout").unwrap();
+        let session = plan.session(7, 10_000_000, 2);
+        let base = TenantObservation {
+            deadline_misses: 3,
+            events_total: 1000,
+            avoid_fraction: 0.25,
+            steers: vec![0.1, -0.2, 0.3],
+        };
+        let d = TenantDegradation::from_observations(1, &base, &base.clone(), &session);
+        assert_eq!(d.score, 0.0);
+        assert_eq!(d.deadline_misses, 0);
+        assert_eq!(d.events_lost, 0);
+    }
+
+    #[test]
+    fn degradation_scores_what_changed() {
+        let plan = FaultPlan::parse("dvs_dropout").unwrap();
+        let mut session = plan.session(7, 10_000_000, 1);
+        let evs = [ev(1_000, 1, 1), ev(2_000, 2, 2)];
+        let mut out = Vec::new();
+        assert!(session.transform_window(0, (132, 128), 0, 10_000_000, &evs, &mut out));
+        let base = TenantObservation {
+            deadline_misses: 1,
+            events_total: 1000,
+            avoid_fraction: 0.2,
+            steers: vec![0.1, 0.2],
+        };
+        let faulted = TenantObservation {
+            deadline_misses: 4,
+            events_total: 600,
+            avoid_fraction: 0.5,
+            steers: vec![0.3, 0.2],
+        };
+        let r = ResilienceReport::score(&plan, &session, &[base], &[faulted]);
+        assert_eq!(r.tenants.len(), 1);
+        let t = &r.tenants[0];
+        assert_eq!(t.deadline_misses, 3);
+        assert_eq!(t.events_lost, 400);
+        assert!(t.steer_divergence > 0.0);
+        assert!(t.collision_divergence > 0.0);
+        assert!(t.score > 0.0);
+        assert_eq!(r.degraded_tenants(), 1);
+        assert!(r.total_score() >= t.score);
+        let json = r.to_json();
+        assert_eq!(json.get("degraded_tenants").and_then(Value::as_f64), Some(1.0));
+        assert!(json.get("tenants").and_then(|v| v.as_arr()).is_some());
+        assert_eq!(json.get("plan").and_then(Value::as_str), Some("dvs_dropout@0"));
+    }
+}

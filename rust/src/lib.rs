@@ -97,6 +97,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cutie;
 pub mod event;
+pub mod faults;
 pub mod metrics;
 pub mod nets;
 pub mod obs;

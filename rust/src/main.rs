@@ -26,6 +26,7 @@ use kraken::coordinator::{
     WorkloadConfig,
 };
 use kraken::cutie::CutieEngine;
+use kraken::faults::FaultPlan;
 use kraken::metrics::{fmt_eff, fmt_energy, fmt_power, Series};
 use kraken::nets;
 use kraken::pulp::cluster::PulpCluster;
@@ -52,25 +53,32 @@ COMMANDS:
                                   regenerate paper figure series
   run [--duration S] [--scene corridor|bar|edge|ring|noise]
       [--seed N] [--artifacts DIR] [--vdd V] [--live] [--json]
-      [--timeline PATH]
+      [--timeline PATH] [--faults SPEC]
                                   run the Fig. 2 mission; --timeline writes
                                   a deterministic Chrome-trace JSON of the
                                   DES (Perfetto / chrome://tracing loadable,
-                                  DESIGN.md §12)
+                                  DESIGN.md §12); --faults injects a
+                                  deterministic fault plan (`+`-joined
+                                  `name[:arg][@tenant][~t0-t1]` tokens, e.g.
+                                  dvs_dropout+brownout:0.7~0.2-0.8) and adds
+                                  a resilience section scored against an
+                                  inline fault-free twin (DESIGN.md §14)
   fleet [--missions N] [--threads T] [--duration S] [--scene ...]
         [--seed BASE] [--vdd V] [--vdds V1,V2,...] [--gates G1,off,...]
-        [--governors G1,G2,...] [--store DIR] [--json]
+        [--governors G1,G2,...] [--faults P1,P2,...] [--store DIR] [--json]
                                   run N missions in parallel (seeds
                                   BASE..BASE+N, one SoC per worker);
-                                  --vdds / --gates / --governors lift the
-                                  fleet to a config grid (cross-product
-                                  cells) whose cells share one captured
-                                  sensor trace per distinct scene/seed
-                                  (DESIGN.md §9, §10)
+                                  --vdds / --gates / --governors / --faults
+                                  lift the fleet to a config grid
+                                  (cross-product cells; `none` is a valid
+                                  fault plan, pinning a healthy cell next
+                                  to faulted ones) whose cells share one
+                                  captured sensor trace per distinct
+                                  scene/seed (DESIGN.md §9, §10, §14)
   workload [--tenants N] [--duration S] [--scene ...] [--seed BASE]
            [--vdd V] [--window-ms MS]
            [--governor fixed|ladder|deadline] [--qos P[:DLms],...] [--json]
-           [--timeline PATH]
+           [--timeline PATH] [--faults SPEC]
                                   run N tenant sensor streams sharing ONE
                                   SoC's engines (stream seeds BASE..BASE+N):
                                   per-tenant rates plus shared-engine
@@ -79,7 +87,12 @@ COMMANDS:
                                   --qos gives tenant i priority P (0 =
                                   highest) and an optional deadline in ms
                                   (DESIGN.md §10); --timeline writes the
-                                  deterministic Chrome-trace JSON (§12)
+                                  deterministic Chrome-trace JSON (§12);
+                                  --faults injects a deterministic fault
+                                  plan (per-sensor faults default to tenant
+                                  0; @N retargets, @all hits every tenant)
+                                  and adds per-tenant degradation scores
+                                  vs a fault-free twin (§14)
   serve [--stdio | --listen ADDR] [--workers N] [--queue N] [--cache-cap N]
         [--trace-cache N] [--store DIR]
                                   resident mission service: JSON-lines
@@ -216,8 +229,11 @@ fn run() -> kraken::Result<()> {
             let live = args.flag("live");
             let json = args.flag("json");
             let timeline = args.opt("timeline")?;
+            let faults = args.opt("faults")?;
             args.finish()?;
-            run_mission(cfg, duration, &scene, seed, artifacts, vdd, live, json, timeline)
+            run_mission(
+                cfg, duration, &scene, seed, artifacts, vdd, live, json, timeline, faults,
+            )
         }
         Some("fleet") => {
             let missions: usize = args.opt("missions")?.map_or(Ok(8), |s| s.parse())?;
@@ -229,12 +245,13 @@ fn run() -> kraken::Result<()> {
             let vdds = args.opt("vdds")?;
             let gates = args.opt("gates")?;
             let governors = args.opt("governors")?;
+            let faults = args.opt("faults")?;
             let store = args.opt("store")?;
             let json = args.flag("json");
             args.finish()?;
             run_fleet_cmd(
                 cfg, missions, threads, duration, &scene, seed, vdd, vdds, gates, governors,
-                store, json,
+                faults, store, json,
             )
         }
         Some("workload") => {
@@ -248,10 +265,11 @@ fn run() -> kraken::Result<()> {
             let qos = args.opt("qos")?;
             let json = args.flag("json");
             let timeline = args.opt("timeline")?;
+            let faults = args.opt("faults")?;
             args.finish()?;
             run_workload_cmd(
                 cfg, tenants, duration, &scene, seed, vdd, window_ms, governor, qos, json,
-                timeline,
+                timeline, faults,
             )
         }
         Some("serve") => {
@@ -425,6 +443,7 @@ fn run_mission(
     live: bool,
     json: bool,
     timeline: Option<String>,
+    faults: Option<String>,
 ) -> kraken::Result<()> {
     let scene = SceneKind::parse(scene, seed)?;
     let mcfg = MissionConfig {
@@ -434,6 +453,7 @@ fn run_mission(
         power: PowerConfig::fixed(vdd),
         artifacts_dir: artifacts.map(Into::into),
         print_live: live,
+        faults: faults.as_deref().map(FaultPlan::parse).transpose()?.unwrap_or_default(),
         ..Default::default()
     };
     let mut mission = Mission::new(cfg, mcfg)?;
@@ -548,6 +568,17 @@ fn parse_qos_list(s: &str) -> kraken::Result<Vec<QosSpec>> {
         .collect()
 }
 
+/// Parse a comma-separated fault-plan axis list (`none,brownout:0.7`):
+/// each element is a full plan spec in the `--faults` grammar, one grid
+/// cell per element. Comma never appears inside the plan grammar, so the
+/// split is unambiguous.
+fn parse_faults_list(s: &str) -> kraken::Result<Vec<FaultPlan>> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| FaultPlan::parse(t.trim()))
+        .collect()
+}
+
 /// Parse a comma-separated gating-axis list: each element is an
 /// `idle_gate_s` in seconds, or `off` for gating disabled.
 fn parse_gate_list(s: &str) -> kraken::Result<Vec<Option<f64>>> {
@@ -578,6 +609,7 @@ fn run_fleet_cmd(
     vdds: Option<String>,
     gates: Option<String>,
     governors: Option<String>,
+    faults: Option<String>,
     store: Option<String>,
     json: bool,
 ) -> kraken::Result<()> {
@@ -604,8 +636,13 @@ fn run_fleet_cmd(
     if let Some(g) = governors {
         grid.governors = parse_governor_list(&g)?;
     }
-    let has_axes =
-        !grid.vdds.is_empty() || !grid.idle_gates.is_empty() || !grid.governors.is_empty();
+    if let Some(f) = faults {
+        grid.faults = parse_faults_list(&f)?;
+    }
+    let has_axes = !grid.vdds.is_empty()
+        || !grid.idle_gates.is_empty()
+        || !grid.governors.is_empty()
+        || !grid.faults.is_empty();
     // --store: capture each distinct sensor key once *ever* — cells replay
     // traces recorded by any earlier fleet/serve process from disk, and
     // this run's fresh captures persist for the next one (DESIGN.md §13)
@@ -653,6 +690,7 @@ fn run_workload_cmd(
     qos: Option<String>,
     json: bool,
     timeline: Option<String>,
+    faults: Option<String>,
 ) -> kraken::Result<()> {
     let base = MissionConfig {
         duration_s: duration,
@@ -660,6 +698,10 @@ fn run_workload_cmd(
         seed,
         window_ms,
         power: PowerConfig::fixed(vdd),
+        // fan-out replicates the plan into every stream; the per-SoC
+        // session is the exact-dedup union, so one plan = one session
+        // (per-sensor faults still default to tenant 0 — use @N / @all)
+        faults: faults.as_deref().map(FaultPlan::parse).transpose()?.unwrap_or_default(),
         ..Default::default()
     };
     let mut wcfg = WorkloadConfig::fan_out(&base, tenants);
@@ -872,6 +914,18 @@ mod tests {
             vec![GovernorKind::Fixed, GovernorKind::Ladder, GovernorKind::DeadlineAware]
         );
         assert!(super::parse_governor_list("overdrive").is_err());
+    }
+
+    #[test]
+    fn faults_list_parsing() {
+        let plans =
+            super::parse_faults_list("none, dvs_dropout+flaky:0.2 ,brownout:0.7").unwrap();
+        assert_eq!(plans.len(), 3);
+        assert!(plans[0].is_empty(), "'none' pins an explicit healthy cell");
+        assert_eq!(plans[1].label(), "dvs_dropout@0+flaky:0.2");
+        assert_eq!(plans[2].label(), "brownout:0.7");
+        assert!(super::parse_faults_list("warp_core_breach").is_err());
+        assert!(super::parse_faults_list("flaky:1.5").is_err());
     }
 
     #[test]

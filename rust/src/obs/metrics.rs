@@ -154,12 +154,56 @@ impl ReqKind {
     }
 }
 
+/// Per-request-kind fault-injection rollup: what the resilience reports
+/// served under this kind injected and how many tenants degraded. Zero
+/// across the board while no faulted run has been served (the JSON shape
+/// is stable either way). Cached replays do not re-record — like the
+/// latency histograms, these meter work actually executed.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    faulted_runs: AtomicU64,
+    injected_events: AtomicU64,
+    suppressed_events: AtomicU64,
+    engine_retries: AtomicU64,
+    brownout_epochs: AtomicU64,
+    degraded_tenants: AtomicU64,
+}
+
+impl FaultStats {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("faulted_runs", Value::Num(self.faulted_runs.load(Ordering::Relaxed) as f64)),
+            (
+                "injected_events",
+                Value::Num(self.injected_events.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "suppressed_events",
+                Value::Num(self.suppressed_events.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "engine_retries",
+                Value::Num(self.engine_retries.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "brownout_epochs",
+                Value::Num(self.brownout_epochs.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "degraded_tenants",
+                Value::Num(self.degraded_tenants.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+}
+
 /// The serve-layer metrics registry (see module docs). All counters are
 /// monotonic since process start; concurrent recording is lock-free.
 #[derive(Debug)]
 pub struct Metrics {
     queue_wait_ns: [Histogram; ReqKind::ALL.len()],
     exec_ns: [Histogram; ReqKind::ALL.len()],
+    faults: [FaultStats; ReqKind::ALL.len()],
     rejected: AtomicU64,
     queue_depth_hwm: AtomicU64,
 }
@@ -175,6 +219,7 @@ impl Metrics {
         Metrics {
             queue_wait_ns: std::array::from_fn(|_| Histogram::new()),
             exec_ns: std::array::from_fn(|_| Histogram::new()),
+            faults: std::array::from_fn(|_| FaultStats::default()),
             rejected: AtomicU64::new(0),
             queue_depth_hwm: AtomicU64::new(0),
         }
@@ -193,6 +238,23 @@ impl Metrics {
     /// One request bounced by backpressure (queue full or oversized).
     pub fn note_reject(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Roll one faulted run's resilience report into `kind`'s fault
+    /// counters (called once per executed report that carries one; cache
+    /// replays do not re-record).
+    pub fn note_faults(&self, kind: ReqKind, r: &crate::faults::ResilienceReport) {
+        let f = &self.faults[kind.index()];
+        f.faulted_runs.fetch_add(1, Ordering::Relaxed);
+        f.injected_events.fetch_add(r.counters.injected_events, Ordering::Relaxed);
+        f.suppressed_events.fetch_add(r.counters.suppressed_events, Ordering::Relaxed);
+        f.engine_retries.fetch_add(r.counters.engine_retries, Ordering::Relaxed);
+        f.brownout_epochs.fetch_add(r.counters.brownout_epochs, Ordering::Relaxed);
+        f.degraded_tenants.fetch_add(r.degraded_tenants(), Ordering::Relaxed);
+    }
+
+    pub fn fault_stats(&self, kind: ReqKind) -> &FaultStats {
+        &self.faults[kind.index()]
     }
 
     /// Observe the queue depth after an enqueue; keeps the high-water mark.
@@ -217,7 +279,7 @@ impl Metrics {
     }
 
     /// The full registry as JSON: backpressure gauges plus per-kind
-    /// `{queue_wait_ns, exec_ns}` histogram summaries (every kind always
+    /// `{queue_wait_ns, exec_ns, faults}` summaries (every kind always
     /// present, zeroed when unused, so the shape is stable).
     pub fn to_json(&self) -> Value {
         let kinds = ReqKind::ALL
@@ -228,6 +290,7 @@ impl Metrics {
                     Value::obj(vec![
                         ("queue_wait_ns", self.queue_wait(*k).to_json()),
                         ("exec_ns", self.exec(*k).to_json()),
+                        ("faults", self.fault_stats(*k).to_json()),
                     ]),
                 )
             })
@@ -315,6 +378,63 @@ mod tests {
             fleet.get("queue_wait_ns").and_then(|e| e.get("count")).and_then(Value::as_u64),
             Some(0)
         );
+    }
+
+    #[test]
+    fn fault_counters_roll_up_per_kind_and_start_zeroed() {
+        let m = Metrics::new();
+        // the shape is stable before any faulted run: zeroed, not absent
+        let doc = m.to_json();
+        let wf = doc
+            .get("kinds")
+            .and_then(|k| k.get("workload"))
+            .and_then(|w| w.get("faults"))
+            .expect("faults section always present");
+        assert_eq!(wf.get("faulted_runs").and_then(Value::as_u64), Some(0));
+        assert_eq!(wf.get("degraded_tenants").and_then(Value::as_u64), Some(0));
+        // one resilience report rolls into its kind only
+        let report = crate::faults::ResilienceReport {
+            plan: "dvs_dropout".into(),
+            counters: crate::faults::FaultCounters {
+                injected_events: 3,
+                suppressed_events: 40,
+                engine_retries: 2,
+                brownout_epochs: 5,
+                ..Default::default()
+            },
+            tenants: vec![crate::faults::TenantDegradation {
+                tenant: 0,
+                deadline_misses: 1,
+                steer_divergence: 0.0,
+                collision_divergence: 0.0,
+                events_lost: 40,
+                retries: 2,
+                frames_blacked: 0,
+                degraded_ms: 10.0,
+                score: 1.0,
+            }],
+        };
+        m.note_faults(ReqKind::Workload, &report);
+        m.note_faults(ReqKind::Workload, &report);
+        let doc = m.to_json();
+        let wf = doc
+            .get("kinds")
+            .and_then(|k| k.get("workload"))
+            .and_then(|w| w.get("faults"))
+            .unwrap();
+        assert_eq!(wf.get("faulted_runs").and_then(Value::as_u64), Some(2));
+        assert_eq!(wf.get("suppressed_events").and_then(Value::as_u64), Some(80));
+        assert_eq!(wf.get("injected_events").and_then(Value::as_u64), Some(6));
+        assert_eq!(wf.get("engine_retries").and_then(Value::as_u64), Some(4));
+        assert_eq!(wf.get("brownout_epochs").and_then(Value::as_u64), Some(10));
+        assert_eq!(wf.get("degraded_tenants").and_then(Value::as_u64), Some(2));
+        // other kinds stay untouched
+        let rf = doc
+            .get("kinds")
+            .and_then(|k| k.get("run"))
+            .and_then(|w| w.get("faults"))
+            .unwrap();
+        assert_eq!(rf.get("faulted_runs").and_then(Value::as_u64), Some(0));
     }
 
     #[test]

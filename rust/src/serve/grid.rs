@@ -2,12 +2,12 @@
 //!
 //! `FleetConfig` replicates one base mission over a seed range. A
 //! [`GridConfig`] generalizes that to a sharded parameter sweep: any subset
-//! of {seed, duration, scene, vdd, gating policy, power governor} can
-//! carry a list of values, and the grid is the cross-product of all
-//! non-empty axes (an empty axis inherits the base config's value). Cells
-//! are emitted in a fixed nested order — seed, then duration, then scene,
-//! then vdd, then gate, then governor, innermost last — so a grid is a
-//! deterministic `Vec<MissionConfig>`
+//! of {seed, duration, scene, vdd, gating policy, power governor, fault
+//! plan} can carry a list of values, and the grid is the cross-product of
+//! all non-empty axes (an empty axis inherits the base config's value).
+//! Cells are emitted in a fixed nested order — seed, then duration, then
+//! scene, then vdd, then gate, then governor, then faults, innermost
+//! last — so a grid is a deterministic `Vec<MissionConfig>`
 //! that runs through the existing fleet machinery
 //! ([`crate::coordinator::fleet::run_configs`]) or the serve worker pool,
 //! with bit-identical per-cell reports either way.
@@ -24,6 +24,7 @@ use crate::coordinator::fleet::{
 use crate::coordinator::governor::GovernorKind;
 use crate::coordinator::pipeline::MissionConfig;
 use crate::coordinator::workload::WorkloadConfig;
+use crate::faults::FaultPlan;
 use crate::sensors::scene::SceneKind;
 use crate::store::Store;
 use crate::util::json::Value;
@@ -52,6 +53,13 @@ pub struct GridConfig {
     /// [`run_workload_grid`]; the mission-level [`GridConfig::cells`]
     /// path rejects them rather than silently dropping the axis.
     pub tenants: Vec<usize>,
+    /// Fault-plan axis ([`FaultPlan`]); empty = inherit the base config's
+    /// plan (normally the empty, bit-identical-to-healthy plan). The
+    /// resilience comparison surface: sweep `faults=[none, brownout, ...]`
+    /// against a governor axis to table degradation per policy. Fault
+    /// plans are excluded from sensor trace keys, so the healthy and
+    /// faulted cells of one stream share a single capture.
+    pub faults: Vec<FaultPlan>,
     pub threads: usize,
 }
 
@@ -76,7 +84,7 @@ fn axis<T: Copy>(xs: &[T]) -> Vec<Option<T>> {
 /// Checked cross-product size of a grid's axis lengths (an empty axis
 /// counts as the single inherited cell). `None` on usize overflow — the
 /// protocol layer uses this to reject absurd grids before building them.
-pub fn cell_count(axis_lens: [usize; 7]) -> Option<usize> {
+pub fn cell_count(axis_lens: [usize; 8]) -> Option<usize> {
     axis_lens
         .iter()
         .try_fold(1usize, |acc, &n| acc.checked_mul(n.max(1)))
@@ -96,6 +104,7 @@ impl GridConfig {
             idle_gates: Vec::new(),
             governors: Vec::new(),
             tenants: Vec::new(),
+            faults: Vec::new(),
             threads,
         }
     }
@@ -125,6 +134,7 @@ impl GridConfig {
             self.vdds.len(),
             self.idle_gates.len(),
             self.governors.len(),
+            self.faults.len(),
             self.tenants.len(),
         ])
         .unwrap_or(usize::MAX)
@@ -155,58 +165,74 @@ impl GridConfig {
         self.mission_axis_cells()
     }
 
-    /// The 6 mission axes resolved to cells, ignoring the tenants axis
+    /// The 7 mission axes resolved to cells, ignoring the tenants axis
     /// (each of these fans out per tenants value in `workload_cells`).
     fn mission_axis_cells(&self) -> Vec<GridCell> {
         // capacity capped: len() saturates on overflow and the protocol
         // rejects oversized grids, but a direct caller must not trigger a
         // capacity-overflow abort here
         let mut out = Vec::with_capacity(self.len().min(crate::serve::protocol::MAX_CELLS));
+        // FaultPlan is non-Copy, so its axis normalizes by reference
+        let fault_axis: Vec<Option<&FaultPlan>> = if self.faults.is_empty() {
+            vec![None]
+        } else {
+            self.faults.iter().map(Some).collect()
+        };
         for &seed in &axis(&self.seeds) {
             for &dur in &axis(&self.durations) {
                 for &scene in &axis(&self.scenes) {
                     for &vdd in &axis(&self.vdds) {
                         for &gate in &axis(&self.idle_gates) {
                             for &gov in &axis(&self.governors) {
-                                let mut cfg = self.base.clone();
-                                if let Some(d) = dur {
-                                    cfg.duration_s = d;
+                                for &faults in &fault_axis {
+                                    let mut cfg = self.base.clone();
+                                    if let Some(d) = dur {
+                                        cfg.duration_s = d;
+                                    }
+                                    if let Some(s) = scene {
+                                        cfg.scene = s;
+                                    }
+                                    if let Some(v) = vdd {
+                                        cfg.power.vdd = Some(v);
+                                    }
+                                    if let Some(g) = gate {
+                                        cfg.power.idle_gate_s = g;
+                                    }
+                                    if let Some(g) = gov {
+                                        cfg.power.governor = g;
+                                    }
+                                    if let Some(f) = faults {
+                                        cfg.faults = f.clone();
+                                    }
+                                    // reseed last so the seed reaches the scene
+                                    // (matches MissionConfig::with_seed discipline)
+                                    if let Some(s) = seed {
+                                        cfg = cfg.with_seed(s);
+                                    }
+                                    let vdd_s = match cfg.power.vdd {
+                                        Some(v) => format!("{v:.2}"),
+                                        None => "auto".into(),
+                                    };
+                                    let gate_s = match cfg.power.idle_gate_s {
+                                        Some(g) => format!("{g:.3}"),
+                                        None => "off".into(),
+                                    };
+                                    let mut label = format!(
+                                        "seed={} dur={:.3}s scene={} vdd={} gate={} gov={}",
+                                        cfg.seed,
+                                        cfg.duration_s,
+                                        cfg.scene.label(),
+                                        vdd_s,
+                                        gate_s,
+                                        cfg.power.governor.label()
+                                    );
+                                    // labels only grow when the axis is swept, so
+                                    // fault-free grids keep their legacy labels
+                                    if !self.faults.is_empty() {
+                                        label.push_str(&format!(" faults={}", cfg.faults.label()));
+                                    }
+                                    out.push(GridCell { label, cfg });
                                 }
-                                if let Some(s) = scene {
-                                    cfg.scene = s;
-                                }
-                                if let Some(v) = vdd {
-                                    cfg.power.vdd = Some(v);
-                                }
-                                if let Some(g) = gate {
-                                    cfg.power.idle_gate_s = g;
-                                }
-                                if let Some(g) = gov {
-                                    cfg.power.governor = g;
-                                }
-                                // reseed last so the seed reaches the scene
-                                // (matches MissionConfig::with_seed discipline)
-                                if let Some(s) = seed {
-                                    cfg = cfg.with_seed(s);
-                                }
-                                let vdd_s = match cfg.power.vdd {
-                                    Some(v) => format!("{v:.2}"),
-                                    None => "auto".into(),
-                                };
-                                let gate_s = match cfg.power.idle_gate_s {
-                                    Some(g) => format!("{g:.3}"),
-                                    None => "off".into(),
-                                };
-                                let label = format!(
-                                    "seed={} dur={:.3}s scene={} vdd={} gate={} gov={}",
-                                    cfg.seed,
-                                    cfg.duration_s,
-                                    cfg.scene.label(),
-                                    vdd_s,
-                                    gate_s,
-                                    cfg.power.governor.label()
-                                );
-                                out.push(GridCell { label, cfg });
                             }
                         }
                     }
@@ -477,9 +503,9 @@ mod tests {
 
     #[test]
     fn cell_count_is_checked_against_overflow() {
-        assert_eq!(cell_count([0, 0, 0, 0, 0, 0, 0]), Some(1));
-        assert_eq!(cell_count([2, 0, 3, 0, 0, 0, 0]), Some(6));
-        assert_eq!(cell_count([usize::MAX, 2, 1, 1, 1, 1, 1]), None);
+        assert_eq!(cell_count([0, 0, 0, 0, 0, 0, 0, 0]), Some(1));
+        assert_eq!(cell_count([2, 0, 3, 0, 0, 0, 0, 0]), Some(6));
+        assert_eq!(cell_count([usize::MAX, 2, 1, 1, 1, 1, 1, 1]), None);
         let mut g = base_grid();
         g.seeds = vec![1, 2];
         g.idle_gates = vec![Some(0.01), None, Some(0.1)];
@@ -543,6 +569,24 @@ mod tests {
         assert_eq!(wcells[3].cfg.power.governor, GovernorKind::Ladder);
         assert_eq!(wcells[3].cfg.tenants(), 2);
         assert!(wcells[3].label.contains("tenants=2"), "{}", wcells[3].label);
+    }
+
+    #[test]
+    fn faults_axis_fans_out_inside_the_governor_axis() {
+        let mut g = base_grid();
+        g.governors = vec![GovernorKind::Fixed, GovernorKind::DeadlineAware];
+        g.faults = vec![FaultPlan::default(), FaultPlan::parse("brownout:0.7").unwrap()];
+        assert_eq!(g.len(), 4);
+        let cells = g.cells();
+        assert!(cells[0].cfg.faults.is_empty());
+        assert!(!cells[1].cfg.faults.is_empty());
+        assert_eq!(cells[1].cfg.power.governor, GovernorKind::Fixed);
+        assert_eq!(cells[3].cfg.power.governor, GovernorKind::DeadlineAware);
+        assert!(cells[0].label.contains("faults=none"), "{}", cells[0].label);
+        assert!(cells[3].label.contains("faults=brownout:0.7"), "{}", cells[3].label);
+        // a fault-free grid keeps its legacy labels
+        let plain = base_grid();
+        assert!(!plain.cells()[0].label.contains("faults"), "{}", plain.cells()[0].label);
     }
 
     #[test]

@@ -141,6 +141,13 @@ impl Server {
         self.pool.workers()
     }
 
+    /// The TCP address a [`serve_listen`] loop bound for this server
+    /// (`None` until the listener is up) — lets tests and embedders bind
+    /// port 0 and discover the real port.
+    pub fn listen_addr(&self) -> Option<std::net::SocketAddr> {
+        *self.listen_addr.lock().unwrap()
+    }
+
     /// Has a `shutdown` request been served? Serving loops exit once true.
     pub fn is_shutting_down(&self) -> bool {
         self.shutting_down.load(Ordering::Relaxed)
@@ -198,6 +205,7 @@ impl Server {
                 idle_gates,
                 governors,
                 tenants,
+                faults,
                 persist,
             } => {
                 let grid = GridConfig {
@@ -210,6 +218,7 @@ impl Server {
                     idle_gates,
                     governors,
                     tenants,
+                    faults,
                     threads: self.pool.workers(),
                 };
                 if !grid.tenants.is_empty() {
@@ -333,6 +342,11 @@ impl Server {
                 .pool
                 .run_configs_as(rk, &self.soc, &cfgs, traces)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
+            for r in &reports {
+                if let Some(res) = &r.resilience {
+                    self.metrics.note_faults(rk, res);
+                }
+            }
             let report = match (kind, labels) {
                 ("run", _) => reports
                     .first()
@@ -379,6 +393,11 @@ impl Server {
                 .pool
                 .run_workloads_as(rk, &self.soc, &cfgs, traces)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
+            for r in &reports {
+                if let Some(res) = &r.resilience {
+                    self.metrics.note_faults(rk, res);
+                }
+            }
             let report = match (kind, labels) {
                 ("workload", _) => reports
                     .first()
@@ -989,6 +1008,69 @@ mod tests {
             reports[1].get("tenants").and_then(Value::as_arr).map(|t| t.len()),
             Some(2)
         );
+    }
+
+    #[test]
+    fn faulted_run_reports_resilience_and_meters_fault_counters() {
+        let s = server();
+        let line = r#"{"kind":"run","duration_s":0.2,"dvs_sample_hz":1000.0,"seed":3,"faults":"dvs_dropout"}"#;
+        let a = s.handle_line(line).unwrap();
+        let v = parse(&a).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{a}");
+        let res = v
+            .get("report")
+            .and_then(|r| r.get("resilience"))
+            .expect("faulted run must carry a resilience section");
+        assert_eq!(res.get("plan").and_then(Value::as_str), Some("dvs_dropout@0"));
+        assert!(
+            res.get("suppressed_events").and_then(Value::as_f64).unwrap() > 0.0,
+            "{res:?}"
+        );
+        // the same mission without a plan has no resilience section
+        let healthy =
+            r#"{"kind":"run","duration_s":0.2,"dvs_sample_hz":1000.0,"seed":3}"#;
+        let h = parse(&s.handle_line(healthy).unwrap()).unwrap();
+        assert!(h.get("report").and_then(|r| r.get("resilience")).is_none());
+        // the executed faulted run rolled into the run kind's fault stats
+        let m = parse(&s.handle_line(r#"{"kind":"metrics"}"#).unwrap()).unwrap();
+        let f = m
+            .get("report")
+            .and_then(|r| r.get("kinds"))
+            .and_then(|k| k.get("run"))
+            .and_then(|r| r.get("faults"))
+            .expect("per-kind faults section");
+        assert_eq!(f.get("faulted_runs").and_then(Value::as_u64), Some(1));
+        assert!(f.get("suppressed_events").and_then(Value::as_f64).unwrap() > 0.0);
+        // cache replay: identical bytes, no double-metering
+        assert_eq!(a, s.handle_line(line).unwrap());
+        let m = parse(&s.handle_line(r#"{"kind":"metrics"}"#).unwrap()).unwrap();
+        let f = m
+            .get("report")
+            .and_then(|r| r.get("kinds"))
+            .and_then(|k| k.get("run"))
+            .and_then(|r| r.get("faults"))
+            .unwrap();
+        assert_eq!(f.get("faulted_runs").and_then(Value::as_u64), Some(1));
+    }
+
+    #[test]
+    fn faults_axis_grid_serves_labeled_resilience_cells() {
+        let s = server();
+        let line = r#"{"kind":"grid","duration_s":0.05,"dvs_sample_hz":300.0,"seed":5,"faults":["none","dvs_dropout"]}"#;
+        let v = parse(&s.handle_line(line).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+        let report = v.get("report").unwrap();
+        let cells = report.get("cells").and_then(Value::as_arr).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].as_str().unwrap().contains("faults=none"));
+        assert!(cells[1].as_str().unwrap().contains("faults=dvs_dropout"));
+        let reports = report
+            .get("fleet")
+            .and_then(|f| f.get("reports"))
+            .and_then(Value::as_arr)
+            .unwrap();
+        assert!(reports[0].get("resilience").is_none(), "healthy cell");
+        assert!(reports[1].get("resilience").is_some(), "faulted cell");
     }
 
     fn tmp_store(tag: &str) -> std::path::PathBuf {

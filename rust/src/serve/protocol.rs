@@ -49,7 +49,14 @@
 //! eviction; a no-op when the server has no `--store`), and a `store`
 //! section in the `stats`/`metrics` responses (disk-tier hit/miss/save/
 //! quarantine counters and on-disk footprint, `null` without a store).
-//! Clients pinning v1–v3 get an error if they send `persist`.
+//! Clients pinning v1–v3 get an error if they send `persist`. v5 adds the
+//! fault-injection surface (DESIGN.md §14): a `faults` plan string
+//! ([`crate::faults::FaultPlan::parse`], e.g. `"dvs_dropout+brownout:0.65"`)
+//! on `run`/`fleet`/`workload`/`timeline`, per-stream `faults` keys inside
+//! `streams[]`, and a scalar-or-array `faults` axis on `grid`. Faulted
+//! reports carry a `resilience` section; the empty plan (`"none"`) is
+//! bit-identical to omitting the field. Clients pinning v1–v4 get an
+//! error if they send `faults`.
 //!
 //! Responses are `{"ok":true,"kind":...,"report":...}` or
 //! `{"ok":false,"error":...}`. Unknown request keys are rejected rather
@@ -62,6 +69,7 @@ use crate::config::{VDD_MAX, VDD_MIN};
 use crate::coordinator::governor::{GovernorKind, QosSpec};
 use crate::coordinator::pipeline::MissionConfig;
 use crate::coordinator::workload::{StreamConfig, WorkloadConfig, MAX_TENANTS};
+use crate::faults::FaultPlan;
 use crate::sensors::scene::SceneKind;
 use crate::util::json::{parse, Value};
 
@@ -74,12 +82,12 @@ pub const MAX_CELLS: usize = 4096;
 /// older (still-supported) version with a `v` field; anything outside
 /// [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`] is rejected with an
 /// error response.
-pub const PROTOCOL_VERSION: u64 = 4;
+pub const PROTOCOL_VERSION: u64 = 5;
 
 /// The oldest protocol version still accepted. Older pins keep their old
 /// semantics: the v2-only fields (`governor`, `qos`), the v3-only kinds
-/// (`timeline`, `metrics`) and the v4-only `persist` hint are rejected
-/// rather than silently honored.
+/// (`timeline`, `metrics`), the v4-only `persist` hint and the v5-only
+/// `faults` field are rejected rather than silently honored.
 pub const MIN_PROTOCOL_VERSION: u64 = 1;
 
 /// A parsed, validated request.
@@ -100,6 +108,7 @@ pub enum Request {
         idle_gates: Vec<Option<f64>>,
         governors: Vec<GovernorKind>,
         tenants: Vec<usize>,
+        faults: Vec<FaultPlan>,
         persist: bool,
     },
     /// One SoC, N tenant streams, fully resolved.
@@ -140,6 +149,7 @@ const MISSION_KEYS: &[&str] = &[
     "dvs_sample_hz",
     "telemetry_dt_s",
     "artifacts_dir",
+    "faults",
 ];
 
 /// Resolve the v4 `persist` hint: absent means false; present requires a
@@ -172,6 +182,16 @@ fn require_v2(v: &Value, ver: u64, keys: &[&str]) -> crate::Result<()> {
             "\"{k}\" requires protocol v2 (request pinned v{ver})"
         );
     }
+    Ok(())
+}
+
+/// Reject the v5-only fault-injection field on older pins, like
+/// [`require_v2`] for the power-management surface.
+fn require_v5(v: &Value, ver: u64) -> crate::Result<()> {
+    anyhow::ensure!(
+        ver >= 5 || v.get("faults").is_none(),
+        "\"faults\" requires protocol v5 (request pinned v{ver})"
+    );
     Ok(())
 }
 
@@ -211,6 +231,7 @@ impl Request {
                 allowed.push("persist");
                 check_keys(obj, &allowed)?;
                 require_v2(v, ver, &["governor"])?;
+                require_v5(v, ver)?;
                 Ok(Request::Run { cfg: mission_from(v)?, persist: persist_flag(v, ver)? })
             }
             "fleet" => {
@@ -218,6 +239,7 @@ impl Request {
                 allowed.extend(["missions", "persist"]);
                 check_keys(obj, &allowed)?;
                 require_v2(v, ver, &["governor"])?;
+                require_v5(v, ver)?;
                 let missions = match v.get("missions") {
                     None => 4,
                     Some(m) => m.as_usize().ok_or_else(|| {
@@ -240,12 +262,14 @@ impl Request {
                 allowed.extend(["tenants", "persist"]);
                 check_keys(obj, &allowed)?;
                 require_v2(v, ver, &["governor"])?;
+                require_v5(v, ver)?;
                 let seeds = u64_axis(v, "seed")?;
                 let durations = f64_axis(v, "duration_s")?;
                 let vdds = f64_axis(v, "vdd")?;
                 let idle_gates = gate_axis(v)?;
                 let governors = governor_axis(v)?;
                 let tenants = tenants_axis(v)?;
+                let faults = faults_axis(v)?;
                 // scene names resolve against the first grid seed (the
                 // per-cell reseed overrides it for seeded scenes anyway)
                 let scene_seed = seeds.first().copied().unwrap_or(MissionConfig::default().seed);
@@ -267,6 +291,7 @@ impl Request {
                     vdds.len(),
                     idle_gates.len(),
                     governors.len(),
+                    faults.len(),
                     tenants.len(),
                 ]) {
                     Some(cells) if cells <= MAX_CELLS => {}
@@ -286,6 +311,7 @@ impl Request {
                     idle_gates,
                     governors,
                     tenants,
+                    faults,
                     persist: persist_flag(v, ver)?,
                 })
             }
@@ -294,6 +320,7 @@ impl Request {
                 allowed.extend(["tenants", "streams", "qos", "persist"]);
                 check_keys(obj, &allowed)?;
                 require_v2(v, ver, &["governor", "qos"])?;
+                require_v5(v, ver)?;
                 Ok(Request::Workload {
                     cfg: workload_from(v, ver)?,
                     persist: persist_flag(v, ver)?,
@@ -307,6 +334,7 @@ impl Request {
                 let mut allowed = MISSION_KEYS.to_vec();
                 allowed.extend(["tenants", "streams", "qos"]);
                 check_keys(obj, &allowed)?;
+                require_v5(v, ver)?;
                 let multi = ["tenants", "streams", "qos"]
                     .iter()
                     .any(|k| v.get(k).is_some());
@@ -413,16 +441,21 @@ fn check_tenants(tenants: usize) -> crate::Result<()> {
 
 /// One per-tenant stream override of a `workload` request. Defaults follow
 /// the fan-out discipline (stream `i` inherits the base mission reseeded
-/// `seed + i`); explicit `seed`/`scene`/`frame_fps`/`dvs_sample_hz`/`qos`
-/// fields override per stream (`qos` needs protocol v2).
+/// `seed + i`); explicit `seed`/`scene`/`frame_fps`/`dvs_sample_hz`/`qos`/
+/// `faults` fields override per stream (`qos` needs protocol v2, `faults`
+/// needs v5).
 fn stream_from(x: &Value, base: &MissionConfig, i: usize, ver: u64) -> crate::Result<StreamConfig> {
     let obj = x
         .as_obj()
         .ok_or_else(|| anyhow::anyhow!("\"streams[{i}]\" must be an object"))?;
-    check_keys(obj, &["scene", "seed", "frame_fps", "dvs_sample_hz", "qos"])?;
+    check_keys(obj, &["scene", "seed", "frame_fps", "dvs_sample_hz", "qos", "faults"])?;
     anyhow::ensure!(
         ver >= 2 || x.get("qos").is_none(),
         "\"streams[{i}].qos\" requires protocol v2 (request pinned v{ver})"
+    );
+    anyhow::ensure!(
+        ver >= 5 || x.get("faults").is_none(),
+        "\"streams[{i}].faults\" requires protocol v5 (request pinned v{ver})"
     );
     let mut m = if i == 0 {
         base.clone()
@@ -450,6 +483,12 @@ fn stream_from(x: &Value, base: &MissionConfig, i: usize, ver: u64) -> crate::Re
     }
     if let Some(q) = x.get("qos") {
         s.qos = qos_from(q, &format!("streams[{i}].qos"))?;
+    }
+    if let Some(f) = x.get("faults") {
+        let spec = f.as_str().ok_or_else(|| {
+            anyhow::anyhow!("\"streams[{i}].faults\" must be a plan spec string")
+        })?;
+        s.faults = FaultPlan::parse(spec)?;
     }
     Ok(s)
 }
@@ -660,6 +699,12 @@ fn mission_from(v: &Value) -> crate::Result<MissionConfig> {
             .ok_or_else(|| anyhow::anyhow!("\"governor\" must be a governor name string"))?;
         cfg.power.governor = GovernorKind::parse(name)?;
     }
+    if let Some(f) = v.get("faults") {
+        let spec = f
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("\"faults\" must be a plan spec string"))?;
+        cfg.faults = FaultPlan::parse(spec)?;
+    }
     Ok(cfg.with_seed(seed))
 }
 
@@ -677,19 +722,47 @@ fn check_axis_nonempty(key: &str, a: &[Value]) -> crate::Result<()> {
 /// Grid axis of numbers: absent -> empty (inherit), scalar -> singleton,
 /// array -> one cell per element.
 fn f64_axis(v: &Value, key: &str) -> crate::Result<Vec<f64>> {
+    let finite = |x: f64| -> crate::Result<f64> {
+        anyhow::ensure!(x.is_finite(), "\"{key}\" must be finite, got {x}");
+        Ok(x)
+    };
     match v.get(key) {
         None => Ok(Vec::new()),
-        Some(Value::Num(x)) => Ok(vec![*x]),
+        Some(Value::Num(x)) => Ok(vec![finite(*x)?]),
         Some(Value::Arr(a)) => {
             check_axis_nonempty(key, a)?;
             a.iter()
                 .map(|x| {
-                    x.as_f64()
-                        .ok_or_else(|| anyhow::anyhow!("\"{key}\" array must hold numbers"))
+                    finite(
+                        x.as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("\"{key}\" array must hold numbers"))?,
+                    )
                 })
                 .collect()
         }
         Some(_) => anyhow::bail!("\"{key}\" must be a number or an array of numbers"),
+    }
+}
+
+/// Fault-plan grid axis / scalar (protocol v5): plan spec strings in the
+/// CLI `--faults` grammar, absent -> empty (inherit the base plan, i.e.
+/// fault-free). `"none"` is a valid cell: it pins an explicitly healthy
+/// run next to the faulted ones for resilience comparison.
+fn faults_axis(v: &Value) -> crate::Result<Vec<FaultPlan>> {
+    match v.get("faults") {
+        None => Ok(Vec::new()),
+        Some(Value::Str(spec)) => Ok(vec![FaultPlan::parse(spec)?]),
+        Some(Value::Arr(a)) => {
+            check_axis_nonempty("faults", a)?;
+            a.iter()
+                .map(|x| {
+                    FaultPlan::parse(x.as_str().ok_or_else(|| {
+                        anyhow::anyhow!("\"faults\" array must hold plan spec strings")
+                    })?)
+                })
+                .collect()
+        }
+        Some(_) => anyhow::bail!("\"faults\" must be a plan spec string or an array of them"),
     }
 }
 
@@ -810,6 +883,7 @@ mod tests {
                 idle_gates,
                 governors,
                 tenants,
+                faults,
                 base,
                 persist,
             } => {
@@ -822,6 +896,7 @@ mod tests {
                 assert_eq!(idle_gates, vec![Some(0.05), None]);
                 assert!(governors.is_empty(), "absent governor axis inherits");
                 assert!(tenants.is_empty(), "absent tenants axis inherits");
+                assert!(faults.is_empty(), "absent faults axis inherits");
                 // base keeps its default; the duration axis overrides per cell
                 assert_eq!(base.duration_s, MissionConfig::default().duration_s);
             }
@@ -981,14 +1056,16 @@ mod tests {
         assert!(Request::from_json(r#"{"kind":"stats","v":2}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"stats","v":3}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"stats","v":4}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"stats","v":5}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":1,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":2,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":3,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":4,"duration_s":0.1}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"run","v":5,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"shutdown","v":1}"#).is_ok());
         // unknown versions are rejected, whatever the kind
         for line in [
-            r#"{"kind":"stats","v":5}"#,
+            r#"{"kind":"stats","v":6}"#,
             r#"{"kind":"run","v":0}"#,
             r#"{"kind":"workload","v":99,"tenants":2}"#,
             r#"{"kind":"stats","v":"1"}"#,
@@ -1094,6 +1171,103 @@ mod tests {
             r#"{"kind":"timeline","duration_s":0.1,"persist":true}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn fault_plans_require_v5() {
+        // explicit v5 pin and the unpinned (current) form both parse
+        for line in [
+            r#"{"kind":"run","v":5,"duration_s":0.1,"faults":"dvs_dropout"}"#,
+            r#"{"kind":"run","duration_s":0.1,"faults":"dvs_dropout"}"#,
+        ] {
+            match Request::from_json(line).unwrap() {
+                Request::Run { cfg, .. } => {
+                    // per-sensor faults default to tenant 0, and the
+                    // canonical label spells that out
+                    assert_eq!(cfg.faults.label(), "dvs_dropout@0", "{line}");
+                }
+                other => panic!("wrong kind: {other:?}"),
+            }
+        }
+        // workload: a top-level plan fans out to every stream...
+        match Request::from_json(
+            r#"{"kind":"workload","tenants":2,"duration_s":0.1,"faults":"hot_pixels:8"}"#,
+        )
+        .unwrap()
+        {
+            Request::Workload { cfg, .. } => {
+                assert_eq!(cfg.streams[0].faults.label(), "hot_pixels:8@0");
+                assert_eq!(cfg.streams[1].faults.label(), "hot_pixels:8@0");
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // ...and per-stream plans override independently
+        match Request::from_json(
+            r#"{"kind":"workload","duration_s":0.1,
+                "streams":[{"scene":"corridor","faults":"frame_blackout~0-1"},{"scene":"noise"}]}"#,
+        )
+        .unwrap()
+        {
+            Request::Workload { cfg, .. } => {
+                assert_eq!(cfg.streams[0].faults.label(), "frame_blackout@0~0-1");
+                assert!(cfg.streams[1].faults.is_empty());
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // grid: scalar plan becomes a singleton axis, arrays fan out
+        match Request::from_json(
+            r#"{"kind":"grid","duration_s":0.1,"faults":["none","brownout:0.7","flaky:0.2"]}"#,
+        )
+        .unwrap()
+        {
+            Request::Grid { faults, .. } => {
+                assert_eq!(faults.len(), 3);
+                assert!(faults[0].is_empty(), "\"none\" pins a healthy cell");
+                assert_eq!(faults[1].label(), "brownout:0.7");
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // older pins get an error, not a silently-dropped plan
+        for line in [
+            r#"{"kind":"run","v":1,"duration_s":0.1,"faults":"dvs_dropout"}"#,
+            r#"{"kind":"run","v":4,"duration_s":0.1,"faults":"dvs_dropout"}"#,
+            r#"{"kind":"fleet","v":2,"duration_s":0.1,"faults":"jitter:200"}"#,
+            r#"{"kind":"grid","v":3,"duration_s":0.1,"faults":["none"]}"#,
+            r#"{"kind":"workload","v":4,"tenants":1,"faults":"dvs_dropout"}"#,
+            r#"{"kind":"timeline","v":4,"duration_s":0.1,"faults":"dvs_dropout"}"#,
+            r#"{"kind":"workload","v":4,"streams":[{"faults":"dvs_dropout"}]}"#,
+        ] {
+            let err = Request::from_json(line).unwrap_err().to_string();
+            assert!(err.contains("requires protocol v5"), "{line} -> {err}");
+        }
+        // malformed plans and wrong types are rejected up front
+        assert!(Request::from_json(r#"{"kind":"run","faults":"warp_core_breach"}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","faults":"flaky:1.5"}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","faults":7}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"grid","faults":[]}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"grid","faults":[3]}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"stats","faults":"dvs_dropout"}"#).is_err());
+    }
+
+    #[test]
+    fn non_finite_and_non_positive_rates_are_rejected() {
+        // zero / negative run knobs (pos_f64 surface)
+        assert!(Request::from_json(r#"{"kind":"run","duration_s":0}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","frame_fps":0}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","frame_fps":-5}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","dvs_sample_hz":0}"#).is_err());
+        // non-finite floats (1e999 overflows f64 to +inf at parse time)
+        assert!(Request::from_json(r#"{"kind":"run","duration_s":1e999}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","vdd":1e999}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"run","frame_fps":1e999}"#).is_err());
+        // the grid axes reject the same junk per element
+        assert!(Request::from_json(r#"{"kind":"grid","duration_s":[0.1,0]}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"grid","duration_s":[-1]}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"grid","duration_s":1e999}"#).is_err());
+        assert!(Request::from_json(r#"{"kind":"grid","vdd":[0.6,1e999]}"#).is_err());
+        // the healthy forms still parse (guard against over-tightening)
+        assert!(Request::from_json(r#"{"kind":"run","duration_s":0.1,"frame_fps":30}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"grid","duration_s":[0.1,0.2]}"#).is_ok());
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! The fault-injection acceptance contract (DESIGN.md §14), pinned end
+//! to end:
+//!
+//! * **Identity** — the empty plan (and `"none"`) is the healthy machine
+//!   bit for bit for every `SceneKind`, with no `resilience` section in
+//!   the report JSON; an armed-but-never-active plan fingerprints
+//!   identically and scores exactly zero.
+//! * **Perturbation** — every fault kind, injected whole-run, leaves a
+//!   visible trace: its counters are nonzero, tenant 0's degradation
+//!   score is positive, and (for the sensor/frame/DMA faults) the report
+//!   fingerprint diverges from the healthy twin.
+//! * **Determinism** — a faulted run replays bit-identically (report and
+//!   scorecard) on rerun, and a faulted mission over a captured sensor
+//!   trace matches the live faulted mission bit for bit: faults apply
+//!   *between* the source and the DES, so the trace stays fault-free and
+//!   healthy/faulted cells share one capture.
+
+use kraken::config::SocConfig;
+use kraken::coordinator::{Mission, MissionConfig, MissionReport, PowerConfig};
+use kraken::faults::FaultPlan;
+use kraken::sensors::scene::SceneKind;
+use kraken::sensors::trace::SensorTrace;
+use kraken::util::fnv1a;
+use std::sync::Arc;
+
+/// Every deterministic field of a mission report, hashed: two runs share
+/// a fingerprint iff every counter and every f64 bit pattern matches.
+/// (Deliberately excludes `resilience` — it compares the *behavior* of
+/// the pipeline, which the scorecard annotates.)
+fn fingerprint(r: &MissionReport) -> u64 {
+    let s = format!(
+        "{}|{}|{}|{}|{}|{}|{:x}|{:x}|{:?}|{}|{:?}|{:?}",
+        r.sne_inf,
+        r.cutie_inf,
+        r.pulp_inf,
+        r.commands,
+        r.events_total,
+        r.dropped_windows,
+        r.energy_j.to_bits(),
+        r.peak_power_w.to_bits(),
+        r.energy_per_domain_j,
+        r.rail_transitions,
+        r.snapshots,
+        r.last_commands,
+    );
+    fnv1a(s.as_bytes())
+}
+
+fn base_cfg() -> MissionConfig {
+    MissionConfig {
+        duration_s: 0.2,
+        dvs_sample_hz: 600.0,
+        ..Default::default()
+    }
+}
+
+fn run(cfg: MissionConfig) -> MissionReport {
+    Mission::new(SocConfig::kraken(), cfg).unwrap().run().unwrap()
+}
+
+fn every_scene() -> [SceneKind; 5] {
+    [
+        SceneKind::Corridor { speed_per_s: 0.5, seed: 7 },
+        SceneKind::RotatingBar { omega_rad_s: 6.0 },
+        SceneKind::TranslatingEdge { vel_per_s: 0.4 },
+        SceneKind::ExpandingRing { rate_per_s: 0.5 },
+        SceneKind::Noise { density: 0.05, seed: 7 },
+    ]
+}
+
+#[test]
+fn empty_plan_is_bit_identical_for_every_scene_kind() {
+    for scene in every_scene() {
+        let mut cfg = base_cfg();
+        cfg.scene = scene;
+        let healthy = run(cfg.clone());
+        assert!(healthy.resilience.is_none(), "{scene:?}: healthy run must not score");
+        assert!(
+            !healthy.to_json().to_string().contains("\"resilience\""),
+            "{scene:?}: healthy JSON must not carry a resilience section"
+        );
+
+        // "none" parses to the empty plan: the very same machine
+        let mut none_cfg = cfg.clone();
+        none_cfg.faults = FaultPlan::parse("none").unwrap();
+        let nr = run(none_cfg);
+        assert!(nr.resilience.is_none());
+        assert_eq!(
+            fingerprint(&healthy),
+            fingerprint(&nr),
+            "{scene:?}: empty plan perturbed the run"
+        );
+
+        // armed but never active (window beyond the run): same bytes,
+        // zero scorecard
+        let mut armed = cfg.clone();
+        armed.faults = FaultPlan::parse("dvs_dropout~3000-3600").unwrap();
+        let ar = run(armed);
+        assert_eq!(
+            fingerprint(&healthy),
+            fingerprint(&ar),
+            "{scene:?}: never-active plan perturbed the run"
+        );
+        let res = ar.resilience.expect("armed plan must report a scorecard");
+        assert_eq!(res.total_score(), 0.0, "{scene:?}: inactive plan scored");
+        assert_eq!(res.degraded_tenants(), 0, "{scene:?}");
+    }
+}
+
+#[test]
+fn every_fault_kind_perturbs_scores_and_replays_deterministically() {
+    // (spec, needs a low rail for the fault to arm, must visibly move the
+    // report fingerprint off the healthy twin)
+    let cases = [
+        ("dvs_dropout", false, true),
+        ("hot_pixels:32", false, true),
+        ("jitter:500", false, true),
+        ("frame_blackout", false, true),
+        ("brownout:0.7", true, false),
+        ("flaky:0.5", false, false),
+        ("dma_timeout:20000", false, true),
+    ];
+    for (spec, low_rail, must_diverge) in cases {
+        let mut cfg = base_cfg();
+        if low_rail {
+            // arm the brownout: pin the rail below its threshold
+            cfg.power = PowerConfig::fixed(0.6);
+        }
+        let healthy = run(cfg.clone());
+        cfg.faults = FaultPlan::parse(spec).unwrap();
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        assert_eq!(fingerprint(&a), fingerprint(&b), "{spec}: rerun diverged");
+        let ra = a.resilience.as_ref().expect("faulted run must score");
+        let rb = b.resilience.as_ref().unwrap();
+        assert_eq!(
+            format!("{ra:?}"),
+            format!("{rb:?}"),
+            "{spec}: scorecard not deterministic"
+        );
+        if must_diverge {
+            assert_ne!(
+                fingerprint(&a),
+                fingerprint(&healthy),
+                "{spec}: fault left no trace on the report"
+            );
+        }
+        // each kind trips its own counter
+        let c = &ra.counters;
+        let name = spec.split(':').next().unwrap();
+        match name {
+            "dvs_dropout" => assert!(c.suppressed_events > 0, "{spec}: {c:?}"),
+            "hot_pixels" => assert!(c.injected_events > 0, "{spec}: {c:?}"),
+            "jitter" => assert!(ra.tenants[0].degraded_ms > 0.0, "{spec}: {ra:?}"),
+            "frame_blackout" => assert!(c.frames_blacked > 0, "{spec}: {c:?}"),
+            "brownout" => {
+                assert!(c.brownout_stalls > 0, "{spec}: {c:?}");
+                assert!(c.brownout_epochs > 0, "{spec}: {c:?}");
+            }
+            "flaky" => assert!(c.engine_retries > 0, "{spec}: {c:?}"),
+            "dma_timeout" => assert!(c.dma_timeouts > 0, "{spec}: {c:?}"),
+            other => panic!("unmapped fault case {other}"),
+        }
+        assert!(
+            ra.tenants[0].score > 0.0,
+            "{spec}: tenant 0 must register degradation: {ra:?}"
+        );
+        assert_eq!(ra.plan, FaultPlan::parse(spec).unwrap().label(), "{spec}");
+    }
+}
+
+#[test]
+fn faulted_mission_over_a_trace_matches_live_faulted_mission() {
+    let mut cfg = base_cfg();
+    cfg.faults = FaultPlan::parse("dvs_dropout~0.02-0.08+hot_pixels:16").unwrap();
+    // the trace key ignores the plan: healthy and faulted cells share one
+    // capture, and the capture itself stays fault-free
+    // TraceKey equality is its shortest-roundtrip Debug form (the cache
+    // discipline)
+    assert_eq!(
+        format!("{:?}", cfg.trace_key()),
+        format!("{:?}", base_cfg().trace_key()),
+        "fault plans must not fork trace keys"
+    );
+    let live = run(cfg.clone());
+    let trace = Arc::new(SensorTrace::capture(&cfg.trace_key()));
+    let replay = Mission::with_trace(SocConfig::kraken(), cfg, Some(trace))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        fingerprint(&live),
+        fingerprint(&replay),
+        "faulted replay diverged from live sensing"
+    );
+    let (rl, rr) = (live.resilience.unwrap(), replay.resilience.unwrap());
+    assert_eq!(format!("{rl:?}"), format!("{rr:?}"), "scorecards diverged under replay");
+    assert!(rl.counters.suppressed_events > 0, "windowed dropout must fire: {rl:?}");
+    assert!(rl.counters.injected_events > 0, "hot pixels must fire: {rl:?}");
+}

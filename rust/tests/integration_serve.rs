@@ -217,6 +217,72 @@ fn shutdown_request_drains_queue_and_stops_the_server() {
     assert!(server.is_shutting_down(), "serving loops must exit after this");
 }
 
+#[test]
+fn tcp_connection_errors_are_isolated_from_other_connections() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let server = Arc::new(Server::new(SocConfig::kraken(), 1, 8, 4, 8).unwrap());
+    let srv = Arc::clone(&server);
+    let listener =
+        std::thread::spawn(move || kraken::serve::serve_listen(srv, "127.0.0.1:0").unwrap());
+    let addr = loop {
+        if let Some(a) = server.listen_addr() {
+            break a;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    let connect = || {
+        let c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        c
+    };
+    let request = |c: &mut TcpStream, line: &[u8]| {
+        c.write_all(line).unwrap();
+        c.write_all(b"\n").unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        let mut resp = String::new();
+        r.read_line(&mut resp).unwrap();
+        parse(resp.trim()).unwrap()
+    };
+
+    // connection 1: a malformed request earns an error envelope on its own
+    // connection — the serving loop survives
+    let mut c1 = connect();
+    let v = request(&mut c1, b"this is not json");
+    assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+
+    // connection 2: invalid UTF-8 is a *read* error — it kills only that
+    // connection's thread, never the listener (and never reaches the
+    // protocol error counter)
+    let mut c2 = TcpStream::connect(addr).unwrap();
+    c2.write_all(&[0xff, 0xfe, 0xfd, b'\n']).unwrap();
+    drop(c2);
+
+    // connection 3 is served as if nothing happened, with connection 1
+    // still open and idle
+    let mut c3 = connect();
+    let run = request(
+        &mut c3,
+        br#"{"kind":"run","duration_s":0.1,"dvs_sample_hz":300.0,"seed":11}"#,
+    );
+    assert_eq!(run.get("ok").and_then(Value::as_bool), Some(true), "{run:?}");
+    let stats = request(&mut c3, br#"{"kind":"stats"}"#);
+    assert_eq!(stats.get("ok").and_then(Value::as_bool), Some(true));
+    assert_eq!(
+        stats.get("errors").and_then(Value::as_u64),
+        Some(1),
+        "exactly the malformed request counts: {stats:?}"
+    );
+
+    // a served shutdown stops the listener even with idle connections open
+    let bye = request(&mut c3, br#"{"kind":"shutdown","v":1}"#);
+    assert_eq!(bye.get("ok").and_then(Value::as_bool), Some(true));
+    listener.join().expect("listener thread must exit cleanly");
+}
+
 // --- wire-format round trips (guards against float-formatting drift) -------
 
 #[test]

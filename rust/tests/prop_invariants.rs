@@ -461,6 +461,112 @@ fn prop_workload_determinism_across_thread_counts() {
     });
 }
 
+/// Every deterministic field of a mission report, rendered exactly:
+/// f64 Debug is shortest-roundtrip, so string equality is bit equality.
+fn mission_fp(r: &kraken::coordinator::MissionReport) -> String {
+    format!(
+        "{}|{}|{}|{}|{}|{}|{:x}|{:x}|{:?}|{}|{:?}|{:?}",
+        r.sne_inf,
+        r.cutie_inf,
+        r.pulp_inf,
+        r.commands,
+        r.events_total,
+        r.dropped_windows,
+        r.energy_j.to_bits(),
+        r.peak_power_w.to_bits(),
+        r.energy_per_domain_j,
+        r.rail_transitions,
+        r.snapshots,
+        r.last_commands,
+    )
+}
+
+#[test]
+fn prop_fault_free_plan_is_identity() {
+    use kraken::faults::FaultPlan;
+    // the DESIGN.md §14 identity contract: an empty plan is the healthy
+    // machine bit for bit, and an *armed but never-active* plan (windows
+    // beyond the run) takes the exact same code path — its scorecard is
+    // all zeros and the report fingerprints identically
+    check("empty / never-active fault plan == healthy run, bit for bit", 3, |rng| {
+        let seed = rng.gen_below(10_000);
+        let cfg = MissionConfig {
+            duration_s: 0.1,
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        }
+        .with_seed(seed);
+        let healthy = Mission::new(SocConfig::kraken(), cfg.clone()).unwrap().run().unwrap();
+        prop_assert!(healthy.resilience.is_none(), "healthy run must not score");
+
+        let mut none_cfg = cfg.clone();
+        none_cfg.faults = FaultPlan::parse("none").unwrap();
+        prop_assert!(none_cfg.faults.is_empty(), "'none' must parse to the empty plan");
+        let nr = Mission::new(SocConfig::kraken(), none_cfg).unwrap().run().unwrap();
+        prop_assert!(nr.resilience.is_none(), "empty plan must not score");
+        prop_assert!(mission_fp(&healthy) == mission_fp(&nr), "empty plan perturbed the run");
+
+        let mut armed = cfg.clone();
+        armed.faults =
+            FaultPlan::parse("dvs_dropout~3000-3600+flaky:0.5~3000-3600").unwrap();
+        let r = Mission::new(SocConfig::kraken(), armed).unwrap().run().unwrap();
+        prop_assert!(
+            mission_fp(&healthy) == mission_fp(&r),
+            "never-active plan perturbed the run (seed {seed})"
+        );
+        let res = r.resilience.as_ref().expect("armed plan must report a scorecard");
+        prop_assert!(
+            res.total_score() == 0.0,
+            "never-active plan scored {}",
+            res.total_score()
+        );
+        prop_assert!(res.degraded_tenants() == 0, "no tenant may be degraded");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_faulted_run_deterministic() {
+    use kraken::faults::FaultPlan;
+    // a faulted workload is a pure function of (config, seed, plan): the
+    // report *and* the resilience scorecard replay bit-identically on any
+    // thread count and on rerun
+    check("faulted workload == same bytes on any thread count", 2, |rng| {
+        let plans = [
+            "dvs_dropout",
+            "hot_pixels:16",
+            "jitter:300",
+            "frame_blackout",
+            "flaky:0.3",
+            "dma_timeout:5000",
+        ];
+        let plan = plans[rng.gen_range_usize(0, plans.len())];
+        let seed = rng.gen_below(10_000);
+        let mut base = MissionConfig {
+            duration_s: 0.1,
+            dvs_sample_hz: 300.0,
+            ..Default::default()
+        }
+        .with_seed(seed);
+        base.faults = FaultPlan::parse(plan).unwrap();
+        let cfgs = vec![WorkloadConfig::fan_out(&base, 2)];
+        let fp = |r: &WorkloadReport| format!("{}|{:?}", workload_fingerprint(r), r.resilience);
+        let a = run_workload_configs(&SocConfig::kraken(), &cfgs, 1).unwrap();
+        let b = run_workload_configs(&SocConfig::kraken(), &cfgs, 3).unwrap();
+        prop_assert!(
+            fp(&a.reports[0]) == fp(&b.reports[0]),
+            "{plan}: thread count changed the faulted report (seed {seed})"
+        );
+        let c = run_workload_configs(&SocConfig::kraken(), &cfgs, 2).unwrap();
+        prop_assert!(fp(&a.reports[0]) == fp(&c.reports[0]), "{plan}: rerun diverged");
+        prop_assert!(
+            a.reports[0].resilience.is_some(),
+            "{plan}: faulted run must carry a scorecard"
+        );
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_workload_arbitration_no_starvation_under_symmetry() {
     check("symmetric tenants all make progress on every engine", 3, |rng| {
