@@ -22,8 +22,11 @@ use kraken::coordinator::{
 use kraken::faults::FaultPlan;
 use kraken::metrics::fmt_power;
 use kraken::sensors::scene::SceneKind;
+use kraken::serve::gateway::Gateway;
 use kraken::serve::grid::{run_grid, run_workload_grid, GridConfig};
+use kraken::serve::Server;
 use kraken::util::bench::BenchLog;
+use kraken::util::json::{parse, Value};
 
 fn mission_cfg(duration: f64, artifacts: bool, vdd: f64, scene: SceneKind) -> MissionConfig {
     let artdir = std::path::Path::new("artifacts");
@@ -327,6 +330,114 @@ fn main() {
     assert!(power.max < 0.31, "fleet max power {} W", power.max);
     assert_eq!(fr.reports.len(), 8);
     log.note("fleet (8 seeds, 4 threads) wall", fr.wall_s * 1e9);
+
+    log.section("gateway storm: 1 gateway + 4 backends vs a single backend (DESIGN.md §15)");
+    // the multi-node serving headline: the same mixed run/workload/grid
+    // request storm, served once by one 4-worker serve instance and once
+    // by a gateway sharding over four of them; per-route latency
+    // percentiles come from the gateway's own `stats` document
+    let mut storm_lines: Vec<String> = Vec::new();
+    for seed in 0..12 {
+        storm_lines.push(format!(
+            r#"{{"kind":"run","duration_s":0.1,"dvs_sample_hz":300.0,"seed":{seed}}}"#
+        ));
+    }
+    for seed in 0..4 {
+        storm_lines.push(format!(
+            r#"{{"kind":"workload","tenants":2,"duration_s":0.1,"dvs_sample_hz":300.0,"seed":{}}}"#,
+            100 + seed
+        ));
+    }
+    for seed in 0..3 {
+        storm_lines.push(format!(
+            r#"{{"kind":"grid","duration_s":0.1,"dvs_sample_hz":300.0,"seed":[{},{}],"vdd":[0.6,0.8]}}"#,
+            200 + 2 * seed,
+            201 + 2 * seed
+        ));
+    }
+    storm_lines.push(
+        r#"{"kind":"fleet","missions":4,"seed":300,"duration_s":0.1,"dvs_sample_hz":300.0}"#
+            .to_string(),
+    );
+    let storm = |serve: &(dyn Fn(&str) -> String + Sync)| -> f64 {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let t = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..6 {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let Some(line) = storm_lines.get(i) else { break };
+                    let resp = serve(line);
+                    assert!(resp.contains("\"ok\":true"), "storm request failed: {resp}");
+                });
+            }
+        });
+        t.elapsed().as_secs_f64()
+    };
+
+    let single = Server::new(soc.clone(), 4, 64, 8, 8).unwrap();
+    let single_wall = storm(&|line| single.handle_line(line).expect("response"));
+    println!(
+        "single backend (4 workers): {} requests in {single_wall:.3} s = {:.1} req/s",
+        storm_lines.len(),
+        storm_lines.len() as f64 / single_wall.max(1e-9)
+    );
+    log.note("request storm, single backend wall", single_wall * 1e9);
+
+    let mut backends = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..4 {
+        let server = std::sync::Arc::new(Server::new(soc.clone(), 4, 64, 8, 8).unwrap());
+        let handle = std::sync::Arc::clone(&server);
+        std::thread::spawn(move || {
+            let _ = kraken::serve::serve_listen(handle, "127.0.0.1:0");
+        });
+        let addr = loop {
+            if let Some(a) = server.listen_addr() {
+                break a;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        };
+        addrs.push(addr.to_string());
+        backends.push(server);
+    }
+    let gw = Gateway::new(addrs).unwrap();
+    let gw_wall = storm(&|line| gw.handle_line(line).expect("response"));
+    println!(
+        "gateway + 4 backends:       {} requests in {gw_wall:.3} s = {:.1} req/s \
+         ({:.2}x the single backend)",
+        storm_lines.len(),
+        storm_lines.len() as f64 / gw_wall.max(1e-9),
+        single_wall / gw_wall.max(1e-9)
+    );
+    log.note("request storm, gateway + 4 backends wall", gw_wall * 1e9);
+
+    // per-route latency percentiles, straight from the gateway's stats
+    let stats = parse(&gw.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+    let routes = stats.get("gateway").and_then(|g| g.get("routes")).expect("route stats");
+    for route in ["run", "workload", "grid", "fleet"] {
+        let r = routes.get(route).expect("route");
+        let count = r.get("count").and_then(Value::as_u64).unwrap_or(0);
+        if count == 0 {
+            continue;
+        }
+        let pct = |k: &str| r.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        println!(
+            "  {route:<9} x{count}: p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms",
+            pct("p50") / 1e6,
+            pct("p95") / 1e6,
+            pct("p99") / 1e6
+        );
+        for k in ["p50", "p95", "p99"] {
+            log.note(&format!("gateway storm {route} {k}"), pct(k));
+        }
+    }
+    // shutdown fans out to the backends, so their listener threads exit
+    let bye = gw.handle_line(r#"{"kind":"shutdown"}"#).unwrap();
+    assert!(bye.contains("\"shutting_down\":true"), "{bye}");
+    for b in &backends {
+        assert!(b.is_shutting_down(), "gateway shutdown must reach every backend");
+    }
 
     log.finish().expect("write BENCH_e2e_mission.json");
 }

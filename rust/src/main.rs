@@ -13,6 +13,9 @@
 //! * `kraken workload`          — N tenant sensor streams sharing ONE SoC
 //!   (coordinator::workload): per-tenant reports + engine contention
 //! * `kraken serve`             — resident mission service (serve::Server)
+//! * `kraken gateway`           — sharded multi-backend serving tier
+//!   (serve::gateway): fans grid/fleet requests across N backend serve
+//!   instances and merges byte-identical single-node-equivalent replies
 //! * `kraken check-artifacts`   — load + execute every AOT artifact once
 //!
 //! Argument parsing is hand-rolled (the build is fully offline); see
@@ -93,8 +96,8 @@ COMMANDS:
                                   0; @N retargets, @all hits every tenant)
                                   and adds per-tenant degradation scores
                                   vs a fault-free twin (§14)
-  serve [--stdio | --listen ADDR] [--workers N] [--queue N] [--cache-cap N]
-        [--trace-cache N] [--store DIR]
+  serve [--stdio | --listen ADDR | --http ADDR] [--workers N] [--queue N]
+        [--cache-cap N] [--trace-cache N] [--store DIR]
                                   resident mission service: JSON-lines
                                   requests (run|fleet|grid|workload|timeline|
                                   stats|metrics|shutdown, optional protocol
@@ -108,7 +111,26 @@ COMMANDS:
                                   spill on eviction or the protocol-v4
                                   \"persist\" hint) so a restarted server
                                   answers warm and byte-identically from
-                                  the same directory (DESIGN.md §13)
+                                  the same directory (DESIGN.md §13);
+                                  --http serves the same protocol over a
+                                  dependency-free HTTP/1.1 layer (one
+                                  request per POST body, keep-alive;
+                                  DESIGN.md §15)
+  gateway (--backends A,B,... | --spawn N) [--listen ADDR | --http ADDR]
+          [--workers N] [--queue N]
+                                  sharded serving tier over N backend
+                                  serve instances (DESIGN.md §15): run/
+                                  workload/timeline route whole by
+                                  canonical config hash; fleet/grid split
+                                  into single-cell sub-requests fanned
+                                  over pooled backend connections and
+                                  merged into a reply byte-identical to a
+                                  single backend's (modulo wall_s/
+                                  threads); a lost backend is health-
+                                  marked and its cells re-dispatch to the
+                                  survivors; --spawn N starts N in-
+                                  process backends on ephemeral ports
+                                  (--workers/--queue size each one)
   trace record --store DIR [--seed BASE] [--count N] [--duration S]
                [--scene ...] [--window-ms MS] [--frame-fps FPS]
                [--dvs-sample-hz HZ] [--threads T]
@@ -275,6 +297,7 @@ fn run() -> kraken::Result<()> {
         Some("serve") => {
             let stdio = args.flag("stdio");
             let listen = args.opt("listen")?;
+            let http = args.opt("http")?;
             let workers: usize = args.opt("workers")?.map_or(Ok(4), |s| s.parse())?;
             let queue: usize = args.opt("queue")?.map_or(Ok(256), |s| s.parse())?;
             let cache_cap: usize = args.opt("cache-cap")?.map_or(Ok(128), |s| s.parse())?;
@@ -282,16 +305,58 @@ fn run() -> kraken::Result<()> {
             let store = args.opt("store")?;
             args.finish()?;
             anyhow::ensure!(
-                !(stdio && listen.is_some()),
-                "--stdio and --listen are mutually exclusive"
+                [stdio, listen.is_some(), http.is_some()].iter().filter(|&&b| b).count() <= 1,
+                "--stdio, --listen and --http are mutually exclusive"
             );
             let store = store
                 .map(|dir| Store::open(dir).map(std::sync::Arc::new))
                 .transpose()?;
             let server = Server::with_store(cfg, workers, queue, cache_cap, trace_cache, store)?;
-            match listen {
-                Some(addr) => kraken::serve::serve_listen(std::sync::Arc::new(server), &addr),
-                None => server.serve_stdio(),
+            match (listen, http) {
+                (_, Some(addr)) => {
+                    kraken::serve::http::serve_http(std::sync::Arc::new(server), &addr)
+                }
+                (Some(addr), None) => {
+                    kraken::serve::serve_listen(std::sync::Arc::new(server), &addr)
+                }
+                (None, None) => server.serve_stdio(),
+            }
+        }
+        Some("gateway") => {
+            let backends = args.opt("backends")?;
+            let spawn: Option<usize> = args.opt("spawn")?.map(|s| s.parse()).transpose()?;
+            let listen = args.opt("listen")?;
+            let http = args.opt("http")?;
+            let workers: usize = args.opt("workers")?.map_or(Ok(4), |s| s.parse())?;
+            let queue: usize = args.opt("queue")?.map_or(Ok(256), |s| s.parse())?;
+            args.finish()?;
+            anyhow::ensure!(
+                backends.is_some() != spawn.is_some(),
+                "gateway needs exactly one of --backends A,B,... or --spawn N"
+            );
+            anyhow::ensure!(
+                !(listen.is_some() && http.is_some()),
+                "--listen and --http are mutually exclusive"
+            );
+            let addrs = match backends {
+                Some(list) => parse_backend_list(&list)?,
+                None => spawn_backends(cfg, spawn.unwrap_or(0), workers, queue)?,
+            };
+            let n = addrs.len();
+            let gw = std::sync::Arc::new(kraken::serve::gateway::Gateway::new(addrs)?);
+            match (listen, http) {
+                (_, Some(addr)) => kraken::serve::http::serve_http(gw, &addr),
+                (addr, None) => {
+                    let addr = addr.unwrap_or_else(|| "127.0.0.1:0".to_string());
+                    kraken::serve::listen_with(
+                        gw,
+                        &addr,
+                        move |local| {
+                            format!("kraken gateway: listening on {local}, {n} backends")
+                        },
+                        kraken::serve::conn_lines,
+                    )
+                }
             }
         }
         Some("trace") => {
@@ -595,6 +660,50 @@ fn parse_gate_list(s: &str) -> kraken::Result<Vec<Option<f64>>> {
             }
         })
         .collect()
+}
+
+/// Parse the gateway `--backends` list (`host:port,host:port,...`).
+fn parse_backend_list(s: &str) -> kraken::Result<Vec<String>> {
+    let addrs: Vec<String> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(str::to_string)
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "--backends needs at least one host:port");
+    Ok(addrs)
+}
+
+/// Spawn `n` in-process backend serve instances on ephemeral loopback
+/// ports (`kraken gateway --spawn N`), each with its own worker pool,
+/// and return their addresses. The backends live on detached threads for
+/// the life of the process; a gateway `shutdown` broadcast stops them.
+fn spawn_backends(
+    cfg: SocConfig,
+    n: usize,
+    workers: usize,
+    queue: usize,
+) -> kraken::Result<Vec<String>> {
+    anyhow::ensure!(n >= 1, "--spawn must be at least 1");
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let server = std::sync::Arc::new(Server::new(cfg.clone(), workers, queue, 128, 8)?);
+        let handle = std::sync::Arc::clone(&server);
+        std::thread::spawn(move || {
+            if let Err(e) = kraken::serve::serve_listen(handle, "127.0.0.1:0") {
+                eprintln!("kraken gateway: backend exited: {e:#}");
+            }
+        });
+        // ephemeral bind: poll until the listener reports its real port
+        let addr = loop {
+            if let Some(a) = server.listen_addr() {
+                break a;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        };
+        addrs.push(addr.to_string());
+    }
+    Ok(addrs)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -914,6 +1023,16 @@ mod tests {
             vec![GovernorKind::Fixed, GovernorKind::Ladder, GovernorKind::DeadlineAware]
         );
         assert!(super::parse_governor_list("overdrive").is_err());
+    }
+
+    #[test]
+    fn backend_list_parsing() {
+        assert_eq!(
+            super::parse_backend_list("127.0.0.1:7001, 127.0.0.1:7002,").unwrap(),
+            vec!["127.0.0.1:7001".to_string(), "127.0.0.1:7002".to_string()]
+        );
+        let err = super::parse_backend_list(" , ").unwrap_err().to_string();
+        assert!(err.contains("at least one"), "{err}");
     }
 
     #[test]

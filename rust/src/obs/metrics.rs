@@ -303,6 +303,68 @@ impl Metrics {
     }
 }
 
+/// Gateway-tier metrics: per-route latency histograms plus the shard
+/// re-dispatch counter (cells re-hashed onto surviving backends after a
+/// backend loss). Same discipline as [`Metrics`]: lock-free recording,
+/// monotonic since process start, stable JSON shape. Per-backend counters
+/// (sent/failed/inflight/latency) live on the gateway's backend table
+/// itself (`serve::gateway`) — they are keyed by backend address, which
+/// only the gateway knows.
+#[derive(Debug)]
+pub struct GatewayMetrics {
+    route_ns: [Histogram; ReqKind::ALL.len()],
+    redispatches: AtomicU64,
+}
+
+impl Default for GatewayMetrics {
+    fn default() -> Self {
+        GatewayMetrics::new()
+    }
+}
+
+impl GatewayMetrics {
+    pub fn new() -> GatewayMetrics {
+        GatewayMetrics {
+            route_ns: std::array::from_fn(|_| Histogram::new()),
+            redispatches: AtomicU64::new(0),
+        }
+    }
+
+    /// Wall time the gateway spent answering one request of `kind`,
+    /// shard fan-out and report merge included.
+    pub fn note_route(&self, kind: ReqKind, ns: u64) {
+        self.route_ns[kind.index()].record(ns);
+    }
+
+    /// One sub-request re-dispatched to a surviving backend after its
+    /// shard's backend was health-marked dead.
+    pub fn note_redispatch(&self) {
+        self.redispatches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn route(&self, kind: ReqKind) -> &Histogram {
+        &self.route_ns[kind.index()]
+    }
+
+    pub fn redispatches(&self) -> u64 {
+        self.redispatches.load(Ordering::Relaxed)
+    }
+
+    /// `{routes: {run: ..., fleet: ..., ...}, redispatches}` — per-route
+    /// `{count, mean, p50, p95, p99}` summaries (every kind always
+    /// present, zeroed when unused) plus the re-dispatch counter.
+    pub fn to_json(&self) -> Value {
+        let routes = ReqKind::ALL
+            .iter()
+            .map(|k| (k.label(), self.route(*k).to_json()))
+            .collect();
+        Value::obj(vec![
+            ("routes", Value::obj(routes)),
+            ("redispatches", Value::Num(self.redispatches() as f64)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -435,6 +497,30 @@ mod tests {
             .and_then(|w| w.get("faults"))
             .unwrap();
         assert_eq!(rf.get("faulted_runs").and_then(Value::as_u64), Some(0));
+    }
+
+    #[test]
+    fn gateway_metrics_track_routes_and_redispatches() {
+        let g = GatewayMetrics::new();
+        let doc = g.to_json();
+        // stable shape before any traffic: every route present, zeroed
+        let run = doc.get("routes").and_then(|r| r.get("run")).unwrap();
+        assert_eq!(run.get("count").and_then(Value::as_u64), Some(0));
+        assert_eq!(doc.get("redispatches").and_then(Value::as_u64), Some(0));
+        g.note_route(ReqKind::Grid, 2_000_000);
+        g.note_route(ReqKind::Grid, 4_000_000);
+        g.note_redispatch();
+        assert_eq!(g.route(ReqKind::Grid).count(), 2);
+        assert_eq!(g.route(ReqKind::Run).count(), 0);
+        assert_eq!(g.redispatches(), 1);
+        let doc = g.to_json();
+        let grid = doc.get("routes").and_then(|r| r.get("grid")).unwrap();
+        assert_eq!(grid.get("count").and_then(Value::as_u64), Some(2));
+        assert!(
+            grid.get("p95").and_then(Value::as_u64).unwrap() >= 4_000_000,
+            "estimate must not under-report"
+        );
+        assert_eq!(doc.get("redispatches").and_then(Value::as_u64), Some(1));
     }
 
     #[test]

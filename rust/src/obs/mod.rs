@@ -16,5 +16,5 @@
 pub mod metrics;
 pub mod timeline;
 
-pub use metrics::{FaultStats, Histogram, Metrics, ReqKind, HIST_BUCKETS};
+pub use metrics::{FaultStats, GatewayMetrics, Histogram, Metrics, ReqKind, HIST_BUCKETS};
 pub use timeline::{pid_of_tenant, TraceEvent, TraceRecorder, PID_SOC};

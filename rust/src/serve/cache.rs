@@ -91,6 +91,23 @@ impl<V: Clone> LruMap<V> {
         Some(value)
     }
 
+    /// Borrowing form of [`LruMap::get`]: same counters and LRU refresh,
+    /// but returns a reference so callers that only copy bytes out (the
+    /// serve hot path) skip the owned clone.
+    fn get_ref(&mut self, key: &str) -> Option<&V> {
+        let h = fnv1a(key.as_bytes());
+        match self.map.get(&h) {
+            Some((k, _)) if k == key => {}
+            _ => {
+                self.misses += 1;
+                return None;
+            }
+        }
+        self.hits += 1;
+        self.touch(h);
+        self.map.get(&h).map(|(_, v)| v)
+    }
+
     /// Store a value, evicting the coldest entries beyond capacity. A
     /// hash collision overwrites the colliding entry (correctness is
     /// preserved by the full-key comparison in `get`). Returns the
@@ -160,6 +177,27 @@ impl ResultCache {
         let evicted = self.inner.insert(key.to_string(), payload.clone());
         self.spill(evicted);
         Some(payload)
+    }
+
+    /// Copy the stored response for `key` into `out` (appending), so a
+    /// memory-tier hit moves bytes straight into the caller's reused
+    /// response buffer instead of allocating a fresh `String`. Counters,
+    /// LRU refresh and the disk-tier fall-through match
+    /// [`ResultCache::get`]. Returns whether the key was found.
+    pub fn get_into(&mut self, key: &str, out: &mut String) -> bool {
+        if let Some(v) = self.inner.get_ref(key) {
+            out.push_str(v);
+            return true;
+        }
+        let Some(payload) = self.store.as_ref().and_then(|s| s.load_result(key)) else {
+            return false;
+        };
+        out.push_str(&payload);
+        // promote without re-persisting (the bytes just came off disk);
+        // anything this evicts still spills below
+        let evicted = self.inner.insert(key.to_string(), payload);
+        self.spill(evicted);
+        true
     }
 
     /// Store a response, evicting the coldest entries beyond capacity
@@ -316,6 +354,18 @@ mod tests {
         c.insert("a".into(), "{\"ok\":true}".into());
         assert_eq!(c.get("a").as_deref(), Some("{\"ok\":true}"));
         assert_eq!((c.hits(), c.misses(), c.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn get_into_appends_hit_bytes_and_counts_like_get() {
+        let mut c = ResultCache::new(2);
+        c.insert("a".into(), "{\"ok\":true}".into());
+        let mut buf = String::from("x");
+        assert!(c.get_into("a", &mut buf));
+        assert_eq!(buf, "x{\"ok\":true}");
+        assert!(!c.get_into("missing", &mut buf));
+        assert_eq!(buf, "x{\"ok\":true}", "a miss must leave the buffer alone");
+        assert_eq!((c.hits(), c.misses()), (1, 1));
     }
 
     #[test]

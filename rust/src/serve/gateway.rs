@@ -1,0 +1,696 @@
+//! `kraken gateway` — the sharded multi-backend serving tier
+//! (DESIGN.md §15).
+//!
+//! A [`Gateway`] speaks the same JSON-lines protocol as a [`Server`] but
+//! owns no worker pool: every compute request routes to one of N backend
+//! serve instances over persistent pooled TCP connections. Single-target
+//! kinds (`run`, `workload`, `timeline`) forward whole by canonical-line
+//! hash ([`shard::shard_of`]) and return the backend reply verbatim.
+//! Fan-out kinds (`fleet`, `grid`) split into single-cell sub-requests
+//! ([`shard::fleet_subrequests`] / [`shard::grid_subrequests`]), scatter
+//! them across the healthy backends, and merge the partial reports into
+//! a reply **byte-identical to a single backend serving the original
+//! request** — modulo the two host-measurement keys (`wall_s`,
+//! `threads`), which describe whichever machine did the work. The merge
+//! recomputes the fleet rollup (`sim_s_total`, `energy_j_total`, the
+//! [`FleetStat`] five-number summaries) from the per-cell reports with
+//! the same in-order folds the single-node path uses, so the recomputed
+//! f64s match bit for bit.
+//!
+//! QoS priorities forward end to end: sub-requests carry the original
+//! request's `qos` field untouched, so each backend's priority queue
+//! orders gateway traffic exactly as it would direct traffic.
+//!
+//! Failure model: a backend whose connection dies (or that answers from
+//! a shut-down pool) is health-marked and drops out of the shard ring;
+//! the lost shard's cells re-hash deterministically over the survivors
+//! ([`GatewayMetrics::redispatches`] counts them). A request fails only
+//! when no healthy backend remains. There is no un-marking: a restarted
+//! backend needs a restarted gateway (deliberate — silent rejoin would
+//! re-split shards mid-storm).
+//!
+//! [`Server`]: super::Server
+//! [`FleetStat`]: crate::coordinator::fleet::FleetStat
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::fleet::FleetStat;
+use crate::obs::{GatewayMetrics, Histogram, ReqKind};
+use crate::util::json::{parse, Value};
+
+use super::protocol::{self, Request};
+use super::{nudge_addr, shard, splice_id, LineService};
+
+/// One backend serve instance: its address, a pool of idle persistent
+/// connections, a health flag and per-backend counters/latency.
+struct Backend {
+    addr: String,
+    pool: Mutex<Vec<BackendConn>>,
+    healthy: AtomicBool,
+    /// Requests answered (the latency histogram's population).
+    sent: AtomicU64,
+    /// Exchanges that failed even on a fresh connection.
+    failed: AtomicU64,
+    /// Requests currently awaiting this backend's reply.
+    inflight: AtomicU64,
+    /// Wire round-trip latency (ns) per answered request.
+    latency: Histogram,
+}
+
+/// A pooled connection: paired write/read halves of one TCP stream.
+struct BackendConn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Backend {
+    fn new(addr: String) -> Backend {
+        Backend {
+            addr,
+            pool: Mutex::new(Vec::new()),
+            healthy: AtomicBool::new(true),
+            sent: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            latency: Histogram::new(),
+        }
+    }
+
+    fn connect(&self) -> crate::Result<BackendConn> {
+        let stream = TcpStream::connect(&self.addr)?;
+        // request/response lines are latency-bound, not bandwidth-bound
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone()?;
+        Ok(BackendConn { writer, reader: BufReader::new(stream) })
+    }
+
+    /// One request/response exchange over a pooled connection, which
+    /// returns to the pool on success. A stale pooled connection (idle
+    /// close, backend restart) gets one retry on a fresh connection;
+    /// failing that is the caller's signal to health-mark this backend.
+    fn call(&self, line: &str) -> crate::Result<String> {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        let t0 = std::time::Instant::now();
+        let result = self.call_inner(line);
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+        match &result {
+            Ok(_) => {
+                self.sent.fetch_add(1, Ordering::Relaxed);
+                self.latency.record(t0.elapsed().as_nanos() as u64);
+            }
+            Err(_) => {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        result
+    }
+
+    fn call_inner(&self, line: &str) -> crate::Result<String> {
+        let pooled = self.pool.lock().unwrap().pop();
+        if let Some(mut conn) = pooled {
+            if let Ok(resp) = Self::exchange(&mut conn, line) {
+                self.pool.lock().unwrap().push(conn);
+                return Ok(resp);
+            }
+            // stale: fall through to a fresh connection
+        }
+        let mut conn = self.connect()?;
+        let resp = Self::exchange(&mut conn, line)?;
+        self.pool.lock().unwrap().push(conn);
+        Ok(resp)
+    }
+
+    fn exchange(conn: &mut BackendConn, line: &str) -> crate::Result<String> {
+        conn.writer.write_all(line.as_bytes())?;
+        conn.writer.write_all(b"\n")?;
+        conn.writer.flush()?;
+        let mut resp = String::new();
+        anyhow::ensure!(
+            conn.reader.read_line(&mut resp)? > 0,
+            "backend closed the connection"
+        );
+        while resp.ends_with('\n') || resp.ends_with('\r') {
+            resp.pop();
+        }
+        Ok(resp)
+    }
+
+    /// This backend's row in the gateway `stats` document.
+    fn stats_value(&self) -> Value {
+        Value::obj(vec![
+            ("addr", Value::Str(self.addr.clone())),
+            ("healthy", Value::Bool(self.healthy.load(Ordering::Relaxed))),
+            ("sent", Value::Num(self.sent.load(Ordering::Relaxed) as f64)),
+            ("failed", Value::Num(self.failed.load(Ordering::Relaxed) as f64)),
+            ("inflight", Value::Num(self.inflight.load(Ordering::Relaxed) as f64)),
+            ("pooled_conns", Value::Num(self.pool.lock().unwrap().len() as f64)),
+            ("latency_ns", self.latency.to_json()),
+        ])
+    }
+}
+
+/// A reply that means "this backend is going away", not "your request
+/// was bad": the drain path of a backend answering compute requests that
+/// raced its shutdown rejects them from the shut-down pool. Treated like
+/// a connection loss so the work re-dispatches to survivors (a killed
+/// process takes the io-error path instead).
+fn is_backend_loss(resp: &str) -> bool {
+    resp.contains("\"ok\":false") && resp.contains("shut down")
+}
+
+/// The sharding front end: same wire protocol as [`super::Server`], no
+/// local compute. See the module docs for the routing and failure model.
+pub struct Gateway {
+    backends: Vec<Backend>,
+    /// Per-route latency histograms + the re-dispatch counter.
+    metrics: GatewayMetrics,
+    start: std::time::Instant,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    shutting_down: AtomicBool,
+    listen_addr: Mutex<Option<SocketAddr>>,
+    conn_work: AtomicU64,
+    /// Fan-out crew size for sharded kinds: enough sub-requests in
+    /// flight to keep every backend's pool busy without thread spam.
+    fan_threads: usize,
+}
+
+impl Gateway {
+    /// A gateway over `addrs` (host:port per backend). Connections are
+    /// opened lazily on first use and pooled per backend thereafter.
+    pub fn new(addrs: Vec<String>) -> crate::Result<Gateway> {
+        anyhow::ensure!(!addrs.is_empty(), "gateway needs at least one backend");
+        let fan_threads = 4 * addrs.len();
+        Ok(Gateway {
+            backends: addrs.into_iter().map(Backend::new).collect(),
+            metrics: GatewayMetrics::new(),
+            start: std::time::Instant::now(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+            listen_addr: Mutex::new(None),
+            conn_work: AtomicU64::new(0),
+            fan_threads,
+        })
+    }
+
+    pub fn backends_total(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// The TCP address a [`super::listen_with`] loop bound for this
+    /// gateway (`None` until the listener is up).
+    pub fn listen_addr(&self) -> Option<SocketAddr> {
+        *self.listen_addr.lock().unwrap()
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::Relaxed)
+    }
+
+    /// Serve one protocol line — the gateway twin of
+    /// [`super::Server::handle_line`], with the same blank-line, error
+    /// and v6 id-echo semantics.
+    pub fn handle_line(&self, line: &str) -> Option<String> {
+        let mut out = String::new();
+        if self.handle_line_into(line, &mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Buffer-reusing form of [`Gateway::handle_line`] (the
+    /// [`LineService`] entry point): ids are stripped before routing —
+    /// backends shard and cache id-free lines — and spliced back into
+    /// the reply here, on success and on error.
+    pub fn handle_line_into(&self, line: &str, out: &mut String) -> bool {
+        out.clear();
+        let line = line.trim();
+        if line.is_empty() {
+            return false;
+        }
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let (id, result) = match parse(line) {
+            Ok(v) => (protocol::request_id(&v), self.dispatch_value(&v, out)),
+            Err(e) => (None, Err(anyhow::anyhow!("bad request JSON: {e}"))),
+        };
+        if let Err(e) = result {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            out.clear();
+            out.push_str(&protocol::error_response(&format!("{e:#}")).to_string());
+        }
+        if let Some(id) = id {
+            splice_id(out, &id);
+        }
+        true
+    }
+
+    fn dispatch_value(&self, v: &Value, out: &mut String) -> crate::Result<()> {
+        // full protocol validation at the edge: a request the backends
+        // would reject fails here with the same error, without burning a
+        // network round trip per shard
+        let req = Request::from_value(v)?;
+        let t0 = std::time::Instant::now();
+        let (rk, result) = match &req {
+            Request::Stats => {
+                out.push_str(&self.stats_value("stats").to_string());
+                return Ok(());
+            }
+            Request::Metrics => {
+                let m = protocol::ok_response("metrics", self.metrics.to_json());
+                out.push_str(&m.to_string());
+                return Ok(());
+            }
+            Request::Shutdown => {
+                self.shutdown_now(out);
+                return Ok(());
+            }
+            Request::Run { .. } => (ReqKind::Run, self.forward(v, out)),
+            Request::Workload { .. } => (ReqKind::Workload, self.forward(v, out)),
+            Request::Timeline { .. } => (ReqKind::Timeline, self.forward(v, out)),
+            Request::Fleet { .. } => (ReqKind::Fleet, self.fan_fleet(v, out)),
+            Request::Grid { tenants, .. } => {
+                (ReqKind::Grid, self.fan_grid(v, !tenants.is_empty(), out))
+            }
+        };
+        self.metrics.note_route(rk, t0.elapsed().as_nanos() as u64);
+        result
+    }
+
+    /// Indices of the backends still in the shard ring.
+    fn healthy_idx(&self) -> Vec<usize> {
+        (0..self.backends.len())
+            .filter(|&i| self.backends[i].healthy.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Route one canonical line to its shard. On backend loss: mark it
+    /// unhealthy, count the re-dispatch, and re-hash over the survivors
+    /// — deterministically, so concurrent callers pick the same new
+    /// target. Errs only when no healthy backend remains.
+    fn call_sharded(&self, line: &str) -> crate::Result<String> {
+        loop {
+            let healthy = self.healthy_idx();
+            anyhow::ensure!(!healthy.is_empty(), "no healthy backends");
+            let b = &self.backends[healthy[shard::shard_of(line, healthy.len())]];
+            match b.call(line) {
+                Ok(resp) if !is_backend_loss(&resp) => return Ok(resp),
+                // lost backend (dead connection or draining pool): every
+                // iteration retires one backend, so this terminates
+                Ok(_) | Err(_) => {
+                    b.healthy.store(false, Ordering::Relaxed);
+                    self.metrics.note_redispatch();
+                }
+            }
+        }
+    }
+
+    /// Single-target kinds: forward the canonical line whole and return
+    /// the backend reply verbatim (protocol errors included — only
+    /// backend *loss* re-dispatches).
+    fn forward(&self, v: &Value, out: &mut String) -> crate::Result<()> {
+        let resp = self.call_sharded(&shard::canonical_line(v))?;
+        out.push_str(&resp);
+        Ok(())
+    }
+
+    /// Scatter sub-request lines across the backends with a small scoped
+    /// crew pulling from a shared index queue; replies come back in
+    /// sub-request order. Any non-loss failure (a cell error, every
+    /// backend gone) fails the whole request.
+    fn fan(&self, subs: &[String]) -> crate::Result<Vec<String>> {
+        let next = AtomicUsize::new(0);
+        let replies: Vec<Mutex<Option<crate::Result<String>>>> =
+            subs.iter().map(|_| Mutex::new(None)).collect();
+        let crew = subs.len().min(self.fan_threads).max(1);
+        std::thread::scope(|s| {
+            for _ in 0..crew {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= subs.len() {
+                        break;
+                    }
+                    let r = self.call_sharded(&subs[i]);
+                    *replies[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(subs.len());
+        for slot in replies {
+            out.push(slot.into_inner().unwrap().expect("crew filled every slot")?);
+        }
+        Ok(out)
+    }
+
+    /// The `fleet` fan-out: one single-mission sub-request per slot,
+    /// merged back into a [`FleetReport`]-shaped rollup.
+    ///
+    /// [`FleetReport`]: crate::coordinator::fleet::FleetReport
+    fn fan_fleet(&self, v: &Value, out: &mut String) -> crate::Result<()> {
+        let subs = shard::fleet_subrequests(v)?;
+        let t0 = std::time::Instant::now();
+        let replies = self.fan(&subs)?;
+        let reports = replies.iter().map(|r| sub_report(r)).collect::<crate::Result<Vec<_>>>()?;
+        let fleet =
+            merge_mission_fleet(reports, self.backends.len(), t0.elapsed().as_secs_f64())?;
+        out.push_str(&protocol::ok_response("fleet", fleet).to_string());
+        Ok(())
+    }
+
+    /// The `grid` fan-out: one single-cell sub-request per cross-product
+    /// cell (already in backend cell order), merged back into a
+    /// grid-report shape — mission or workload rollup per the original
+    /// request's tenants axis.
+    fn fan_grid(&self, v: &Value, workload: bool, out: &mut String) -> crate::Result<()> {
+        let subs = shard::grid_subrequests(v)?;
+        let t0 = std::time::Instant::now();
+        let replies = self.fan(&subs)?;
+        let mut labels = Vec::with_capacity(replies.len());
+        let mut reports = Vec::with_capacity(replies.len());
+        for reply in &replies {
+            let (label, report) = sub_cell(reply)?;
+            labels.push(Value::Str(label));
+            reports.push(report);
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let fleet = if workload {
+            merge_workload_fleet(reports, self.backends.len(), wall_s)?
+        } else {
+            merge_mission_fleet(reports, self.backends.len(), wall_s)?
+        };
+        let report = Value::obj(vec![("cells", Value::Arr(labels)), ("fleet", fleet)]);
+        out.push_str(&protocol::ok_response("grid", report).to_string());
+        Ok(())
+    }
+
+    /// Serve a `shutdown` request: broadcast it to every healthy backend
+    /// (best effort — a dead backend is already down), mark the gateway
+    /// as stopping, and answer with the gateway's final stats.
+    fn shutdown_now(&self, out: &mut String) {
+        for b in &self.backends {
+            if b.healthy.load(Ordering::Relaxed) {
+                let _ = b.call(r#"{"kind":"shutdown"}"#);
+            }
+        }
+        self.shutting_down.store(true, Ordering::Relaxed);
+        out.push_str(&self.stats_value("shutdown").to_string());
+    }
+
+    /// The gateway statistics document: uptime and request counters,
+    /// per-backend health/counters/latency, per-route latency and the
+    /// re-dispatch count. `kind` is `stats` or `shutdown`.
+    fn stats_value(&self, kind: &str) -> Value {
+        let backends: Vec<Value> = self.backends.iter().map(Backend::stats_value).collect();
+        Value::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("kind", Value::Str(kind.to_string())),
+            ("v", Value::Num(protocol::PROTOCOL_VERSION as f64)),
+            ("role", Value::Str("gateway".to_string())),
+            ("uptime_s", Value::Num(self.start.elapsed().as_secs_f64())),
+            ("requests", Value::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("errors", Value::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("backends", Value::Arr(backends)),
+            ("gateway", self.metrics.to_json()),
+            ("shutting_down", Value::Bool(self.is_shutting_down())),
+        ])
+    }
+}
+
+impl LineService for Gateway {
+    fn serve_line(&self, line: &str, out: &mut String) -> bool {
+        self.handle_line_into(line, out)
+    }
+    fn shutting_down(&self) -> bool {
+        self.is_shutting_down()
+    }
+    fn note_bound(&self, addr: SocketAddr) {
+        *self.listen_addr.lock().unwrap() = Some(addr);
+    }
+    fn nudge(&self) {
+        nudge_addr(self.listen_addr());
+    }
+    fn work_begin(&self) {
+        self.conn_work.fetch_add(1, Ordering::SeqCst);
+    }
+    fn work_end(&self) {
+        self.conn_work.fetch_sub(1, Ordering::SeqCst);
+    }
+    fn work_pending(&self) -> bool {
+        self.conn_work.load(Ordering::SeqCst) > 0
+    }
+}
+
+/// Pull the single mission/workload report out of one fleet sub-reply.
+fn sub_report(reply: &str) -> crate::Result<Value> {
+    let v = parse(reply).map_err(|e| anyhow::anyhow!("bad backend reply JSON: {e}"))?;
+    check_sub_ok(&v)?;
+    let reports = v
+        .get("report")
+        .and_then(|r| r.get("reports"))
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("sub-reply missing report.reports"))?;
+    anyhow::ensure!(reports.len() == 1, "expected 1 report per sub-reply, got {}", reports.len());
+    Ok(reports[0].clone())
+}
+
+/// Pull the (cell label, report) pair out of one grid sub-reply.
+fn sub_cell(reply: &str) -> crate::Result<(String, Value)> {
+    let v = parse(reply).map_err(|e| anyhow::anyhow!("bad backend reply JSON: {e}"))?;
+    check_sub_ok(&v)?;
+    let report = v.get("report").ok_or_else(|| anyhow::anyhow!("sub-reply missing report"))?;
+    let cells = report
+        .get("cells")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("sub-reply missing report.cells"))?;
+    anyhow::ensure!(cells.len() == 1, "expected 1 cell per sub-reply, got {}", cells.len());
+    let label = cells[0]
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("non-string cell label"))?
+        .to_string();
+    let reports = report
+        .get("fleet")
+        .and_then(|f| f.get("reports"))
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("sub-reply missing report.fleet.reports"))?;
+    anyhow::ensure!(reports.len() == 1, "expected 1 report per cell, got {}", reports.len());
+    Ok((label, reports[0].clone()))
+}
+
+/// A cell-level backend error (bad config would already have failed at
+/// the gateway edge, so this is a genuine execution error): surface it
+/// as the whole request's error.
+fn check_sub_ok(v: &Value) -> crate::Result<()> {
+    if v.get("ok").and_then(Value::as_bool) != Some(true) {
+        let msg = v.get("error").and_then(Value::as_str).unwrap_or("malformed backend reply");
+        anyhow::bail!("backend error: {msg}");
+    }
+    Ok(())
+}
+
+/// One f64 field per report, in report order.
+fn column(reports: &[Value], key: &str) -> crate::Result<Vec<f64>> {
+    reports
+        .iter()
+        .map(|r| {
+            r.get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("sub-report missing {key}"))
+        })
+        .collect()
+}
+
+/// Rebuild a [`FleetReport::to_json`]-shaped rollup from merged
+/// single-mission reports. The totals are in-order 0.0-seeded folds and
+/// the stats go through [`FleetStat::of`] exactly like the single-node
+/// path, so every recomputed f64 matches bit for bit; `threads` and
+/// `wall_s` are host measurements (this host's), excluded from the
+/// byte-identity contract.
+///
+/// [`FleetReport::to_json`]: crate::coordinator::fleet::FleetReport::to_json
+fn merge_mission_fleet(reports: Vec<Value>, threads: usize, wall_s: f64) -> crate::Result<Value> {
+    let sim_s = column(&reports, "sim_s")?;
+    let energy = column(&reports, "energy_j")?;
+    let power = column(&reports, "avg_power_w")?;
+    let events = column(&reports, "events_total")?;
+    Ok(Value::obj(vec![
+        ("missions", Value::Num(reports.len() as f64)),
+        ("threads", Value::Num(threads as f64)),
+        ("wall_s", Value::Num(wall_s)),
+        ("sim_s_total", Value::Num(sim_s.iter().sum::<f64>())),
+        ("energy_j_total", Value::Num(energy.iter().sum::<f64>())),
+        ("avg_power_w", FleetStat::of(power).to_json()),
+        ("energy_j", FleetStat::of(energy).to_json()),
+        ("events_total", FleetStat::of(events).to_json()),
+        ("reports", Value::Arr(reports)),
+    ]))
+}
+
+/// The workload twin of [`merge_mission_fleet`], rebuilding a
+/// [`WorkloadFleetReport::to_json`]-shaped rollup.
+///
+/// [`WorkloadFleetReport::to_json`]: crate::coordinator::fleet::WorkloadFleetReport::to_json
+fn merge_workload_fleet(reports: Vec<Value>, threads: usize, wall_s: f64) -> crate::Result<Value> {
+    let sim_s = column(&reports, "sim_s")?;
+    let energy = column(&reports, "energy_j")?;
+    let power = column(&reports, "avg_power_w")?;
+    let jpi = column(&reports, "j_per_inference")?;
+    Ok(Value::obj(vec![
+        ("workloads", Value::Num(reports.len() as f64)),
+        ("threads", Value::Num(threads as f64)),
+        ("wall_s", Value::Num(wall_s)),
+        ("sim_s_total", Value::Num(sim_s.iter().sum::<f64>())),
+        ("energy_j_total", Value::Num(energy.iter().sum::<f64>())),
+        ("avg_power_w", FleetStat::of(power).to_json()),
+        ("j_per_inference", FleetStat::of(jpi).to_json()),
+        ("reports", Value::Arr(reports)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SocConfig;
+    use crate::serve::Server;
+
+    /// Canonicalize a response for byte-comparison: parse, strip the
+    /// host-measurement keys (`wall_s`, `threads`) at every level, and
+    /// re-serialize — the same discipline `tests/integration_serve.rs`
+    /// pins for served-vs-offline comparisons.
+    fn canon(resp: &str) -> String {
+        fn strip(v: &mut Value) {
+            match v {
+                Value::Obj(m) => {
+                    m.remove("wall_s");
+                    m.remove("threads");
+                    for x in m.values_mut() {
+                        strip(x);
+                    }
+                }
+                Value::Arr(a) => {
+                    for x in a.iter_mut() {
+                        strip(x);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut v = parse(resp).unwrap();
+        strip(&mut v);
+        v.to_string()
+    }
+
+    fn server() -> Server {
+        Server::new(SocConfig::kraken(), 2, 16, 8, 8).unwrap()
+    }
+
+    #[test]
+    fn merged_fleet_matches_single_node_reply() {
+        let s = server();
+        let line =
+            r#"{"kind":"fleet","missions":3,"seed":9,"duration_s":0.05,"dvs_sample_hz":300.0}"#;
+        let single = s.handle_line(line).unwrap();
+        let subs = shard::fleet_subrequests(&parse(line).unwrap()).unwrap();
+        let reports: Vec<Value> = subs
+            .iter()
+            .map(|sub| sub_report(&s.handle_line(sub).unwrap()).unwrap())
+            .collect();
+        let merged = protocol::ok_response(
+            "fleet",
+            merge_mission_fleet(reports, 4, 123.0).unwrap(),
+        )
+        .to_string();
+        assert_eq!(canon(&merged), canon(&single), "fleet merge must be byte-identical");
+    }
+
+    #[test]
+    fn merged_mission_grid_matches_single_node_reply() {
+        let s = server();
+        let line = r#"{"kind":"grid","duration_s":0.05,"dvs_sample_hz":300.0,"seed":[5,6],"vdd":[0.6,0.8]}"#;
+        let single = s.handle_line(line).unwrap();
+        let subs = shard::grid_subrequests(&parse(line).unwrap()).unwrap();
+        let mut labels = Vec::new();
+        let mut reports = Vec::new();
+        for sub in &subs {
+            let (label, report) = sub_cell(&s.handle_line(sub).unwrap()).unwrap();
+            labels.push(Value::Str(label));
+            reports.push(report);
+        }
+        let fleet = merge_mission_fleet(reports, 4, 0.0).unwrap();
+        let merged = protocol::ok_response(
+            "grid",
+            Value::obj(vec![("cells", Value::Arr(labels)), ("fleet", fleet)]),
+        )
+        .to_string();
+        assert_eq!(canon(&merged), canon(&single), "grid merge must be byte-identical");
+    }
+
+    #[test]
+    fn merged_workload_grid_matches_single_node_reply() {
+        let s = server();
+        let line = r#"{"kind":"grid","duration_s":0.05,"dvs_sample_hz":300.0,"seed":7,"tenants":[1,2]}"#;
+        let single = s.handle_line(line).unwrap();
+        let subs = shard::grid_subrequests(&parse(line).unwrap()).unwrap();
+        let mut labels = Vec::new();
+        let mut reports = Vec::new();
+        for sub in &subs {
+            let (label, report) = sub_cell(&s.handle_line(sub).unwrap()).unwrap();
+            labels.push(Value::Str(label));
+            reports.push(report);
+        }
+        let fleet = merge_workload_fleet(reports, 4, 0.0).unwrap();
+        let merged = protocol::ok_response(
+            "grid",
+            Value::obj(vec![("cells", Value::Arr(labels)), ("fleet", fleet)]),
+        )
+        .to_string();
+        assert_eq!(canon(&merged), canon(&single), "workload grid merge must be byte-identical");
+    }
+
+    #[test]
+    fn backend_loss_replies_are_distinguished_from_request_errors() {
+        assert!(is_backend_loss(
+            r#"{"error":"cannot run batch: worker pool is shut down","ok":false}"#
+        ));
+        assert!(!is_backend_loss(r#"{"error":"queue full: 4 slots","ok":false}"#));
+        assert!(!is_backend_loss(r#"{"kind":"run","ok":true,"report":1}"#));
+    }
+
+    #[test]
+    fn unreachable_backends_error_cleanly_and_mark_unhealthy() {
+        // a port from the reserved block: connection refused, fast
+        let g = Gateway::new(vec!["127.0.0.1:1".to_string()]).unwrap();
+        let resp = g
+            .handle_line(r#"{"kind":"run","duration_s":0.05,"id":"x"}"#)
+            .unwrap();
+        let v = parse(&resp).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false), "{resp}");
+        assert_eq!(v.get("id").and_then(Value::as_str), Some("x"), "ids echo on errors");
+        let msg = v.get("error").and_then(Value::as_str).unwrap();
+        assert!(msg.contains("no healthy backends"), "{msg}");
+        // stats: the backend is out of the ring, the re-dispatch counted
+        let stats = parse(&g.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(stats.get("role").and_then(Value::as_str), Some("gateway"));
+        let backends = stats.get("backends").and_then(Value::as_arr).unwrap();
+        assert_eq!(backends.len(), 1);
+        assert_eq!(backends[0].get("healthy").and_then(Value::as_bool), Some(false));
+        assert_eq!(backends[0].get("failed").and_then(Value::as_u64), Some(1));
+        let gw = stats.get("gateway").unwrap();
+        assert_eq!(gw.get("redispatches").and_then(Value::as_u64), Some(1));
+        assert_eq!(stats.get("errors").and_then(Value::as_u64), Some(1));
+        // malformed and protocol-invalid requests fail at the edge
+        // without touching the (dead) backend ring
+        let v = parse(&g.handle_line("not json").unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+        let v = parse(&g.handle_line(r#"{"kind":"warp"}"#).unwrap()).unwrap();
+        assert!(v.get("error").and_then(Value::as_str).unwrap().contains("unknown request kind"));
+    }
+
+    #[test]
+    fn gateway_requires_backends() {
+        assert!(Gateway::new(Vec::new()).is_err());
+    }
+}

@@ -1,0 +1,342 @@
+//! Dependency-free HTTP/1.1 front end over the JSON-lines protocol
+//! (DESIGN.md §15).
+//!
+//! `kraken serve --http ADDR` (and `kraken gateway --http ADDR`) accept
+//! `POST` requests whose body is exactly one protocol request object —
+//! the same bytes a JSON-lines client would send as a line — and answer
+//! `200 OK` with the response object as an `application/json` body. The
+//! target path is ignored: the protocol's `kind` field already routes.
+//! Transport-level failures map onto a small fixed status set:
+//!
+//! * `400` — malformed request line or headers, missing/unparseable/
+//!   conflicting `Content-Length`, an empty body, or a non-UTF-8 body;
+//! * `405` (+ `Allow: POST`) — any method but `POST`;
+//! * `413` — a declared body larger than [`MAX_BODY`].
+//!
+//! Protocol-level errors are *not* HTTP errors: a rejected request is a
+//! `200` whose body is the usual `{"ok":false,...}` envelope. HTTP status
+//! answers "did the transport work", the body answers "did the request
+//! make sense" — the same split the JSON-lines path has always had, so a
+//! client can move between transports without re-mapping errors.
+//!
+//! Connections are persistent by default (HTTP/1.1 keep-alive; HTTP/1.0
+//! closes unless `Connection: keep-alive`), `Connection: close` is
+//! honored, and every transport-error response closes. One head buffer,
+//! one body buffer and one response buffer live per connection — the
+//! same allocation-reuse discipline as the JSON-lines loop.
+
+use std::io::{BufRead, Read, Write};
+use std::sync::Arc;
+
+use super::{listen_with, protocol, LineService};
+
+/// Byte cap on the request line and on each header line (the only
+/// un-length-prefixed part of a request, so the cap is the DoS guard).
+pub const MAX_HEAD_LINE: u64 = 8 * 1024;
+/// Cap on the number of header lines per request.
+pub const MAX_HEADERS: usize = 64;
+/// Byte cap on a request body. Grid requests are a few KB of JSON; 1 MiB
+/// is generous headroom, not a workload ceiling.
+pub const MAX_BODY: u64 = 1024 * 1024;
+
+/// Serve HTTP over TCP: one thread per connection on the shared accept
+/// loop ([`listen_with`]), every connection dispatching into `svc`'s
+/// protocol core — the server's or the gateway's.
+pub fn serve_http<S: LineService>(svc: Arc<S>, addr: &str) -> crate::Result<()> {
+    listen_with(svc, addr, |local| format!("kraken serve: http on {local}"), conn_http)
+}
+
+/// Handle one accepted HTTP connection (public so embedders can pair it
+/// with [`listen_with`] directly, as [`serve_http`] does).
+pub fn conn_http<S: LineService>(svc: &S, stream: std::net::TcpStream) -> crate::Result<()> {
+    let result = conn_http_inner(svc, stream);
+    // mirror the JSON-lines loop: a shutting-down accept loop must be
+    // woken whatever way this connection ends
+    if svc.shutting_down() {
+        svc.nudge();
+    }
+    result
+}
+
+fn conn_http_inner<S: LineService>(svc: &S, stream: std::net::TcpStream) -> crate::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let mut reader = std::io::BufReader::new(stream);
+    let mut line = String::new();
+    let mut body = Vec::new();
+    let mut resp = String::new();
+    loop {
+        let served =
+            serve_one(svc, &mut reader, &mut writer, &mut line, &mut body, &mut resp)?;
+        match served {
+            Served::KeepAlive if !svc.shutting_down() => continue,
+            _ => return Ok(()),
+        }
+    }
+}
+
+enum Served {
+    /// Answered; the connection stays open for the next request.
+    KeepAlive,
+    /// Answered (or the peer is gone); the connection closes.
+    Close,
+}
+
+/// The parsed request line + the headers this layer acts on.
+struct Head {
+    post: bool,
+    content_length: Option<u64>,
+    keep_alive: bool,
+}
+
+/// Serve one HTTP request off the connection. Transport-level failures
+/// answer with their status and close; error-response write failures are
+/// ignored (the peer that provoked them is often already gone).
+fn serve_one<S: LineService>(
+    svc: &S,
+    reader: &mut std::io::BufReader<std::net::TcpStream>,
+    writer: &mut std::net::TcpStream,
+    line: &mut String,
+    body: &mut Vec<u8>,
+    resp: &mut String,
+) -> crate::Result<Served> {
+    let head = match parse_head(reader, line) {
+        Ok(None) => return Ok(Served::Close), // clean EOF between requests
+        Ok(Some(h)) => h,
+        Err(e) => {
+            let _ = respond(writer, "400 Bad Request", "", &err_body(&format!("{e:#}")), false);
+            return Ok(Served::Close);
+        }
+    };
+    if !head.post {
+        let _ = respond(
+            writer,
+            "405 Method Not Allowed",
+            "Allow: POST\r\n",
+            &err_body("only POST is accepted"),
+            false,
+        );
+        return Ok(Served::Close);
+    }
+    let Some(len) = head.content_length else {
+        let _ = respond(writer, "400 Bad Request", "", &err_body("missing Content-Length"), false);
+        return Ok(Served::Close);
+    };
+    if len > MAX_BODY {
+        let _ = respond(
+            writer,
+            "413 Payload Too Large",
+            "",
+            &err_body(&format!("body of {len} bytes exceeds the {MAX_BODY}-byte cap")),
+            false,
+        );
+        return Ok(Served::Close);
+    }
+    body.resize(len as usize, 0);
+    reader.read_exact(&mut body[..])?; // peer died mid-body: nothing to answer
+    let Ok(text) = std::str::from_utf8(body) else {
+        let _ = respond(writer, "400 Bad Request", "", &err_body("body is not UTF-8"), false);
+        return Ok(Served::Close);
+    };
+    // bracket compute+write like the JSON-lines loop, so a concurrent
+    // shutdown's listener exit waits for this response to flush
+    svc.work_begin();
+    let served = (|| -> crate::Result<Served> {
+        if !svc.serve_line(text, resp) {
+            let _ =
+                respond(writer, "400 Bad Request", "", &err_body("empty request body"), false);
+            return Ok(Served::Close);
+        }
+        respond(writer, "200 OK", "", resp, head.keep_alive)?;
+        Ok(if head.keep_alive { Served::KeepAlive } else { Served::Close })
+    })();
+    svc.work_end();
+    served
+}
+
+/// Parse the request line and headers. `Ok(None)` means clean EOF before
+/// a request started (a keep-alive connection closed by the peer); every
+/// malformation is an error the caller maps to `400`.
+fn parse_head(reader: &mut impl BufRead, line: &mut String) -> crate::Result<Option<Head>> {
+    if read_line_bounded(reader, line, MAX_HEAD_LINE)?.is_none() {
+        return Ok(None);
+    }
+    let mut parts = line.split(' ');
+    let (method, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => {
+            (m.to_string(), v)
+        }
+        _ => anyhow::bail!("malformed request line {line:?}"),
+    };
+    // keep-alive is the HTTP/1.1 default; 1.0 must opt in
+    let mut head = Head {
+        post: method == "POST",
+        content_length: None,
+        keep_alive: match version {
+            "HTTP/1.1" => true,
+            "HTTP/1.0" => false,
+            v => anyhow::bail!("unsupported HTTP version {v:?}"),
+        },
+    };
+    for n in 0.. {
+        anyhow::ensure!(n < MAX_HEADERS, "more than {MAX_HEADERS} header lines");
+        anyhow::ensure!(
+            read_line_bounded(reader, line, MAX_HEAD_LINE)?.is_some(),
+            "connection closed inside headers"
+        );
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            anyhow::bail!("malformed header line {line:?}");
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            let len: u64 = value
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad Content-Length {value:?}"))?;
+            match head.content_length {
+                Some(old) if old != len => anyhow::bail!("conflicting Content-Length headers"),
+                _ => head.content_length = Some(len),
+            }
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                head.keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                head.keep_alive = true;
+            }
+        }
+    }
+    Ok(Some(head))
+}
+
+/// Read one `\n`-terminated line into `line` (cleared first), stripped of
+/// its CR/LF. `Ok(None)` = clean EOF before any byte; a line longer than
+/// `max` bytes — or a peer dying mid-line — is an error.
+fn read_line_bounded(
+    reader: &mut impl BufRead,
+    line: &mut String,
+    max: u64,
+) -> crate::Result<Option<()>> {
+    line.clear();
+    if reader.by_ref().take(max).read_line(line)? == 0 {
+        return Ok(None);
+    }
+    anyhow::ensure!(line.ends_with('\n'), "header line exceeds {max} bytes or was truncated");
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(Some(()))
+}
+
+/// Write one HTTP response: status line, JSON content type, explicit
+/// length and connection disposition, then the body.
+fn respond(
+    writer: &mut std::net::TcpStream,
+    status: &str,
+    extra: &str,
+    body: &str,
+    keep_alive: bool,
+) -> crate::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n{extra}Connection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    writer.write_all(head.as_bytes())?;
+    writer.write_all(body.as_bytes())?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// The JSON error envelope HTTP-layer failures answer with — the same
+/// shape as a protocol error, so clients parse one format everywhere.
+fn err_body(msg: &str) -> String {
+    protocol::error_response(msg).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn head_of(text: &str) -> crate::Result<Option<Head>> {
+        let mut line = String::new();
+        parse_head(&mut Cursor::new(text.as_bytes()), &mut line)
+    }
+
+    #[test]
+    fn parses_a_post_head() {
+        let h = head_of("POST /run HTTP/1.1\r\nContent-Length: 12\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(h.post);
+        assert_eq!(h.content_length, Some(12));
+        assert!(h.keep_alive, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn connection_header_and_version_drive_keep_alive() {
+        let h = head_of("POST / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!h.keep_alive);
+        let h = head_of("POST / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!h.keep_alive, "HTTP/1.0 defaults to close");
+        let h = head_of("POST / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(h.keep_alive, "1.0 opts in, case-insensitively");
+    }
+
+    #[test]
+    fn non_post_methods_parse_but_flag() {
+        let h = head_of("GET /stats HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert!(!h.post);
+    }
+
+    #[test]
+    fn clean_eof_is_none_not_an_error() {
+        assert!(head_of("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformations_are_errors() {
+        for bad in [
+            "POST HTTP/1.1\r\n\r\n",               // missing target
+            "POST  / HTTP/1.1\r\n\r\n",            // empty split part
+            "POST / HTTP/2\r\n\r\n",               // unsupported version
+            "POST / HTTP/1.1 extra\r\n\r\n",       // four parts
+            "POST / HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: twelve\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 6\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: 5\r\n", // EOF inside headers
+        ] {
+            assert!(head_of(bad).is_err(), "{bad:?} must be rejected");
+        }
+        // repeated *agreeing* Content-Length headers are tolerated
+        let h = head_of("POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(h.content_length, Some(5));
+    }
+
+    #[test]
+    fn header_lines_are_bounded() {
+        let long = format!("POST / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(9000));
+        assert!(head_of(&long).is_err());
+        let many = format!("POST / HTTP/1.1\r\n{}\r\n", "X-N: 1\r\n".repeat(65));
+        assert!(head_of(&many).is_err());
+    }
+
+    #[test]
+    fn bounded_line_reader_strips_crlf_and_caps() {
+        let mut line = String::new();
+        let mut r = Cursor::new(b"abc\r\nxyz\n".to_vec());
+        assert!(read_line_bounded(&mut r, &mut line, 16).unwrap().is_some());
+        assert_eq!(line, "abc");
+        assert!(read_line_bounded(&mut r, &mut line, 16).unwrap().is_some());
+        assert_eq!(line, "xyz", "bare LF is tolerated");
+        assert!(read_line_bounded(&mut r, &mut line, 16).unwrap().is_none());
+        let mut r = Cursor::new(vec![b'a'; 64]);
+        assert!(read_line_bounded(&mut r, &mut line, 16).is_err(), "over-cap line");
+    }
+}

@@ -32,11 +32,23 @@
 //! A `shutdown` request drains the queue, joins the workers, answers with
 //! final stats and stops the serving loop. See DESIGN.md § Serving and §8
 //! for the wire schema and worked examples.
+//!
+//! Two front ends sit *over* the request loop (DESIGN.md §15): [`http`],
+//! a dependency-free HTTP/1.1 layer mapping POSTed JSON bodies onto the
+//! same protocol (`kraken serve --http ADDR`), and [`gateway`], a
+//! sharding tier that fans grid/fleet requests out across N backend
+//! servers by canonical config-cell hash ([`shard`]) and merges the
+//! partial reports byte-identically (`kraken gateway`). Both serve any
+//! [`LineService`] — the request-loop trait [`Server`] and
+//! [`gateway::Gateway`] share.
 
 pub mod cache;
+pub mod gateway;
 pub mod grid;
+pub mod http;
 pub mod pool;
 pub mod protocol;
+pub mod shard;
 
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -49,7 +61,7 @@ use crate::coordinator::workload::{Workload, WorkloadConfig};
 use crate::obs::{Metrics, ReqKind};
 use crate::sensors::trace::{capture_all, TraceHandle, TraceKey};
 use crate::store::Store;
-use crate::util::json::Value;
+use crate::util::json::{parse, Value};
 
 use cache::{ResultCache, TraceCache};
 use grid::{GridConfig, GridReport, WorkloadGridReport};
@@ -157,24 +169,53 @@ impl Server {
     /// exactly one response line (never panics on bad input — protocol
     /// errors become `{"ok":false,...}` responses).
     pub fn handle_line(&self, line: &str) -> Option<String> {
-        let line = line.trim();
-        if line.is_empty() {
-            return None;
+        let mut out = String::new();
+        if self.handle_line_into(line, &mut out) {
+            Some(out)
+        } else {
+            None
         }
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        let resp = match self.dispatch(line) {
-            Ok(resp) => resp,
-            Err(e) => {
-                self.errors.fetch_add(1, Ordering::Relaxed);
-                protocol::error_response(&format!("{e:#}")).to_string()
-            }
-        };
-        Some(resp)
     }
 
-    fn dispatch(&self, line: &str) -> crate::Result<String> {
-        match Request::from_json(line)? {
-            Request::Stats => Ok(self.stats_value("stats").to_string()),
+    /// Buffer-reusing form of [`Server::handle_line`]: serve one protocol
+    /// line into `out` (cleared first), returning whether a response was
+    /// produced (blank lines produce none). The TCP/HTTP connection loops
+    /// call this with one long-lived response buffer per connection, so
+    /// the hot path reuses its capacity instead of allocating per request.
+    ///
+    /// The line is parsed exactly once. A v6 `id` (string or number) is
+    /// echoed as the first key of the response — on success *and* on
+    /// error, including requests rejected before dispatch — by splicing
+    /// it into the serialized bytes. Responses are built and cached
+    /// id-free, so clients sending different ids share one cache entry.
+    pub fn handle_line_into(&self, line: &str, out: &mut String) -> bool {
+        out.clear();
+        let line = line.trim();
+        if line.is_empty() {
+            return false;
+        }
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let (id, result) = match parse(line) {
+            Ok(v) => (protocol::request_id(&v), self.dispatch_value(&v, out)),
+            Err(e) => (None, Err(anyhow::anyhow!("bad request JSON: {e}"))),
+        };
+        if let Err(e) = result {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            out.clear();
+            out.push_str(&protocol::error_response(&format!("{e:#}")).to_string());
+        }
+        if let Some(id) = id {
+            splice_id(out, &id);
+        }
+        true
+    }
+
+    fn dispatch_value(&self, v: &Value, out: &mut String) -> crate::Result<()> {
+        match Request::from_value(v)? {
+            Request::Stats => {
+                out.push_str(&self.stats_value("stats").to_string());
+                Ok(())
+            }
             Request::Metrics => {
                 // the registry plus the store section (v4) — same store
                 // counters `stats` carries, so either kind can watch the
@@ -183,19 +224,23 @@ impl Server {
                 if let Value::Obj(map) = &mut m {
                     map.insert("store".into(), self.store_value());
                 }
-                Ok(protocol::ok_response("metrics", m).to_string())
+                out.push_str(&protocol::ok_response("metrics", m).to_string());
+                Ok(())
             }
-            Request::Shutdown => Ok(self.shutdown_now()),
+            Request::Shutdown => {
+                out.push_str(&self.shutdown_now());
+                Ok(())
+            }
             Request::Run { cfg, persist } => {
-                self.serve_missions("run", vec![cfg], None, persist)
+                self.serve_missions("run", vec![cfg], None, persist, out)
             }
             Request::Fleet { cfgs, persist } => {
-                self.serve_missions("fleet", cfgs, None, persist)
+                self.serve_missions("fleet", cfgs, None, persist, out)
             }
             Request::Workload { cfg, persist } => {
-                self.serve_workloads("workload", vec![cfg], None, persist)
+                self.serve_workloads("workload", vec![cfg], None, persist, out)
             }
-            Request::Timeline { target } => self.serve_timeline(target),
+            Request::Timeline { target } => self.serve_timeline(target, out),
             Request::Grid {
                 base,
                 seeds,
@@ -230,37 +275,39 @@ impl Server {
                     let cells = grid.workload_cells();
                     let labels = cells.iter().map(|c| c.label.clone()).collect();
                     let cfgs = cells.into_iter().map(|c| c.cfg).collect();
-                    self.serve_workloads("grid", cfgs, Some(labels), persist)
+                    self.serve_workloads("grid", cfgs, Some(labels), persist, out)
                 } else {
                     let cells = grid.cells();
                     let labels = cells.iter().map(|c| c.label.clone()).collect();
                     let cfgs = cells.into_iter().map(|c| c.cfg).collect();
-                    self.serve_missions("grid", cfgs, Some(labels), persist)
+                    self.serve_missions("grid", cfgs, Some(labels), persist, out)
                 }
             }
         }
     }
 
-    /// Replay `key` from the cache when `cacheable`, else compute the
-    /// response and store it verbatim. A `persist`-hinted response (v4)
-    /// is additionally written through to the store disk tier.
-    fn with_cache(
+    /// Replay `key` from the cache into `out` when `cacheable`, else
+    /// compute the response, append it to `out` and store it verbatim —
+    /// the computed `String` moves into the cache, so neither path clones
+    /// the response. A `persist`-hinted response (v4) is additionally
+    /// written through to the store disk tier.
+    fn with_cache_into(
         &self,
         cacheable: bool,
         persist: bool,
         key: String,
+        out: &mut String,
         compute: impl FnOnce() -> crate::Result<String>,
-    ) -> crate::Result<String> {
-        if cacheable {
-            if let Some(hit) = self.cache.lock().unwrap().get(&key) {
-                return Ok(hit);
-            }
+    ) -> crate::Result<()> {
+        if cacheable && self.cache.lock().unwrap().get_into(&key, out) {
+            return Ok(());
         }
         let resp = compute()?;
+        out.push_str(&resp);
         if cacheable {
-            self.cache.lock().unwrap().insert_hinted(key, resp.clone(), persist);
+            self.cache.lock().unwrap().insert_hinted(key, resp, persist);
         }
-        Ok(resp)
+        Ok(())
     }
 
     /// Resolve each position's sensor-trace key against the tiered trace
@@ -319,10 +366,11 @@ impl Server {
         cfgs: Vec<MissionConfig>,
         labels: Option<Vec<String>>,
         persist: bool,
-    ) -> crate::Result<String> {
+        out: &mut String,
+    ) -> crate::Result<()> {
         let cacheable = cfgs.iter().all(|c| c.artifacts_dir.is_none());
         let key = cache::canonical_key(kind, &self.soc, &cfgs);
-        self.with_cache(cacheable, persist, key, || {
+        self.with_cache_into(cacheable, persist, key, out, || {
             // reject batches that can never be admitted *before* paying
             // for sensor capture — backpressure must bound server work
             self.pool
@@ -374,10 +422,11 @@ impl Server {
         cfgs: Vec<WorkloadConfig>,
         labels: Option<Vec<String>>,
         persist: bool,
-    ) -> crate::Result<String> {
+        out: &mut String,
+    ) -> crate::Result<()> {
         let cacheable = cfgs.iter().all(|c| c.artifacts_dir.is_none());
         let key = cache::canonical_key(kind, &self.soc, &cfgs);
-        self.with_cache(cacheable, persist, key, || {
+        self.with_cache_into(cacheable, persist, key, out, || {
             self.pool
                 .check_batch_fits(cfgs.len())
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -427,14 +476,14 @@ impl Server {
     /// throughput work. Cached under the same canonical-key discipline as
     /// every other kind: the simulation and the exporter are both
     /// deterministic, so a cache replay is byte-identical to a recompute.
-    fn serve_timeline(&self, target: TimelineTarget) -> crate::Result<String> {
+    fn serve_timeline(&self, target: TimelineTarget, out: &mut String) -> crate::Result<()> {
         let exec_start = std::time::Instant::now();
         let resp = match target {
             TimelineTarget::Mission(cfg) => {
                 let cacheable = cfg.artifacts_dir.is_none();
                 let key =
                     cache::canonical_key("timeline", &self.soc, std::slice::from_ref(&cfg));
-                self.with_cache(cacheable, false, key, || {
+                self.with_cache_into(cacheable, false, key, out, || {
                     let mut m = Mission::new(self.soc.clone(), cfg)?;
                     m.record_timeline();
                     m.run()?;
@@ -446,7 +495,7 @@ impl Server {
                 let cacheable = cfg.artifacts_dir.is_none();
                 let key =
                     cache::canonical_key("timeline", &self.soc, std::slice::from_ref(&cfg));
-                self.with_cache(cacheable, false, key, || {
+                self.with_cache_into(cacheable, false, key, out, || {
                     let mut w = Workload::new(self.soc.clone(), cfg)?;
                     w.record_timeline();
                     w.run()?;
@@ -472,23 +521,9 @@ impl Server {
     }
 
     /// Wake a blocking TCP `accept` (which cannot observe the shutdown
-    /// flag on its own) with a throwaway connection. No-op off TCP. A
-    /// wildcard bind (0.0.0.0 / [::]) is not connectable on every
-    /// platform, so the nudge targets loopback on the bound port.
+    /// flag on its own) with a throwaway connection. No-op off TCP.
     fn nudge_listener(&self) {
-        if let Some(mut addr) = *self.listen_addr.lock().unwrap() {
-            if addr.ip().is_unspecified() {
-                addr.set_ip(match addr {
-                    std::net::SocketAddr::V4(_) => {
-                        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
-                    }
-                    std::net::SocketAddr::V6(_) => {
-                        std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
-                    }
-                });
-            }
-            let _ = std::net::TcpStream::connect(addr);
-        }
+        nudge_addr(*self.listen_addr.lock().unwrap());
     }
 
     /// The statistics document: uptime, queue state, per-worker busy/job
@@ -622,12 +657,20 @@ impl Server {
         );
         let stdin = std::io::stdin();
         let stdout = std::io::stdout();
-        for line in stdin.lock().lines() {
-            let line = line?;
-            if let Some(resp) = self.handle_line(&line) {
+        let mut reader = stdin.lock();
+        // one request + one response buffer for the whole session (the
+        // same reuse discipline as the TCP loop)
+        let mut line = String::new();
+        let mut resp = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            if self.handle_line_into(&line, &mut resp) {
+                resp.push('\n');
                 let mut out = stdout.lock();
                 out.write_all(resp.as_bytes())?;
-                out.write_all(b"\n")?;
                 out.flush()?;
             }
             if self.is_shutting_down() {
@@ -638,20 +681,115 @@ impl Server {
     }
 }
 
+/// Wake a blocking TCP `accept` on `addr` with a throwaway connection —
+/// the shared half of [`LineService::nudge`] for [`Server`] and
+/// [`gateway::Gateway`]. No-op when nothing is bound. A wildcard bind
+/// (0.0.0.0 / [::]) is not connectable on every platform, so the nudge
+/// targets loopback on the bound port.
+pub(crate) fn nudge_addr(addr: Option<std::net::SocketAddr>) {
+    if let Some(mut addr) = addr {
+        if addr.ip().is_unspecified() {
+            addr.set_ip(match addr {
+                std::net::SocketAddr::V4(_) => {
+                    std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                }
+                std::net::SocketAddr::V6(_) => {
+                    std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                }
+            });
+        }
+        let _ = std::net::TcpStream::connect(addr);
+    }
+}
+
+/// Echo a request `id` into a serialized response object by inserting it
+/// as the first key. Responses (and cached entries) are built id-free so
+/// one cache entry serves every client whatever id each sent; the serve
+/// and gateway layers splice the echo in per request.
+pub(crate) fn splice_id(resp: &mut String, id: &Value) {
+    debug_assert!(resp.starts_with('{'));
+    resp.insert_str(1, &format!("\"id\":{},", id.to_string()));
+}
+
+/// A line-oriented request service: one JSON request line in, one JSON
+/// response line out. Implemented by [`Server`] (the single-process
+/// worker-pool core) and [`gateway::Gateway`] (the sharding front end),
+/// so the TCP JSON-lines loop and the HTTP/1.1 layer ([`http`]) can sit
+/// over either one.
+pub trait LineService: Send + Sync + 'static {
+    /// Serve one request line into `out` (cleared first), returning
+    /// whether a response was produced (blank lines produce none).
+    fn serve_line(&self, line: &str, out: &mut String) -> bool;
+    /// Has a `shutdown` request been served? Serving loops exit once true.
+    fn shutting_down(&self) -> bool;
+    /// Record the bound TCP address so [`LineService::nudge`] can reach
+    /// the accept loop.
+    fn note_bound(&self, addr: std::net::SocketAddr);
+    /// Wake a blocking `accept` (which cannot observe the shutdown flag
+    /// on its own) with a throwaway connection.
+    fn nudge(&self);
+    /// Bracket one response's compute+write so a concurrent shutdown's
+    /// listener exit waits for it to flush.
+    fn work_begin(&self);
+    fn work_end(&self);
+    /// Any responses still being computed/written by connection threads?
+    fn work_pending(&self) -> bool;
+}
+
+impl LineService for Server {
+    fn serve_line(&self, line: &str, out: &mut String) -> bool {
+        self.handle_line_into(line, out)
+    }
+    fn shutting_down(&self) -> bool {
+        self.is_shutting_down()
+    }
+    fn note_bound(&self, addr: std::net::SocketAddr) {
+        *self.listen_addr.lock().unwrap() = Some(addr);
+    }
+    fn nudge(&self) {
+        self.nudge_listener();
+    }
+    fn work_begin(&self) {
+        self.conn_work.fetch_add(1, Ordering::SeqCst);
+    }
+    fn work_end(&self) {
+        self.conn_work.fetch_sub(1, Ordering::SeqCst);
+    }
+    fn work_pending(&self) -> bool {
+        self.conn_work.load(Ordering::SeqCst) > 0
+    }
+}
+
 /// Serve JSON-lines over TCP: one thread per connection, all connections
 /// sharing the server's pool and cache (the `--listen ADDR` mode). Exits
 /// once a `shutdown` request has been served on any connection.
 pub fn serve_listen(server: Arc<Server>, addr: &str) -> crate::Result<()> {
+    let workers = server.workers();
+    listen_with(server, addr, move |local| {
+        format!("kraken serve: listening on {local}, {workers} workers")
+    }, conn_lines)
+}
+
+/// The shared TCP accept loop under the JSON-lines and HTTP front ends:
+/// bind, record the local address, print `banner`, spawn one `conn`
+/// handler thread per connection, exit once the service reports shutdown,
+/// then wait for in-flight responses to flush.
+pub fn listen_with<S, B>(
+    svc: Arc<S>,
+    addr: &str,
+    banner: B,
+    conn: fn(&S, std::net::TcpStream) -> crate::Result<()>,
+) -> crate::Result<()>
+where
+    S: LineService,
+    B: FnOnce(std::net::SocketAddr) -> String,
+{
     let listener = std::net::TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
-    *server.listen_addr.lock().unwrap() = Some(local);
-    eprintln!(
-        "kraken serve: listening on {}, {} workers",
-        local,
-        server.workers()
-    );
+    svc.note_bound(local);
+    eprintln!("{}", banner(local));
     for stream in listener.incoming() {
-        if server.is_shutting_down() {
+        if svc.shutting_down() {
             break;
         }
         // a resident server must survive transient accept failures
@@ -663,9 +801,9 @@ pub fn serve_listen(server: Arc<Server>, addr: &str) -> crate::Result<()> {
                 continue;
             }
         };
-        let server = Arc::clone(&server);
+        let svc = Arc::clone(&svc);
         std::thread::spawn(move || {
-            if let Err(e) = serve_conn(&server, stream) {
+            if let Err(e) = conn(&svc, stream) {
                 eprintln!("kraken serve: connection error: {e:#}");
             }
         });
@@ -675,42 +813,51 @@ pub fn serve_listen(server: Arc<Server>, addr: &str) -> crate::Result<()> {
     // Connections idle in read hold no work units, so this cannot hang.
     // (Best-effort by design: a request racing the shutdown line itself —
     // read but not yet registered — has no response-ordering guarantee.)
-    while server.conn_work.load(Ordering::SeqCst) > 0 {
+    while svc.work_pending() {
         std::thread::sleep(std::time::Duration::from_millis(10));
     }
     Ok(())
 }
 
-fn serve_conn(server: &Server, stream: std::net::TcpStream) -> crate::Result<()> {
-    let result = serve_conn_inner(server, stream);
+/// Serve JSON-lines on one accepted connection. One request buffer and
+/// one response buffer live for the whole connection — the hot path
+/// reuses their capacity instead of allocating two fresh `String`s per
+/// request like the old `reader.lines()` + `handle_line` pair did.
+pub fn conn_lines<S: LineService>(svc: &S, stream: std::net::TcpStream) -> crate::Result<()> {
+    let result = conn_lines_inner(svc, stream);
     // whatever way this connection ends (clean break, client hang-up
     // mid-write, read error), a shutting-down server must get its accept
     // loop woken or the process never exits
-    if server.is_shutting_down() {
-        server.nudge_listener();
+    if svc.shutting_down() {
+        svc.nudge();
     }
     result
 }
 
-fn serve_conn_inner(server: &Server, stream: std::net::TcpStream) -> crate::Result<()> {
+fn conn_lines_inner<S: LineService>(svc: &S, stream: std::net::TcpStream) -> crate::Result<()> {
     let mut writer = stream.try_clone()?;
-    let reader = std::io::BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = std::io::BufReader::new(stream);
+    let mut line = String::new();
+    let mut resp = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
         // hold a work unit across compute + write so a concurrent
         // shutdown's listener exit waits for this response to flush
-        server.conn_work.fetch_add(1, Ordering::SeqCst);
+        svc.work_begin();
         let wrote = (|| -> crate::Result<()> {
-            if let Some(resp) = server.handle_line(&line) {
+            if svc.serve_line(&line, &mut resp) {
+                resp.push('\n');
                 writer.write_all(resp.as_bytes())?;
-                writer.write_all(b"\n")?;
                 writer.flush()?;
             }
             Ok(())
         })();
-        server.conn_work.fetch_sub(1, Ordering::SeqCst);
+        svc.work_end();
         wrote?;
-        if server.is_shutting_down() {
+        if svc.shutting_down() {
             break;
         }
     }
@@ -879,6 +1026,30 @@ mod tests {
         assert!(s.handle_line("   ").is_none());
         let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
         assert_eq!(stats.get("errors").and_then(Value::as_u64), Some(3));
+    }
+
+    #[test]
+    fn request_ids_echo_on_success_and_error() {
+        let s = server();
+        let a = s.handle_line(RUN).unwrap();
+        // same mission with an id: the id splices in front of the same
+        // cached bytes, so differently-tagged clients share one entry
+        let line = r#"{"kind":"run","id":"alpha","duration_s":0.05,"dvs_sample_hz":300.0,"seed":3}"#;
+        let b = s.handle_line(line).unwrap();
+        assert_eq!(b, format!("{{\"id\":\"alpha\",{}", &a[1..]));
+        let stats = parse(&s.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+        let cache = stats.get("cache").unwrap();
+        assert_eq!(cache.get("hits").and_then(Value::as_u64), Some(1));
+        // numeric ids echo on errors too — including pre-dispatch rejects
+        let v = parse(&s.handle_line(r#"{"kind":"warp","id":7}"#).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+        assert_eq!(v.get("id").and_then(Value::as_u64), Some(7));
+        // ...and on the v6 gate itself when an old pin sends an id
+        let v = parse(&s.handle_line(r#"{"kind":"stats","v":5,"id":"x"}"#).unwrap()).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false));
+        assert_eq!(v.get("id").and_then(Value::as_str), Some("x"));
+        let msg = v.get("error").and_then(Value::as_str).unwrap();
+        assert!(msg.contains("requires protocol v6"), "{msg}");
     }
 
     #[test]

@@ -56,7 +56,13 @@
 //! `streams[]`, and a scalar-or-array `faults` axis on `grid`. Faulted
 //! reports carry a `resilience` section; the empty plan (`"none"`) is
 //! bit-identical to omitting the field. Clients pinning v1–v4 get an
-//! error if they send `faults`.
+//! error if they send `faults`. v6 adds request correlation: every kind
+//! accepts an optional `id` (a string or number), echoed verbatim as the
+//! first key of the response — on success *and* on error, so a storm
+//! client multiplexing requests over one connection can correlate
+//! failures. The id never reaches the resolved configs (cached responses
+//! are stored id-free and the serve layer splices the echo in per
+//! request); clients pinning v1–v5 get an error if they send it.
 //!
 //! Responses are `{"ok":true,"kind":...,"report":...}` or
 //! `{"ok":false,"error":...}`. Unknown request keys are rejected rather
@@ -82,12 +88,13 @@ pub const MAX_CELLS: usize = 4096;
 /// older (still-supported) version with a `v` field; anything outside
 /// [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`] is rejected with an
 /// error response.
-pub const PROTOCOL_VERSION: u64 = 5;
+pub const PROTOCOL_VERSION: u64 = 6;
 
 /// The oldest protocol version still accepted. Older pins keep their old
 /// semantics: the v2-only fields (`governor`, `qos`), the v3-only kinds
-/// (`timeline`, `metrics`), the v4-only `persist` hint and the v5-only
-/// `faults` field are rejected rather than silently honored.
+/// (`timeline`, `metrics`), the v4-only `persist` hint, the v5-only
+/// `faults` field and the v6-only `id` correlation field are rejected
+/// rather than silently honored.
 pub const MIN_PROTOCOL_VERSION: u64 = 1;
 
 /// A parsed, validated request.
@@ -138,6 +145,7 @@ pub enum TimelineTarget {
 const MISSION_KEYS: &[&str] = &[
     "kind",
     "v",
+    "id",
     "seed",
     "duration_s",
     "scene",
@@ -195,6 +203,39 @@ fn require_v5(v: &Value, ver: u64) -> crate::Result<()> {
     Ok(())
 }
 
+/// Validate the v6 request-correlation `id`: absent is fine; present
+/// requires a v6 pin (or no pin) and a string or number value. The id
+/// never reaches the resolved configs — the serve layer echoes it back on
+/// the response ([`request_id`]) and caches responses id-free.
+fn check_id(v: &Value, ver: u64) -> crate::Result<()> {
+    match v.get("id") {
+        None => Ok(()),
+        Some(x) => {
+            anyhow::ensure!(
+                ver >= 6,
+                "\"id\" requires protocol v6 (request pinned v{ver})"
+            );
+            anyhow::ensure!(
+                matches!(x, Value::Str(_) | Value::Num(_)),
+                "\"id\" must be a string or a number"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Best-effort extraction of the correlation `id` from a parsed request —
+/// lenient by design: error replies echo the id whenever one was
+/// *parseable* (a string or number), even when the request itself is
+/// rejected (bad version, unknown key, even a pre-v6 pin carrying the id),
+/// so storm clients can always correlate failures.
+pub fn request_id(v: &Value) -> Option<Value> {
+    match v.get("id") {
+        Some(x @ (Value::Str(_) | Value::Num(_))) => Some(x.clone()),
+        _ => None,
+    }
+}
+
 impl Request {
     /// Parse one request line.
     pub fn from_json(text: &str) -> crate::Result<Request> {
@@ -225,6 +266,7 @@ impl Request {
             .get("kind")
             .and_then(Value::as_str)
             .ok_or_else(|| anyhow::anyhow!("request needs a string \"kind\""))?;
+        check_id(v, ver)?;
         match kind {
             "run" => {
                 let mut allowed = MISSION_KEYS.to_vec();
@@ -346,7 +388,7 @@ impl Request {
                 Ok(Request::Timeline { target })
             }
             "stats" => {
-                check_keys(obj, &["kind", "v"])?;
+                check_keys(obj, &["kind", "v", "id"])?;
                 Ok(Request::Stats)
             }
             "metrics" => {
@@ -354,11 +396,11 @@ impl Request {
                     ver >= 3,
                     "request kind \"metrics\" requires protocol v3 (request pinned v{ver})"
                 );
-                check_keys(obj, &["kind", "v"])?;
+                check_keys(obj, &["kind", "v", "id"])?;
                 Ok(Request::Metrics)
             }
             "shutdown" => {
-                check_keys(obj, &["kind", "v"])?;
+                check_keys(obj, &["kind", "v", "id"])?;
                 Ok(Request::Shutdown)
             }
             other => anyhow::bail!(
@@ -1057,15 +1099,17 @@ mod tests {
         assert!(Request::from_json(r#"{"kind":"stats","v":3}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"stats","v":4}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"stats","v":5}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"stats","v":6}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":1,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":2,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":3,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":4,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"run","v":5,"duration_s":0.1}"#).is_ok());
+        assert!(Request::from_json(r#"{"kind":"run","v":6,"duration_s":0.1}"#).is_ok());
         assert!(Request::from_json(r#"{"kind":"shutdown","v":1}"#).is_ok());
         // unknown versions are rejected, whatever the kind
         for line in [
-            r#"{"kind":"stats","v":6}"#,
+            r#"{"kind":"stats","v":7}"#,
             r#"{"kind":"run","v":0}"#,
             r#"{"kind":"workload","v":99,"tenants":2}"#,
             r#"{"kind":"stats","v":"1"}"#,
@@ -1076,6 +1120,53 @@ mod tests {
                 "{line} -> unexpected error {err}"
             );
         }
+    }
+
+    #[test]
+    fn request_ids_require_v6() {
+        // v6 (explicit or implied) accepts string and numeric ids on every kind
+        for line in [
+            r#"{"kind":"stats","id":"abc"}"#,
+            r#"{"kind":"stats","v":6,"id":7}"#,
+            r#"{"kind":"metrics","v":6,"id":"m-1"}"#,
+            r#"{"kind":"shutdown","id":0}"#,
+            r#"{"kind":"run","id":"r","duration_s":0.1}"#,
+            r#"{"kind":"fleet","id":1,"missions":2,"duration_s":0.1}"#,
+            r#"{"kind":"grid","id":"g","seed":[1,2],"duration_s":0.1}"#,
+            r#"{"kind":"workload","id":2,"tenants":2,"duration_s":0.1}"#,
+            r#"{"kind":"timeline","id":"t","duration_s":0.1}"#,
+        ] {
+            assert!(Request::from_json(line).is_ok(), "{line} rejected");
+        }
+        // pre-v6 pins reject the field rather than silently dropping it
+        for v in 1..=5u64 {
+            let line = format!(r#"{{"kind":"stats","v":{v},"id":"x"}}"#);
+            let err = Request::from_json(&line).unwrap_err().to_string();
+            assert!(err.contains("requires protocol v6"), "v{v} -> {err}");
+        }
+        // ids must be strings or numbers — no objects/arrays/bools/null
+        for line in [
+            r#"{"kind":"stats","id":true}"#,
+            r#"{"kind":"stats","id":null}"#,
+            r#"{"kind":"stats","id":[1]}"#,
+            r#"{"kind":"stats","id":{"a":1}}"#,
+        ] {
+            let err = Request::from_json(line).unwrap_err().to_string();
+            assert!(err.contains("string or a number"), "{line} -> {err}");
+        }
+    }
+
+    #[test]
+    fn request_id_extraction_is_lenient() {
+        let v = parse(r#"{"kind":"stats","id":"abc"}"#).unwrap();
+        assert_eq!(request_id(&v), Some(Value::Str("abc".into())));
+        let v = parse(r#"{"kind":"stats","id":42}"#).unwrap();
+        assert_eq!(request_id(&v).unwrap().to_string(), "42");
+        // absent or malformed ids extract to None even from invalid requests
+        let v = parse(r#"{"kind":"stats"}"#).unwrap();
+        assert_eq!(request_id(&v), None);
+        let v = parse(r#"{"kind":"nope","id":[1]}"#).unwrap();
+        assert_eq!(request_id(&v), None);
     }
 
     #[test]

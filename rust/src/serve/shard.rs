@@ -1,0 +1,283 @@
+//! Request sharding for the gateway tier (DESIGN.md §15).
+//!
+//! The gateway splits one fan-out request (`fleet`, `grid`) into
+//! single-cell sub-requests, routes every sub-request to a backend by a
+//! stable hash of its canonical bytes, and merges the partial reports
+//! back into one single-node-equivalent reply. This module owns the first
+//! two pieces — the canonical form and the cell enumeration — and pins
+//! the invariant the merge depends on: **sub-requests are emitted in the
+//! exact order the backend's own grid machinery enumerates cells**, so
+//! concatenating single-cell reports reproduces the single-node report.
+//!
+//! Canonicalization strips the v6 `id` (the gateway echoes ids itself;
+//! backends never see them, so differently-tagged clients shard and cache
+//! identically) and re-serializes through [`Value`] — object keys sort,
+//! floats round-trip bit-exactly — so the same logical request always
+//! hashes to the same shard whatever key order the client sent.
+//!
+//! Cell enumeration mirrors [`GridConfig`]: the cross-product of the
+//! non-empty array axes, seed outermost, tenants innermost, rightmost
+//! axis fastest. Scalar and absent axis keys ride along unchanged in
+//! every sub-request (each resolves identically on every backend), and
+//! each expanded axis key is replaced by one raw element per cell —
+//! preserving `null` gating cells, scene strings and fault-plan labels
+//! verbatim. A single-cell grid request still parses as a grid on the
+//! backend, so labels (including the `faults=`/`tenants=` suffixes that
+//! only appear when the axis key is present) match the single-node run.
+//!
+//! [`GridConfig`]: crate::serve::grid::GridConfig
+
+use crate::util::fnv1a;
+use crate::util::json::Value;
+
+use super::protocol::Request;
+
+/// The grid axis keys in the exact nesting order of
+/// [`GridConfig::workload_cells`]: seed outermost, then duration, scene,
+/// vdd, gate, governor, faults, and tenants innermost. The odometer in
+/// [`grid_subrequests`] steps the rightmost axis fastest to match.
+///
+/// [`GridConfig::workload_cells`]: crate::serve::grid::GridConfig::workload_cells
+const GRID_AXES: [&str; 8] = [
+    "seed",
+    "duration_s",
+    "scene",
+    "vdd",
+    "idle_gate_s",
+    "governor",
+    "faults",
+    "tenants",
+];
+
+/// Which of `n` shards serves `line`: FNV-1a of the canonical request
+/// bytes, modulo the shard count. Deterministic across processes and
+/// platforms (the same hash keys the result cache), so a re-dispatch
+/// after backend loss lands every survivor on the same answer.
+pub fn shard_of(line: &str, n: usize) -> usize {
+    (fnv1a(line.as_bytes()) % n.max(1) as u64) as usize
+}
+
+/// The canonical wire form of a request: the v6 `id` stripped, keys
+/// sorted (a [`Value`] object serializes from a `BTreeMap`). Hashing and
+/// forwarding both use this form, so clients that tag requests with ids
+/// or reorder keys still share shards — and backend cache entries.
+pub fn canonical_line(v: &Value) -> String {
+    match v {
+        Value::Obj(map) if map.contains_key("id") => {
+            let mut map = map.clone();
+            map.remove("id");
+            Value::Obj(map).to_string()
+        }
+        _ => v.to_string(),
+    }
+}
+
+/// Split a `fleet` request into one single-mission sub-request per fleet
+/// slot. A fleet resolves seeds as `base_seed + i`, so slot `i` becomes
+/// `{"missions":1,"seed":base_seed + i,...}` — the backend's own
+/// resolution then yields exactly the fleet's `i`-th config. Validates
+/// through [`Request::from_value`] first, so a request the backends
+/// would reject fails at the gateway edge with the same error.
+pub fn fleet_subrequests(v: &Value) -> crate::Result<Vec<String>> {
+    let req = Request::from_value(v)?;
+    let Request::Fleet { cfgs, .. } = req else {
+        anyhow::bail!("fleet_subrequests on a non-fleet request");
+    };
+    let base = v.as_obj().expect("from_value accepted it; requests are objects");
+    let mut out = Vec::with_capacity(cfgs.len());
+    for cfg in &cfgs {
+        let mut m = base.clone();
+        m.remove("id");
+        m.insert("missions".to_string(), Value::Num(1.0));
+        // seeds are wire-limited to f64-exact integers well below 2^53
+        // (protocol bounds), so the round-trip is lossless
+        m.insert("seed".to_string(), Value::Num(cfg.seed as f64));
+        out.push(Value::Obj(m).to_string());
+    }
+    Ok(out)
+}
+
+/// Split a `grid` request into one single-cell sub-request per
+/// cross-product cell, in the backend's cell order. Only non-empty array
+/// axes fan out (the protocol rejects empty axis arrays outright); each
+/// cell pins every expanded axis to one raw element and leaves scalar /
+/// absent keys untouched, so the sub-request resolves — and labels —
+/// exactly like the corresponding cell of the original grid.
+pub fn grid_subrequests(v: &Value) -> crate::Result<Vec<String>> {
+    let req = Request::from_value(v)?;
+    anyhow::ensure!(
+        matches!(req, Request::Grid { .. }),
+        "grid_subrequests on a non-grid request"
+    );
+    let base = v.as_obj().expect("from_value accepted it; requests are objects");
+    let axes: Vec<Option<&[Value]>> = GRID_AXES
+        .iter()
+        .map(|k| match v.get(k) {
+            Some(Value::Arr(a)) if !a.is_empty() => Some(a.as_slice()),
+            _ => None,
+        })
+        .collect();
+    // bounded by the protocol's MAX_CELLS gate in from_value above
+    let total: usize = axes.iter().map(|a| a.map_or(1, <[Value]>::len)).product();
+    let mut out = Vec::with_capacity(total);
+    let mut idx = [0usize; GRID_AXES.len()];
+    for _ in 0..total {
+        let mut m = base.clone();
+        m.remove("id");
+        for ((key, axis), &slot) in GRID_AXES.iter().zip(&axes).zip(&idx) {
+            if let Some(elems) = axis {
+                m.insert((*key).to_string(), elems[slot].clone());
+            }
+        }
+        out.push(Value::Obj(m).to_string());
+        // odometer: innermost (rightmost) axis steps fastest, matching
+        // the nested loops in GridConfig::workload_cells
+        for d in (0..GRID_AXES.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < axes[d].map_or(1, <[Value]>::len) {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SocConfig;
+    use crate::serve::grid::GridConfig;
+    use crate::util::json::parse;
+
+    #[test]
+    fn shard_assignment_is_stable_and_in_range() {
+        let line = r#"{"duration_s":0.05,"kind":"run","seed":3}"#;
+        for n in 1..8 {
+            let s = shard_of(line, n);
+            assert!(s < n);
+            assert_eq!(s, shard_of(line, n), "same line, same shard");
+        }
+        // a different canonical line lands elsewhere for some n (FNV-1a
+        // is deterministic, not degenerate)
+        let other = r#"{"duration_s":0.05,"kind":"run","seed":4}"#;
+        assert!((2..64).any(|n| shard_of(line, n) != shard_of(other, n)));
+    }
+
+    #[test]
+    fn canonical_line_strips_ids_and_sorts_keys() {
+        let v = parse(r#"{"seed":3,"kind":"run","id":"alpha","duration_s":0.05}"#).unwrap();
+        assert_eq!(canonical_line(&v), r#"{"duration_s":0.05,"kind":"run","seed":3}"#);
+        // id-free requests canonicalize to the same bytes — one shard,
+        // one backend cache entry, whatever the client tagged
+        let bare = parse(r#"{"duration_s":0.05,"kind":"run","seed":3}"#).unwrap();
+        assert_eq!(canonical_line(&v), canonical_line(&bare));
+    }
+
+    #[test]
+    fn fleet_subrequests_pin_one_resolved_seed_each() {
+        let v = parse(
+            r#"{"kind":"fleet","missions":3,"seed":40,"duration_s":0.05,"dvs_sample_hz":300.0,"id":9}"#,
+        )
+        .unwrap();
+        let subs = fleet_subrequests(&v).unwrap();
+        assert_eq!(subs.len(), 3);
+        for (i, sub) in subs.iter().enumerate() {
+            let sv = parse(sub).unwrap();
+            assert_eq!(sv.get("missions").and_then(Value::as_u64), Some(1), "{sub}");
+            assert_eq!(sv.get("seed").and_then(Value::as_u64), Some(40 + i as u64), "{sub}");
+            assert!(sv.get("id").is_none(), "ids must not reach backends: {sub}");
+        }
+        // each sub-request resolves to exactly the fleet's i-th config
+        let Request::Fleet { cfgs, .. } = Request::from_value(&v).unwrap() else {
+            panic!("not a fleet");
+        };
+        for (sub, cfg) in subs.iter().zip(&cfgs) {
+            let Request::Fleet { cfgs: sub_cfgs, .. } = Request::from_json(sub).unwrap() else {
+                panic!("sub-request is not a fleet: {sub}");
+            };
+            assert_eq!(sub_cfgs.len(), 1);
+            assert_eq!(format!("{:?}", sub_cfgs[0]), format!("{cfg:?}"), "{sub}");
+        }
+        // non-fleet kinds are refused
+        let run = parse(r#"{"kind":"run","duration_s":0.05}"#).unwrap();
+        assert!(fleet_subrequests(&run).is_err());
+    }
+
+    /// Resolve a request line into the grid the backend would run.
+    fn grid_config(line: &str) -> GridConfig {
+        match Request::from_json(line).unwrap() {
+            Request::Grid {
+                base,
+                seeds,
+                durations,
+                scenes,
+                vdds,
+                idle_gates,
+                governors,
+                tenants,
+                faults,
+                ..
+            } => GridConfig {
+                soc: SocConfig::kraken(),
+                base,
+                seeds,
+                durations,
+                scenes,
+                vdds,
+                idle_gates,
+                governors,
+                tenants,
+                faults,
+                threads: 1,
+            },
+            other => panic!("not a grid: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn grid_subrequests_enumerate_cells_in_backend_order() {
+        // array axes at both ends of the nesting order plus a null gating
+        // cell; scalar dvs_sample_hz and absent axes ride along
+        let line = r#"{"kind":"grid","duration_s":0.05,"dvs_sample_hz":300.0,"seed":[1,2],"vdd":[0.6,0.8],"idle_gate_s":[0.05,null],"tenants":[1,2]}"#;
+        let subs = grid_subrequests(&parse(line).unwrap()).unwrap();
+        let full: Vec<(String, String)> = grid_config(line)
+            .workload_cells()
+            .into_iter()
+            .map(|c| (c.label, format!("{:?}", c.cfg)))
+            .collect();
+        assert_eq!(subs.len(), 16);
+        assert_eq!(subs.len(), full.len());
+        for (sub, (label, cfg_dbg)) in subs.iter().zip(&full) {
+            let cells = grid_config(sub).workload_cells();
+            assert_eq!(cells.len(), 1, "one cell per sub-request: {sub}");
+            assert_eq!(&cells[0].label, label, "{sub}");
+            assert_eq!(&format!("{:?}", cells[0].cfg), cfg_dbg, "{sub}");
+        }
+        // the null gating cell survives the rewrite verbatim
+        assert!(subs.iter().any(|s| s.contains("\"idle_gate_s\":null")), "{subs:?}");
+    }
+
+    #[test]
+    fn mission_grid_subrequests_match_cells_and_fault_labels() {
+        let line = r#"{"kind":"grid","duration_s":0.05,"dvs_sample_hz":300.0,"seed":7,"governor":["fixed","ladder"],"faults":["none","dvs_dropout"]}"#;
+        let subs = grid_subrequests(&parse(line).unwrap()).unwrap();
+        let full = grid_config(line).cells();
+        assert_eq!(subs.len(), 4);
+        for (sub, cell) in subs.iter().zip(&full) {
+            let cells = grid_config(sub).cells();
+            assert_eq!(cells.len(), 1, "{sub}");
+            // the faults key stays present per cell, so the backend keeps
+            // the faults= label suffix the single-node grid emits
+            assert_eq!(cells[0].label, cell.label, "{sub}");
+        }
+        // no array axes at all: exactly one sub-request, the grid itself
+        let lone = r#"{"kind":"grid","duration_s":0.05,"seed":7}"#;
+        let subs = grid_subrequests(&parse(lone).unwrap()).unwrap();
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0], canonical_line(&parse(lone).unwrap()));
+        // non-grid kinds are refused
+        let run = parse(r#"{"kind":"run","duration_s":0.05}"#).unwrap();
+        assert!(grid_subrequests(&run).is_err());
+    }
+}

@@ -1,0 +1,301 @@
+//! Gateway + HTTP front-end integration: the `kraken gateway` acceptance
+//! contract (DESIGN.md §15).
+//!
+//! * **Merge byte-identity** — `grid`/`fleet` requests sharded across
+//!   real TCP backends merge into replies byte-identical to a single
+//!   backend serving the same request, once the host-dependent keys
+//!   (`wall_s`, `threads`) are stripped at every depth.
+//! * **Resilience** — killing a backend mid-storm still answers every
+//!   request: the gateway health-marks the lost backend, re-dispatches
+//!   its cells to survivors (visible as `redispatches` in `stats`), and
+//!   the merged reports do not change.
+//! * **HTTP conformance** — the hand-rolled HTTP/1.1 layer maps
+//!   transport failures to 400/405/413, keeps HTTP/1.1 connections
+//!   alive across requests, and serves protocol errors as `200`s.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use kraken::config::SocConfig;
+use kraken::serve::gateway::Gateway;
+use kraken::serve::Server;
+use kraken::util::json::{parse, Value};
+
+/// Strip the host-dependent keys at every depth: everything that remains
+/// must match byte for byte between gateway and single-backend replies.
+fn strip_host_keys(v: &mut Value) {
+    match v {
+        Value::Obj(m) => {
+            m.remove("wall_s");
+            m.remove("threads");
+            for x in m.values_mut() {
+                strip_host_keys(x);
+            }
+        }
+        Value::Arr(a) => {
+            for x in a.iter_mut() {
+                strip_host_keys(x);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Canonical comparison form of a response: parsed, host keys stripped,
+/// re-serialized. Byte equality of canon forms is bit equality of every
+/// mission-derived float (the serializer is shortest-round-trip).
+fn canon(resp: &str) -> String {
+    let mut v = parse(resp).unwrap_or_else(|e| panic!("unparseable response {resp}: {e}"));
+    assert_eq!(
+        v.get("ok").and_then(Value::as_bool),
+        Some(true),
+        "request failed: {resp}"
+    );
+    strip_host_keys(&mut v);
+    v.to_string()
+}
+
+/// Spawn one real TCP backend on an ephemeral loopback port.
+fn spawn_backend() -> (Arc<Server>, SocketAddr) {
+    let server = Arc::new(Server::new(SocConfig::kraken(), 2, 32, 8, 8).unwrap());
+    let handle = Arc::clone(&server);
+    std::thread::spawn(move || {
+        let _ = kraken::serve::serve_listen(handle, "127.0.0.1:0");
+    });
+    let addr = loop {
+        if let Some(a) = server.listen_addr() {
+            break a;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    (server, addr)
+}
+
+fn gateway_over(n: usize) -> (Vec<Arc<Server>>, Gateway) {
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let (s, a) = spawn_backend();
+        servers.push(s);
+        addrs.push(a.to_string());
+    }
+    let gw = Gateway::new(addrs).unwrap();
+    (servers, gw)
+}
+
+const MISSION_GRID: &str = r#"{"kind":"grid","duration_s":0.1,"dvs_sample_hz":300.0,"seed":[5,6],"vdd":[0.6,0.8],"governor":["fixed","ladder"]}"#;
+const WORKLOAD_GRID: &str = r#"{"kind":"grid","duration_s":0.1,"dvs_sample_hz":300.0,"seed":[5,6],"tenants":[1,2]}"#;
+const FLEET: &str =
+    r#"{"kind":"fleet","missions":3,"seed":50,"duration_s":0.1,"dvs_sample_hz":300.0}"#;
+
+#[test]
+fn sharded_replies_are_byte_identical_to_a_single_backend() {
+    let (_servers, gw) = gateway_over(3);
+    let single = Server::new(SocConfig::kraken(), 2, 32, 8, 8).unwrap();
+    for line in [
+        MISSION_GRID,
+        WORKLOAD_GRID,
+        FLEET,
+        r#"{"kind":"run","duration_s":0.1,"dvs_sample_hz":300.0,"seed":3}"#,
+        r#"{"kind":"workload","tenants":2,"duration_s":0.1,"dvs_sample_hz":300.0,"seed":9}"#,
+    ] {
+        let via_gateway = gw.handle_line(line).expect("gateway response");
+        let direct = single.handle_line(line).expect("single-node response");
+        assert_eq!(canon(&via_gateway), canon(&direct), "line {line}");
+    }
+    // request ids survive the fan-out/merge round trip
+    let tagged = MISSION_GRID.replacen('{', r#"{"id":7,"#, 1);
+    let resp = gw.handle_line(&tagged).unwrap();
+    assert!(resp.starts_with(r#"{"id":7,"#), "{resp}");
+}
+
+#[test]
+fn backend_loss_mid_storm_redispatches_without_changing_replies() {
+    let (servers, gw) = gateway_over(2);
+    let single = Server::new(SocConfig::kraken(), 2, 32, 8, 8).unwrap();
+    let want_grid = canon(&single.handle_line(MISSION_GRID).unwrap());
+    let want_fleet = canon(&single.handle_line(FLEET).unwrap());
+
+    // warm the connection pools with one full storm while both are alive
+    assert_eq!(canon(&gw.handle_line(MISSION_GRID).unwrap()), want_grid);
+
+    // kill backend 0 out from under the gateway, via its own TCP port —
+    // the gateway learns about it only through failed sub-requests
+    {
+        let mut c = TcpStream::connect(servers[0].listen_addr().unwrap()).unwrap();
+        c.write_all(b"{\"kind\":\"shutdown\"}\n").unwrap();
+        let mut resp = String::new();
+        BufReader::new(&c).read_line(&mut resp).unwrap();
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+    }
+
+    // the storm continues: every request is still answered, byte-identical
+    for _ in 0..2 {
+        assert_eq!(canon(&gw.handle_line(MISSION_GRID).unwrap()), want_grid);
+        assert_eq!(canon(&gw.handle_line(FLEET).unwrap()), want_fleet);
+    }
+    for seed in 0..4 {
+        let line = format!(
+            r#"{{"kind":"run","duration_s":0.1,"dvs_sample_hz":300.0,"seed":{seed}}}"#
+        );
+        let resp = gw.handle_line(&line).unwrap();
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+    }
+
+    // the loss is visible: one backend health-marked, re-dispatch counted
+    let stats = parse(&gw.handle_line(r#"{"kind":"stats"}"#).unwrap()).unwrap();
+    let backends = stats.get("backends").and_then(Value::as_arr).unwrap();
+    let healthy: Vec<bool> =
+        backends.iter().map(|b| b.get("healthy").and_then(Value::as_bool).unwrap()).collect();
+    assert_eq!(healthy.iter().filter(|&&h| h).count(), 1, "{stats:?}");
+    let redispatches =
+        stats.get("gateway").and_then(|g| g.get("redispatches")).and_then(Value::as_u64);
+    assert!(redispatches.unwrap() >= 1, "{stats:?}");
+}
+
+// --- HTTP front end --------------------------------------------------------
+
+/// Start an HTTP front end over `svc` and wait for its ephemeral port
+/// (`addr_of` polls the service's inherent `listen_addr`).
+fn spawn_http<S: kraken::serve::LineService>(
+    svc: Arc<S>,
+    addr_of: impl Fn() -> Option<SocketAddr>,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let listener = std::thread::spawn(move || {
+        kraken::serve::http::serve_http(svc, "127.0.0.1:0").unwrap();
+    });
+    let addr = loop {
+        if let Some(a) = addr_of() {
+            break a;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    (addr, listener)
+}
+
+/// Read one HTTP response off the stream: status line, headers, body.
+fn read_response(r: &mut BufReader<TcpStream>) -> (String, Vec<String>, String) {
+    let mut status = String::new();
+    r.read_line(&mut status).unwrap();
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let line = line.trim_end().to_string();
+        if line.is_empty() {
+            break;
+        }
+        headers.push(line);
+    }
+    let len: usize = headers
+        .iter()
+        .find_map(|h| h.strip_prefix("Content-Length: "))
+        .expect("Content-Length header")
+        .parse()
+        .unwrap();
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).unwrap();
+    (status.trim_end().to_string(), headers, String::from_utf8(body).unwrap())
+}
+
+fn http_connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let r = BufReader::new(c.try_clone().unwrap());
+    (c, r)
+}
+
+fn post(addr: SocketAddr, body: &str) -> (String, String) {
+    let (mut c, mut r) = http_connect(addr);
+    let req = format!(
+        "POST / HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    c.write_all(req.as_bytes()).unwrap();
+    let (status, _, resp) = read_response(&mut r);
+    (status, resp)
+}
+
+#[test]
+fn http_front_end_maps_transport_failures_and_keeps_alive() {
+    let server = Arc::new(Server::new(SocConfig::kraken(), 2, 16, 8, 8).unwrap());
+    let (addr, listener) = spawn_http(Arc::clone(&server), || server.listen_addr());
+
+    // malformed request line -> 400, connection closed
+    let (mut c, mut r) = http_connect(addr);
+    c.write_all(b"GARBAGE\r\n\r\n").unwrap();
+    let (status, _, body) = read_response(&mut r);
+    assert!(status.contains("400"), "{status}");
+    assert!(body.contains("\"ok\":false"), "{body}");
+
+    // wrong method -> 405 with an Allow header
+    let (mut c, mut r) = http_connect(addr);
+    c.write_all(b"GET /stats HTTP/1.1\r\n\r\n").unwrap();
+    let (status, headers, _) = read_response(&mut r);
+    assert!(status.contains("405"), "{status}");
+    assert!(headers.iter().any(|h| h == "Allow: POST"), "{headers:?}");
+
+    // missing Content-Length -> 400
+    let (mut c, mut r) = http_connect(addr);
+    c.write_all(b"POST / HTTP/1.1\r\n\r\n").unwrap();
+    let (status, _, body) = read_response(&mut r);
+    assert!(status.contains("400"), "{status}");
+    assert!(body.contains("Content-Length"), "{body}");
+
+    // over-cap declared body -> 413 without reading the body
+    let (mut c, mut r) = http_connect(addr);
+    c.write_all(b"POST / HTTP/1.1\r\nContent-Length: 2000000\r\n\r\n").unwrap();
+    let (status, _, _) = read_response(&mut r);
+    assert!(status.contains("413"), "{status}");
+
+    // keep-alive: two requests on one connection, both answered; protocol
+    // errors ride a 200 (the transport worked, the request did not)
+    let (mut c, mut r) = http_connect(addr);
+    for body in [r#"{"kind":"stats"}"#, r#"{"kind":"warp"}"#] {
+        let req = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}", body.len());
+        c.write_all(req.as_bytes()).unwrap();
+        let (status, headers, resp) = read_response(&mut r);
+        assert!(status.contains("200"), "{status}");
+        assert!(headers.iter().any(|h| h == "Connection: keep-alive"), "{headers:?}");
+        if body.contains("warp") {
+            assert!(resp.contains("unknown request kind"), "{resp}");
+        } else {
+            assert!(resp.contains("\"ok\":true"), "{resp}");
+        }
+    }
+
+    // a real mission over HTTP matches the JSON-lines reply byte for byte
+    let line = r#"{"kind":"run","duration_s":0.1,"dvs_sample_hz":300.0,"seed":3}"#;
+    let (status, via_http) = post(addr, line);
+    assert!(status.contains("200"), "{status}");
+    assert_eq!(canon(&via_http), canon(&server.handle_line(line).unwrap()));
+
+    // served shutdown stops the HTTP listener too
+    let (status, resp) = post(addr, r#"{"kind":"shutdown"}"#);
+    assert!(status.contains("200"), "{status}");
+    assert!(resp.contains("\"shutting_down\":true"), "{resp}");
+    listener.join().expect("http listener must exit after shutdown");
+}
+
+#[test]
+fn gateway_over_http_shards_and_shuts_down_backends() {
+    let (servers, gw) = gateway_over(2);
+    let gw = Arc::new(gw);
+    let (addr, listener) = spawn_http(Arc::clone(&gw), || gw.listen_addr());
+    let single = Server::new(SocConfig::kraken(), 2, 32, 8, 8).unwrap();
+
+    let (status, via_http) = post(addr, WORKLOAD_GRID);
+    assert!(status.contains("200"), "{status}");
+    assert_eq!(canon(&via_http), canon(&single.handle_line(WORKLOAD_GRID).unwrap()));
+
+    // gateway shutdown broadcasts to the backends and stops the listener
+    let (status, resp) = post(addr, r#"{"kind":"shutdown"}"#);
+    assert!(status.contains("200"), "{status}");
+    assert!(resp.contains("\"role\":\"gateway\""), "{resp}");
+    listener.join().expect("gateway http listener must exit");
+    for s in &servers {
+        assert!(s.is_shutting_down(), "shutdown must reach every backend");
+    }
+}
